@@ -1,0 +1,87 @@
+//! End-to-end benches: one per paper table family (DESIGN.md §4).
+//!
+//! Each case decodes a real eval prompt through the full stack (PJRT
+//! artifacts + offload policy + simulated memory hierarchy) and reports
+//! *wallclock* per decoded request — the L3 perf metric (the paper-scale
+//! throughput numbers come from the simulated clock and are produced by
+//! `melinoe repro <id>`, not here).
+//!
+//! Skips cleanly when artifacts are not built.
+
+use melinoe::clock::GpuSpec;
+use melinoe::policies::PolicyConfig;
+use melinoe::repro::Ctx;
+use melinoe::util::bench::Bench;
+
+fn main() {
+    let dir = melinoe::artifacts_dir();
+    let Some(ctx) = ["olmoe-micro", "phi-micro", "mixtral-micro"]
+        .iter()
+        .find_map(|p| Ctx::load(&dir, p).ok())
+    else {
+        eprintln!("SKIP e2e bench: no artifacts (run `make artifacts`)");
+        return;
+    };
+    println!("e2e bench preset: {}", ctx.preset);
+    let eval = ctx.eval_set("dolly").expect("eval set");
+    let prompt = eval.samples[0].prompt.clone();
+    let cap = ctx.cfg.cache_capacity;
+
+    // ---- per-policy end-to-end decode (Table 1 / Fig. 3 machinery)
+    let mut b = Bench::new("decode_policies");
+    let ft = if ctx.cfg.variants.iter().any(|v| v == "ft_dolly") { "ft_dolly" } else { "base" };
+    let policies = vec![
+        PolicyConfig::base_offload(cap),
+        PolicyConfig::melinoe_no_prefetch(ft, cap),
+        PolicyConfig::deepspeed_moe(ctx.cfg.top_k),
+        PolicyConfig::fiddler(cap),
+    ];
+    for pol in policies {
+        let parts = ctx.parts(&pol, "dolly").expect("parts");
+        let engine = parts.engine(&ctx, GpuSpec::h100());
+        b.bench(&format!("decode 8 tok [{}]", pol.name), || {
+            std::hint::black_box(engine.decode(&prompt, 8).unwrap());
+        });
+    }
+    b.finish();
+
+    // ---- dispatch-level: single PJRT calls (L3 hot path, §Perf)
+    let mut b = Bench::new("pjrt_dispatch");
+    let pol = PolicyConfig::base_offload(ctx.cfg.n_experts);
+    let parts = ctx.parts(&pol, "dolly").expect("parts");
+    let store = &parts.store;
+    let (kc, vc) = ctx.rt.init_kv(&ctx.cfg).unwrap();
+    let x = vec![0.05f32; ctx.cfg.d_model];
+    b.bench("layer_step call", || {
+        std::hint::black_box(ctx.rt.layer_step(&x, &store.layers[0], &kc, &vc, 0).unwrap());
+    });
+    let selected: Vec<usize> = (0..ctx.cfg.top_k).collect();
+    let stw = store.stack_experts(0, &selected, ctx.cfg.d_model, ctx.cfg.d_ff).unwrap();
+    let out = ctx.rt.layer_step(&x, &store.layers[0], &kc, &vc, 0).unwrap();
+    let gates = vec![1.0 / ctx.cfg.top_k as f32; ctx.cfg.top_k];
+    b.bench("expert_group call (K experts)", || {
+        std::hint::black_box(ctx.rt.expert_group(&gates, &out.h2, &stw.wg, &stw.wu, &stw.wd).unwrap());
+    });
+    b.bench("stack_experts (host gather)", || {
+        std::hint::black_box(
+            store.stack_experts(0, &selected, ctx.cfg.d_model, ctx.cfg.d_ff).unwrap(),
+        );
+    });
+    b.bench("lm_head call", || {
+        std::hint::black_box(ctx.rt.lm_head(&x, &store.lnf_lit, &store.embed_lit).unwrap());
+    });
+    b.finish();
+
+    // ---- batched serving step (Fig. 5 machinery)
+    let mut b = Bench::new("batch_decode");
+    let parts = ctx.parts(&PolicyConfig::base_offload(cap), "dolly").expect("parts");
+    let engine = parts.engine(&ctx, GpuSpec::h100());
+    for bs in [1usize, 2, 4] {
+        let prompts: Vec<Vec<usize>> =
+            eval.samples.iter().take(bs).map(|s| s.prompt.clone()).collect();
+        b.bench(&format!("decode_batch bs={bs}, 4 tok"), || {
+            std::hint::black_box(engine.decode_batch(&prompts, 4).unwrap());
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,84 @@
+//! Component micro-benchmarks: the host-side pieces of the request path.
+//!
+//! These are the L3 hot-path candidates identified in DESIGN.md §6 —
+//! cache ops, quantization, expert-weight stacking, JSON, ROUGE-L — and
+//! feed the §Perf iteration log in EXPERIMENTS.md.
+
+use melinoe::cache::{EvictionKind, LayerCache};
+use melinoe::eval::rouge_l;
+use melinoe::quant::{dequantize, quantize, QuantMode};
+use melinoe::tensor::HostTensor;
+use melinoe::util::bench::Bench;
+use melinoe::util::json::Json;
+use melinoe::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(42);
+
+    let mut b = Bench::new("cache");
+    let trace: Vec<usize> = (0..4096).map(|_| rng.below(64)).collect();
+    for kind in [EvictionKind::Lru, EvictionKind::Lfu, EvictionKind::Gamma(0.9)] {
+        let mut c = LayerCache::new(64, 16, kind);
+        let mut i = 0;
+        b.bench(&format!("{kind:?}: request+insert"), || {
+            let e = trace[i % trace.len()];
+            i += 1;
+            if i % 8 == 0 {
+                c.token_tick();
+            }
+            if !c.request(e) {
+                c.insert(e, &[e]);
+            }
+        });
+    }
+    b.finish();
+
+    let mut b = Bench::new("quant");
+    let data: Vec<f32> = (0..3 * 64 * 32).map(|_| rng.normal() as f32).collect();
+    b.bench("quantize int4 (one expert)", || {
+        std::hint::black_box(quantize(&data, QuantMode::Int4));
+    });
+    let blob = quantize(&data, QuantMode::Int4);
+    b.bench("dequantize int4 (one expert)", || {
+        std::hint::black_box(dequantize(&blob));
+    });
+    b.finish();
+
+    let mut b = Bench::new("host_tensor");
+    let probs = HostTensor::new(vec![64], (0..64).map(|i| ((i * 37) % 64) as f32 / 64.0).collect())
+        .unwrap();
+    b.bench("topk(8) of 64 probs", || {
+        std::hint::black_box(probs.topk(8));
+    });
+    let logits =
+        HostTensor::new(vec![512], (0..512).map(|i| ((i * 131) % 512) as f32).collect()).unwrap();
+    b.bench("argmax of 512 logits", || {
+        std::hint::black_box(logits.argmax());
+    });
+    let (a, c): (Vec<f32>, Vec<f32>) = ((0..32).map(|i| i as f32).collect(), (0..32).map(|i| i as f32).collect());
+    b.bench("residual add d=32", || {
+        std::hint::black_box(melinoe::tensor::add(&a, &c));
+    });
+    b.finish();
+
+    let mut b = Bench::new("eval");
+    let x: Vec<usize> = (0..64).map(|_| rng.below(100)).collect();
+    let y: Vec<usize> = (0..64).map(|_| rng.below(100)).collect();
+    b.bench("rouge_l 64x64", || {
+        std::hint::black_box(rouge_l(&x, &y));
+    });
+    b.finish();
+
+    let mut b = Bench::new("json");
+    let doc = format!(
+        "{{\"samples\": [{}]}}",
+        (0..64)
+            .map(|i| format!("{{\"prompt\": [1,2,{i}], \"answer\": \"x\"}}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    );
+    b.bench("parse 64-sample eval set", || {
+        std::hint::black_box(Json::parse(&doc).unwrap());
+    });
+    b.finish();
+}

@@ -1,0 +1,54 @@
+//! Compare all six offloading systems on one workload — a miniature of
+//! the paper's Fig. 3 grid, runnable on any single (preset, GPU) pair.
+//!
+//! ```bash
+//! cargo run --release --example compare_offloading -- \
+//!     --preset olmoe-micro --gpu h100 --prompts 4 --tokens 24
+//! ```
+
+use melinoe::clock::GpuSpec;
+use melinoe::metrics::{fmt2, fmt4, Table};
+use melinoe::policies::PolicyConfig;
+use melinoe::repro::{run_eval, Ctx, Workload};
+use melinoe::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let preset = args.get_or("preset", "olmoe-micro");
+    let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
+    let wl = Workload {
+        n_prompts: args.get_usize("prompts", 4)?,
+        max_output: args.get_usize("tokens", 24)?,
+        ignore_eos: true,
+    };
+    let ds = args.get_or("dataset", "dolly");
+    let ft = if ds == "dolly" { "ft_dolly" } else { "ft_gsm" };
+
+    let ctx = Ctx::load(&melinoe::artifacts_dir(), preset)?;
+    let eval = ctx.eval_set(ds)?;
+    println!(
+        "{} on {} ({} prompts × ≤{} tokens, C={} experts/layer)\n",
+        preset, gpu.name, wl.n_prompts, wl.max_output, ctx.cfg.cache_capacity
+    );
+
+    let mut t = Table::new(&[
+        "policy", "tok/s (sim)", "tx/layer", "hit rate", "ROUGE-L", "cpu execs", "wall s",
+    ]);
+    for pol in PolicyConfig::all_baselines(ctx.cfg.cache_capacity, ctx.cfg.top_k, ft) {
+        let parts = ctx.parts(&pol, ds)?;
+        let engine = parts.engine(&ctx, gpu.clone());
+        let r = run_eval(&engine, &eval, wl, ctx.cfg.cache_capacity)?;
+        t.row(vec![
+            pol.name.clone(),
+            fmt2(r.tokens_per_sec),
+            fmt2(r.tx_per_layer),
+            fmt4(r.hit_rate),
+            fmt4(r.rouge_l),
+            r.cpu_execs.to_string(),
+            fmt2(r.wall_seconds),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(tok/s is the simulated-clock throughput at paper scale; see DESIGN.md §2.2)");
+    Ok(())
+}

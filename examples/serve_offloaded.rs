@@ -1,0 +1,137 @@
+//! End-to-end serving driver (the DESIGN.md validation workload): load a
+//! micro MoE, serve a stream of batched requests through the coordinator,
+//! and report latency/throughput — real tokens through real PJRT
+//! executables, offloading simulated at paper scale.
+//!
+//! ```bash
+//! cargo run --release --example serve_offloaded -- \
+//!     --preset olmoe-micro --policy melinoe --requests 16 --batch 4
+//! ```
+
+use std::time::Duration;
+
+use melinoe::clock::GpuSpec;
+use melinoe::coordinator::{Decoder, Server, ServerConfig};
+use melinoe::metrics::{fmt2, Report, Table};
+use melinoe::policies::PolicyConfig;
+use melinoe::repro::{Ctx, EngineParts};
+use melinoe::util::cli::Args;
+
+struct OwnedEngine {
+    ctx: Ctx,
+    parts: EngineParts,
+    gpu: GpuSpec,
+}
+
+impl Decoder for OwnedEngine {
+    fn decode_batch(
+        &mut self,
+        prompts: &[Vec<usize>],
+        max_output: usize,
+    ) -> anyhow::Result<(Vec<Vec<usize>>, Report)> {
+        self.parts.engine(&self.ctx, self.gpu.clone()).decode_batch(prompts, max_output)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let preset = args.get_or("preset", "olmoe-micro").to_string();
+    let policy_name = args.get_or("policy", "melinoe").to_string();
+    let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
+    let n_requests = args.get_usize("requests", 16)?;
+    let max_output = args.get_usize("tokens", 24)?;
+    let max_batch = args.get_usize("batch", 4)?;
+
+    // workload: held-out dolly-syn prompts
+    let ctx0 = Ctx::load(&melinoe::artifacts_dir(), &preset)?;
+    let eval = ctx0.eval_set("dolly")?;
+    let prompts: Vec<Vec<usize>> =
+        eval.samples.iter().cycle().take(n_requests).map(|s| s.prompt.clone()).collect();
+    let capacity = ctx0.cfg.cache_capacity;
+    let top_k = ctx0.cfg.top_k;
+    drop(ctx0);
+
+    let preset2 = preset.clone();
+    let policy = match policy_name.as_str() {
+        "melinoe" => PolicyConfig::melinoe("ft_dolly", capacity),
+        "fiddler" => PolicyConfig::fiddler(capacity),
+        "mixtral-offloading" => PolicyConfig::mixtral_offloading(capacity),
+        "deepspeed-moe" => PolicyConfig::deepspeed_moe(top_k),
+        "floe" => PolicyConfig::floe(capacity),
+        "moe-infinity" => PolicyConfig::moe_infinity(capacity),
+        _ => PolicyConfig::base_offload(capacity),
+    };
+    println!("serving {preset} with policy {} (variant {})", policy.name, policy.variant);
+
+    let gpu2 = gpu.clone();
+    let server = Server::start(
+        move || {
+            let ctx = Ctx::load(&melinoe::artifacts_dir(), &preset2)?;
+            let parts = ctx.parts(&policy, "dolly")?;
+            Ok(OwnedEngine { ctx, parts, gpu: gpu2 })
+        },
+        ServerConfig { max_batch, batch_wait: Duration::from_millis(5), max_output },
+    );
+
+    // arrival process: burst (default) or open-loop poisson:<rate>
+    use melinoe::coordinator::workload::{schedule, Arrival};
+    let arrival = match args.get("arrival") {
+        Some(s) if s.starts_with("poisson:") => {
+            Arrival::Poisson(s.trim_start_matches("poisson:").parse()?)
+        }
+        Some(s) if s.starts_with("uniform:") => {
+            Arrival::Uniform(s.trim_start_matches("uniform:").parse()?)
+        }
+        _ => Arrival::Burst,
+    };
+    let sched = schedule(prompts.len(), prompts.len(), arrival, 42);
+
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .zip(&sched)
+        .map(|(p, s)| {
+            let due = std::time::Duration::from_secs_f64(s.at);
+            if let Some(wait) = due.checked_sub(t0.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            server.submit(p.clone(), max_output)
+        })
+        .collect();
+    let mut tokens = 0usize;
+    let mut sims = Vec::new();
+    let mut waits = Vec::new();
+    let mut batch_sizes = Vec::new();
+    for rx in rxs {
+        let r = rx.recv()?;
+        tokens += r.tokens.len();
+        sims.push(r.sim_seconds);
+        waits.push(r.queue_wait * 1e3);
+        batch_sizes.push(r.batch_size);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown()?;
+
+    sims.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |v: &[f64], p: f64| v[((p / 100.0 * (v.len() - 1) as f64) as usize).min(v.len() - 1)];
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["requests".into(), stats.requests.to_string()]);
+    t.row(vec!["batches / mean size".into(), format!("{} / {:.2}", stats.batches, stats.mean_batch_size)]);
+    t.row(vec!["output tokens".into(), tokens.to_string()]);
+    t.row(vec![
+        "sim throughput (tok/s)".into(),
+        fmt2(tokens as f64 / stats.total_sim_seconds.max(1e-9)),
+    ]);
+    t.row(vec!["sim latency p50 (s)".into(), fmt2(pct(&sims, 50.0))]);
+    t.row(vec!["sim latency p95 (s)".into(), fmt2(pct(&sims, 95.0))]);
+    t.row(vec!["queue wait p50 (ms)".into(), fmt2(pct(&waits, 50.0))]);
+    t.row(vec!["wallclock total (s)".into(), fmt2(wall)]);
+    t.row(vec![
+        "wallclock per request (s)".into(),
+        fmt2(wall / stats.requests.max(1) as f64),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,274 @@
+"""AOT build pipeline: pretrain → fine-tune variants → predictors → HLO.
+
+Emits, per model preset, everything the Rust request path consumes:
+
+    artifacts/<preset>/
+      config.json                 model dims + cost model + variant index
+      hlo/layer_step.hlo.txt      per-layer pre-expert decode step
+      hlo/expert_group.hlo.txt    Pallas grouped expert FFN
+      hlo/lm_head.hlo.txt         final norm + tied LM head
+      hlo/predictor.hlo.txt       activation-predictor MLP
+      weights/base.npz            pretrained micro backbone
+      weights/<variant>.npz       MELINOE fine-tuned checkpoints
+      weights/predictor_<variant>_<ds>.npz
+      weights/profile_<variant>_<ds>.npz   router frequency profiles
+      eval/eval_<ds>.json         held-out prompts + references
+      eval/goldens.json           python-decoded outputs (rust integration)
+      logs/*.json                 training curves (EXPERIMENTS.md)
+
+HLO is emitted as *text* — the image's xla_extension 0.5.1 rejects jax≥0.5
+serialized protos (64-bit instruction ids); the text parser reassigns ids
+(see /opt/xla-example/README.md).  Every stage is resumable: existing
+outputs are skipped, so `make artifacts` is cheap when up to date.
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, finetune, predictor, pretrain
+from .configs import (
+    PRESETS,
+    FinetuneConfig,
+    ModelConfig,
+    PredictorConfig,
+    PretrainConfig,
+    finetune_plan,
+)
+from .model import (
+    decode_greedy,
+    decode_layer_step,
+    expert_group,
+    forward,
+    lm_head_fn,
+    topk_mask,
+)
+from .predictor import predictor_forward
+
+
+# ----------------------------------------------------------------- lowering
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_hlo(cfg: ModelConfig, outdir: str, pcfg: PredictorConfig) -> None:
+    hlodir = os.path.join(outdir, "hlo")
+    os.makedirs(hlodir, exist_ok=True)
+    d, e, k, dff, v = cfg.d_model, cfg.n_experts, cfg.top_k, cfg.d_ff, cfg.vocab_size
+    kv = f32(cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def layer_fn(x, ln1, wq, wk, wv, wo, ln2, router_w, kc, vc, pos):
+        return decode_layer_step(
+            x, ln1, wq, wk, wv, wo, ln2, router_w, kc, vc, pos, cfg=cfg, use_pallas=True
+        )
+
+    jobs = {
+        "layer_step": (
+            layer_fn,
+            (f32(d), f32(d), f32(d, d), f32(d, d), f32(d, d), f32(d, d),
+             f32(d), f32(e, d), kv, kv, i32),
+        ),
+        "expert_group": (
+            lambda gates, h2, wg, wu, wd: expert_group(gates, h2, wg, wu, wd, use_pallas=True),
+            (f32(k), f32(d), f32(k, dff, d), f32(k, dff, d), f32(k, d, dff)),
+        ),
+        "lm_head": (
+            lambda h, lnf, emb: lm_head_fn(h, lnf, emb, cfg=cfg),
+            (f32(d), f32(d), f32(v, d)),
+        ),
+        "predictor": (
+            lambda x, w1, b1, w2, b2: predictor_forward(
+                {"w1": w1, "b1": b1, "w2": w2, "b2": b2}, x, cfg.n_layers, cfg.n_experts
+            ),
+            (f32(d), f32(pcfg.hidden_dim, d), f32(pcfg.hidden_dim),
+             f32(cfg.n_layers * e, pcfg.hidden_dim), f32(cfg.n_layers * e)),
+        ),
+    }
+    for name, (fn, specs) in jobs.items():
+        path = os.path.join(hlodir, f"{name}.hlo.txt")
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [hlo {cfg.name}] {name}: {len(text)} chars", flush=True)
+
+
+# ------------------------------------------------------------------- saving
+def save_npz(path: str, arrays) -> None:
+    np.savez(path, **{k: np.asarray(v) for k, v in arrays.items()})
+
+
+def load_npz(path: str):
+    with np.load(path) as z:
+        return {k: jnp.asarray(z[k]) for k in z.files}
+
+
+def save_json(path: str, obj) -> None:
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+# ----------------------------------------------------------------- profiles
+def routing_profile(params, cfg: ModelConfig, dataset: str, n_batches: int = 8):
+    """Average request frequency per (layer, expert) over training-split
+    batches — the MoE-Infinity-style activation profile."""
+    rng = np.random.RandomState(17)
+    acc = np.zeros((cfg.n_layers, cfg.n_experts), np.float64)
+    tot = 0.0
+    fwd = jax.jit(lambda p, t: forward(p, t, cfg))
+    for _ in range(n_batches):
+        seeds = rng.randint(0, data.EVAL_SEED_OFFSET, size=4)
+        toks, mask = data.pack_batch(dataset, seeds, 48)
+        _, probs = fwd(params, jnp.asarray(toks))
+        req, _, _ = topk_mask(probs, cfg.top_k)
+        w = jnp.asarray(mask)[None, :, :, None]
+        acc += np.asarray(jnp.sum(req * w, axis=(1, 2)))
+        tot += float(mask.sum())
+    return acc / max(tot, 1.0)
+
+
+# ------------------------------------------------------------------ goldens
+def build_goldens(weights_by_variant, cfg: ModelConfig, n_prompts: int = 3, n_gen: int = 12):
+    """Python-decoded outputs through the *pallas* path; the Rust engine
+    must reproduce these token-for-token (integration test)."""
+    out = {}
+    for variant, params in weights_by_variant.items():
+        recs = []
+        for ds in ("dolly-syn", "gsm-syn"):
+            for s in data.eval_samples(ds, n_prompts, seed=3):
+                prompt = s.tokens[: s.prompt_len]
+                gen, _ = decode_greedy(params, prompt, n_gen, cfg, use_pallas=True)
+                recs.append({"dataset": ds, "prompt": prompt, "expected": gen})
+        out[variant] = recs
+    return out
+
+
+# -------------------------------------------------------------------- build
+def build_preset(cfg: ModelConfig, outdir: str, fast: bool, stages) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    for sub in ("hlo", "weights", "eval", "logs"):
+        os.makedirs(os.path.join(outdir, sub), exist_ok=True)
+    wdir = os.path.join(outdir, "weights")
+    ldir = os.path.join(outdir, "logs")
+
+    shrink = (lambda s: max(s // 10, 3)) if fast else (lambda s: s)
+    pcfg = PretrainConfig()
+    if cfg.name != "olmoe-micro":
+        # the coarse-expert presets learn the (easier, lower-E) routing
+        # task faster; fewer steps keeps the single-core build tractable
+        pcfg = dataclasses.replace(pcfg, steps=350)
+    pcfg = dataclasses.replace(pcfg, steps=shrink(pcfg.steps))
+    predcfg = PredictorConfig()
+    if cfg.name != "olmoe-micro":
+        predcfg = dataclasses.replace(predcfg, n_prompts=32, epochs=15)
+    if fast:
+        predcfg = dataclasses.replace(predcfg, n_prompts=12, epochs=5, gen_tokens=8)
+
+    # 1. pretrain --------------------------------------------------------
+    base_path = os.path.join(wdir, "base.npz")
+    if "train" in stages:
+        if not os.path.exists(base_path):
+            t0 = time.time()
+            params, log = pretrain.pretrain(cfg, pcfg)
+            save_npz(base_path, params)
+            save_json(os.path.join(ldir, "pretrain.json"), log)
+            print(f"  [pretrain {cfg.name}] done in {time.time()-t0:.0f}s", flush=True)
+        base = load_npz(base_path)
+
+        # 2. fine-tune variants ----------------------------------------
+        for fcfg in finetune_plan(cfg):
+            path = os.path.join(wdir, f"{fcfg.variant}.npz")
+            if os.path.exists(path):
+                continue
+            fcfg = dataclasses.replace(fcfg, steps=shrink(fcfg.steps))
+            t0 = time.time()
+            merged, log = finetune.finetune(base, cfg, fcfg)
+            save_npz(path, merged)
+            save_json(os.path.join(ldir, f"{fcfg.variant}.json"), log)
+            print(f"  [ft {cfg.name}/{fcfg.variant}] done in {time.time()-t0:.0f}s", flush=True)
+
+    # 3. predictors + profiles ------------------------------------------
+    if "predict" in stages:
+        base = load_npz(base_path)
+        main_variants = {"base": base}
+        for short, ds in (("dolly", "dolly-syn"), ("gsm", "gsm-syn")):
+            vpath = os.path.join(wdir, f"ft_{short}.npz")
+            if os.path.exists(vpath):
+                main_variants[f"ft_{short}"] = load_npz(vpath)
+        for variant, params in main_variants.items():
+            for short, ds in (("dolly", "dolly-syn"), ("gsm", "gsm-syn")):
+                prof_path = os.path.join(wdir, f"profile_{variant}_{short}.npz")
+                if not os.path.exists(prof_path):
+                    save_npz(prof_path, {"freq": routing_profile(params, cfg, ds)})
+                # predictors only for the checkpoints that serve that dataset
+                if variant != "base" and variant != f"ft_{short}":
+                    continue
+                pred_path = os.path.join(wdir, f"predictor_{variant}_{short}.npz")
+                if os.path.exists(pred_path):
+                    continue
+                x, y = predictor.build_dataset(params, cfg, ds, predcfg)
+                mlp, log = predictor.train_predictor(x, y, cfg, predcfg)
+                hit = predictor.topc_hit_rate(mlp, x, y, cfg, cfg.cache_capacity)
+                print(f"  [predictor {cfg.name}/{variant}/{short}] top-C hit {hit:.2f}", flush=True)
+                save_npz(pred_path, mlp)
+                save_json(os.path.join(ldir, f"predictor_{variant}_{short}.json"),
+                          {"log": log, "topc_hit": hit})
+
+    # 4. eval sets + goldens --------------------------------------------
+    if "eval" in stages:
+        for short, ds in (("dolly", "dolly-syn"), ("gsm", "gsm-syn")):
+            path = os.path.join(outdir, "eval", f"eval_{short}.json")
+            if not os.path.exists(path):
+                save_json(path, data.export_eval_set(ds, 64, cfg.max_seq // 4, cfg.max_seq - 8))
+        gpath = os.path.join(outdir, "eval", "goldens.json")
+        if not os.path.exists(gpath):
+            wv = {"base": load_npz(base_path)}
+            ft_path = os.path.join(wdir, "ft_dolly.npz")
+            if os.path.exists(ft_path):
+                wv["ft_dolly"] = load_npz(ft_path)
+            save_json(gpath, build_goldens(wv, cfg))
+
+    # 5. HLO + config -----------------------------------------------------
+    if "hlo" in stages:
+        lower_hlo(cfg, outdir, predcfg)
+        variants = ["base"] + [f.variant for f in finetune_plan(cfg)]
+        conf = cfg.to_json_dict()
+        conf["variants"] = variants
+        conf["predictor_hidden"] = predcfg.hidden_dim
+        conf["finetune"] = [dataclasses.asdict(f) for f in finetune_plan(cfg)]
+        save_json(os.path.join(outdir, "config.json"), conf)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="all", choices=["all", *PRESETS])
+    ap.add_argument("--stages", default="train,predict,eval,hlo")
+    ap.add_argument("--fast", action="store_true", help="smoke-test build (tiny step counts)")
+    args = ap.parse_args()
+    stages = set(args.stages.split(","))
+    names = list(PRESETS) if args.preset == "all" else [args.preset]
+    for name in names:
+        cfg = PRESETS[name]
+        print(f"[aot] building {name} → {args.out_dir}/{name}", flush=True)
+        build_preset(cfg, os.path.join(args.out_dir, name), args.fast, stages)
+    print("[aot] complete", flush=True)
+
+
+if __name__ == "__main__":
+    main()

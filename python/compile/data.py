@@ -1,0 +1,164 @@
+"""Procedural corpora standing in for Dolly15K and GSM8K.
+
+The paper fine-tunes on an instruction-following set (Dolly15K) and a math
+set with longer generations (GSM8K).  Neither is available offline, so we
+build procedural equivalents over a 512-token vocabulary:
+
+* ``dolly-syn`` — instruction templates (copy / reverse / sort / last) over
+  items drawn from one of eight latent *domains* (disjoint token blocks).
+  A sequence stays inside its domain, giving the router natural
+  sequence-level expert preferences — exactly the "weak specialization" the
+  paper exploits (§2, Expert Specialization).  Quality metric: ROUGE-L of
+  the generated completion against the reference (mirrors Table 2 left).
+
+* ``gsm-syn`` — small arithmetic chains ``a ± b ± c`` with the result spelt
+  out in digit tokens after an ``ANS`` marker, prefixed by domain "subject"
+  filler.  Quality metric: exact-match of the answer digits (mirrors
+  Table 2 right).
+
+Both generators are pure functions of a seed; train and eval splits use
+disjoint seed ranges.
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------- vocabulary
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+CMD_COPY, CMD_REV, CMD_SORT, CMD_LAST = 4, 5, 6, 7
+DIG0 = 10  # digits 0..9 -> tokens 10..19
+Q_TOK, PLUS, MINUS, EQ, ANS = 20, 21, 22, 24, 25
+
+N_DOMAINS = 8
+DOMAIN_BLOCK = 16
+DOMAIN_BASE = 32  # domain d owns tokens [32 + 48*d, 32 + 48*(d+1))
+VOCAB_SIZE = 512
+
+EVAL_SEED_OFFSET = 1_000_000
+
+
+def domain_tokens(domain: int) -> np.ndarray:
+    lo = DOMAIN_BASE + DOMAIN_BLOCK * domain
+    return np.arange(lo, lo + DOMAIN_BLOCK)
+
+
+def digits_of(n: int) -> List[int]:
+    return [DIG0 + int(c) for c in str(n)]
+
+
+@dataclass
+class Sample:
+    tokens: List[int]  # BOS ... EOS
+    prompt_len: int  # prompt = tokens[:prompt_len] (ends with SEP)
+    domain: int
+    answer: str = ""  # gsm only: decimal string
+
+
+# ---------------------------------------------------------------- dolly-syn
+def make_dolly(seed: int) -> Sample:
+    rng = np.random.RandomState(seed)
+    domain = int(rng.randint(N_DOMAINS))
+    cmd = int(rng.choice([CMD_COPY, CMD_REV, CMD_SORT, CMD_LAST]))
+    n_items = int(rng.randint(4, 10))
+    items = rng.choice(domain_tokens(domain), size=n_items, replace=True)
+    if cmd == CMD_COPY:
+        out = list(items)
+    elif cmd == CMD_REV:
+        out = list(items[::-1])
+    elif cmd == CMD_SORT:
+        out = sorted(items.tolist())
+    else:  # CMD_LAST: echo the final three items
+        out = list(items[-3:])
+    prompt = [BOS, cmd] + [int(t) for t in items] + [SEP]
+    tokens = prompt + [int(t) for t in out] + [EOS]
+    return Sample(tokens=tokens, prompt_len=len(prompt), domain=domain)
+
+
+# ------------------------------------------------------------------ gsm-syn
+def make_gsm(seed: int) -> Sample:
+    rng = np.random.RandomState(seed)
+    domain = int(rng.randint(N_DOMAINS))
+    subject = rng.choice(domain_tokens(domain), size=4, replace=True)
+    n_terms = int(rng.randint(2, 4))
+    vals = [int(rng.randint(1, 10)) for _ in range(n_terms)]
+    ops = [int(rng.choice([PLUS, MINUS])) for _ in range(n_terms - 1)]
+    acc = vals[0]
+    body: List[int] = [DIG0 + vals[0]]
+    for op, v in zip(ops, vals[1:]):
+        body += [op, DIG0 + v]
+        acc = acc + v if op == PLUS else acc - v
+    acc = abs(acc)
+    prompt = [BOS] + [int(t) for t in subject] + [Q_TOK] + body + [EQ, SEP]
+    tokens = prompt + [ANS] + digits_of(acc) + [EOS]
+    return Sample(tokens=tokens, prompt_len=len(prompt), domain=domain, answer=str(acc))
+
+
+MAKERS = {"dolly-syn": make_dolly, "gsm-syn": make_gsm}
+
+
+def make_sample(dataset: str, seed: int) -> Sample:
+    return MAKERS[dataset](seed)
+
+
+# ----------------------------------------------------------------- batching
+def pack_batch(
+    dataset: str, seeds: np.ndarray, seq_len: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Right-padded token batch plus an NLL mask.
+
+    The mask is 1 on positions whose *next-token* prediction is scored —
+    completion tokens only, matching instruction-tuning practice (prompt
+    tokens condition but are not scored).
+    """
+    bsz = len(seeds)
+    toks = np.full((bsz, seq_len), PAD, dtype=np.int32)
+    mask = np.zeros((bsz, seq_len), dtype=np.float32)
+    for b, seed in enumerate(seeds):
+        s = make_sample(dataset, int(seed))
+        t = s.tokens[:seq_len]
+        toks[b, : len(t)] = t
+        # position i predicts token i+1; score predictions of completion.
+        lo = max(s.prompt_len - 1, 0)
+        hi = max(len(t) - 1, lo)
+        mask[b, lo:hi] = 1.0
+    return toks, mask
+
+
+def train_batches(dataset: str, steps: int, batch_size: int, seq_len: int, seed: int):
+    """Deterministic stream of (tokens, mask) train batches."""
+    rng = np.random.RandomState(seed)
+    for _ in range(steps):
+        seeds = rng.randint(0, EVAL_SEED_OFFSET, size=batch_size)
+        yield pack_batch(dataset, seeds, seq_len)
+
+
+def eval_samples(dataset: str, n: int, seed: int = 0) -> List[Sample]:
+    """Held-out samples (seed range disjoint from training)."""
+    rng = np.random.RandomState(seed + 7)
+    seeds = EVAL_SEED_OFFSET + rng.randint(0, 1_000_000, size=n)
+    return [make_sample(dataset, int(s)) for s in seeds]
+
+
+def eval_batch(dataset: str, n: int, seq_len: int, seed: int = 0):
+    rng = np.random.RandomState(seed + 7)
+    seeds = EVAL_SEED_OFFSET + rng.randint(0, 1_000_000, size=n)
+    return pack_batch(dataset, seeds, seq_len)
+
+
+def export_eval_set(dataset: str, n: int, max_prompt: int, max_total: int) -> Dict:
+    """JSON-serializable eval set consumed by the Rust harness."""
+    out = []
+    for s in eval_samples(dataset, n):
+        if s.prompt_len > max_prompt or len(s.tokens) > max_total:
+            continue
+        out.append(
+            {
+                "prompt": s.tokens[: s.prompt_len],
+                "reference": s.tokens[s.prompt_len :],
+                "domain": s.domain,
+                "answer": s.answer,
+            }
+        )
+    return {"dataset": dataset, "samples": out}

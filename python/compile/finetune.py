@@ -1,0 +1,93 @@
+"""MELINOE fine-tuning (paper §3.1.1).
+
+Trainable parameters, per the paper: the router weights and the expert
+*gate* projections (full-rank), plus LoRA adapters on the expert up and
+down projections.  Everything else (embeddings, attention, norms) stays at
+the pretrained values.
+
+Each step runs two forwards: the trainable model (base ⊕ trainable subset ⊕
+LoRA) and the *frozen base* model, whose router distributions feed the
+rank-matching loss L_rm (the fine-tuned router must preserve the base
+router's expert ordering up to margin ρ — the anti-collapse term).
+"""
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .configs import FinetuneConfig, ModelConfig
+from .losses import melinoe_objective
+from .model import Params, forward, init_lora, merge_lora
+from .optim import adamw_init, adamw_update, linear_schedule
+
+
+def split_trainable(base: Params, cfg: ModelConfig) -> Tuple[Params, Params]:
+    """(trainable, frozen): router + gate projections train full-rank."""
+    train_keys = set()
+    for l in range(cfg.n_layers):
+        train_keys.add(f"l{l}.router")
+        train_keys.add(f"l{l}.wg")
+    trainable = {k: v for k, v in base.items() if k in train_keys}
+    frozen = {k: v for k, v in base.items() if k not in train_keys}
+    return trainable, frozen
+
+
+def finetune(
+    base_params: Params, cfg: ModelConfig, fcfg: FinetuneConfig, log_every: int = 25
+) -> Tuple[Params, List[Dict]]:
+    """Returns (merged fine-tuned params, training log)."""
+    trainable, frozen = split_trainable(base_params, cfg)
+    lora = init_lora(cfg, fcfg.lora_rank, fcfg.seed)
+    tstate = {"w": trainable, "lora": lora}
+    opt = adamw_init(tstate)
+
+    def loss_fn(ts, toks, mask):
+        p = {**frozen, **ts["w"]}
+        logits, probs_f = forward(
+            p, toks, cfg, lora=ts["lora"], lora_alpha=fcfg.lora_alpha, lora_rank=fcfg.lora_rank
+        )
+        _, probs_b = forward(base_params, toks, cfg)
+        # routing locality is shaped over the *whole* sequence (prompt +
+        # completion); NLL stays masked to the completion.
+        valid = (toks != 0).astype(logits.dtype)
+        total, parts = melinoe_objective(
+            logits, probs_f, probs_b, toks, mask,
+            lambda_cs=fcfg.lambda_cs, lambda_rm=fcfg.lambda_rm,
+            gamma=fcfg.gamma, capacity=float(fcfg.cache_capacity),
+            top_k=cfg.top_k, rho=fcfg.rho, aux_mask=valid,
+        )
+        return total, parts
+
+    @jax.jit
+    def step_fn(ts, opt_state, step, toks, mask):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(ts, toks, mask)
+        lr = linear_schedule(step, fcfg.steps, fcfg.lr, fcfg.warmup_ratio)
+        ts, opt_state = adamw_update(ts, grads, opt_state, lr, weight_decay=fcfg.weight_decay)
+        return ts, opt_state, parts
+
+    rng = np.random.RandomState(fcfg.seed + 2)
+    log: List[Dict] = []
+    t0 = time.time()
+    for i in range(fcfg.steps):
+        seeds = rng.randint(0, data.EVAL_SEED_OFFSET, size=fcfg.batch_size)
+        toks, mask = data.pack_batch(fcfg.dataset, seeds, fcfg.seq_len)
+        tstate, opt, parts = step_fn(
+            tstate, opt, jnp.int32(i), jnp.asarray(toks), jnp.asarray(mask)
+        )
+        if i % log_every == 0 or i == fcfg.steps - 1:
+            rec = {"step": i, "sec": time.time() - t0}
+            rec.update({k: float(v) for k, v in parts.items()})
+            log.append(rec)
+            print(
+                f"  [ft {cfg.name}/{fcfg.variant}] step {i} "
+                f"nll={rec['nll']:.3f} cs={rec['cs']:.3f} rm={rec['rm']:.4f}",
+                flush=True,
+            )
+    merged = merge_lora(
+        {**frozen, **tstate["w"]}, tstate["lora"], cfg, fcfg.lora_alpha, fcfg.lora_rank
+    )
+    return merged, log

@@ -1,0 +1,65 @@
+"""Pallas kernel: single-query decode attention over a KV cache.
+
+Decode attention for one token: q attends over all cached positions.  The
+grid iterates over heads; each step stages one head's K/V cache stripes
+HBM→VMEM and computes a masked softmax-weighted sum.  RoPE is applied by
+the surrounding L2 function (model.decode_layer_step), keeping the kernel a
+pure attention primitive.
+
+The additive mask (0 valid / -1e9 invalid) is computed by the caller from
+the scalar position, which keeps the kernel free of dynamic control flow —
+the TPU-friendly formulation of the causal constraint.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref):
+    q = q_ref[0]  # [hd]
+    k = k_ref[0]  # [T, hd]
+    v = v_ref[0]  # [T, hd]
+    hd = q.shape[-1]
+    scores = jnp.dot(k, q, preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.float32(hd)
+    )
+    scores = scores + mask_ref[...]
+    # numerically stable softmax in-kernel
+    m = jnp.max(scores)
+    e = jnp.exp(scores - m)
+    w = e / jnp.sum(e)
+    o_ref[0] = jnp.dot(w, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k_cache, v_cache, mask, *, interpret: bool = True):
+    """q: [H, hd]; k_cache, v_cache: [H, T, hd]; mask: [T] -> [H, hd].
+
+    Matches kernels.ref.ref_decode_attention.
+    """
+    h, hd = q.shape
+    t = k_cache.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, hd), lambda i: (i, 0)),
+            pl.BlockSpec((1, t, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, hd), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, hd), jnp.float32),
+        interpret=interpret,
+    )(q, k_cache, v_cache, mask)
+
+
+def position_mask(t_max: int, pos) -> jnp.ndarray:
+    """Additive mask admitting cache slots 0..pos inclusive."""
+    idx = jnp.arange(t_max)
+    return jnp.where(idx <= pos, 0.0, NEG_INF).astype(jnp.float32)

@@ -1,0 +1,87 @@
+"""Pallas kernel: grouped top-K expert FFN (the MELINOE compute hot-spot).
+
+The paper's hot path executes, for each token, the K routed experts'
+SwiGLU FFNs and combines them with the router probabilities (Eqs. 1–2).
+On GPU this is a batch of per-expert GEMVs with weights streamed from HBM.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the grid iterates over the
+K selected experts; each grid step's BlockSpec stages exactly one expert's
+(gate, up, down) tiles HBM→VMEM while the MXU computes
+``wd @ (silu(wg @ h) * (wu @ h))``.  The probability-weighted K-expert
+reduction is a sequential grid accumulation into the output block — the
+idiomatic TPU replacement for the GPU's atomics / second kernel.  dff is
+additionally tiled so that one (expert, dff-tile) working set stays well
+under VMEM; the f-axis partial products accumulate into the same output
+block.
+
+Lowered with ``interpret=True``: CPU PJRT cannot execute Mosaic
+custom-calls, so the kernel runs as plain HLO with identical semantics; the
+grid/BlockSpec structure (and the VMEM/MXU estimates in EXPERIMENTS.md
+§Perf) is what carries to real TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(gates_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    k = pl.program_id(0)
+    f = pl.program_id(1)
+    x = x_ref[...]  # [d]
+    g = jnp.dot(wg_ref[0], x, preferred_element_type=jnp.float32)  # [tf]
+    u = jnp.dot(wu_ref[0], x, preferred_element_type=jnp.float32)  # [tf]
+    a = jax.nn.silu(g) * u
+    y = jnp.dot(wd_ref[0], a, preferred_element_type=jnp.float32)  # [d]
+    y = y * gates_ref[0]
+
+    @pl.when(jnp.logical_and(k == 0, f == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += y
+
+
+def _pick_tile(dff: int, max_tile: int = 128) -> int:
+    """Largest divisor of dff that is <= max_tile (VMEM budget knob)."""
+    t = min(dff, max_tile)
+    while dff % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tile_f", "interpret"))
+def moe_ffn(gates, x, wg, wu, wd, *, tile_f: int = 0, interpret: bool = True):
+    """Grouped K-expert FFN.
+
+    gates: [K]; x: [d]; wg, wu: [K, dff, d]; wd: [K, d, dff] -> [d]
+    Matches kernels.ref.ref_moe_ffn.
+    """
+    k_sel, dff, d = wg.shape
+    tf = tile_f or _pick_tile(dff)
+    assert dff % tf == 0, (dff, tf)
+    grid = (k_sel, dff // tf)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda k, f: (k,)),  # gates
+            pl.BlockSpec((d,), lambda k, f: (0,)),  # x (resident)
+            pl.BlockSpec((1, tf, d), lambda k, f: (k, f, 0)),  # wg tile
+            pl.BlockSpec((1, tf, d), lambda k, f: (k, f, 0)),  # wu tile
+            pl.BlockSpec((1, d, tf), lambda k, f: (k, 0, f)),  # wd tile
+        ],
+        out_specs=pl.BlockSpec((d,), lambda k, f: (0,)),  # accumulated
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=interpret,
+    )(gates, x, wg, wu, wd)
+
+
+def vmem_bytes(d: int, dff: int, tile_f: int = 0, bytes_per_el: int = 4) -> int:
+    """Per-grid-step VMEM working set (weights tiles + activations)."""
+    tf = tile_f or _pick_tile(dff)
+    weights = 2 * tf * d + d * tf  # wg, wu, wd tiles
+    acts = d + 3 * tf + d  # x, g/u/a, y/out
+    return (weights + acts) * bytes_per_el

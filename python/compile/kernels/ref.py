@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: ``pytest python/tests`` asserts the
+Pallas kernels (interpret mode) match these references across
+hypothesis-swept shapes, and the L2 training path uses them directly (the
+Pallas kernels are reserved for the AOT decode artifacts).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_expert_ffn(wg, wu, wd, x):
+    """One expert's SwiGLU FFN (paper Eq. 2).
+
+    wg, wu: [dff, d]; wd: [d, dff]; x: [d] -> [d]
+    """
+    return wd @ (jax.nn.silu(wg @ x) * (wu @ x))
+
+
+def ref_moe_ffn(gates, x, wg, wu, wd):
+    """Grouped K-expert FFN with probability-weighted combine (paper Eq. 1).
+
+    gates: [K]; x: [d]; wg, wu: [K, dff, d]; wd: [K, d, dff] -> [d]
+    """
+    g = jnp.einsum("kfd,d->kf", wg, x)
+    u = jnp.einsum("kfd,d->kf", wu, x)
+    a = jax.nn.silu(g) * u
+    y = jnp.einsum("kdf,kf->kd", wd, a)
+    return jnp.einsum("k,kd->d", gates, y)
+
+
+def ref_decode_attention(q, k_cache, v_cache, mask):
+    """Single-query multi-head attention over a KV cache.
+
+    q: [H, hd]; k_cache, v_cache: [H, T, hd]; mask: [T] additive
+    (0 for valid positions, large negative for invalid) -> [H, hd]
+    """
+    hd = q.shape[-1]
+    scores = jnp.einsum("hd,htd->ht", q, k_cache) / jnp.sqrt(jnp.float32(hd))
+    w = jax.nn.softmax(scores + mask[None, :], axis=-1)
+    return jnp.einsum("ht,htd->hd", w, v_cache)

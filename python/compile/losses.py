@@ -1,0 +1,160 @@
+"""MELINOE fine-tuning objectives (paper §3.1.1, Appendix C).
+
+* ``cache_sim_loss``  — L_cs: soft-cache simulation loss.  The soft cache
+  state follows the normalized recursion of Proposition C.3 exactly:
+
+      c^{t+1} = (γ Z^t c^t + r^t) / Z^{t+1},   Z^{t+1} = γ Z^t + K/C
+
+  with uniform initialization ‖c^1‖₁ = C, Z^1 = 1 (the paper's alternative
+  to the cache-fill phase).  The request vector r is the straight-through
+  relaxation of the binary top-K mask (model.ste_request).
+
+* ``rank_match_loss`` — L_rm: margin rank loss (Eq. 12), a differentiable
+  upper bound on ρ·Inv(p_f, p_b) (Lemma C.8).
+
+* ``nll_loss``        — masked next-token NLL.
+* ``load_balance_loss`` — Switch-style auxiliary used only for *pretraining*
+  the base models, giving them the paper's "broad utilization" pathology.
+"""
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .model import ste_request, topk_mask
+
+
+def soft_cache_scan(r_seq, gamma: float, capacity: float, top_k: int):
+    """Run the Prop. C.3 soft-cache recursion over a request sequence.
+
+    r_seq: [T, E] request vectors (rows sum to K).
+    Returns c_seq [T, E]: the cache state *seen by* token t (i.e. built from
+    requests 1..t-1), with uniform init c^1 = C/E · 1, ‖c^t‖₁ = C ∀t.
+    """
+    t_len, e = r_seq.shape
+    c0 = jnp.full((e,), capacity / e, r_seq.dtype)
+    z0 = jnp.asarray(1.0, r_seq.dtype)
+
+    def step(carry, r_t):
+        c, z = carry
+        z_next = gamma * z + top_k / capacity
+        c_next = (gamma * z * c + r_t) / z_next
+        return (c_next, z_next), c
+
+    (_, _), c_seq = jax.lax.scan(step, (c0, z0), r_seq)
+    return c_seq
+
+
+def cache_sim_loss(probs, gamma: float, capacity: float, top_k: int, token_mask=None):
+    """L_cs = (1/LT) Σ_{ℓ,t} Σ_i r_i (1 − c_i)   (paper Eq. 4).
+
+    probs: [L, B, T, E] router distributions.
+    token_mask: optional [B, T] (1 = real token); padded positions
+    contribute no requests and are excluded from the average.
+    """
+    l, b, t, e = probs.shape
+    mask, _, _ = topk_mask(probs, top_k)
+    # Cache history evolves from the *hard* requests (stop-grad: the cache
+    # state is environment, not a control knob), while the miss penalty is
+    # charged against the *soft* request K·p — the dense differentiable
+    # relaxation of the binary r whose gradient moves probability mass
+    # toward cache-resident experts at every position.  (With the paper's
+    # multi-epoch budget the straight-through form works too; the dense
+    # form reaches the same routing-locality fixed point in far fewer
+    # steps — see DESIGN.md §2.)
+    r_hard = jax.lax.stop_gradient(mask)
+    r_soft = top_k * probs
+    if token_mask is not None:
+        r_hard = r_hard * token_mask[None, :, :, None]
+        r_soft = r_soft * token_mask[None, :, :, None]
+
+    def per_seq(args):  # ([T,E], [T,E])
+        r_seq, s_seq = args
+        c_seq = jax.lax.stop_gradient(soft_cache_scan(r_seq, gamma, capacity, top_k))
+        # clamp: with uniform init the normalized state stays ≤ C but
+        # individual entries can exceed 1; the miss proxy floors at 0.
+        miss = s_seq * jnp.clip(1.0 - c_seq, 0.0, None)
+        return jnp.sum(miss, axis=-1)  # [T]
+
+    flat_h = r_hard.reshape(l * b, t, e)
+    flat_s = r_soft.reshape(l * b, t, e)
+    miss = jax.vmap(per_seq)((flat_h, flat_s))  # [L*B, T]
+    if token_mask is not None:
+        denom = l * jnp.maximum(jnp.sum(token_mask), 1.0)
+    else:
+        denom = l * b * t
+    return jnp.sum(miss) / denom
+
+
+def rank_match_loss(probs_f, probs_b, rho: float, token_mask=None):
+    """L_rm = (1/LT) Σ_{ℓ,t} Σ_{i,j} 1{p_b,i > p_b,j}[ρ − (p_f,i − p_f,j)]₊.
+
+    probs_f, probs_b: [L, B, T, E].
+    """
+    l, b, t, e = probs_f.shape
+    gt = (probs_b[..., :, None] > probs_b[..., None, :]).astype(probs_f.dtype)
+    diff = probs_f[..., :, None] - probs_f[..., None, :]
+    # normalized by the number of ordered pairs so the loss scale (and the
+    # meaning of lambda_rm) is comparable across expert counts E
+    m = jnp.mean(gt * jax.nn.relu(rho - diff), axis=(-1, -2))  # [L,B,T]
+    if token_mask is not None:
+        m = m * token_mask[None]
+        denom = l * jnp.maximum(jnp.sum(token_mask), 1.0)
+    else:
+        denom = l * b * t
+    return jnp.sum(m) / denom
+
+
+def nll_loss(logits, tokens, mask):
+    """Masked next-token NLL.  logits [B,T,V], tokens [B,T], mask [B,T]
+    (mask[i] scores the prediction of tokens[i+1])."""
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, :-1]
+    return -jnp.sum(ll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def perplexity(logits, tokens, mask) -> jnp.ndarray:
+    return jnp.exp(nll_loss(logits, tokens, mask))
+
+
+def load_balance_loss(probs, top_k: int, token_mask=None):
+    """Switch-transformer auxiliary: E · Σ_i f_i · P_i per layer, averaged.
+
+    f_i = fraction of routed (token, slot) assignments to expert i;
+    P_i = mean router probability of expert i.
+    """
+    l, b, t, e = probs.shape
+    mask, _, _ = topk_mask(probs, top_k)  # [L,B,T,E]
+    if token_mask is not None:
+        w = token_mask[None, :, :, None]
+        denom = jnp.maximum(jnp.sum(token_mask), 1.0)
+        f = jnp.sum(mask * w, axis=(1, 2)) / (denom * top_k)  # [L,E]
+        p = jnp.sum(probs * w, axis=(1, 2)) / denom
+    else:
+        f = jnp.mean(mask, axis=(1, 2)) / top_k
+        p = jnp.mean(probs, axis=(1, 2))
+    return e * jnp.mean(jnp.sum(f * p, axis=-1))
+
+
+def melinoe_objective(
+    logits, probs_f, probs_b, tokens, mask,
+    *, lambda_cs: float, lambda_rm: float, gamma: float, capacity: float,
+    top_k: int, rho: float, aux_mask=None,
+) -> Tuple[jnp.ndarray, dict]:
+    """Full fine-tuning loss L = L_nll + λ_cs L_cs + λ_rm L_rm (Eq. 6).
+
+    ``mask`` scores the NLL (completion tokens); ``aux_mask`` (default:
+    same) covers the positions whose *routing* the auxiliary losses see —
+    the paper computes L_cs/L_rm over the whole sequence, so fine-tuning
+    passes the full validity mask here.
+    """
+    if aux_mask is None:
+        aux_mask = mask
+    l_nll = nll_loss(logits, tokens, mask)
+    l_cs = cache_sim_loss(probs_f, gamma, capacity, top_k, token_mask=aux_mask)
+    l_rm = rank_match_loss(probs_f, jax.lax.stop_gradient(probs_b), rho, token_mask=aux_mask)
+    total = l_nll + lambda_cs * l_cs + lambda_rm * l_rm
+    return total, {"nll": l_nll, "cs": l_cs, "rm": l_rm, "total": total}

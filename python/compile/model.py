@@ -1,0 +1,319 @@
+"""L2: the MoE transformer (JAX), shared between training and AOT export.
+
+Architecture (per layer): RMSNorm → multi-head attention with RoPE →
+residual → RMSNorm → router (softmax over E experts, paper Eq. 1) → top-K
+SwiGLU experts (paper Eq. 2) → probability-weighted combine → residual.
+The LM head is tied to the token embedding.
+
+Two execution paths share the same parameters:
+
+* ``forward``       — batched teacher-forced training forward returning
+                      logits and the per-layer router distributions the
+                      MELINOE losses need.  Expert compute is gather-based
+                      (only the K routed experts per token), with
+                      ``jax.checkpoint`` per layer so the gathered weight
+                      tensors are recomputed rather than stored for the
+                      backward pass.
+* ``decode_layer_step`` / ``expert_group`` / ``lm_head_fn`` — the unbatched
+  decode-step functions that ``aot.py`` lowers to HLO artifacts.  Expert
+  weights are *inputs* of ``expert_group``: the Rust coordinator owns
+  residency and must produce the routed experts' weights for every call —
+  a cache miss is literally a weight fetch.
+
+Parameters live in a flat ``{name: array}`` dict (a valid pytree) so they
+round-trip through ``.npz`` untouched.
+"""
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.attention import decode_attention, position_mask
+from .kernels.moe_ffn import moe_ffn
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ------------------------------------------------------------------- params
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    rng = np.random.RandomState(seed)
+
+    def dense(*shape):
+        scale = 1.0 / np.sqrt(shape[-1])
+        return jnp.asarray(rng.randn(*shape).astype(np.float32) * scale)
+
+    p: Params = {"embed": dense(cfg.vocab_size, cfg.d_model), "lnf": jnp.ones(cfg.d_model)}
+    d, dff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    for l in range(cfg.n_layers):
+        p[f"l{l}.ln1"] = jnp.ones(d)
+        p[f"l{l}.ln2"] = jnp.ones(d)
+        for w in ("wq", "wk", "wv", "wo"):
+            p[f"l{l}.{w}"] = dense(d, d)
+        p[f"l{l}.router"] = dense(e, d)
+        p[f"l{l}.wg"] = dense(e, dff, d)
+        p[f"l{l}.wu"] = dense(e, dff, d)
+        p[f"l{l}.wd"] = dense(e, d, dff)
+    return p
+
+
+def init_lora(cfg: ModelConfig, rank: int, seed: int = 0) -> Params:
+    """LoRA adapters on the expert up & down projections (paper §3.1.1)."""
+    rng = np.random.RandomState(seed + 99)
+    e, d, dff = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p: Params = {}
+    for l in range(cfg.n_layers):
+        # A ~ N(0, 1/r), B = 0 → identity at init.
+        p[f"l{l}.wu_a"] = jnp.asarray(
+            rng.randn(e, rank, d).astype(np.float32) / np.sqrt(rank)
+        )
+        p[f"l{l}.wu_b"] = jnp.zeros((e, dff, rank), jnp.float32)
+        p[f"l{l}.wd_a"] = jnp.asarray(
+            rng.randn(e, rank, dff).astype(np.float32) / np.sqrt(rank)
+        )
+        p[f"l{l}.wd_b"] = jnp.zeros((e, d, rank), jnp.float32)
+    return p
+
+
+def merge_lora(params: Params, lora: Params, cfg: ModelConfig, alpha: float, rank: int) -> Params:
+    """Fold LoRA adapters into dense expert weights (done once at export)."""
+    out = dict(params)
+    scale = alpha / rank
+    for l in range(cfg.n_layers):
+        out[f"l{l}.wu"] = params[f"l{l}.wu"] + scale * jnp.einsum(
+            "efr,erd->efd", lora[f"l{l}.wu_b"], lora[f"l{l}.wu_a"]
+        )
+        out[f"l{l}.wd"] = params[f"l{l}.wd"] + scale * jnp.einsum(
+            "edr,erf->edf", lora[f"l{l}.wd_b"], lora[f"l{l}.wd_a"]
+        )
+    return out
+
+
+# --------------------------------------------------------------------- ops
+def rmsnorm(x, w, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions [...], returns cos/sin of shape [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., head_dim] with positions broadcastable to x.shape[:-1]."""
+    half = x.shape[-1] // 2
+    cos, sin = _rope_angles(positions, x.shape[-1], theta)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def router_probs(h2, router_w):
+    """softmax(W_r x) — paper Eq. 1. h2: [..., d], router_w: [E, d]."""
+    return jax.nn.softmax(h2 @ router_w.T, axis=-1)
+
+
+def topk_mask(p, k: int):
+    """Binary request vector r (‖r‖₁ = K) plus the top-k values/indices."""
+    topv, topi = jax.lax.top_k(p, k)
+    mask = jnp.sum(jax.nn.one_hot(topi, p.shape[-1], dtype=p.dtype), axis=-2)
+    return mask, topv, topi
+
+
+def ste_request(p, mask):
+    """Straight-through request vector: forward = binary mask, backward =
+    gradient through the routing probabilities on the selected entries.
+    (The paper's r is binary; this is the standard differentiable proxy.)"""
+    sel = p * mask
+    return jax.lax.stop_gradient(mask - sel) + sel
+
+
+# --------------------------------------------------------- training forward
+def _attention_train(x, wq, wk, wv, wo, cfg: ModelConfig):
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ wq.T).reshape(b, t, h, hd)
+    k = (x @ wk.T).reshape(b, t, h, hd)
+    v = (x @ wv.T).reshape(b, t, h, hd)
+    pos = jnp.arange(t)
+    q = apply_rope(q, pos[None, :, None], cfg.rope_theta)
+    k = apply_rope(k, pos[None, :, None], cfg.rope_theta)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(causal[None, None], scores, -1e9)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, t, d)
+    return out @ wo.T
+
+
+def _moe_block_train(h2, layer_w, cfg: ModelConfig):
+    """Gather-based top-K expert execution.  Returns (y, probs)."""
+    p = router_probs(h2, layer_w["router"])  # [B,T,E]
+    _, topv, topi = topk_mask(p, cfg.top_k)
+
+    def per_sample(args):
+        h2_b, topi_b, topv_b = args  # [T,d], [T,K], [T,K]
+        wg = layer_w["wg"][topi_b]  # [T,K,dff,d]
+        wu = layer_w["wu"][topi_b]
+        wd = layer_w["wd"][topi_b]
+        g = jnp.einsum("tkfd,td->tkf", wg, h2_b)
+        u = jnp.einsum("tkfd,td->tkf", wu, h2_b)
+        a = jax.nn.silu(g) * u
+        y = jnp.einsum("tkdf,tkf->tkd", wd, a)
+        return jnp.einsum("tk,tkd->td", topv_b, y)
+
+    y = jax.lax.map(per_sample, (h2, topi, topv))
+    return y, p
+
+
+def _layer_train(x, layer_w, cfg: ModelConfig):
+    h = rmsnorm(x, layer_w["ln1"], cfg.rms_eps)
+    x = x + _attention_train(h, layer_w["wq"], layer_w["wk"], layer_w["wv"], layer_w["wo"], cfg)
+    h2 = rmsnorm(x, layer_w["ln2"], cfg.rms_eps)
+    y, p = _moe_block_train(h2, layer_w, cfg)
+    return x + y, p
+
+
+def layer_weights(params: Params, l: int) -> Dict[str, jnp.ndarray]:
+    names = ("ln1", "wq", "wk", "wv", "wo", "ln2", "router", "wg", "wu", "wd")
+    return {n: params[f"l{l}.{n}"] for n in names}
+
+
+def forward(
+    params: Params, tokens, cfg: ModelConfig, lora: Params = None,
+    lora_alpha: float = 16.0, lora_rank: int = 8,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Teacher-forced forward.
+
+    tokens: [B, T] int32.
+    Returns (logits [B,T,V], probs [L,B,T,E]).
+    """
+    if lora is not None:
+        params = merge_lora(params, lora, cfg, lora_alpha, lora_rank)
+    x = params["embed"][tokens]
+    probs = []
+    step = jax.checkpoint(functools.partial(_layer_train, cfg=cfg))
+    for l in range(cfg.n_layers):
+        x, p = step(x, layer_weights(params, l))
+        probs.append(p)
+    x = rmsnorm(x, params["lnf"], cfg.rms_eps)
+    logits = x @ params["embed"].T
+    return logits, jnp.stack(probs)
+
+
+# ----------------------------------------------------- decode-step functions
+def decode_layer_step(
+    x, ln1, wq, wk, wv, wo, ln2, router_w, k_cache, v_cache, pos,
+    *, cfg: ModelConfig, use_pallas: bool = True,
+):
+    """One layer's pre-expert decode step (lowered to layer_step.hlo.txt).
+
+    x: [d]; k_cache, v_cache: [H, T_max, hd]; pos: scalar int32.
+    Returns (probs [E], h_res [d], h2 [d], new_k_cache, new_v_cache).
+    The expert contribution is applied by the caller (Rust) as
+    ``x_next = h_res + expert_group(...)``.
+    """
+    h_dim, hd = cfg.n_heads, cfg.head_dim
+    h = rmsnorm(x, ln1, cfg.rms_eps)
+    q = (wq @ h).reshape(h_dim, hd)
+    k = (wk @ h).reshape(h_dim, hd)
+    v = (wv @ h).reshape(h_dim, hd)
+    q = apply_rope(q, jnp.full((h_dim,), pos), cfg.rope_theta)
+    k = apply_rope(k, jnp.full((h_dim,), pos), cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k[:, None, :], (0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v[:, None, :], (0, pos, 0))
+    mask = position_mask(k_cache.shape[1], pos)
+    if use_pallas:
+        attn = decode_attention(q, k_cache, v_cache, mask)
+    else:
+        attn = ref.ref_decode_attention(q, k_cache, v_cache, mask)
+    h_res = x + wo @ attn.reshape(-1)
+    h2 = rmsnorm(h_res, ln2, cfg.rms_eps)
+    probs = jax.nn.softmax(router_w @ h2)
+    return probs, h_res, h2, k_cache, v_cache
+
+
+def expert_group(gates, h2, wg, wu, wd, *, use_pallas: bool = True):
+    """Grouped routed-expert FFN (lowered to expert_group.hlo.txt).
+
+    gates: [K]; h2: [d]; wg/wu: [K,dff,d]; wd: [K,d,dff] → y [d].
+    """
+    if use_pallas:
+        return moe_ffn(gates, h2, wg, wu, wd)
+    return ref.ref_moe_ffn(gates, h2, wg, wu, wd)
+
+
+def lm_head_fn(h, lnf, embed, *, cfg: ModelConfig):
+    """Final norm + tied LM head (lowered to lm_head.hlo.txt)."""
+    return embed @ rmsnorm(h, lnf, cfg.rms_eps)
+
+
+# --------------------------------------------------- python-side decoding
+def init_kv(cfg: ModelConfig):
+    shape = (cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def decode_token(params: Params, tok, pos, k_caches, v_caches, cfg: ModelConfig, use_pallas: bool = False):
+    """Run one full decode step in python (predictor data / goldens).
+
+    Returns (next_token, probs [L,E], new caches).
+    Mirrors exactly what the Rust engine does with the HLO artifacts.
+    """
+    x = params["embed"][tok]
+    probs_all = []
+    new_k, new_v = [], []
+    for l in range(cfg.n_layers):
+        w = layer_weights(params, l)
+        probs, h_res, h2, kc, vc = decode_layer_step(
+            x, w["ln1"], w["wq"], w["wk"], w["wv"], w["wo"], w["ln2"],
+            w["router"], k_caches[l], v_caches[l], pos,
+            cfg=cfg, use_pallas=use_pallas,
+        )
+        _, topv, topi = topk_mask(probs, cfg.top_k)
+        y = expert_group(
+            topv, h2, w["wg"][topi], w["wu"][topi], w["wd"][topi],
+            use_pallas=use_pallas,
+        )
+        x = h_res + y
+        probs_all.append(probs)
+        new_k.append(kc)
+        new_v.append(vc)
+    logits = lm_head_fn(x, params["lnf"], params["embed"], cfg=cfg)
+    return jnp.argmax(logits), jnp.stack(probs_all), jnp.stack(new_k), jnp.stack(new_v)
+
+
+def decode_greedy(params: Params, prompt, n_gen: int, cfg: ModelConfig, use_pallas: bool = False):
+    """Greedy decode; returns (generated tokens, probs [steps, L, E]).
+
+    probs covers every decode step (prompt prefill + generation), matching
+    the router-statistics collection the predictor trains on (§3.1.2).
+    """
+    k_caches, v_caches = init_kv(cfg)
+    probs_hist = []
+    tok = None
+    gen = []
+    for i, t in enumerate(list(prompt)):
+        tok, probs, k_caches, v_caches = decode_token(
+            params, jnp.int32(t), jnp.int32(i), k_caches, v_caches, cfg, use_pallas
+        )
+        probs_hist.append(probs)
+    pos = len(prompt)
+    for _ in range(n_gen):
+        gen.append(int(tok))
+        if gen[-1] == 2:  # EOS
+            break
+        tok, probs, k_caches, v_caches = decode_token(
+            params, jnp.int32(tok), jnp.int32(pos), k_caches, v_caches, cfg, use_pallas
+        )
+        probs_hist.append(probs)
+        pos += 1
+    return gen, jnp.stack(probs_hist)

@@ -1,0 +1,52 @@
+"""Hand-rolled AdamW + linear-warmup/linear-decay schedule.
+
+(optax is unavailable in the offline image; this is the standard textbook
+AdamW over flat ``{name: array}`` pytrees, with decoupled weight decay and
+bias correction, matching the paper's optimizer settings in Table 7.)
+"""
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+
+def adamw_init(params: Params) -> Dict:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(
+    params: Params,
+    grads: Params,
+    state: Dict,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Tuple[Params, Dict]:
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return p - lr * (step + weight_decay * p)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def linear_schedule(step, total_steps: int, peak_lr: float, warmup_ratio: float):
+    """Linear warmup to peak then linear decay to 0 (paper Table 7)."""
+    warm = max(int(total_steps * warmup_ratio), 1)
+    s = step.astype(jnp.float32)
+    up = peak_lr * s / warm
+    down = peak_lr * jnp.maximum(total_steps - s, 0.0) / max(total_steps - warm, 1)
+    return jnp.where(s < warm, up, down)

@@ -1,0 +1,113 @@
+"""Expert-activation predictor Ψ (paper §3.1.2).
+
+Dataset: for each training prompt q we record the per-layer *average router
+probability* over a greedy generation, Y(q) ∈ R^{L×E} — exactly the
+supervised target of the paper.  The prompt representation Ψ_EMB(q) is the
+mean-pooled (frozen) MoE token embedding of the prompt (the offline
+substitute for BGE-Base; DESIGN.md §2.4).
+
+Model: a two-layer MLP trained with row-wise-softmax KL divergence against
+the row-normalized targets, SGD + momentum (paper Table 8).
+"""
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .configs import ModelConfig, PredictorConfig
+from .model import Params, decode_greedy
+
+
+def build_dataset(
+    params: Params, cfg: ModelConfig, dataset: str, pcfg: PredictorConfig
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (X [N, d], Y [N, L, E])."""
+    rng = np.random.RandomState(pcfg.seed + 11)
+    embed = np.asarray(params["embed"])
+    xs, ys = [], []
+    for n in range(pcfg.n_prompts):
+        seed = int(rng.randint(0, data.EVAL_SEED_OFFSET))
+        s = data.make_sample(dataset, seed)
+        prompt = s.tokens[: s.prompt_len]
+        _, probs_hist = decode_greedy(params, prompt, pcfg.gen_tokens, cfg)
+        xs.append(embed[prompt].mean(axis=0))
+        ys.append(np.asarray(probs_hist.mean(axis=0)))  # [L,E]
+    return np.stack(xs), np.stack(ys)
+
+
+def init_predictor(cfg: ModelConfig, pcfg: PredictorConfig, seed: int = 0) -> Dict:
+    rng = np.random.RandomState(seed + 12)
+    d, h = cfg.d_model, pcfg.hidden_dim
+    out = cfg.n_layers * cfg.n_experts
+    return {
+        "w1": jnp.asarray(rng.randn(h, d).astype(np.float32) / np.sqrt(d)),
+        "b1": jnp.zeros(h, jnp.float32),
+        "w2": jnp.asarray(rng.randn(out, h).astype(np.float32) / np.sqrt(h)),
+        "b2": jnp.zeros(out, jnp.float32),
+    }
+
+
+def predictor_forward(p: Dict, x, n_layers: int, n_experts: int):
+    """x: [..., d] → scores [..., L, E].  Must match rust predictor/mlp.rs
+    and the lowered predictor.hlo.txt bit-for-bit in structure."""
+    h = jax.nn.relu(x @ p["w1"].T + p["b1"])
+    out = h @ p["w2"].T + p["b2"]
+    return out.reshape(*x.shape[:-1], n_layers, n_experts)
+
+
+def kl_loss(p: Dict, x, y, n_layers: int, n_experts: int):
+    """Row-wise KL(target ‖ softmax(pred)) (paper §3.1.2)."""
+    scores = predictor_forward(p, x, n_layers, n_experts)
+    logq = jax.nn.log_softmax(scores, axis=-1)
+    tgt = y / jnp.clip(jnp.sum(y, axis=-1, keepdims=True), 1e-9)
+    ent = jnp.sum(tgt * jnp.log(jnp.clip(tgt, 1e-9)), axis=-1)
+    return jnp.mean(ent - jnp.sum(tgt * logq, axis=-1))
+
+
+def train_predictor(
+    x: np.ndarray, y: np.ndarray, cfg: ModelConfig, pcfg: PredictorConfig
+) -> Tuple[Dict, List[Dict]]:
+    params = init_predictor(cfg, pcfg, pcfg.seed)
+    vel = jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step_fn(p, v, xb, yb):
+        loss, g = jax.value_and_grad(kl_loss)(p, xb, yb, cfg.n_layers, cfg.n_experts)
+        v = jax.tree_util.tree_map(lambda v_, g_: pcfg.momentum * v_ + g_, v, g)
+        p = jax.tree_util.tree_map(lambda p_, v_: p_ - pcfg.lr * v_, p, v)
+        return p, v, loss
+
+    n = x.shape[0]
+    rng = np.random.RandomState(pcfg.seed + 13)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    log: List[Dict] = []
+    t0 = time.time()
+    for ep in range(pcfg.epochs):
+        order = rng.permutation(n)
+        losses = []
+        for lo in range(0, n, pcfg.batch_size):
+            idx = order[lo : lo + pcfg.batch_size]
+            params, vel, loss = step_fn(params, vel, xj[idx], yj[idx])
+            losses.append(float(loss))
+        if ep % 10 == 0 or ep == pcfg.epochs - 1:
+            rec = {"epoch": ep, "kl": float(np.mean(losses)), "sec": time.time() - t0}
+            log.append(rec)
+            print(f"  [predictor {cfg.name}] epoch {ep} kl={rec['kl']:.4f}", flush=True)
+    return params, log
+
+
+def topc_hit_rate(p: Dict, x, y, cfg: ModelConfig, capacity: int) -> float:
+    """Eval: fraction of true top-C experts recovered in the predicted
+    top-C prefetch set, averaged over layers/prompts."""
+    scores = np.asarray(predictor_forward(p, jnp.asarray(x), cfg.n_layers, cfg.n_experts))
+    hits = []
+    for n in range(x.shape[0]):
+        for l in range(cfg.n_layers):
+            pred = set(np.argsort(-scores[n, l])[:capacity].tolist())
+            true = set(np.argsort(-y[n, l])[:capacity].tolist())
+            hits.append(len(pred & true) / capacity)
+    return float(np.mean(hits))

@@ -1,0 +1,64 @@
+"""From-scratch pretraining of the micro MoE backbones.
+
+The paper starts from pretrained checkpoints (OLMoE / Phi-3.5-MoE /
+Mixtral-8x7B) whose routers were trained with *load-balancing* objectives —
+the very objective that causes broad expert utilization and heavy cache
+churn (§2).  To reproduce that starting point we pretrain each micro model
+on a 50/50 mix of the two synthetic corpora with NLL + a Switch-style
+load-balance auxiliary, so the base router exhibits the paper's "weak
+sequence-level specialization, broad global utilization" pathology before
+MELINOE fine-tuning is applied.
+"""
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .configs import ModelConfig, PretrainConfig
+from .losses import load_balance_loss, nll_loss
+from .model import Params, forward, init_params
+from .optim import adamw_init, adamw_update, linear_schedule
+
+
+def pretrain(cfg: ModelConfig, pcfg: PretrainConfig, log_every: int = 50) -> Tuple[Params, List[Dict]]:
+    params = init_params(cfg, pcfg.seed)
+    opt = adamw_init(params)
+
+    def loss_fn(p, toks, mask):
+        logits, probs = forward(p, toks, cfg)
+        l_nll = nll_loss(logits, toks, mask)
+        l_lb = load_balance_loss(probs, cfg.top_k, token_mask=mask)
+        return l_nll + pcfg.load_balance_coef * l_lb, (l_nll, l_lb)
+
+    @jax.jit
+    def step_fn(p, opt_state, step, toks, mask):
+        (loss, (l_nll, l_lb)), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, toks, mask)
+        lr = linear_schedule(step, pcfg.steps, pcfg.lr, pcfg.warmup_ratio)
+        p, opt_state = adamw_update(p, grads, opt_state, lr, weight_decay=pcfg.weight_decay)
+        return p, opt_state, loss, l_nll, l_lb
+
+    rng = np.random.RandomState(pcfg.seed + 1)
+    log: List[Dict] = []
+    t0 = time.time()
+    for i in range(pcfg.steps):
+        ds = "dolly-syn" if i % 2 == 0 else "gsm-syn"
+        seeds = rng.randint(0, data.EVAL_SEED_OFFSET, size=pcfg.batch_size)
+        toks, mask = data.pack_batch(ds, seeds, pcfg.seq_len)
+        params, opt, loss, l_nll, l_lb = step_fn(
+            params, opt, jnp.int32(i), jnp.asarray(toks), jnp.asarray(mask)
+        )
+        if i % log_every == 0 or i == pcfg.steps - 1:
+            rec = {
+                "step": i,
+                "loss": float(loss),
+                "nll": float(l_nll),
+                "lb": float(l_lb),
+                "sec": time.time() - t0,
+            }
+            log.append(rec)
+            print(f"  [pretrain {cfg.name}] step {i} nll={rec['nll']:.3f} lb={rec['lb']:.3f}", flush=True)
+    return params, log

@@ -1,0 +1,132 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis-swept)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import decode_attention, position_mask
+from compile.kernels.moe_ffn import _pick_tile, moe_ffn, vmem_bytes
+
+
+def rand(rng, *shape, scale=0.5):
+    return jnp.asarray(rng.randn(*shape).astype(np.float32) * scale)
+
+
+# ------------------------------------------------------------------ moe_ffn
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.sampled_from([1, 2, 4, 8]),
+    dff=st.sampled_from([16, 64, 128, 192]),
+    d=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_moe_ffn_matches_ref(k, dff, d, seed):
+    rng = np.random.RandomState(seed)
+    gates = jnp.asarray(np.abs(rng.randn(k)).astype(np.float32))
+    x = rand(rng, d)
+    wg, wu = rand(rng, k, dff, d), rand(rng, k, dff, d)
+    wd = rand(rng, k, d, dff)
+    got = moe_ffn(gates, x, wg, wu, wd)
+    want = ref.ref_moe_ffn(gates, x, wg, wu, wd)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("tile", [16, 32, 64])
+def test_moe_ffn_tile_invariant(tile):
+    """Output must not depend on the dff tiling (pure perf knob)."""
+    rng = np.random.RandomState(0)
+    k, dff, d = 4, 64, 32
+    gates = jnp.asarray(np.abs(rng.randn(k)).astype(np.float32))
+    x, wg, wu, wd = rand(rng, d), rand(rng, k, dff, d), rand(rng, k, dff, d), rand(rng, k, d, dff)
+    full = moe_ffn(gates, x, wg, wu, wd, tile_f=dff)
+    tiled = moe_ffn(gates, x, wg, wu, wd, tile_f=tile)
+    np.testing.assert_allclose(full, tiled, rtol=1e-4, atol=1e-5)
+
+
+def test_moe_ffn_zero_gates():
+    rng = np.random.RandomState(1)
+    k, dff, d = 2, 16, 8
+    out = moe_ffn(
+        jnp.zeros(k), rand(rng, d), rand(rng, k, dff, d), rand(rng, k, dff, d), rand(rng, k, d, dff)
+    )
+    np.testing.assert_allclose(out, np.zeros(d), atol=1e-7)
+
+
+def test_moe_ffn_single_expert_equals_expert_ffn():
+    rng = np.random.RandomState(2)
+    dff, d = 32, 16
+    x, wg, wu, wd = rand(rng, d), rand(rng, 1, dff, d), rand(rng, 1, dff, d), rand(rng, 1, d, dff)
+    got = moe_ffn(jnp.ones(1), x, wg, wu, wd)
+    want = ref.ref_expert_ffn(wg[0], wu[0], wd[0], x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_moe_ffn_linear_in_gates():
+    """y(α·gates) = α·y(gates): the combine is linear in the router probs."""
+    rng = np.random.RandomState(3)
+    k, dff, d = 4, 32, 16
+    gates = jnp.asarray(np.abs(rng.randn(k)).astype(np.float32))
+    args = (rand(rng, d), rand(rng, k, dff, d), rand(rng, k, dff, d), rand(rng, k, d, dff))
+    np.testing.assert_allclose(
+        moe_ffn(2.5 * gates, *args), 2.5 * moe_ffn(gates, *args), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_pick_tile_divides():
+    for dff in (16, 48, 64, 100, 128, 192, 384):
+        t = _pick_tile(dff)
+        assert dff % t == 0 and 1 <= t <= 128
+
+
+def test_vmem_budget():
+    """Structural perf check: per-step working set must fit 16 MB VMEM
+    with generous margin for every preset's (d, dff)."""
+    for d, dff in ((32, 64), (32, 128), (32, 192), (2048, 1024)):
+        assert vmem_bytes(d, dff) < 4 * 2**20
+
+
+# --------------------------------------------------------- decode attention
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    t=st.sampled_from([4, 16, 64, 288]),
+    hd=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(h, t, hd, seed):
+    rng = np.random.RandomState(seed)
+    pos = int(rng.randint(t))
+    q, kc, vc = rand(rng, h, hd), rand(rng, h, t, hd), rand(rng, h, t, hd)
+    mask = position_mask(t, pos)
+    got = decode_attention(q, kc, vc, mask)
+    want = ref.ref_decode_attention(q, kc, vc, mask)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_pos0_reads_only_slot0():
+    """With pos=0 the output must be exactly v_cache[:, 0]."""
+    rng = np.random.RandomState(5)
+    h, t, hd = 2, 8, 4
+    q, kc, vc = rand(rng, h, hd), rand(rng, h, t, hd), rand(rng, h, t, hd)
+    out = decode_attention(q, kc, vc, position_mask(t, 0))
+    np.testing.assert_allclose(out, vc[:, 0], rtol=1e-5, atol=1e-6)
+
+
+def test_attention_ignores_future_garbage():
+    """Entries beyond pos must not affect the result (causal correctness)."""
+    rng = np.random.RandomState(6)
+    h, t, hd, pos = 2, 16, 8, 5
+    q, kc, vc = rand(rng, h, hd), rand(rng, h, t, hd), rand(rng, h, t, hd)
+    mask = position_mask(t, pos)
+    base = decode_attention(q, kc, vc, mask)
+    kc2 = kc.at[:, pos + 1 :].set(999.0)
+    vc2 = vc.at[:, pos + 1 :].set(-999.0)
+    np.testing.assert_allclose(decode_attention(q, kc2, vc2, mask), base, rtol=1e-5, atol=1e-6)
+
+
+def test_position_mask_values():
+    m = np.asarray(position_mask(6, 2))
+    assert (m[:3] == 0).all() and (m[3:] < -1e8).all()

@@ -1,0 +1,183 @@
+"""MELINOE loss functions vs the paper's Appendix C identities."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import losses
+from compile.model import topk_mask, ste_request
+
+
+def rand_probs(rng, *shape):
+    z = rng.randn(*shape).astype(np.float32) * 2
+    return jnp.asarray(jax.nn.softmax(jnp.asarray(z), axis=-1))
+
+
+# ------------------------------------------------------------- soft cache
+def unrolled_cache(r_seq, gamma, capacity, top_k):
+    """Direct (non-recursive) form of Prop. C.3:
+    c^t = Count^t / ||Count^t||_1 * C with Count unrolled explicitly."""
+    t_len, e = r_seq.shape
+    count = np.full(e, capacity / e)  # uniform init, ||.||_1 = C
+    states = []
+    for t in range(t_len):
+        states.append(count / count.sum() * capacity)
+        count = gamma * count + np.asarray(r_seq[t])
+    return np.stack(states)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    e=st.sampled_from([4, 8, 16]),
+    t=st.sampled_from([3, 8, 20]),
+    gamma=st.sampled_from([0.0, 0.3, 0.9, 1.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_soft_cache_recursion_matches_unrolled(e, t, gamma, seed):
+    rng = np.random.RandomState(seed)
+    k = 2
+    p = rand_probs(rng, t, e)
+    mask, _, _ = topk_mask(p, k)
+    c_rec = np.asarray(losses.soft_cache_scan(mask, gamma, float(e // 2), k))
+    c_unr = unrolled_cache(mask, gamma, float(e // 2), k)
+    np.testing.assert_allclose(c_rec, c_unr, rtol=1e-4, atol=1e-5)
+
+
+def test_soft_cache_l1_norm_preserved():
+    """‖c^t‖₁ = C for all t (Prop. C.3 normalization)."""
+    rng = np.random.RandomState(0)
+    p = rand_probs(rng, 16, 8)
+    mask, _, _ = topk_mask(p, 2)
+    c = np.asarray(losses.soft_cache_scan(mask, 0.9, 4.0, 2))
+    np.testing.assert_allclose(c.sum(axis=-1), 4.0, rtol=1e-5)
+
+
+def test_cache_loss_prefers_repeat_routing():
+    """A sequence that reuses the same experts must score lower than one
+    that touches disjoint experts each token (the whole point of L_cs)."""
+    e, t, k = 8, 8, 2
+    same = np.zeros((1, 1, t, e), np.float32)
+    same[..., :, :k] = 1.0 / k  # always experts {0,1}, prob mass on them
+    roam = np.zeros((1, 1, t, e), np.float32)
+    for i in range(t):
+        roam[0, 0, i, (2 * i) % e] = 0.5
+        roam[0, 0, i, (2 * i + 1) % e] = 0.5
+    l_same = float(losses.cache_sim_loss(jnp.asarray(same), 0.9, 2.0, k))
+    l_roam = float(losses.cache_sim_loss(jnp.asarray(roam), 0.9, 2.0, k))
+    assert l_same < l_roam
+
+
+def test_cache_loss_bounded_by_k():
+    rng = np.random.RandomState(1)
+    probs = rand_probs(rng, 2, 3, 12, 16)
+    l = float(losses.cache_sim_loss(probs, 0.9, 4.0, 4))
+    assert 0.0 <= l <= 4.0
+
+
+def test_cache_loss_has_router_gradient():
+    """The STE relaxation must give non-zero gradient w.r.t. the probs."""
+    rng = np.random.RandomState(2)
+    z = jnp.asarray(rng.randn(1, 1, 6, 8).astype(np.float32))
+
+    def f(z):
+        return losses.cache_sim_loss(jax.nn.softmax(z, -1), 0.9, 2.0, 2)
+
+    g = jax.grad(f)(z)
+    assert float(jnp.max(jnp.abs(g))) > 0.0
+
+
+# ------------------------------------------------------------ rank matching
+def inversion_count(pf, pb):
+    e = pf.shape[-1]
+    inv = 0
+    for i in range(e):
+        for j in range(e):
+            if pb[i] > pb[j] and pf[i] < pf[j]:
+                inv += 1
+    return inv
+
+
+@settings(max_examples=15, deadline=None)
+@given(e=st.sampled_from([4, 8]), seed=st.integers(0, 2**16))
+def test_rank_loss_bounds_inversions(e, seed):
+    """Lemma C.8: the raw margin sum bounds ρ·Inv(p_f, p_b).  Our
+    implementation normalizes by the E² pair count (DESIGN.md §2.7), so
+    the bound reads m ≥ ρ · Inv / E²."""
+    rng = np.random.RandomState(seed)
+    rho = 0.1
+    pf = np.asarray(rand_probs(rng, e))
+    pb = np.asarray(rand_probs(rng, e))
+    m = float(
+        losses.rank_match_loss(
+            jnp.asarray(pf)[None, None, None], jnp.asarray(pb)[None, None, None], rho
+        )
+    )
+    assert m >= rho * inversion_count(pf, pb) / (e * e) - 1e-6
+
+
+def test_rank_loss_zero_when_separated():
+    """If p_f preserves p_b's order with margins ≥ ρ everywhere, L_rm = 0."""
+    p = jnp.asarray([[0.5, 0.3, 0.15, 0.05]], jnp.float32)[None, None]
+    assert float(losses.rank_match_loss(p, p, 0.05)) == 0.0
+
+
+def test_rank_loss_penalizes_flip():
+    pb = jnp.asarray([0.6, 0.3, 0.1], jnp.float32)[None, None, None]
+    pf_ok = jnp.asarray([0.55, 0.35, 0.10], jnp.float32)[None, None, None]
+    pf_flip = jnp.asarray([0.10, 0.35, 0.55], jnp.float32)[None, None, None]
+    assert float(losses.rank_match_loss(pf_flip, pb, 0.1)) > float(
+        losses.rank_match_loss(pf_ok, pb, 0.1)
+    )
+
+
+# ------------------------------------------------------------------- others
+def test_nll_matches_manual():
+    rng = np.random.RandomState(3)
+    logits = jnp.asarray(rng.randn(1, 4, 6).astype(np.float32))
+    toks = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    mask = jnp.asarray([[1.0, 1.0, 1.0, 0.0]], jnp.float32)
+    logp = np.asarray(jax.nn.log_softmax(logits, -1))
+    want = -(logp[0, 0, 2] + logp[0, 1, 3] + logp[0, 2, 4]) / 3
+    got = float(losses.nll_loss(logits, toks, mask))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_load_balance_uniform_is_one():
+    """Perfectly balanced routing gives E·Σ f·P = E·E·(1/E·1/E) = 1."""
+    e, k, t = 8, 2, 64
+    # cyclic routing: uniform f; probs uniform.
+    p = jnp.full((1, 1, t, e), 1.0 / e, jnp.float32)
+    # ties in top_k pick the first k — perturb cyclically for uniform f
+    z = np.full((1, 1, t, e), 1.0 / e, np.float32)
+    for i in range(t):
+        z[0, 0, i, (i * k) % e] += 1e-4
+        z[0, 0, i, (i * k + 1) % e] += 1e-4
+    val = float(losses.load_balance_loss(jnp.asarray(z), k))
+    np.testing.assert_allclose(val, 1.0, rtol=0.05)
+
+
+def test_ste_request_forward_is_binary():
+    rng = np.random.RandomState(4)
+    p = rand_probs(rng, 5, 8)
+    mask, _, _ = topk_mask(p, 3)
+    r = ste_request(p, mask)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(mask), atol=1e-7)
+    assert np.allclose(np.asarray(r).sum(-1), 3)
+
+
+def test_melinoe_objective_composition():
+    rng = np.random.RandomState(5)
+    logits = jnp.asarray(rng.randn(2, 8, 16).astype(np.float32))
+    probs = rand_probs(rng, 3, 2, 8, 8)
+    toks = jnp.asarray(rng.randint(0, 16, (2, 8)), jnp.int32)
+    mask = jnp.ones((2, 8), jnp.float32)
+    total, parts = losses.melinoe_objective(
+        logits, probs, probs, toks, mask,
+        lambda_cs=0.5, lambda_rm=0.1, gamma=0.9, capacity=2.0, top_k=2, rho=0.1,
+    )
+    np.testing.assert_allclose(
+        float(total),
+        float(parts["nll"]) + 0.5 * float(parts["cs"]) + 0.1 * float(parts["rm"]),
+        rtol=1e-5,
+    )

@@ -1,0 +1,128 @@
+"""L2 model: shapes, RoPE, routing, and train-vs-decode consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, data, model
+
+TINY = dataclasses.replace(
+    configs.OLMOE_MICRO, name="tiny", n_layers=2, n_experts=8, top_k=2,
+    d_model=16, d_ff=32, n_heads=2, vocab_size=64, max_seq=32,
+    cost=configs.OLMOE_MICRO.cost,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(TINY, 0)
+
+
+def test_param_shapes(params):
+    assert params["embed"].shape == (64, 16)
+    assert params["l0.router"].shape == (8, 16)
+    assert params["l0.wg"].shape == (8, 32, 16)
+    assert params["l1.wd"].shape == (8, 16, 32)
+
+
+def test_forward_shapes(params):
+    toks = jnp.asarray(np.random.RandomState(0).randint(0, 64, (3, 12)), jnp.int32)
+    logits, probs = model.forward(params, toks, TINY)
+    assert logits.shape == (3, 12, 64)
+    assert probs.shape == (2, 3, 12, 8)
+    np.testing.assert_allclose(np.asarray(probs).sum(-1), 1.0, rtol=1e-4)
+
+
+def test_rope_preserves_norm():
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(5, 8).astype(np.float32))
+    y = model.apply_rope(x, jnp.arange(5))
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_position_zero_is_identity():
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(3, 8).astype(np.float32))
+    np.testing.assert_allclose(model.apply_rope(x, jnp.zeros(3)), x, atol=1e-6)
+
+
+def test_rope_relative_property():
+    """RoPE inner products depend only on relative offset."""
+    rng = np.random.RandomState(3)
+    q = jnp.asarray(rng.randn(8).astype(np.float32))
+    k = jnp.asarray(rng.randn(8).astype(np.float32))
+
+    def dot_at(pq, pk):
+        return float(
+            model.apply_rope(q[None], jnp.asarray([pq]))[0]
+            @ model.apply_rope(k[None], jnp.asarray([pk]))[0]
+        )
+
+    np.testing.assert_allclose(dot_at(3, 1), dot_at(7, 5), rtol=1e-4)
+
+
+def test_topk_mask_properties():
+    rng = np.random.RandomState(4)
+    p = jax.nn.softmax(jnp.asarray(rng.randn(6, 8).astype(np.float32)), -1)
+    mask, topv, topi = model.topk_mask(p, 3)
+    assert np.asarray(mask).sum(-1).tolist() == [3] * 6
+    # mask marks exactly the top-3 entries
+    for r in range(6):
+        sel = set(np.where(np.asarray(mask[r]) > 0)[0].tolist())
+        assert sel == set(np.asarray(topi[r]).tolist())
+
+
+def test_merge_lora_identity_at_init(params):
+    """B = 0 at init ⇒ merged weights equal the base weights."""
+    lora = model.init_lora(TINY, 4, 0)
+    merged = model.merge_lora(params, lora, TINY, 16.0, 4)
+    np.testing.assert_allclose(merged["l0.wu"], params["l0.wu"], atol=1e-7)
+    np.testing.assert_allclose(merged["l1.wd"], params["l1.wd"], atol=1e-7)
+
+
+def test_merge_lora_changes_weights(params):
+    lora = model.init_lora(TINY, 4, 0)
+    lora = {k: (v + 0.1 if "_b" in k else v) for k, v in lora.items()}
+    merged = model.merge_lora(params, lora, TINY, 16.0, 4)
+    assert float(jnp.max(jnp.abs(merged["l0.wu"] - params["l0.wu"]))) > 1e-3
+
+
+def test_decode_matches_teacher_forced(params):
+    """The incremental KV-cache decode path must produce the same router
+    distributions as the batched training forward — this pins the AOT
+    decode artifacts to the training semantics."""
+    rng = np.random.RandomState(5)
+    toks = rng.randint(4, 64, size=10).tolist()
+    _, probs_train = model.forward(params, jnp.asarray([toks], jnp.int32), TINY)
+    k_caches, v_caches = model.init_kv(TINY)
+    for i, t in enumerate(toks):
+        _, probs_step, k_caches, v_caches = model.decode_token(
+            params, jnp.int32(t), jnp.int32(i), k_caches, v_caches, TINY, False
+        )
+        np.testing.assert_allclose(
+            np.asarray(probs_step), np.asarray(probs_train[:, 0, i]), rtol=2e-3, atol=2e-4
+        )
+
+
+def test_decode_pallas_matches_ref_path(params):
+    toks = [5, 9, 17, 33]
+    kr, vr = model.init_kv(TINY)
+    kp, vp = model.init_kv(TINY)
+    for i, t in enumerate(toks):
+        tr, pr, kr, vr = model.decode_token(params, jnp.int32(t), jnp.int32(i), kr, vr, TINY, False)
+        tp, pp, kp, vp = model.decode_token(params, jnp.int32(t), jnp.int32(i), kp, vp, TINY, True)
+        assert int(tr) == int(tp)
+        np.testing.assert_allclose(np.asarray(pr), np.asarray(pp), rtol=1e-4, atol=1e-5)
+
+
+def test_decode_greedy_stops_at_eos(params):
+    gen, probs = model.decode_greedy(params, [1, 5, 9], 8, TINY)
+    assert len(gen) <= 8
+    assert probs.shape[1:] == (2, 8)

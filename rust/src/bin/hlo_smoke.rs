@@ -1,0 +1,48 @@
+// Throwaway smoke: load every lowered artifact, compile on PJRT CPU, run
+// layer_step + expert_group with random inputs, print output shapes.
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let dir = std::env::args().nth(1).unwrap();
+    let client = xla::PjRtClient::cpu()?;
+    for name in ["layer_step", "expert_group", "lm_head", "predictor"] {
+        let path = format!("{dir}/hlo/{name}.hlo.txt");
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        println!("{name}: compiled ok");
+        if name == "expert_group" {
+            let (k, d, dff) = (8usize, 32usize, 64usize);
+            let gates = xla::Literal::vec1(&vec![0.125f32; k]);
+            let h2 = xla::Literal::vec1(&vec![0.1f32; d]);
+            let wg = xla::Literal::vec1(&vec![0.01f32; k*dff*d]).reshape(&[k as i64, dff as i64, d as i64])?;
+            let wu = wg.reshape(&[k as i64, dff as i64, d as i64])?;
+            let wd = xla::Literal::vec1(&vec![0.01f32; k*d*dff]).reshape(&[k as i64, d as i64, dff as i64])?;
+            let r = exe.execute::<xla::Literal>(&[gates, h2, wg, wu, wd])?[0][0].to_literal_sync()?;
+            let out = r.to_tuple1()?;
+            println!("  expert_group out: {:?} first={:?}", out.array_shape()?, out.to_vec::<f32>()?[0]);
+        }
+        if name == "layer_step" {
+            let (d, e, h, t, hd) = (32usize, 64usize, 4usize, 288usize, 8usize);
+            let v1 = |n: usize| xla::Literal::vec1(&vec![0.05f32; n]);
+            let dd = v1(d*d).reshape(&[d as i64, d as i64])?;
+            let kv = v1(h*t*hd).reshape(&[h as i64, t as i64, hd as i64])?;
+            let args = vec![
+                v1(d), v1(d),
+                dd.reshape(&[d as i64, d as i64])?, dd.reshape(&[d as i64, d as i64])?,
+                dd.reshape(&[d as i64, d as i64])?, dd.reshape(&[d as i64, d as i64])?,
+                v1(d), v1(e*d).reshape(&[e as i64, d as i64])?,
+                kv.reshape(&[h as i64, t as i64, hd as i64])?, kv.reshape(&[h as i64, t as i64, hd as i64])?,
+                xla::Literal::scalar(0i32),
+            ];
+            let r = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let outs = r.to_tuple()?;
+            println!("  layer_step outputs: {}", outs.len());
+            for (i, o) in outs.iter().enumerate() {
+                println!("    out{i}: {:?}", o.array_shape()?);
+            }
+        }
+    }
+    println!("hlo_smoke OK");
+    Ok(())
+}

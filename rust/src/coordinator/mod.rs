@@ -1,0 +1,285 @@
+//! Serving coordinator: request queue → dynamic batcher → engine loop.
+//!
+//! The PJRT handles inside the engine are not `Send`, so the coordinator
+//! follows the single-runner design (as in vLLM's engine loop): client
+//! threads submit requests over an mpsc channel; one runner thread owns
+//! the model (constructed *inside* the thread by a `Send` factory), drains
+//! the queue into dynamic batches (up to `max_batch`, waiting at most
+//! `batch_wait` for stragglers), lockstep-decodes each batch, and answers
+//! each request on its own response channel.
+
+pub mod workload;
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::metrics::Report;
+
+/// Anything that can decode a batch of prompts (the real engine, or a mock
+/// in the scheduler tests).
+pub trait Decoder {
+    fn decode_batch(
+        &mut self,
+        prompts: &[Vec<usize>],
+        max_output: usize,
+    ) -> Result<(Vec<Vec<usize>>, Report)>;
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<usize>,
+    pub max_output: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<usize>,
+    /// Seconds spent waiting in the queue (wallclock).
+    pub queue_wait: f64,
+    /// Simulated decode seconds of the batch this request rode in.
+    pub sim_seconds: f64,
+    /// Simulated decoding throughput of that batch (output tok/s).
+    pub batch_tokens_per_sec: f64,
+    pub batch_size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub batch_wait: Duration,
+    pub max_output: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_batch: 4, batch_wait: Duration::from_millis(2), max_output: 32 }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub total_output_tokens: u64,
+    pub total_sim_seconds: f64,
+    pub mean_batch_size: f64,
+}
+
+enum Msg {
+    Job(Request, Sender<Response>, Instant),
+    Shutdown,
+}
+
+pub struct Server {
+    tx: Sender<Msg>,
+    handle: JoinHandle<Result<ServerStats>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Server {
+    /// Start the runner thread.  `factory` constructs the decoder inside
+    /// the thread (PJRT handles never cross threads).
+    pub fn start<D, F>(factory: F, cfg: ServerConfig) -> Server
+    where
+        D: Decoder,
+        F: FnOnce() -> Result<D> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Msg>();
+        let handle = std::thread::spawn(move || runner(factory()?, rx, cfg));
+        Server { tx, handle, next_id: std::sync::atomic::AtomicU64::new(0) }
+    }
+
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(&self, prompt: Vec<usize>, max_output: usize) -> Receiver<Response> {
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        let _ = self.tx.send(Msg::Job(Request { id, prompt, max_output }, rtx, Instant::now()));
+        rrx
+    }
+
+    /// Drain outstanding work and stop the runner.
+    pub fn shutdown(self) -> Result<ServerStats> {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.handle.join().map_err(|_| anyhow::anyhow!("runner thread panicked"))?
+    }
+}
+
+fn runner<D: Decoder>(mut dec: D, rx: Receiver<Msg>, cfg: ServerConfig) -> Result<ServerStats> {
+    let mut stats = ServerStats::default();
+    let mut batch_sizes: Vec<usize> = Vec::new();
+    'outer: loop {
+        // block for the first job
+        let first = match rx.recv() {
+            Ok(Msg::Job(r, tx, t)) => (r, tx, t),
+            Ok(Msg::Shutdown) | Err(_) => break 'outer,
+        };
+        let mut jobs = vec![first];
+        // give stragglers a short window to join the batch
+        let deadline = Instant::now() + cfg.batch_wait;
+        while jobs.len() < cfg.max_batch {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left) {
+                Ok(Msg::Job(r, tx, t)) => jobs.push((r, tx, t)),
+                Ok(Msg::Shutdown) => {
+                    process_batch(&mut dec, &mut jobs, &cfg, &mut stats, &mut batch_sizes)?;
+                    break 'outer;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        process_batch(&mut dec, &mut jobs, &cfg, &mut stats, &mut batch_sizes)?;
+    }
+    if !batch_sizes.is_empty() {
+        stats.mean_batch_size =
+            batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len() as f64;
+    }
+    Ok(stats)
+}
+
+fn process_batch<D: Decoder>(
+    dec: &mut D,
+    jobs: &mut Vec<(Request, Sender<Response>, Instant)>,
+    cfg: &ServerConfig,
+    stats: &mut ServerStats,
+    batch_sizes: &mut Vec<usize>,
+) -> Result<()> {
+    if jobs.is_empty() {
+        return Ok(());
+    }
+    let prompts: Vec<Vec<usize>> = jobs.iter().map(|(r, _, _)| r.prompt.clone()).collect();
+    let max_output = jobs.iter().map(|(r, _, _)| r.max_output).max().unwrap_or(cfg.max_output);
+    let (outputs, report) = dec.decode_batch(&prompts, max_output)?;
+    let sim = report.requests.first().map(|r| r.sim_seconds).unwrap_or(0.0);
+    let tps = report.tokens_per_sec() * report.requests.len().max(1) as f64;
+    stats.batches += 1;
+    batch_sizes.push(jobs.len());
+    for ((req, tx, t0), tokens) in jobs.drain(..).zip(outputs) {
+        stats.requests += 1;
+        stats.total_output_tokens += tokens.len() as u64;
+        let _ = tx.send(Response {
+            id: req.id,
+            tokens,
+            queue_wait: t0.elapsed().as_secs_f64(),
+            sim_seconds: sim,
+            batch_tokens_per_sec: tps,
+            batch_size: prompts.len(),
+        });
+    }
+    stats.total_sim_seconds += sim;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RequestMetrics;
+
+    /// Echo decoder: returns the prompt reversed, constant sim time.
+    struct Mock {
+        calls: u64,
+    }
+
+    impl Decoder for Mock {
+        fn decode_batch(
+            &mut self,
+            prompts: &[Vec<usize>],
+            _max_output: usize,
+        ) -> Result<(Vec<Vec<usize>>, Report)> {
+            self.calls += 1;
+            let outs: Vec<Vec<usize>> =
+                prompts.iter().map(|p| p.iter().rev().copied().collect()).collect();
+            let mut report = Report::default();
+            for p in prompts {
+                report.requests.push(RequestMetrics {
+                    prompt_tokens: p.len(),
+                    output_tokens: p.len(),
+                    sim_seconds: 0.5,
+                    sim_ttft: 0.1,
+                    wall_seconds: 0.0,
+                });
+            }
+            Ok((outs, report))
+        }
+    }
+
+    #[test]
+    fn responses_match_requests() {
+        let server = Server::start(|| Ok(Mock { calls: 0 }), ServerConfig::default());
+        let rx1 = server.submit(vec![1, 2, 3], 8);
+        let rx2 = server.submit(vec![9, 8], 8);
+        let r1 = rx1.recv().unwrap();
+        let r2 = rx2.recv().unwrap();
+        assert_eq!(r1.tokens, vec![3, 2, 1]);
+        assert_eq!(r2.tokens, vec![8, 9]);
+        assert_ne!(r1.id, r2.id);
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.requests, 2);
+    }
+
+    #[test]
+    fn batching_groups_concurrent_requests() {
+        let cfg = ServerConfig {
+            max_batch: 8,
+            batch_wait: Duration::from_millis(50),
+            max_output: 8,
+        };
+        let server = Server::start(|| Ok(Mock { calls: 0 }), cfg);
+        let rxs: Vec<_> = (0..6).map(|i| server.submit(vec![i], 4)).collect();
+        let responses: Vec<Response> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        // all six landed; at least one batch had >1 members
+        assert!(responses.iter().any(|r| r.batch_size > 1));
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.requests, 6);
+        assert!(stats.batches < 6, "requests should have been batched");
+    }
+
+    #[test]
+    fn max_batch_respected() {
+        let cfg =
+            ServerConfig { max_batch: 2, batch_wait: Duration::from_millis(50), max_output: 8 };
+        let server = Server::start(|| Ok(Mock { calls: 0 }), cfg);
+        let rxs: Vec<_> = (0..5).map(|i| server.submit(vec![i], 4)).collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.batch_size <= 2);
+        }
+        let stats = server.shutdown().unwrap();
+        assert!(stats.batches >= 3);
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let cfg = ServerConfig {
+            max_batch: 64,
+            batch_wait: Duration::from_millis(200),
+            max_output: 8,
+        };
+        let server = Server::start(|| Ok(Mock { calls: 0 }), cfg);
+        let rx = server.submit(vec![7], 4);
+        let stats = server.shutdown().unwrap();
+        assert_eq!(rx.recv().unwrap().tokens, vec![7]);
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn no_starvation_under_load() {
+        let cfg =
+            ServerConfig { max_batch: 3, batch_wait: Duration::from_millis(1), max_output: 8 };
+        let server = Server::start(|| Ok(Mock { calls: 0 }), cfg);
+        let rxs: Vec<_> = (0..30).map(|i| server.submit(vec![i], 4)).collect();
+        let mut got = 0;
+        for rx in rxs {
+            if rx.recv_timeout(Duration::from_secs(5)).is_ok() {
+                got += 1;
+            }
+        }
+        assert_eq!(got, 30);
+        server.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,103 @@
+//! Serving workload generation: request arrival processes.
+//!
+//! The paper's serving measurements are closed-loop (decode one sequence
+//! at a time); the coordinator also supports open-loop evaluation with
+//! Poisson arrivals, the standard serving-benchmark shape (vLLM/Orca).
+//! This module synthesizes those arrival schedules deterministically.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// All requests available at t=0 (throughput measurement).
+    Burst,
+    /// Poisson process with the given rate (requests/second).
+    Poisson(f64),
+    /// Fixed inter-arrival gap in seconds.
+    Uniform(f64),
+}
+
+/// A scheduled request: (arrival time seconds, eval-sample index).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduledRequest {
+    pub at: f64,
+    pub sample: usize,
+}
+
+/// Build a deterministic arrival schedule over `n` requests drawn
+/// round-robin from `n_samples` eval prompts.
+pub fn schedule(n: usize, n_samples: usize, arrival: Arrival, seed: u64) -> Vec<ScheduledRequest> {
+    assert!(n_samples > 0);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            let at = match arrival {
+                Arrival::Burst => 0.0,
+                Arrival::Poisson(rate) => {
+                    t += rng.exp(rate);
+                    t
+                }
+                Arrival::Uniform(gap) => {
+                    t += gap;
+                    t
+                }
+            };
+            ScheduledRequest { at, sample: i % n_samples }
+        })
+        .collect()
+}
+
+/// Offered load of a schedule (requests/second over its span).
+pub fn offered_load(sched: &[ScheduledRequest]) -> f64 {
+    if sched.len() < 2 {
+        return 0.0;
+    }
+    let span = sched.last().unwrap().at - sched[0].at;
+    if span <= 0.0 {
+        return f64::INFINITY;
+    }
+    (sched.len() - 1) as f64 / span
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_all_at_zero() {
+        let s = schedule(10, 4, Arrival::Burst, 1);
+        assert!(s.iter().all(|r| r.at == 0.0));
+        assert_eq!(s[5].sample, 1); // round robin over 4 samples
+    }
+
+    #[test]
+    fn poisson_monotone_and_rate_roughly_matches() {
+        let s = schedule(4000, 8, Arrival::Poisson(50.0), 7);
+        assert!(s.windows(2).all(|w| w[0].at <= w[1].at));
+        let rate = offered_load(&s);
+        assert!((rate - 50.0).abs() < 5.0, "offered {rate}");
+    }
+
+    #[test]
+    fn uniform_fixed_gap() {
+        let s = schedule(5, 2, Arrival::Uniform(0.5), 3);
+        for (i, r) in s.iter().enumerate() {
+            assert!((r.at - 0.5 * (i + 1) as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let a = schedule(64, 4, Arrival::Poisson(10.0), 42);
+        let b = schedule(64, 4, Arrival::Poisson(10.0), 42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn offered_load_degenerate() {
+        assert_eq!(offered_load(&[]), 0.0);
+        let s = schedule(10, 2, Arrival::Burst, 1);
+        assert!(offered_load(&s).is_infinite());
+    }
+}

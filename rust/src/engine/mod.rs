@@ -1,0 +1,687 @@
+//! The offloaded decode engine — the paper's post-deployment stage (§3.2).
+//!
+//! For every token, every layer:
+//!   1. `layer_step` (PJRT): attention over the KV cache + router probs;
+//!   2. top-K selection on the host (paper Eq. 1);
+//!   3. the offload policy resolves each routed expert — cache hit,
+//!      demand PCIe transfer (stalling the simulated clock, Eq. 3),
+//!      CPU execution (Fiddler), or sparsity skip (FLoE);
+//!   4. `expert_group` (PJRT, the Pallas kernel) executes the routed
+//!      experts with the *actual* resident weights (dequantized if the
+//!      policy quantizes residency) — quality effects are real;
+//!   5. host residual add; after the last layer, `lm_head` + greedy pick.
+//!
+//! Two time axes are tracked: simulated seconds (the cost model at paper
+//! scale — all reported throughput numbers) and wallclock (sanity).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cache::ExpertCache;
+use crate::clock::{CostModel, GpuSpec, SimClock};
+use crate::metrics::{Report, RequestMetrics};
+use crate::moe::{MoeConfig, PredictorWeights, RoutingProfile, WeightStore};
+use crate::pcie::TransferEngine;
+use crate::policies::{PolicyConfig, Prefetch};
+use crate::predictor::{predict_plan, predict_plan_batch, profile_plan, PrefetchPlan};
+use crate::runtime::Runtime;
+use crate::tensor::add;
+
+pub const EOS: usize = 2;
+
+/// Routing activity recorded during decoding (Figs. 1b, 7–10).
+#[derive(Debug, Clone)]
+pub struct ActivationTrace {
+    pub n_experts: usize,
+    /// counts[layer][expert] — total requests.
+    pub counts: Vec<Vec<u64>>,
+    /// steps[t][layer] — experts selected at decode step t.
+    pub steps: Vec<Vec<Vec<usize>>>,
+}
+
+impl ActivationTrace {
+    fn new(n_layers: usize, n_experts: usize) -> Self {
+        ActivationTrace {
+            n_experts,
+            counts: vec![vec![0; n_experts]; n_layers],
+            steps: Vec::new(),
+        }
+    }
+
+    /// Fraction of activations captured by the top-`c` experts of a layer.
+    pub fn topc_share(&self, layer: usize, c: usize) -> f64 {
+        let mut v = self.counts[layer].clone();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        let total: u64 = v.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        v.iter().take(c).sum::<u64>() as f64 / total as f64
+    }
+
+    /// Mean top-c share across layers.
+    pub fn mean_topc_share(&self, c: usize) -> f64 {
+        let l = self.counts.len();
+        (0..l).map(|i| self.topc_share(i, c)).sum::<f64>() / l as f64
+    }
+
+    /// Sorted activation-share curve for a layer (Fig. 1b's x-axis).
+    pub fn share_curve(&self, layer: usize) -> Vec<f64> {
+        let mut v = self.counts[layer].clone();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        let total: u64 = v.iter().sum::<u64>().max(1);
+        v.iter().map(|&c| c as f64 / total as f64).collect()
+    }
+}
+
+/// Result of one decoded request.
+pub struct DecodeOutput {
+    pub tokens: Vec<usize>,
+    pub metrics: RequestMetrics,
+    pub report: Report,
+    pub trace: ActivationTrace,
+    /// CPU-executed expert invocations (Fiddler path).
+    pub cpu_execs: u64,
+    /// Experts skipped by the sparsity threshold (FLoE path).
+    pub sparsity_skips: u64,
+}
+
+/// Engine over one loaded checkpoint + one offload policy.
+pub struct Engine<'a> {
+    pub rt: &'a Runtime,
+    pub cfg: &'a MoeConfig,
+    pub weights: &'a WeightStore,
+    pub policy: PolicyConfig,
+    pub cost: CostModel,
+    pub predictor: Option<&'a PredictorWeights>,
+    pub profile: Option<&'a RoutingProfile>,
+    /// Device-buffer memo of stacked routed sets (§Perf fast path).  The
+    /// big expert weights upload once per distinct routed set; repeats —
+    /// which MELINOE's fine-tuning makes the common case — re-dispatch
+    /// without any host→device weight traffic.
+    buf_cache: std::cell::RefCell<
+        std::collections::HashMap<(usize, Vec<usize>), std::rc::Rc<StackedBufs>>,
+    >,
+    use_buffers: bool,
+    /// Decode a fixed number of tokens regardless of EOS (serving-bench
+    /// convention): throughput comparisons stay fair when checkpoints
+    /// produce different natural output lengths.
+    pub ignore_eos: bool,
+}
+
+/// Device-resident stacked expert weights.
+pub struct StackedBufs {
+    pub wg: xla::PjRtBuffer,
+    pub wu: xla::PjRtBuffer,
+    pub wd: xla::PjRtBuffer,
+}
+
+const BUF_CACHE_CAP: usize = 512;
+
+struct SeqState {
+    x: Vec<f32>,
+    k_caches: Vec<xla::Literal>,
+    v_caches: Vec<xla::Literal>,
+    pos: usize,
+    tokens: Vec<usize>, // generated
+    done: bool,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        rt: &'a Runtime,
+        cfg: &'a MoeConfig,
+        weights: &'a WeightStore,
+        policy: PolicyConfig,
+        gpu: GpuSpec,
+    ) -> Engine<'a> {
+        let cost = CostModel::new(gpu, cfg.cost);
+        let use_buffers = std::env::var("MELINOE_NO_BUFCACHE").is_err();
+        Engine {
+            rt,
+            cfg,
+            weights,
+            policy,
+            cost,
+            predictor: None,
+            profile: None,
+            buf_cache: std::cell::RefCell::new(std::collections::HashMap::new()),
+            use_buffers,
+            ignore_eos: false,
+        }
+    }
+
+    pub fn with_ignore_eos(mut self, v: bool) -> Self {
+        self.ignore_eos = v;
+        self
+    }
+
+    /// Stacked routed-set weights as device buffers (memoized).
+    fn stacked_buffers(&self, layer: usize, idx: &[usize]) -> Result<std::rc::Rc<StackedBufs>> {
+        let key = (layer, idx.to_vec());
+        if let Some(hit) = self.buf_cache.borrow().get(&key) {
+            return Ok(hit.clone());
+        }
+        let st = self.weights.stack_experts(layer, idx, self.cfg.d_model, self.cfg.d_ff)?;
+        let (k, d, dff) = (idx.len(), self.cfg.d_model, self.cfg.d_ff);
+        let host = |lit: &xla::Literal| lit.to_vec::<f32>();
+        let bufs = std::rc::Rc::new(StackedBufs {
+            wg: self.rt.to_device(&host(&st.wg)?, &[k, dff, d])?,
+            wu: self.rt.to_device(&host(&st.wu)?, &[k, dff, d])?,
+            wd: self.rt.to_device(&host(&st.wd)?, &[k, d, dff])?,
+        });
+        let mut cache = self.buf_cache.borrow_mut();
+        if cache.len() >= BUF_CACHE_CAP {
+            cache.clear();
+        }
+        cache.insert(key, bufs.clone());
+        Ok(bufs)
+    }
+
+    /// Execute the routed experts via the fastest available path.
+    /// The `expert_group` executable has a static top-K parameter shape;
+    /// a sparsity-reduced selection (FLoE) is padded with zero-gate
+    /// duplicates — the kernel is linear in the gates, so padding is
+    /// exact (validated by `test_moe_ffn_zero_gates`).
+    fn run_experts(
+        &self,
+        layer: usize,
+        idx: &[usize],
+        gates: &[f32],
+        h2: &xla::Literal,
+    ) -> Result<Vec<f32>> {
+        let (mut idx_p, mut gates_p);
+        let (idx, gates) = if idx.len() < self.cfg.top_k {
+            idx_p = idx.to_vec();
+            gates_p = gates.to_vec();
+            while idx_p.len() < self.cfg.top_k {
+                idx_p.push(idx[0]);
+                gates_p.push(0.0);
+            }
+            (&idx_p[..], &gates_p[..])
+        } else {
+            (idx, gates)
+        };
+        if self.use_buffers {
+            let bufs = self.stacked_buffers(layer, idx)?;
+            self.rt.expert_group_b(gates, h2, &bufs.wg, &bufs.wu, &bufs.wd)
+        } else {
+            let st = self.weights.stack_experts(layer, idx, self.cfg.d_model, self.cfg.d_ff)?;
+            self.rt.expert_group(gates, h2, &st.wg, &st.wu, &st.wd)
+        }
+    }
+
+    pub fn with_predictor(mut self, p: &'a PredictorWeights) -> Self {
+        self.predictor = Some(p);
+        self
+    }
+
+    pub fn with_profile(mut self, p: &'a RoutingProfile) -> Self {
+        self.profile = Some(p);
+        self
+    }
+
+    fn effective_capacity(&self) -> usize {
+        self.policy.effective_capacity(self.cfg.n_experts)
+    }
+
+    fn new_cache(&self) -> ExpertCache {
+        let caps = self.policy.effective_layer_capacities(self.cfg.n_layers, self.cfg.n_experts);
+        ExpertCache::with_capacities(self.cfg.n_experts, &caps, self.policy.eviction)
+    }
+
+    fn prefetch_plan(&self, prompts: &[Vec<usize>]) -> Result<PrefetchPlan> {
+        // uniform upper bound; per-layer prefill truncates to each layer's
+        // actual slot count
+        let cap = self.effective_capacity();
+        match self.policy.prefetch {
+            Prefetch::None => Ok(PrefetchPlan::empty(self.cfg.n_layers)),
+            Prefetch::Predictor => {
+                let pw = self
+                    .predictor
+                    .ok_or_else(|| anyhow::anyhow!("policy wants predictor weights"))?;
+                if prompts.len() == 1 {
+                    predict_plan(self.rt, pw, self.cfg, &self.weights.embed, &prompts[0], cap)
+                } else {
+                    predict_plan_batch(self.rt, pw, self.cfg, &self.weights.embed, prompts, cap)
+                }
+            }
+            Prefetch::Profile => {
+                let pr =
+                    self.profile.ok_or_else(|| anyhow::anyhow!("policy wants a routing profile"))?;
+                Ok(profile_plan(pr, self.cfg, cap))
+            }
+        }
+    }
+
+    fn apply_prefetch(
+        &self,
+        plan: &PrefetchPlan,
+        cache: &mut ExpertCache,
+        pcie: &mut TransferEngine,
+        clock: &mut SimClock,
+    ) {
+        if self.policy.prefetch == Prefetch::None {
+            return;
+        }
+        clock.advance(self.cost.predictor_time());
+        for (l, set) in plan.per_layer.iter().enumerate() {
+            let loads = cache.layer(l).prefill(set);
+            for _ in loads {
+                pcie.prefetch_h2d(&self.cost, clock, self.policy.quant);
+            }
+        }
+        // No sync barrier: prefetch transfers overlap prefill compute
+        // (non-blocking, pinned memory — §3.2).  Early demand misses
+        // naturally serialize behind the in-flight prefetch traffic via
+        // the link-occupancy model in `pcie`.
+    }
+
+    /// Select experts for one token at one layer, applying FLoE sparsity.
+    /// Returns (expert, gate) pairs and the skip count.
+    fn select(&self, probs: &crate::tensor::HostTensor, cache: &ExpertCache, layer: usize) -> (Vec<(usize, f32)>, u64) {
+        let idx = probs.topk(self.cfg.top_k);
+        let mut skips = 0;
+        let tau = self.policy.sparsity_tau;
+        let mut sel: Vec<(usize, f32)> = Vec::with_capacity(idx.len());
+        let total: f32 = idx.iter().map(|&e| probs.data[e]).sum();
+        for &e in &idx {
+            let g = probs.data[e];
+            if tau > 0.0 && g < tau && !cache.layers[layer].contains(e) {
+                skips += 1;
+                continue;
+            }
+            sel.push((e, g));
+        }
+        if skips > 0 && !sel.is_empty() {
+            // renormalize surviving gates to the original top-K mass
+            let kept: f32 = sel.iter().map(|(_, g)| g).sum();
+            if kept > 0.0 {
+                let scale = total / kept;
+                for s in &mut sel {
+                    s.1 *= scale;
+                }
+            }
+        }
+        (sel, skips)
+    }
+
+    /// Resolve residency for the selected experts of one (seq, layer) and
+    /// advance the clock.  Returns the number of CPU-executed experts.
+    #[allow(clippy::too_many_arguments)]
+    fn resolve_residency(
+        &self,
+        layer: usize,
+        selected: &[(usize, f32)],
+        cache: &mut ExpertCache,
+        pcie: &mut TransferEngine,
+        clock: &mut SimClock,
+        cpu_execs: &mut u64,
+    ) {
+        let pinned: Vec<usize> = selected.iter().map(|(e, _)| *e).collect();
+        let quant = self.policy.quant;
+        for &(e, _) in selected {
+            let hit = cache.layer(layer).request(e);
+            if hit {
+                continue;
+            }
+            if self.policy.cpu_compute {
+                // Fiddler: run on CPU when cheaper than transfer + GPU exec
+                let cpu_t = self.cost.cpu_expert_time(1);
+                let gpu_t =
+                    self.cost.transfer_time(quant) + self.cost.expert_exec_time(1, 1, quant);
+                if cpu_t < gpu_t {
+                    clock.advance(cpu_t);
+                    *cpu_execs += 1;
+                    continue; // no residency change
+                }
+            }
+            pcie.demand_h2d(&self.cost, clock, quant);
+            if let Some(_evicted) = cache.layer(layer).insert(e, &pinned) {
+                pcie.evict_d2h(&self.cost, quant);
+            }
+        }
+    }
+
+    /// One full forward step for one sequence; returns logits if requested.
+    #[allow(clippy::too_many_arguments)]
+    fn step_seq(
+        &self,
+        st: &mut SeqState,
+        token: usize,
+        cache: &mut ExpertCache,
+        pcie: &mut TransferEngine,
+        clock: &mut SimClock,
+        trace: &mut ActivationTrace,
+        cpu_execs: &mut u64,
+        skips: &mut u64,
+        want_logits: bool,
+    ) -> Result<Option<crate::tensor::HostTensor>> {
+        st.x = self.weights.embed.row(token.min(self.cfg.vocab_size - 1)).to_vec();
+        let mut step_sel: Vec<Vec<usize>> = Vec::with_capacity(self.cfg.n_layers);
+        for l in 0..self.cfg.n_layers {
+            let out = self.rt.layer_step(
+                &st.x,
+                &self.weights.layers[l],
+                &st.k_caches[l],
+                &st.v_caches[l],
+                st.pos,
+            )?;
+            st.k_caches[l] = out.k_cache;
+            st.v_caches[l] = out.v_cache;
+            clock.advance(self.cost.attn_time(1));
+
+            let (sel, s) = self.select(&out.probs, cache, l);
+            *skips += s;
+            for &(e, _) in &sel {
+                trace.counts[l][e] += 1;
+            }
+            step_sel.push(sel.iter().map(|(e, _)| *e).collect());
+            self.resolve_residency(l, &sel, cache, pcie, clock, cpu_execs);
+
+            if sel.is_empty() {
+                st.x = out.h_res;
+            } else {
+                let idx: Vec<usize> = sel.iter().map(|(e, _)| *e).collect();
+                let gates: Vec<f32> = sel.iter().map(|(_, g)| *g).collect();
+                let y = self.run_experts(l, &idx, &gates, &out.h2)?;
+                clock.advance(self.cost.expert_exec_time(idx.len(), idx.len(), self.policy.quant));
+                st.x = add(&out.h_res, &y);
+            }
+        }
+        trace.steps.push(step_sel);
+        cache.token_tick();
+        st.pos += 1;
+        if want_logits {
+            clock.advance(self.cost.head_time(1));
+            let logits = self.rt.lm_head(&st.x, &self.weights.lnf_lit, &self.weights.embed_lit)?;
+            Ok(Some(logits))
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn new_seq(&self) -> Result<SeqState> {
+        let mut k_caches = Vec::with_capacity(self.cfg.n_layers);
+        let mut v_caches = Vec::with_capacity(self.cfg.n_layers);
+        for _ in 0..self.cfg.n_layers {
+            let (k, v) = self.rt.init_kv(self.cfg)?;
+            k_caches.push(k);
+            v_caches.push(v);
+        }
+        Ok(SeqState { x: vec![0.0; self.cfg.d_model], k_caches, v_caches, pos: 0, tokens: Vec::new(), done: false })
+    }
+
+    /// Greedy-decode one request.
+    pub fn decode(&self, prompt: &[usize], max_output: usize) -> Result<DecodeOutput> {
+        let wall = Instant::now();
+        let mut clock = SimClock::new();
+        let mut cache = self.new_cache();
+        let mut pcie = TransferEngine::new();
+        let mut trace = ActivationTrace::new(self.cfg.n_layers, self.cfg.n_experts);
+        let (mut cpu_execs, mut skips) = (0u64, 0u64);
+
+        let plan = self.prefetch_plan(std::slice::from_ref(&prompt.to_vec()))?;
+        self.apply_prefetch(&plan, &mut cache, &mut pcie, &mut clock);
+
+        let mut st = self.new_seq()?;
+        let mut logits = None;
+        for (i, &t) in prompt.iter().enumerate() {
+            let last = i == prompt.len() - 1;
+            logits = self.step_seq(
+                &mut st, t, &mut cache, &mut pcie, &mut clock, &mut trace,
+                &mut cpu_execs, &mut skips, last,
+            )?;
+        }
+        let ttft = clock.now();
+        let mut next = logits.expect("prompt must be non-empty").argmax();
+        while st.tokens.len() < max_output {
+            st.tokens.push(next);
+            if next == EOS && !self.ignore_eos {
+                break;
+            }
+            let lg = self.step_seq(
+                &mut st, next, &mut cache, &mut pcie, &mut clock, &mut trace,
+                &mut cpu_execs, &mut skips, true,
+            )?;
+            next = lg.unwrap().argmax();
+        }
+
+        let metrics = RequestMetrics {
+            prompt_tokens: prompt.len(),
+            output_tokens: st.tokens.len(),
+            sim_seconds: clock.now(),
+            sim_ttft: ttft,
+            wall_seconds: wall.elapsed().as_secs_f64(),
+        };
+        let report = Report {
+            requests: vec![metrics.clone()],
+            cache: cache.total_stats(),
+            transfers: pcie.stats.clone(),
+            misses_per_layer: cache.misses_per_layer(),
+            wall_seconds: metrics.wall_seconds,
+        };
+        Ok(DecodeOutput { tokens: st.tokens, metrics, report, trace, cpu_execs, sparsity_skips: skips })
+    }
+
+    /// Teacher-forced pass over `tokens`: returns per-position NLLs of
+    /// tokens[1..] (perplexity measurements, Tables 4 / Fig. 4).
+    pub fn teacher_forced_nll(&self, tokens: &[usize]) -> Result<Vec<f64>> {
+        let mut clock = SimClock::new();
+        let mut cache = self.new_cache();
+        let mut pcie = TransferEngine::new();
+        let mut trace = ActivationTrace::new(self.cfg.n_layers, self.cfg.n_experts);
+        let (mut cpu, mut skips) = (0u64, 0u64);
+        let mut st = self.new_seq()?;
+        let mut nlls = Vec::with_capacity(tokens.len().saturating_sub(1));
+        for (i, &t) in tokens.iter().enumerate() {
+            let want = i + 1 < tokens.len();
+            let lg = self.step_seq(
+                &mut st, t, &mut cache, &mut pcie, &mut clock, &mut trace,
+                &mut cpu, &mut skips, want,
+            )?;
+            if let Some(lg) = lg {
+                nlls.push(crate::eval::token_nll(&lg.data, tokens[i + 1]));
+            }
+        }
+        Ok(nlls)
+    }
+
+    /// Lockstep batched greedy decoding (Fig. 5).  All sequences share the
+    /// expert cache; per step each unique missing expert transfers once.
+    pub fn decode_batch(&self, prompts: &[Vec<usize>], max_output: usize) -> Result<(Vec<Vec<usize>>, Report)> {
+        let wall = Instant::now();
+        let b = prompts.len();
+        let mut clock = SimClock::new();
+        let mut cache = self.new_cache();
+        let mut pcie = TransferEngine::new();
+        let mut trace = ActivationTrace::new(self.cfg.n_layers, self.cfg.n_experts);
+        let (mut cpu_execs, mut skips) = (0u64, 0u64);
+
+        let plan = self.prefetch_plan(prompts)?;
+        self.apply_prefetch(&plan, &mut cache, &mut pcie, &mut clock);
+
+        let mut seqs: Vec<SeqState> = (0..b).map(|_| self.new_seq()).collect::<Result<_>>()?;
+        // current input token per sequence: walk prompts then generations
+        let max_prompt = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
+        let mut ttft = 0.0;
+
+        for step in 0..(max_prompt + max_output) {
+            // gather (seq, token) for sequences active this step
+            let mut active: Vec<(usize, usize, bool)> = Vec::new(); // (seq, token, want_logits)
+            for (s, seq) in seqs.iter().enumerate() {
+                if seq.done {
+                    continue;
+                }
+                let p = &prompts[s];
+                if step < p.len() {
+                    active.push((s, p[step], step == p.len() - 1));
+                } else if step >= p.len() && !seq.tokens.is_empty() {
+                    let last = *seq.tokens.last().unwrap();
+                    active.push((s, last, true));
+                }
+            }
+            if active.is_empty() {
+                break;
+            }
+            // per-layer lockstep over sequences
+            let mut outs: Vec<Option<crate::tensor::HostTensor>> = vec![None; b];
+            for &(s, tok, want) in &active {
+                let st = &mut seqs[s];
+                // batched compute: charge attention once per layer per step
+                // by discounting the per-seq clock advance below.
+                outs[s] = self.step_seq_batch_member(
+                    st, tok, &mut cache, &mut pcie, &mut clock, &mut trace,
+                    &mut cpu_execs, &mut skips, want, active.len(),
+                )?;
+            }
+            cache.token_tick();
+            for &(s, _, want) in &active {
+                if !want {
+                    continue;
+                }
+                let next = outs[s].as_ref().unwrap().argmax();
+                let seq = &mut seqs[s];
+                seq.tokens.push(next);
+                if (next == EOS && !self.ignore_eos) || seq.tokens.len() >= max_output {
+                    seq.done = true;
+                }
+            }
+            if step == max_prompt - 1 {
+                ttft = clock.now();
+            }
+        }
+
+        let sim = clock.now();
+        let outputs: Vec<Vec<usize>> = seqs.iter().map(|s| s.tokens.clone()).collect();
+        let requests = outputs
+            .iter()
+            .enumerate()
+            .map(|(i, o)| RequestMetrics {
+                prompt_tokens: prompts[i].len(),
+                output_tokens: o.len(),
+                sim_seconds: sim,
+                sim_ttft: ttft,
+                wall_seconds: wall.elapsed().as_secs_f64(),
+            })
+            .collect();
+        let report = Report {
+            requests,
+            cache: cache.total_stats(),
+            transfers: pcie.stats.clone(),
+            misses_per_layer: cache.misses_per_layer(),
+            wall_seconds: wall.elapsed().as_secs_f64(),
+        };
+        Ok((outputs, report))
+    }
+
+    /// step_seq variant for batch members: attention/head costs are
+    /// amortized — the GPU runs the whole batch in one kernel, so member
+    /// i>0 contributes only marginal compute (the cost model's batch
+    /// scaling), not another full pass.
+    #[allow(clippy::too_many_arguments)]
+    fn step_seq_batch_member(
+        &self,
+        st: &mut SeqState,
+        token: usize,
+        cache: &mut ExpertCache,
+        pcie: &mut TransferEngine,
+        clock: &mut SimClock,
+        trace: &mut ActivationTrace,
+        cpu_execs: &mut u64,
+        skips: &mut u64,
+        want_logits: bool,
+        batch: usize,
+    ) -> Result<Option<crate::tensor::HostTensor>> {
+        st.x = self.weights.embed.row(token.min(self.cfg.vocab_size - 1)).to_vec();
+        for l in 0..self.cfg.n_layers {
+            let out = self.rt.layer_step(
+                &st.x,
+                &self.weights.layers[l],
+                &st.k_caches[l],
+                &st.v_caches[l],
+                st.pos,
+            )?;
+            st.k_caches[l] = out.k_cache;
+            st.v_caches[l] = out.v_cache;
+            // amortized attention: full cost once per batch step
+            clock.advance(self.cost.attn_time(batch) / batch as f64);
+
+            let (sel, s) = self.select(&out.probs, cache, l);
+            *skips += s;
+            for &(e, _) in &sel {
+                trace.counts[l][e] += 1;
+            }
+            self.resolve_residency(l, &sel, cache, pcie, clock, cpu_execs);
+
+            if sel.is_empty() {
+                st.x = out.h_res;
+            } else {
+                let idx: Vec<usize> = sel.iter().map(|(e, _)| *e).collect();
+                let gates: Vec<f32> = sel.iter().map(|(_, g)| *g).collect();
+                let y = self.run_experts(l, &idx, &gates, &out.h2)?;
+                // weight-read cost amortizes across the batch; per-token
+                // MXU compute does not.
+                clock.advance(
+                    self.cost.expert_exec_time(idx.len(), idx.len(), self.policy.quant)
+                        / batch as f64
+                        + self.cost.dims.expert_flops() * idx.len() as f64 / self.cost.gpu.flops,
+                );
+                st.x = add(&out.h_res, &y);
+            }
+        }
+        st.pos += 1;
+        if want_logits {
+            clock.advance(self.cost.head_time(batch) / batch as f64);
+            let logits = self.rt.lm_head(&st.x, &self.weights.lnf_lit, &self.weights.embed_lit)?;
+            Ok(Some(logits))
+        } else {
+            Ok(None)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace_with(counts: Vec<Vec<u64>>) -> ActivationTrace {
+        ActivationTrace { n_experts: counts[0].len(), counts, steps: Vec::new() }
+    }
+
+    #[test]
+    fn topc_share_concentrated() {
+        let t = trace_with(vec![vec![90, 5, 5, 0]]);
+        assert!((t.topc_share(0, 1) - 0.9).abs() < 1e-12);
+        assert!((t.topc_share(0, 2) - 0.95).abs() < 1e-12);
+        assert!((t.topc_share(0, 4) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topc_share_uniform() {
+        let t = trace_with(vec![vec![10; 8]]);
+        assert!((t.topc_share(0, 2) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topc_share_empty_is_zero() {
+        let t = trace_with(vec![vec![0; 4]]);
+        assert_eq!(t.topc_share(0, 2), 0.0);
+    }
+
+    #[test]
+    fn mean_topc_share_averages_layers() {
+        let t = trace_with(vec![vec![10, 0], vec![5, 5]]);
+        assert!((t.mean_topc_share(1) - (1.0 + 0.5) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn share_curve_sorted_and_normalized() {
+        let t = trace_with(vec![vec![1, 7, 2]]);
+        let c = t.share_curve(0);
+        assert!((c[0] - 0.7).abs() < 1e-12);
+        assert!(c.windows(2).all(|w| w[0] >= w[1]));
+        assert!((c.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,141 @@
+//! Output-quality metrics: ROUGE-L, exact-match accuracy, perplexity.
+//!
+//! Mirrors the paper's Table 2 protocol: ROUGE-L on the instruction
+//! dataset, answer accuracy on the math dataset; Table 4 reports
+//! perplexity of the fine-tuned model across generation lengths.
+
+/// Longest common subsequence length (O(n·m) DP).
+pub fn lcs_len(a: &[usize], b: &[usize]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for &x in a {
+        for (j, &y) in b.iter().enumerate() {
+            cur[j + 1] = if x == y { prev[j] + 1 } else { cur[j].max(prev[j + 1]) };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// ROUGE-L F1 between a candidate and a reference token sequence.
+pub fn rouge_l(candidate: &[usize], reference: &[usize]) -> f64 {
+    let lcs = lcs_len(candidate, reference) as f64;
+    if lcs == 0.0 {
+        return 0.0;
+    }
+    let p = lcs / candidate.len() as f64;
+    let r = lcs / reference.len() as f64;
+    2.0 * p * r / (p + r)
+}
+
+/// Exact-match accuracy for gsm-syn: the generated answer digits (tokens
+/// after the ANS marker, before EOS) must equal the reference answer.
+pub const ANS_TOKEN: usize = 25;
+pub const EOS_TOKEN: usize = 2;
+pub const DIG0_TOKEN: usize = 10;
+
+pub fn extract_answer(generated: &[usize]) -> Option<String> {
+    let start = generated.iter().position(|&t| t == ANS_TOKEN)? + 1;
+    let mut s = String::new();
+    for &t in &generated[start..] {
+        if t == EOS_TOKEN {
+            break;
+        }
+        if (DIG0_TOKEN..DIG0_TOKEN + 10).contains(&t) {
+            s.push(char::from(b'0' + (t - DIG0_TOKEN) as u8));
+        } else {
+            return None; // malformed answer span
+        }
+    }
+    if s.is_empty() {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+pub fn answer_correct(generated: &[usize], answer: &str) -> bool {
+    extract_answer(generated).as_deref() == Some(answer)
+}
+
+/// Perplexity from per-token negative log-likelihoods.
+pub fn perplexity(nlls: &[f64]) -> f64 {
+    if nlls.is_empty() {
+        return f64::NAN;
+    }
+    (nlls.iter().sum::<f64>() / nlls.len() as f64).exp()
+}
+
+/// NLL of `target` under softmax(logits).
+pub fn token_nll(logits: &[f32], target: usize) -> f64 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse = max
+        + logits.iter().map(|&v| ((v as f64) - max).exp()).sum::<f64>().ln();
+    lse - logits[target] as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lcs_basic() {
+        assert_eq!(lcs_len(&[1, 2, 3, 4], &[2, 4]), 2);
+        assert_eq!(lcs_len(&[1, 2, 3], &[4, 5, 6]), 0);
+        assert_eq!(lcs_len(&[1, 2, 3], &[1, 2, 3]), 3);
+        assert_eq!(lcs_len(&[], &[1]), 0);
+    }
+
+    #[test]
+    fn rouge_identical_is_one() {
+        assert!((rouge_l(&[5, 6, 7], &[5, 6, 7]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge_disjoint_is_zero() {
+        assert_eq!(rouge_l(&[1, 2], &[3, 4]), 0.0);
+    }
+
+    #[test]
+    fn rouge_partial() {
+        // candidate [1,2,9], reference [1,2,3]: LCS=2, P=2/3, R=2/3, F1=2/3
+        assert!((rouge_l(&[1, 2, 9], &[1, 2, 3]) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rouge_symmetric_in_f1() {
+        let a = [1, 2, 3, 4, 5];
+        let b = [1, 3, 5];
+        assert!((rouge_l(&a, &b) - rouge_l(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn answer_extraction() {
+        // ANS 1 2 EOS → "12"  (tokens: digit d is 10+d)
+        assert_eq!(extract_answer(&[25, 11, 12, 2]), Some("12".into()));
+        assert_eq!(extract_answer(&[25, 11]), Some("1".into()));
+        assert_eq!(extract_answer(&[11, 12, 2]), None); // no ANS marker
+        assert_eq!(extract_answer(&[25, 2]), None); // empty answer
+        assert_eq!(extract_answer(&[25, 99, 2]), None); // non-digit
+        assert!(answer_correct(&[25, 13, 2], "3"));
+        assert!(!answer_correct(&[25, 13, 2], "4"));
+    }
+
+    #[test]
+    fn perplexity_uniform() {
+        // NLL = ln(4) per token → ppl = 4
+        let nll = (4f64).ln();
+        assert!((perplexity(&[nll, nll]) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn token_nll_matches_manual() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let z: f64 = logits.iter().map(|&v| (v as f64).exp()).sum();
+        let want = z.ln() - 2.0;
+        assert!((token_nll(&logits, 1) - want).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,62 @@
+//! MELINOE: memory-efficient MoE serving via routing-locality fine-tuning.
+//!
+//! Reproduction of *MELINOE: Fine-Tuning Enables Memory-Efficient Inference
+//! for Mixture-of-Experts Models* (Raje, Nayak, Joshi; CMU 2026).
+//!
+//! This crate is the L3 request path of the three-layer stack (see
+//! DESIGN.md): it loads the AOT-compiled HLO artifacts produced by the
+//! python build layer (`python/compile/aot.py`) and runs *offloaded* MoE
+//! inference under a simulated GPU memory hierarchy — expert caches, PCIe
+//! transfer engine, VRAM budgets, activation-predictor prefetching — with
+//! the paper's five baselines implemented as alternative offload policies.
+//!
+//! Module map:
+//! * [`util`]        — from-scratch JSON / CLI / RNG / property-testing
+//!                     (offline image carries no serde/clap/proptest).
+//! * [`tensor`]      — host tensors + `.npz` weight loading.
+//! * [`quant`]       — INT4/INT3 group quantization (HQQ stand-in).
+//! * [`clock`]       — simulated clock + GPU/PCIe cost models (paper Eq. 3).
+//! * [`vram`]        — VRAM budget ledger (capacity derivation, Fig. 11).
+//! * [`pcie`]        — H2D/D2H transfer engine + counters (Fig. 1a).
+//! * [`cache`]       — per-layer expert caches: LRU / LFU / γ-discounted
+//!                     (paper Def. C.1).
+//! * [`moe`]         — model config + weight store (base / fine-tuned).
+//! * [`runtime`]     — PJRT executable loading & dispatch (xla crate).
+//! * [`predictor`]   — activation-predictor inference + prefetch sets.
+//! * [`engine`]      — the offloaded decode engine (single + batched).
+//! * [`policies`]    — MELINOE + Fiddler / Mixtral-Offloading /
+//!                     DeepSpeed-MoE / FLoE / MoE-Infinity.
+//! * [`coordinator`] — request queue, dynamic batcher, serving loop.
+//! * [`eval`]        — ROUGE-L, exact-match accuracy, perplexity.
+//! * [`metrics`]     — throughput/latency/transfer reporting.
+//! * [`repro`]       — one harness per paper table/figure.
+
+pub mod cache;
+pub mod clock;
+pub mod coordinator;
+pub mod engine;
+pub mod eval;
+pub mod metrics;
+pub mod moe;
+pub mod pcie;
+pub mod policies;
+pub mod predictor;
+pub mod quant;
+pub mod repro;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod vram;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$MELINOE_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("MELINOE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from(ARTIFACTS_DIR))
+}

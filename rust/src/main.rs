@@ -1,0 +1,239 @@
+//! `melinoe` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   repro <id|all>   regenerate a paper table/figure (DESIGN.md §4)
+//!   serve            run the batched serving loop over an eval workload
+//!   decode           decode one eval prompt and print everything
+//!   info             show artifact/config inventory
+
+use anyhow::{anyhow, Result};
+use melinoe::clock::GpuSpec;
+use melinoe::coordinator::{Decoder, Server, ServerConfig};
+use melinoe::engine::Engine;
+use melinoe::metrics::{fmt2, Report, Table};
+use melinoe::policies::PolicyConfig;
+use melinoe::quant::QuantMode;
+use melinoe::repro::{Ctx, EngineParts};
+use melinoe::util::cli::Args;
+
+const USAGE: &str = "melinoe — memory-efficient MoE serving (MELINOE reproduction)
+
+usage: melinoe <command> [options]
+
+commands:
+  repro <id|all>     regenerate a paper table/figure
+                     (table1 fig1a fig1b fig3 table2 table3 fig4 fig5 table4
+                      table5 table11 fig6 heatmaps fig11 table12 fig12 fig13
+                      table13)
+  serve              batched serving loop over the eval workload
+  decode             decode one prompt, print tokens + transfer stats
+  info               artifact inventory
+
+common options:
+  --preset <name>    olmoe-micro | phi-micro | mixtral-micro
+  --gpu <name>       h100 | a100 | rtx4090
+  --policy <name>    melinoe | fiddler | mixtral-offloading | deepspeed-moe
+                     | floe | moe-infinity | base
+  --variant <v>      checkpoint variant (default: policy's own)
+  --prompts <n>      eval prompts per configuration
+  --tokens <n>       max output tokens
+  --requests <n>     serve: total requests to submit
+  --batch <n>        serve: max dynamic batch size
+";
+
+fn policy_by_name(name: &str, cap: usize, top_k: usize, ft: &str) -> Result<PolicyConfig> {
+    Ok(match name {
+        "melinoe" => PolicyConfig::melinoe(ft, cap),
+        "melinoe-np" => PolicyConfig::melinoe_no_prefetch(ft, cap),
+        "fiddler" => PolicyConfig::fiddler(cap),
+        "mixtral-offloading" | "mixoff" => PolicyConfig::mixtral_offloading(cap),
+        "deepspeed-moe" | "deepspeed" => PolicyConfig::deepspeed_moe(top_k),
+        "floe" => PolicyConfig::floe(cap),
+        "moe-infinity" | "moeinf" => PolicyConfig::moe_infinity(cap),
+        "base" => PolicyConfig::base_offload(cap),
+        _ => return Err(anyhow!("unknown policy {name:?}")),
+    })
+}
+
+/// Owns everything the serving thread needs (constructed in-thread; PJRT
+/// handles are not Send).
+struct OwnedEngine {
+    ctx: Ctx,
+    parts: EngineParts,
+    gpu: GpuSpec,
+}
+
+impl Decoder for OwnedEngine {
+    fn decode_batch(
+        &mut self,
+        prompts: &[Vec<usize>],
+        max_output: usize,
+    ) -> Result<(Vec<Vec<usize>>, Report)> {
+        let engine: Engine = self.parts.engine(&self.ctx, self.gpu.clone());
+        engine.decode_batch(prompts, max_output)
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "olmoe-micro").to_string();
+    let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
+    let policy_name = args.get_or("policy", "melinoe").to_string();
+    let n_requests = args.get_usize("requests", 12)?;
+    let max_output = args.get_usize("tokens", 24)?;
+    let max_batch = args.get_usize("batch", 4)?;
+    let ds = args.get_or("dataset", "dolly").to_string();
+
+    // load the prompts up-front (the server thread owns the engine)
+    let ctx0 = Ctx::load(&melinoe::artifacts_dir(), &preset)?;
+    let eval = ctx0.eval_set(&ds)?;
+    let prompts: Vec<Vec<usize>> = eval
+        .samples
+        .iter()
+        .cycle()
+        .take(n_requests)
+        .map(|s| s.prompt.clone())
+        .collect();
+    drop(ctx0);
+
+    let gpu2 = gpu.clone();
+    let ds2 = ds.clone();
+    let server = Server::start(
+        move || -> Result<OwnedEngine> {
+            let ctx = Ctx::load(&melinoe::artifacts_dir(), &preset)?;
+            let ft = if ds2 == "dolly" { "ft_dolly" } else { "ft_gsm" };
+            let policy = policy_by_name(&policy_name, ctx.cfg.cache_capacity, ctx.cfg.top_k, ft)?;
+            let parts = ctx.parts(&policy, &ds2)?;
+            Ok(OwnedEngine { ctx, parts, gpu: gpu2 })
+        },
+        ServerConfig {
+            max_batch,
+            batch_wait: std::time::Duration::from_millis(5),
+            max_output,
+        },
+    );
+
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = prompts.into_iter().map(|p| server.submit(p, max_output)).collect();
+    let mut total_tokens = 0usize;
+    let mut total_sim = 0.0f64;
+    let mut waits = Vec::new();
+    for rx in rxs {
+        let r = rx.recv()?;
+        total_tokens += r.tokens.len();
+        total_sim += r.sim_seconds / r.batch_size as f64;
+        waits.push(r.queue_wait);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown()?;
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["requests".into(), stats.requests.to_string()]);
+    t.row(vec!["batches".into(), stats.batches.to_string()]);
+    t.row(vec!["mean batch size".into(), fmt2(stats.mean_batch_size)]);
+    t.row(vec!["output tokens".into(), total_tokens.to_string()]);
+    t.row(vec!["sim throughput tok/s".into(), fmt2(total_tokens as f64 / total_sim.max(1e-9))]);
+    t.row(vec!["wall seconds".into(), fmt2(wall)]);
+    t.row(vec![
+        "mean queue wait ms".into(),
+        fmt2(waits.iter().sum::<f64>() / waits.len().max(1) as f64 * 1e3),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_decode(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "olmoe-micro");
+    let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
+    let ds = args.get_or("dataset", "dolly");
+    let idx = args.get_usize("index", 0)?;
+    let max_output = args.get_usize("tokens", 32)?;
+    let ctx = Ctx::load(&melinoe::artifacts_dir(), preset)?;
+    let ft = if ds == "dolly" { "ft_dolly" } else { "ft_gsm" };
+    let mut policy =
+        policy_by_name(args.get_or("policy", "melinoe"), ctx.cfg.cache_capacity, ctx.cfg.top_k, ft)?;
+    if let Some(v) = args.get("variant") {
+        policy = policy.with_variant(v);
+    }
+    if let Some(q) = args.get("quant") {
+        policy = policy.with_quant(QuantMode::parse(q)?);
+    }
+    let parts = ctx.parts(&policy, ds)?;
+    let engine = parts.engine(&ctx, gpu);
+    let eval = ctx.eval_set(ds)?;
+    let sample = &eval.samples[idx.min(eval.samples.len() - 1)];
+    let out = engine.decode(&sample.prompt, max_output)?;
+    println!("policy     : {} (variant {})", policy.name, policy.variant);
+    println!("prompt     : {:?}", sample.prompt);
+    println!("generated  : {:?}", out.tokens);
+    println!("reference  : {:?}", sample.reference);
+    println!("rouge-l    : {:.4}", melinoe::eval::rouge_l(&out.tokens, &sample.reference));
+    println!(
+        "sim time   : {:.3}s  ({:.2} tok/s)",
+        out.metrics.sim_seconds,
+        out.metrics.tokens_per_sec()
+    );
+    println!("wall time  : {:.3}s", out.metrics.wall_seconds);
+    println!(
+        "transfers  : h2d={} d2h={}  tx/layer={:.1}  hit-rate={:.3}",
+        out.report.transfers.h2d_count,
+        out.report.transfers.d2h_count,
+        out.report.misses_per_layer,
+        out.report.cache.hit_rate()
+    );
+    println!("cpu execs  : {}   sparsity skips: {}", out.cpu_execs, out.sparsity_skips);
+    println!("top-C share: {:.3}", out.trace.mean_topc_share(ctx.cfg.cache_capacity));
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = melinoe::artifacts_dir();
+    let mut t = Table::new(&["preset", "L", "E", "K", "d", "dff", "C", "variants"]);
+    for preset in ["olmoe-micro", "phi-micro", "mixtral-micro"] {
+        match Ctx::load(&dir, preset) {
+            Ok(ctx) => {
+                t.row(vec![
+                    preset.into(),
+                    ctx.cfg.n_layers.to_string(),
+                    ctx.cfg.n_experts.to_string(),
+                    ctx.cfg.top_k.to_string(),
+                    ctx.cfg.d_model.to_string(),
+                    ctx.cfg.d_ff.to_string(),
+                    ctx.cfg.cache_capacity.to_string(),
+                    ctx.cfg.variants.len().to_string(),
+                ]);
+            }
+            Err(e) => {
+                t.row(vec![
+                    preset.into(),
+                    format!("unavailable: {e}"),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                ]);
+            }
+        }
+    }
+    let _ = args;
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    if args.positional.is_empty() || args.has_flag("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.positional[0].as_str() {
+        "repro" => {
+            let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            melinoe::repro::run(id, &args)
+        }
+        "serve" => cmd_serve(&args),
+        "decode" => cmd_decode(&args),
+        "info" => cmd_info(&args),
+        other => Err(anyhow!("unknown command {other:?}\n{USAGE}")),
+    }
+}

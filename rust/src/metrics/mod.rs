@@ -1,0 +1,179 @@
+//! Serving metrics: throughput, latency distributions, transfer counters.
+
+use crate::cache::CacheStats;
+use crate::pcie::TransferStats;
+
+/// Outcome of decoding one request (or one batch-lockstep member).
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    /// Simulated seconds spent end-to-end (paper's time axis).
+    pub sim_seconds: f64,
+    /// Simulated seconds before the first output token.
+    pub sim_ttft: f64,
+    /// Host wallclock seconds (real PJRT execution, sanity only).
+    pub wall_seconds: f64,
+}
+
+impl RequestMetrics {
+    /// Output tokens per simulated second — the paper's throughput metric
+    /// (Table 10: "Output tokens/s").
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.sim_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.output_tokens as f64 / self.sim_seconds
+    }
+}
+
+/// Aggregated report over a workload run.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub requests: Vec<RequestMetrics>,
+    pub cache: CacheStats,
+    pub transfers: TransferStats,
+    pub misses_per_layer: f64,
+    pub wall_seconds: f64,
+}
+
+impl Report {
+    pub fn total_output_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.output_tokens).sum()
+    }
+
+    pub fn total_sim_seconds(&self) -> f64 {
+        self.requests.iter().map(|r| r.sim_seconds).sum()
+    }
+
+    /// Aggregate decoding throughput (output tokens per simulated second).
+    pub fn tokens_per_sec(&self) -> f64 {
+        let t = self.total_sim_seconds();
+        if t <= 0.0 {
+            return 0.0;
+        }
+        self.total_output_tokens() as f64 / t
+    }
+
+    pub fn mean_ttft(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests.iter().map(|r| r.sim_ttft).sum::<f64>() / self.requests.len() as f64
+    }
+
+    /// Latency percentile over per-request simulated times.
+    pub fn latency_pct(&self, p: f64) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        let mut v: Vec<f64> = self.requests.iter().map(|r| r.sim_seconds).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+}
+
+/// Simple fixed-width table printer for the repro harnesses.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.header, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+}
+
+pub fn fmt2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn fmt4(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(out: usize, sim: f64) -> RequestMetrics {
+        RequestMetrics {
+            prompt_tokens: 4,
+            output_tokens: out,
+            sim_seconds: sim,
+            sim_ttft: sim / 10.0,
+            wall_seconds: 0.01,
+        }
+    }
+
+    #[test]
+    fn throughput_aggregates() {
+        let mut r = Report::default();
+        r.requests.push(req(10, 1.0));
+        r.requests.push(req(30, 1.0));
+        assert!((r.tokens_per_sec() - 20.0).abs() < 1e-9);
+        assert_eq!(r.total_output_tokens(), 40);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut r = Report::default();
+        for i in 1..=100 {
+            r.requests.push(req(1, i as f64));
+        }
+        assert!((r.latency_pct(50.0) - 50.0).abs() <= 1.0);
+        assert!((r.latency_pct(99.0) - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn zero_division_safe() {
+        let r = Report::default();
+        assert_eq!(r.tokens_per_sec(), 0.0);
+        assert_eq!(r.latency_pct(50.0), 0.0);
+        assert_eq!(req(5, 0.0).tokens_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "tok/s"]);
+        t.row(vec!["olmoe-micro".into(), "22.16".into()]);
+        let s = t.render();
+        assert!(s.contains("| model       | tok/s |"));
+        assert!(s.lines().count() == 3);
+    }
+}

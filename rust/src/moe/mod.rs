@@ -1,0 +1,335 @@
+//! Model configuration and weight storage.
+//!
+//! [`MoeConfig`] mirrors `artifacts/<preset>/config.json` (micro dims that
+//! actually execute + the paper-scale cost dims).  [`WeightStore`] holds
+//! one checkpoint variant (base or a MELINOE fine-tune) split by residency
+//! class:
+//!
+//! * **always-resident** — embeddings, norms, attention, router, LM head.
+//!   Pre-converted to [`xla::Literal`]s once at load.
+//! * **experts** — the offloadable unit.  Stored host-side per (layer,
+//!   expert); under a quantized residency mode the tensors are passed
+//!   through quantize→dequantize at load so the engine's numerics carry
+//!   the real quantization error (paper §3.2, Table 12).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::clock::PaperDims;
+use crate::quant::{dequantize, quantize, QuantMode};
+use crate::tensor::{HostTensor, NpzFile};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct MoeConfig {
+    pub name: String,
+    pub mirrors: String,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub vocab_size: usize,
+    pub max_seq: usize,
+    /// Default evaluation cache capacity (paper Table 10).
+    pub cache_capacity: usize,
+    pub predictor_hidden: usize,
+    pub variants: Vec<String>,
+    pub cost: PaperDims,
+}
+
+impl MoeConfig {
+    pub fn load(preset_dir: &Path) -> Result<MoeConfig> {
+        let j = Json::from_file(preset_dir.join("config.json"))?;
+        let cost = j.get("cost")?;
+        let name = j.get("name")?.as_str()?.to_string();
+        let vocab = if name.contains("olmoe") { 50304 } else { 32000 };
+        Ok(MoeConfig {
+            mirrors: j.get("mirrors")?.as_str()?.to_string(),
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_experts: j.get("n_experts")?.as_usize()?,
+            top_k: j.get("top_k")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            head_dim: j.get("head_dim")?.as_usize()?,
+            vocab_size: j.get("vocab_size")?.as_usize()?,
+            max_seq: j.get("max_seq")?.as_usize()?,
+            cache_capacity: j.get("cache_capacity")?.as_usize()?,
+            predictor_hidden: j
+                .opt("predictor_hidden")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(128),
+            variants: j
+                .get("variants")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            cost: PaperDims {
+                n_layers: cost.get("n_layers")?.as_usize()?,
+                n_experts: cost.get("n_experts")?.as_usize()?,
+                top_k: cost.get("top_k")?.as_usize()?,
+                d_model: cost.get("d_model")?.as_usize()?,
+                d_ff: cost.get("d_ff")?.as_usize()?,
+                vocab,
+            },
+            name,
+        })
+    }
+}
+
+/// Always-resident weights of one layer, as PJRT-ready literals in
+/// `layer_step` argument order (after x): ln1, wq, wk, wv, wo, ln2, router.
+pub struct LayerWeights {
+    pub lits: Vec<xla::Literal>,
+}
+
+/// One expert's offloadable weights (host-side f32).
+pub struct ExpertWeights {
+    pub wg: HostTensor, // [dff, d]
+    pub wu: HostTensor, // [dff, d]
+    pub wd: HostTensor, // [d, dff]
+}
+
+/// Stacked `expert_group` argument literals for one routed set.
+pub struct StackedExperts {
+    pub wg: xla::Literal,
+    pub wu: xla::Literal,
+    pub wd: xla::Literal,
+}
+
+/// One checkpoint variant, ready for the engine.
+pub struct WeightStore {
+    pub variant: String,
+    pub quant: QuantMode,
+    pub embed: HostTensor, // [V, d] host (token gather is a host op)
+    pub embed_lit: xla::Literal,
+    pub lnf_lit: xla::Literal,
+    pub layers: Vec<LayerWeights>,
+    /// experts[layer][expert]
+    pub experts: Vec<Vec<ExpertWeights>>,
+    /// Memo of stacked expert literals keyed by (layer, routed set).
+    /// MELINOE's whole point is that the routed set repeats within a
+    /// sequence — after fine-tuning this cache hits most steps, removing
+    /// the dominant host-side cost of `expert_group` dispatch (§Perf).
+    stack_cache: std::cell::RefCell<std::collections::HashMap<(usize, Vec<usize>), std::rc::Rc<StackedExperts>>>,
+    pub stack_hits: std::cell::Cell<u64>,
+    pub stack_misses: std::cell::Cell<u64>,
+}
+
+/// Bound on memoized stacked sets (64 sets ≈ a few MB at micro scale).
+const STACK_CACHE_CAP: usize = 512;
+
+fn maybe_quantize(t: &HostTensor, mode: QuantMode) -> HostTensor {
+    match mode {
+        QuantMode::Fp16 => t.clone(),
+        m => HostTensor { dims: t.dims.clone(), data: dequantize(&quantize(&t.data, m)) },
+    }
+}
+
+impl WeightStore {
+    /// Load `<preset_dir>/weights/<variant>.npz` with the given expert
+    /// residency quantization.
+    pub fn load(
+        preset_dir: &Path,
+        cfg: &MoeConfig,
+        variant: &str,
+        quant: QuantMode,
+    ) -> Result<WeightStore> {
+        let path = preset_dir.join("weights").join(format!("{variant}.npz"));
+        let npz = NpzFile::load(&path)?;
+        let embed = npz.get("embed")?.clone();
+        let embed_lit = embed.to_literal()?;
+        let lnf_lit = npz.get("lnf")?.to_literal()?;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        let mut experts = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let g = |n: &str| -> Result<&HostTensor> { npz.get(&format!("l{l}.{n}")) };
+            let lits = ["ln1", "wq", "wk", "wv", "wo", "ln2", "router"]
+                .iter()
+                .map(|n| g(n)?.to_literal())
+                .collect::<Result<Vec<_>>>()?;
+            layers.push(LayerWeights { lits });
+            let wg = g("wg")?;
+            let wu = g("wu")?;
+            let wd = g("wd")?;
+            let mut row = Vec::with_capacity(cfg.n_experts);
+            for e in 0..cfg.n_experts {
+                row.push(ExpertWeights {
+                    wg: maybe_quantize(&wg.slice0(e), quant),
+                    wu: maybe_quantize(&wu.slice0(e), quant),
+                    wd: maybe_quantize(&wd.slice0(e), quant),
+                });
+            }
+            experts.push(row);
+        }
+        Ok(WeightStore {
+            variant: variant.to_string(),
+            quant,
+            embed,
+            embed_lit,
+            lnf_lit,
+            layers,
+            experts,
+            stack_cache: std::cell::RefCell::new(std::collections::HashMap::new()),
+            stack_hits: std::cell::Cell::new(0),
+            stack_misses: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Stack the selected experts' weights into the `expert_group`
+    /// argument literals: wg/wu [K', dff, d], wd [K', d, dff].
+    /// Memoized per routed set — see `stack_cache`.
+    pub fn stack_experts(
+        &self,
+        layer: usize,
+        selected: &[usize],
+        d: usize,
+        dff: usize,
+    ) -> Result<std::rc::Rc<StackedExperts>> {
+        let key = (layer, selected.to_vec());
+        if let Some(hit) = self.stack_cache.borrow().get(&key) {
+            self.stack_hits.set(self.stack_hits.get() + 1);
+            return Ok(hit.clone());
+        }
+        self.stack_misses.set(self.stack_misses.get() + 1);
+        let k = selected.len();
+        let mut wg = Vec::with_capacity(k * dff * d);
+        let mut wu = Vec::with_capacity(k * dff * d);
+        let mut wd = Vec::with_capacity(k * d * dff);
+        for &e in selected {
+            let ex = &self.experts[layer][e];
+            wg.extend_from_slice(&ex.wg.data);
+            wu.extend_from_slice(&ex.wu.data);
+            wd.extend_from_slice(&ex.wd.data);
+        }
+        let k = k as i64;
+        let stacked = std::rc::Rc::new(StackedExperts {
+            wg: xla::Literal::vec1(&wg).reshape(&[k, dff as i64, d as i64])?,
+            wu: xla::Literal::vec1(&wu).reshape(&[k, dff as i64, d as i64])?,
+            wd: xla::Literal::vec1(&wd).reshape(&[k, d as i64, dff as i64])?,
+        });
+        let mut cache = self.stack_cache.borrow_mut();
+        if cache.len() >= STACK_CACHE_CAP {
+            cache.clear(); // simple epoch reset; sets are cheap to rebuild
+        }
+        cache.insert(key, stacked.clone());
+        Ok(stacked)
+    }
+}
+
+/// Activation predictor weights (w1, b1, w2, b2 literals).
+pub struct PredictorWeights {
+    pub lits: Vec<xla::Literal>,
+}
+
+impl PredictorWeights {
+    pub fn load(preset_dir: &Path, variant: &str, dataset_short: &str) -> Result<PredictorWeights> {
+        let path = preset_dir
+            .join("weights")
+            .join(format!("predictor_{variant}_{dataset_short}.npz"));
+        let npz = NpzFile::load(&path)?;
+        let lits = ["w1", "b1", "w2", "b2"]
+            .iter()
+            .map(|n| npz.get(n)?.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PredictorWeights { lits })
+    }
+}
+
+/// MoE-Infinity-style activation frequency profile [L, E].
+pub struct RoutingProfile {
+    pub freq: HostTensor,
+}
+
+impl RoutingProfile {
+    pub fn load(preset_dir: &Path, variant: &str, dataset_short: &str) -> Result<RoutingProfile> {
+        let path =
+            preset_dir.join("weights").join(format!("profile_{variant}_{dataset_short}.npz"));
+        let npz = NpzFile::load(&path)?;
+        Ok(RoutingProfile { freq: npz.get("freq")?.clone() })
+    }
+
+    /// Top-C most frequently activated experts for a layer.
+    pub fn topc(&self, layer: usize, c: usize) -> Vec<usize> {
+        let row = HostTensor::new(vec![self.freq.dims[1]], self.freq.row(layer).to_vec()).unwrap();
+        row.topk(c)
+    }
+}
+
+/// One evaluation sample exported by `data.export_eval_set`.
+#[derive(Debug, Clone)]
+pub struct EvalSample {
+    pub prompt: Vec<usize>,
+    pub reference: Vec<usize>,
+    pub domain: usize,
+    pub answer: String,
+}
+
+/// Held-out evaluation set for one dataset.
+pub struct EvalSet {
+    pub dataset: String,
+    pub samples: Vec<EvalSample>,
+}
+
+impl EvalSet {
+    pub fn load(preset_dir: &Path, dataset_short: &str) -> Result<EvalSet> {
+        let j =
+            Json::from_file(preset_dir.join("eval").join(format!("eval_{dataset_short}.json")))?;
+        let samples = j
+            .get("samples")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok(EvalSample {
+                    prompt: s.get("prompt")?.as_usize_vec()?,
+                    reference: s.get("reference")?.as_usize_vec()?,
+                    domain: s.get("domain")?.as_usize()?,
+                    answer: s.get("answer")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(EvalSet { dataset: j.get("dataset")?.as_str()?.to_string(), samples })
+    }
+}
+
+/// A golden decode trace (python reference output, integration tests).
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub variant: String,
+    pub dataset: String,
+    pub prompt: Vec<usize>,
+    pub expected: Vec<usize>,
+}
+
+pub fn load_goldens(preset_dir: &Path) -> Result<Vec<Golden>> {
+    let j = Json::from_file(preset_dir.join("eval").join("goldens.json"))?;
+    let mut out = Vec::new();
+    for (variant, recs) in j.as_obj()? {
+        for r in recs.as_arr()? {
+            out.push(Golden {
+                variant: variant.clone(),
+                dataset: r.get("dataset")?.as_str()?.to_string(),
+                prompt: r.get("prompt")?.as_usize_vec()?,
+                expected: r.get("expected")?.as_usize_vec()?,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Locate a preset directory under the artifacts root.
+pub fn preset_dir(artifacts: &Path, preset: &str) -> Result<PathBuf> {
+    let dir = artifacts.join(preset);
+    if !dir.join("config.json").exists() {
+        return Err(anyhow!(
+            "no artifacts for preset {preset:?} under {artifacts:?} — run `make artifacts`"
+        ));
+    }
+    Ok(dir)
+}

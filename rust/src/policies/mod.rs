@@ -1,0 +1,280 @@
+//! Offload policies: MELINOE and the five baselines of §4.2.
+//!
+//! Every system the paper compares against is expressed as a
+//! [`PolicyConfig`] over the shared engine: which checkpoint variant to
+//! serve, the eviction policy, the prefetch source, expert residency
+//! quantization, whether non-resident experts may execute on the CPU
+//! (Fiddler), and an optional gate-probability sparsity threshold (FLoE).
+//! This mirrors the paper's observation that the fine-tuning procedure is
+//! orthogonal to the baselines and composes with them (Table 5):
+//! `with_variant` swaps the checkpoint under any policy.
+
+use crate::cache::EvictionKind;
+use crate::quant::QuantMode;
+
+/// Where the start-of-request prefetch set comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Prefetch {
+    /// No proactive loading (cold cache).
+    None,
+    /// MELINOE's prompt-conditioned activation predictor (§3.1.2).
+    Predictor,
+    /// MoE-Infinity-style historical activation-frequency profile.
+    Profile,
+}
+
+#[derive(Debug, Clone)]
+pub struct PolicyConfig {
+    pub name: String,
+    /// Checkpoint to serve: "base" or a fine-tuned variant.
+    pub variant: String,
+    pub eviction: EvictionKind,
+    pub prefetch: Prefetch,
+    /// Residency + transfer quantization of expert weights.
+    pub quant: QuantMode,
+    /// Fiddler: execute non-resident experts on the CPU when cheaper.
+    pub cpu_compute: bool,
+    /// FLoE: drop non-resident experts whose gate probability is below
+    /// this threshold (0.0 disables).  Gates are renormalized.
+    pub sparsity_tau: f32,
+    /// GPU-resident experts per layer.  The quantized capacity boost is
+    /// applied by the caller via `effective_capacity`.
+    pub capacity: usize,
+    /// Paper §5 future-work extension: non-uniform per-layer budgets.
+    /// When set, layer ℓ gets `layer_capacities[ℓ]` slots (before the
+    /// quantization multiplier) instead of the uniform `capacity`.
+    pub layer_capacities: Option<Vec<usize>>,
+}
+
+impl PolicyConfig {
+    /// MELINOE (§3): fine-tuned checkpoint + predictor prefetch + LFU
+    /// cache + INT4 residency.
+    pub fn melinoe(variant: &str, capacity: usize) -> PolicyConfig {
+        PolicyConfig {
+            name: "melinoe".into(),
+            variant: variant.into(),
+            eviction: EvictionKind::Lfu,
+            prefetch: Prefetch::Predictor,
+            quant: QuantMode::Int4,
+            cpu_compute: false,
+            sparsity_tau: 0.0,
+            capacity,
+            layer_capacities: None,
+        }
+    }
+
+    /// MELINOE without the predictor (Table 3's "Fine-Tuned Model" row).
+    pub fn melinoe_no_prefetch(variant: &str, capacity: usize) -> PolicyConfig {
+        PolicyConfig {
+            name: "melinoe-np".into(),
+            prefetch: Prefetch::None,
+            ..PolicyConfig::melinoe(variant, capacity)
+        }
+    }
+
+    /// Fiddler: CPU-GPU orchestration — non-resident experts execute on
+    /// the CPU instead of being transferred; base weights, no quantization.
+    pub fn fiddler(capacity: usize) -> PolicyConfig {
+        PolicyConfig {
+            name: "fiddler".into(),
+            variant: "base".into(),
+            eviction: EvictionKind::Lfu,
+            prefetch: Prefetch::None,
+            quant: QuantMode::Fp16,
+            cpu_compute: true,
+            sparsity_tau: 0.0,
+            capacity,
+            layer_capacities: None,
+        }
+    }
+
+    /// Mixtral-Offloading: LRU expert cache + aggressive (3-bit) expert
+    /// quantization; quality trades for memory (paper Table 2).
+    pub fn mixtral_offloading(capacity: usize) -> PolicyConfig {
+        PolicyConfig {
+            name: "mixtral-offloading".into(),
+            variant: "base".into(),
+            eviction: EvictionKind::Lru,
+            prefetch: Prefetch::None,
+            quant: QuantMode::Int3,
+            cpu_compute: false,
+            sparsity_tau: 0.0,
+            capacity,
+            layer_capacities: None,
+        }
+    }
+
+    /// DeepSpeed-MoE-style fetch-on-demand: only the working set (top-K)
+    /// is ever resident, so nearly every routing decision transfers —
+    /// the paper's transfer-heavy reference point (14.7× gap).
+    pub fn deepspeed_moe(top_k: usize) -> PolicyConfig {
+        PolicyConfig {
+            name: "deepspeed-moe".into(),
+            variant: "base".into(),
+            eviction: EvictionKind::Lru,
+            prefetch: Prefetch::None,
+            quant: QuantMode::Fp16,
+            cpu_compute: false,
+            sparsity_tau: 0.0,
+            capacity: top_k,
+            layer_capacities: None,
+        }
+    }
+
+    /// FLoE: INT4 quantization + activation-sparsity skipping of weak
+    /// non-resident experts.
+    pub fn floe(capacity: usize) -> PolicyConfig {
+        PolicyConfig {
+            name: "floe".into(),
+            variant: "base".into(),
+            eviction: EvictionKind::Lfu,
+            prefetch: Prefetch::None,
+            quant: QuantMode::Int4,
+            cpu_compute: false,
+            sparsity_tau: 0.04,
+            capacity,
+            layer_capacities: None,
+        }
+    }
+
+    /// MoE-Infinity: sparsity-aware profiling prefetch + LFU cache.
+    pub fn moe_infinity(capacity: usize) -> PolicyConfig {
+        PolicyConfig {
+            name: "moe-infinity".into(),
+            variant: "base".into(),
+            eviction: EvictionKind::Lfu,
+            prefetch: Prefetch::Profile,
+            quant: QuantMode::Fp16,
+            cpu_compute: false,
+            sparsity_tau: 0.0,
+            capacity,
+            layer_capacities: None,
+        }
+    }
+
+    /// Plain offloaded serving of the base checkpoint (Table 3 baseline).
+    pub fn base_offload(capacity: usize) -> PolicyConfig {
+        PolicyConfig {
+            name: "base".into(),
+            variant: "base".into(),
+            eviction: EvictionKind::Lfu,
+            prefetch: Prefetch::None,
+            quant: QuantMode::Fp16,
+            cpu_compute: false,
+            sparsity_tau: 0.0,
+            capacity,
+            layer_capacities: None,
+        }
+    }
+
+    /// Swap the checkpoint variant (Table 5: "+ Fine-Tuning" rows).
+    pub fn with_variant(mut self, variant: &str) -> PolicyConfig {
+        self.variant = variant.into();
+        if self.variant != "base" {
+            self.name = format!("{}+ft", self.name);
+        }
+        self
+    }
+
+    pub fn with_capacity(mut self, capacity: usize) -> PolicyConfig {
+        self.capacity = capacity;
+        self
+    }
+
+    pub fn with_eviction(mut self, kind: EvictionKind) -> PolicyConfig {
+        self.eviction = kind;
+        self
+    }
+
+    pub fn with_quant(mut self, q: QuantMode) -> PolicyConfig {
+        self.quant = q;
+        self
+    }
+
+    pub fn with_prefetch(mut self, p: Prefetch) -> PolicyConfig {
+        self.prefetch = p;
+        self
+    }
+
+    pub fn with_layer_capacities(mut self, caps: Vec<usize>) -> PolicyConfig {
+        self.layer_capacities = Some(caps);
+        self
+    }
+
+    /// Per-layer effective capacities (layer-wise schedule if set,
+    /// otherwise uniform), after the quantization multiplier.
+    pub fn effective_layer_capacities(&self, n_layers: usize, n_experts: usize) -> Vec<usize> {
+        let mult = self.quant.capacity_multiplier();
+        let eff = |c: usize| {
+            (((c as f64) * mult).floor() as usize).min(n_experts).max(c.min(n_experts))
+        };
+        match &self.layer_capacities {
+            Some(v) => (0..n_layers).map(|l| eff(v[l.min(v.len() - 1)])).collect(),
+            None => vec![eff(self.capacity); n_layers],
+        }
+    }
+
+    /// Residency capacity after the quantization multiplier: a fixed VRAM
+    /// slice holds `multiplier×` more quantized experts (Table 12).
+    pub fn effective_capacity(&self, n_experts: usize) -> usize {
+        let mult = self.quant.capacity_multiplier();
+        (((self.capacity as f64) * mult).floor() as usize).min(n_experts).max(self.capacity.min(n_experts))
+    }
+
+    /// All six systems at the paper's evaluation capacity (Fig. 3 grid).
+    pub fn all_baselines(capacity: usize, top_k: usize, ft_variant: &str) -> Vec<PolicyConfig> {
+        vec![
+            PolicyConfig::melinoe(ft_variant, capacity),
+            PolicyConfig::fiddler(capacity),
+            PolicyConfig::mixtral_offloading(capacity),
+            PolicyConfig::deepspeed_moe(top_k),
+            PolicyConfig::floe(capacity),
+            PolicyConfig::moe_infinity(capacity),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_have_expected_shape() {
+        let m = PolicyConfig::melinoe("ft_dolly", 16);
+        assert_eq!(m.prefetch, Prefetch::Predictor);
+        assert_eq!(m.quant, QuantMode::Int4);
+        assert_eq!(m.variant, "ft_dolly");
+        let f = PolicyConfig::fiddler(16);
+        assert!(f.cpu_compute);
+        let d = PolicyConfig::deepspeed_moe(8);
+        assert_eq!(d.capacity, 8);
+        let fl = PolicyConfig::floe(16);
+        assert!(fl.sparsity_tau > 0.0);
+    }
+
+    #[test]
+    fn effective_capacity_quant_boost() {
+        let m = PolicyConfig::melinoe("ft_dolly", 8);
+        // int4 fits ~3.5× more experts, capped at n_experts
+        assert!(m.effective_capacity(64) >= 24);
+        assert_eq!(m.effective_capacity(16), 16);
+        let b = PolicyConfig::base_offload(8);
+        assert_eq!(b.effective_capacity(64), 8);
+    }
+
+    #[test]
+    fn with_variant_renames() {
+        let f = PolicyConfig::floe(8).with_variant("ft_dolly");
+        assert_eq!(f.name, "floe+ft");
+        assert_eq!(f.variant, "ft_dolly");
+        let b = PolicyConfig::floe(8).with_variant("base");
+        assert_eq!(b.name, "floe");
+    }
+
+    #[test]
+    fn all_baselines_unique_names() {
+        let v = PolicyConfig::all_baselines(16, 8, "ft_dolly");
+        let names: std::collections::HashSet<_> = v.iter().map(|p| p.name.clone()).collect();
+        assert_eq!(names.len(), v.len());
+    }
+}

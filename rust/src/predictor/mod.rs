@@ -1,0 +1,127 @@
+//! Activation-predictor inference + prefetch-set formation (§3.2).
+//!
+//! Pre-decode, the engine embeds the prompt (mean-pooled token
+//! embeddings — the offline stand-in for BGE, DESIGN.md §2.4), runs the
+//! Ψ_MLP artifact through PJRT, and takes the per-layer Top-C experts as
+//! the prefetch set: `c^(ℓ,1) = Top-C([Ŷ(q)]_ℓ)` (paper Eq. 7).
+
+use anyhow::Result;
+
+use crate::moe::{MoeConfig, PredictorWeights, RoutingProfile};
+use crate::runtime::Runtime;
+use crate::tensor::HostTensor;
+
+/// Per-layer prefetch sets.
+#[derive(Debug, Clone)]
+pub struct PrefetchPlan {
+    pub per_layer: Vec<Vec<usize>>,
+}
+
+impl PrefetchPlan {
+    pub fn empty(n_layers: usize) -> PrefetchPlan {
+        PrefetchPlan { per_layer: vec![Vec::new(); n_layers] }
+    }
+}
+
+/// Mean-pooled token embedding of the prompt: Ψ_EMB(q).
+pub fn prompt_embedding(embed: &HostTensor, prompt: &[usize]) -> Vec<f32> {
+    let d = embed.dims[1];
+    let mut out = vec![0.0f32; d];
+    if prompt.is_empty() {
+        return out;
+    }
+    for &t in prompt {
+        let row = embed.row(t.min(embed.dims[0] - 1));
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    let n = prompt.len() as f32;
+    for o in &mut out {
+        *o /= n;
+    }
+    out
+}
+
+/// Predictor-driven plan: Top-C of Ψ_MLP(Ψ_EMB(q)) per layer.
+pub fn predict_plan(
+    rt: &Runtime,
+    weights: &PredictorWeights,
+    cfg: &MoeConfig,
+    embed: &HostTensor,
+    prompt: &[usize],
+    capacity: usize,
+) -> Result<PrefetchPlan> {
+    let emb = prompt_embedding(embed, prompt);
+    let scores = rt.predictor(&emb, weights)?; // [L, E]
+    let mut per_layer = Vec::with_capacity(cfg.n_layers);
+    for l in 0..cfg.n_layers {
+        let row = HostTensor::new(vec![cfg.n_experts], scores.row(l).to_vec())?;
+        per_layer.push(row.topk(capacity.min(cfg.n_experts)));
+    }
+    Ok(PrefetchPlan { per_layer })
+}
+
+/// Batched plan: pool the predictor scores across the batch's prompts
+/// before taking Top-C (paper §4.3, "Effect of Batch Size").
+pub fn predict_plan_batch(
+    rt: &Runtime,
+    weights: &PredictorWeights,
+    cfg: &MoeConfig,
+    embed: &HostTensor,
+    prompts: &[Vec<usize>],
+    capacity: usize,
+) -> Result<PrefetchPlan> {
+    let mut pooled = vec![0.0f32; cfg.n_layers * cfg.n_experts];
+    for p in prompts {
+        let emb = prompt_embedding(embed, p);
+        let scores = rt.predictor(&emb, weights)?;
+        for (acc, &v) in pooled.iter_mut().zip(&scores.data) {
+            *acc += v;
+        }
+    }
+    let mut per_layer = Vec::with_capacity(cfg.n_layers);
+    for l in 0..cfg.n_layers {
+        let row = HostTensor::new(
+            vec![cfg.n_experts],
+            pooled[l * cfg.n_experts..(l + 1) * cfg.n_experts].to_vec(),
+        )?;
+        per_layer.push(row.topk(capacity.min(cfg.n_experts)));
+    }
+    Ok(PrefetchPlan { per_layer })
+}
+
+/// MoE-Infinity-style plan from the historical activation profile.
+pub fn profile_plan(profile: &RoutingProfile, cfg: &MoeConfig, capacity: usize) -> PrefetchPlan {
+    PrefetchPlan {
+        per_layer: (0..cfg.n_layers)
+            .map(|l| profile.topc(l, capacity.min(cfg.n_experts)))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_pool_embedding() {
+        let embed =
+            HostTensor::new(vec![3, 2], vec![1.0, 0.0, 0.0, 1.0, 2.0, 2.0]).unwrap();
+        let e = prompt_embedding(&embed, &[0, 1]);
+        assert_eq!(e, vec![0.5, 0.5]);
+        let e = prompt_embedding(&embed, &[2]);
+        assert_eq!(e, vec![2.0, 2.0]);
+        // out-of-range token clamps rather than panics
+        let e = prompt_embedding(&embed, &[99]);
+        assert_eq!(e, vec![2.0, 2.0]);
+        assert_eq!(prompt_embedding(&embed, &[]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_plan_shape() {
+        let p = PrefetchPlan::empty(4);
+        assert_eq!(p.per_layer.len(), 4);
+        assert!(p.per_layer.iter().all(|v| v.is_empty()));
+    }
+}

@@ -1,0 +1,890 @@
+//! One function per paper table/figure.  See DESIGN.md §4 for the index
+//! and the expected qualitative shape of each result.
+
+use anyhow::Result;
+
+use crate::cache::EvictionKind;
+use crate::clock::GpuSpec;
+use crate::metrics::{fmt2, fmt4, Table};
+use crate::policies::PolicyConfig;
+use crate::quant::QuantMode;
+use crate::util::cli::Args;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::vram::VramBudget;
+
+use super::{run_eval, run_perplexity, save_result, Ctx, RunSummary, Workload};
+
+pub const ALL: &[&str] = &[
+    "table1", "fig1a", "fig1b", "fig3", "table2", "table3", "fig4", "fig5", "table4",
+    "table5", "table11", "fig6", "heatmaps", "fig11", "table12", "fig12", "fig13", "table13",
+    "ext_layerwise",
+];
+
+fn workload(args: &Args) -> Result<Workload> {
+    Ok(Workload {
+        n_prompts: args.get_usize("prompts", Workload::default().n_prompts)?,
+        max_output: args.get_usize("tokens", Workload::default().max_output)?,
+        ignore_eos: true,
+    })
+}
+
+fn ctx(_args: &Args, preset: &str) -> Result<Ctx> {
+    Ctx::load(&crate::artifacts_dir(), preset)
+}
+
+/// Load a preset, or warn and skip (partial artifact builds stay usable).
+fn try_ctx(args: &Args, preset: &str) -> Option<Ctx> {
+    match ctx(args, preset) {
+        Ok(c) => Some(c),
+        Err(e) => {
+            println!("  [skip {preset}: {e}]");
+            None
+        }
+    }
+}
+
+/// Run a policy, or warn and skip (missing fine-tune/predictor variants).
+fn try_run(
+    c: &Ctx,
+    policy: &PolicyConfig,
+    ds: &str,
+    gpu: GpuSpec,
+    wl: Workload,
+) -> Option<RunSummary> {
+    match run_policy(c, policy, ds, gpu, wl) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            println!("  [skip {}/{}: {e}]", c.preset, policy.name);
+            None
+        }
+    }
+}
+
+fn summary_json(rs: &[RunSummary]) -> Json {
+    arr(rs
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("policy", s(r.policy.clone())),
+                ("tok_s", num(r.tokens_per_sec)),
+                ("tx_per_layer", num(r.tx_per_layer)),
+                ("h2d", num(r.h2d as f64)),
+                ("d2h", num(r.d2h as f64)),
+                ("hit_rate", num(r.hit_rate)),
+                ("rouge_l", num(r.rouge_l)),
+                ("accuracy", num(r.accuracy)),
+                ("topc_share", num(r.topc_share)),
+                ("wall_s", num(r.wall_seconds)),
+            ])
+        })
+        .collect())
+}
+
+fn run_policy(
+    ctx: &Ctx,
+    policy: &PolicyConfig,
+    ds: &str,
+    gpu: GpuSpec,
+    wl: Workload,
+) -> Result<RunSummary> {
+    let parts = ctx.parts(policy, ds)?;
+    let engine = parts.engine(ctx, gpu).with_ignore_eos(wl.ignore_eos);
+    let eval = ctx.eval_set(ds)?;
+    run_eval(&engine, &eval, wl, ctx.cfg.cache_capacity)
+}
+
+fn print_and_save(id: &str, t: &Table, j: Json) -> Result<()> {
+    let text = t.render();
+    println!("{text}");
+    save_result(id, &text, &j)
+}
+
+// ---------------------------------------------------------------- Table 1
+/// Decoding throughput vs cache size (25% / 50% / 100% of experts).
+pub fn table1(args: &Args) -> Result<()> {
+    let wl = workload(args)?;
+    let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
+    let mut t = Table::new(&["model", "cache 25%", "cache 50%", "cache all"]);
+    let mut rows_json = Vec::new();
+    for preset in ["olmoe-micro", "phi-micro", "mixtral-micro"] {
+        let Some(c) = try_ctx(args, preset) else { continue };
+        let e = c.cfg.n_experts;
+        let mut cells = vec![preset.to_string()];
+        let mut jrow = vec![("model", s(preset))];
+        for (label, frac) in [("c25", 0.25), ("c50", 0.5), ("c100", 1.0)] {
+            let cap = ((e as f64 * frac).round() as usize).max(1);
+            let pol = PolicyConfig::base_offload(cap);
+            let r = run_policy(&c, &pol, "dolly", gpu.clone(), wl)?;
+            cells.push(fmt2(r.tokens_per_sec));
+            jrow.push((label, num(r.tokens_per_sec)));
+        }
+        t.row(cells);
+        rows_json.push(obj(jrow.into_iter().map(|(k, v)| (k, v)).collect()));
+    }
+    print_and_save("table1", &t, arr(rows_json))
+}
+
+// ---------------------------------------------------------------- Fig. 1a
+/// H2D/D2H transfer counts, base vs fine-tuned (OLMoE, 64 output tokens).
+pub fn fig1a(args: &Args) -> Result<()> {
+    let wl = Workload {
+        n_prompts: args.get_usize("prompts", 4)?,
+        max_output: args.get_usize("tokens", 64)?,
+        ignore_eos: true,
+    };
+    let c = ctx(args, "olmoe-micro")?;
+    let gpu = GpuSpec::h100();
+    let cap = c.cfg.cache_capacity;
+    let mut t = Table::new(&["model", "H2D", "D2H", "total", "reduction"]);
+    let base = run_policy(&c, &PolicyConfig::base_offload(cap), "dolly", gpu.clone(), wl)?;
+    let ft = run_policy(
+        &c,
+        &PolicyConfig::base_offload(cap).with_variant("ft_dolly"),
+        "dolly",
+        gpu,
+        wl,
+    )?;
+    let red = (base.h2d + base.d2h) as f64 / ((ft.h2d + ft.d2h).max(1)) as f64;
+    t.row(vec!["base".into(), base.h2d.to_string(), base.d2h.to_string(), (base.h2d + base.d2h).to_string(), "1.00x".into()]);
+    t.row(vec!["fine-tuned".into(), ft.h2d.to_string(), ft.d2h.to_string(), (ft.h2d + ft.d2h).to_string(), format!("{red:.2}x")]);
+    print_and_save("fig1a", &t, summary_json(&[base, ft]))
+}
+
+// ---------------------------------------------------------------- Fig. 1b
+/// Routing concentration: sorted activation-share curve + top-8 share.
+pub fn fig1b(args: &Args) -> Result<()> {
+    let wl = Workload {
+        n_prompts: args.get_usize("prompts", 4)?,
+        max_output: args.get_usize("tokens", 48)?,
+        ignore_eos: true,
+    };
+    let c = ctx(args, "olmoe-micro")?;
+    let eval = c.eval_set("dolly")?;
+    let mut t = Table::new(&["model", "top-4", "top-8", "top-16", "top-32 share"]);
+    let mut jrows = Vec::new();
+    for variant in ["base", "ft_dolly"] {
+        let pol = PolicyConfig::base_offload(c.cfg.cache_capacity).with_variant(variant);
+        let parts = c.parts(&pol, "dolly")?;
+        let engine = parts.engine(&c, GpuSpec::h100());
+        // aggregate per-sequence traces (the paper averages within-sequence
+        // concentration over prompts)
+        let mut shares = [0.0f64; 4];
+        let n = wl.n_prompts.min(eval.samples.len());
+        let mut curve = vec![0.0f64; c.cfg.n_experts];
+        for sample in eval.samples.iter().take(n) {
+            let out = engine.decode(&sample.prompt, wl.max_output)?;
+            for (i, k) in [4, 8, 16, 32].iter().enumerate() {
+                shares[i] += out.trace.mean_topc_share(*k);
+            }
+            let sc = out.trace.share_curve(0);
+            for (a, b) in curve.iter_mut().zip(sc) {
+                *a += b;
+            }
+        }
+        for v in &mut shares {
+            *v /= n as f64;
+        }
+        for v in &mut curve {
+            *v /= n as f64;
+        }
+        t.row(vec![
+            variant.into(),
+            fmt4(shares[0]),
+            fmt4(shares[1]),
+            fmt4(shares[2]),
+            fmt4(shares[3]),
+        ]);
+        jrows.push(obj(vec![
+            ("variant", s(variant)),
+            ("top4", num(shares[0])),
+            ("top8", num(shares[1])),
+            ("top16", num(shares[2])),
+            ("top32", num(shares[3])),
+            ("curve_layer0", arr(curve.iter().map(|&v| num(v)).collect())),
+        ]));
+    }
+    print_and_save("fig1b", &t, arr(jrows))
+}
+
+// ---------------------------------------------------------------- Fig. 3
+/// Throughput vs all baselines across model/dataset/GPU configurations.
+pub fn fig3(args: &Args) -> Result<()> {
+    let wl = workload(args)?;
+    let grid: &[(&str, &str)] = &[
+        ("olmoe-micro", "h100"),
+        ("olmoe-micro", "rtx4090"),
+        ("phi-micro", "a100"),
+        ("mixtral-micro", "rtx4090"),
+    ];
+    let mut t = Table::new(&["config", "melinoe", "fiddler", "mix-off", "deepspeed", "floe", "moe-inf"]);
+    let mut jrows = Vec::new();
+    for (preset, gpu_name) in grid {
+        let Some(c) = try_ctx(args, preset) else { continue };
+        let gpu = GpuSpec::by_name(gpu_name)?;
+        for ds in ["dolly", "gsm"] {
+            let ft = if ds == "dolly" { "ft_dolly" } else { "ft_gsm" };
+            let pols = PolicyConfig::all_baselines(c.cfg.cache_capacity, c.cfg.top_k, ft);
+            let mut cells = vec![format!("{preset}/{gpu_name}/{ds}")];
+            let mut jcols = vec![("config", s(format!("{preset}/{gpu_name}/{ds}")))];
+            let labels = ["melinoe", "fiddler", "mixoff", "deepspeed", "floe", "moeinf"];
+            for (pol, label) in pols.iter().zip(labels) {
+                match try_run(&c, pol, ds, gpu.clone(), wl) {
+                    Some(r) => {
+                        cells.push(fmt2(r.tokens_per_sec));
+                        jcols.push((label, num(r.tokens_per_sec)));
+                    }
+                    None => cells.push("n/a".into()),
+                }
+            }
+            t.row(cells);
+            jrows.push(obj(jcols));
+        }
+    }
+    print_and_save("fig3", &t, arr(jrows))
+}
+
+// ---------------------------------------------------------------- Table 2
+/// Downstream quality: ROUGE-L (dolly-syn) and accuracy (gsm-syn).
+pub fn table2(args: &Args) -> Result<()> {
+    // quality harness: natural EOS behaviour
+    let wl = Workload {
+        n_prompts: args.get_usize("prompts", 10)?,
+        max_output: args.get_usize("tokens", 32)?,
+        ignore_eos: false,
+    };
+    let mut t = Table::new(&["method", "preset", "dolly ROUGE-L", "gsm acc %"]);
+    let mut jrows = Vec::new();
+    for preset in ["olmoe-micro", "phi-micro", "mixtral-micro"] {
+        let Some(c) = try_ctx(args, preset) else { continue };
+        let cap = c.cfg.cache_capacity;
+        let methods: Vec<(&str, Box<dyn Fn(&str) -> PolicyConfig>)> = vec![
+            ("base", Box::new(move |_| PolicyConfig::base_offload(cap))),
+            ("melinoe", Box::new(move |ft: &str| PolicyConfig::melinoe(ft, cap))),
+            ("fiddler", Box::new(move |_| PolicyConfig::fiddler(cap))),
+            ("mixtral-offloading", Box::new(move |_| PolicyConfig::mixtral_offloading(cap))),
+            ("deepspeed-moe", Box::new(move |_| PolicyConfig::deepspeed_moe(cap))),
+            ("floe", Box::new(move |_| PolicyConfig::floe(cap))),
+            ("moe-infinity", Box::new(move |_| PolicyConfig::moe_infinity(cap))),
+        ];
+        for (name, make) in &methods {
+            let rd = run_policy(&c, &make("ft_dolly"), "dolly", GpuSpec::h100(), wl)?;
+            let rg = run_policy(&c, &make("ft_gsm"), "gsm", GpuSpec::h100(), wl)?;
+            t.row(vec![name.to_string(), preset.into(), fmt4(rd.rouge_l), fmt2(rg.accuracy)]);
+            jrows.push(obj(vec![
+                ("method", s(*name)),
+                ("preset", s(preset)),
+                ("rouge_l", num(rd.rouge_l)),
+                ("accuracy", num(rg.accuracy)),
+            ]));
+        }
+    }
+    print_and_save("table2", &t, arr(jrows))
+}
+
+// ---------------------------------------------------------------- Table 3
+/// Fine-tuning vs prefetching ablation: tok/s with Tx/L in parentheses.
+pub fn table3(args: &Args) -> Result<()> {
+    let wl = Workload {
+        n_prompts: args.get_usize("prompts", 4)?,
+        max_output: args.get_usize("tokens", 64)?,
+        ignore_eos: true,
+    };
+    let mut t = Table::new(&["setting", "olmoe dolly", "mixtral dolly", "olmoe gsm", "mixtral gsm"]);
+    let mut cells: Vec<Vec<String>> =
+        vec![vec!["base".into()], vec!["fine-tuned".into()], vec!["fine-tuned + prefetch".into()]];
+    let mut jrows = Vec::new();
+    for ds in ["dolly", "gsm"] {
+        let ft = if ds == "dolly" { "ft_dolly" } else { "ft_gsm" };
+        for preset in ["olmoe-micro", "mixtral-micro"] {
+            let Some(c) = try_ctx(args, preset) else {
+                for cell in cells.iter_mut() {
+                    cell.push("n/a".into());
+                }
+                continue;
+            };
+            let cap = c.cfg.cache_capacity;
+            let pols = [
+                PolicyConfig::base_offload(cap),
+                PolicyConfig::melinoe_no_prefetch(ft, cap).with_quant(QuantMode::Fp16),
+                PolicyConfig::melinoe(ft, cap).with_quant(QuantMode::Fp16),
+            ];
+            for (i, pol) in pols.iter().enumerate() {
+                let r = run_policy(&c, pol, ds, GpuSpec::h100(), wl)?;
+                cells[i].push(format!("{} ({:.0})", fmt2(r.tokens_per_sec), r.tx_per_layer));
+                jrows.push(obj(vec![
+                    ("setting", s(pol.name.clone())),
+                    ("preset", s(preset)),
+                    ("dataset", s(ds)),
+                    ("tok_s", num(r.tokens_per_sec)),
+                    ("tx_per_layer", num(r.tx_per_layer)),
+                ]));
+            }
+        }
+    }
+    // column order fix: we iterated ds-major; reorder to header order
+    for row in cells {
+        let reordered = vec![row[0].clone(), row[1].clone(), row[2].clone(), row[3].clone(), row[4].clone()];
+        t.row(reordered);
+    }
+    print_and_save("table3", &t, arr(jrows))
+}
+
+// ---------------------------------------------------------------- Fig. 4
+/// λ_cs / λ_rm sweeps: transfers per layer & perplexity.
+pub fn fig4(args: &Args) -> Result<()> {
+    let wl = Workload {
+        n_prompts: args.get_usize("prompts", 3)?,
+        max_output: args.get_usize("tokens", 48)?,
+        ignore_eos: true,
+    };
+    let c = ctx(args, "olmoe-micro")?;
+    let cap = c.cfg.cache_capacity;
+    let eval = c.eval_set("dolly")?;
+    let sweeps: &[(&str, &str)] = &[
+        ("lcs=0.1 (lrm=0.1)", "ft_dolly_lcs0p1"),
+        ("lcs=0.5 (default)", "ft_dolly"),
+        ("lcs=2.0", "ft_dolly_lcs2p0"),
+        ("lcs=10.0", "ft_dolly_lcs10p0"),
+        ("lrm=0.01 (lcs=0.5)", "ft_dolly_lrm0p01"),
+        ("lrm=1.0", "ft_dolly_lrm1p0"),
+    ];
+    let mut t = Table::new(&["variant", "Tx/L", "perplexity"]);
+    let mut jrows = Vec::new();
+    for (label, variant) in sweeps {
+        let pol = PolicyConfig::melinoe_no_prefetch(variant, cap).with_quant(QuantMode::Fp16);
+        let parts = c.parts(&pol, "dolly")?;
+        let engine = parts.engine(&c, GpuSpec::h100()).with_ignore_eos(true);
+        let r = run_eval(&engine, &eval, wl, cap)?;
+        let ppl = run_perplexity(&engine, &eval, 3, 48)?;
+        t.row(vec![label.to_string(), fmt2(r.tx_per_layer), fmt2(ppl)]);
+        jrows.push(obj(vec![
+            ("variant", s(*variant)),
+            ("tx_per_layer", num(r.tx_per_layer)),
+            ("ppl", num(ppl)),
+        ]));
+    }
+    print_and_save("fig4", &t, arr(jrows))
+}
+
+// ---------------------------------------------------------------- Fig. 5
+/// Throughput vs batch size: MELINOE vs base under limited VRAM.
+pub fn fig5(args: &Args) -> Result<()> {
+    let max_output = args.get_usize("tokens", 24)?;
+    let c = ctx(args, "olmoe-micro")?;
+    let cap = c.cfg.cache_capacity;
+    let eval = c.eval_set("dolly")?;
+    let mut t = Table::new(&["batch", "base tok/s", "melinoe tok/s", "speedup"]);
+    let mut jrows = Vec::new();
+    for bs in [1usize, 2, 4, 8] {
+        let prompts: Vec<Vec<usize>> =
+            eval.samples.iter().take(bs).map(|s| s.prompt.clone()).collect();
+        let mut tps = Vec::new();
+        for pol in [
+            PolicyConfig::base_offload(cap),
+            PolicyConfig::melinoe("ft_dolly", cap).with_quant(QuantMode::Fp16),
+        ] {
+            let parts = c.parts(&pol, "dolly")?;
+            let engine = parts.engine(&c, GpuSpec::h100()).with_ignore_eos(true);
+            let (_outs, report) = engine.decode_batch(&prompts, max_output)?;
+            let sim = report.requests.first().map(|r| r.sim_seconds).unwrap_or(0.0);
+            let total: usize = report.requests.iter().map(|r| r.output_tokens).sum();
+            tps.push(if sim > 0.0 { total as f64 / sim } else { 0.0 });
+        }
+        t.row(vec![bs.to_string(), fmt2(tps[0]), fmt2(tps[1]), format!("{:.2}x", tps[1] / tps[0].max(1e-9))]);
+        jrows.push(obj(vec![
+            ("batch", num(bs as f64)),
+            ("base", num(tps[0])),
+            ("melinoe", num(tps[1])),
+        ]));
+    }
+    print_and_save("fig5", &t, arr(jrows))
+}
+
+// ---------------------------------------------------------------- Table 4
+/// Fine-tuned model perplexity across generation lengths.
+pub fn table4(args: &Args) -> Result<()> {
+    let lengths = [16usize, 32, 64, 128, 256];
+    let mut t = Table::new(&["length", "olmoe", "phi", "mixtral"]);
+    let mut cols: Vec<Vec<f64>> = Vec::new();
+    for preset in ["olmoe-micro", "phi-micro", "mixtral-micro"] {
+        let Some(c) = try_ctx(args, preset) else {
+            cols.push(vec![f64::NAN; lengths.len()]);
+            continue;
+        };
+        let pol = PolicyConfig::melinoe_no_prefetch("ft_dolly", c.cfg.cache_capacity)
+            .with_quant(QuantMode::Fp16);
+        let parts = c.parts(&pol, "dolly")?;
+        let engine = parts.engine(&c, GpuSpec::h100());
+        let eval = c.eval_set("dolly")?;
+        let mut col = Vec::new();
+        for &len in &lengths {
+            col.push(run_perplexity(&engine, &eval, 3, len)?);
+        }
+        cols.push(col);
+    }
+    let mut jrows = Vec::new();
+    for (i, &len) in lengths.iter().enumerate() {
+        t.row(vec![len.to_string(), fmt2(cols[0][i]), fmt2(cols[1][i]), fmt2(cols[2][i])]);
+        jrows.push(obj(vec![
+            ("len", num(len as f64)),
+            ("olmoe", num(cols[0][i])),
+            ("phi", num(cols[1][i])),
+            ("mixtral", num(cols[2][i])),
+        ]));
+    }
+    print_and_save("table4", &t, arr(jrows))
+}
+
+// ---------------------------------------------------------------- Table 5
+/// Coupling fine-tuning with prior baselines (FLoE, Mixtral-Offloading).
+pub fn table5(args: &Args) -> Result<()> {
+    let wl = workload(args)?;
+    let mut t = Table::new(&["method", "olmoe dolly", "phi dolly", "olmoe gsm", "phi gsm"]);
+    let mut rows: Vec<Vec<String>> = vec![
+        vec!["floe".into()],
+        vec!["floe + fine-tuning".into()],
+        vec!["mixtral-offloading".into()],
+        vec!["mix-off + fine-tuning".into()],
+    ];
+    let mut jrows = Vec::new();
+    for ds in ["dolly", "gsm"] {
+        let ft = if ds == "dolly" { "ft_dolly" } else { "ft_gsm" };
+        for preset in ["olmoe-micro", "phi-micro"] {
+            let Some(c) = try_ctx(args, preset) else {
+                for row in rows.iter_mut() {
+                    row.push("n/a".into());
+                }
+                continue;
+            };
+            let cap = c.cfg.cache_capacity;
+            let pols = [
+                PolicyConfig::floe(cap),
+                PolicyConfig::floe(cap).with_variant(ft),
+                PolicyConfig::mixtral_offloading(cap),
+                PolicyConfig::mixtral_offloading(cap).with_variant(ft),
+            ];
+            for (i, pol) in pols.iter().enumerate() {
+                let Some(r) = try_run(&c, pol, ds, GpuSpec::h100(), wl) else {
+                    rows[i].push("n/a".into());
+                    continue;
+                };
+                rows[i].push(fmt2(r.tokens_per_sec));
+                jrows.push(obj(vec![
+                    ("method", s(pol.name.clone())),
+                    ("preset", s(preset)),
+                    ("dataset", s(ds)),
+                    ("tok_s", num(r.tokens_per_sec)),
+                ]));
+            }
+        }
+    }
+    for row in rows {
+        let reordered =
+            vec![row[0].clone(), row[1].clone(), row[2].clone(), row[3].clone(), row[4].clone()];
+        t.row(reordered);
+    }
+    print_and_save("table5", &t, arr(jrows))
+}
+
+// --------------------------------------------------------------- Table 11
+/// Out-of-distribution generalization: fine-tune on A, evaluate on B.
+pub fn table11(args: &Args) -> Result<()> {
+    let wl = workload(args)?;
+    let mut t = Table::new(&["method", "phi dolly", "mixtral dolly", "phi gsm", "mixtral gsm"]);
+    let mut rows: Vec<Vec<String>> = vec![
+        vec!["melinoe (ft: dolly)".into()],
+        vec!["melinoe (ft: gsm)".into()],
+        vec!["fiddler".into()],
+        vec!["mixtral-offloading".into()],
+        vec!["deepspeed-moe".into()],
+        vec!["floe".into()],
+        vec!["moe-infinity".into()],
+    ];
+    let mut jrows = Vec::new();
+    for ds in ["dolly", "gsm"] {
+        for preset in ["phi-micro", "mixtral-micro"] {
+            let Some(c) = try_ctx(args, preset) else {
+                for row in rows.iter_mut() {
+                    row.push("n/a".into());
+                }
+                continue;
+            };
+            let cap = c.cfg.cache_capacity;
+            let pols = [
+                PolicyConfig::melinoe("ft_dolly", cap),
+                PolicyConfig::melinoe("ft_gsm", cap),
+                PolicyConfig::fiddler(cap),
+                PolicyConfig::mixtral_offloading(cap),
+                PolicyConfig::deepspeed_moe(c.cfg.top_k),
+                PolicyConfig::floe(cap),
+                PolicyConfig::moe_infinity(cap),
+            ];
+            for (i, pol) in pols.iter().enumerate() {
+                let Some(r) = try_run(&c, pol, ds, GpuSpec::a100(), wl) else {
+                    rows[i].push("n/a".into());
+                    continue;
+                };
+                rows[i].push(fmt2(r.tokens_per_sec));
+                jrows.push(obj(vec![
+                    ("method", s(format!("{}:{}", pol.name, pol.variant))),
+                    ("preset", s(preset)),
+                    ("eval", s(ds)),
+                    ("tok_s", num(r.tokens_per_sec)),
+                ]));
+            }
+        }
+    }
+    for row in rows {
+        t.row(vec![row[0].clone(), row[1].clone(), row[2].clone(), row[3].clone(), row[4].clone()]);
+    }
+    print_and_save("table11", &t, arr(jrows))
+}
+
+// ---------------------------------------------------------------- Fig. 6
+/// Throughput of the baselines at various output lengths (OLMoE, H100).
+pub fn fig6(args: &Args) -> Result<()> {
+    let c = ctx(args, "olmoe-micro")?;
+    let cap = c.cfg.cache_capacity;
+    let lengths = [16usize, 32, 64, 128];
+    let mut t = Table::new(&["tokens", "melinoe", "fiddler", "mix-off", "deepspeed", "floe", "moe-inf"]);
+    let mut jrows = Vec::new();
+    for &len in &lengths {
+        let wl = Workload { n_prompts: 3, max_output: len, ignore_eos: true };
+        let pols = PolicyConfig::all_baselines(cap, c.cfg.top_k, "ft_dolly");
+        let mut cells = vec![len.to_string()];
+        let mut jc = vec![("tokens", num(len as f64))];
+        let labels = ["melinoe", "fiddler", "mixoff", "deepspeed", "floe", "moeinf"];
+        for (pol, label) in pols.iter().zip(labels) {
+            let r = run_policy(&c, pol, "dolly", GpuSpec::h100(), wl)?;
+            cells.push(fmt2(r.tokens_per_sec));
+            jc.push((label, num(r.tokens_per_sec)));
+        }
+        t.row(cells);
+        jrows.push(obj(jc));
+    }
+    print_and_save("fig6", &t, arr(jrows))
+}
+
+// ------------------------------------------------------------ Figs. 7–10
+/// Expert-activation heatmaps: per-layer expert × step traces (CSV).
+pub fn heatmaps(args: &Args) -> Result<()> {
+    let tokens = args.get_usize("tokens", 48)?;
+    std::fs::create_dir_all("results")?;
+    let mut t = Table::new(&["preset", "variant", "distinct experts (L0)", "top-C share"]);
+    let mut jrows = Vec::new();
+    for preset in ["olmoe-micro", "phi-micro", "mixtral-micro"] {
+        let Some(c) = try_ctx(args, preset) else { continue };
+        for variant in ["base", "ft_dolly"] {
+            let pol =
+                PolicyConfig::base_offload(c.cfg.cache_capacity).with_variant(variant);
+            let parts = c.parts(&pol, "dolly")?;
+            let engine = parts.engine(&c, GpuSpec::h100());
+            let eval = c.eval_set("dolly")?;
+            let out = engine.decode(&eval.samples[0].prompt, tokens)?;
+            // CSV: rows = steps, cols = experts, cell = 1 if selected
+            for l in 0..c.cfg.n_layers.min(4) {
+                let mut csv = String::new();
+                for step in &out.trace.steps {
+                    let mut row = vec!["0"; c.cfg.n_experts];
+                    for &e in &step[l] {
+                        row[e] = "1";
+                    }
+                    csv.push_str(&row.join(","));
+                    csv.push('\n');
+                }
+                std::fs::write(
+                    format!("results/heatmap_{preset}_{variant}_l{l}.csv"),
+                    csv,
+                )?;
+            }
+            let distinct =
+                out.trace.counts[0].iter().filter(|&&n| n > 0).count();
+            let share = out.trace.mean_topc_share(c.cfg.cache_capacity);
+            t.row(vec![
+                preset.into(),
+                variant.into(),
+                distinct.to_string(),
+                fmt4(share),
+            ]);
+            jrows.push(obj(vec![
+                ("preset", s(preset)),
+                ("variant", s(variant)),
+                ("distinct_l0", num(distinct as f64)),
+                ("topc_share", num(share)),
+            ]));
+        }
+    }
+    println!("(per-layer CSVs written to results/heatmap_*.csv)");
+    print_and_save("heatmaps", &t, arr(jrows))
+}
+
+// ---------------------------------------------------------------- Fig. 11
+/// Throughput under different GPU VRAM budgets (H100).
+pub fn fig11(args: &Args) -> Result<()> {
+    let wl = workload(args)?;
+    let budgets: &[(&str, &[f64])] = &[
+        ("olmoe-micro", &[2.0, 3.0, 4.0, 6.0]),
+        ("phi-micro", &[8.0, 16.0, 24.0]),
+        ("mixtral-micro", &[16.0, 24.0, 32.0]),
+    ];
+    let mut t = Table::new(&["preset", "VRAM GB", "cap/layer", "melinoe", "floe", "deepspeed"]);
+    let mut jrows = Vec::new();
+    for (preset, gbs) in budgets {
+        let Some(c) = try_ctx(args, preset) else { continue };
+        for &gb in *gbs {
+            let budget = VramBudget::gb(gb, c.cfg.cost);
+            let cap = budget.capacity_per_layer(QuantMode::Int4).max(1);
+            let cap_fp16 = budget.capacity_per_layer(QuantMode::Fp16).max(1);
+            let ft = "ft_dolly";
+            // melinoe counts its capacity in int4-resident slots already
+            let pols = [
+                PolicyConfig::melinoe(ft, cap).with_quant(QuantMode::Int4),
+                PolicyConfig::floe(cap),
+                PolicyConfig::deepspeed_moe(c.cfg.top_k),
+            ];
+            // avoid double-applying the quant multiplier for the derived caps
+            let mut cells = vec![preset.to_string(), format!("{gb}"), cap.to_string()];
+            let mut jc = vec![("preset", s(*preset)), ("gb", num(gb)), ("cap", num(cap as f64))];
+            for (pol, label) in pols.iter().zip(["melinoe", "floe", "deepspeed"]) {
+                let mut pol = pol.clone();
+                if pol.quant != QuantMode::Fp16 {
+                    // capacity already derived in quantized units
+                    pol.capacity = cap;
+                    pol.quant = QuantMode::Int4;
+                }
+                if pol.name.starts_with("deepspeed") {
+                    pol.capacity = c.cfg.top_k.min(cap_fp16.max(1));
+                }
+                // neutralize effective_capacity's multiplier by feeding
+                // fp16-equivalent capacity
+                let eff = pol.effective_capacity(c.cfg.n_experts);
+                let _ = eff;
+                let r = run_policy(&c, &pol, "dolly", GpuSpec::h100(), wl)?;
+                cells.push(fmt2(r.tokens_per_sec));
+                jc.push((label, num(r.tokens_per_sec)));
+            }
+            t.row(cells);
+            jrows.push(obj(jc));
+        }
+    }
+    print_and_save("fig11", &t, arr(jrows))
+}
+
+// --------------------------------------------------------------- Table 12
+/// Quantized-expert ablation: fp16 vs INT4 residency at equal VRAM.
+pub fn table12(args: &Args) -> Result<()> {
+    let wl = Workload {
+        n_prompts: args.get_usize("prompts", 4)?,
+        max_output: args.get_usize("tokens", 48)?,
+        ignore_eos: true,
+    };
+    let c = ctx(args, "olmoe-micro")?;
+    let base_cap = 8usize; // fp16 slots; int4 fits ~3.5× more in the same bytes
+    let mut t = Table::new(&["setting", "resident/layer", "dolly tok/s", "gsm tok/s"]);
+    let mut jrows = Vec::new();
+    let configs: Vec<(&str, PolicyConfig)> = vec![
+        ("base fp16", PolicyConfig::base_offload(base_cap)),
+        ("base + int4 experts", PolicyConfig::base_offload(base_cap).with_quant(QuantMode::Int4)),
+        (
+            "fine-tuned fp16",
+            PolicyConfig::melinoe_no_prefetch("ft_dolly", base_cap).with_quant(QuantMode::Fp16),
+        ),
+        (
+            "fine-tuned + int4 experts",
+            PolicyConfig::melinoe_no_prefetch("ft_dolly", base_cap).with_quant(QuantMode::Int4),
+        ),
+    ];
+    for (label, pol) in configs {
+        let eff = pol.effective_capacity(c.cfg.n_experts);
+        let rd = run_policy(&c, &pol, "dolly", GpuSpec::h100(), wl)?;
+        let pol_gsm = if pol.variant == "base" { pol.clone() } else { pol.clone().with_variant("ft_gsm") };
+        let rg = run_policy(&c, &pol_gsm, "gsm", GpuSpec::h100(), wl)?;
+        t.row(vec![
+            label.to_string(),
+            eff.to_string(),
+            fmt2(rd.tokens_per_sec),
+            fmt2(rg.tokens_per_sec),
+        ]);
+        jrows.push(obj(vec![
+            ("setting", s(label)),
+            ("resident", num(eff as f64)),
+            ("dolly", num(rd.tokens_per_sec)),
+            ("gsm", num(rg.tokens_per_sec)),
+        ]));
+    }
+    print_and_save("table12", &t, arr(jrows))
+}
+
+// ---------------------------------------------------------------- Fig. 12
+/// Soft-cache capacity in the loss vs eval-time transfers.
+pub fn fig12(args: &Args) -> Result<()> {
+    let wl = Workload {
+        n_prompts: args.get_usize("prompts", 3)?,
+        max_output: args.get_usize("tokens", 48)?,
+        ignore_eos: true,
+    };
+    let c = ctx(args, "olmoe-micro")?;
+    let variants = [("C_loss=8", "ft_dolly_c8"), ("C_loss=16", "ft_dolly"), ("C_loss=32", "ft_dolly_c32")];
+    let eval_caps = [16usize, 32, 48];
+    let mut t = Table::new(&["variant", "C=16 Tx/L", "C=32 Tx/L", "C=48 Tx/L"]);
+    let mut jrows = Vec::new();
+    for (label, variant) in variants {
+        let mut cells = vec![label.to_string()];
+        let mut jc = vec![("variant", s(variant))];
+        for cap in eval_caps {
+            let pol = PolicyConfig::melinoe_no_prefetch(variant, cap).with_quant(QuantMode::Fp16);
+            let r = run_policy(&c, &pol, "dolly", GpuSpec::h100(), wl)?;
+            cells.push(fmt2(r.tx_per_layer));
+            jc.push(("c", num(r.tx_per_layer)));
+        }
+        t.row(cells);
+        jrows.push(obj(jc));
+    }
+    print_and_save("fig12", &t, arr(jrows))
+}
+
+// ---------------------------------------------------------------- Fig. 13
+/// Decay factor γ in the loss vs eval-time transfers.
+pub fn fig13(args: &Args) -> Result<()> {
+    let wl = Workload {
+        n_prompts: args.get_usize("prompts", 3)?,
+        max_output: args.get_usize("tokens", 48)?,
+        ignore_eos: true,
+    };
+    let c = ctx(args, "olmoe-micro")?;
+    let variants = [
+        ("g=0.1", "ft_dolly_g01"),
+        ("g=0.3", "ft_dolly_g03"),
+        ("g=0.5", "ft_dolly_g05"),
+        ("g=0.7", "ft_dolly_g07"),
+        ("g=0.9", "ft_dolly"),
+    ];
+    let eval_caps = [8usize, 16, 32];
+    let mut t = Table::new(&["gamma", "C=8 Tx/L", "C=16 Tx/L", "C=32 Tx/L"]);
+    let mut jrows = Vec::new();
+    for (label, variant) in variants {
+        let mut cells = vec![label.to_string()];
+        let mut jc = vec![("variant", s(variant))];
+        for cap in eval_caps {
+            let pol = PolicyConfig::melinoe_no_prefetch(variant, cap).with_quant(QuantMode::Fp16);
+            let r = run_policy(&c, &pol, "dolly", GpuSpec::h100(), wl)?;
+            cells.push(fmt2(r.tx_per_layer));
+            jc.push(("c", num(r.tx_per_layer)));
+        }
+        t.row(cells);
+        jrows.push(obj(jc));
+    }
+    print_and_save("fig13", &t, arr(jrows))
+}
+
+// --------------------------------------------------------------- Table 13
+/// Eviction policy (LRU vs LFU) × fine-tuning γ.
+pub fn table13(args: &Args) -> Result<()> {
+    let wl = Workload {
+        n_prompts: args.get_usize("prompts", 3)?,
+        max_output: args.get_usize("tokens", 48)?,
+        ignore_eos: true,
+    };
+    let c = ctx(args, "olmoe-micro")?;
+    let cap = c.cfg.cache_capacity;
+    let variants = [
+        ("g=0.1", "ft_dolly_g01"),
+        ("g=0.3", "ft_dolly_g03"),
+        ("g=0.5", "ft_dolly_g05"),
+        ("g=0.7", "ft_dolly_g07"),
+        ("g=0.9", "ft_dolly"),
+    ];
+    let mut t = Table::new(&["fine-tuned with", "LRU Tx/L", "LFU Tx/L"]);
+    let mut jrows = Vec::new();
+    for (label, variant) in variants {
+        let mut cells = vec![label.to_string()];
+        let mut jc = vec![("variant", s(variant))];
+        for kind in [EvictionKind::Lru, EvictionKind::Lfu] {
+            let pol = PolicyConfig::melinoe_no_prefetch(variant, cap)
+                .with_quant(QuantMode::Fp16)
+                .with_eviction(kind);
+            let r = run_policy(&c, &pol, "dolly", GpuSpec::h100(), wl)?;
+            cells.push(fmt2(r.tx_per_layer));
+            jc.push(("tx", num(r.tx_per_layer)));
+        }
+        t.row(cells);
+        jrows.push(obj(jc));
+    }
+    print_and_save("table13", &t, arr(jrows))
+}
+
+// ------------------------------------------------- §5 extension (ours)
+/// Layer-wise cache budgets (the paper's §5 future-work item): allocate
+/// the same *total* number of resident slots non-uniformly, proportional
+/// to each layer's routing diversity (effective expert count e^H from the
+/// base activation profile), and compare against the uniform schedule.
+pub fn ext_layerwise(args: &Args) -> Result<()> {
+    let wl = Workload {
+        n_prompts: args.get_usize("prompts", 4)?,
+        max_output: args.get_usize("tokens", 48)?,
+        ignore_eos: true,
+    };
+    let Some(c) = try_ctx(args, args.get_or("preset", "olmoe-micro")) else { return Ok(()) };
+    let profile = crate::moe::RoutingProfile::load(&c.dir, "base", "dolly")?;
+    let l_n = c.cfg.n_layers;
+    // effective number of experts per layer: exp(entropy of freq row)
+    let diversity: Vec<f64> = (0..l_n)
+        .map(|l| {
+            let row = profile.freq.row(l);
+            let total: f32 = row.iter().sum();
+            let h: f64 = row
+                .iter()
+                .filter(|&&p| p > 0.0)
+                .map(|&p| {
+                    let q = (p / total.max(1e-9)) as f64;
+                    -q * q.ln()
+                })
+                .sum();
+            h.exp()
+        })
+        .collect();
+    let total_slots = c.cfg.cache_capacity * l_n;
+    let dsum: f64 = diversity.iter().sum();
+    let mut caps: Vec<usize> = diversity
+        .iter()
+        .map(|d| ((d / dsum) * total_slots as f64).round().max(2.0) as usize)
+        .collect();
+    // exact-budget correction
+    while caps.iter().sum::<usize>() > total_slots {
+        let i = caps.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap();
+        caps[i] -= 1;
+    }
+    while caps.iter().sum::<usize>() < total_slots {
+        let i = caps.iter().enumerate().min_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap();
+        caps[i] += 1;
+    }
+
+    let mut t = Table::new(&["schedule", "slots/layer", "Tx/L", "tok/s"]);
+    let mut jrows = Vec::new();
+    for (label, pol) in [
+        (
+            "uniform (paper)",
+            PolicyConfig::melinoe_no_prefetch("ft_dolly", c.cfg.cache_capacity)
+                .with_quant(QuantMode::Fp16),
+        ),
+        (
+            "layer-wise (ext)",
+            PolicyConfig::melinoe_no_prefetch("ft_dolly", c.cfg.cache_capacity)
+                .with_quant(QuantMode::Fp16)
+                .with_layer_capacities(caps.clone()),
+        ),
+    ] {
+        let r = run_policy(&c, &pol, "dolly", GpuSpec::h100(), wl)?;
+        let desc = match &pol.layer_capacities {
+            Some(v) => format!("{v:?}"),
+            None => format!("{}×{}", c.cfg.cache_capacity, l_n),
+        };
+        t.row(vec![label.into(), desc, fmt2(r.tx_per_layer), fmt2(r.tokens_per_sec)]);
+        jrows.push(obj(vec![
+            ("schedule", s(label)),
+            ("tx_per_layer", num(r.tx_per_layer)),
+            ("tok_s", num(r.tokens_per_sec)),
+        ]));
+    }
+    print_and_save("ext_layerwise", &t, arr(jrows))
+}

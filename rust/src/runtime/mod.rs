@@ -1,0 +1,188 @@
+//! PJRT runtime: load the AOT HLO artifacts and dispatch them.
+//!
+//! One [`Runtime`] per model preset.  The four executables correspond to
+//! the artifact contract in DESIGN.md §1; HLO *text* is the interchange
+//! format (see `/opt/xla-example/README.md` — serialized jax≥0.5 protos
+//! are rejected by xla_extension 0.5.1).
+//!
+//! All entry points speak host types (`Vec<f32>`, [`HostTensor`]) plus
+//! opaque KV-cache literals that round-trip between calls without leaving
+//! the runtime layer.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::moe::{LayerWeights, MoeConfig, PredictorWeights};
+use crate::tensor::HostTensor;
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    layer_step: xla::PjRtLoadedExecutable,
+    expert_group: xla::PjRtLoadedExecutable,
+    lm_head: xla::PjRtLoadedExecutable,
+    predictor: xla::PjRtLoadedExecutable,
+    /// Dispatch counters (perf accounting).
+    pub calls_layer_step: std::cell::Cell<u64>,
+    pub calls_expert_group: std::cell::Cell<u64>,
+    pub calls_lm_head: std::cell::Cell<u64>,
+}
+
+/// Output of one `layer_step` invocation.
+pub struct LayerStepOut {
+    /// Router distribution over experts (host, for top-K).
+    pub probs: HostTensor,
+    /// Residual stream after attention (host, for the residual add).
+    pub h_res: Vec<f32>,
+    /// Expert input (normed hidden), stays device-side.
+    pub h2: xla::Literal,
+    pub k_cache: xla::Literal,
+    pub v_cache: xla::Literal,
+}
+
+fn load_exe(client: &xla::PjRtClient, dir: &Path, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join("hlo").join(format!("{name}.hlo.txt"));
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))
+}
+
+impl Runtime {
+    pub fn load(preset_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            layer_step: load_exe(&client, preset_dir, "layer_step")?,
+            expert_group: load_exe(&client, preset_dir, "expert_group")?,
+            lm_head: load_exe(&client, preset_dir, "lm_head")?,
+            predictor: load_exe(&client, preset_dir, "predictor")?,
+            client,
+            calls_layer_step: std::cell::Cell::new(0),
+            calls_expert_group: std::cell::Cell::new(0),
+            calls_lm_head: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Fresh zeroed KV caches ([H, T_max, hd] each) for one sequence.
+    pub fn init_kv(&self, cfg: &MoeConfig) -> Result<(xla::Literal, xla::Literal)> {
+        let n = cfg.n_heads * cfg.max_seq * cfg.head_dim;
+        let dims = [cfg.n_heads as i64, cfg.max_seq as i64, cfg.head_dim as i64];
+        let k = xla::Literal::vec1(&vec![0f32; n]).reshape(&dims)?;
+        let v = xla::Literal::vec1(&vec![0f32; n]).reshape(&dims)?;
+        Ok((k, v))
+    }
+
+    /// Run one layer's pre-expert step.
+    pub fn layer_step(
+        &self,
+        x: &[f32],
+        weights: &LayerWeights,
+        k_cache: &xla::Literal,
+        v_cache: &xla::Literal,
+        pos: usize,
+    ) -> Result<LayerStepOut> {
+        self.calls_layer_step.set(self.calls_layer_step.get() + 1);
+        let x_lit = xla::Literal::vec1(x);
+        let pos_lit = xla::Literal::scalar(pos as i32);
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(11);
+        args.push(&x_lit);
+        for w in &weights.lits {
+            args.push(w);
+        }
+        args.push(k_cache);
+        args.push(v_cache);
+        args.push(&pos_lit);
+        let res = self.layer_step.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()
+            .context("layer_step")?;
+        let outs = res.to_tuple()?;
+        let mut it = outs.into_iter();
+        let probs = HostTensor::from_literal(&it.next().ok_or_else(|| anyhow!("missing probs"))?)?;
+        let h_res = it.next().ok_or_else(|| anyhow!("missing h_res"))?.to_vec::<f32>()?;
+        let h2 = it.next().ok_or_else(|| anyhow!("missing h2"))?;
+        let k_cache = it.next().ok_or_else(|| anyhow!("missing k_cache"))?;
+        let v_cache = it.next().ok_or_else(|| anyhow!("missing v_cache"))?;
+        Ok(LayerStepOut { probs, h_res, h2, k_cache, v_cache })
+    }
+
+    /// Execute the grouped expert FFN for the routed experts.
+    /// `gates` are the raw routing probabilities of `selected` (paper Eq. 1).
+    pub fn expert_group(
+        &self,
+        gates: &[f32],
+        h2: &xla::Literal,
+        wg: &xla::Literal,
+        wu: &xla::Literal,
+        wd: &xla::Literal,
+    ) -> Result<Vec<f32>> {
+        self.calls_expert_group.set(self.calls_expert_group.get() + 1);
+        let gates_lit = xla::Literal::vec1(gates);
+        let args: Vec<&xla::Literal> = vec![&gates_lit, h2, wg, wu, wd];
+        let res = self.expert_group.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()
+            .context("expert_group")?;
+        Ok(res.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Buffer-path variant: the (large) stacked expert weights are already
+    /// device-resident `PjRtBuffer`s — only gates and h2 move per call.
+    /// This is the §Perf fast path exploiting MELINOE's routing locality:
+    /// the same routed set recurs across steps, so its device buffers are
+    /// built once and re-dispatched.
+    pub fn expert_group_b(
+        &self,
+        gates: &[f32],
+        h2: &xla::Literal,
+        wg: &xla::PjRtBuffer,
+        wu: &xla::PjRtBuffer,
+        wd: &xla::PjRtBuffer,
+    ) -> Result<Vec<f32>> {
+        self.calls_expert_group.set(self.calls_expert_group.get() + 1);
+        let gates_b = self.client.buffer_from_host_buffer(gates, &[gates.len()], None)?;
+        let h2_b = self.client.buffer_from_host_literal(None, h2)?;
+        let args: Vec<&xla::PjRtBuffer> = vec![&gates_b, &h2_b, wg, wu, wd];
+        let res = self.expert_group.execute_b::<&xla::PjRtBuffer>(&args)?[0][0]
+            .to_literal_sync()
+            .context("expert_group_b")?;
+        Ok(res.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Upload a host tensor to a device buffer.
+    pub fn to_device(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Final norm + LM head; returns logits.
+    pub fn lm_head(
+        &self,
+        x: &[f32],
+        lnf: &xla::Literal,
+        embed: &xla::Literal,
+    ) -> Result<HostTensor> {
+        self.calls_lm_head.set(self.calls_lm_head.get() + 1);
+        let x_lit = xla::Literal::vec1(x);
+        let args: Vec<&xla::Literal> = vec![&x_lit, lnf, embed];
+        let res =
+            self.lm_head.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync().context("lm_head")?;
+        HostTensor::from_literal(&res.to_tuple1()?)
+    }
+
+    /// Activation predictor: prompt embedding → [L, E] preference scores.
+    pub fn predictor(&self, emb: &[f32], weights: &PredictorWeights) -> Result<HostTensor> {
+        let emb_lit = xla::Literal::vec1(emb);
+        let mut args: Vec<&xla::Literal> = vec![&emb_lit];
+        for w in &weights.lits {
+            args.push(w);
+        }
+        let res = self.predictor.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()
+            .context("predictor")?;
+        HostTensor::from_literal(&res.to_tuple1()?)
+    }
+
+    pub fn total_calls(&self) -> u64 {
+        self.calls_layer_step.get() + self.calls_expert_group.get() + self.calls_lm_head.get()
+    }
+}

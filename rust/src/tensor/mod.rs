@@ -1,0 +1,181 @@
+//! Host tensors and `.npz` weight loading.
+//!
+//! [`HostTensor`] is a simple row-major f32 tensor used on the host side of
+//! the engine (embedding gathers, residual adds, argmax).  Weight files are
+//! the `.npz` archives written by `python/compile/aot.py`; they are read
+//! through the xla crate's npy reader directly into [`xla::Literal`]s and
+//! mirrored here for host access.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+use xla::FromRawBytes;
+
+/// Row-major f32 host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", dims, n, data.len());
+        }
+        Ok(HostTensor { dims, data })
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        HostTensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2);
+        let w = self.dims[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Sub-tensor at leading index `i` (rank reduced by one).
+    pub fn slice0(&self, i: usize) -> HostTensor {
+        assert!(self.rank() >= 1 && i < self.dims[0]);
+        let inner: usize = self.dims[1..].iter().product();
+        HostTensor {
+            dims: self.dims[1..].to_vec(),
+            data: self.data[i * inner..(i + 1) * inner].to_vec(),
+        }
+    }
+
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > self.data[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Indices of the k largest entries, in descending value order.
+    pub fn topk(&self, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.data.len()).collect();
+        idx.sort_by(|&a, &b| self.data[b].partial_cmp(&self.data[a]).unwrap());
+        idx.truncate(k);
+        idx
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.rank() == 1 {
+            Ok(lit)
+        } else {
+            let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        HostTensor::new(dims, data)
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Element-wise a + b.
+pub fn add(a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// A named collection of tensors loaded from one `.npz` file.
+#[derive(Debug, Default)]
+pub struct NpzFile {
+    pub tensors: BTreeMap<String, HostTensor>,
+}
+
+impl NpzFile {
+    pub fn load(path: impl AsRef<Path>) -> Result<NpzFile> {
+        let entries = xla::Literal::read_npz(path.as_ref(), &())
+            .map_err(|e| anyhow!("npz {:?}: {e:?}", path.as_ref()))?;
+        let mut tensors = BTreeMap::new();
+        for (name, lit) in entries {
+            // weights may be f32 or f64 depending on numpy defaults; coerce.
+            let lit = match lit.ty() {
+                Ok(xla::ElementType::F32) => lit,
+                _ => lit.convert(xla::PrimitiveType::F32)?,
+            };
+            tensors.insert(name, HostTensor::from_literal(&lit)?);
+        }
+        Ok(NpzFile { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("npz missing tensor {name:?}"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn row_and_slice() {
+        let t = HostTensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        let s = t.slice0(0);
+        assert_eq!(s.dims, vec![3]);
+        assert_eq!(s.data, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn argmax_topk() {
+        let t = HostTensor::new(vec![5], vec![0.1, 0.9, 0.3, 0.95, 0.2]).unwrap();
+        assert_eq!(t.argmax(), 3);
+        assert_eq!(t.topk(2), vec![3, 1]);
+        assert_eq!(t.topk(5), vec![3, 1, 2, 4, 0]);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn add_elementwise() {
+        assert_eq!(add(&[1.0, 2.0], &[3.0, -2.0]), vec![4.0, 0.0]);
+    }
+}

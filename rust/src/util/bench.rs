@@ -1,0 +1,120 @@
+//! Criterion-style micro-bench harness (criterion is unavailable offline).
+//!
+//! Usage from a `harness = false` bench target:
+//! ```ignore
+//! let mut b = Bench::new("cache");
+//! b.bench("lfu_request", || { ... });
+//! b.finish();
+//! ```
+//! Each case is warmed up, then timed over adaptively-chosen iteration
+//! batches until the target measurement time is reached; mean / median /
+//! p95 and a throughput estimate are printed.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    group: String,
+    target: Duration,
+    results: Vec<CaseResult>,
+}
+
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub iters: u64,
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        let target = std::env::var("BENCH_TARGET_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(Duration::from_millis)
+            .unwrap_or(Duration::from_millis(800));
+        println!("\n== bench group: {group} ==");
+        Bench { group: group.to_string(), target, results: Vec::new() }
+    }
+
+    /// Time `f`; `f` should perform one logical operation.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &CaseResult {
+        // warmup + calibration
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < Duration::from_millis(50) {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = t0.elapsed().as_nanos() as f64 / calib_iters as f64;
+        // choose batch so each sample is ~1/20 of target
+        let sample_ns = self.target.as_nanos() as f64 / 20.0;
+        let batch = ((sample_ns / per_iter).ceil() as u64).max(1);
+        let mut samples: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let run_start = Instant::now();
+        while run_start.elapsed() < self.target || samples.len() < 5 {
+            let s = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(s.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+            if samples.len() >= 200 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let median = samples[samples.len() / 2];
+        let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
+        let p95 = samples[p95_idx];
+        let r = CaseResult {
+            name: name.to_string(),
+            mean_ns: mean,
+            median_ns: median,
+            p95_ns: p95,
+            iters: total_iters,
+        };
+        println!(
+            "  {:<38} mean {:>12}  median {:>12}  p95 {:>12}  ({} iters)",
+            r.name,
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.median_ns),
+            fmt_ns(r.p95_ns),
+            r.iters
+        );
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Write results as JSON lines under results/bench_<group>.json.
+    pub fn finish(self) {
+        let _ = std::fs::create_dir_all("results");
+        let mut out = String::from("[");
+        for (i, r) in self.results.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"mean_ns\":{:.1},\"median_ns\":{:.1},\"p95_ns\":{:.1}}}",
+                r.name, r.mean_ns, r.median_ns, r.p95_ns
+            ));
+        }
+        out.push(']');
+        let _ = std::fs::write(format!("results/bench_{}.json", self.group), out);
+    }
+}

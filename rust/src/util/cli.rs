@@ -1,0 +1,131 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Declared option names (for usage/validation).
+    known: Vec<(String, String)>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Declare an option (for `usage()`); returns self for chaining.
+    pub fn declare(mut self, name: &str, help: &str) -> Self {
+        self.known.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn usage(&self, prog: &str, summary: &str) -> String {
+        let mut s = format!("{prog} — {summary}\n\noptions:\n");
+        for (name, help) in &self.known {
+            s.push_str(&format!("  --{name:<18} {help}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["repro", "table1", "--gpu", "h100", "--n=5", "--verbose"]);
+        assert_eq!(a.positional, vec!["repro", "table1"]);
+        assert_eq!(a.get("gpu"), Some("h100"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_f64("r", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse(&["--fast", "run"]);
+        // "run" is consumed as the value of --fast (no '=' given and next
+        // token is not an option) — document this parser limitation.
+        assert_eq!(a.get("fast"), Some("run"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--rate=1.25", "--name=x=y"]);
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 1.25);
+        assert_eq!(a.get("name"), Some("x=y"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

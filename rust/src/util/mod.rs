@@ -1,0 +1,14 @@
+//! From-scratch utility substrates.
+//!
+//! The offline registry carries only the `xla` crate's dependency closure —
+//! no serde, clap, rand, proptest or criterion — so the pieces a serving
+//! framework normally pulls off crates.io are implemented here:
+//! [`json`] (parser + writer), [`cli`] (argument parsing), [`rng`]
+//! (splitmix64 / xoshiro256**), and [`prop`] (property-based testing with
+//! shrinking).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

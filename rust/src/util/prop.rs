@@ -1,0 +1,155 @@
+//! Minimal property-based testing framework with shrinking.
+//!
+//! proptest is unavailable offline; this provides the 10% we need: run a
+//! property over N random cases from a seeded [`Rng`], and on failure
+//! greedily shrink the failing input via a user-supplied shrinker before
+//! reporting.  Used by the cache / coordinator invariant tests.
+//!
+//! ```ignore
+//! check(100, gen_requests, shrink_requests, |reqs| {
+//!     let c = run_cache(reqs);
+//!     c.resident_len() <= c.capacity()
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` inputs drawn from `gen`.  On failure, apply
+/// `shrink` (which yields smaller candidates) greedily until a local
+/// minimum, then panic with the minimal counterexample's Debug rendering.
+pub fn check<T, G, S, P>(cases: usize, mut gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    let seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(input, &shrink, &prop);
+            panic!(
+                "property failed (case {case}, seed {seed}).\nminimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+/// `check` without shrinking.
+pub fn check_no_shrink<T, G, P>(cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    check(cases, gen, |_| Vec::new(), prop)
+}
+
+fn shrink_loop<T, S, P>(mut failing: T, shrink: &S, prop: &P) -> T
+where
+    T: Clone,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    // bounded greedy descent
+    for _ in 0..1000 {
+        let mut advanced = false;
+        for cand in shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+/// Standard shrinker for vectors: halves, single-element removals, and
+/// element-wise shrinks.
+pub fn shrink_vec<T: Clone>(v: &[T], elem: impl Fn(&T) -> Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if !v.is_empty() {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+        for i in 0..v.len().min(16) {
+            let mut w = v.to_vec();
+            w.remove(i);
+            out.push(w);
+        }
+        for i in 0..v.len().min(16) {
+            for e in elem(&v[i]) {
+                let mut w = v.to_vec();
+                w[i] = e;
+                out.push(w);
+            }
+        }
+    }
+    out
+}
+
+/// Shrinker for usize: towards zero.
+pub fn shrink_usize(n: &usize) -> Vec<usize> {
+    let n = *n;
+    let mut out = Vec::new();
+    if n > 0 {
+        out.push(0);
+        out.push(n / 2);
+        out.push(n - 1);
+    }
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            200,
+            |r| r.below(100),
+            |n| shrink_usize(n),
+            |n| *n < 100,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample: 50")]
+    fn failing_property_shrinks_to_boundary() {
+        check(
+            500,
+            |r| r.below(100),
+            |n| shrink_usize(n),
+            |n| *n < 50, // fails for n >= 50; minimal failing value is 50
+        );
+    }
+
+    #[test]
+    fn vec_shrinker_produces_smaller() {
+        let v = vec![3usize, 9, 1];
+        for w in shrink_vec(&v, |e| shrink_usize(e)) {
+            assert!(w.len() < v.len() || w.iter().sum::<usize>() <= v.iter().sum::<usize>());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample: []")]
+    fn trivially_false_shrinks_to_empty_vec() {
+        check(
+            10,
+            |r| (0..r.below(20)).map(|i| i).collect::<Vec<usize>>(),
+            |v| shrink_vec(v, |e| shrink_usize(e)),
+            |_| false,
+        );
+    }
+}

@@ -1,0 +1,124 @@
+//! Simulated VRAM budget ledger.
+//!
+//! The paper caps per-process GPU memory (3 GB for OLMoE, 16 GB for
+//! Phi-3.5-MoE, 24 GB for Mixtral-8x7B; §4.1) and derives how many experts
+//! per layer can stay resident (Table 10).  This module does the same
+//! arithmetic for the simulated hierarchy: given a budget, reserve the
+//! always-resident weights (attention, norms, router, embeddings, KV
+//! cache), and divide what remains among per-layer expert slots.
+
+use crate::clock::PaperDims;
+use crate::quant::QuantMode;
+
+#[derive(Debug, Clone)]
+pub struct VramBudget {
+    pub budget_bytes: f64,
+    pub dims: PaperDims,
+}
+
+impl VramBudget {
+    pub fn new(budget_bytes: f64, dims: PaperDims) -> VramBudget {
+        VramBudget { budget_bytes, dims }
+    }
+
+    pub fn gb(budget_gb: f64, dims: PaperDims) -> VramBudget {
+        VramBudget::new(budget_gb * 1e9, dims)
+    }
+
+    /// Fixed runtime footprint: CUDA context, allocator slack, activation
+    /// workspace (~1 GB on the paper's stacks).
+    pub const RUNTIME_RESERVE: f64 = 1.0e9;
+
+    /// Bytes that must always be resident: non-expert weights (fp16:
+    /// attention + router + norms per layer, embeddings + tied head), the
+    /// KV cache at 2k context, and the fixed runtime footprint.
+    pub fn reserved_bytes(&self) -> f64 {
+        let d = self.dims.d_model as f64;
+        let per_layer = self.dims.attn_bytes() + 2.0 * self.dims.n_experts as f64 * d + 2.0 * 2.0 * d;
+        let embed = 2.0 * self.dims.vocab as f64 * d; // tied head
+        let kv = 2.0 * 2.0 * d * 2048.0 * self.dims.n_layers as f64; // 2k ctx fp16
+        per_layer * self.dims.n_layers as f64 + embed + kv + Self::RUNTIME_RESERVE
+    }
+
+    /// Expert slots per layer under `mode` residency (uniform per layer,
+    /// as in the paper; layer-wise budgets are listed as future work §5).
+    pub fn capacity_per_layer(&self, mode: QuantMode) -> usize {
+        let free = self.budget_bytes - self.reserved_bytes();
+        if free <= 0.0 {
+            return 0;
+        }
+        let slots = free / self.dims.expert_bytes(mode) / self.dims.n_layers as f64;
+        (slots.floor() as usize).min(self.dims.n_experts)
+    }
+
+    /// Bytes actually used with a given per-layer capacity.
+    pub fn used_bytes(&self, capacity: usize, mode: QuantMode) -> f64 {
+        self.reserved_bytes()
+            + capacity as f64 * self.dims.n_layers as f64 * self.dims.expert_bytes(mode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn olmoe() -> PaperDims {
+        PaperDims { n_layers: 16, n_experts: 64, top_k: 8, d_model: 2048, d_ff: 1024, vocab: 50304 }
+    }
+
+    fn mixtral() -> PaperDims {
+        PaperDims { n_layers: 32, n_experts: 8, top_k: 2, d_model: 4096, d_ff: 14336, vocab: 32000 }
+    }
+
+    #[test]
+    fn paper_budgets_give_paper_capacities_olmoe() {
+        // §4.1 allocates 3 GB for OLMoE; Table 10 keeps 16 experts/layer
+        // resident (in INT4, per §3.2).
+        let v = VramBudget::gb(3.0, olmoe());
+        let cap = v.capacity_per_layer(QuantMode::Int4);
+        assert!((12..=24).contains(&cap), "capacity {cap}");
+    }
+
+    #[test]
+    fn paper_budgets_give_paper_capacities_mixtral() {
+        // 24 GB budget, 5 of 8 experts/layer resident (INT4).
+        let v = VramBudget::gb(24.0, mixtral());
+        let cap = v.capacity_per_layer(QuantMode::Int4);
+        assert!((4..=7).contains(&cap), "capacity {cap}");
+    }
+
+    #[test]
+    fn capacity_monotone_in_budget() {
+        let mut last = 0;
+        for gb in [1.0, 2.0, 4.0, 8.0, 16.0] {
+            let cap = VramBudget::gb(gb, olmoe()).capacity_per_layer(QuantMode::Fp16);
+            assert!(cap >= last);
+            last = cap;
+        }
+    }
+
+    #[test]
+    fn quant_fits_more() {
+        let v = VramBudget::gb(3.0, olmoe());
+        assert!(v.capacity_per_layer(QuantMode::Int4) > v.capacity_per_layer(QuantMode::Fp16));
+    }
+
+    #[test]
+    fn capacity_capped_at_n_experts() {
+        let v = VramBudget::gb(4000.0, olmoe());
+        assert_eq!(v.capacity_per_layer(QuantMode::Fp16), 64);
+    }
+
+    #[test]
+    fn tiny_budget_zero_capacity() {
+        let v = VramBudget::gb(0.1, mixtral());
+        assert_eq!(v.capacity_per_layer(QuantMode::Fp16), 0);
+    }
+
+    #[test]
+    fn used_within_budget() {
+        let v = VramBudget::gb(3.0, olmoe());
+        let cap = v.capacity_per_layer(QuantMode::Int4);
+        assert!(v.used_bytes(cap, QuantMode::Int4) <= v.budget_bytes * 1.001);
+    }
+}

