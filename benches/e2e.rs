@@ -9,11 +9,30 @@
 //! Skips cleanly when artifacts are not built.
 
 use melinoe::clock::GpuSpec;
+use melinoe::cluster::{self, ClusterConfig};
+use melinoe::coordinator::workload::Arrival;
 use melinoe::policies::PolicyConfig;
 use melinoe::repro::Ctx;
 use melinoe::util::bench::Bench;
 
 fn main() {
+    // ---- cluster epoch loop (artifact-free: cost model + synthetic traces)
+    let mut b = Bench::new("cluster");
+    let cfg = {
+        let mut c = ClusterConfig::synthetic(4, 16, 4, GpuSpec::h100(), 42)
+            .with_arrival(Arrival::Burst);
+        c.workload.prompt_tokens = 4;
+        c.workload.max_output = 8;
+        c
+    };
+    for name in cluster::BALANCERS {
+        b.bench(&format!("cluster 4r/16req [{name}]"), || {
+            let mut bal = cluster::balancer::by_name(name).unwrap();
+            std::hint::black_box(cluster::run_cluster(&cfg, bal.as_mut()).unwrap());
+        });
+    }
+    b.finish();
+
     let dir = melinoe::artifacts_dir();
     let Some(ctx) = ["olmoe-micro", "phi-micro", "mixtral-micro"]
         .iter()

@@ -1,0 +1,505 @@
+//! A serving replica: one GPU's memory hierarchy plus a decoder.
+//!
+//! Each [`Replica`] owns the full single-GPU simulation stack — per-layer
+//! [`ExpertCache`]s, a [`TransferEngine`] for PCIe accounting, a VRAM
+//! budget-derived capacity, and its own [`SimClock`] — and is driven
+//! through the existing [`Decoder`] trait, so the cluster scheduler is
+//! testable with the same mocks the coordinator tests use.
+//!
+//! Costing follows the engine's Eq. 3 decomposition: the decoder supplies
+//! `Time_compute` for a batch, and the replica replays the batch's
+//! pre-drawn routing trace against its *persistent* caches to add the
+//! `N_miss · Time_transfer` term.  Persistence across requests is the
+//! point: a replica that keeps serving the same task's traffic stays
+//! hit-bound, which is what affinity routing exploits.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::cache::{EvictionKind, ExpertCache};
+use crate::clock::{CostModel, GpuSpec, PaperDims, SimClock};
+use crate::coordinator::Decoder;
+use crate::metrics::{Report, RequestMetrics};
+use crate::pcie::TransferEngine;
+use crate::predictor::PrefetchPlan;
+use crate::quant::QuantMode;
+use crate::vram::VramBudget;
+
+use super::workload::ClusterRequest;
+
+/// Static description of one replica's model + memory configuration.
+#[derive(Debug, Clone)]
+pub struct ReplicaSpec {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    /// GPU-resident experts per layer (derived from the VRAM ledger).
+    pub capacity: usize,
+    pub eviction: EvictionKind,
+    pub quant: QuantMode,
+    /// Apply the request's predictor prefetch plan at batch start.
+    pub prefetch: bool,
+    pub gpu: GpuSpec,
+    pub dims: PaperDims,
+}
+
+impl ReplicaSpec {
+    /// OLMoE at paper scale under the paper's 3 GB VRAM budget (§4.1);
+    /// per-layer capacity comes from the [`VramBudget`] ledger.
+    pub fn olmoe(gpu: GpuSpec) -> ReplicaSpec {
+        let dims = PaperDims {
+            n_layers: 16,
+            n_experts: 64,
+            top_k: 8,
+            d_model: 2048,
+            d_ff: 1024,
+            vocab: 50304,
+        };
+        ReplicaSpec::from_vram_gb(gpu, dims, 3.0)
+    }
+
+    /// Derive per-layer expert capacity from a VRAM budget in GB.
+    pub fn from_vram_gb(gpu: GpuSpec, dims: PaperDims, vram_gb: f64) -> ReplicaSpec {
+        let quant = QuantMode::Int4;
+        let capacity = VramBudget::gb(vram_gb, dims).capacity_per_layer(quant).max(1);
+        ReplicaSpec {
+            n_layers: dims.n_layers,
+            n_experts: dims.n_experts,
+            top_k: dims.top_k,
+            capacity,
+            eviction: EvictionKind::Lfu,
+            quant,
+            prefetch: true,
+            gpu,
+            dims,
+        }
+    }
+
+    pub fn cost_model(&self) -> CostModel {
+        CostModel::new(self.gpu.clone(), self.dims)
+    }
+
+    /// Analytic compute-only service time of one request (no transfer
+    /// stalls) — used to auto-scale offered load.
+    pub fn est_service_seconds(&self, prompt_tokens: usize, max_output: usize) -> f64 {
+        let cost = self.cost_model();
+        let steps = (prompt_tokens + max_output) as f64;
+        let per_step = self.n_layers as f64
+            * (cost.attn_time(1) + cost.expert_exec_time(self.top_k, self.top_k, self.quant))
+            + cost.head_time(1);
+        steps * per_step
+    }
+}
+
+/// Analytic compute-time decoder for cluster simulation: batch-amortized
+/// attention/head plus grouped-expert execution, no PJRT required.
+pub struct SimComputeDecoder {
+    cost: CostModel,
+    n_layers: usize,
+    n_experts: usize,
+    top_k: usize,
+    quant: QuantMode,
+}
+
+impl SimComputeDecoder {
+    pub fn new(spec: &ReplicaSpec) -> SimComputeDecoder {
+        SimComputeDecoder {
+            cost: spec.cost_model(),
+            n_layers: spec.n_layers,
+            n_experts: spec.n_experts,
+            top_k: spec.top_k,
+            quant: spec.quant,
+        }
+    }
+}
+
+impl Decoder for SimComputeDecoder {
+    fn decode_batch(
+        &mut self,
+        prompts: &[Vec<usize>],
+        max_output: usize,
+    ) -> Result<(Vec<Vec<usize>>, Report)> {
+        let b = prompts.len().max(1);
+        let prompt_steps = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
+        let steps = prompt_steps + max_output;
+        // distinct experts a lockstep batch step touches is capped by E
+        let unique = (self.top_k * b).min(self.n_experts);
+        let step_time = self.n_layers as f64
+            * (self.cost.attn_time(b)
+                + self.cost.expert_exec_time(unique, self.top_k * b, self.quant))
+            + self.cost.head_time(b);
+        let sim = steps as f64 * step_time;
+        let ttft = prompt_steps as f64 * step_time;
+        let outputs: Vec<Vec<usize>> = prompts.iter().map(|_| vec![1usize; max_output]).collect();
+        let mut report = Report::default();
+        for p in prompts {
+            report.requests.push(RequestMetrics {
+                prompt_tokens: p.len(),
+                output_tokens: max_output,
+                sim_seconds: sim,
+                sim_ttft: ttft,
+                wall_seconds: 0.0,
+            });
+        }
+        Ok((outputs, report))
+    }
+}
+
+/// One finished request, in the replica's simulated timeline.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub request_id: u64,
+    pub task: usize,
+    pub arrival: f64,
+    pub started: f64,
+    pub finished: f64,
+    pub output_tokens: usize,
+}
+
+impl Completion {
+    pub fn queue_wait(&self) -> f64 {
+        (self.started - self.arrival).max(0.0)
+    }
+
+    pub fn latency(&self) -> f64 {
+        (self.finished - self.arrival).max(0.0)
+    }
+}
+
+/// One serving replica (see module docs).
+pub struct Replica<D: Decoder> {
+    pub id: usize,
+    pub spec: ReplicaSpec,
+    decoder: D,
+    cost: CostModel,
+    pub cache: ExpertCache,
+    pub pcie: TransferEngine,
+    pub clock: SimClock,
+    queue: VecDeque<ClusterRequest>,
+    /// Prefetch plan of the most recently enqueued request: the replica's
+    /// *planned* residency, which the affinity scorer may consult before
+    /// the caches have warmed (burst arrivals dispatch ahead of decode).
+    last_plan: Option<PrefetchPlan>,
+    pub completions: Vec<Completion>,
+    pub busy_seconds: f64,
+    pub peak_queue_depth: usize,
+}
+
+impl<D: Decoder> Replica<D> {
+    pub fn new(id: usize, spec: ReplicaSpec, decoder: D) -> Replica<D> {
+        let cache = ExpertCache::new(spec.n_layers, spec.n_experts, spec.capacity, spec.eviction);
+        let cost = spec.cost_model();
+        Replica {
+            id,
+            spec,
+            decoder,
+            cost,
+            cache,
+            pcie: TransferEngine::new(),
+            clock: SimClock::new(),
+            queue: VecDeque::new(),
+            last_plan: None,
+            completions: Vec::new(),
+            busy_seconds: 0.0,
+            peak_queue_depth: 0,
+        }
+    }
+
+    pub fn enqueue(&mut self, req: ClusterRequest) {
+        self.last_plan = Some(req.plan.clone());
+        self.queue.push_back(req);
+        self.peak_queue_depth = self.peak_queue_depth.max(self.queue.len());
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn busy_until(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// Fraction of `plan`'s experts resident in this replica's caches,
+    /// taking the max with the planned residency of the queue tail so
+    /// affinity works before the first decode warms anything.
+    pub fn affinity_overlap(&self, plan: &PrefetchPlan) -> f64 {
+        let resident = self.resident_overlap(plan);
+        match &self.last_plan {
+            Some(last) => resident.max(plan_overlap(plan, last)),
+            None => resident,
+        }
+    }
+
+    /// Fraction of `plan`'s experts currently resident (mean over layers,
+    /// weighted by set size).
+    pub fn resident_overlap(&self, plan: &PrefetchPlan) -> f64 {
+        let mut num = 0usize;
+        let mut den = 0usize;
+        for (l, set) in plan.per_layer.iter().enumerate() {
+            if l >= self.cache.layers.len() {
+                break;
+            }
+            den += set.len();
+            num += set.iter().filter(|&&e| self.cache.layers[l].contains(e)).count();
+        }
+        if den == 0 {
+            0.0
+        } else {
+            num as f64 / den as f64
+        }
+    }
+
+    /// Serve queued requests until this replica's clock reaches `horizon`
+    /// (a batch started before the horizon runs to completion, so clocks
+    /// may overshoot by one batch — the lockstep-epoch convention).
+    pub fn run_until(&mut self, horizon: f64, max_batch: usize) -> Result<()> {
+        loop {
+            let start = match self.queue.front() {
+                Some(front) => self.clock.now().max(front.at),
+                None => break,
+            };
+            if start >= horizon {
+                break;
+            }
+            // form a batch from requests that have arrived by `start`
+            let mut batch = vec![self.queue.pop_front().unwrap()];
+            while batch.len() < max_batch.max(1) {
+                let take = matches!(self.queue.front(), Some(r) if r.at <= start);
+                if !take {
+                    break;
+                }
+                batch.push(self.queue.pop_front().unwrap());
+            }
+            if self.clock.now() < start {
+                let idle = start - self.clock.now();
+                self.clock.advance(idle);
+            }
+            let t_start = self.clock.now();
+
+            // 1. predictor prefetch: prefill each layer with the union of
+            //    the batch's predicted sets (non-blocking transfers that
+            //    occupy the PCIe link — later demand misses queue behind
+            //    them, as in the engine's overlap model).
+            if self.spec.prefetch {
+                self.clock.advance(self.cost.predictor_time());
+                for l in 0..self.spec.n_layers {
+                    let mut target: Vec<usize> = Vec::new();
+                    for req in &batch {
+                        if let Some(set) = req.plan.per_layer.get(l) {
+                            for &e in set {
+                                if !target.contains(&e) {
+                                    target.push(e);
+                                }
+                            }
+                        }
+                    }
+                    if target.is_empty() {
+                        continue;
+                    }
+                    let loads = self.cache.layer(l).prefill(&target);
+                    for _ in loads {
+                        self.pcie.prefetch_h2d(&self.cost, &self.clock, self.spec.quant);
+                    }
+                }
+            }
+
+            // 2. compute time from the decoder (Eq. 3's Time_compute)
+            let prompts: Vec<Vec<usize>> =
+                batch.iter().map(|r| vec![r.task; r.prompt_tokens.max(1)]).collect();
+            let max_output = batch.iter().map(|r| r.max_output).max().unwrap_or(0);
+            let (_tokens, report) = self.decoder.decode_batch(&prompts, max_output)?;
+            let compute = report.requests.first().map(|r| r.sim_seconds).unwrap_or(0.0);
+
+            // 3. replay the routing traces against the persistent caches:
+            //    each miss demand-transfers and stalls (Eq. 3's N_miss ·
+            //    Time_transfer)
+            let steps = batch.iter().map(|r| r.routing.len()).max().unwrap_or(0);
+            for step in 0..steps {
+                for req in &batch {
+                    let layers = match req.routing.get(step) {
+                        Some(l) => l,
+                        None => continue,
+                    };
+                    for (l, experts) in layers.iter().enumerate() {
+                        for &e in experts {
+                            let hit = self.cache.layer(l).request(e);
+                            if !hit {
+                                self.pcie.demand_h2d(&self.cost, &mut self.clock, self.spec.quant);
+                                if self.cache.layer(l).insert(e, experts).is_some() {
+                                    self.pcie.evict_d2h(&self.cost, self.spec.quant);
+                                }
+                            }
+                        }
+                    }
+                }
+                self.cache.token_tick();
+            }
+            self.clock.advance(compute);
+
+            let t_end = self.clock.now();
+            self.busy_seconds += t_end - t_start;
+            for req in batch {
+                self.completions.push(Completion {
+                    request_id: req.id,
+                    task: req.task,
+                    arrival: req.at,
+                    started: t_start,
+                    finished: t_end,
+                    output_tokens: req.max_output,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Mean per-layer overlap between two prefetch plans (size-weighted).
+fn plan_overlap(a: &PrefetchPlan, b: &PrefetchPlan) -> f64 {
+    let mut num = 0usize;
+    let mut den = 0usize;
+    for (l, set) in a.per_layer.iter().enumerate() {
+        let other = match b.per_layer.get(l) {
+            Some(o) => o,
+            None => continue,
+        };
+        den += set.len();
+        num += set.iter().filter(|e| other.contains(*e)).count();
+    }
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::workload::{generate, TaskProfile, WorkloadSpec};
+    use super::*;
+    use crate::coordinator::workload::Arrival;
+
+    fn spec() -> ReplicaSpec {
+        let mut s = ReplicaSpec::olmoe(GpuSpec::h100());
+        // small model for fast unit tests
+        s.n_layers = 4;
+        s.n_experts = 16;
+        s.top_k = 2;
+        s.capacity = 4;
+        s
+    }
+
+    fn requests(n: usize, tasks: usize, seed: u64, s: &ReplicaSpec) -> Vec<ClusterRequest> {
+        let profiles = TaskProfile::synthetic(tasks, s.n_layers, s.n_experts, s.capacity, 0.9);
+        let wl = WorkloadSpec {
+            n_requests: n,
+            arrival: Arrival::Burst,
+            prompt_tokens: 2,
+            max_output: 4,
+            balanced_tasks: false,
+            seed,
+        };
+        generate(&wl, &profiles, s.n_layers, s.n_experts, s.top_k)
+    }
+
+    #[test]
+    fn replica_serves_all_queued_requests() {
+        let s = spec();
+        let mut r = Replica::new(0, s.clone(), SimComputeDecoder::new(&s));
+        for req in requests(6, 2, 3, &s) {
+            r.enqueue(req);
+        }
+        assert_eq!(r.queue_depth(), 6);
+        assert_eq!(r.peak_queue_depth, 6);
+        r.run_until(f64::INFINITY, 2).unwrap();
+        assert_eq!(r.queue_depth(), 0);
+        assert_eq!(r.completions.len(), 6);
+        assert!(r.clock.now() > 0.0);
+        assert!(r.busy_seconds > 0.0);
+        // every routed expert request was accounted as hit or miss
+        let stats = r.cache.total_stats();
+        assert_eq!(stats.requests(), stats.hits + stats.misses);
+        assert!(stats.requests() > 0);
+        // monotone per-request timeline
+        for c in &r.completions {
+            assert!(c.finished >= c.started);
+            assert!(c.queue_wait() >= 0.0);
+            assert!(c.latency() > 0.0);
+        }
+    }
+
+    #[test]
+    fn horizon_bounds_batch_starts() {
+        let s = spec();
+        let mut r = Replica::new(0, s.clone(), SimComputeDecoder::new(&s));
+        for req in requests(8, 2, 4, &s) {
+            r.enqueue(req);
+        }
+        // a tiny horizon admits at most the first batch
+        r.run_until(1e-9, 4).unwrap();
+        assert!(r.completions.len() <= 4);
+        let after_first = r.completions.len();
+        assert!(after_first > 0, "a batch starting before the horizon must run");
+        r.run_until(f64::INFINITY, 4).unwrap();
+        assert_eq!(r.completions.len(), 8);
+    }
+
+    #[test]
+    fn same_task_traffic_warms_cache() {
+        let s = spec();
+        // task-pure stream on one replica: later requests should mostly hit
+        let mut r = Replica::new(0, s.clone(), SimComputeDecoder::new(&s));
+        let reqs: Vec<ClusterRequest> =
+            requests(12, 1, 5, &s).into_iter().filter(|q| q.task == 0).collect();
+        assert!(reqs.len() >= 8);
+        for req in reqs {
+            r.enqueue(req);
+        }
+        r.run_until(f64::INFINITY, 1).unwrap();
+        let stats = r.cache.total_stats();
+        assert!(
+            stats.hit_rate() > 0.5,
+            "persistent cache should be hit-bound on task-pure traffic: {}",
+            stats.hit_rate()
+        );
+    }
+
+    #[test]
+    fn affinity_overlap_sees_planned_residency_before_decode() {
+        let s = spec();
+        let mut r = Replica::new(0, s.clone(), SimComputeDecoder::new(&s));
+        let profiles = TaskProfile::synthetic(2, s.n_layers, s.n_experts, s.capacity, 0.9);
+        // cold: no residency, no queue
+        assert_eq!(r.affinity_overlap(&profiles[0].plan()), 0.0);
+        let reqs = requests(4, 2, 9, &s);
+        let task0 = reqs.iter().find(|q| q.task == 0).cloned();
+        if let Some(q) = task0 {
+            r.enqueue(q);
+            // planned residency: same task scores high, other task low
+            let same = r.affinity_overlap(&profiles[0].plan());
+            let other = r.affinity_overlap(&profiles[1].plan());
+            assert!(same > 0.99, "same-task planned overlap {same}");
+            assert!(other < same, "other-task overlap {other} >= {same}");
+        }
+    }
+
+    #[test]
+    fn est_service_positive_and_scales() {
+        let s = ReplicaSpec::olmoe(GpuSpec::h100());
+        let a = s.est_service_seconds(8, 16);
+        let b = s.est_service_seconds(8, 32);
+        assert!(a > 0.0);
+        assert!(b > a);
+        // paper-scale OLMoE decodes tens of ms per token (Table 1 regime)
+        let per_tok = a / 24.0;
+        assert!((0.001..1.0).contains(&per_tok), "per-token {per_tok}");
+    }
+
+    #[test]
+    fn vram_budget_derives_capacity() {
+        let s = ReplicaSpec::olmoe(GpuSpec::h100());
+        assert!((2..=64).contains(&s.capacity), "capacity {}", s.capacity);
+        let big = ReplicaSpec::from_vram_gb(GpuSpec::h100(), s.dims, 400.0);
+        assert_eq!(big.capacity, s.dims.n_experts);
+    }
+}

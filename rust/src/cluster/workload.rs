@@ -1,0 +1,336 @@
+//! Cluster workload generation: open-loop arrivals over heterogeneous
+//! per-task routing profiles.
+//!
+//! MELINOE's core observation is that a fine-tuned checkpoint routes each
+//! *task's* traffic onto a small, predictable expert set (PAPER.md §3).
+//! At the fleet level this means different request streams prefer
+//! different experts — exactly the structure an affinity dispatcher can
+//! exploit.  A [`TaskProfile`] captures one stream: a per-layer hot expert
+//! set plus a concentration (the top-C share the fine-tune achieves), and
+//! every generated [`ClusterRequest`] carries a pre-drawn routing trace so
+//! all balancers are compared on *identical* traffic.
+//!
+//! Arrival shapes reuse [`crate::coordinator::workload::Arrival`] — this
+//! module extends the single-replica generator with the per-task routing
+//! dimension rather than replacing it.
+
+use crate::coordinator::workload::Arrival;
+use crate::predictor::PrefetchPlan;
+use crate::util::rng::Rng;
+
+/// One traffic stream's routing behaviour after fine-tuning.
+#[derive(Debug, Clone)]
+pub struct TaskProfile {
+    pub id: usize,
+    pub name: String,
+    /// `hot[layer]` — the experts this task's routing concentrates on
+    /// (what MELINOE's activation predictor would prefetch).
+    pub hot: Vec<Vec<usize>>,
+    /// Probability that a routing draw lands inside the hot set (the
+    /// paper's top-C share; ≈0.9 after fine-tuning, Fig. 1b).
+    pub concentration: f64,
+    /// Relative traffic share in the arrival mix.
+    pub weight: f64,
+}
+
+impl TaskProfile {
+    /// Synthesize `n_tasks` profiles whose hot sets tile the expert space
+    /// with minimal overlap (wrapping when `n_tasks · hot_size` exceeds
+    /// `n_experts`), with a per-layer rotation so layers differ.
+    pub fn synthetic(
+        n_tasks: usize,
+        n_layers: usize,
+        n_experts: usize,
+        hot_size: usize,
+        concentration: f64,
+    ) -> Vec<TaskProfile> {
+        let hot_size = hot_size.clamp(1, n_experts);
+        (0..n_tasks)
+            .map(|t| {
+                let hot = (0..n_layers)
+                    .map(|l| {
+                        let start = (t * hot_size + l * 13) % n_experts;
+                        (0..hot_size).map(|i| (start + i) % n_experts).collect()
+                    })
+                    .collect();
+                TaskProfile {
+                    id: t,
+                    name: format!("task{t}"),
+                    hot,
+                    concentration: concentration.clamp(0.0, 1.0),
+                    weight: 1.0,
+                }
+            })
+            .collect()
+    }
+
+    /// The prefetch plan MELINOE's predictor would produce for this task
+    /// (per-layer hot sets — paper Eq. 7's Top-C).
+    pub fn plan(&self) -> PrefetchPlan {
+        PrefetchPlan { per_layer: self.hot.clone() }
+    }
+
+    /// Draw one step's top-K distinct experts for `layer`.
+    pub fn draw(&self, layer: usize, top_k: usize, n_experts: usize, rng: &mut Rng) -> Vec<usize> {
+        let hot = &self.hot[layer];
+        let k = top_k.min(n_experts);
+        let mut sel: Vec<usize> = Vec::with_capacity(k);
+        let mut tries = 0usize;
+        while sel.len() < k && tries < 16 * (k + 1) {
+            tries += 1;
+            let e = if !hot.is_empty() && rng.f64() < self.concentration {
+                hot[rng.below(hot.len())]
+            } else {
+                rng.below(n_experts)
+            };
+            if !sel.contains(&e) {
+                sel.push(e);
+            }
+        }
+        // deterministic fill if the concentrated draw saturated (e.g. a
+        // hot set smaller than K at concentration 1.0)
+        let mut next = 0usize;
+        while sel.len() < k {
+            if !sel.contains(&next) {
+                sel.push(next);
+            }
+            next += 1;
+        }
+        sel
+    }
+}
+
+/// One admitted request, with its routing trace pre-drawn so every
+/// balancer sees byte-identical traffic.
+#[derive(Debug, Clone)]
+pub struct ClusterRequest {
+    pub id: u64,
+    pub task: usize,
+    /// Arrival time (simulated seconds).
+    pub at: f64,
+    pub prompt_tokens: usize,
+    pub max_output: usize,
+    /// `routing[step][layer]` — the top-K experts this request activates
+    /// at each forward step (prompt prefill steps + decode steps).
+    pub routing: Vec<Vec<Vec<usize>>>,
+    /// The activation predictor's prefetch sets for this request.
+    pub plan: PrefetchPlan,
+}
+
+impl ClusterRequest {
+    /// A routing-free probe request (balancer unit tests).
+    pub fn probe(task: usize) -> ClusterRequest {
+        ClusterRequest {
+            id: 0,
+            task,
+            at: 0.0,
+            prompt_tokens: 0,
+            max_output: 0,
+            routing: Vec::new(),
+            plan: PrefetchPlan::empty(0),
+        }
+    }
+}
+
+/// Knobs for one generated workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub n_requests: usize,
+    pub arrival: Arrival,
+    pub prompt_tokens: usize,
+    pub max_output: usize,
+    /// `true`: exact per-task proportions in a shuffled arrival order
+    /// (aggregated traffic from many users — task *identity* is random
+    /// per arrival but stream volumes are stable).  `false`: every
+    /// arrival draws its task independently by weight.
+    pub balanced_tasks: bool,
+    pub seed: u64,
+}
+
+/// Generate the full request schedule: arrival process × task mix ×
+/// pre-drawn per-request routing traces.
+pub fn generate(
+    spec: &WorkloadSpec,
+    tasks: &[TaskProfile],
+    n_layers: usize,
+    n_experts: usize,
+    top_k: usize,
+) -> Vec<ClusterRequest> {
+    assert!(!tasks.is_empty(), "workload needs at least one task profile");
+    let mut rng = Rng::new(spec.seed);
+    let total_weight: f64 = tasks.iter().map(|t| t.weight).sum();
+    // balanced mode: fix each stream's volume exactly, randomize order
+    let balanced_seq: Option<Vec<usize>> = if spec.balanced_tasks {
+        let mut seq: Vec<usize> = (0..spec.n_requests).map(|i| i % tasks.len()).collect();
+        rng.shuffle(&mut seq);
+        Some(seq)
+    } else {
+        None
+    };
+    let mut t = 0.0f64;
+    (0..spec.n_requests)
+        .map(|i| {
+            let at = match spec.arrival {
+                Arrival::Burst => 0.0,
+                Arrival::Poisson(rate) => {
+                    t += rng.exp(rate);
+                    t
+                }
+                Arrival::Uniform(gap) => {
+                    t += gap;
+                    t
+                }
+            };
+            let task = match &balanced_seq {
+                Some(seq) => seq[i],
+                None => {
+                    // weighted independent draw
+                    let mut x = rng.f64() * total_weight;
+                    let mut task = tasks.len() - 1;
+                    for (k, tp) in tasks.iter().enumerate() {
+                        if x < tp.weight {
+                            task = k;
+                            break;
+                        }
+                        x -= tp.weight;
+                    }
+                    task
+                }
+            };
+            let steps = spec.prompt_tokens + spec.max_output;
+            let routing = (0..steps)
+                .map(|_| {
+                    (0..n_layers)
+                        .map(|l| tasks[task].draw(l, top_k, n_experts, &mut rng))
+                        .collect()
+                })
+                .collect();
+            ClusterRequest {
+                id: i as u64,
+                task,
+                at,
+                prompt_tokens: spec.prompt_tokens,
+                max_output: spec.max_output,
+                routing,
+                plan: tasks[task].plan(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(n: usize, arrival: Arrival) -> WorkloadSpec {
+        WorkloadSpec {
+            n_requests: n,
+            arrival,
+            prompt_tokens: 4,
+            max_output: 8,
+            balanced_tasks: false,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn synthetic_profiles_tile_and_differ() {
+        let tasks = TaskProfile::synthetic(4, 8, 64, 16, 0.9);
+        assert_eq!(tasks.len(), 4);
+        for tp in &tasks {
+            assert_eq!(tp.hot.len(), 8);
+            for layer in &tp.hot {
+                assert_eq!(layer.len(), 16);
+                assert!(layer.iter().all(|&e| e < 64));
+            }
+        }
+        // disjoint when the sets tile exactly (4 × 16 = 64)
+        let a: std::collections::HashSet<_> = tasks[0].hot[0].iter().collect();
+        assert!(tasks[1].hot[0].iter().all(|e| !a.contains(e)));
+    }
+
+    #[test]
+    fn draw_is_distinct_and_concentrated() {
+        let tasks = TaskProfile::synthetic(2, 4, 64, 16, 0.95);
+        let mut rng = Rng::new(11);
+        let mut hot_hits = 0usize;
+        let mut total = 0usize;
+        for _ in 0..200 {
+            let sel = tasks[0].draw(0, 8, 64, &mut rng);
+            assert_eq!(sel.len(), 8);
+            let set: std::collections::HashSet<_> = sel.iter().collect();
+            assert_eq!(set.len(), 8, "duplicates in {sel:?}");
+            total += sel.len();
+            hot_hits += sel.iter().filter(|e| tasks[0].hot[0].contains(*e)).count();
+        }
+        let share = hot_hits as f64 / total as f64;
+        assert!(share > 0.75, "hot share {share}");
+    }
+
+    #[test]
+    fn draw_saturated_hot_set_terminates() {
+        // hot set smaller than K at full concentration: must still return
+        // K distinct experts
+        let tp = TaskProfile {
+            id: 0,
+            name: "tiny".into(),
+            hot: vec![vec![3, 5]],
+            concentration: 1.0,
+            weight: 1.0,
+        };
+        let mut rng = Rng::new(1);
+        let sel = tp.draw(0, 6, 64, &mut rng);
+        assert_eq!(sel.len(), 6);
+        assert!(sel.contains(&3) && sel.contains(&5));
+    }
+
+    #[test]
+    fn generate_schedules_monotone_poisson() {
+        let tasks = TaskProfile::synthetic(3, 4, 64, 16, 0.9);
+        let reqs = generate(&spec(64, Arrival::Poisson(10.0)), &tasks, 4, 64, 8);
+        assert_eq!(reqs.len(), 64);
+        assert!(reqs.windows(2).all(|w| w[0].at <= w[1].at));
+        assert!(reqs.iter().all(|r| r.task < 3));
+        assert!(reqs.iter().all(|r| r.routing.len() == 12));
+        // heterogeneity: more than one task actually appears
+        let seen: std::collections::HashSet<_> = reqs.iter().map(|r| r.task).collect();
+        assert!(seen.len() > 1);
+    }
+
+    #[test]
+    fn generate_deterministic_per_seed() {
+        let tasks = TaskProfile::synthetic(2, 4, 64, 8, 0.9);
+        let a = generate(&spec(16, Arrival::Poisson(5.0)), &tasks, 4, 64, 4);
+        let b = generate(&spec(16, Arrival::Poisson(5.0)), &tasks, 4, 64, 4);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.task, y.task);
+            assert_eq!(x.routing, y.routing);
+        }
+    }
+
+    #[test]
+    fn balanced_mode_fixes_stream_volumes() {
+        let tasks = TaskProfile::synthetic(4, 2, 64, 8, 0.9);
+        let mut s = spec(40, Arrival::Burst);
+        s.balanced_tasks = true;
+        let reqs = generate(&s, &tasks, 2, 64, 4);
+        let mut counts = [0usize; 4];
+        for r in &reqs {
+            counts[r.task] += 1;
+        }
+        assert_eq!(counts, [10, 10, 10, 10]);
+        // order is shuffled, not blocked
+        let first_ten: std::collections::HashSet<_> =
+            reqs.iter().take(10).map(|r| r.task).collect();
+        assert!(first_ten.len() > 1, "balanced sequence must interleave tasks");
+    }
+
+    #[test]
+    fn plan_matches_hot_sets() {
+        let tasks = TaskProfile::synthetic(2, 4, 64, 8, 0.9);
+        let plan = tasks[1].plan();
+        assert_eq!(plan.per_layer, tasks[1].hot);
+    }
+}

@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::metrics::Report;
+use crate::metrics::{Percentiles, Report};
 
 /// Anything that can decode a batch of prompts (the real engine, or a mock
 /// in the scheduler tests).
@@ -68,6 +68,10 @@ pub struct ServerStats {
     pub total_output_tokens: u64,
     pub total_sim_seconds: f64,
     pub mean_batch_size: f64,
+    /// p50/p95/p99 of per-request wallclock queue wait (seconds).
+    pub queue_wait: Percentiles,
+    /// p50/p95/p99 of per-request simulated batch decode time (seconds).
+    pub sim_latency: Percentiles,
 }
 
 enum Msg {
@@ -109,9 +113,17 @@ impl Server {
     }
 }
 
+/// Per-request samples the runner accumulates for the shutdown report.
+#[derive(Default)]
+struct RunnerSamples {
+    batch_sizes: Vec<usize>,
+    queue_waits: Vec<f64>,
+    sim_latencies: Vec<f64>,
+}
+
 fn runner<D: Decoder>(mut dec: D, rx: Receiver<Msg>, cfg: ServerConfig) -> Result<ServerStats> {
     let mut stats = ServerStats::default();
-    let mut batch_sizes: Vec<usize> = Vec::new();
+    let mut samples = RunnerSamples::default();
     'outer: loop {
         // block for the first job
         let first = match rx.recv() {
@@ -126,19 +138,21 @@ fn runner<D: Decoder>(mut dec: D, rx: Receiver<Msg>, cfg: ServerConfig) -> Resul
             match rx.recv_timeout(left) {
                 Ok(Msg::Job(r, tx, t)) => jobs.push((r, tx, t)),
                 Ok(Msg::Shutdown) => {
-                    process_batch(&mut dec, &mut jobs, &cfg, &mut stats, &mut batch_sizes)?;
+                    process_batch(&mut dec, &mut jobs, &cfg, &mut stats, &mut samples)?;
                     break 'outer;
                 }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        process_batch(&mut dec, &mut jobs, &cfg, &mut stats, &mut batch_sizes)?;
+        process_batch(&mut dec, &mut jobs, &cfg, &mut stats, &mut samples)?;
     }
-    if !batch_sizes.is_empty() {
+    if !samples.batch_sizes.is_empty() {
         stats.mean_batch_size =
-            batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len() as f64;
+            samples.batch_sizes.iter().sum::<usize>() as f64 / samples.batch_sizes.len() as f64;
     }
+    stats.queue_wait = Percentiles::of(&samples.queue_waits);
+    stats.sim_latency = Percentiles::of(&samples.sim_latencies);
     Ok(stats)
 }
 
@@ -147,7 +161,7 @@ fn process_batch<D: Decoder>(
     jobs: &mut Vec<(Request, Sender<Response>, Instant)>,
     cfg: &ServerConfig,
     stats: &mut ServerStats,
-    batch_sizes: &mut Vec<usize>,
+    samples: &mut RunnerSamples,
 ) -> Result<()> {
     if jobs.is_empty() {
         return Ok(());
@@ -158,14 +172,17 @@ fn process_batch<D: Decoder>(
     let sim = report.requests.first().map(|r| r.sim_seconds).unwrap_or(0.0);
     let tps = report.tokens_per_sec() * report.requests.len().max(1) as f64;
     stats.batches += 1;
-    batch_sizes.push(jobs.len());
+    samples.batch_sizes.push(jobs.len());
     for ((req, tx, t0), tokens) in jobs.drain(..).zip(outputs) {
         stats.requests += 1;
         stats.total_output_tokens += tokens.len() as u64;
+        let queue_wait = t0.elapsed().as_secs_f64();
+        samples.queue_waits.push(queue_wait);
+        samples.sim_latencies.push(sim);
         let _ = tx.send(Response {
             id: req.id,
             tokens,
-            queue_wait: t0.elapsed().as_secs_f64(),
+            queue_wait,
             sim_seconds: sim,
             batch_tokens_per_sec: tps,
             batch_size: prompts.len(),
@@ -251,6 +268,21 @@ mod tests {
         }
         let stats = server.shutdown().unwrap();
         assert!(stats.batches >= 3);
+    }
+
+    #[test]
+    fn stats_report_latency_percentiles() {
+        let server = Server::start(|| Ok(Mock { calls: 0 }), ServerConfig::default());
+        let rxs: Vec<_> = (0..8).map(|i| server.submit(vec![i, i + 1], 4)).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let stats = server.shutdown().unwrap();
+        // the mock decoder reports 0.5 simulated seconds per batch
+        assert!((stats.sim_latency.p50 - 0.5).abs() < 1e-9);
+        assert!((stats.sim_latency.p99 - 0.5).abs() < 1e-9);
+        assert!(stats.queue_wait.p50 >= 0.0);
+        assert!(stats.queue_wait.p99 >= stats.queue_wait.p50);
     }
 
     #[test]

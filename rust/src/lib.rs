@@ -30,9 +30,18 @@
 //! * [`eval`]        — ROUGE-L, exact-match accuracy, perplexity.
 //! * [`metrics`]     — throughput/latency/transfer reporting.
 //! * [`repro`]       — one harness per paper table/figure.
+//!
+//! Cluster layer (the first tier above the single-engine stack):
+//! * [`cluster`]     — replica fleet simulator: per-replica cache/PCIe/
+//!   VRAM/clock stacks behind pluggable dispatchers (round-robin,
+//!   least-loaded, expert-affinity).  Affinity routing sends each request
+//!   to the replica whose resident experts best match its `predict_plan`
+//!   prefetch set, compounding MELINOE's top-C routing concentration
+//!   fleet-wide (see docs/CLUSTER.md).
 
 pub mod cache;
 pub mod clock;
+pub mod cluster;
 pub mod coordinator;
 pub mod engine;
 pub mod eval;

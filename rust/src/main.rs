@@ -8,6 +8,8 @@
 
 use anyhow::{anyhow, Result};
 use melinoe::clock::GpuSpec;
+use melinoe::cluster;
+use melinoe::coordinator::workload::Arrival;
 use melinoe::coordinator::{Decoder, Server, ServerConfig};
 use melinoe::engine::Engine;
 use melinoe::metrics::{fmt2, Report, Table};
@@ -24,8 +26,9 @@ commands:
   repro <id|all>     regenerate a paper table/figure
                      (table1 fig1a fig1b fig3 table2 table3 fig4 fig5 table4
                       table5 table11 fig6 heatmaps fig11 table12 fig12 fig13
-                      table13)
+                      table13 ext_layerwise ext_cluster)
   serve              batched serving loop over the eval workload
+  cluster            multi-replica serving simulation: compare balancers
   decode             decode one prompt, print tokens + transfer stats
   info               artifact inventory
 
@@ -37,8 +40,16 @@ common options:
   --variant <v>      checkpoint variant (default: policy's own)
   --prompts <n>      eval prompts per configuration
   --tokens <n>       max output tokens
-  --requests <n>     serve: total requests to submit
-  --batch <n>        serve: max dynamic batch size
+  --requests <n>     serve/cluster: total requests to submit
+  --batch <n>        serve/cluster: max dynamic batch size
+
+cluster options:
+  --replicas <n>     fleet size (default 4)
+  --tasks <n>        heterogeneous traffic streams (default 4)
+  --balancer <name>  round-robin | least-loaded | expert-affinity | all
+  --rate <r>         Poisson arrival rate req/s (0 = auto ≈1.5× capacity)
+  --burst            all requests arrive at t=0 (saturation test)
+  --seed <n>         workload seed
 ";
 
 fn policy_by_name(name: &str, cap: usize, top_k: usize, ft: &str) -> Result<PolicyConfig> {
@@ -184,6 +195,64 @@ fn cmd_decode(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Multi-replica serving simulation (no artifacts required — cost model +
+/// synthetic per-task routing traces, see docs/CLUSTER.md).
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let replicas = args.get_usize("replicas", 4)?;
+    let n_requests = args.get_usize("requests", 64)?;
+    let n_tasks = args.get_usize("tasks", 4)?;
+    let max_batch = args.get_usize("batch", 4)?;
+    let tokens = args.get_usize("tokens", 24)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
+    let rate = args.get_f64("rate", 0.0)?;
+
+    let mut cfg = cluster::ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu, seed);
+    cfg.max_batch = max_batch;
+    cfg.workload.max_output = tokens;
+    // re-derive the service estimate for the overridden token budget so
+    // the auto rate stays ≈1.5× fleet capacity and epochs stay ~1/4 of a
+    // request's service time
+    let est = cfg
+        .spec
+        .est_service_seconds(cfg.workload.prompt_tokens, cfg.workload.max_output)
+        .max(1e-6);
+    cfg.epoch = (est / 4.0).max(1e-6);
+    if args.has_flag("burst") {
+        cfg = cfg.with_arrival(Arrival::Burst);
+    } else if rate > 0.0 {
+        cfg = cfg.with_arrival(Arrival::Poisson(rate));
+    } else {
+        cfg = cfg.with_arrival(Arrival::Poisson(1.5 * cfg.replicas as f64 / est));
+    }
+    let arrival_desc = match cfg.workload.arrival {
+        Arrival::Burst => "burst".to_string(),
+        Arrival::Poisson(r) => format!("poisson {r:.2} req/s"),
+        Arrival::Uniform(g) => format!("uniform {g:.3}s gap"),
+    };
+    println!(
+        "cluster: {} replicas × C={} experts/layer, {} requests over {} tasks ({}), batch {}",
+        cfg.replicas, cfg.spec.capacity, n_requests, n_tasks, arrival_desc, cfg.max_batch
+    );
+
+    let which = args.get_or("balancer", "all");
+    let names: Vec<&str> =
+        if which == "all" { cluster::BALANCERS.to_vec() } else { vec![which] };
+    let reports = cluster::compare(&cfg, &names)?;
+    println!("{}", cluster::comparison_table(&reports).render());
+    for r in &reports {
+        let depths: Vec<String> =
+            r.replicas.iter().map(|s| s.peak_queue_depth.to_string()).collect();
+        println!(
+            "  {}: makespan {:.2}s, peak queue depths [{}]",
+            r.balancer,
+            r.makespan,
+            depths.join(", ")
+        );
+    }
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = melinoe::artifacts_dir();
     let mut t = Table::new(&["preset", "L", "E", "K", "d", "dff", "C", "variants"]);
@@ -232,6 +301,7 @@ fn main() -> Result<()> {
             melinoe::repro::run(id, &args)
         }
         "serve" => cmd_serve(&args),
+        "cluster" => cmd_cluster(&args),
         "decode" => cmd_decode(&args),
         "info" => cmd_info(&args),
         other => Err(anyhow!("unknown command {other:?}\n{USAGE}")),

@@ -3,6 +3,55 @@
 use crate::cache::CacheStats;
 use crate::pcie::TransferStats;
 
+/// Nearest-rank percentile of `values` (p in [0, 100]); 0.0 when empty.
+/// Sorts a copy — callers on hot paths should batch their queries through
+/// [`Percentiles::of`], which sorts once.
+pub fn percentile(values: &[f64], p: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// The p50/p95/p99 triple every serving report wants (vLLM convention).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    /// Compute all three with a single sort.
+    pub fn of(values: &[f64]) -> Percentiles {
+        if values.is_empty() {
+            return Percentiles::default();
+        }
+        let mut v = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Percentiles {
+            p50: percentile_sorted(&v, 50.0),
+            p95: percentile_sorted(&v, 95.0),
+            p99: percentile_sorted(&v, 99.0),
+        }
+    }
+
+    /// "p50/p95/p99" cell for the table printers, scaled (e.g. 1e3 for ms).
+    pub fn cell(&self, scale: f64) -> String {
+        format!("{:.2}/{:.2}/{:.2}", self.p50 * scale, self.p95 * scale, self.p99 * scale)
+    }
+}
+
 /// Outcome of decoding one request (or one batch-lockstep member).
 #[derive(Debug, Clone)]
 pub struct RequestMetrics {
@@ -64,13 +113,20 @@ impl Report {
 
     /// Latency percentile over per-request simulated times.
     pub fn latency_pct(&self, p: f64) -> f64 {
-        if self.requests.is_empty() {
-            return 0.0;
-        }
-        let mut v: Vec<f64> = self.requests.iter().map(|r| r.sim_seconds).collect();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        v[idx.min(v.len() - 1)]
+        let v: Vec<f64> = self.requests.iter().map(|r| r.sim_seconds).collect();
+        percentile(&v, p)
+    }
+
+    /// p50/p95/p99 of per-request simulated latency.
+    pub fn latency_percentiles(&self) -> Percentiles {
+        let v: Vec<f64> = self.requests.iter().map(|r| r.sim_seconds).collect();
+        Percentiles::of(&v)
+    }
+
+    /// p50/p95/p99 of simulated time-to-first-token.
+    pub fn ttft_percentiles(&self) -> Percentiles {
+        let v: Vec<f64> = self.requests.iter().map(|r| r.sim_ttft).collect();
+        Percentiles::of(&v)
     }
 }
 
@@ -166,6 +222,37 @@ mod tests {
         assert_eq!(r.tokens_per_sec(), 0.0);
         assert_eq!(r.latency_pct(50.0), 0.0);
         assert_eq!(req(5, 0.0).tokens_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn percentile_helpers_agree_with_latency_pct() {
+        let mut r = Report::default();
+        for i in 1..=200 {
+            r.requests.push(req(1, i as f64));
+        }
+        let p = r.latency_percentiles();
+        assert_eq!(p.p50, r.latency_pct(50.0));
+        assert_eq!(p.p95, r.latency_pct(95.0));
+        assert_eq!(p.p99, r.latency_pct(99.0));
+        assert!(p.p50 <= p.p95 && p.p95 <= p.p99);
+        let t = r.ttft_percentiles();
+        assert!((t.p50 - p.p50 / 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_empty_and_single() {
+        assert_eq!(Percentiles::of(&[]), Percentiles::default());
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        let p = Percentiles::of(&[3.5]);
+        assert_eq!((p.p50, p.p95, p.p99), (3.5, 3.5, 3.5));
+        assert_eq!(percentile(&[2.0, 1.0], 0.0), 1.0);
+        assert_eq!(percentile(&[2.0, 1.0], 100.0), 2.0);
+    }
+
+    #[test]
+    fn percentiles_cell_format() {
+        let p = Percentiles { p50: 0.001, p95: 0.002, p99: 0.003 };
+        assert_eq!(p.cell(1e3), "1.00/2.00/3.00");
     }
 
     #[test]

@@ -17,7 +17,7 @@ use super::{run_eval, run_perplexity, save_result, Ctx, RunSummary, Workload};
 pub const ALL: &[&str] = &[
     "table1", "fig1a", "fig1b", "fig3", "table2", "table3", "fig4", "fig5", "table4",
     "table5", "table11", "fig6", "heatmaps", "fig11", "table12", "fig12", "fig13", "table13",
-    "ext_layerwise",
+    "ext_layerwise", "ext_cluster",
 ];
 
 fn workload(args: &Args) -> Result<Workload> {
@@ -887,4 +887,56 @@ pub fn ext_layerwise(args: &Args) -> Result<()> {
         ]));
     }
     print_and_save("ext_layerwise", &t, arr(jrows))
+}
+
+/// Extension — cluster serving: RoundRobin vs LeastLoaded vs
+/// ExpertAffinity dispatch across 2/4/8 replicas on heterogeneous
+/// per-task traffic.  Pure simulation over the cost model and synthetic
+/// routing profiles (no artifacts required): the expected shape is
+/// ExpertAffinity strictly ahead on fleet cache hit-rate and tokens/s,
+/// with the gap widening as replicas (and therefore cache diversity)
+/// grow — the fleet-level analogue of the paper's top-C concentration.
+pub fn ext_cluster(args: &Args) -> Result<()> {
+    use crate::cluster::{self, ClusterConfig};
+    use crate::coordinator::workload::Arrival;
+
+    let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
+    let n_requests = args.get_usize("requests", 64)?;
+    let n_tasks = args.get_usize("tasks", 4)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let burst = args.has_flag("burst");
+
+    let mut t = Table::new(&[
+        "replicas", "balancer", "tok/s", "hit rate", "PCIe GB", "queue p50/p95/p99 (s)",
+        "latency p50/p95/p99 (s)",
+    ]);
+    let mut jrows = Vec::new();
+    for replicas in [2usize, 4, 8] {
+        let mut cfg = ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu.clone(), seed);
+        if burst {
+            cfg = cfg.with_arrival(Arrival::Burst);
+        }
+        for rep in cluster::compare(&cfg, cluster::BALANCERS)? {
+            t.row(vec![
+                replicas.to_string(),
+                rep.balancer.clone(),
+                fmt2(rep.tokens_per_sec),
+                fmt4(rep.hit_rate),
+                fmt2(rep.pcie_gb),
+                rep.queue_wait.cell(1.0),
+                rep.latency.cell(1.0),
+            ]);
+            jrows.push(obj(vec![
+                ("replicas", num(replicas as f64)),
+                ("balancer", s(rep.balancer.clone())),
+                ("tok_s", num(rep.tokens_per_sec)),
+                ("hit_rate", num(rep.hit_rate)),
+                ("pcie_gb", num(rep.pcie_gb)),
+                ("queue_p99_s", num(rep.queue_wait.p99)),
+                ("latency_p99_s", num(rep.latency.p99)),
+                ("makespan_s", num(rep.makespan)),
+            ]));
+        }
+    }
+    print_and_save("ext_cluster", &t, arr(jrows))
 }

@@ -226,6 +226,7 @@ pub fn run(id: &str, args: &crate::util::cli::Args) -> Result<()> {
         "fig13" => ex::fig13(args),
         "table13" => ex::table13(args),
         "ext_layerwise" => ex::ext_layerwise(args),
+        "ext_cluster" => ex::ext_cluster(args),
         "all" => {
             for id in ex::ALL {
                 println!("\n================ {id} ================");

@@ -1,0 +1,90 @@
+//! Cluster-layer integration tests.
+//!
+//! Unlike rust/tests/integration.rs these need no PJRT artifacts: the
+//! fleet simulation runs on the analytic cost model with synthetic
+//! per-task routing traces, so they assert the PR's acceptance behaviour
+//! unconditionally — expert-affinity dispatch strictly beats round-robin
+//! on fleet cache hit-rate and simulated throughput for heterogeneous
+//! traffic, at every fleet size.
+
+use melinoe::clock::GpuSpec;
+use melinoe::cluster::{balancer, compare, run_cluster, ClusterConfig, BALANCERS};
+use melinoe::coordinator::workload::Arrival;
+
+fn cfg(replicas: usize, requests: usize, seed: u64) -> ClusterConfig {
+    ClusterConfig::synthetic(replicas, requests, 4, GpuSpec::h100(), seed)
+}
+
+#[test]
+fn affinity_strictly_beats_round_robin_across_fleet_sizes() {
+    for replicas in [2usize, 4, 8] {
+        // burst => saturated => makespan measures serving efficiency
+        let cfg = cfg(replicas, 48, 42).with_arrival(Arrival::Burst);
+        let reports = compare(&cfg, BALANCERS).unwrap();
+        let rr = &reports[0];
+        let affinity = &reports[2];
+        assert_eq!(rr.n_requests, 48);
+        assert_eq!(affinity.n_requests, 48);
+        assert!(
+            affinity.hit_rate > rr.hit_rate,
+            "replicas={replicas}: affinity hit rate {:.4} <= round-robin {:.4}",
+            affinity.hit_rate,
+            rr.hit_rate
+        );
+        assert!(
+            affinity.tokens_per_sec > rr.tokens_per_sec,
+            "replicas={replicas}: affinity tok/s {:.2} <= round-robin {:.2}",
+            affinity.tokens_per_sec,
+            rr.tokens_per_sec
+        );
+        assert!(
+            affinity.pcie_gb < rr.pcie_gb,
+            "replicas={replicas}: affinity moved more PCIe bytes than round-robin"
+        );
+    }
+}
+
+#[test]
+fn open_loop_poisson_serves_everything_with_finite_latency() {
+    let cfg = cfg(4, 64, 7);
+    for name in BALANCERS {
+        let mut b = balancer::by_name(name).unwrap();
+        let rep = run_cluster(&cfg, b.as_mut()).unwrap();
+        assert_eq!(rep.n_requests, 64, "{name}");
+        assert!(rep.makespan.is_finite() && rep.makespan > 0.0);
+        assert!(rep.latency.p99.is_finite() && rep.latency.p99 > 0.0);
+        assert!(rep.queue_wait.p50 <= rep.queue_wait.p99);
+        // conservation: every replica's requests sum to the workload
+        let total: usize = rep.replicas.iter().map(|r| r.requests).sum();
+        assert_eq!(total, 64, "{name}");
+    }
+}
+
+#[test]
+fn affinity_latency_tail_not_worse_under_saturation() {
+    // under burst saturation the queue dominates latency; affinity's
+    // faster service must not inflate the tail far above round-robin's.
+    // The margin allows for affinity's deliberately deeper per-task
+    // queues (load_penalty trades queue depth for cache overlap).
+    let cfg = cfg(4, 48, 21).with_arrival(Arrival::Burst);
+    let reports = compare(&cfg, BALANCERS).unwrap();
+    let (rr, affinity) = (&reports[0], &reports[2]);
+    assert!(
+        affinity.latency.p99 <= rr.latency.p99 * 1.25,
+        "affinity p99 {:.2}s vs round-robin p99 {:.2}s",
+        affinity.latency.p99,
+        rr.latency.p99
+    );
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let cfg = cfg(3, 32, 9).with_arrival(Arrival::Burst);
+    let mut b1 = balancer::by_name("expert-affinity").unwrap();
+    let mut b2 = balancer::by_name("expert-affinity").unwrap();
+    let r1 = run_cluster(&cfg, b1.as_mut()).unwrap();
+    let r2 = run_cluster(&cfg, b2.as_mut()).unwrap();
+    assert_eq!(r1.output_tokens, r2.output_tokens);
+    assert!((r1.makespan - r2.makespan).abs() < 1e-12);
+    assert!((r1.hit_rate - r2.hit_rate).abs() < 1e-12);
+}
