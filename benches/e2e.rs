@@ -9,26 +9,43 @@
 //! Skips cleanly when artifacts are not built.
 
 use melinoe::clock::GpuSpec;
+use melinoe::cluster::workload::OutputLen;
 use melinoe::cluster::{self, ClusterConfig};
 use melinoe::coordinator::workload::Arrival;
+use melinoe::coordinator::SchedulerMode;
 use melinoe::policies::PolicyConfig;
 use melinoe::repro::Ctx;
 use melinoe::util::bench::Bench;
 
 fn main() {
-    // ---- cluster epoch loop (artifact-free: cost model + synthetic traces)
+    // ---- cluster serving loop (artifact-free: cost model + synthetic traces)
     let mut b = Bench::new("cluster");
     let cfg = {
         let mut c = ClusterConfig::synthetic(4, 16, 4, GpuSpec::h100(), 42)
             .with_arrival(Arrival::Burst);
         c.workload.prompt_tokens = 4;
-        c.workload.max_output = 8;
+        c.workload.output = OutputLen::Fixed(8);
         c
     };
     for name in cluster::BALANCERS {
         b.bench(&format!("cluster 4r/16req [{name}]"), || {
             let mut bal = cluster::balancer::by_name(name).unwrap();
             std::hint::black_box(cluster::run_cluster(&cfg, bal.as_mut()).unwrap());
+        });
+    }
+    b.finish();
+
+    // ---- scheduler modes under skewed output lengths (the tentpole's
+    // static-vs-continuous comparison, wallclock cost of the sim itself)
+    let mut b = Bench::new("scheduler");
+    let skew = cfg
+        .clone()
+        .with_output(OutputLen::Bimodal { short: 4, long: 32, long_frac: 0.25 });
+    for mode in [SchedulerMode::Static, SchedulerMode::Continuous] {
+        let mcfg = skew.clone().with_scheduler(mode);
+        b.bench(&format!("cluster 4r/16req skewed [{mode:?}]"), || {
+            let mut bal = cluster::balancer::by_name("expert-affinity").unwrap();
+            std::hint::black_box(cluster::run_cluster(&mcfg, bal.as_mut()).unwrap());
         });
     }
     b.finish();

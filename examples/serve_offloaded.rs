@@ -1,35 +1,58 @@
 //! End-to-end serving driver (the DESIGN.md validation workload): load a
-//! micro MoE, serve a stream of batched requests through the coordinator,
-//! and report latency/throughput — real tokens through real PJRT
-//! executables, offloading simulated at paper scale.
+//! micro MoE, serve a request stream through the coordinator's step-level
+//! scheduler, and report latency/throughput — real tokens through real
+//! PJRT executables, offloading simulated at paper scale.
 //!
 //! ```bash
 //! cargo run --release --example serve_offloaded -- \
-//!     --preset olmoe-micro --policy melinoe --requests 16 --batch 4
+//!     --preset olmoe-micro --policy melinoe --requests 16 --batch 4 \
+//!     --scheduler continuous
 //! ```
 
 use std::time::Duration;
 
 use melinoe::clock::GpuSpec;
-use melinoe::coordinator::{Decoder, Server, ServerConfig};
-use melinoe::metrics::{fmt2, Report, Table};
+use melinoe::coordinator::{Decoder, SchedulerMode, SeqFinish, Server, ServerConfig};
+use melinoe::engine::{DecodeSession, Engine};
+use melinoe::metrics::{fmt2, Table};
 use melinoe::policies::PolicyConfig;
 use melinoe::repro::{Ctx, EngineParts};
 use melinoe::util::cli::Args;
 
+/// Owns the model plus a persistent decode session; the borrowing
+/// `Engine` view is rebuilt per step call (PJRT handles are not Send, so
+/// everything lives inside the runner thread).
 struct OwnedEngine {
     ctx: Ctx,
     parts: EngineParts,
     gpu: GpuSpec,
+    sess: DecodeSession,
+}
+
+impl OwnedEngine {
+    fn new(ctx: Ctx, parts: EngineParts, gpu: GpuSpec) -> OwnedEngine {
+        let sess = parts.engine(&ctx, gpu.clone()).session();
+        OwnedEngine { ctx, parts, gpu, sess }
+    }
 }
 
 impl Decoder for OwnedEngine {
-    fn decode_batch(
-        &mut self,
-        prompts: &[Vec<usize>],
-        max_output: usize,
-    ) -> anyhow::Result<(Vec<Vec<usize>>, Report)> {
-        self.parts.engine(&self.ctx, self.gpu.clone()).decode_batch(prompts, max_output)
+    fn admit(&mut self, prompt: &[usize], max_output: usize) -> anyhow::Result<u64> {
+        let engine: Engine = self.parts.engine(&self.ctx, self.gpu.clone());
+        engine.admit(&mut self.sess, prompt, max_output)
+    }
+
+    fn step(&mut self) -> anyhow::Result<Vec<SeqFinish>> {
+        let engine: Engine = self.parts.engine(&self.ctx, self.gpu.clone());
+        engine.step(&mut self.sess)
+    }
+
+    fn active(&self) -> usize {
+        self.sess.active()
+    }
+
+    fn now(&self) -> f64 {
+        self.sess.now()
     }
 }
 
@@ -41,6 +64,7 @@ fn main() -> anyhow::Result<()> {
     let n_requests = args.get_usize("requests", 16)?;
     let max_output = args.get_usize("tokens", 24)?;
     let max_batch = args.get_usize("batch", 4)?;
+    let scheduler = SchedulerMode::parse(args.get_or("scheduler", "continuous"))?;
 
     // workload: held-out dolly-syn prompts
     let ctx0 = Ctx::load(&melinoe::artifacts_dir(), &preset)?;
@@ -61,16 +85,19 @@ fn main() -> anyhow::Result<()> {
         "moe-infinity" => PolicyConfig::moe_infinity(capacity),
         _ => PolicyConfig::base_offload(capacity),
     };
-    println!("serving {preset} with policy {} (variant {})", policy.name, policy.variant);
+    println!(
+        "serving {preset} with policy {} (variant {}), {scheduler:?} scheduler",
+        policy.name, policy.variant
+    );
 
     let gpu2 = gpu.clone();
     let server = Server::start(
         move || {
             let ctx = Ctx::load(&melinoe::artifacts_dir(), &preset2)?;
             let parts = ctx.parts(&policy, "dolly")?;
-            Ok(OwnedEngine { ctx, parts, gpu: gpu2 })
+            Ok(OwnedEngine::new(ctx, parts, gpu2))
         },
-        ServerConfig { max_batch, batch_wait: Duration::from_millis(5), max_output },
+        ServerConfig { max_batch, batch_wait: Duration::from_millis(5), max_output, scheduler },
     );
 
     // arrival process: burst (default) or open-loop poisson:<rate>
@@ -99,34 +126,27 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     let mut tokens = 0usize;
-    let mut sims = Vec::new();
-    let mut waits = Vec::new();
-    let mut batch_sizes = Vec::new();
     for rx in rxs {
-        let r = rx.recv()?;
-        tokens += r.tokens.len();
-        sims.push(r.sim_seconds);
-        waits.push(r.queue_wait * 1e3);
-        batch_sizes.push(r.batch_size);
+        tokens += rx.recv()?.tokens.len();
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.shutdown()?;
 
-    sims.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |v: &[f64], p: f64| v[((p / 100.0 * (v.len() - 1) as f64) as usize).min(v.len() - 1)];
-
     let mut t = Table::new(&["metric", "value"]);
     t.row(vec!["requests".into(), stats.requests.to_string()]);
-    t.row(vec!["batches / mean size".into(), format!("{} / {:.2}", stats.batches, stats.mean_batch_size)]);
+    t.row(vec![
+        "token steps / mean occupancy".into(),
+        format!("{} / {:.2}", stats.steps, stats.mean_batch_size),
+    ]);
     t.row(vec!["output tokens".into(), tokens.to_string()]);
     t.row(vec![
         "sim throughput (tok/s)".into(),
         fmt2(tokens as f64 / stats.total_sim_seconds.max(1e-9)),
     ]);
-    t.row(vec!["sim latency p50 (s)".into(), fmt2(pct(&sims, 50.0))]);
-    t.row(vec!["sim latency p95 (s)".into(), fmt2(pct(&sims, 95.0))]);
-    t.row(vec!["queue wait p50 (ms)".into(), fmt2(pct(&waits, 50.0))]);
+    t.row(vec!["ttft p50/p95/p99 (s)".into(), stats.ttft.cell(1.0)]);
+    t.row(vec!["tpot p50/p95/p99 (ms)".into(), stats.tpot.cell(1e3)]);
+    t.row(vec!["sim latency p50/p95/p99 (s)".into(), stats.sim_latency.cell(1.0)]);
+    t.row(vec!["queue wait p50/p95/p99 (ms)".into(), stats.queue_wait.cell(1e3)]);
     t.row(vec!["wallclock total (s)".into(), fmt2(wall)]);
     t.row(vec![
         "wallclock per request (s)".into(),

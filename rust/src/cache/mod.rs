@@ -28,7 +28,13 @@ pub enum EvictionKind {
 impl EvictionKind {
     pub fn parse(s: &str) -> anyhow::Result<EvictionKind> {
         if let Some(g) = s.strip_prefix("gamma:") {
-            return Ok(EvictionKind::Gamma(g.parse()?));
+            let g: f64 = g.parse()?;
+            // the γ-cache discount (Definition C.1) is only defined on
+            // [0, 1]; NaN fails the range check too
+            if !(0.0..=1.0).contains(&g) {
+                anyhow::bail!("gamma must be in [0, 1] (0≈LRU, 1=LFU), got {g}");
+            }
+            return Ok(EvictionKind::Gamma(g));
         }
         Ok(match s {
             "lru" => EvictionKind::Lru,
@@ -173,19 +179,56 @@ impl LayerCache {
         loads
     }
 
+    /// Additive prefetch refresh (mid-flight admission under continuous
+    /// batching): load the target experts *without* dropping warm
+    /// residents unless capacity forces it, and then only by evicting
+    /// residents outside the target set in normal policy order — a
+    /// refresh can never evict the planned working set.  On a cold cache
+    /// this equals [`LayerCache::prefill`].  Returns the experts loaded.
+    pub fn prefill_union(&mut self, experts: &[usize]) -> Vec<usize> {
+        if self.capacity == 0 {
+            return Vec::new();
+        }
+        let target: HashSet<usize> = experts.iter().copied().take(self.capacity).collect();
+        let mut loads = Vec::new();
+        for &e in experts.iter().take(self.capacity) {
+            if self.resident.contains(&e) {
+                continue;
+            }
+            if self.resident.len() >= self.capacity {
+                let victim = self
+                    .resident
+                    .iter()
+                    .copied()
+                    .filter(|r| !target.contains(r))
+                    .min_by(|&a, &b| self.eviction_rank(a, b));
+                let Some(victim) = victim else { break };
+                self.resident.remove(&victim);
+                self.stats.evictions += 1;
+            }
+            self.resident.insert(e);
+            self.stats.prefetch_loads += 1;
+            loads.push(e);
+        }
+        loads
+    }
+
+    /// Policy ordering for victim selection (smaller = evicted first).
+    fn eviction_rank(&self, a: usize, b: usize) -> std::cmp::Ordering {
+        let (sa, sb) = match self.kind {
+            EvictionKind::Lru => (self.last_used[a] as f64, self.last_used[b] as f64),
+            EvictionKind::Lfu | EvictionKind::Gamma(_) => (self.counts[a], self.counts[b]),
+        };
+        sa.total_cmp(&sb).then(a.cmp(&b))
+    }
+
     fn pick_victim(&self, pinned: &[usize], incoming: usize) -> Option<usize> {
         let pinned: HashSet<usize> = pinned.iter().copied().collect();
         self.resident
             .iter()
             .copied()
             .filter(|e| !pinned.contains(e) && *e != incoming)
-            .min_by(|&a, &b| {
-                let (sa, sb) = match self.kind {
-                    EvictionKind::Lru => (self.last_used[a] as f64, self.last_used[b] as f64),
-                    EvictionKind::Lfu | EvictionKind::Gamma(_) => (self.counts[a], self.counts[b]),
-                };
-                sa.partial_cmp(&sb).unwrap().then(a.cmp(&b))
-            })
+            .min_by(|&a, &b| self.eviction_rank(a, b))
     }
 }
 
@@ -250,6 +293,21 @@ mod tests {
             }
         }
         c
+    }
+
+    #[test]
+    fn parse_validates_gamma_range() {
+        assert_eq!(EvictionKind::parse("lru").unwrap(), EvictionKind::Lru);
+        assert_eq!(EvictionKind::parse("lfu").unwrap(), EvictionKind::Lfu);
+        assert_eq!(EvictionKind::parse("gamma:0.5").unwrap(), EvictionKind::Gamma(0.5));
+        assert_eq!(EvictionKind::parse("gamma:0").unwrap(), EvictionKind::Gamma(0.0));
+        assert_eq!(EvictionKind::parse("gamma:1.0").unwrap(), EvictionKind::Gamma(1.0));
+        for bad in ["gamma:-0.1", "gamma:1.01", "gamma:NaN", "gamma:nan", "gamma:inf"] {
+            let err = EvictionKind::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("gamma must be in [0, 1]"), "{bad}: {err}");
+        }
+        assert!(EvictionKind::parse("gamma:x").is_err());
+        assert!(EvictionKind::parse("mru").is_err());
     }
 
     #[test]
@@ -335,6 +393,39 @@ mod tests {
         assert_eq!(c.resident_len(), 4);
         assert_eq!(loads.len() + 1, 4); // expert 1 was already resident
         assert_eq!(c.stats.prefetch_loads, 3);
+    }
+
+    #[test]
+    fn prefill_union_is_additive_and_protects_target() {
+        let mut c = LayerCache::new(16, 4, EvictionKind::Lfu);
+        // warm two demand-loaded experts, one of them hot
+        for _ in 0..3 {
+            c.request(7);
+        }
+        c.insert(7, &[]);
+        c.request(9);
+        c.insert(9, &[]);
+        // additive refresh: room for both targets, nothing dropped
+        let loads = c.prefill_union(&[1, 2]);
+        assert_eq!(loads, vec![1, 2]);
+        assert!(c.contains(7) && c.contains(9), "refresh must not drop warm residents");
+        assert_eq!(c.resident_len(), 4);
+        // at capacity: only non-target residents are evictable, coldest
+        // (LFU) first — expert 9 (1 request) goes before expert 7 (3)
+        let loads = c.prefill_union(&[1, 2, 3]);
+        assert_eq!(loads, vec![3]);
+        assert!(!c.contains(9) && c.contains(7));
+        assert_eq!(c.stats.evictions, 1);
+        // when every resident is part of the target, loading just stops
+        let loads = c.prefill_union(&[1, 2, 3, 7, 11]);
+        assert!(c.contains(1) && c.contains(2) && c.contains(3) && c.contains(7));
+        assert!(loads.is_empty() && !c.contains(11));
+        assert_eq!(c.resident_len(), 4);
+        // cold cache: equivalent to prefill
+        let mut cold = LayerCache::new(16, 4, EvictionKind::Lfu);
+        let loads = cold.prefill_union(&[5, 6, 7, 8, 9]);
+        assert_eq!(loads, vec![5, 6, 7, 8]);
+        assert_eq!(cold.resident_len(), 4);
     }
 
     #[test]

@@ -16,16 +16,28 @@ use anyhow::{anyhow, Result};
 
 use super::workload::ClusterRequest;
 
-/// Scheduler-visible snapshot of one replica at dispatch time.
+/// Scheduler-visible snapshot of one replica at dispatch time.  Under
+/// the step-granular serving loop this is *live* state — slot occupancy
+/// and queue depth at the arrival instant, not an epoch-boundary echo.
 #[derive(Debug, Clone)]
 pub struct ReplicaView {
     pub id: usize,
+    /// Requests queued behind the decode slots.
     pub queue_depth: usize,
+    /// Sequences currently occupying decode slots (in flight).
+    pub slots_in_use: usize,
     /// The replica's simulated clock (when it would next be free).
     pub busy_until: f64,
     /// Fraction of the request's predicted expert set resident (or
     /// planned-resident) on this replica, in [0, 1].
     pub overlap: f64,
+}
+
+impl ReplicaView {
+    /// Total outstanding work: queued plus in-flight.
+    pub fn load(&self) -> usize {
+        self.queue_depth + self.slots_in_use
+    }
 }
 
 pub trait Balancer {
@@ -60,7 +72,8 @@ impl Balancer for RoundRobin {
     }
 }
 
-/// Join the shortest queue; break ties toward the earliest-free replica.
+/// Join the least outstanding work (queued + in-flight); break ties
+/// toward the earliest-free replica.
 #[derive(Debug, Default)]
 pub struct LeastLoaded;
 
@@ -74,9 +87,7 @@ impl Balancer for LeastLoaded {
         let mut best = 0usize;
         for i in 1..views.len() {
             let (v, b) = (&views[i], &views[best]);
-            if v.queue_depth < b.queue_depth
-                || (v.queue_depth == b.queue_depth && v.busy_until < b.busy_until)
-            {
+            if v.load() < b.load() || (v.load() == b.load() && v.busy_until < b.busy_until) {
                 best = i;
             }
         }
@@ -103,7 +114,7 @@ impl Default for ExpertAffinity {
 
 impl ExpertAffinity {
     pub fn score(&self, v: &ReplicaView) -> f64 {
-        v.overlap - self.load_penalty * v.queue_depth as f64
+        v.overlap - self.load_penalty * v.load() as f64
     }
 }
 
@@ -153,12 +164,20 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn view(id: usize, depth: usize, busy: f64, overlap: f64) -> ReplicaView {
-        ReplicaView { id, queue_depth: depth, busy_until: busy, overlap }
+        ReplicaView { id, queue_depth: depth, slots_in_use: 0, busy_until: busy, overlap }
     }
 
     fn random_views(r: &mut Rng) -> Vec<ReplicaView> {
         let n = r.range(1, 9);
-        (0..n).map(|i| view(i, r.below(12), r.f64() * 10.0, r.f64())).collect()
+        (0..n)
+            .map(|i| ReplicaView {
+                id: i,
+                queue_depth: r.below(12),
+                slots_in_use: r.below(5),
+                busy_until: r.f64() * 10.0,
+                overlap: r.f64(),
+            })
+            .collect()
     }
 
     #[test]
@@ -176,6 +195,19 @@ mod tests {
         let req = ClusterRequest::probe(0);
         let views = vec![view(0, 3, 0.0, 0.0), view(1, 1, 5.0, 0.0), view(2, 1, 2.0, 0.0)];
         assert_eq!(b.pick(&req, &views), 2);
+    }
+
+    #[test]
+    fn least_loaded_counts_live_slots() {
+        let mut b = LeastLoaded;
+        let req = ClusterRequest::probe(0);
+        // replica 0 has the shorter queue but more sequences in flight
+        let views = vec![
+            ReplicaView { id: 0, queue_depth: 1, slots_in_use: 4, busy_until: 0.0, overlap: 0.0 },
+            ReplicaView { id: 1, queue_depth: 2, slots_in_use: 0, busy_until: 9.0, overlap: 0.0 },
+        ];
+        assert_eq!(b.pick(&req, &views), 1);
+        assert_eq!(views[0].load(), 5);
     }
 
     #[test]

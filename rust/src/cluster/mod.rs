@@ -12,12 +12,17 @@
 //!
 //! Structure:
 //! * [`workload`] — open-loop Poisson arrivals over per-task routing
-//!   profiles (pre-drawn traces: all balancers see identical traffic).
-//! * [`replica`]  — one GPU's cache/PCIe/VRAM/clock stack, driven through
-//!   the coordinator's [`Decoder`](crate::coordinator::Decoder) trait.
-//! * [`balancer`] — RoundRobin / LeastLoaded / ExpertAffinity dispatch.
-//! * [`run_cluster`] — the lockstep-epoch event loop + fleet metrics
-//!   (throughput, hit-rate, queue/latency percentiles, PCIe per replica).
+//!   profiles (pre-drawn traces: all balancers see identical traffic),
+//!   with per-request output lengths (skew is continuous batching's win
+//!   case).
+//! * [`replica`]  — one GPU's cache/PCIe/VRAM/clock stack with a
+//!   step-granular decode loop: slots admit mid-flight and sequences
+//!   retire at trace end (see [`crate::coordinator::SchedulerMode`]).
+//! * [`balancer`] — RoundRobin / LeastLoaded / ExpertAffinity dispatch
+//!   against *live* slot occupancy.
+//! * [`run_cluster`] — the arrival-driven event loop + fleet metrics
+//!   (throughput, hit-rate, queue/TTFT/latency percentiles, PCIe per
+//!   replica).
 
 pub mod balancer;
 pub mod replica;
@@ -27,11 +32,12 @@ use anyhow::Result;
 
 use crate::clock::GpuSpec;
 use crate::coordinator::workload::Arrival;
+use crate::coordinator::SchedulerMode;
 use crate::metrics::{fmt2, Percentiles, Table};
 
 use balancer::{Balancer, ReplicaView};
-use replica::{Completion, Replica, ReplicaSpec, SimComputeDecoder};
-use workload::{ClusterRequest, TaskProfile, WorkloadSpec};
+use replica::{Completion, Replica, ReplicaSpec};
+use workload::{ClusterRequest, OutputLen, TaskProfile, WorkloadSpec};
 
 /// The three stock balancers, in comparison-table order.
 pub const BALANCERS: &[&str] = &["round-robin", "least-loaded", "expert-affinity"];
@@ -40,15 +46,17 @@ pub const BALANCERS: &[&str] = &["round-robin", "least-loaded", "expert-affinity
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
     pub replicas: usize,
-    /// Lockstep dynamic-batch bound per replica.
+    /// Decode slots per replica.
     pub max_batch: usize,
     /// Admission bound: no replica's queue may exceed this depth.  When
-    /// the balancer's choice is full the dispatcher sheds to the
-    /// least-loaded replica; when *every* replica is full, admission
-    /// back-pressures to the next epoch (lossless).
+    /// the balancer's choice is full the dispatcher sheds to the replica
+    /// with the fewest queued requests; when *every* replica is full, the
+    /// fleet advances step by step until a slot drains (lossless
+    /// back-pressure).
     pub max_queue: usize,
-    /// Lockstep epoch length (simulated seconds).
-    pub epoch: f64,
+    /// How replicas fill decode slots: step-level continuous batching or
+    /// legacy run-to-completion batches.
+    pub scheduler: SchedulerMode,
     pub spec: ReplicaSpec,
     pub workload: WorkloadSpec,
     pub tasks: Vec<TaskProfile>,
@@ -82,13 +90,13 @@ impl ClusterConfig {
             replicas: replicas.max(1),
             max_batch: 4,
             max_queue: n_requests.max(8),
-            epoch: (est / 4.0).max(1e-6),
+            scheduler: SchedulerMode::Continuous,
             spec,
             workload: WorkloadSpec {
                 n_requests,
                 arrival: Arrival::Poisson(rate),
                 prompt_tokens,
-                max_output,
+                output: OutputLen::Fixed(max_output),
                 balanced_tasks: true,
                 seed,
             },
@@ -103,6 +111,16 @@ impl ClusterConfig {
 
     pub fn with_max_queue(mut self, bound: usize) -> ClusterConfig {
         self.max_queue = bound.max(1);
+        self
+    }
+
+    pub fn with_scheduler(mut self, scheduler: SchedulerMode) -> ClusterConfig {
+        self.scheduler = scheduler;
+        self
+    }
+
+    pub fn with_output(mut self, output: OutputLen) -> ClusterConfig {
+        self.workload.output = output;
         self
     }
 
@@ -135,6 +153,7 @@ pub struct ReplicaSummary {
 #[derive(Debug, Clone)]
 pub struct ClusterReport {
     pub balancer: String,
+    pub scheduler: SchedulerMode,
     pub n_requests: usize,
     pub output_tokens: usize,
     /// Last completion time (simulated seconds).
@@ -144,69 +163,83 @@ pub struct ClusterReport {
     /// Aggregate expert-cache hit rate across all replicas.
     pub hit_rate: f64,
     pub queue_wait: Percentiles,
+    /// Arrival → first output token (the serving TTFT).
+    pub ttft: Percentiles,
+    /// Time per output token after the first.
+    pub tpot: Percentiles,
+    /// Arrival → retirement.
     pub latency: Percentiles,
     /// Total H2D traffic across the fleet, GB.
     pub pcie_gb: f64,
     pub replicas: Vec<ReplicaSummary>,
 }
 
-/// Run one cluster simulation: admit arrivals epoch by epoch, dispatch
-/// through `bal`, advance every replica's clock in lockstep, aggregate.
+/// Run one cluster simulation, arrival by arrival: bring the fleet's
+/// clocks up to each arrival instant (replicas admit and step
+/// continuously along the way), dispatch through `bal` against live slot
+/// occupancy, and drain.  No lockstep epochs: a freed slot on one
+/// replica re-admits from its queue immediately, regardless of what the
+/// rest of the fleet is doing.
 pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<ClusterReport> {
     let requests = cfg.requests();
-    let mut reps: Vec<Replica<SimComputeDecoder>> = (0..cfg.replicas.max(1))
-        .map(|i| Replica::new(i, cfg.spec.clone(), SimComputeDecoder::new(&cfg.spec)))
+    let mut reps: Vec<Replica> = (0..cfg.replicas.max(1))
+        .map(|i| Replica::new(i, cfg.spec.clone(), cfg.scheduler))
         .collect();
-    let epoch = cfg.epoch.max(1e-9);
     let max_queue = cfg.max_queue.max(1);
-    // shed policy when the balancer's choice is at the admission bound
-    let mut shed = balancer::LeastLoaded;
-    let mut next = 0usize;
-    let mut t = 0.0f64;
-    while next < requests.len() || reps.iter().any(|r| r.queue_depth() > 0) {
-        let horizon = t + epoch;
-        // admit this epoch's arrivals
-        while next < requests.len() && requests[next].at < horizon {
-            if reps.iter().all(|r| r.queue_depth() >= max_queue) {
-                break; // fleet full: back-pressure to the next epoch
-            }
-            let req = &requests[next];
-            let views: Vec<ReplicaView> = reps
-                .iter()
-                .map(|r| ReplicaView {
-                    id: r.id,
-                    queue_depth: r.queue_depth(),
-                    busy_until: r.busy_until(),
-                    overlap: r.affinity_overlap(&req.plan),
-                })
-                .collect();
-            let mut choice = bal.pick(req, &views).min(reps.len() - 1);
-            if reps[choice].queue_depth() >= max_queue {
-                choice = shed.pick(req, &views);
-            }
-            reps[choice].enqueue(req.clone());
-            next += 1;
-        }
-        // advance every replica to the epoch boundary in lockstep
+    for req in &requests {
+        // advance every replica to the arrival instant so dispatch sees
+        // live slot occupancy, not an epoch-boundary snapshot
         for r in &mut reps {
-            r.run_until(horizon, cfg.max_batch)?;
+            r.run_until(req.at, cfg.max_batch);
         }
-        t = horizon;
-        // fast-forward across idle gaps between sparse arrivals
-        if next < requests.len()
-            && requests[next].at > t
-            && reps.iter().all(|r| r.queue_depth() == 0)
-        {
-            t = requests[next].at;
+        // lossless back-pressure: when every queue is at the admission
+        // bound, step the least-advanced replica until a queue drains
+        while reps.iter().all(|r| r.queue_depth() >= max_queue) {
+            let i = reps
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.has_work())
+                .min_by(|(_, a), (_, b)| a.clock.now().total_cmp(&b.clock.now()))
+                .map(|(i, _)| i)
+                .expect("full queues imply outstanding work");
+            reps[i].run_one_step(cfg.max_batch);
         }
+        let views: Vec<ReplicaView> = reps
+            .iter()
+            .map(|r| ReplicaView {
+                id: r.id,
+                queue_depth: r.queue_depth(),
+                slots_in_use: r.slots_in_use(),
+                busy_until: r.busy_until(),
+                overlap: r.affinity_overlap(&req.plan),
+            })
+            .collect();
+        let mut choice = bal.pick(req, &views).min(reps.len() - 1);
+        if reps[choice].queue_depth() >= max_queue {
+            // shed to the fewest-queued replica with room (ties toward
+            // the earliest-free clock)
+            choice = views
+                .iter()
+                .filter(|v| v.queue_depth < max_queue)
+                .min_by(|a, b| {
+                    a.queue_depth.cmp(&b.queue_depth).then(a.busy_until.total_cmp(&b.busy_until))
+                })
+                .map(|v| v.id)
+                .expect("back-pressure loop freed a queue");
+        }
+        reps[choice].enqueue(req.clone());
+    }
+    for r in &mut reps {
+        r.run_until(f64::INFINITY, cfg.max_batch);
     }
 
     // aggregate fleet metrics
-    let completions: Vec<&Completion> =
-        reps.iter().flat_map(|r| r.completions.iter()).collect();
+    let completions: Vec<&Completion> = reps.iter().flat_map(|r| r.completions.iter()).collect();
     let output_tokens: usize = completions.iter().map(|c| c.output_tokens).sum();
     let makespan = completions.iter().map(|c| c.finished).fold(0.0f64, f64::max);
     let queue_waits: Vec<f64> = completions.iter().map(|c| c.queue_wait()).collect();
+    let ttfts: Vec<f64> = completions.iter().map(|c| c.ttft()).collect();
+    let tpots: Vec<f64> = completions.iter().map(|c| c.tpot()).collect();
     let latencies: Vec<f64> = completions.iter().map(|c| c.latency()).collect();
     let (mut hits, mut lookups) = (0u64, 0u64);
     let mut pcie_bytes = 0.0f64;
@@ -232,12 +265,15 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         .collect();
     Ok(ClusterReport {
         balancer: bal.name().to_string(),
+        scheduler: cfg.scheduler,
         n_requests: completions.len(),
         output_tokens,
         makespan,
         tokens_per_sec: if makespan > 0.0 { output_tokens as f64 / makespan } else { 0.0 },
         hit_rate: if lookups > 0 { hits as f64 / lookups as f64 } else { 0.0 },
         queue_wait: Percentiles::of(&queue_waits),
+        ttft: Percentiles::of(&ttfts),
+        tpot: Percentiles::of(&tpots),
         latency: Percentiles::of(&latencies),
         pcie_gb: pcie_bytes / 1e9,
         replicas,
@@ -298,7 +334,7 @@ mod tests {
         cfg.spec.capacity = 8;
         cfg.tasks = TaskProfile::synthetic(4, 4, 32, 8, 0.92);
         cfg.workload.prompt_tokens = 2;
-        cfg.workload.max_output = 8;
+        cfg.workload.output = OutputLen::Fixed(8);
         cfg
     }
 
@@ -338,8 +374,7 @@ mod tests {
     fn affinity_beats_round_robin_on_heterogeneous_traffic() {
         // burst arrivals saturate the fleet, so makespan (and therefore
         // tokens/s) is determined by serving efficiency alone
-        let cfg =
-            small_cfg(4, 17).with_arrival(crate::coordinator::workload::Arrival::Burst);
+        let cfg = small_cfg(4, 17).with_arrival(crate::coordinator::workload::Arrival::Burst);
         let reports = compare(&cfg, BALANCERS).unwrap();
         let rr = &reports[0];
         let affinity = &reports[2];
@@ -359,9 +394,10 @@ mod tests {
         assert!(affinity.pcie_gb < rr.pcie_gb);
     }
 
-    /// Property: for random fleet sizes, admission bounds, balancers and
-    /// seeds, the cluster loop dispatches every arrival exactly once and
-    /// never lets a replica's queue exceed the admission bound.
+    /// Property: for random fleet sizes, admission bounds, balancers,
+    /// scheduler modes and seeds, the cluster loop dispatches every
+    /// arrival exactly once and never lets a replica's queue exceed the
+    /// admission bound.
     #[test]
     fn prop_dispatch_once_and_admission_bound() {
         use crate::util::prop::check_no_shrink;
@@ -371,15 +407,21 @@ mod tests {
                 let replicas = r.range(1, 5);
                 let bound = r.range(1, 6);
                 let balancer_idx = r.below(BALANCERS.len());
+                let continuous = r.below(2) == 0;
                 let seed = r.next_u64();
-                (replicas, bound, balancer_idx, seed)
+                (replicas, bound, balancer_idx, continuous, seed)
             },
-            |&(replicas, bound, balancer_idx, seed)| {
+            |&(replicas, bound, balancer_idx, continuous, seed)| {
                 let mut cfg = small_cfg(replicas, seed);
                 cfg.workload.n_requests = 12;
                 cfg = cfg
                     .with_arrival(crate::coordinator::workload::Arrival::Burst)
-                    .with_max_queue(bound);
+                    .with_max_queue(bound)
+                    .with_scheduler(if continuous {
+                        SchedulerMode::Continuous
+                    } else {
+                        SchedulerMode::Static
+                    });
                 let mut b = balancer::by_name(BALANCERS[balancer_idx]).unwrap();
                 let rep = run_cluster(&cfg, b.as_mut()).unwrap();
                 let total: usize = rep.replicas.iter().map(|r| r.requests).sum();
@@ -391,15 +433,16 @@ mod tests {
     }
 
     #[test]
-    fn identical_traffic_across_balancers() {
-        // the comparison is meaningful only if the workload is identical
+    fn identical_traffic_across_balancers_and_schedulers() {
+        // comparisons are meaningful only if the workload is identical
         let cfg = small_cfg(2, 19);
         let a = cfg.requests();
-        let b = cfg.requests();
+        let b = cfg.clone().with_scheduler(SchedulerMode::Static).requests();
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.at, y.at);
             assert_eq!(x.task, y.task);
+            assert_eq!(x.max_output, y.max_output);
             assert_eq!(x.routing, y.routing);
         }
     }
@@ -409,15 +452,14 @@ mod tests {
         let cfg = small_cfg(2, 23);
         let mut b = balancer::by_name("expert-affinity").unwrap();
         let rep = run_cluster(&cfg, b.as_mut()).unwrap();
-        assert_eq!(
-            rep.output_tokens,
-            cfg.workload.n_requests * cfg.workload.max_output
-        );
+        assert_eq!(rep.output_tokens, cfg.workload.n_requests * cfg.workload.output.cap());
         assert!(rep.makespan > 0.0);
         assert!(rep.tokens_per_sec > 0.0);
         assert!((0.0..=1.0).contains(&rep.hit_rate));
         assert!(rep.latency.p50 <= rep.latency.p99);
         assert!(rep.queue_wait.p50 <= rep.queue_wait.p99);
+        assert!(rep.ttft.p50 <= rep.latency.p50, "first token lands before retirement");
+        assert!(rep.tpot.p50 > 0.0);
         let per_replica_gb: f64 = rep.replicas.iter().map(|r| r.pcie_gb).sum();
         assert!((per_replica_gb - rep.pcie_gb).abs() < 1e-9);
         let table = comparison_table(&[rep]);

@@ -1,26 +1,30 @@
-//! A serving replica: one GPU's memory hierarchy plus a decoder.
+//! A serving replica: one GPU's memory hierarchy plus a step-granular
+//! decode loop.
 //!
 //! Each [`Replica`] owns the full single-GPU simulation stack — per-layer
 //! [`ExpertCache`]s, a [`TransferEngine`] for PCIe accounting, a VRAM
-//! budget-derived capacity, and its own [`SimClock`] — and is driven
-//! through the existing [`Decoder`] trait, so the cluster scheduler is
-//! testable with the same mocks the coordinator tests use.
+//! budget-derived capacity, and its own [`SimClock`] — and serves its
+//! queue the way the engine's `DecodeSession` does: sequences occupy
+//! decode slots, every [`Replica::run_one_step`] advances the whole live
+//! batch one token, and a sequence retires the moment its trace ends, so
+//! its slot re-admits from the queue *mid-flight* (continuous batching).
+//! [`SchedulerMode::Static`] gates admission on an empty slot set,
+//! recovering the legacy run-to-completion batch for comparison.
 //!
-//! Costing follows the engine's Eq. 3 decomposition: the decoder supplies
-//! `Time_compute` for a batch, and the replica replays the batch's
-//! pre-drawn routing trace against its *persistent* caches to add the
-//! `N_miss · Time_transfer` term.  Persistence across requests is the
-//! point: a replica that keeps serving the same task's traffic stays
-//! hit-bound, which is what affinity routing exploits.
+//! Costing follows the engine's Eq. 3 decomposition at step granularity:
+//! each step charges batch-amortized attention/head plus grouped expert
+//! execution over the step's *actual* distinct-expert working set, and
+//! replays the batch's pre-drawn routing traces against the *persistent*
+//! caches to add the `N_miss · Time_transfer` term.  Persistence across
+//! requests is the point: a replica that keeps serving the same task's
+//! traffic stays hit-bound, which is what affinity routing exploits —
+//! and what makes mid-flight admission of same-task requests cheap.
 
 use std::collections::VecDeque;
 
-use anyhow::Result;
-
 use crate::cache::{EvictionKind, ExpertCache};
 use crate::clock::{CostModel, GpuSpec, PaperDims, SimClock};
-use crate::coordinator::Decoder;
-use crate::metrics::{Report, RequestMetrics};
+use crate::coordinator::SchedulerMode;
 use crate::pcie::TransferEngine;
 use crate::predictor::PrefetchPlan;
 use crate::quant::QuantMode;
@@ -38,7 +42,7 @@ pub struct ReplicaSpec {
     pub capacity: usize,
     pub eviction: EvictionKind,
     pub quant: QuantMode,
-    /// Apply the request's predictor prefetch plan at batch start.
+    /// Refresh the union prefetch plan of the in-flight set on admission.
     pub prefetch: bool,
     pub gpu: GpuSpec,
     pub dims: PaperDims,
@@ -80,8 +84,8 @@ impl ReplicaSpec {
         CostModel::new(self.gpu.clone(), self.dims)
     }
 
-    /// Analytic compute-only service time of one request (no transfer
-    /// stalls) — used to auto-scale offered load.
+    /// Analytic compute-only service time of one request decoded alone
+    /// (no transfer stalls) — used to auto-scale offered load.
     pub fn est_service_seconds(&self, prompt_tokens: usize, max_output: usize) -> f64 {
         let cost = self.cost_model();
         let steps = (prompt_tokens + max_output) as f64;
@@ -92,67 +96,16 @@ impl ReplicaSpec {
     }
 }
 
-/// Analytic compute-time decoder for cluster simulation: batch-amortized
-/// attention/head plus grouped-expert execution, no PJRT required.
-pub struct SimComputeDecoder {
-    cost: CostModel,
-    n_layers: usize,
-    n_experts: usize,
-    top_k: usize,
-    quant: QuantMode,
-}
-
-impl SimComputeDecoder {
-    pub fn new(spec: &ReplicaSpec) -> SimComputeDecoder {
-        SimComputeDecoder {
-            cost: spec.cost_model(),
-            n_layers: spec.n_layers,
-            n_experts: spec.n_experts,
-            top_k: spec.top_k,
-            quant: spec.quant,
-        }
-    }
-}
-
-impl Decoder for SimComputeDecoder {
-    fn decode_batch(
-        &mut self,
-        prompts: &[Vec<usize>],
-        max_output: usize,
-    ) -> Result<(Vec<Vec<usize>>, Report)> {
-        let b = prompts.len().max(1);
-        let prompt_steps = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
-        let steps = prompt_steps + max_output;
-        // distinct experts a lockstep batch step touches is capped by E
-        let unique = (self.top_k * b).min(self.n_experts);
-        let step_time = self.n_layers as f64
-            * (self.cost.attn_time(b)
-                + self.cost.expert_exec_time(unique, self.top_k * b, self.quant))
-            + self.cost.head_time(b);
-        let sim = steps as f64 * step_time;
-        let ttft = prompt_steps as f64 * step_time;
-        let outputs: Vec<Vec<usize>> = prompts.iter().map(|_| vec![1usize; max_output]).collect();
-        let mut report = Report::default();
-        for p in prompts {
-            report.requests.push(RequestMetrics {
-                prompt_tokens: p.len(),
-                output_tokens: max_output,
-                sim_seconds: sim,
-                sim_ttft: ttft,
-                wall_seconds: 0.0,
-            });
-        }
-        Ok((outputs, report))
-    }
-}
-
 /// One finished request, in the replica's simulated timeline.
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub request_id: u64,
     pub task: usize,
     pub arrival: f64,
+    /// Admitted into a decode slot.
     pub started: f64,
+    /// First output token landed.
+    pub first_token: f64,
     pub finished: f64,
     pub output_tokens: usize,
 }
@@ -162,21 +115,44 @@ impl Completion {
         (self.started - self.arrival).max(0.0)
     }
 
+    /// Time-to-first-token from arrival.
+    pub fn ttft(&self) -> f64 {
+        (self.first_token - self.arrival).max(0.0)
+    }
+
+    /// Time per output token after the first.
+    pub fn tpot(&self) -> f64 {
+        if self.output_tokens <= 1 {
+            return 0.0;
+        }
+        (self.finished - self.first_token).max(0.0) / (self.output_tokens - 1) as f64
+    }
+
     pub fn latency(&self) -> f64 {
         (self.finished - self.arrival).max(0.0)
     }
 }
 
+/// One in-flight sequence: its pre-drawn request plus a step cursor into
+/// the routing trace.
+struct ActiveSeq {
+    req: ClusterRequest,
+    step: usize,
+    started: f64,
+    first_token: f64,
+}
+
 /// One serving replica (see module docs).
-pub struct Replica<D: Decoder> {
+pub struct Replica {
     pub id: usize,
     pub spec: ReplicaSpec,
-    decoder: D,
     cost: CostModel,
     pub cache: ExpertCache,
     pub pcie: TransferEngine,
     pub clock: SimClock,
+    scheduler: SchedulerMode,
     queue: VecDeque<ClusterRequest>,
+    in_flight: Vec<ActiveSeq>,
     /// Prefetch plan of the most recently enqueued request: the replica's
     /// *planned* residency, which the affinity scorer may consult before
     /// the caches have warmed (burst arrivals dispatch ahead of decode).
@@ -186,19 +162,20 @@ pub struct Replica<D: Decoder> {
     pub peak_queue_depth: usize,
 }
 
-impl<D: Decoder> Replica<D> {
-    pub fn new(id: usize, spec: ReplicaSpec, decoder: D) -> Replica<D> {
+impl Replica {
+    pub fn new(id: usize, spec: ReplicaSpec, scheduler: SchedulerMode) -> Replica {
         let cache = ExpertCache::new(spec.n_layers, spec.n_experts, spec.capacity, spec.eviction);
         let cost = spec.cost_model();
         Replica {
             id,
             spec,
-            decoder,
             cost,
             cache,
             pcie: TransferEngine::new(),
             clock: SimClock::new(),
+            scheduler,
             queue: VecDeque::new(),
+            in_flight: Vec::new(),
             last_plan: None,
             completions: Vec::new(),
             busy_seconds: 0.0,
@@ -214,6 +191,15 @@ impl<D: Decoder> Replica<D> {
 
     pub fn queue_depth(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Live decode-slot occupancy (the in-flight sequence count).
+    pub fn slots_in_use(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.in_flight.is_empty() || !self.queue.is_empty()
     }
 
     pub fn busy_until(&self) -> f64 {
@@ -250,107 +236,174 @@ impl<D: Decoder> Replica<D> {
         }
     }
 
-    /// Serve queued requests until this replica's clock reaches `horizon`
-    /// (a batch started before the horizon runs to completion, so clocks
-    /// may overshoot by one batch — the lockstep-epoch convention).
-    pub fn run_until(&mut self, horizon: f64, max_batch: usize) -> Result<()> {
-        loop {
-            let start = match self.queue.front() {
-                Some(front) => self.clock.now().max(front.at),
-                None => break,
-            };
-            if start >= horizon {
+    /// Admit queued, already-arrived requests into free slots.  Static
+    /// mode only opens admission once every slot has drained (the
+    /// run-to-completion batch); continuous mode admits at every step.
+    fn admit_ready(&mut self, max_batch: usize) {
+        let open = match self.scheduler {
+            SchedulerMode::Continuous => true,
+            SchedulerMode::Static => self.in_flight.is_empty(),
+        };
+        if !open {
+            return;
+        }
+        while self.in_flight.len() < max_batch.max(1) {
+            let ready = matches!(self.queue.front(), Some(r) if r.at <= self.clock.now());
+            if !ready {
                 break;
             }
-            // form a batch from requests that have arrived by `start`
-            let mut batch = vec![self.queue.pop_front().unwrap()];
-            while batch.len() < max_batch.max(1) {
-                let take = matches!(self.queue.front(), Some(r) if r.at <= start);
-                if !take {
-                    break;
+            let req = self.queue.pop_front().unwrap();
+            self.admit_one(req);
+        }
+    }
+
+    /// Put one request into a decode slot: rebuild the union prefetch
+    /// plan of the *live* in-flight set plus the newcomer (in-flight
+    /// plans come first, so capacity ties keep the warm working set) and
+    /// top the cache up additively — the refresh never drops the planned
+    /// working set, and warm residents outside it are evicted only under
+    /// capacity pressure, in normal policy order.
+    fn admit_one(&mut self, req: ClusterRequest) {
+        if self.spec.prefetch {
+            self.clock.advance(self.cost.predictor_time());
+            let mut plans: Vec<&PrefetchPlan> =
+                self.in_flight.iter().map(|a| &a.req.plan).collect();
+            plans.push(&req.plan);
+            let caps = vec![self.spec.capacity; self.spec.n_layers];
+            let union = PrefetchPlan::union_capped(&plans, &caps);
+            for (l, set) in union.per_layer.iter().enumerate() {
+                if set.is_empty() {
+                    continue;
                 }
-                batch.push(self.queue.pop_front().unwrap());
-            }
-            if self.clock.now() < start {
-                let idle = start - self.clock.now();
-                self.clock.advance(idle);
-            }
-            let t_start = self.clock.now();
-
-            // 1. predictor prefetch: prefill each layer with the union of
-            //    the batch's predicted sets (non-blocking transfers that
-            //    occupy the PCIe link — later demand misses queue behind
-            //    them, as in the engine's overlap model).
-            if self.spec.prefetch {
-                self.clock.advance(self.cost.predictor_time());
-                for l in 0..self.spec.n_layers {
-                    let mut target: Vec<usize> = Vec::new();
-                    for req in &batch {
-                        if let Some(set) = req.plan.per_layer.get(l) {
-                            for &e in set {
-                                if !target.contains(&e) {
-                                    target.push(e);
-                                }
-                            }
-                        }
-                    }
-                    if target.is_empty() {
-                        continue;
-                    }
-                    let loads = self.cache.layer(l).prefill(&target);
-                    for _ in loads {
-                        self.pcie.prefetch_h2d(&self.cost, &self.clock, self.spec.quant);
-                    }
+                let loads = self.cache.layer(l).prefill_union(set);
+                for _ in loads {
+                    self.pcie.prefetch_h2d(&self.cost, &self.clock, self.spec.quant);
                 }
-            }
-
-            // 2. compute time from the decoder (Eq. 3's Time_compute)
-            let prompts: Vec<Vec<usize>> =
-                batch.iter().map(|r| vec![r.task; r.prompt_tokens.max(1)]).collect();
-            let max_output = batch.iter().map(|r| r.max_output).max().unwrap_or(0);
-            let (_tokens, report) = self.decoder.decode_batch(&prompts, max_output)?;
-            let compute = report.requests.first().map(|r| r.sim_seconds).unwrap_or(0.0);
-
-            // 3. replay the routing traces against the persistent caches:
-            //    each miss demand-transfers and stalls (Eq. 3's N_miss ·
-            //    Time_transfer)
-            let steps = batch.iter().map(|r| r.routing.len()).max().unwrap_or(0);
-            for step in 0..steps {
-                for req in &batch {
-                    let layers = match req.routing.get(step) {
-                        Some(l) => l,
-                        None => continue,
-                    };
-                    for (l, experts) in layers.iter().enumerate() {
-                        for &e in experts {
-                            let hit = self.cache.layer(l).request(e);
-                            if !hit {
-                                self.pcie.demand_h2d(&self.cost, &mut self.clock, self.spec.quant);
-                                if self.cache.layer(l).insert(e, experts).is_some() {
-                                    self.pcie.evict_d2h(&self.cost, self.spec.quant);
-                                }
-                            }
-                        }
-                    }
-                }
-                self.cache.token_tick();
-            }
-            self.clock.advance(compute);
-
-            let t_end = self.clock.now();
-            self.busy_seconds += t_end - t_start;
-            for req in batch {
-                self.completions.push(Completion {
-                    request_id: req.id,
-                    task: req.task,
-                    arrival: req.at,
-                    started: t_start,
-                    finished: t_end,
-                    output_tokens: req.max_output,
-                });
             }
         }
-        Ok(())
+        let now = self.clock.now();
+        self.in_flight.push(ActiveSeq { req, step: 0, started: now, first_token: now });
+    }
+
+    /// Advance the live batch one token: replay each sequence's routing
+    /// for its current step against the persistent caches (misses
+    /// demand-transfer and stall; the pin set tracks the changing
+    /// in-flight batch so a peer's miss can never evict an expert this
+    /// step executes), then charge the step's batch-amortized compute.
+    /// Sequences whose trace ends retire immediately.
+    fn step_once(&mut self) {
+        let b = self.in_flight.len();
+        debug_assert!(b > 0);
+        let quant = self.spec.quant;
+        let mut compute = self.cost.head_time(b);
+        for l in 0..self.spec.n_layers {
+            // the live batch's routed experts at this layer this step:
+            // the pin set, and the step's distinct-expert working set
+            let mut pinned: Vec<usize> = Vec::new();
+            let mut assignments = 0usize;
+            for seq in &self.in_flight {
+                let Some(experts) = seq.req.routing.get(seq.step).and_then(|s| s.get(l)) else {
+                    continue;
+                };
+                for &e in experts {
+                    assignments += 1;
+                    if !pinned.contains(&e) {
+                        pinned.push(e);
+                    }
+                }
+            }
+            for i in 0..self.in_flight.len() {
+                let step = self.in_flight[i].step;
+                let Some(experts) = self.in_flight[i].req.routing.get(step).and_then(|s| s.get(l))
+                else {
+                    continue;
+                };
+                for &e in experts {
+                    let hit = self.cache.layers[l].request(e);
+                    if !hit {
+                        self.pcie.demand_h2d(&self.cost, &mut self.clock, quant);
+                        if self.cache.layers[l].insert(e, &pinned).is_some() {
+                            self.pcie.evict_d2h(&self.cost, quant);
+                        }
+                    }
+                }
+            }
+            compute += self.cost.attn_time(b)
+                + if pinned.is_empty() {
+                    0.0
+                } else {
+                    self.cost.expert_exec_time(pinned.len(), assignments, quant)
+                };
+        }
+        self.clock.advance(compute);
+        self.cache.token_tick();
+
+        // advance cursors; retire finished sequences immediately — their
+        // slots (and their share of compute and cache traffic) free now
+        let now = self.clock.now();
+        let mut i = 0;
+        while i < self.in_flight.len() {
+            let seq = &mut self.in_flight[i];
+            seq.step += 1;
+            let first_at = seq.req.prompt_tokens.max(1).min(seq.req.routing.len().max(1));
+            if seq.step == first_at {
+                seq.first_token = now;
+            }
+            if seq.step >= seq.req.routing.len() {
+                let seq = self.in_flight.remove(i);
+                self.completions.push(Completion {
+                    request_id: seq.req.id,
+                    task: seq.req.task,
+                    arrival: seq.req.at,
+                    started: seq.started,
+                    first_token: seq.first_token,
+                    finished: now,
+                    output_tokens: seq.req.max_output,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Admit what's ready and advance exactly one token step (fast-
+    /// forwarding an idle clock to the next queued arrival first).
+    pub fn run_one_step(&mut self, max_batch: usize) {
+        if self.in_flight.is_empty() {
+            match self.queue.front() {
+                None => return,
+                Some(r) if r.at > self.clock.now() => {
+                    let dt = r.at - self.clock.now();
+                    self.clock.advance(dt);
+                }
+                _ => {}
+            }
+        }
+        let t0 = self.clock.now();
+        self.admit_ready(max_batch);
+        if self.in_flight.is_empty() {
+            return;
+        }
+        self.step_once();
+        self.busy_seconds += self.clock.now() - t0;
+    }
+
+    /// Serve until this replica's clock reaches `horizon` (a token step
+    /// started before the horizon completes, so the clock may overshoot
+    /// by one step — in-flight sequences stay resumable across calls).
+    pub fn run_until(&mut self, horizon: f64, max_batch: usize) {
+        while self.has_work() {
+            if self.in_flight.is_empty() {
+                // next possible start is the front arrival
+                let at = self.queue.front().map(|r| r.at).unwrap_or(f64::INFINITY);
+                if self.clock.now().max(at) >= horizon {
+                    break;
+                }
+            } else if self.clock.now() >= horizon {
+                break;
+            }
+            self.run_one_step(max_batch);
+        }
     }
 }
 
@@ -375,9 +428,10 @@ fn plan_overlap(a: &PrefetchPlan, b: &PrefetchPlan) -> f64 {
 
 #[cfg(test)]
 mod tests {
-    use super::super::workload::{generate, TaskProfile, WorkloadSpec};
+    use super::super::workload::{generate, OutputLen, TaskProfile, WorkloadSpec};
     use super::*;
     use crate::coordinator::workload::Arrival;
+    use crate::util::rng::Rng;
 
     fn spec() -> ReplicaSpec {
         let mut s = ReplicaSpec::olmoe(GpuSpec::h100());
@@ -395,52 +449,138 @@ mod tests {
             n_requests: n,
             arrival: Arrival::Burst,
             prompt_tokens: 2,
-            max_output: 4,
+            output: OutputLen::Fixed(4),
             balanced_tasks: false,
             seed,
         };
         generate(&wl, &profiles, s.n_layers, s.n_experts, s.top_k)
     }
 
-    #[test]
-    fn replica_serves_all_queued_requests() {
-        let s = spec();
-        let mut r = Replica::new(0, s.clone(), SimComputeDecoder::new(&s));
-        for req in requests(6, 2, 3, &s) {
-            r.enqueue(req);
-        }
-        assert_eq!(r.queue_depth(), 6);
-        assert_eq!(r.peak_queue_depth, 6);
-        r.run_until(f64::INFINITY, 2).unwrap();
-        assert_eq!(r.queue_depth(), 0);
-        assert_eq!(r.completions.len(), 6);
-        assert!(r.clock.now() > 0.0);
-        assert!(r.busy_seconds > 0.0);
-        // every routed expert request was accounted as hit or miss
-        let stats = r.cache.total_stats();
-        assert_eq!(stats.requests(), stats.hits + stats.misses);
-        assert!(stats.requests() > 0);
-        // monotone per-request timeline
-        for c in &r.completions {
-            assert!(c.finished >= c.started);
-            assert!(c.queue_wait() >= 0.0);
-            assert!(c.latency() > 0.0);
+    /// A hand-built request with a chosen output length (slot-reuse and
+    /// early-retirement tests need controlled skew).
+    fn req_with_len(id: u64, out: usize, s: &ReplicaSpec, seed: u64) -> ClusterRequest {
+        let profiles = TaskProfile::synthetic(1, s.n_layers, s.n_experts, s.capacity, 0.9);
+        let mut rng = Rng::new(seed);
+        let prompt_tokens = 1;
+        let routing = (0..prompt_tokens + out)
+            .map(|_| {
+                (0..s.n_layers)
+                    .map(|l| profiles[0].draw(l, s.top_k, s.n_experts, &mut rng))
+                    .collect()
+            })
+            .collect();
+        ClusterRequest {
+            id,
+            task: 0,
+            at: 0.0,
+            prompt_tokens,
+            max_output: out,
+            routing,
+            plan: profiles[0].plan(),
         }
     }
 
     #[test]
-    fn horizon_bounds_batch_starts() {
+    fn replica_serves_all_queued_requests() {
         let s = spec();
-        let mut r = Replica::new(0, s.clone(), SimComputeDecoder::new(&s));
+        let mut r = Replica::new(0, s.clone(), SchedulerMode::Continuous);
+        let reqs = requests(6, 2, 3, &s);
+        // exact routed-request count: retired sequences must contribute
+        // nothing beyond their own traces
+        let expected_cache_requests: u64 = reqs
+            .iter()
+            .map(|q| q.routing.iter().flatten().map(|e| e.len() as u64).sum::<u64>())
+            .sum();
+        for req in reqs {
+            r.enqueue(req);
+        }
+        assert_eq!(r.queue_depth(), 6);
+        assert_eq!(r.peak_queue_depth, 6);
+        r.run_until(f64::INFINITY, 2);
+        assert_eq!(r.queue_depth(), 0);
+        assert_eq!(r.slots_in_use(), 0);
+        assert_eq!(r.completions.len(), 6);
+        assert!(r.clock.now() > 0.0);
+        assert!(r.busy_seconds > 0.0);
+        let stats = r.cache.total_stats();
+        assert_eq!(stats.requests(), stats.hits + stats.misses);
+        assert_eq!(
+            stats.requests(),
+            expected_cache_requests,
+            "a retired sequence kept issuing cache requests"
+        );
+        // monotone per-request timeline
+        for c in &r.completions {
+            assert!(c.finished >= c.started);
+            assert!(c.first_token >= c.started && c.first_token <= c.finished);
+            assert!(c.queue_wait() >= 0.0);
+            assert!(c.ttft() > 0.0);
+            assert!(c.latency() > 0.0);
+        }
+    }
+
+    /// Early retirement re-admits queued work mid-flight: with slots
+    /// {long, short} and a third request queued, the continuous scheduler
+    /// starts the third inside the long sequence's window, while the
+    /// static scheduler waits for the whole batch to drain.
+    #[test]
+    fn continuous_reuses_slot_freed_by_early_retirement() {
+        let s = spec();
+        let reqs = || {
+            vec![
+                req_with_len(0, 12, &s, 1),
+                req_with_len(1, 3, &s, 2),
+                req_with_len(2, 3, &s, 3),
+            ]
+        };
+
+        let mut cont = Replica::new(0, s.clone(), SchedulerMode::Continuous);
+        for q in reqs() {
+            cont.enqueue(q);
+        }
+        cont.run_until(f64::INFINITY, 2);
+        let long_fin = cont.completions.iter().find(|c| c.request_id == 0).unwrap().finished;
+        let third = cont.completions.iter().find(|c| c.request_id == 2).unwrap();
+        assert!(
+            third.started < long_fin,
+            "continuous: freed slot must re-admit mid-flight ({} >= {})",
+            third.started,
+            long_fin
+        );
+
+        let mut stat = Replica::new(0, s.clone(), SchedulerMode::Static);
+        for q in reqs() {
+            stat.enqueue(q);
+        }
+        stat.run_until(f64::INFINITY, 2);
+        let long_fin = stat.completions.iter().find(|c| c.request_id == 0).unwrap().finished;
+        let third = stat.completions.iter().find(|c| c.request_id == 2).unwrap();
+        assert!(
+            third.started >= long_fin,
+            "static: a new batch must wait for the previous one to drain"
+        );
+        // identical traffic, so continuous finishes the set no later
+        assert!(
+            cont.clock.now() <= stat.clock.now() + 1e-9,
+            "continuous makespan {} vs static {}",
+            cont.clock.now(),
+            stat.clock.now()
+        );
+    }
+
+    #[test]
+    fn horizon_bounds_steps_and_work_is_resumable() {
+        let s = spec();
+        let mut r = Replica::new(0, s.clone(), SchedulerMode::Continuous);
         for req in requests(8, 2, 4, &s) {
             r.enqueue(req);
         }
-        // a tiny horizon admits at most the first batch
-        r.run_until(1e-9, 4).unwrap();
-        assert!(r.completions.len() <= 4);
-        let after_first = r.completions.len();
-        assert!(after_first > 0, "a batch starting before the horizon must run");
-        r.run_until(f64::INFINITY, 4).unwrap();
+        // a tiny horizon runs exactly the one step that started before it
+        r.run_until(1e-9, 4);
+        assert!(r.clock.now() > 0.0, "a step starting before the horizon must run");
+        assert!(r.completions.is_empty(), "one step cannot finish a 6-step request");
+        assert_eq!(r.slots_in_use(), 4, "admission fills the slots before stepping");
+        r.run_until(f64::INFINITY, 4);
         assert_eq!(r.completions.len(), 8);
     }
 
@@ -448,14 +588,14 @@ mod tests {
     fn same_task_traffic_warms_cache() {
         let s = spec();
         // task-pure stream on one replica: later requests should mostly hit
-        let mut r = Replica::new(0, s.clone(), SimComputeDecoder::new(&s));
+        let mut r = Replica::new(0, s.clone(), SchedulerMode::Continuous);
         let reqs: Vec<ClusterRequest> =
             requests(12, 1, 5, &s).into_iter().filter(|q| q.task == 0).collect();
         assert!(reqs.len() >= 8);
         for req in reqs {
             r.enqueue(req);
         }
-        r.run_until(f64::INFINITY, 1).unwrap();
+        r.run_until(f64::INFINITY, 1);
         let stats = r.cache.total_stats();
         assert!(
             stats.hit_rate() > 0.5,
@@ -467,7 +607,7 @@ mod tests {
     #[test]
     fn affinity_overlap_sees_planned_residency_before_decode() {
         let s = spec();
-        let mut r = Replica::new(0, s.clone(), SimComputeDecoder::new(&s));
+        let mut r = Replica::new(0, s.clone(), SchedulerMode::Continuous);
         let profiles = TaskProfile::synthetic(2, s.n_layers, s.n_experts, s.capacity, 0.9);
         // cold: no residency, no queue
         assert_eq!(r.affinity_overlap(&profiles[0].plan()), 0.0);

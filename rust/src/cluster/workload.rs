@@ -100,6 +100,53 @@ impl TaskProfile {
     }
 }
 
+/// Per-request output-length distribution.  Continuous batching's win
+/// case is skew: a few long sequences among many short ones — under
+/// run-to-completion batching the long member holds its batch's slots
+/// hostage, while step-level admission refills them immediately.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OutputLen {
+    /// Every request decodes exactly this many tokens.
+    Fixed(usize),
+    /// `long_frac` of requests decode `long` tokens, the rest `short`.
+    Bimodal { short: usize, long: usize, long_frac: f64 },
+}
+
+impl OutputLen {
+    /// Upper bound over draws (the per-request token budget).
+    pub fn cap(&self) -> usize {
+        match *self {
+            OutputLen::Fixed(n) => n,
+            OutputLen::Bimodal { short, long, .. } => short.max(long),
+        }
+    }
+
+    /// Expected output length.
+    pub fn mean(&self) -> f64 {
+        match *self {
+            OutputLen::Fixed(n) => n as f64,
+            OutputLen::Bimodal { short, long, long_frac } => {
+                let f = long_frac.clamp(0.0, 1.0);
+                long as f64 * f + short as f64 * (1.0 - f)
+            }
+        }
+    }
+
+    /// Draw one request's output length.
+    pub fn draw(&self, rng: &mut Rng) -> usize {
+        match *self {
+            OutputLen::Fixed(n) => n,
+            OutputLen::Bimodal { short, long, long_frac } => {
+                if rng.f64() < long_frac.clamp(0.0, 1.0) {
+                    long
+                } else {
+                    short
+                }
+            }
+        }
+    }
+}
+
 /// One admitted request, with its routing trace pre-drawn so every
 /// balancer sees byte-identical traffic.
 #[derive(Debug, Clone)]
@@ -138,7 +185,9 @@ pub struct WorkloadSpec {
     pub n_requests: usize,
     pub arrival: Arrival,
     pub prompt_tokens: usize,
-    pub max_output: usize,
+    /// Per-request output-length distribution (the pre-drawn routing
+    /// trace of each request is sized to its own draw).
+    pub output: OutputLen,
     /// `true`: exact per-task proportions in a shuffled arrival order
     /// (aggregated traffic from many users — task *identity* is random
     /// per arrival but stream volumes are stable).  `false`: every
@@ -197,7 +246,8 @@ pub fn generate(
                     task
                 }
             };
-            let steps = spec.prompt_tokens + spec.max_output;
+            let out_len = spec.output.draw(&mut rng);
+            let steps = spec.prompt_tokens + out_len;
             let routing = (0..steps)
                 .map(|_| {
                     (0..n_layers)
@@ -210,7 +260,7 @@ pub fn generate(
                 task,
                 at,
                 prompt_tokens: spec.prompt_tokens,
-                max_output: spec.max_output,
+                max_output: out_len,
                 routing,
                 plan: tasks[task].plan(),
             }
@@ -227,7 +277,7 @@ mod tests {
             n_requests: n,
             arrival,
             prompt_tokens: 4,
-            max_output: 8,
+            output: OutputLen::Fixed(8),
             balanced_tasks: false,
             seed: 7,
         }
@@ -325,6 +375,27 @@ mod tests {
         let first_ten: std::collections::HashSet<_> =
             reqs.iter().take(10).map(|r| r.task).collect();
         assert!(first_ten.len() > 1, "balanced sequence must interleave tasks");
+    }
+
+    #[test]
+    fn bimodal_output_lengths_skew_and_stay_deterministic() {
+        let tasks = TaskProfile::synthetic(2, 2, 64, 8, 0.9);
+        let mut s = spec(200, Arrival::Burst);
+        s.output = OutputLen::Bimodal { short: 4, long: 40, long_frac: 0.25 };
+        assert_eq!(s.output.cap(), 40);
+        assert!((s.output.mean() - 13.0).abs() < 1e-12);
+        let a = generate(&s, &tasks, 2, 64, 4);
+        let b = generate(&s, &tasks, 2, 64, 4);
+        let longs = a.iter().filter(|r| r.max_output == 40).count();
+        let shorts = a.iter().filter(|r| r.max_output == 4).count();
+        assert_eq!(longs + shorts, 200, "every draw is one of the two modes");
+        assert!((20..=80).contains(&longs), "long fraction ~25%, got {longs}/200");
+        // the routing trace is sized to the request's own draw
+        assert!(a.iter().all(|r| r.routing.len() == r.prompt_tokens + r.max_output));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.max_output, y.max_output);
+            assert_eq!(x.routing, y.routing);
+        }
     }
 
     #[test]

@@ -1,31 +1,103 @@
-//! Serving coordinator: request queue → dynamic batcher → engine loop.
+//! Serving coordinator: request queue → step-level continuous scheduler.
 //!
 //! The PJRT handles inside the engine are not `Send`, so the coordinator
 //! follows the single-runner design (as in vLLM's engine loop): client
 //! threads submit requests over an mpsc channel; one runner thread owns
-//! the model (constructed *inside* the thread by a `Send` factory), drains
-//! the queue into dynamic batches (up to `max_batch`, waiting at most
-//! `batch_wait` for stragglers), lockstep-decodes each batch, and answers
-//! each request on its own response channel.
+//! the model (constructed *inside* the thread by a `Send` factory) and
+//! drives a [`Scheduler`].  At every token step the scheduler admits
+//! queued requests into free decode slots (up to `max_batch`), advances
+//! all in-flight sequences exactly one token through the step-level
+//! [`Decoder`], and retires sequences the moment they hit EOS — so a long
+//! sequence never holds finished slots hostage and freed slots re-admit
+//! immediately.  [`SchedulerMode::Static`] recovers the legacy
+//! drain-batch-then-decode-to-completion behaviour for comparison
+//! (`--scheduler static|continuous` on the CLI).
 
 pub mod workload;
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::metrics::{Percentiles, Report};
+use crate::metrics::Percentiles;
 
-/// Anything that can decode a batch of prompts (the real engine, or a mock
-/// in the scheduler tests).
+/// One retired sequence, in the decoder's simulated timeline.
+#[derive(Debug, Clone)]
+pub struct SeqFinish {
+    pub seq: u64,
+    pub tokens: Vec<usize>,
+    /// Simulated time the sequence was admitted into a decode slot.
+    pub sim_admitted: f64,
+    /// Simulated time its first output token landed.
+    pub sim_first_token: f64,
+    /// Simulated time it retired (EOS or token budget).
+    pub sim_finished: f64,
+}
+
+impl SeqFinish {
+    /// Time-to-first-token from admission (simulated seconds).
+    pub fn ttft(&self) -> f64 {
+        (self.sim_first_token - self.sim_admitted).max(0.0)
+    }
+
+    /// Time per output token after the first (simulated seconds).
+    pub fn tpot(&self) -> f64 {
+        if self.tokens.len() <= 1 {
+            return 0.0;
+        }
+        (self.sim_finished - self.sim_first_token).max(0.0) / (self.tokens.len() - 1) as f64
+    }
+
+    /// Admission-to-retirement latency (simulated seconds).
+    pub fn latency(&self) -> f64 {
+        (self.sim_finished - self.sim_admitted).max(0.0)
+    }
+}
+
+/// A resumable, step-granular decoder.  Sequences are admitted into
+/// decode slots (possibly mid-flight, while others are decoding) and all
+/// in-flight sequences advance one token per [`Decoder::step`] call.
+/// Implementors: the engine's `DecodeSession` wrappers, the cluster's
+/// analytic replicas, and the mocks in the scheduler tests.
 pub trait Decoder {
-    fn decode_batch(
-        &mut self,
-        prompts: &[Vec<usize>],
-        max_output: usize,
-    ) -> Result<(Vec<Vec<usize>>, Report)>;
+    /// Admit a sequence into the in-flight set; returns its handle.
+    fn admit(&mut self, prompt: &[usize], max_output: usize) -> Result<u64>;
+    /// Advance every in-flight sequence exactly one token.  Sequences
+    /// hitting EOS or their budget retire immediately and are returned —
+    /// their slots are free before the next step.
+    fn step(&mut self) -> Result<Vec<SeqFinish>>;
+    /// Number of in-flight sequences.
+    fn active(&self) -> usize;
+    /// Current simulated time (seconds).
+    fn now(&self) -> f64;
+}
+
+/// How the scheduler fills decode slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerMode {
+    /// Drain a batch from the queue, decode it to completion, repeat.
+    /// Finished slots idle until the whole batch retires (the legacy
+    /// run-to-completion loop; the Fig. 5 batching convention).
+    Static,
+    /// Admit from the queue into free slots at *every* token step and
+    /// retire sequences at EOS immediately (vLLM-style continuous
+    /// batching).  Under MELINOE's fine-tuned routing this also keeps the
+    /// LFU cache warm: admitted same-task requests reuse the experts the
+    /// in-flight batch already pinned.
+    Continuous,
+}
+
+impl SchedulerMode {
+    pub fn parse(s: &str) -> Result<SchedulerMode> {
+        Ok(match s {
+            "static" => SchedulerMode::Static,
+            "continuous" => SchedulerMode::Continuous,
+            _ => anyhow::bail!("unknown scheduler {s:?} (static|continuous)"),
+        })
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -39,39 +111,182 @@ pub struct Request {
 pub struct Response {
     pub id: u64,
     pub tokens: Vec<usize>,
-    /// Seconds spent waiting in the queue (wallclock).
+    /// Wallclock seconds between submission and slot admission.
     pub queue_wait: f64,
-    /// Simulated decode seconds of the batch this request rode in.
-    pub sim_seconds: f64,
-    /// Simulated decoding throughput of that batch (output tok/s).
-    pub batch_tokens_per_sec: f64,
+    /// Simulated seconds from admission to retirement.
+    pub sim_latency: f64,
+    /// Simulated time-to-first-token (from admission).
+    pub sim_ttft: f64,
+    /// Simulated time per output token after the first.
+    pub sim_tpot: f64,
+    /// In-flight sequences (this one included) when it was admitted.
     pub batch_size: usize,
 }
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub max_batch: usize,
+    /// Straggler window: when the scheduler is idle and the first request
+    /// arrives, wait this long for near-simultaneous submitters before
+    /// the first token step.
     pub batch_wait: Duration,
+    /// Default output budget (callers may override per request).
     pub max_output: usize,
+    pub scheduler: SchedulerMode,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch: 4, batch_wait: Duration::from_millis(2), max_output: 32 }
+        ServerConfig {
+            max_batch: 4,
+            batch_wait: Duration::from_millis(2),
+            max_output: 32,
+            scheduler: SchedulerMode::Continuous,
+        }
     }
 }
 
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
     pub requests: u64,
-    pub batches: u64,
+    /// Token steps the scheduler executed.
+    pub steps: u64,
     pub total_output_tokens: u64,
+    /// Decoder simulated clock at shutdown.
     pub total_sim_seconds: f64,
+    /// Mean in-flight sequences per executed step (slot occupancy).
     pub mean_batch_size: f64,
     /// p50/p95/p99 of per-request wallclock queue wait (seconds).
     pub queue_wait: Percentiles,
-    /// p50/p95/p99 of per-request simulated batch decode time (seconds).
+    /// p50/p95/p99 of per-request simulated admission→finish latency.
     pub sim_latency: Percentiles,
+    /// p50/p95/p99 of simulated time-to-first-token.
+    pub ttft: Percentiles,
+    /// p50/p95/p99 of simulated time-per-output-token.
+    pub tpot: Percentiles,
+}
+
+struct Job {
+    req: Request,
+    tx: Sender<Response>,
+    submitted: Instant,
+    /// Set at admission: wallclock queue wait and slot occupancy.
+    queue_wait: f64,
+    batch_at_admit: usize,
+}
+
+/// The step-level scheduling core, independent of threads and channels:
+/// the runner thread drives it from the mpsc queue; unit tests drive it
+/// synchronously against a mock decoder.
+pub struct Scheduler<D: Decoder> {
+    dec: D,
+    cfg: ServerConfig,
+    pending: VecDeque<Job>,
+    inflight: HashMap<u64, Job>,
+    stats: ServerStats,
+    batch_sizes: Vec<usize>,
+    queue_waits: Vec<f64>,
+    sim_latencies: Vec<f64>,
+    ttfts: Vec<f64>,
+    tpots: Vec<f64>,
+}
+
+impl<D: Decoder> Scheduler<D> {
+    pub fn new(dec: D, cfg: ServerConfig) -> Scheduler<D> {
+        Scheduler {
+            dec,
+            cfg,
+            pending: VecDeque::new(),
+            inflight: HashMap::new(),
+            stats: ServerStats::default(),
+            batch_sizes: Vec::new(),
+            queue_waits: Vec::new(),
+            sim_latencies: Vec::new(),
+            ttfts: Vec::new(),
+            tpots: Vec::new(),
+        }
+    }
+
+    pub fn enqueue(&mut self, req: Request, tx: Sender<Response>, submitted: Instant) {
+        self.pending.push_back(Job { req, tx, submitted, queue_wait: 0.0, batch_at_admit: 0 });
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || self.dec.active() > 0
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn decoder(&self) -> &D {
+        &self.dec
+    }
+
+    /// Admit what the mode allows, then advance one token step.
+    pub fn tick(&mut self) -> Result<()> {
+        self.admit()?;
+        if self.dec.active() == 0 {
+            return Ok(());
+        }
+        self.batch_sizes.push(self.dec.active());
+        self.stats.steps += 1;
+        for fin in self.dec.step()? {
+            self.retire(fin);
+        }
+        Ok(())
+    }
+
+    fn admit(&mut self) -> Result<()> {
+        let open = match self.cfg.scheduler {
+            SchedulerMode::Continuous => true,
+            SchedulerMode::Static => self.dec.active() == 0,
+        };
+        if !open {
+            return Ok(());
+        }
+        while self.dec.active() < self.cfg.max_batch.max(1) {
+            let Some(mut job) = self.pending.pop_front() else { break };
+            let id = self.dec.admit(&job.req.prompt, job.req.max_output)?;
+            job.queue_wait = job.submitted.elapsed().as_secs_f64();
+            job.batch_at_admit = self.dec.active();
+            self.queue_waits.push(job.queue_wait);
+            self.inflight.insert(id, job);
+        }
+        Ok(())
+    }
+
+    fn retire(&mut self, fin: SeqFinish) {
+        let Some(job) = self.inflight.remove(&fin.seq) else { return };
+        let (latency, ttft, tpot) = (fin.latency(), fin.ttft(), fin.tpot());
+        self.stats.requests += 1;
+        self.stats.total_output_tokens += fin.tokens.len() as u64;
+        self.sim_latencies.push(latency);
+        self.ttfts.push(ttft);
+        self.tpots.push(tpot);
+        let _ = job.tx.send(Response {
+            id: job.req.id,
+            tokens: fin.tokens,
+            queue_wait: job.queue_wait,
+            sim_latency: latency,
+            sim_ttft: ttft,
+            sim_tpot: tpot,
+            batch_size: job.batch_at_admit,
+        });
+    }
+
+    pub fn into_stats(mut self) -> ServerStats {
+        self.stats.total_sim_seconds = self.dec.now();
+        if !self.batch_sizes.is_empty() {
+            self.stats.mean_batch_size =
+                self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64;
+        }
+        self.stats.queue_wait = Percentiles::of(&self.queue_waits);
+        self.stats.sim_latency = Percentiles::of(&self.sim_latencies);
+        self.stats.ttft = Percentiles::of(&self.ttfts);
+        self.stats.tpot = Percentiles::of(&self.tpots);
+        self.stats
+    }
 }
 
 enum Msg {
@@ -113,121 +328,229 @@ impl Server {
     }
 }
 
-/// Per-request samples the runner accumulates for the shutdown report.
-#[derive(Default)]
-struct RunnerSamples {
-    batch_sizes: Vec<usize>,
-    queue_waits: Vec<f64>,
-    sim_latencies: Vec<f64>,
-}
-
-fn runner<D: Decoder>(mut dec: D, rx: Receiver<Msg>, cfg: ServerConfig) -> Result<ServerStats> {
-    let mut stats = ServerStats::default();
-    let mut samples = RunnerSamples::default();
-    'outer: loop {
-        // block for the first job
-        let first = match rx.recv() {
-            Ok(Msg::Job(r, tx, t)) => (r, tx, t),
-            Ok(Msg::Shutdown) | Err(_) => break 'outer,
-        };
-        let mut jobs = vec![first];
-        // give stragglers a short window to join the batch
-        let deadline = Instant::now() + cfg.batch_wait;
-        while jobs.len() < cfg.max_batch {
-            let left = deadline.saturating_duration_since(Instant::now());
-            match rx.recv_timeout(left) {
-                Ok(Msg::Job(r, tx, t)) => jobs.push((r, tx, t)),
-                Ok(Msg::Shutdown) => {
-                    process_batch(&mut dec, &mut jobs, &cfg, &mut stats, &mut samples)?;
-                    break 'outer;
-                }
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+fn runner<D: Decoder>(dec: D, rx: Receiver<Msg>, cfg: ServerConfig) -> Result<ServerStats> {
+    let batch_wait = cfg.batch_wait;
+    let max_batch = cfg.max_batch.max(1);
+    let mut sched = Scheduler::new(dec, cfg);
+    let mut shutdown = false;
+    loop {
+        if !sched.has_work() {
+            if shutdown {
+                break;
             }
+            // block for the first job, then give near-simultaneous
+            // submitters a short window to join before the first step
+            match rx.recv() {
+                Ok(Msg::Job(r, tx, t)) => sched.enqueue(r, tx, t),
+                Ok(Msg::Shutdown) | Err(_) => break,
+            }
+            let deadline = Instant::now() + batch_wait;
+            while sched.pending_len() < max_batch {
+                let left = deadline.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(left) {
+                    Ok(Msg::Job(r, tx, t)) => sched.enqueue(r, tx, t),
+                    Ok(Msg::Shutdown) => {
+                        shutdown = true;
+                        break;
+                    }
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            }
+        } else {
+            // pick up whatever arrived since the last step, non-blocking
+            loop {
+                match rx.try_recv() {
+                    Ok(Msg::Job(r, tx, t)) => sched.enqueue(r, tx, t),
+                    Ok(Msg::Shutdown) => shutdown = true,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            }
+            sched.tick()?;
         }
-        process_batch(&mut dec, &mut jobs, &cfg, &mut stats, &mut samples)?;
     }
-    if !samples.batch_sizes.is_empty() {
-        stats.mean_batch_size =
-            samples.batch_sizes.iter().sum::<usize>() as f64 / samples.batch_sizes.len() as f64;
-    }
-    stats.queue_wait = Percentiles::of(&samples.queue_waits);
-    stats.sim_latency = Percentiles::of(&samples.sim_latencies);
-    Ok(stats)
-}
-
-fn process_batch<D: Decoder>(
-    dec: &mut D,
-    jobs: &mut Vec<(Request, Sender<Response>, Instant)>,
-    cfg: &ServerConfig,
-    stats: &mut ServerStats,
-    samples: &mut RunnerSamples,
-) -> Result<()> {
-    if jobs.is_empty() {
-        return Ok(());
-    }
-    let prompts: Vec<Vec<usize>> = jobs.iter().map(|(r, _, _)| r.prompt.clone()).collect();
-    let max_output = jobs.iter().map(|(r, _, _)| r.max_output).max().unwrap_or(cfg.max_output);
-    let (outputs, report) = dec.decode_batch(&prompts, max_output)?;
-    let sim = report.requests.first().map(|r| r.sim_seconds).unwrap_or(0.0);
-    let tps = report.tokens_per_sec() * report.requests.len().max(1) as f64;
-    stats.batches += 1;
-    samples.batch_sizes.push(jobs.len());
-    for ((req, tx, t0), tokens) in jobs.drain(..).zip(outputs) {
-        stats.requests += 1;
-        stats.total_output_tokens += tokens.len() as u64;
-        let queue_wait = t0.elapsed().as_secs_f64();
-        samples.queue_waits.push(queue_wait);
-        samples.sim_latencies.push(sim);
-        let _ = tx.send(Response {
-            id: req.id,
-            tokens,
-            queue_wait,
-            sim_seconds: sim,
-            batch_tokens_per_sec: tps,
-            batch_size: prompts.len(),
-        });
-    }
-    stats.total_sim_seconds += sim;
-    Ok(())
+    Ok(sched.into_stats())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::metrics::RequestMetrics;
 
-    /// Echo decoder: returns the prompt reversed, constant sim time.
+    /// Step-level mock: one output token per step (the prompt reversed),
+    /// a fixed simulated `dt` per step, retiring when the echo completes.
     struct Mock {
-        calls: u64,
+        dt: f64,
+        clock: f64,
+        next: u64,
+        seqs: Vec<MockSeq>,
+        peak_active: usize,
     }
 
-    impl Decoder for Mock {
-        fn decode_batch(
-            &mut self,
-            prompts: &[Vec<usize>],
-            _max_output: usize,
-        ) -> Result<(Vec<Vec<usize>>, Report)> {
-            self.calls += 1;
-            let outs: Vec<Vec<usize>> =
-                prompts.iter().map(|p| p.iter().rev().copied().collect()).collect();
-            let mut report = Report::default();
-            for p in prompts {
-                report.requests.push(RequestMetrics {
-                    prompt_tokens: p.len(),
-                    output_tokens: p.len(),
-                    sim_seconds: 0.5,
-                    sim_ttft: 0.1,
-                    wall_seconds: 0.0,
-                });
-            }
-            Ok((outs, report))
+    struct MockSeq {
+        id: u64,
+        out: Vec<usize>,
+        produced: usize,
+        admitted: f64,
+        first: f64,
+    }
+
+    impl Mock {
+        fn new(dt: f64) -> Mock {
+            Mock { dt, clock: 0.0, next: 0, seqs: Vec::new(), peak_active: 0 }
         }
     }
 
+    impl Decoder for Mock {
+        fn admit(&mut self, prompt: &[usize], max_output: usize) -> Result<u64> {
+            let id = self.next;
+            self.next += 1;
+            let out: Vec<usize> = prompt.iter().rev().copied().take(max_output.max(1)).collect();
+            self.seqs.push(MockSeq { id, out, produced: 0, admitted: self.clock, first: 0.0 });
+            self.peak_active = self.peak_active.max(self.seqs.len());
+            Ok(id)
+        }
+
+        fn step(&mut self) -> Result<Vec<SeqFinish>> {
+            self.clock += self.dt;
+            let now = self.clock;
+            let mut done = Vec::new();
+            let mut keep = Vec::new();
+            for mut s in self.seqs.drain(..) {
+                if s.produced == 0 {
+                    s.first = now;
+                }
+                s.produced += 1;
+                if s.produced >= s.out.len() {
+                    done.push(SeqFinish {
+                        seq: s.id,
+                        tokens: s.out,
+                        sim_admitted: s.admitted,
+                        sim_first_token: s.first,
+                        sim_finished: now,
+                    });
+                } else {
+                    keep.push(s);
+                }
+            }
+            self.seqs = keep;
+            Ok(done)
+        }
+
+        fn active(&self) -> usize {
+            self.seqs.len()
+        }
+
+        fn now(&self) -> f64 {
+            self.clock
+        }
+    }
+
+    fn cfg(max_batch: usize, scheduler: SchedulerMode) -> ServerConfig {
+        ServerConfig {
+            max_batch,
+            batch_wait: Duration::from_millis(50),
+            max_output: 32,
+            scheduler,
+        }
+    }
+
+    fn submit(
+        s: &mut Scheduler<Mock>,
+        id: u64,
+        prompt: Vec<usize>,
+        max_output: usize,
+    ) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        s.enqueue(Request { id, prompt, max_output }, tx, Instant::now());
+        rx
+    }
+
+    fn drain(s: &mut Scheduler<Mock>) {
+        let mut guard = 0;
+        while s.has_work() {
+            s.tick().unwrap();
+            guard += 1;
+            assert!(guard < 10_000, "scheduler failed to drain");
+        }
+    }
+
+    /// Three requests, two slots: A is long (8 tokens), B and C short
+    /// (2 each).  Continuous batching re-admits C into the slot B frees
+    /// at its early retirement, so the whole set drains in A's 8 steps.
     #[test]
-    fn responses_match_requests() {
-        let server = Server::start(|| Ok(Mock { calls: 0 }), ServerConfig::default());
+    fn continuous_readmits_into_slots_freed_by_early_retirement() {
+        let mut s = Scheduler::new(Mock::new(1.0), cfg(2, SchedulerMode::Continuous));
+        let ra = submit(&mut s, 0, (0..8).collect(), 8);
+        let rb = submit(&mut s, 1, vec![1, 2], 2);
+        let rc = submit(&mut s, 2, vec![3, 4], 2);
+        drain(&mut s);
+        let (a, b, c) = (ra.recv().unwrap(), rb.recv().unwrap(), rc.recv().unwrap());
+        assert_eq!(a.tokens.len(), 8);
+        assert_eq!(b.tokens, vec![2, 1]);
+        assert_eq!(c.tokens, vec![4, 3]);
+        // C joined while A was still in flight
+        assert_eq!(c.batch_size, 2);
+        assert_eq!(s.decoder().peak_active, 2);
+        let stats = s.into_stats();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.steps, 8, "C must ride inside A's window, not after it");
+        assert!(stats.mean_batch_size > 1.0);
+    }
+
+    /// Same workload under the static scheduler: the {A, B} batch runs to
+    /// completion before C is admitted, costing 8 + 2 steps.
+    #[test]
+    fn static_runs_batches_to_completion() {
+        let mut s = Scheduler::new(Mock::new(1.0), cfg(2, SchedulerMode::Static));
+        let _ra = submit(&mut s, 0, (0..8).collect(), 8);
+        let _rb = submit(&mut s, 1, vec![1, 2], 2);
+        let rc = submit(&mut s, 2, vec![3, 4], 2);
+        drain(&mut s);
+        let c = rc.recv().unwrap();
+        assert_eq!(c.batch_size, 1, "static mode admits C into a fresh batch");
+        let stats = s.into_stats();
+        assert_eq!(stats.steps, 10);
+    }
+
+    #[test]
+    fn ttft_and_tpot_surface_in_stats() {
+        let dt = 0.25;
+        let mut s = Scheduler::new(Mock::new(dt), cfg(4, SchedulerMode::Continuous));
+        let rxs: Vec<_> = (0..4).map(|i| submit(&mut s, i, vec![1, 2, 3, 4], 4)).collect();
+        drain(&mut s);
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!((r.sim_ttft - dt).abs() < 1e-12);
+            assert!((r.sim_tpot - dt).abs() < 1e-12);
+            assert!((r.sim_latency - 4.0 * dt).abs() < 1e-12);
+        }
+        let stats = s.into_stats();
+        assert!((stats.ttft.p50 - dt).abs() < 1e-12);
+        assert!((stats.tpot.p99 - dt).abs() < 1e-12);
+        assert!((stats.total_sim_seconds - 4.0 * dt).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_batch_bounds_slot_occupancy() {
+        let mut s = Scheduler::new(Mock::new(1.0), cfg(2, SchedulerMode::Continuous));
+        let rxs: Vec<_> = (0..5).map(|i| submit(&mut s, i, vec![i as usize, 9], 2)).collect();
+        drain(&mut s);
+        for rx in rxs {
+            assert!(rx.recv().unwrap().batch_size <= 2);
+        }
+        assert_eq!(s.decoder().peak_active, 2);
+    }
+
+    #[test]
+    fn responses_match_requests_threaded() {
+        let server = Server::start(|| Ok(Mock::new(0.5)), ServerConfig::default());
         let rx1 = server.submit(vec![1, 2, 3], 8);
         let rx2 = server.submit(vec![9, 8], 8);
         let r1 = rx1.recv().unwrap();
@@ -237,6 +560,7 @@ mod tests {
         assert_ne!(r1.id, r2.id);
         let stats = server.shutdown().unwrap();
         assert_eq!(stats.requests, 2);
+        assert!(stats.queue_wait.p99 >= stats.queue_wait.p50);
     }
 
     #[test]
@@ -245,44 +569,15 @@ mod tests {
             max_batch: 8,
             batch_wait: Duration::from_millis(50),
             max_output: 8,
+            scheduler: SchedulerMode::Continuous,
         };
-        let server = Server::start(|| Ok(Mock { calls: 0 }), cfg);
-        let rxs: Vec<_> = (0..6).map(|i| server.submit(vec![i], 4)).collect();
+        let server = Server::start(|| Ok(Mock::new(0.5)), cfg);
+        let rxs: Vec<_> = (0..6).map(|i| server.submit(vec![i, i + 1], 4)).collect();
         let responses: Vec<Response> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
-        // all six landed; at least one batch had >1 members
         assert!(responses.iter().any(|r| r.batch_size > 1));
         let stats = server.shutdown().unwrap();
         assert_eq!(stats.requests, 6);
-        assert!(stats.batches < 6, "requests should have been batched");
-    }
-
-    #[test]
-    fn max_batch_respected() {
-        let cfg =
-            ServerConfig { max_batch: 2, batch_wait: Duration::from_millis(50), max_output: 8 };
-        let server = Server::start(|| Ok(Mock { calls: 0 }), cfg);
-        let rxs: Vec<_> = (0..5).map(|i| server.submit(vec![i], 4)).collect();
-        for rx in rxs {
-            let r = rx.recv().unwrap();
-            assert!(r.batch_size <= 2);
-        }
-        let stats = server.shutdown().unwrap();
-        assert!(stats.batches >= 3);
-    }
-
-    #[test]
-    fn stats_report_latency_percentiles() {
-        let server = Server::start(|| Ok(Mock { calls: 0 }), ServerConfig::default());
-        let rxs: Vec<_> = (0..8).map(|i| server.submit(vec![i, i + 1], 4)).collect();
-        for rx in rxs {
-            rx.recv().unwrap();
-        }
-        let stats = server.shutdown().unwrap();
-        // the mock decoder reports 0.5 simulated seconds per batch
-        assert!((stats.sim_latency.p50 - 0.5).abs() < 1e-9);
-        assert!((stats.sim_latency.p99 - 0.5).abs() < 1e-9);
-        assert!(stats.queue_wait.p50 >= 0.0);
-        assert!(stats.queue_wait.p99 >= stats.queue_wait.p50);
+        assert!(stats.mean_batch_size > 1.0, "requests should have shared steps");
     }
 
     #[test]
@@ -291,8 +586,9 @@ mod tests {
             max_batch: 64,
             batch_wait: Duration::from_millis(200),
             max_output: 8,
+            scheduler: SchedulerMode::Continuous,
         };
-        let server = Server::start(|| Ok(Mock { calls: 0 }), cfg);
+        let server = Server::start(|| Ok(Mock::new(0.5)), cfg);
         let rx = server.submit(vec![7], 4);
         let stats = server.shutdown().unwrap();
         assert_eq!(rx.recv().unwrap().tokens, vec![7]);
@@ -301,17 +597,23 @@ mod tests {
 
     #[test]
     fn no_starvation_under_load() {
-        let cfg =
-            ServerConfig { max_batch: 3, batch_wait: Duration::from_millis(1), max_output: 8 };
-        let server = Server::start(|| Ok(Mock { calls: 0 }), cfg);
-        let rxs: Vec<_> = (0..30).map(|i| server.submit(vec![i], 4)).collect();
-        let mut got = 0;
-        for rx in rxs {
-            if rx.recv_timeout(Duration::from_secs(5)).is_ok() {
-                got += 1;
+        for mode in [SchedulerMode::Static, SchedulerMode::Continuous] {
+            let cfg = ServerConfig {
+                max_batch: 3,
+                batch_wait: Duration::from_millis(1),
+                max_output: 8,
+                scheduler: mode,
+            };
+            let server = Server::start(|| Ok(Mock::new(0.01)), cfg);
+            let rxs: Vec<_> = (0..30).map(|i| server.submit(vec![i], 4)).collect();
+            let mut got = 0;
+            for rx in rxs {
+                if rx.recv_timeout(Duration::from_secs(5)).is_ok() {
+                    got += 1;
+                }
             }
+            assert_eq!(got, 30, "{mode:?}");
+            server.shutdown().unwrap();
         }
-        assert_eq!(got, 30);
-        server.shutdown().unwrap();
     }
 }

@@ -11,15 +11,27 @@
 //!      policy quantizes residency) — quality effects are real;
 //!   5. host residual add; after the last layer, `lm_head` + greedy pick.
 //!
+//! Decoding is *step-granular*: a [`DecodeSession`] holds the in-flight
+//! sequences ([`SeqState`]: token buffer, KV handles, per-sequence slice
+//! of the simulated timeline) and [`Engine::step`] advances all of them
+//! exactly one token.  Sequences are admitted mid-flight
+//! ([`Engine::admit`]) and retire at EOS immediately, so the active batch
+//! size — and with it the cost model's per-step amortization — changes
+//! every step.  This is what the coordinator's continuous scheduler and
+//! the cluster layer build on; [`Engine::decode`] and
+//! [`Engine::decode_batch`] are thin run-to-completion wrappers.
+//!
 //! Two time axes are tracked: simulated seconds (the cost model at paper
 //! scale — all reported throughput numbers) and wallclock (sanity).
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::cache::ExpertCache;
 use crate::clock::{CostModel, GpuSpec, SimClock};
+use crate::coordinator::SeqFinish;
 use crate::metrics::{Report, RequestMetrics};
 use crate::moe::{MoeConfig, PredictorWeights, RoutingProfile, WeightStore};
 use crate::pcie::TransferEngine;
@@ -36,7 +48,8 @@ pub struct ActivationTrace {
     pub n_experts: usize,
     /// counts[layer][expert] — total requests.
     pub counts: Vec<Vec<u64>>,
-    /// steps[t][layer] — experts selected at decode step t.
+    /// steps[t][layer] — experts selected at decode step t (recorded for
+    /// single-sequence sessions, the Fig. 7–10 shape).
     pub steps: Vec<Vec<Vec<usize>>>,
 }
 
@@ -119,13 +132,63 @@ pub struct StackedBufs {
 
 const BUF_CACHE_CAP: usize = 512;
 
-struct SeqState {
+/// Per-sequence decode state: token buffer, per-layer KV handles, and the
+/// per-sequence slice of the simulated timeline.  Owned by a
+/// [`DecodeSession`]; resumable across [`Engine::step`] calls.
+pub struct SeqState {
+    pub id: u64,
     x: Vec<f32>,
     k_caches: Vec<xla::Literal>,
     v_caches: Vec<xla::Literal>,
     pos: usize,
-    tokens: Vec<usize>, // generated
-    done: bool,
+    prompt: Vec<usize>,
+    max_output: usize,
+    /// Generated tokens (EOS included when it fires).
+    pub tokens: Vec<usize>,
+    /// This sequence's own predicted prefetch sets (empty when the
+    /// policy doesn't prefetch); the session union is rebuilt from the
+    /// *live* sequences on every admission, so retired traffic stops
+    /// influencing the plan.
+    plan: PrefetchPlan,
+    sim_admitted: f64,
+    sim_first_token: f64,
+}
+
+/// Resumable decode state shared by every in-flight sequence: the
+/// simulated clock, the expert cache, PCIe accounting, the routing trace,
+/// and the union prefetch plan of the changing in-flight set.
+pub struct DecodeSession {
+    pub clock: SimClock,
+    pub cache: ExpertCache,
+    pub pcie: TransferEngine,
+    pub trace: ActivationTrace,
+    pub cpu_execs: u64,
+    pub sparsity_skips: u64,
+    seqs: Vec<SeqState>,
+    next_id: u64,
+}
+
+impl DecodeSession {
+    /// Number of in-flight sequences.
+    pub fn active(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Current simulated time (seconds).
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// Cache/transfer snapshot (callers fill in `requests`).
+    pub fn report_base(&self) -> Report {
+        Report {
+            requests: Vec::new(),
+            cache: self.cache.total_stats(),
+            transfers: self.pcie.stats.clone(),
+            misses_per_layer: self.cache.misses_per_layer(),
+            wall_seconds: 0.0,
+        }
+    }
 }
 
 impl<'a> Engine<'a> {
@@ -255,32 +318,14 @@ impl<'a> Engine<'a> {
         }
     }
 
-    fn apply_prefetch(
-        &self,
-        plan: &PrefetchPlan,
-        cache: &mut ExpertCache,
-        pcie: &mut TransferEngine,
-        clock: &mut SimClock,
-    ) {
-        if self.policy.prefetch == Prefetch::None {
-            return;
-        }
-        clock.advance(self.cost.predictor_time());
-        for (l, set) in plan.per_layer.iter().enumerate() {
-            let loads = cache.layer(l).prefill(set);
-            for _ in loads {
-                pcie.prefetch_h2d(&self.cost, clock, self.policy.quant);
-            }
-        }
-        // No sync barrier: prefetch transfers overlap prefill compute
-        // (non-blocking, pinned memory — §3.2).  Early demand misses
-        // naturally serialize behind the in-flight prefetch traffic via
-        // the link-occupancy model in `pcie`.
-    }
-
     /// Select experts for one token at one layer, applying FLoE sparsity.
     /// Returns (expert, gate) pairs and the skip count.
-    fn select(&self, probs: &crate::tensor::HostTensor, cache: &ExpertCache, layer: usize) -> (Vec<(usize, f32)>, u64) {
+    fn select(
+        &self,
+        probs: &crate::tensor::HostTensor,
+        cache: &ExpertCache,
+        layer: usize,
+    ) -> (Vec<(usize, f32)>, u64) {
         let idx = probs.topk(self.cfg.top_k);
         let mut skips = 0;
         let tau = self.policy.sparsity_tau;
@@ -344,12 +389,18 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// One full forward step for one sequence; returns logits if requested.
+    /// One forward step for one sequence.  `batch` is the number of
+    /// in-flight sequences sharing this token step: attention/head weight
+    /// reads and expert weight streaming amortize across the live batch
+    /// (the GPU runs one kernel for all members), while per-token MXU
+    /// compute and demand transfers do not.  Returns the logits (when
+    /// requested) and the per-layer expert selection.
     #[allow(clippy::too_many_arguments)]
     fn step_seq(
         &self,
         st: &mut SeqState,
         token: usize,
+        batch: usize,
         cache: &mut ExpertCache,
         pcie: &mut TransferEngine,
         clock: &mut SimClock,
@@ -357,7 +408,9 @@ impl<'a> Engine<'a> {
         cpu_execs: &mut u64,
         skips: &mut u64,
         want_logits: bool,
-    ) -> Result<Option<crate::tensor::HostTensor>> {
+    ) -> Result<(Option<crate::tensor::HostTensor>, Vec<Vec<usize>>)> {
+        let b = batch.max(1);
+        let bf = b as f64;
         st.x = self.weights.embed.row(token.min(self.cfg.vocab_size - 1)).to_vec();
         let mut step_sel: Vec<Vec<usize>> = Vec::with_capacity(self.cfg.n_layers);
         for l in 0..self.cfg.n_layers {
@@ -370,7 +423,9 @@ impl<'a> Engine<'a> {
             )?;
             st.k_caches[l] = out.k_cache;
             st.v_caches[l] = out.v_cache;
-            clock.advance(self.cost.attn_time(1));
+            // batched attention: the full kernel cost amortizes over the
+            // live batch (one member's share per call)
+            clock.advance(self.cost.attn_time(b) / bf);
 
             let (sel, s) = self.select(&out.probs, cache, l);
             *skips += s;
@@ -386,23 +441,36 @@ impl<'a> Engine<'a> {
                 let idx: Vec<usize> = sel.iter().map(|(e, _)| *e).collect();
                 let gates: Vec<f32> = sel.iter().map(|(_, g)| *g).collect();
                 let y = self.run_experts(l, &idx, &gates, &out.h2)?;
-                clock.advance(self.cost.expert_exec_time(idx.len(), idx.len(), self.policy.quant));
+                let exec = if b == 1 {
+                    self.cost.expert_exec_time(idx.len(), idx.len(), self.policy.quant)
+                } else {
+                    // weight streaming amortizes across the batch; the
+                    // per-token MXU compute does not
+                    self.cost.expert_exec_time(idx.len(), idx.len(), self.policy.quant) / bf
+                        + self.cost.dims.expert_flops() * idx.len() as f64 / self.cost.gpu.flops
+                };
+                clock.advance(exec);
                 st.x = add(&out.h_res, &y);
             }
         }
-        trace.steps.push(step_sel);
-        cache.token_tick();
         st.pos += 1;
         if want_logits {
-            clock.advance(self.cost.head_time(1));
+            clock.advance(self.cost.head_time(b) / bf);
             let logits = self.rt.lm_head(&st.x, &self.weights.lnf_lit, &self.weights.embed_lit)?;
-            Ok(Some(logits))
+            Ok((Some(logits), step_sel))
         } else {
-            Ok(None)
+            Ok((None, step_sel))
         }
     }
 
-    fn new_seq(&self) -> Result<SeqState> {
+    fn new_seq(
+        &self,
+        id: u64,
+        prompt: &[usize],
+        max_output: usize,
+        plan: PrefetchPlan,
+        now: f64,
+    ) -> Result<SeqState> {
         let mut k_caches = Vec::with_capacity(self.cfg.n_layers);
         let mut v_caches = Vec::with_capacity(self.cfg.n_layers);
         for _ in 0..self.cfg.n_layers {
@@ -410,59 +478,189 @@ impl<'a> Engine<'a> {
             k_caches.push(k);
             v_caches.push(v);
         }
-        Ok(SeqState { x: vec![0.0; self.cfg.d_model], k_caches, v_caches, pos: 0, tokens: Vec::new(), done: false })
+        Ok(SeqState {
+            id,
+            x: vec![0.0; self.cfg.d_model],
+            k_caches,
+            v_caches,
+            pos: 0,
+            prompt: prompt.to_vec(),
+            max_output,
+            tokens: Vec::new(),
+            plan,
+            sim_admitted: now,
+            sim_first_token: now,
+        })
     }
 
-    /// Greedy-decode one request.
+    /// Start an empty decode session.
+    pub fn session(&self) -> DecodeSession {
+        DecodeSession {
+            clock: SimClock::new(),
+            cache: self.new_cache(),
+            pcie: TransferEngine::new(),
+            trace: ActivationTrace::new(self.cfg.n_layers, self.cfg.n_experts),
+            cpu_execs: 0,
+            sparsity_skips: 0,
+            seqs: Vec::new(),
+            next_id: 0,
+        }
+    }
+
+    /// Admit one sequence into the session — mid-flight admission is the
+    /// continuous-batching case.  Allocates KV caches, rebuilds the union
+    /// prefetch plan of the *live* in-flight set plus the newcomer
+    /// (in-flight plans first, so established residents win capacity
+    /// ties; retired sequences no longer influence the plan), and tops
+    /// the cache up additively — a refresh never drops the planned
+    /// working set, and warm residents outside it are evicted only under
+    /// capacity pressure, in normal policy order.
+    pub fn admit(
+        &self,
+        sess: &mut DecodeSession,
+        prompt: &[usize],
+        max_output: usize,
+    ) -> Result<u64> {
+        anyhow::ensure!(!prompt.is_empty(), "cannot admit an empty prompt");
+        let mut incoming = PrefetchPlan::empty(self.cfg.n_layers);
+        if self.policy.prefetch != Prefetch::None {
+            incoming = self.prefetch_plan(std::slice::from_ref(&prompt.to_vec()))?;
+            let caps =
+                self.policy.effective_layer_capacities(self.cfg.n_layers, self.cfg.n_experts);
+            let mut plans: Vec<&PrefetchPlan> = sess.seqs.iter().map(|s| &s.plan).collect();
+            plans.push(&incoming);
+            let union = PrefetchPlan::union_capped(&plans, &caps);
+            sess.clock.advance(self.cost.predictor_time());
+            for (l, set) in union.per_layer.iter().enumerate() {
+                if set.is_empty() {
+                    continue;
+                }
+                let loads = sess.cache.layer(l).prefill_union(set);
+                for _ in loads {
+                    sess.pcie.prefetch_h2d(&self.cost, &sess.clock, self.policy.quant);
+                }
+            }
+            // No sync barrier: prefetch transfers overlap compute
+            // (non-blocking, pinned memory — §3.2).  Early demand misses
+            // naturally serialize behind the in-flight prefetch traffic
+            // via the link-occupancy model in `pcie`.
+        }
+        let id = sess.next_id;
+        sess.next_id += 1;
+        let seq = self.new_seq(id, prompt, max_output, incoming, sess.clock.now())?;
+        sess.seqs.push(seq);
+        Ok(id)
+    }
+
+    /// Advance every in-flight sequence exactly one token.  The cost
+    /// model's per-step amortization uses the *current* active batch
+    /// size, which changes as sequences retire.  Sequences that hit EOS
+    /// or their budget retire immediately — their slots (and their share
+    /// of the batch's compute and cache traffic) free before the next
+    /// step.
+    pub fn step(&self, sess: &mut DecodeSession) -> Result<Vec<SeqFinish>> {
+        let batch = sess.seqs.len();
+        if batch == 0 {
+            return Ok(Vec::new());
+        }
+        let mut single_sel: Option<Vec<Vec<usize>>> = None;
+        for i in 0..batch {
+            let (token, want) = {
+                let st = &sess.seqs[i];
+                let token = if st.pos < st.prompt.len() {
+                    st.prompt[st.pos]
+                } else {
+                    *st.tokens.last().expect("active sequence past its prompt has tokens")
+                };
+                (token, st.pos + 1 >= st.prompt.len())
+            };
+            let (logits, sel) = self.step_seq(
+                &mut sess.seqs[i],
+                token,
+                batch,
+                &mut sess.cache,
+                &mut sess.pcie,
+                &mut sess.clock,
+                &mut sess.trace,
+                &mut sess.cpu_execs,
+                &mut sess.sparsity_skips,
+                want,
+            )?;
+            if batch == 1 {
+                single_sel = Some(sel);
+            }
+            if want {
+                let next = logits.expect("logits requested").argmax();
+                let now = sess.clock.now();
+                let st = &mut sess.seqs[i];
+                if st.tokens.is_empty() {
+                    st.sim_first_token = now;
+                }
+                if st.max_output > 0 {
+                    st.tokens.push(next);
+                }
+            }
+        }
+        sess.cache.token_tick();
+        if let Some(sel) = single_sel {
+            sess.trace.steps.push(sel);
+        }
+        // retire sequences that hit EOS or their budget
+        let now = sess.clock.now();
+        let ignore_eos = self.ignore_eos;
+        let mut finished = Vec::new();
+        let mut keep = Vec::with_capacity(batch);
+        for st in sess.seqs.drain(..) {
+            let done = st.pos >= st.prompt.len()
+                && (st.tokens.len() >= st.max_output
+                    || (!ignore_eos && st.tokens.last() == Some(&EOS)));
+            if done {
+                finished.push(SeqFinish {
+                    seq: st.id,
+                    tokens: st.tokens,
+                    sim_admitted: st.sim_admitted,
+                    sim_first_token: st.sim_first_token,
+                    sim_finished: now,
+                });
+            } else {
+                keep.push(st);
+            }
+        }
+        sess.seqs = keep;
+        Ok(finished)
+    }
+
+    /// Greedy-decode one request (run-to-completion wrapper over a
+    /// single-sequence session).
     pub fn decode(&self, prompt: &[usize], max_output: usize) -> Result<DecodeOutput> {
         let wall = Instant::now();
-        let mut clock = SimClock::new();
-        let mut cache = self.new_cache();
-        let mut pcie = TransferEngine::new();
-        let mut trace = ActivationTrace::new(self.cfg.n_layers, self.cfg.n_experts);
-        let (mut cpu_execs, mut skips) = (0u64, 0u64);
-
-        let plan = self.prefetch_plan(std::slice::from_ref(&prompt.to_vec()))?;
-        self.apply_prefetch(&plan, &mut cache, &mut pcie, &mut clock);
-
-        let mut st = self.new_seq()?;
-        let mut logits = None;
-        for (i, &t) in prompt.iter().enumerate() {
-            let last = i == prompt.len() - 1;
-            logits = self.step_seq(
-                &mut st, t, &mut cache, &mut pcie, &mut clock, &mut trace,
-                &mut cpu_execs, &mut skips, last,
-            )?;
-        }
-        let ttft = clock.now();
-        let mut next = logits.expect("prompt must be non-empty").argmax();
-        while st.tokens.len() < max_output {
-            st.tokens.push(next);
-            if next == EOS && !self.ignore_eos {
-                break;
+        let mut sess = self.session();
+        self.admit(&mut sess, prompt, max_output)?;
+        let mut fin = None;
+        while sess.active() > 0 {
+            if let Some(f) = self.step(&mut sess)?.pop() {
+                fin = Some(f);
             }
-            let lg = self.step_seq(
-                &mut st, next, &mut cache, &mut pcie, &mut clock, &mut trace,
-                &mut cpu_execs, &mut skips, true,
-            )?;
-            next = lg.unwrap().argmax();
         }
-
+        let fin = fin.expect("admitted sequence must retire");
         let metrics = RequestMetrics {
             prompt_tokens: prompt.len(),
-            output_tokens: st.tokens.len(),
-            sim_seconds: clock.now(),
-            sim_ttft: ttft,
+            output_tokens: fin.tokens.len(),
+            sim_seconds: sess.clock.now(),
+            sim_ttft: fin.sim_first_token,
             wall_seconds: wall.elapsed().as_secs_f64(),
         };
-        let report = Report {
-            requests: vec![metrics.clone()],
-            cache: cache.total_stats(),
-            transfers: pcie.stats.clone(),
-            misses_per_layer: cache.misses_per_layer(),
-            wall_seconds: metrics.wall_seconds,
-        };
-        Ok(DecodeOutput { tokens: st.tokens, metrics, report, trace, cpu_execs, sparsity_skips: skips })
+        let mut report = sess.report_base();
+        report.requests = vec![metrics.clone()];
+        report.wall_seconds = metrics.wall_seconds;
+        Ok(DecodeOutput {
+            tokens: fin.tokens,
+            metrics,
+            report,
+            trace: sess.trace,
+            cpu_execs: sess.cpu_execs,
+            sparsity_skips: sess.sparsity_skips,
+        })
     }
 
     /// Teacher-forced pass over `tokens`: returns per-position NLLs of
@@ -473,14 +671,15 @@ impl<'a> Engine<'a> {
         let mut pcie = TransferEngine::new();
         let mut trace = ActivationTrace::new(self.cfg.n_layers, self.cfg.n_experts);
         let (mut cpu, mut skips) = (0u64, 0u64);
-        let mut st = self.new_seq()?;
+        let mut st = self.new_seq(0, tokens, 0, PrefetchPlan::empty(self.cfg.n_layers), 0.0)?;
         let mut nlls = Vec::with_capacity(tokens.len().saturating_sub(1));
         for (i, &t) in tokens.iter().enumerate() {
             let want = i + 1 < tokens.len();
-            let lg = self.step_seq(
-                &mut st, t, &mut cache, &mut pcie, &mut clock, &mut trace,
-                &mut cpu, &mut skips, want,
+            let (lg, _sel) = self.step_seq(
+                &mut st, t, 1, &mut cache, &mut pcie, &mut clock, &mut trace, &mut cpu,
+                &mut skips, want,
             )?;
+            cache.token_tick();
             if let Some(lg) = lg {
                 nlls.push(crate::eval::token_nll(&lg.data, tokens[i + 1]));
             }
@@ -488,157 +687,47 @@ impl<'a> Engine<'a> {
         Ok(nlls)
     }
 
-    /// Lockstep batched greedy decoding (Fig. 5).  All sequences share the
-    /// expert cache; per step each unique missing expert transfers once.
-    pub fn decode_batch(&self, prompts: &[Vec<usize>], max_output: usize) -> Result<(Vec<Vec<usize>>, Report)> {
-        let wall = Instant::now();
-        let b = prompts.len();
-        let mut clock = SimClock::new();
-        let mut cache = self.new_cache();
-        let mut pcie = TransferEngine::new();
-        let mut trace = ActivationTrace::new(self.cfg.n_layers, self.cfg.n_experts);
-        let (mut cpu_execs, mut skips) = (0u64, 0u64);
-
-        let plan = self.prefetch_plan(prompts)?;
-        self.apply_prefetch(&plan, &mut cache, &mut pcie, &mut clock);
-
-        let mut seqs: Vec<SeqState> = (0..b).map(|_| self.new_seq()).collect::<Result<_>>()?;
-        // current input token per sequence: walk prompts then generations
-        let max_prompt = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
-        let mut ttft = 0.0;
-
-        for step in 0..(max_prompt + max_output) {
-            // gather (seq, token) for sequences active this step
-            let mut active: Vec<(usize, usize, bool)> = Vec::new(); // (seq, token, want_logits)
-            for (s, seq) in seqs.iter().enumerate() {
-                if seq.done {
-                    continue;
-                }
-                let p = &prompts[s];
-                if step < p.len() {
-                    active.push((s, p[step], step == p.len() - 1));
-                } else if step >= p.len() && !seq.tokens.is_empty() {
-                    let last = *seq.tokens.last().unwrap();
-                    active.push((s, last, true));
-                }
-            }
-            if active.is_empty() {
-                break;
-            }
-            // per-layer lockstep over sequences
-            let mut outs: Vec<Option<crate::tensor::HostTensor>> = vec![None; b];
-            for &(s, tok, want) in &active {
-                let st = &mut seqs[s];
-                // batched compute: charge attention once per layer per step
-                // by discounting the per-seq clock advance below.
-                outs[s] = self.step_seq_batch_member(
-                    st, tok, &mut cache, &mut pcie, &mut clock, &mut trace,
-                    &mut cpu_execs, &mut skips, want, active.len(),
-                )?;
-            }
-            cache.token_tick();
-            for &(s, _, want) in &active {
-                if !want {
-                    continue;
-                }
-                let next = outs[s].as_ref().unwrap().argmax();
-                let seq = &mut seqs[s];
-                seq.tokens.push(next);
-                if (next == EOS && !self.ignore_eos) || seq.tokens.len() >= max_output {
-                    seq.done = true;
-                }
-            }
-            if step == max_prompt - 1 {
-                ttft = clock.now();
-            }
-        }
-
-        let sim = clock.now();
-        let outputs: Vec<Vec<usize>> = seqs.iter().map(|s| s.tokens.clone()).collect();
-        let requests = outputs
-            .iter()
-            .enumerate()
-            .map(|(i, o)| RequestMetrics {
-                prompt_tokens: prompts[i].len(),
-                output_tokens: o.len(),
-                sim_seconds: sim,
-                sim_ttft: ttft,
-                wall_seconds: wall.elapsed().as_secs_f64(),
-            })
-            .collect();
-        let report = Report {
-            requests,
-            cache: cache.total_stats(),
-            transfers: pcie.stats.clone(),
-            misses_per_layer: cache.misses_per_layer(),
-            wall_seconds: wall.elapsed().as_secs_f64(),
-        };
-        Ok((outputs, report))
-    }
-
-    /// step_seq variant for batch members: attention/head costs are
-    /// amortized — the GPU runs the whole batch in one kernel, so member
-    /// i>0 contributes only marginal compute (the cost model's batch
-    /// scaling), not another full pass.
-    #[allow(clippy::too_many_arguments)]
-    fn step_seq_batch_member(
+    /// Batched greedy decoding (Fig. 5): admit every prompt into one
+    /// session, then step to completion.  All sequences share the expert
+    /// cache; members retiring at EOS stop contributing compute and cache
+    /// requests, and the per-step amortization tracks the shrinking live
+    /// batch.
+    pub fn decode_batch(
         &self,
-        st: &mut SeqState,
-        token: usize,
-        cache: &mut ExpertCache,
-        pcie: &mut TransferEngine,
-        clock: &mut SimClock,
-        trace: &mut ActivationTrace,
-        cpu_execs: &mut u64,
-        skips: &mut u64,
-        want_logits: bool,
-        batch: usize,
-    ) -> Result<Option<crate::tensor::HostTensor>> {
-        st.x = self.weights.embed.row(token.min(self.cfg.vocab_size - 1)).to_vec();
-        for l in 0..self.cfg.n_layers {
-            let out = self.rt.layer_step(
-                &st.x,
-                &self.weights.layers[l],
-                &st.k_caches[l],
-                &st.v_caches[l],
-                st.pos,
-            )?;
-            st.k_caches[l] = out.k_cache;
-            st.v_caches[l] = out.v_cache;
-            // amortized attention: full cost once per batch step
-            clock.advance(self.cost.attn_time(batch) / batch as f64);
-
-            let (sel, s) = self.select(&out.probs, cache, l);
-            *skips += s;
-            for &(e, _) in &sel {
-                trace.counts[l][e] += 1;
-            }
-            self.resolve_residency(l, &sel, cache, pcie, clock, cpu_execs);
-
-            if sel.is_empty() {
-                st.x = out.h_res;
-            } else {
-                let idx: Vec<usize> = sel.iter().map(|(e, _)| *e).collect();
-                let gates: Vec<f32> = sel.iter().map(|(_, g)| *g).collect();
-                let y = self.run_experts(l, &idx, &gates, &out.h2)?;
-                // weight-read cost amortizes across the batch; per-token
-                // MXU compute does not.
-                clock.advance(
-                    self.cost.expert_exec_time(idx.len(), idx.len(), self.policy.quant)
-                        / batch as f64
-                        + self.cost.dims.expert_flops() * idx.len() as f64 / self.cost.gpu.flops,
-                );
-                st.x = add(&out.h_res, &y);
+        prompts: &[Vec<usize>],
+        max_output: usize,
+    ) -> Result<(Vec<Vec<usize>>, Report)> {
+        let wall = Instant::now();
+        let mut sess = self.session();
+        let mut ids = Vec::with_capacity(prompts.len());
+        for p in prompts {
+            ids.push(self.admit(&mut sess, p, max_output)?);
+        }
+        let mut fins: HashMap<u64, SeqFinish> = HashMap::new();
+        while sess.active() > 0 {
+            for f in self.step(&mut sess)? {
+                fins.insert(f.seq, f);
             }
         }
-        st.pos += 1;
-        if want_logits {
-            clock.advance(self.cost.head_time(batch) / batch as f64);
-            let logits = self.rt.lm_head(&st.x, &self.weights.lnf_lit, &self.weights.embed_lit)?;
-            Ok(Some(logits))
-        } else {
-            Ok(None)
+        let wall_s = wall.elapsed().as_secs_f64();
+        let mut outputs = Vec::with_capacity(prompts.len());
+        let mut requests = Vec::with_capacity(prompts.len());
+        for (i, id) in ids.iter().enumerate() {
+            let f = fins.remove(id).expect("every admitted sequence retires");
+            requests.push(RequestMetrics {
+                prompt_tokens: prompts[i].len(),
+                output_tokens: f.tokens.len(),
+                // absolute retirement time (admission ≈ session start)
+                sim_seconds: f.sim_finished,
+                sim_ttft: f.sim_first_token,
+                wall_seconds: wall_s,
+            });
+            outputs.push(f.tokens);
         }
+        let mut report = sess.report_base();
+        report.requests = requests;
+        report.wall_seconds = wall_s;
+        Ok((outputs, report))
     }
 }
 

@@ -22,20 +22,27 @@
 //!                     (paper Def. C.1).
 //! * [`moe`]         — model config + weight store (base / fine-tuned).
 //! * [`runtime`]     — PJRT executable loading & dispatch (xla crate).
-//! * [`predictor`]   — activation-predictor inference + prefetch sets.
-//! * [`engine`]      — the offloaded decode engine (single + batched).
+//! * [`predictor`]   — activation-predictor inference + prefetch sets
+//!                     (incl. capped union plans for mid-flight refresh).
+//! * [`engine`]      — the offloaded decode engine: step-granular
+//!                     `DecodeSession`s (admit/step/retire-at-EOS) with
+//!                     `decode`/`decode_batch` as thin wrappers.
 //! * [`policies`]    — MELINOE + Fiddler / Mixtral-Offloading /
 //!                     DeepSpeed-MoE / FLoE / MoE-Infinity.
-//! * [`coordinator`] — request queue, dynamic batcher, serving loop.
+//! * [`coordinator`] — request queue + step-level scheduler: continuous
+//!                     batching (admit every token step, retire at EOS)
+//!                     or static run-to-completion batches; TTFT/TPOT
+//!                     serving stats (see docs/SERVING.md).
 //! * [`eval`]        — ROUGE-L, exact-match accuracy, perplexity.
 //! * [`metrics`]     — throughput/latency/transfer reporting.
 //! * [`repro`]       — one harness per paper table/figure.
 //!
 //! Cluster layer (the first tier above the single-engine stack):
 //! * [`cluster`]     — replica fleet simulator: per-replica cache/PCIe/
-//!   VRAM/clock stacks behind pluggable dispatchers (round-robin,
-//!   least-loaded, expert-affinity).  Affinity routing sends each request
-//!   to the replica whose resident experts best match its `predict_plan`
+//!   VRAM/clock stacks with step-granular decode slots, behind pluggable
+//!   dispatchers (round-robin, least-loaded, expert-affinity) that see
+//!   live slot occupancy.  Affinity routing sends each request to the
+//!   replica whose resident experts best match its `predict_plan`
 //!   prefetch set, compounding MELINOE's top-C routing concentration
 //!   fleet-wide (see docs/CLUSTER.md).
 

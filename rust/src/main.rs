@@ -2,17 +2,20 @@
 //!
 //! Subcommands:
 //!   repro <id|all>   regenerate a paper table/figure (DESIGN.md §4)
-//!   serve            run the batched serving loop over an eval workload
+//!   serve            step-level serving loop (continuous batching) over
+//!                    an eval workload
+//!   cluster          multi-replica serving simulation
 //!   decode           decode one eval prompt and print everything
 //!   info             show artifact/config inventory
 
 use anyhow::{anyhow, Result};
 use melinoe::clock::GpuSpec;
 use melinoe::cluster;
+use melinoe::cluster::workload::OutputLen;
 use melinoe::coordinator::workload::Arrival;
-use melinoe::coordinator::{Decoder, Server, ServerConfig};
-use melinoe::engine::Engine;
-use melinoe::metrics::{fmt2, Report, Table};
+use melinoe::coordinator::{Decoder, SchedulerMode, SeqFinish, Server, ServerConfig};
+use melinoe::engine::{DecodeSession, Engine};
+use melinoe::metrics::{fmt2, Table};
 use melinoe::policies::PolicyConfig;
 use melinoe::quant::QuantMode;
 use melinoe::repro::{Ctx, EngineParts};
@@ -26,8 +29,8 @@ commands:
   repro <id|all>     regenerate a paper table/figure
                      (table1 fig1a fig1b fig3 table2 table3 fig4 fig5 table4
                       table5 table11 fig6 heatmaps fig11 table12 fig12 fig13
-                      table13 ext_layerwise ext_cluster)
-  serve              batched serving loop over the eval workload
+                      table13 ext_layerwise ext_cluster ext_continuous)
+  serve              step-level serving loop over the eval workload
   cluster            multi-replica serving simulation: compare balancers
   decode             decode one prompt, print tokens + transfer stats
   info               artifact inventory
@@ -41,7 +44,9 @@ common options:
   --prompts <n>      eval prompts per configuration
   --tokens <n>       max output tokens
   --requests <n>     serve/cluster: total requests to submit
-  --batch <n>        serve/cluster: max dynamic batch size
+  --batch <n>        serve/cluster: decode slots per engine/replica
+  --scheduler <m>    serve/cluster: continuous (step-level admission,
+                     default) | static (run-to-completion batches)
 
 cluster options:
   --replicas <n>     fleet size (default 4)
@@ -49,6 +54,8 @@ cluster options:
   --balancer <name>  round-robin | least-loaded | expert-affinity | all
   --rate <r>         Poisson arrival rate req/s (0 = auto ≈1.5× capacity)
   --burst            all requests arrive at t=0 (saturation test)
+  --long-frac <f>    fraction of requests decoding the full --tokens
+                     budget; the rest stop at --tokens/8 (0 = uniform)
   --seed <n>         workload seed
 ";
 
@@ -67,21 +74,40 @@ fn policy_by_name(name: &str, cap: usize, top_k: usize, ft: &str) -> Result<Poli
 }
 
 /// Owns everything the serving thread needs (constructed in-thread; PJRT
-/// handles are not Send).
+/// handles are not Send).  The persistent `DecodeSession` carries the
+/// in-flight sequences, expert cache and simulated clock across step
+/// calls; the borrowing `Engine` view is rebuilt per call.
 struct OwnedEngine {
     ctx: Ctx,
     parts: EngineParts,
     gpu: GpuSpec,
+    sess: DecodeSession,
+}
+
+impl OwnedEngine {
+    fn new(ctx: Ctx, parts: EngineParts, gpu: GpuSpec) -> OwnedEngine {
+        let sess = parts.engine(&ctx, gpu.clone()).session();
+        OwnedEngine { ctx, parts, gpu, sess }
+    }
 }
 
 impl Decoder for OwnedEngine {
-    fn decode_batch(
-        &mut self,
-        prompts: &[Vec<usize>],
-        max_output: usize,
-    ) -> Result<(Vec<Vec<usize>>, Report)> {
+    fn admit(&mut self, prompt: &[usize], max_output: usize) -> Result<u64> {
         let engine: Engine = self.parts.engine(&self.ctx, self.gpu.clone());
-        engine.decode_batch(prompts, max_output)
+        engine.admit(&mut self.sess, prompt, max_output)
+    }
+
+    fn step(&mut self) -> Result<Vec<SeqFinish>> {
+        let engine: Engine = self.parts.engine(&self.ctx, self.gpu.clone());
+        engine.step(&mut self.sess)
+    }
+
+    fn active(&self) -> usize {
+        self.sess.active()
+    }
+
+    fn now(&self) -> f64 {
+        self.sess.now()
     }
 }
 
@@ -92,6 +118,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 12)?;
     let max_output = args.get_usize("tokens", 24)?;
     let max_batch = args.get_usize("batch", 4)?;
+    let scheduler = SchedulerMode::parse(args.get_or("scheduler", "continuous"))?;
     let ds = args.get_or("dataset", "dolly").to_string();
 
     // load the prompts up-front (the server thread owns the engine)
@@ -114,39 +141,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let ft = if ds2 == "dolly" { "ft_dolly" } else { "ft_gsm" };
             let policy = policy_by_name(&policy_name, ctx.cfg.cache_capacity, ctx.cfg.top_k, ft)?;
             let parts = ctx.parts(&policy, &ds2)?;
-            Ok(OwnedEngine { ctx, parts, gpu: gpu2 })
+            Ok(OwnedEngine::new(ctx, parts, gpu2))
         },
         ServerConfig {
             max_batch,
             batch_wait: std::time::Duration::from_millis(5),
             max_output,
+            scheduler,
         },
     );
 
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = prompts.into_iter().map(|p| server.submit(p, max_output)).collect();
     let mut total_tokens = 0usize;
-    let mut total_sim = 0.0f64;
-    let mut waits = Vec::new();
     for rx in rxs {
-        let r = rx.recv()?;
-        total_tokens += r.tokens.len();
-        total_sim += r.sim_seconds / r.batch_size as f64;
-        waits.push(r.queue_wait);
+        total_tokens += rx.recv()?.tokens.len();
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.shutdown()?;
     let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["scheduler".into(), format!("{scheduler:?}").to_lowercase()]);
     t.row(vec!["requests".into(), stats.requests.to_string()]);
-    t.row(vec!["batches".into(), stats.batches.to_string()]);
-    t.row(vec!["mean batch size".into(), fmt2(stats.mean_batch_size)]);
+    t.row(vec!["token steps".into(), stats.steps.to_string()]);
+    t.row(vec!["mean slot occupancy".into(), fmt2(stats.mean_batch_size)]);
     t.row(vec!["output tokens".into(), total_tokens.to_string()]);
-    t.row(vec!["sim throughput tok/s".into(), fmt2(total_tokens as f64 / total_sim.max(1e-9))]);
-    t.row(vec!["wall seconds".into(), fmt2(wall)]);
     t.row(vec![
-        "mean queue wait ms".into(),
-        fmt2(waits.iter().sum::<f64>() / waits.len().max(1) as f64 * 1e3),
+        "sim throughput tok/s".into(),
+        fmt2(total_tokens as f64 / stats.total_sim_seconds.max(1e-9)),
     ]);
+    t.row(vec!["ttft p50/p95/p99 (s)".into(), stats.ttft.cell(1.0)]);
+    t.row(vec!["tpot p50/p95/p99 (ms)".into(), stats.tpot.cell(1e3)]);
+    t.row(vec!["sim latency p50/p95/p99 (s)".into(), stats.sim_latency.cell(1.0)]);
+    t.row(vec!["queue wait p50/p95/p99 (ms)".into(), stats.queue_wait.cell(1e3)]);
+    t.row(vec!["wall seconds".into(), fmt2(wall)]);
     println!("{}", t.render());
     Ok(())
 }
@@ -206,18 +233,26 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed", 42)? as u64;
     let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
     let rate = args.get_f64("rate", 0.0)?;
+    let long_frac = args.get_f64("long-frac", 0.0)?.clamp(0.0, 1.0);
+    let scheduler = SchedulerMode::parse(args.get_or("scheduler", "continuous"))?;
 
-    let mut cfg = cluster::ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu, seed);
+    let mut cfg = cluster::ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu, seed)
+        .with_scheduler(scheduler);
     cfg.max_batch = max_batch;
-    cfg.workload.max_output = tokens;
+    cfg.workload.output = if long_frac > 0.0 {
+        OutputLen::Bimodal { short: (tokens / 8).max(1), long: tokens, long_frac }
+    } else {
+        OutputLen::Fixed(tokens)
+    };
     // re-derive the service estimate for the overridden token budget so
-    // the auto rate stays ≈1.5× fleet capacity and epochs stay ~1/4 of a
-    // request's service time
+    // the auto rate stays ≈1.5× fleet capacity
     let est = cfg
         .spec
-        .est_service_seconds(cfg.workload.prompt_tokens, cfg.workload.max_output)
+        .est_service_seconds(
+            cfg.workload.prompt_tokens,
+            cfg.workload.output.mean().ceil().max(1.0) as usize,
+        )
         .max(1e-6);
-    cfg.epoch = (est / 4.0).max(1e-6);
     if args.has_flag("burst") {
         cfg = cfg.with_arrival(Arrival::Burst);
     } else if rate > 0.0 {
@@ -231,8 +266,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         Arrival::Uniform(g) => format!("uniform {g:.3}s gap"),
     };
     println!(
-        "cluster: {} replicas × C={} experts/layer, {} requests over {} tasks ({}), batch {}",
-        cfg.replicas, cfg.spec.capacity, n_requests, n_tasks, arrival_desc, cfg.max_batch
+        "cluster: {} replicas × C={} experts/layer, {} requests over {} tasks ({}), \
+         {} slots/replica, {:?} scheduler",
+        cfg.replicas, cfg.spec.capacity, n_requests, n_tasks, arrival_desc, cfg.max_batch,
+        scheduler
     );
 
     let which = args.get_or("balancer", "all");

@@ -5,13 +5,16 @@ use crate::pcie::TransferStats;
 
 /// Nearest-rank percentile of `values` (p in [0, 100]); 0.0 when empty.
 /// Sorts a copy — callers on hot paths should batch their queries through
-/// [`Percentiles::of`], which sorts once.
+/// [`Percentiles::of`], which sorts once.  NaN-safe via `f64::total_cmp`:
+/// positive NaNs order after every number (negative NaNs before), so
+/// polluted samples surface at the extreme percentiles instead of
+/// panicking mid-sort.
 pub fn percentile(values: &[f64], p: f64) -> f64 {
     if values.is_empty() {
         return 0.0;
     }
     let mut v = values.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, p)
 }
 
@@ -38,7 +41,7 @@ impl Percentiles {
             return Percentiles::default();
         }
         let mut v = values.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         Percentiles {
             p50: percentile_sorted(&v, 50.0),
             p95: percentile_sorted(&v, 95.0),
@@ -247,6 +250,21 @@ mod tests {
         assert_eq!((p.p50, p.p95, p.p99), (3.5, 3.5, 3.5));
         assert_eq!(percentile(&[2.0, 1.0], 0.0), 1.0);
         assert_eq!(percentile(&[2.0, 1.0], 100.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_nan_does_not_panic() {
+        // total_cmp sorts positive NaN after every number: the median of
+        // a mostly-clean sample stays meaningful, and nothing panics
+        let v = [3.0, f64::NAN, 1.0, 2.0, f64::NAN];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert!(percentile(&v, 100.0).is_nan());
+        let p = Percentiles::of(&v);
+        assert_eq!(p.p50, 3.0);
+        assert!(p.p99.is_nan());
+        // all-NaN input must not panic either
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
     }
 
     #[test]

@@ -21,6 +21,40 @@ impl PrefetchPlan {
     pub fn empty(n_layers: usize) -> PrefetchPlan {
         PrefetchPlan { per_layer: vec![Vec::new(); n_layers] }
     }
+
+    /// Fair union of several plans under per-layer capacity caps: experts
+    /// are taken round-robin across the plans (first expert of each, then
+    /// the second of each, ...) until the layer's cap fills.  The
+    /// continuous scheduler refreshes a session's prefetch target with
+    /// this whenever a sequence is admitted mid-flight — listing the
+    /// in-flight union before the newcomer keeps the warm working set on
+    /// capacity ties while still granting the newcomer a fair share.
+    pub fn union_capped(plans: &[&PrefetchPlan], caps: &[usize]) -> PrefetchPlan {
+        let n_layers = caps.len();
+        let mut per_layer = Vec::with_capacity(n_layers);
+        for (l, &cap) in caps.iter().enumerate() {
+            let mut set: Vec<usize> = Vec::with_capacity(cap);
+            let mut rank = 0usize;
+            loop {
+                let mut any = false;
+                for plan in plans {
+                    let Some(&e) = plan.per_layer.get(l).and_then(|s| s.get(rank)) else {
+                        continue;
+                    };
+                    any = true;
+                    if set.len() < cap && !set.contains(&e) {
+                        set.push(e);
+                    }
+                }
+                if !any || set.len() >= cap {
+                    break;
+                }
+                rank += 1;
+            }
+            per_layer.push(set);
+        }
+        PrefetchPlan { per_layer }
+    }
 }
 
 /// Mean-pooled token embedding of the prompt: Ψ_EMB(q).
@@ -123,5 +157,29 @@ mod tests {
         let p = PrefetchPlan::empty(4);
         assert_eq!(p.per_layer.len(), 4);
         assert!(p.per_layer.iter().all(|v| v.is_empty()));
+    }
+
+    #[test]
+    fn union_capped_interleaves_fairly() {
+        let a = PrefetchPlan { per_layer: vec![vec![0, 1, 2, 3]] };
+        let b = PrefetchPlan { per_layer: vec![vec![10, 11, 12, 13]] };
+        let u = PrefetchPlan::union_capped(&[&a, &b], &[4]);
+        assert_eq!(u.per_layer[0], vec![0, 10, 1, 11]);
+        // identical plans collapse to the plan itself
+        let same = PrefetchPlan::union_capped(&[&a, &a], &[4]);
+        assert_eq!(same.per_layer[0], vec![0, 1, 2, 3]);
+        // cap larger than the union keeps everything
+        let all = PrefetchPlan::union_capped(&[&a, &b], &[16]);
+        assert_eq!(all.per_layer[0].len(), 8);
+    }
+
+    #[test]
+    fn union_capped_handles_ragged_layers() {
+        let a = PrefetchPlan { per_layer: vec![vec![5], vec![7, 8]] };
+        let b = PrefetchPlan::empty(1); // shorter plan: layer 1 missing
+        let u = PrefetchPlan::union_capped(&[&a, &b], &[2, 2]);
+        assert_eq!(u.per_layer, vec![vec![5], vec![7, 8]]);
+        let none = PrefetchPlan::union_capped(&[], &[3, 3]);
+        assert!(none.per_layer.iter().all(|s| s.is_empty()));
     }
 }

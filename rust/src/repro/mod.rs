@@ -227,6 +227,7 @@ pub fn run(id: &str, args: &crate::util::cli::Args) -> Result<()> {
         "table13" => ex::table13(args),
         "ext_layerwise" => ex::ext_layerwise(args),
         "ext_cluster" => ex::ext_cluster(args),
+        "ext_continuous" => ex::ext_continuous(args),
         "all" => {
             for id in ex::ALL {
                 println!("\n================ {id} ================");

@@ -1,0 +1,105 @@
+//! Continuous-batching integration tests (artifact-free).
+//!
+//! These run the cluster simulator on the analytic cost model with
+//! synthetic per-task routing traces, so they assert the PR's acceptance
+//! behaviour unconditionally: under open-loop Poisson arrivals with
+//! skewed (bimodal) output lengths, step-level continuous scheduling
+//! strictly beats run-to-completion static batching on p95 latency and
+//! throughput, with cache hit rate no worse — freed decode slots
+//! re-admit queued requests instead of idling behind the longest batch
+//! member, and affinity-pure traffic keeps the LFU cache warm across
+//! mid-flight admissions.
+
+use melinoe::clock::GpuSpec;
+use melinoe::cluster::workload::{OutputLen, TaskProfile};
+use melinoe::cluster::{balancer, run_cluster, ClusterConfig, ClusterReport};
+use melinoe::coordinator::workload::Arrival;
+use melinoe::coordinator::SchedulerMode;
+
+/// Saturated single-task scenario with 10x output-length skew: offered
+/// load ≈ 2.5× a single decode stream's capacity, so scheduling
+/// efficiency — not offered load — bounds throughput.
+fn skewed_cfg(seed: u64) -> ClusterConfig {
+    let mut cfg = ClusterConfig::synthetic(1, 40, 1, GpuSpec::h100(), seed);
+    // small model so the test stays fast
+    cfg.spec.n_layers = 4;
+    cfg.spec.n_experts = 32;
+    cfg.spec.top_k = 4;
+    cfg.spec.capacity = 12; // hot set (8) fully resident, plus slack
+    cfg.tasks = TaskProfile::synthetic(1, 4, 32, 8, 0.95);
+    cfg.workload.prompt_tokens = 2;
+    cfg.max_batch = 4;
+    let output = OutputLen::Bimodal { short: 4, long: 40, long_frac: 0.3 };
+    let est = cfg
+        .spec
+        .est_service_seconds(cfg.workload.prompt_tokens, output.mean().ceil() as usize)
+        .max(1e-12);
+    cfg.with_output(output).with_arrival(Arrival::Poisson(2.5 / est))
+}
+
+fn run(cfg: &ClusterConfig) -> ClusterReport {
+    let mut b = balancer::by_name("expert-affinity").unwrap();
+    run_cluster(cfg, b.as_mut()).unwrap()
+}
+
+#[test]
+fn continuous_beats_static_on_skewed_output_lengths() {
+    for seed in [7u64, 21, 42] {
+        let stat = run(&skewed_cfg(seed).with_scheduler(SchedulerMode::Static));
+        let cont = run(&skewed_cfg(seed).with_scheduler(SchedulerMode::Continuous));
+        // identical pre-drawn traffic on both sides
+        assert_eq!(stat.n_requests, 40, "seed {seed}");
+        assert_eq!(cont.n_requests, 40, "seed {seed}");
+        assert_eq!(stat.output_tokens, cont.output_tokens, "seed {seed}");
+
+        assert!(
+            cont.latency.p95 < stat.latency.p95,
+            "seed {seed}: continuous p95 {:.3}s >= static p95 {:.3}s",
+            cont.latency.p95,
+            stat.latency.p95
+        );
+        assert!(
+            cont.tokens_per_sec > stat.tokens_per_sec,
+            "seed {seed}: continuous {:.2} tok/s <= static {:.2} tok/s",
+            cont.tokens_per_sec,
+            stat.tokens_per_sec
+        );
+        assert!(
+            cont.hit_rate >= stat.hit_rate - 0.02,
+            "seed {seed}: continuous hit rate {:.4} fell below static {:.4}",
+            cont.hit_rate,
+            stat.hit_rate
+        );
+    }
+}
+
+#[test]
+fn continuous_keeps_slots_occupied() {
+    let cfg = skewed_cfg(5);
+    let stat = run(&cfg.clone().with_scheduler(SchedulerMode::Static));
+    let cont = run(&cfg.with_scheduler(SchedulerMode::Continuous));
+    // same token work, shorter busy window: the continuous replica packs
+    // more live sequences per step instead of idling drained slots
+    assert_eq!(stat.output_tokens, cont.output_tokens);
+    let stat_busy: f64 = stat.replicas.iter().map(|r| r.busy_seconds).sum();
+    let cont_busy: f64 = cont.replicas.iter().map(|r| r.busy_seconds).sum();
+    assert!(
+        cont_busy < stat_busy,
+        "continuous busy {cont_busy:.3}s >= static busy {stat_busy:.3}s"
+    );
+}
+
+#[test]
+fn ttft_improves_under_continuous_admission() {
+    // queued requests stop waiting for whole-batch drains, so the time
+    // to first token falls fleet-wide
+    let cfg = skewed_cfg(11);
+    let stat = run(&cfg.clone().with_scheduler(SchedulerMode::Static));
+    let cont = run(&cfg.with_scheduler(SchedulerMode::Continuous));
+    assert!(
+        cont.ttft.p95 < stat.ttft.p95,
+        "continuous ttft p95 {:.3}s >= static {:.3}s",
+        cont.ttft.p95,
+        stat.ttft.p95
+    );
+}

@@ -8,9 +8,8 @@
 
 use melinoe::cache::EvictionKind;
 use melinoe::clock::GpuSpec;
-use melinoe::coordinator::{Decoder, Server, ServerConfig};
-use melinoe::engine::Engine;
-use melinoe::metrics::Report;
+use melinoe::coordinator::{Decoder, SchedulerMode, SeqFinish, Server, ServerConfig};
+use melinoe::engine::{DecodeSession, Engine};
 use melinoe::moe::load_goldens;
 use melinoe::policies::{PolicyConfig, Prefetch};
 use melinoe::quant::QuantMode;
@@ -226,6 +225,54 @@ fn batched_decode_shares_cache_across_sequences() {
     assert!(rep_batch.cache.misses >= rep_batch.transfers.h2d_count); // every H2D came from a miss
 }
 
+/// Step-granular session: a batch member that exhausts its budget (or
+/// hits EOS) retires immediately — it stops contributing compute and
+/// cache requests — and its slot accepts a mid-flight admission.
+#[test]
+fn session_retires_early_and_admits_mid_flight() {
+    let Some(ctx) = any_preset() else { return };
+    let pol = full_residency(&ctx);
+    let parts = ctx.parts(&pol, "dolly").unwrap();
+    let engine = parts.engine(&ctx, GpuSpec::h100()).with_ignore_eos(true);
+    let eval = ctx.eval_set("dolly").unwrap();
+    let p = eval.samples[0].prompt.clone();
+
+    let mut sess = engine.session();
+    let short = engine.admit(&mut sess, &p, 2).unwrap();
+    let long = engine.admit(&mut sess, &p, 8).unwrap();
+    assert_eq!(sess.active(), 2);
+
+    // run until the short sequence retires
+    let mut fins = Vec::new();
+    while fins.is_empty() {
+        fins = engine.step(&mut sess).unwrap();
+    }
+    assert_eq!(fins.len(), 1);
+    assert_eq!(fins[0].seq, short);
+    assert_eq!(fins[0].tokens.len(), 2);
+    assert_eq!(sess.active(), 1, "the retired member's slot frees immediately");
+    let requests_at_retire = sess.cache.total_stats().requests();
+
+    // mid-flight admission into the freed slot
+    let third = engine.admit(&mut sess, &p, 2).unwrap();
+    assert_eq!(sess.active(), 2);
+    let mut finished = Vec::new();
+    while sess.active() > 0 {
+        finished.extend(engine.step(&mut sess).unwrap());
+    }
+    assert!(finished.iter().any(|f| f.seq == third));
+    assert!(finished.iter().any(|f| f.seq == long));
+    // both survivors kept decoding after the retirement, so cache
+    // traffic grew — but only from live sequences
+    assert!(sess.cache.total_stats().requests() > requests_at_retire);
+    // the mid-flight admission overlaps the long sequence's window
+    let f3 = finished.iter().find(|f| f.seq == third).unwrap();
+    let fl = finished.iter().find(|f| f.seq == long).unwrap();
+    assert!(f3.sim_admitted > fl.sim_admitted);
+    assert!(f3.sim_admitted < fl.sim_finished);
+    assert!(f3.sim_first_token >= f3.sim_admitted);
+}
+
 #[test]
 fn gamma_eviction_interpolates() {
     let Some(ctx) = any_preset() else { return };
@@ -253,15 +300,22 @@ fn serving_loop_end_to_end() {
     struct Owned {
         ctx: Ctx,
         parts: EngineParts,
+        sess: DecodeSession,
     }
     impl Decoder for Owned {
-        fn decode_batch(
-            &mut self,
-            prompts: &[Vec<usize>],
-            max_output: usize,
-        ) -> anyhow::Result<(Vec<Vec<usize>>, Report)> {
+        fn admit(&mut self, prompt: &[usize], max_output: usize) -> anyhow::Result<u64> {
             let engine: Engine = self.parts.engine(&self.ctx, GpuSpec::h100());
-            engine.decode_batch(prompts, max_output)
+            engine.admit(&mut self.sess, prompt, max_output)
+        }
+        fn step(&mut self) -> anyhow::Result<Vec<SeqFinish>> {
+            let engine: Engine = self.parts.engine(&self.ctx, GpuSpec::h100());
+            engine.step(&mut self.sess)
+        }
+        fn active(&self) -> usize {
+            self.sess.active()
+        }
+        fn now(&self) -> f64 {
+            self.sess.now()
         }
     }
 
@@ -270,9 +324,15 @@ fn serving_loop_end_to_end() {
             let ctx = Ctx::load(&melinoe::artifacts_dir(), &preset)?;
             let pol = PolicyConfig::base_offload(ctx.cfg.cache_capacity);
             let parts = ctx.parts(&pol, "dolly")?;
-            Ok(Owned { ctx, parts })
+            let sess = parts.engine(&ctx, GpuSpec::h100()).session();
+            Ok(Owned { ctx, parts, sess })
         },
-        ServerConfig { max_batch: 2, batch_wait: std::time::Duration::from_millis(5), max_output: 8 },
+        ServerConfig {
+            max_batch: 2,
+            batch_wait: std::time::Duration::from_millis(5),
+            max_output: 8,
+            scheduler: SchedulerMode::Continuous,
+        },
     );
     // submit prompts loaded fresh (server thread owns its own ctx)
     let ctx2 = any_preset().unwrap();
@@ -282,10 +342,14 @@ fn serving_loop_end_to_end() {
     for rx in rxs {
         let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
         assert!(!r.tokens.is_empty());
-        assert!(r.sim_seconds > 0.0);
+        assert!(r.sim_latency > 0.0);
+        assert!(r.sim_ttft > 0.0 && r.sim_ttft <= r.sim_latency);
+        assert!(r.batch_size >= 1 && r.batch_size <= 2);
     }
     let stats = server.shutdown().unwrap();
     assert_eq!(stats.requests, 4);
+    assert!(stats.steps > 0);
+    assert!(stats.ttft.p50 > 0.0);
 }
 
 #[test]
