@@ -50,6 +50,25 @@ fn main() {
     }
     b.finish();
 
+    // ---- chunked prefill over long prompts (wallclock cost of the sim
+    // loop at each chunk setting; the sim-time TTFT numbers come from
+    // `melinoe repro ext_prefill`)
+    let mut b = Bench::new("prefill");
+    let long_prompt = {
+        let mut c = cfg.clone();
+        c.workload.prompt_tokens = 64;
+        c.workload.output = OutputLen::Fixed(8);
+        c
+    };
+    for chunk in [1usize, 8, 32] {
+        let pcfg = long_prompt.clone().with_prefill_chunk(chunk);
+        b.bench(&format!("cluster 4r/16req 64-tok prompts [chunk={chunk}]"), || {
+            let mut bal = cluster::balancer::by_name("expert-affinity").unwrap();
+            std::hint::black_box(cluster::run_cluster(&pcfg, bal.as_mut()).unwrap());
+        });
+    }
+    b.finish();
+
     let dir = melinoe::artifacts_dir();
     let Some(ctx) = ["olmoe-micro", "phi-micro", "mixtral-micro"]
         .iter()

@@ -54,6 +54,10 @@ impl Decoder for OwnedEngine {
     fn now(&self) -> f64 {
         self.sess.now()
     }
+
+    fn set_prefill_chunk(&mut self, chunk: usize) {
+        self.sess.set_prefill_chunk(chunk);
+    }
 }
 
 fn main() -> anyhow::Result<()> {
@@ -65,6 +69,7 @@ fn main() -> anyhow::Result<()> {
     let max_output = args.get_usize("tokens", 24)?;
     let max_batch = args.get_usize("batch", 4)?;
     let scheduler = SchedulerMode::parse(args.get_or("scheduler", "continuous"))?;
+    let prefill_chunk = args.get_usize("prefill-chunk", 1)?.max(1);
 
     // workload: held-out dolly-syn prompts
     let ctx0 = Ctx::load(&melinoe::artifacts_dir(), &preset)?;
@@ -97,7 +102,13 @@ fn main() -> anyhow::Result<()> {
             let parts = ctx.parts(&policy, "dolly")?;
             Ok(OwnedEngine::new(ctx, parts, gpu2))
         },
-        ServerConfig { max_batch, batch_wait: Duration::from_millis(5), max_output, scheduler },
+        ServerConfig {
+            max_batch,
+            batch_wait: Duration::from_millis(5),
+            max_output,
+            scheduler,
+            prefill_chunk,
+        },
     );
 
     // arrival process: burst (default) or open-loop poisson:<rate>

@@ -188,6 +188,28 @@ impl CostModel {
         (mem + compute) * overhead
     }
 
+    /// Expert execution for one sequence's share of a step that consumes
+    /// `step_tokens` tokens in total across the live batch (decode tokens
+    /// plus piggybacked prefill-chunk tokens — the Sarathi decomposition).
+    /// The `unique` distinct experts of the chunk's union set stream
+    /// their weights once, amortized over every token the step consumes,
+    /// while each of the `assignments` (token, expert) pairs pays its own
+    /// MXU compute.  At `step_tokens == 1` this is exactly
+    /// [`CostModel::expert_exec_time`] — a lone single-token step.
+    pub fn chunk_exec_time(
+        &self,
+        unique: usize,
+        assignments: usize,
+        step_tokens: usize,
+        mode: QuantMode,
+    ) -> f64 {
+        if step_tokens <= 1 {
+            return self.expert_exec_time(unique, assignments, mode);
+        }
+        self.expert_exec_time(unique, assignments, mode) / step_tokens as f64
+            + self.dims.expert_flops() * assignments as f64 / self.gpu.flops
+    }
+
     /// Fiddler-style CPU execution of one expert over `assignments` tokens
     /// (weights stay in DRAM; activations move instead of weights).
     pub fn cpu_expert_time(&self, assignments: usize) -> f64 {
@@ -271,6 +293,27 @@ mod tests {
             cm.transfer_time(QuantMode::Fp16) + cm.expert_exec_time(1, 1, QuantMode::Fp16);
         assert!(cm.cpu_expert_time(1) < transfer_then_gpu * 1.2);
         assert!(cm.cpu_expert_time(512) > cm.transfer_time(QuantMode::Fp16));
+    }
+
+    #[test]
+    fn chunk_exec_reduces_to_expert_exec_when_alone() {
+        let cm = CostModel::new(GpuSpec::h100(), olmoe_dims());
+        let a = cm.chunk_exec_time(8, 8, 1, QuantMode::Fp16);
+        let b = cm.expert_exec_time(8, 8, QuantMode::Fp16);
+        assert!((a - b).abs() < 1e-15);
+    }
+
+    #[test]
+    fn chunk_exec_amortizes_streaming_over_step_tokens() {
+        // a chunk of 8 prompt tokens routing to the same 8 experts must
+        // cost less than 8 single-token steps: the weights stream once
+        let cm = CostModel::new(GpuSpec::h100(), olmoe_dims());
+        let chunked = cm.chunk_exec_time(8, 64, 8, QuantMode::Fp16);
+        let token_at_a_time = 8.0 * cm.expert_exec_time(8, 8, QuantMode::Fp16);
+        assert!(chunked < token_at_a_time, "chunked {chunked} >= sequential {token_at_a_time}");
+        // ...but per-assignment MXU compute is not amortized away
+        let more_assignments = cm.chunk_exec_time(8, 128, 8, QuantMode::Fp16);
+        assert!(more_assignments > chunked);
     }
 
     #[test]

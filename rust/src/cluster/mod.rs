@@ -16,8 +16,10 @@
 //!   with per-request output lengths (skew is continuous batching's win
 //!   case).
 //! * [`replica`]  — one GPU's cache/PCIe/VRAM/clock stack with a
-//!   step-granular decode loop: slots admit mid-flight and sequences
-//!   retire at trace end (see [`crate::coordinator::SchedulerMode`]).
+//!   step-granular decode loop: slots admit mid-flight, sequences retire
+//!   at trace end (see [`crate::coordinator::SchedulerMode`]), and
+//!   prompts prefill in chunks piggybacked on live decode steps
+//!   (`--prefill-chunk`).
 //! * [`balancer`] — RoundRobin / LeastLoaded / ExpertAffinity dispatch
 //!   against *live* slot occupancy.
 //! * [`run_cluster`] — the arrival-driven event loop + fleet metrics
@@ -57,6 +59,9 @@ pub struct ClusterConfig {
     /// How replicas fill decode slots: step-level continuous batching or
     /// legacy run-to-completion batches.
     pub scheduler: SchedulerMode,
+    /// Prompt tokens a prefilling sequence consumes per step on every
+    /// replica (`--prefill-chunk`; 1 = token-at-a-time prefill).
+    pub prefill_chunk: usize,
     pub spec: ReplicaSpec,
     pub workload: WorkloadSpec,
     pub tasks: Vec<TaskProfile>,
@@ -91,6 +96,7 @@ impl ClusterConfig {
             max_batch: 4,
             max_queue: n_requests.max(8),
             scheduler: SchedulerMode::Continuous,
+            prefill_chunk: 1,
             spec,
             workload: WorkloadSpec {
                 n_requests,
@@ -116,6 +122,11 @@ impl ClusterConfig {
 
     pub fn with_scheduler(mut self, scheduler: SchedulerMode) -> ClusterConfig {
         self.scheduler = scheduler;
+        self
+    }
+
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> ClusterConfig {
+        self.prefill_chunk = chunk.max(1);
         self
     }
 
@@ -154,6 +165,8 @@ pub struct ReplicaSummary {
 pub struct ClusterReport {
     pub balancer: String,
     pub scheduler: SchedulerMode,
+    /// Per-step prompt-token budget the fleet ran with.
+    pub prefill_chunk: usize,
     pub n_requests: usize,
     pub output_tokens: usize,
     /// Last completion time (simulated seconds).
@@ -183,7 +196,9 @@ pub struct ClusterReport {
 pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<ClusterReport> {
     let requests = cfg.requests();
     let mut reps: Vec<Replica> = (0..cfg.replicas.max(1))
-        .map(|i| Replica::new(i, cfg.spec.clone(), cfg.scheduler))
+        .map(|i| {
+            Replica::new(i, cfg.spec.clone(), cfg.scheduler).with_prefill_chunk(cfg.prefill_chunk)
+        })
         .collect();
     let max_queue = cfg.max_queue.max(1);
     for req in &requests {
@@ -266,6 +281,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
     Ok(ClusterReport {
         balancer: bal.name().to_string(),
         scheduler: cfg.scheduler,
+        prefill_chunk: cfg.prefill_chunk.max(1),
         n_requests: completions.len(),
         output_tokens,
         makespan,

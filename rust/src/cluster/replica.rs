@@ -6,19 +6,24 @@
 //! budget-derived capacity, and its own [`SimClock`] — and serves its
 //! queue the way the engine's `DecodeSession` does: sequences occupy
 //! decode slots, every [`Replica::run_one_step`] advances the whole live
-//! batch one token, and a sequence retires the moment its trace ends, so
-//! its slot re-admits from the queue *mid-flight* (continuous batching).
-//! [`SchedulerMode::Static`] gates admission on an empty slot set,
-//! recovering the legacy run-to-completion batch for comparison.
+//! batch one step — decodes by one token, prompts still in prefill by up
+//! to [`Replica::with_prefill_chunk`] prompt tokens piggybacked on the
+//! same step (Sarathi-style chunked prefill) — and a sequence retires
+//! the moment its trace ends, so its slot re-admits from the queue
+//! *mid-flight* (continuous batching).  [`SchedulerMode::Static`] gates
+//! admission on an empty slot set, recovering the legacy
+//! run-to-completion batch for comparison.
 //!
 //! Costing follows the engine's Eq. 3 decomposition at step granularity:
-//! each step charges batch-amortized attention/head plus grouped expert
-//! execution over the step's *actual* distinct-expert working set, and
-//! replays the batch's pre-drawn routing traces against the *persistent*
-//! caches to add the `N_miss · Time_transfer` term.  Persistence across
-//! requests is the point: a replica that keeps serving the same task's
-//! traffic stays hit-bound, which is what affinity routing exploits —
-//! and what makes mid-flight admission of same-task requests cheap.
+//! each step charges attention/head amortized over *every token the step
+//! consumes* plus grouped expert execution over the step's *actual*
+//! distinct-expert working set (a prefill chunk's union streams once),
+//! and replays the batch's pre-drawn routing traces against the
+//! *persistent* caches to add the `N_miss · Time_transfer` term.
+//! Persistence across requests is the point: a replica that keeps
+//! serving the same task's traffic stays hit-bound, which is what
+//! affinity routing exploits — and what makes mid-flight admission of
+//! same-task requests cheap.
 
 use std::collections::VecDeque;
 
@@ -151,6 +156,8 @@ pub struct Replica {
     pub pcie: TransferEngine,
     pub clock: SimClock,
     scheduler: SchedulerMode,
+    /// Prompt tokens a prefilling sequence consumes per step (≥ 1).
+    prefill_chunk: usize,
     queue: VecDeque<ClusterRequest>,
     in_flight: Vec<ActiveSeq>,
     /// Prefetch plan of the most recently enqueued request: the replica's
@@ -174,6 +181,7 @@ impl Replica {
             pcie: TransferEngine::new(),
             clock: SimClock::new(),
             scheduler,
+            prefill_chunk: 1,
             queue: VecDeque::new(),
             in_flight: Vec::new(),
             last_plan: None,
@@ -181,6 +189,13 @@ impl Replica {
             busy_seconds: 0.0,
             peak_queue_depth: 0,
         }
+    }
+
+    /// Set the per-step prompt-token budget (chunked prefill; clamped to
+    /// ≥ 1, where 1 is token-at-a-time prefill).
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> Replica {
+        self.prefill_chunk = chunk.max(1);
+        self
     }
 
     pub fn enqueue(&mut self, req: ClusterRequest) {
@@ -285,50 +300,68 @@ impl Replica {
         self.in_flight.push(ActiveSeq { req, step: 0, started: now, first_token: now });
     }
 
-    /// Advance the live batch one token: replay each sequence's routing
-    /// for its current step against the persistent caches (misses
-    /// demand-transfer and stall; the pin set tracks the changing
-    /// in-flight batch so a peer's miss can never evict an expert this
-    /// step executes), then charge the step's batch-amortized compute.
-    /// Sequences whose trace ends retire immediately.
+    /// Tokens one sequence consumes this step: a prefilling sequence
+    /// takes up to the chunk (clamped to the prompt boundary), a
+    /// decoding one exactly one.
+    fn tokens_this_step(&self, seq: &ActiveSeq) -> usize {
+        let left = seq.req.prompt_tokens.saturating_sub(seq.step);
+        if left > 0 {
+            self.prefill_chunk.min(left)
+        } else {
+            1
+        }
+    }
+
+    /// Advance the live batch one step: replay each sequence's routing —
+    /// one decode token, or a whole prefill chunk — against the
+    /// persistent caches (misses demand-transfer and stall; the pin set
+    /// tracks every expert the step executes, so a peer's miss can never
+    /// evict one), then charge the step's compute amortized over every
+    /// token the step consumes (a prefill chunk's union expert set
+    /// streams once — the Sarathi prefill term).  Sequences whose trace
+    /// ends retire immediately.
     fn step_once(&mut self) {
-        let b = self.in_flight.len();
-        debug_assert!(b > 0);
+        debug_assert!(!self.in_flight.is_empty());
         let quant = self.spec.quant;
-        let mut compute = self.cost.head_time(b);
+        let counts: Vec<usize> =
+            self.in_flight.iter().map(|seq| self.tokens_this_step(seq)).collect();
+        let t: usize = counts.iter().sum();
+        let mut compute = self.cost.head_time(t);
         for l in 0..self.spec.n_layers {
-            // the live batch's routed experts at this layer this step:
-            // the pin set, and the step's distinct-expert working set
+            // the step's routed experts at this layer — the pin set and
+            // the distinct-expert working set across every consumed token
             let mut pinned: Vec<usize> = Vec::new();
             let mut assignments = 0usize;
-            for seq in &self.in_flight {
-                let Some(experts) = seq.req.routing.get(seq.step).and_then(|s| s.get(l)) else {
-                    continue;
-                };
-                for &e in experts {
-                    assignments += 1;
-                    if !pinned.contains(&e) {
-                        pinned.push(e);
-                    }
-                }
-            }
-            for i in 0..self.in_flight.len() {
-                let step = self.in_flight[i].step;
-                let Some(experts) = self.in_flight[i].req.routing.get(step).and_then(|s| s.get(l))
-                else {
-                    continue;
-                };
-                for &e in experts {
-                    let hit = self.cache.layers[l].request(e);
-                    if !hit {
-                        self.pcie.demand_h2d(&self.cost, &mut self.clock, quant);
-                        if self.cache.layers[l].insert(e, &pinned).is_some() {
-                            self.pcie.evict_d2h(&self.cost, quant);
+            for (seq, &c) in self.in_flight.iter().zip(&counts) {
+                for step in seq.step..seq.step + c {
+                    let Some(experts) = seq.req.routing.get(step).and_then(|s| s.get(l)) else {
+                        continue;
+                    };
+                    for &e in experts {
+                        assignments += 1;
+                        if !pinned.contains(&e) {
+                            pinned.push(e);
                         }
                     }
                 }
             }
-            compute += self.cost.attn_time(b)
+            for (seq, &c) in self.in_flight.iter().zip(&counts) {
+                for step in seq.step..seq.step + c {
+                    let Some(experts) = seq.req.routing.get(step).and_then(|s| s.get(l)) else {
+                        continue;
+                    };
+                    for &e in experts {
+                        let hit = self.cache.layers[l].request(e);
+                        if !hit {
+                            self.pcie.demand_h2d(&self.cost, &mut self.clock, quant);
+                            if self.cache.layers[l].insert(e, &pinned).is_some() {
+                                self.pcie.evict_d2h(&self.cost, quant);
+                            }
+                        }
+                    }
+                }
+            }
+            compute += self.cost.attn_time(t)
                 + if pinned.is_empty() {
                     0.0
                 } else {
@@ -339,14 +372,17 @@ impl Replica {
         self.cache.token_tick();
 
         // advance cursors; retire finished sequences immediately — their
-        // slots (and their share of compute and cache traffic) free now
+        // slots (and their share of compute and cache traffic) free now.
+        // `counts` is indexed in the original in-flight order, which the
+        // removal-by-index walk preserves.
         let now = self.clock.now();
         let mut i = 0;
-        while i < self.in_flight.len() {
+        for &c in &counts {
             let seq = &mut self.in_flight[i];
-            seq.step += 1;
+            let before = seq.step;
+            seq.step += c;
             let first_at = seq.req.prompt_tokens.max(1).min(seq.req.routing.len().max(1));
-            if seq.step == first_at {
+            if before < first_at && seq.step >= first_at {
                 seq.first_token = now;
             }
             if seq.step >= seq.req.routing.len() {
@@ -456,12 +492,17 @@ mod tests {
         generate(&wl, &profiles, s.n_layers, s.n_experts, s.top_k)
     }
 
-    /// A hand-built request with a chosen output length (slot-reuse and
-    /// early-retirement tests need controlled skew).
-    fn req_with_len(id: u64, out: usize, s: &ReplicaSpec, seed: u64) -> ClusterRequest {
+    /// A hand-built request with chosen prompt/output lengths (slot-reuse,
+    /// early-retirement and chunked-prefill tests need controlled shapes).
+    fn req_shaped(
+        id: u64,
+        prompt_tokens: usize,
+        out: usize,
+        s: &ReplicaSpec,
+        seed: u64,
+    ) -> ClusterRequest {
         let profiles = TaskProfile::synthetic(1, s.n_layers, s.n_experts, s.capacity, 0.9);
         let mut rng = Rng::new(seed);
-        let prompt_tokens = 1;
         let routing = (0..prompt_tokens + out)
             .map(|_| {
                 (0..s.n_layers)
@@ -478,6 +519,11 @@ mod tests {
             routing,
             plan: profiles[0].plan(),
         }
+    }
+
+    /// A one-prompt-token request with a chosen output length.
+    fn req_with_len(id: u64, out: usize, s: &ReplicaSpec, seed: u64) -> ClusterRequest {
+        req_shaped(id, 1, out, s, seed)
     }
 
     #[test]
@@ -621,6 +667,57 @@ mod tests {
             assert!(same > 0.99, "same-task planned overlap {same}");
             assert!(other < same, "other-task overlap {other} >= {same}");
         }
+    }
+
+    /// Chunked prefill consumes the same routed traffic in fewer,
+    /// cheaper-per-prompt-token steps: TTFT falls, while cache request
+    /// totals and output lengths are identical to token-at-a-time.
+    #[test]
+    fn chunked_prefill_cuts_ttft_on_identical_traffic() {
+        let s = spec();
+        let run = |chunk: usize| {
+            let mut r =
+                Replica::new(0, s.clone(), SchedulerMode::Continuous).with_prefill_chunk(chunk);
+            r.enqueue(req_shaped(0, 48, 4, &s, 7));
+            r.run_until(f64::INFINITY, 2);
+            r
+        };
+        let r1 = run(1);
+        let r8 = run(8);
+        assert_eq!(r1.completions.len(), 1);
+        assert_eq!(r8.completions.len(), 1);
+        let (c1, c8) = (&r1.completions[0], &r8.completions[0]);
+        assert!(
+            c8.ttft() < c1.ttft(),
+            "chunk=8 ttft {:.4}s >= chunk=1 ttft {:.4}s",
+            c8.ttft(),
+            c1.ttft()
+        );
+        assert!(c8.latency() < c1.latency());
+        assert_eq!(c1.output_tokens, c8.output_tokens);
+        // same pre-drawn routing replayed → identical cache lookup totals
+        assert_eq!(r1.cache.total_stats().requests(), r8.cache.total_stats().requests());
+    }
+
+    /// A chunk never crosses the prompt boundary: the step that consumes
+    /// the last prompt token lands the first output token, and decode
+    /// still emits exactly one token per step afterwards.
+    #[test]
+    fn chunk_clamps_to_prompt_boundary() {
+        let s = spec();
+        let mut r = Replica::new(0, s.clone(), SchedulerMode::Continuous).with_prefill_chunk(32);
+        // 5-token prompt (not a multiple of the chunk), 3 output tokens
+        r.enqueue(req_shaped(0, 5, 3, &s, 11));
+        let mut steps = 0;
+        while r.has_work() {
+            r.run_one_step(1);
+            steps += 1;
+            assert!(steps < 100, "replica failed to drain");
+        }
+        // 1 prefill step (chunk clamps 32 → 5) + 3 decode steps
+        assert_eq!(steps, 4);
+        let c = &r.completions[0];
+        assert!(c.first_token > c.started && c.first_token < c.finished);
     }
 
     #[test]

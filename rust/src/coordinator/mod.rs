@@ -6,12 +6,15 @@
 //! the model (constructed *inside* the thread by a `Send` factory) and
 //! drives a [`Scheduler`].  At every token step the scheduler admits
 //! queued requests into free decode slots (up to `max_batch`), advances
-//! all in-flight sequences exactly one token through the step-level
-//! [`Decoder`], and retires sequences the moment they hit EOS — so a long
-//! sequence never holds finished slots hostage and freed slots re-admit
-//! immediately.  [`SchedulerMode::Static`] recovers the legacy
-//! drain-batch-then-decode-to-completion behaviour for comparison
-//! (`--scheduler static|continuous` on the CLI).
+//! all in-flight sequences through the step-level [`Decoder`] — decodes
+//! by exactly one token, prompts still in prefill by up to
+//! [`ServerConfig::prefill_chunk`] prompt tokens piggybacked on the same
+//! step (Sarathi-style chunked prefill, so a long prompt can never stall
+//! a live decode's next token) — and retires sequences the moment they
+//! hit EOS, so a long sequence never holds finished slots hostage and
+//! freed slots re-admit immediately.  [`SchedulerMode::Static`] recovers
+//! the legacy drain-batch-then-decode-to-completion behaviour for
+//! comparison (`--scheduler static|continuous` on the CLI).
 
 pub mod workload;
 
@@ -65,14 +68,21 @@ impl SeqFinish {
 pub trait Decoder {
     /// Admit a sequence into the in-flight set; returns its handle.
     fn admit(&mut self, prompt: &[usize], max_output: usize) -> Result<u64>;
-    /// Advance every in-flight sequence exactly one token.  Sequences
-    /// hitting EOS or their budget retire immediately and are returned —
-    /// their slots are free before the next step.
+    /// Advance every in-flight sequence one step: decodes emit exactly
+    /// one token, prefilling sequences consume up to the configured
+    /// prefill chunk of prompt tokens.  Sequences hitting EOS or their
+    /// budget retire immediately and are returned — their slots are free
+    /// before the next step.
     fn step(&mut self) -> Result<Vec<SeqFinish>>;
     /// Number of in-flight sequences.
     fn active(&self) -> usize;
     /// Current simulated time (seconds).
     fn now(&self) -> f64;
+    /// Per-step prompt-token budget for prefilling sequences (chunked
+    /// prefill).  The scheduler sets this once from
+    /// [`ServerConfig::prefill_chunk`]; decoders without a prefill
+    /// concept may ignore it (the default does).
+    fn set_prefill_chunk(&mut self, _chunk: usize) {}
 }
 
 /// How the scheduler fills decode slots.
@@ -133,6 +143,13 @@ pub struct ServerConfig {
     /// Default output budget (callers may override per request).
     pub max_output: usize,
     pub scheduler: SchedulerMode,
+    /// Per-step token budget for prompt prefill (`--prefill-chunk`): a
+    /// sequence still in prefill consumes up to this many prompt tokens
+    /// per scheduler tick, piggybacked on the same step that advances
+    /// every in-flight decode by exactly one token — so a long prompt
+    /// shortens its own TTFT by `~chunk×` without ever stalling live
+    /// decodes.  1 (the default) recovers token-at-a-time prefill.
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServerConfig {
@@ -142,6 +159,7 @@ impl Default for ServerConfig {
             batch_wait: Duration::from_millis(2),
             max_output: 32,
             scheduler: SchedulerMode::Continuous,
+            prefill_chunk: 1,
         }
     }
 }
@@ -151,6 +169,8 @@ pub struct ServerStats {
     pub requests: u64,
     /// Token steps the scheduler executed.
     pub steps: u64,
+    /// Prefill chunk the scheduler ran with (1 = token-at-a-time).
+    pub prefill_chunk: usize,
     pub total_output_tokens: u64,
     /// Decoder simulated clock at shutdown.
     pub total_sim_seconds: f64,
@@ -192,7 +212,8 @@ pub struct Scheduler<D: Decoder> {
 }
 
 impl<D: Decoder> Scheduler<D> {
-    pub fn new(dec: D, cfg: ServerConfig) -> Scheduler<D> {
+    pub fn new(mut dec: D, cfg: ServerConfig) -> Scheduler<D> {
+        dec.set_prefill_chunk(cfg.prefill_chunk.max(1));
         Scheduler {
             dec,
             cfg,
@@ -276,6 +297,7 @@ impl<D: Decoder> Scheduler<D> {
     }
 
     pub fn into_stats(mut self) -> ServerStats {
+        self.stats.prefill_chunk = self.cfg.prefill_chunk.max(1);
         self.stats.total_sim_seconds = self.dec.now();
         if !self.batch_sizes.is_empty() {
             self.stats.mean_batch_size =
@@ -458,6 +480,7 @@ mod tests {
             batch_wait: Duration::from_millis(50),
             max_output: 32,
             scheduler,
+            prefill_chunk: 1,
         }
     }
 
@@ -570,6 +593,7 @@ mod tests {
             batch_wait: Duration::from_millis(50),
             max_output: 8,
             scheduler: SchedulerMode::Continuous,
+            prefill_chunk: 1,
         };
         let server = Server::start(|| Ok(Mock::new(0.5)), cfg);
         let rxs: Vec<_> = (0..6).map(|i| server.submit(vec![i, i + 1], 4)).collect();
@@ -587,6 +611,7 @@ mod tests {
             batch_wait: Duration::from_millis(200),
             max_output: 8,
             scheduler: SchedulerMode::Continuous,
+            prefill_chunk: 1,
         };
         let server = Server::start(|| Ok(Mock::new(0.5)), cfg);
         let rx = server.submit(vec![7], 4);
@@ -603,6 +628,7 @@ mod tests {
                 batch_wait: Duration::from_millis(1),
                 max_output: 8,
                 scheduler: mode,
+                prefill_chunk: 1,
             };
             let server = Server::start(|| Ok(Mock::new(0.01)), cfg);
             let rxs: Vec<_> = (0..30).map(|i| server.submit(vec![i], 4)).collect();

@@ -13,12 +13,18 @@
 //!
 //! Decoding is *step-granular*: a [`DecodeSession`] holds the in-flight
 //! sequences ([`SeqState`]: token buffer, KV handles, per-sequence slice
-//! of the simulated timeline) and [`Engine::step`] advances all of them
-//! exactly one token.  Sequences are admitted mid-flight
-//! ([`Engine::admit`]) and retire at EOS immediately, so the active batch
-//! size — and with it the cost model's per-step amortization — changes
-//! every step.  This is what the coordinator's continuous scheduler and
-//! the cluster layer build on; [`Engine::decode`] and
+//! of the simulated timeline) and [`Engine::step`] advances all of them.
+//! A decoding sequence emits exactly one token per step; a sequence still
+//! in *prefill* consumes up to [`DecodeSession::prefill_chunk`] prompt
+//! tokens in the same step (Sarathi-style chunked prefill): the chunk
+//! runs layer-major with residency resolved over the chunk's union
+//! expert set, and the per-step cost amortization spreads fixed costs
+//! (kernel dispatch, attention/head weight reads, expert weight
+//! streaming) over every token the step consumes.  Sequences are
+//! admitted mid-flight ([`Engine::admit`]) and retire at EOS
+//! immediately, so the active batch size — and with it the amortization
+//! — changes every step.  This is what the coordinator's continuous
+//! scheduler and the cluster layer build on; [`Engine::decode`] and
 //! [`Engine::decode_batch`] are thin run-to-completion wrappers.
 //!
 //! Two time axes are tracked: simulated seconds (the cost model at paper
@@ -109,19 +115,17 @@ pub struct Engine<'a> {
     pub cost: CostModel,
     pub predictor: Option<&'a PredictorWeights>,
     pub profile: Option<&'a RoutingProfile>,
-    /// Device-buffer memo of stacked routed sets (§Perf fast path).  The
-    /// big expert weights upload once per distinct routed set; repeats —
-    /// which MELINOE's fine-tuning makes the common case — re-dispatch
-    /// without any host→device weight traffic.
-    buf_cache: std::cell::RefCell<
-        std::collections::HashMap<(usize, Vec<usize>), std::rc::Rc<StackedBufs>>,
-    >,
     use_buffers: bool,
     /// Decode a fixed number of tokens regardless of EOS (serving-bench
     /// convention): throughput comparisons stay fair when checkpoints
     /// produce different natural output lengths.
     pub ignore_eos: bool,
 }
+
+/// Memo key of one stacked routed set: (layer, sorted-or-as-routed ids).
+type BufKey = (usize, Vec<usize>);
+/// Device-buffer memo of stacked routed sets (§Perf fast path).
+type BufMap = std::collections::HashMap<BufKey, std::rc::Rc<StackedBufs>>;
 
 /// Device-resident stacked expert weights.
 pub struct StackedBufs {
@@ -137,7 +141,6 @@ const BUF_CACHE_CAP: usize = 512;
 /// [`DecodeSession`]; resumable across [`Engine::step`] calls.
 pub struct SeqState {
     pub id: u64,
-    x: Vec<f32>,
     k_caches: Vec<xla::Literal>,
     v_caches: Vec<xla::Literal>,
     pos: usize,
@@ -166,6 +169,19 @@ pub struct DecodeSession {
     pub sparsity_skips: u64,
     seqs: Vec<SeqState>,
     next_id: u64,
+    /// Prompt tokens a prefilling sequence may consume in one step (≥ 1;
+    /// 1 recovers token-at-a-time prefill).  Decodes always emit exactly
+    /// one token per step regardless.
+    prefill_chunk: usize,
+    /// Device-buffer memo of stacked routed sets (§Perf fast path).  The
+    /// big expert weights upload once per distinct routed set; repeats —
+    /// which MELINOE's fine-tuning makes the common case — re-dispatch
+    /// without any host→device weight traffic.  The memo lives on the
+    /// *session* so serving wrappers that rebuild their borrowing
+    /// [`Engine`] view every step keep the fast path warm (ROADMAP
+    /// "session-persistent device buffers").
+    buf_cache: std::cell::RefCell<BufMap>,
+    buf_hits: std::cell::Cell<u64>,
 }
 
 impl DecodeSession {
@@ -179,6 +195,26 @@ impl DecodeSession {
         self.clock.now()
     }
 
+    /// Per-step prompt-token budget for prefilling sequences.
+    pub fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
+    }
+
+    /// Set the per-step prefill chunk (clamped to ≥ 1).
+    pub fn set_prefill_chunk(&mut self, chunk: usize) {
+        self.prefill_chunk = chunk.max(1);
+    }
+
+    /// Distinct routed sets memoized as device buffers.
+    pub fn buf_cache_entries(&self) -> usize {
+        self.buf_cache.borrow().len()
+    }
+
+    /// Dispatches served from the device-buffer memo (no re-upload).
+    pub fn buf_cache_hits(&self) -> u64 {
+        self.buf_hits.get()
+    }
+
     /// Cache/transfer snapshot (callers fill in `requests`).
     pub fn report_base(&self) -> Report {
         Report {
@@ -189,6 +225,19 @@ impl DecodeSession {
             wall_seconds: 0.0,
         }
     }
+}
+
+/// One step's mutable view of the session, split from the sequence being
+/// stepped so the borrow checker can hand out disjoint pieces.
+struct StepCtx<'s> {
+    cache: &'s mut ExpertCache,
+    pcie: &'s mut TransferEngine,
+    clock: &'s mut SimClock,
+    trace: &'s mut ActivationTrace,
+    cpu_execs: &'s mut u64,
+    sparsity_skips: &'s mut u64,
+    bufs: &'s std::cell::RefCell<BufMap>,
+    buf_hits: &'s std::cell::Cell<u64>,
 }
 
 impl<'a> Engine<'a> {
@@ -209,7 +258,6 @@ impl<'a> Engine<'a> {
             cost,
             predictor: None,
             profile: None,
-            buf_cache: std::cell::RefCell::new(std::collections::HashMap::new()),
             use_buffers,
             ignore_eos: false,
         }
@@ -220,10 +268,18 @@ impl<'a> Engine<'a> {
         self
     }
 
-    /// Stacked routed-set weights as device buffers (memoized).
-    fn stacked_buffers(&self, layer: usize, idx: &[usize]) -> Result<std::rc::Rc<StackedBufs>> {
+    /// Stacked routed-set weights as device buffers, memoized in the
+    /// session (`memo`/`hits` are the session's cells).
+    fn stacked_buffers(
+        &self,
+        memo: &std::cell::RefCell<BufMap>,
+        hits: &std::cell::Cell<u64>,
+        layer: usize,
+        idx: &[usize],
+    ) -> Result<std::rc::Rc<StackedBufs>> {
         let key = (layer, idx.to_vec());
-        if let Some(hit) = self.buf_cache.borrow().get(&key) {
+        if let Some(hit) = memo.borrow().get(&key) {
+            hits.set(hits.get() + 1);
             return Ok(hit.clone());
         }
         let st = self.weights.stack_experts(layer, idx, self.cfg.d_model, self.cfg.d_ff)?;
@@ -234,7 +290,7 @@ impl<'a> Engine<'a> {
             wu: self.rt.to_device(&host(&st.wu)?, &[k, dff, d])?,
             wd: self.rt.to_device(&host(&st.wd)?, &[k, d, dff])?,
         });
-        let mut cache = self.buf_cache.borrow_mut();
+        let mut cache = memo.borrow_mut();
         if cache.len() >= BUF_CACHE_CAP {
             cache.clear();
         }
@@ -249,6 +305,8 @@ impl<'a> Engine<'a> {
     /// exact (validated by `test_moe_ffn_zero_gates`).
     fn run_experts(
         &self,
+        memo: &std::cell::RefCell<BufMap>,
+        hits: &std::cell::Cell<u64>,
         layer: usize,
         idx: &[usize],
         gates: &[f32],
@@ -267,7 +325,7 @@ impl<'a> Engine<'a> {
             (idx, gates)
         };
         if self.use_buffers {
-            let bufs = self.stacked_buffers(layer, idx)?;
+            let bufs = self.stacked_buffers(memo, hits, layer, idx)?;
             self.rt.expert_group_b(gates, h2, &bufs.wg, &bufs.wu, &bufs.wd)
         } else {
             let st = self.weights.stack_experts(layer, idx, self.cfg.d_model, self.cfg.d_ff)?;
@@ -352,22 +410,20 @@ impl<'a> Engine<'a> {
         (sel, skips)
     }
 
-    /// Resolve residency for the selected experts of one (seq, layer) and
-    /// advance the clock.  Returns the number of CPU-executed experts.
-    #[allow(clippy::too_many_arguments)]
+    /// Resolve residency for one token's selected experts at one layer
+    /// and advance the clock on demand misses.  `pinned` is the whole
+    /// chunk's union expert set at this layer, so resolving one chunk
+    /// token can never evict an expert another chunk token executes.
     fn resolve_residency(
         &self,
         layer: usize,
         selected: &[(usize, f32)],
-        cache: &mut ExpertCache,
-        pcie: &mut TransferEngine,
-        clock: &mut SimClock,
-        cpu_execs: &mut u64,
+        pinned: &[usize],
+        ctx: &mut StepCtx,
     ) {
-        let pinned: Vec<usize> = selected.iter().map(|(e, _)| *e).collect();
         let quant = self.policy.quant;
         for &(e, _) in selected {
-            let hit = cache.layer(layer).request(e);
+            let hit = ctx.cache.layer(layer).request(e);
             if hit {
                 continue;
             }
@@ -377,89 +433,121 @@ impl<'a> Engine<'a> {
                 let gpu_t =
                     self.cost.transfer_time(quant) + self.cost.expert_exec_time(1, 1, quant);
                 if cpu_t < gpu_t {
-                    clock.advance(cpu_t);
-                    *cpu_execs += 1;
+                    ctx.clock.advance(cpu_t);
+                    *ctx.cpu_execs += 1;
                     continue; // no residency change
                 }
             }
-            pcie.demand_h2d(&self.cost, clock, quant);
-            if let Some(_evicted) = cache.layer(layer).insert(e, &pinned) {
-                pcie.evict_d2h(&self.cost, quant);
+            ctx.pcie.demand_h2d(&self.cost, ctx.clock, quant);
+            if let Some(_evicted) = ctx.cache.layer(layer).insert(e, pinned) {
+                ctx.pcie.evict_d2h(&self.cost, quant);
             }
         }
     }
 
-    /// One forward step for one sequence.  `batch` is the number of
-    /// in-flight sequences sharing this token step: attention/head weight
-    /// reads and expert weight streaming amortize across the live batch
-    /// (the GPU runs one kernel for all members), while per-token MXU
-    /// compute and demand transfers do not.  Returns the logits (when
-    /// requested) and the per-layer expert selection.
-    #[allow(clippy::too_many_arguments)]
-    fn step_seq(
+    /// One forward step for one sequence, covering `tokens` — a single
+    /// decode token, or a chunked-prefill slice of the prompt.  The chunk
+    /// runs layer-major: every chunk token advances through layer ℓ (KV
+    /// appended in order, so the numerics match token-at-a-time decoding
+    /// exactly) before the chunk moves to layer ℓ+1, which lets residency
+    /// resolve under the chunk's union expert set and the cost model
+    /// charge the union's weight streaming once per layer.
+    ///
+    /// `step_tokens` is the total number of tokens the whole live batch
+    /// consumes this step: fixed per-step costs (kernel dispatch,
+    /// attention/head weight reads, expert weight streaming) amortize
+    /// across it, per-token MXU compute and demand transfers do not.
+    /// With single-token slices and `step_tokens` = live batch size this
+    /// reduces exactly to the pre-chunking decode step.  Returns the last
+    /// token's logits (when requested) and per-token per-layer selections.
+    fn step_chunk(
         &self,
         st: &mut SeqState,
-        token: usize,
-        batch: usize,
-        cache: &mut ExpertCache,
-        pcie: &mut TransferEngine,
-        clock: &mut SimClock,
-        trace: &mut ActivationTrace,
-        cpu_execs: &mut u64,
-        skips: &mut u64,
+        tokens: &[usize],
+        step_tokens: usize,
+        ctx: &mut StepCtx,
         want_logits: bool,
-    ) -> Result<(Option<crate::tensor::HostTensor>, Vec<Vec<usize>>)> {
-        let b = batch.max(1);
-        let bf = b as f64;
-        st.x = self.weights.embed.row(token.min(self.cfg.vocab_size - 1)).to_vec();
-        let mut step_sel: Vec<Vec<usize>> = Vec::with_capacity(self.cfg.n_layers);
+    ) -> Result<(Option<crate::tensor::HostTensor>, Vec<Vec<Vec<usize>>>)> {
+        let c = tokens.len();
+        debug_assert!(c >= 1, "a step consumes at least one token");
+        let t = step_tokens.max(1);
+        let tf = t as f64;
+        let mut xs: Vec<Vec<f32>> = tokens
+            .iter()
+            .map(|&tok| self.weights.embed.row(tok.min(self.cfg.vocab_size - 1)).to_vec())
+            .collect();
+        let mut sel_tokens: Vec<Vec<Vec<usize>>> = vec![Vec::with_capacity(self.cfg.n_layers); c];
         for l in 0..self.cfg.n_layers {
-            let out = self.rt.layer_step(
-                &st.x,
-                &self.weights.layers[l],
-                &st.k_caches[l],
-                &st.v_caches[l],
-                st.pos,
-            )?;
-            st.k_caches[l] = out.k_cache;
-            st.v_caches[l] = out.v_cache;
-            // batched attention: the full kernel cost amortizes over the
-            // live batch (one member's share per call)
-            clock.advance(self.cost.attn_time(b) / bf);
-
-            let (sel, s) = self.select(&out.probs, cache, l);
-            *skips += s;
-            for &(e, _) in &sel {
-                trace.counts[l][e] += 1;
+            // chunk forward at this layer, in token order: each token's
+            // attention sees every earlier chunk token's freshly written KV
+            let mut outs = Vec::with_capacity(c);
+            for (i, x) in xs.iter().enumerate() {
+                let out = self.rt.layer_step(
+                    x,
+                    &self.weights.layers[l],
+                    &st.k_caches[l],
+                    &st.v_caches[l],
+                    st.pos + i,
+                )?;
+                st.k_caches[l] = out.k_cache;
+                st.v_caches[l] = out.v_cache;
+                // one token's share of the step's batched attention cost
+                ctx.clock.advance(self.cost.attn_time(t) / tf);
+                outs.push((out.probs, out.h2, out.h_res));
             }
-            step_sel.push(sel.iter().map(|(e, _)| *e).collect());
-            self.resolve_residency(l, &sel, cache, pcie, clock, cpu_execs);
-
-            if sel.is_empty() {
-                st.x = out.h_res;
-            } else {
-                let idx: Vec<usize> = sel.iter().map(|(e, _)| *e).collect();
-                let gates: Vec<f32> = sel.iter().map(|(_, g)| *g).collect();
-                let y = self.run_experts(l, &idx, &gates, &out.h2)?;
-                let exec = if b == 1 {
-                    self.cost.expert_exec_time(idx.len(), idx.len(), self.policy.quant)
+            // per-token routing; accumulate the chunk's union working set
+            let mut selections: Vec<Vec<(usize, f32)>> = Vec::with_capacity(c);
+            let mut union: Vec<usize> = Vec::new();
+            let mut assignments = 0usize;
+            for (i, (probs, _, _)) in outs.iter().enumerate() {
+                let (sel, s) = self.select(probs, ctx.cache, l);
+                *ctx.sparsity_skips += s;
+                for &(e, _) in &sel {
+                    ctx.trace.counts[l][e] += 1;
+                    assignments += 1;
+                    if !union.contains(&e) {
+                        union.push(e);
+                    }
+                }
+                sel_tokens[i].push(sel.iter().map(|(e, _)| *e).collect());
+                selections.push(sel);
+            }
+            // residency: each token resolves against the cache with the
+            // chunk union pinned — a miss transfers once, later chunk
+            // tokens hit, and nothing the chunk executes can be evicted
+            for sel in &selections {
+                self.resolve_residency(l, sel, &union, ctx);
+            }
+            // execute: real numerics per token; the union's weights
+            // stream once per layer in the cost model (chunk_exec_time)
+            for (i, (_, h2, h_res)) in outs.into_iter().enumerate() {
+                let sel = &selections[i];
+                if sel.is_empty() {
+                    xs[i] = h_res;
                 } else {
-                    // weight streaming amortizes across the batch; the
-                    // per-token MXU compute does not
-                    self.cost.expert_exec_time(idx.len(), idx.len(), self.policy.quant) / bf
-                        + self.cost.dims.expert_flops() * idx.len() as f64 / self.cost.gpu.flops
-                };
-                clock.advance(exec);
-                st.x = add(&out.h_res, &y);
+                    let idx: Vec<usize> = sel.iter().map(|(e, _)| *e).collect();
+                    let gates: Vec<f32> = sel.iter().map(|(_, g)| *g).collect();
+                    let y = self.run_experts(ctx.bufs, ctx.buf_hits, l, &idx, &gates, &h2)?;
+                    xs[i] = add(&h_res, &y);
+                }
+            }
+            if !union.is_empty() {
+                ctx.clock.advance(self.cost.chunk_exec_time(
+                    union.len(),
+                    assignments,
+                    t,
+                    self.policy.quant,
+                ));
             }
         }
-        st.pos += 1;
+        st.pos += c;
         if want_logits {
-            clock.advance(self.cost.head_time(b) / bf);
-            let logits = self.rt.lm_head(&st.x, &self.weights.lnf_lit, &self.weights.embed_lit)?;
-            Ok((Some(logits), step_sel))
+            ctx.clock.advance(self.cost.head_time(t) / tf);
+            let last = xs.last().expect("chunk has at least one token");
+            let logits = self.rt.lm_head(last, &self.weights.lnf_lit, &self.weights.embed_lit)?;
+            Ok((Some(logits), sel_tokens))
         } else {
-            Ok((None, step_sel))
+            Ok((None, sel_tokens))
         }
     }
 
@@ -480,7 +568,6 @@ impl<'a> Engine<'a> {
         }
         Ok(SeqState {
             id,
-            x: vec![0.0; self.cfg.d_model],
             k_caches,
             v_caches,
             pos: 0,
@@ -493,7 +580,8 @@ impl<'a> Engine<'a> {
         })
     }
 
-    /// Start an empty decode session.
+    /// Start an empty decode session (prefill chunk 1 — token-at-a-time;
+    /// see [`DecodeSession::set_prefill_chunk`]).
     pub fn session(&self) -> DecodeSession {
         DecodeSession {
             clock: SimClock::new(),
@@ -504,6 +592,9 @@ impl<'a> Engine<'a> {
             sparsity_skips: 0,
             seqs: Vec::new(),
             next_id: 0,
+            prefill_chunk: 1,
+            buf_cache: std::cell::RefCell::new(BufMap::new()),
+            buf_hits: std::cell::Cell::new(0),
         }
     }
 
@@ -515,6 +606,10 @@ impl<'a> Engine<'a> {
     /// the cache up additively — a refresh never drops the planned
     /// working set, and warm residents outside it are evicted only under
     /// capacity pressure, in normal policy order.
+    ///
+    /// The per-request plan is predicted *once* here, from the whole
+    /// prompt, and reused across every prefill chunk the sequence
+    /// consumes — chunked prefill never re-runs the predictor per chunk.
     pub fn admit(
         &self,
         sess: &mut DecodeSession,
@@ -552,40 +647,62 @@ impl<'a> Engine<'a> {
         Ok(id)
     }
 
-    /// Advance every in-flight sequence exactly one token.  The cost
-    /// model's per-step amortization uses the *current* active batch
-    /// size, which changes as sequences retire.  Sequences that hit EOS
-    /// or their budget retire immediately — their slots (and their share
-    /// of the batch's compute and cache traffic) free before the next
-    /// step.
+    /// Advance every in-flight sequence one step: decodes emit exactly
+    /// one token; sequences still in prefill consume up to the session's
+    /// [`DecodeSession::prefill_chunk`] prompt tokens (the chunk covering
+    /// the last prompt token also emits the first output token).  The
+    /// cost model's per-step amortization uses the *total tokens the
+    /// step consumes* across the live batch — decodes piggyback on a
+    /// prefill chunk's weight reads and vice versa — and changes as
+    /// sequences retire.  Sequences that hit EOS or their budget retire
+    /// immediately — their slots (and their share of the batch's compute
+    /// and cache traffic) free before the next step.
     pub fn step(&self, sess: &mut DecodeSession) -> Result<Vec<SeqFinish>> {
         let batch = sess.seqs.len();
         if batch == 0 {
             return Ok(Vec::new());
         }
-        let mut single_sel: Option<Vec<Vec<usize>>> = None;
-        for i in 0..batch {
-            let (token, want) = {
-                let st = &sess.seqs[i];
-                let token = if st.pos < st.prompt.len() {
-                    st.prompt[st.pos]
+        let chunk = sess.prefill_chunk.max(1);
+        // per-sequence token counts this step: prefills take a chunk
+        // (clamped to the prompt boundary), decodes exactly one
+        let counts: Vec<usize> = sess
+            .seqs
+            .iter()
+            .map(|st| {
+                let left = st.prompt.len().saturating_sub(st.pos);
+                if left > 0 {
+                    chunk.min(left)
                 } else {
-                    *st.tokens.last().expect("active sequence past its prompt has tokens")
-                };
-                (token, st.pos + 1 >= st.prompt.len())
+                    1
+                }
+            })
+            .collect();
+        let step_tokens: usize = counts.iter().sum();
+        let mut single_sel: Option<Vec<Vec<Vec<usize>>>> = None;
+        for i in 0..batch {
+            let (tokens, want) = {
+                let st = &sess.seqs[i];
+                if st.pos < st.prompt.len() {
+                    let c = counts[i];
+                    (st.prompt[st.pos..st.pos + c].to_vec(), st.pos + c >= st.prompt.len())
+                } else {
+                    let last =
+                        *st.tokens.last().expect("active sequence past its prompt has tokens");
+                    (vec![last], true)
+                }
             };
-            let (logits, sel) = self.step_seq(
-                &mut sess.seqs[i],
-                token,
-                batch,
-                &mut sess.cache,
-                &mut sess.pcie,
-                &mut sess.clock,
-                &mut sess.trace,
-                &mut sess.cpu_execs,
-                &mut sess.sparsity_skips,
-                want,
-            )?;
+            let mut ctx = StepCtx {
+                cache: &mut sess.cache,
+                pcie: &mut sess.pcie,
+                clock: &mut sess.clock,
+                trace: &mut sess.trace,
+                cpu_execs: &mut sess.cpu_execs,
+                sparsity_skips: &mut sess.sparsity_skips,
+                bufs: &sess.buf_cache,
+                buf_hits: &sess.buf_hits,
+            };
+            let (logits, sel) =
+                self.step_chunk(&mut sess.seqs[i], &tokens, step_tokens, &mut ctx, want)?;
             if batch == 1 {
                 single_sel = Some(sel);
             }
@@ -603,7 +720,9 @@ impl<'a> Engine<'a> {
         }
         sess.cache.token_tick();
         if let Some(sel) = single_sel {
-            sess.trace.steps.push(sel);
+            // per-token entries keep the Fig. 7–10 trace shape identical
+            // across chunk sizes
+            sess.trace.steps.extend(sel);
         }
         // retire sequences that hit EOS or their budget
         let now = sess.clock.now();
@@ -671,14 +790,23 @@ impl<'a> Engine<'a> {
         let mut pcie = TransferEngine::new();
         let mut trace = ActivationTrace::new(self.cfg.n_layers, self.cfg.n_experts);
         let (mut cpu, mut skips) = (0u64, 0u64);
+        let bufs = std::cell::RefCell::new(BufMap::new());
+        let buf_hits = std::cell::Cell::new(0u64);
         let mut st = self.new_seq(0, tokens, 0, PrefetchPlan::empty(self.cfg.n_layers), 0.0)?;
         let mut nlls = Vec::with_capacity(tokens.len().saturating_sub(1));
         for (i, &t) in tokens.iter().enumerate() {
             let want = i + 1 < tokens.len();
-            let (lg, _sel) = self.step_seq(
-                &mut st, t, 1, &mut cache, &mut pcie, &mut clock, &mut trace, &mut cpu,
-                &mut skips, want,
-            )?;
+            let mut ctx = StepCtx {
+                cache: &mut cache,
+                pcie: &mut pcie,
+                clock: &mut clock,
+                trace: &mut trace,
+                cpu_execs: &mut cpu,
+                sparsity_skips: &mut skips,
+                bufs: &bufs,
+                buf_hits: &buf_hits,
+            };
+            let (lg, _sel) = self.step_chunk(&mut st, &[t], 1, &mut ctx, want)?;
             cache.token_tick();
             if let Some(lg) = lg {
                 nlls.push(crate::eval::token_nll(&lg.data, tokens[i + 1]));

@@ -15,7 +15,9 @@
 //!                     (offline image carries no serde/clap/proptest).
 //! * [`tensor`]      — host tensors + `.npz` weight loading.
 //! * [`quant`]       — INT4/INT3 group quantization (HQQ stand-in).
-//! * [`clock`]       — simulated clock + GPU/PCIe cost models (paper Eq. 3).
+//! * [`clock`]       — simulated clock + GPU/PCIe cost models (paper
+//!                     Eq. 3), incl. the chunked-prefill exec term
+//!                     (`CostModel::chunk_exec_time`).
 //! * [`vram`]        — VRAM budget ledger (capacity derivation, Fig. 11).
 //! * [`pcie`]        — H2D/D2H transfer engine + counters (Fig. 1a).
 //! * [`cache`]       — per-layer expert caches: LRU / LFU / γ-discounted
@@ -25,14 +27,17 @@
 //! * [`predictor`]   — activation-predictor inference + prefetch sets
 //!                     (incl. capped union plans for mid-flight refresh).
 //! * [`engine`]      — the offloaded decode engine: step-granular
-//!                     `DecodeSession`s (admit/step/retire-at-EOS) with
+//!                     `DecodeSession`s (admit/step/retire-at-EOS,
+//!                     chunked prefill via `prefill_chunk`, the
+//!                     session-persistent device-buffer memo) with
 //!                     `decode`/`decode_batch` as thin wrappers.
 //! * [`policies`]    — MELINOE + Fiddler / Mixtral-Offloading /
 //!                     DeepSpeed-MoE / FLoE / MoE-Infinity.
 //! * [`coordinator`] — request queue + step-level scheduler: continuous
 //!                     batching (admit every token step, retire at EOS)
-//!                     or static run-to-completion batches; TTFT/TPOT
-//!                     serving stats (see docs/SERVING.md).
+//!                     or static run-to-completion batches; per-step
+//!                     prefill token budget (`--prefill-chunk`);
+//!                     TTFT/TPOT serving stats (see docs/SERVING.md).
 //! * [`eval`]        — ROUGE-L, exact-match accuracy, perplexity.
 //! * [`metrics`]     — throughput/latency/transfer reporting.
 //! * [`repro`]       — one harness per paper table/figure.

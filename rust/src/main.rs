@@ -29,7 +29,8 @@ commands:
   repro <id|all>     regenerate a paper table/figure
                      (table1 fig1a fig1b fig3 table2 table3 fig4 fig5 table4
                       table5 table11 fig6 heatmaps fig11 table12 fig12 fig13
-                      table13 ext_layerwise ext_cluster ext_continuous)
+                      table13 ext_layerwise ext_cluster ext_continuous
+                      ext_prefill)
   serve              step-level serving loop over the eval workload
   cluster            multi-replica serving simulation: compare balancers
   decode             decode one prompt, print tokens + transfer stats
@@ -47,6 +48,10 @@ common options:
   --batch <n>        serve/cluster: decode slots per engine/replica
   --scheduler <m>    serve/cluster: continuous (step-level admission,
                      default) | static (run-to-completion batches)
+  --prefill-chunk <n> serve/cluster: prompt tokens a prefilling sequence
+                     consumes per step, piggybacked on live decodes
+                     (default 1 = token-at-a-time; 8-32 cuts long-prompt
+                     TTFT, see docs/SERVING.md)
 
 cluster options:
   --replicas <n>     fleet size (default 4)
@@ -109,6 +114,10 @@ impl Decoder for OwnedEngine {
     fn now(&self) -> f64 {
         self.sess.now()
     }
+
+    fn set_prefill_chunk(&mut self, chunk: usize) {
+        self.sess.set_prefill_chunk(chunk);
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -119,6 +128,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_output = args.get_usize("tokens", 24)?;
     let max_batch = args.get_usize("batch", 4)?;
     let scheduler = SchedulerMode::parse(args.get_or("scheduler", "continuous"))?;
+    let prefill_chunk = args.get_usize("prefill-chunk", 1)?.max(1);
     let ds = args.get_or("dataset", "dolly").to_string();
 
     // load the prompts up-front (the server thread owns the engine)
@@ -148,6 +158,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             batch_wait: std::time::Duration::from_millis(5),
             max_output,
             scheduler,
+            prefill_chunk,
         },
     );
 
@@ -161,6 +172,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let stats = server.shutdown()?;
     let mut t = Table::new(&["metric", "value"]);
     t.row(vec!["scheduler".into(), format!("{scheduler:?}").to_lowercase()]);
+    t.row(vec!["prefill chunk".into(), stats.prefill_chunk.to_string()]);
     t.row(vec!["requests".into(), stats.requests.to_string()]);
     t.row(vec!["token steps".into(), stats.steps.to_string()]);
     t.row(vec!["mean slot occupancy".into(), fmt2(stats.mean_batch_size)]);
@@ -235,9 +247,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let rate = args.get_f64("rate", 0.0)?;
     let long_frac = args.get_f64("long-frac", 0.0)?.clamp(0.0, 1.0);
     let scheduler = SchedulerMode::parse(args.get_or("scheduler", "continuous"))?;
+    let prefill_chunk = args.get_usize("prefill-chunk", 1)?.max(1);
 
     let mut cfg = cluster::ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu, seed)
-        .with_scheduler(scheduler);
+        .with_scheduler(scheduler)
+        .with_prefill_chunk(prefill_chunk);
     cfg.max_batch = max_batch;
     cfg.workload.output = if long_frac > 0.0 {
         OutputLen::Bimodal { short: (tokens / 8).max(1), long: tokens, long_frac }
@@ -267,9 +281,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     };
     println!(
         "cluster: {} replicas × C={} experts/layer, {} requests over {} tasks ({}), \
-         {} slots/replica, {:?} scheduler",
+         {} slots/replica, {:?} scheduler, prefill chunk {}",
         cfg.replicas, cfg.spec.capacity, n_requests, n_tasks, arrival_desc, cfg.max_batch,
-        scheduler
+        scheduler, cfg.prefill_chunk
     );
 
     let which = args.get_or("balancer", "all");

@@ -186,6 +186,15 @@ pub fn fmt4(x: f64) -> String {
     format!("{x:.4}")
 }
 
+/// "N.NNx" improvement of `value` over `baseline` for latency-like
+/// metrics (baseline / value — higher is better; "n/a" when degenerate).
+pub fn fmt_speedup(baseline: f64, value: f64) -> String {
+    if value <= 0.0 || !baseline.is_finite() || !value.is_finite() {
+        return "n/a".into();
+    }
+    format!("{:.2}x", baseline / value)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -271,6 +280,14 @@ mod tests {
     fn percentiles_cell_format() {
         let p = Percentiles { p50: 0.001, p95: 0.002, p99: 0.003 };
         assert_eq!(p.cell(1e3), "1.00/2.00/3.00");
+    }
+
+    #[test]
+    fn speedup_formats_and_guards() {
+        assert_eq!(fmt_speedup(3.0, 1.5), "2.00x");
+        assert_eq!(fmt_speedup(1.0, 1.0), "1.00x");
+        assert_eq!(fmt_speedup(1.0, 0.0), "n/a");
+        assert_eq!(fmt_speedup(f64::NAN, 1.0), "n/a");
     }
 
     #[test]

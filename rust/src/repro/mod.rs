@@ -228,6 +228,7 @@ pub fn run(id: &str, args: &crate::util::cli::Args) -> Result<()> {
         "ext_layerwise" => ex::ext_layerwise(args),
         "ext_cluster" => ex::ext_cluster(args),
         "ext_continuous" => ex::ext_continuous(args),
+        "ext_prefill" => ex::ext_prefill(args),
         "all" => {
             for id in ex::ALL {
                 println!("\n================ {id} ================");

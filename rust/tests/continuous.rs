@@ -10,11 +10,16 @@
 //! member, and affinity-pure traffic keeps the LFU cache warm across
 //! mid-flight admissions.
 
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
 use melinoe::clock::GpuSpec;
 use melinoe::cluster::workload::{OutputLen, TaskProfile};
 use melinoe::cluster::{balancer, run_cluster, ClusterConfig, ClusterReport};
 use melinoe::coordinator::workload::Arrival;
-use melinoe::coordinator::SchedulerMode;
+use melinoe::coordinator::{
+    Decoder, Request, Response, Scheduler, SchedulerMode, SeqFinish, ServerConfig,
+};
 
 /// Saturated single-task scenario with 10x output-length skew: offered
 /// load ≈ 2.5× a single decode stream's capacity, so scheduling
@@ -87,6 +92,169 @@ fn continuous_keeps_slots_occupied() {
         cont_busy < stat_busy,
         "continuous busy {cont_busy:.3}s >= static busy {stat_busy:.3}s"
     );
+}
+
+// ---------------------------------------------------- scheduler fairness
+// Chunked prefill must piggyback on decode steps, never displace them: a
+// huge prompt admitted mid-flight may not delay an in-flight decode's
+// next token beyond the one step they share.
+
+/// Step-level mock decoder with real prefill semantics: a sequence
+/// consumes up to `chunk` prompt tokens per step while in prefill (the
+/// step covering the last prompt token emits the first output token) and
+/// exactly one output token per step afterwards.  Records the step index
+/// of every emission so tests can assert gap-free decode cadence.
+struct ChunkMock {
+    chunk: usize,
+    step_no: u64,
+    clock: f64,
+    next: u64,
+    seqs: Vec<MockSeq>,
+    /// emissions[seq] — the step index at which each output token landed.
+    emissions: std::collections::HashMap<u64, Vec<u64>>,
+}
+
+struct MockSeq {
+    id: u64,
+    prompt_left: usize,
+    out: Vec<usize>,
+    produced: usize,
+    admitted: f64,
+    first: f64,
+}
+
+impl ChunkMock {
+    fn new() -> ChunkMock {
+        ChunkMock {
+            chunk: 1,
+            step_no: 0,
+            clock: 0.0,
+            next: 0,
+            seqs: Vec::new(),
+            emissions: std::collections::HashMap::new(),
+        }
+    }
+}
+
+impl Decoder for ChunkMock {
+    fn admit(&mut self, prompt: &[usize], max_output: usize) -> anyhow::Result<u64> {
+        let id = self.next;
+        self.next += 1;
+        self.seqs.push(MockSeq {
+            id,
+            prompt_left: prompt.len(),
+            out: (0..max_output.max(1)).collect(),
+            produced: 0,
+            admitted: self.clock,
+            first: 0.0,
+        });
+        Ok(id)
+    }
+
+    fn step(&mut self) -> anyhow::Result<Vec<SeqFinish>> {
+        self.step_no += 1;
+        self.clock += 1.0;
+        let now = self.clock;
+        let mut done = Vec::new();
+        let mut keep = Vec::new();
+        for mut s in self.seqs.drain(..) {
+            if s.prompt_left > self.chunk {
+                // mid-prefill: consume a chunk, no token yet
+                s.prompt_left -= self.chunk;
+                keep.push(s);
+                continue;
+            }
+            // the chunk covering the last prompt token (or a plain
+            // decode step) emits exactly one token
+            s.prompt_left = 0;
+            if s.produced == 0 {
+                s.first = now;
+            }
+            s.produced += 1;
+            self.emissions.entry(s.id).or_default().push(self.step_no);
+            if s.produced >= s.out.len() {
+                done.push(SeqFinish {
+                    seq: s.id,
+                    tokens: s.out,
+                    sim_admitted: s.admitted,
+                    sim_first_token: s.first,
+                    sim_finished: now,
+                });
+            } else {
+                keep.push(s);
+            }
+        }
+        self.seqs = keep;
+        Ok(done)
+    }
+
+    fn active(&self) -> usize {
+        self.seqs.len()
+    }
+
+    fn now(&self) -> f64 {
+        self.clock
+    }
+
+    fn set_prefill_chunk(&mut self, chunk: usize) {
+        self.chunk = chunk.max(1);
+    }
+}
+
+fn submit(
+    s: &mut Scheduler<ChunkMock>,
+    id: u64,
+    prompt: Vec<usize>,
+    out: usize,
+) -> Receiver<Response> {
+    let (tx, rx) = channel();
+    s.enqueue(Request { id, prompt, max_output: out }, tx, Instant::now());
+    rx
+}
+
+/// A 10k-token prompt admitted mid-flight never delays an in-flight
+/// decode's next token beyond one step, at any chunk setting: the decode
+/// emits on every consecutive scheduler step from its first token to its
+/// last, while the monster prompt prefills alongside.
+#[test]
+fn huge_prompt_never_stalls_inflight_decode_at_any_chunk() {
+    for chunk in [1usize, 8, 64, 4096] {
+        let cfg = ServerConfig {
+            max_batch: 4,
+            batch_wait: Duration::from_millis(1),
+            max_output: 16,
+            scheduler: SchedulerMode::Continuous,
+            prefill_chunk: chunk,
+        };
+        let mut s = Scheduler::new(ChunkMock::new(), cfg);
+        // the in-flight decode: 1-token prompt, 16 output tokens
+        let rx_decode = submit(&mut s, 0, vec![7], 16);
+        s.tick().unwrap();
+        s.tick().unwrap();
+        // the monster arrives mid-flight
+        let rx_big = submit(&mut s, 1, vec![0; 10_000], 4);
+        let mut guard = 0;
+        while s.has_work() {
+            s.tick().unwrap();
+            guard += 1;
+            assert!(guard < 20_000, "chunk {chunk}: scheduler failed to drain");
+        }
+        let emissions = &s.decoder().emissions[&0];
+        assert_eq!(emissions.len(), 16, "chunk {chunk}");
+        assert!(
+            emissions.windows(2).all(|w| w[1] - w[0] == 1),
+            "chunk {chunk}: decode cadence has gaps: {emissions:?}"
+        );
+        let decode = rx_decode.recv().unwrap();
+        assert_eq!(decode.tokens.len(), 16);
+        // the monster still finishes: ceil(10000/chunk) prefill steps
+        // (the last one emits its first token) + 3 more decode steps
+        let big = rx_big.recv().unwrap();
+        assert_eq!(big.tokens.len(), 4, "chunk {chunk}");
+        let big_em = &s.decoder().emissions[&1];
+        let expected_first = 2 + 10_000_usize.div_ceil(chunk) as u64;
+        assert_eq!(big_em[0], expected_first, "chunk {chunk}");
+    }
 }
 
 #[test]

@@ -273,6 +273,60 @@ fn session_retires_early_and_admits_mid_flight() {
     assert!(f3.sim_first_token >= f3.sim_admitted);
 }
 
+/// ROADMAP "session-persistent device buffers": the stacked-buffer memo
+/// lives on the `DecodeSession`, so serving wrappers that rebuild their
+/// borrowing `Engine` view every step keep the routed-set fast path warm
+/// across steps.  Two identical sequences route identically, so the
+/// second one's dispatches must hit the memo the first populated — even
+/// though a fresh engine view drives every step.
+#[test]
+fn buf_cache_memo_persists_across_engine_rebuilds() {
+    let Some(ctx) = any_preset() else { return };
+    if std::env::var("MELINOE_NO_BUFCACHE").is_ok() {
+        eprintln!("SKIP: buffer cache disabled via MELINOE_NO_BUFCACHE");
+        return;
+    }
+    let pol = full_residency(&ctx);
+    let parts = ctx.parts(&pol, "dolly").unwrap();
+    let eval = ctx.eval_set("dolly").unwrap();
+    let p = eval.samples[0].prompt.clone();
+    let mut sess = parts.engine(&ctx, GpuSpec::h100()).session();
+    {
+        let engine = parts.engine(&ctx, GpuSpec::h100()).with_ignore_eos(true);
+        engine.admit(&mut sess, &p, 4).unwrap();
+        engine.admit(&mut sess, &p, 4).unwrap();
+    }
+    while sess.active() > 0 {
+        // rebuild the borrowing engine view every step — the serving
+        // wrapper pattern the memo must survive
+        let engine = parts.engine(&ctx, GpuSpec::h100()).with_ignore_eos(true);
+        engine.step(&mut sess).unwrap();
+    }
+    assert!(sess.buf_cache_entries() > 0, "no routed set was memoized");
+    assert!(
+        sess.buf_cache_hits() > 0,
+        "identical routed sets never hit the session memo across rebuilt engine views"
+    );
+}
+
+/// Chunked prefill through the public serving wrapper: the session's
+/// chunk setting shortens the simulated prefill timeline while leaving
+/// the decoded tokens untouched (the full bit-identity sweep lives in
+/// rust/tests/prefill.rs).
+#[test]
+fn session_prefill_chunk_roundtrip() {
+    let Some(ctx) = any_preset() else { return };
+    let pol = full_residency(&ctx);
+    let parts = ctx.parts(&pol, "dolly").unwrap();
+    let engine = parts.engine(&ctx, GpuSpec::h100()).with_ignore_eos(true);
+    let mut sess = engine.session();
+    assert_eq!(sess.prefill_chunk(), 1);
+    sess.set_prefill_chunk(0); // clamps
+    assert_eq!(sess.prefill_chunk(), 1);
+    sess.set_prefill_chunk(16);
+    assert_eq!(sess.prefill_chunk(), 16);
+}
+
 #[test]
 fn gamma_eviction_interpolates() {
     let Some(ctx) = any_preset() else { return };
@@ -332,6 +386,7 @@ fn serving_loop_end_to_end() {
             batch_wait: std::time::Duration::from_millis(5),
             max_output: 8,
             scheduler: SchedulerMode::Continuous,
+            prefill_chunk: 1,
         },
     );
     // submit prompts loaded fresh (server thread owns its own ctx)
