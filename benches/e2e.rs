@@ -69,6 +69,25 @@ fn main() {
     }
     b.finish();
 
+    // ---- layer-ahead transfer overlap (wallclock cost of the pipelined
+    // sim loop at each lookahead depth; the sim-time stall/overlap
+    // numbers come from `melinoe repro ext_overlap`)
+    let mut b = Bench::new("overlap");
+    let pressure = {
+        let mut c = cfg.clone();
+        // capacity below the hot-set size so the pipeline actually fires
+        c.spec.capacity = (c.spec.capacity / 2).max(1);
+        c
+    };
+    for depth in [0usize, 1, 2] {
+        let ocfg = pressure.clone().with_lookahead(depth);
+        b.bench(&format!("cluster 4r/16req tight cache [lookahead={depth}]"), || {
+            let mut bal = cluster::balancer::by_name("expert-affinity").unwrap();
+            std::hint::black_box(cluster::run_cluster(&ocfg, bal.as_mut()).unwrap());
+        });
+    }
+    b.finish();
+
     let dir = melinoe::artifacts_dir();
     let Some(ctx) = ["olmoe-micro", "phi-micro", "mixtral-micro"]
         .iter()

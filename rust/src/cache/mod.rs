@@ -79,6 +79,10 @@ pub struct LayerCache {
     capacity: usize,
     kind: EvictionKind,
     resident: HashSet<usize>,
+    /// Slots held for in-flight lookahead prefetches (reserve/commit
+    /// path): reserved experts are not yet resident, but reservations
+    /// bound how many prefetches the layer can absorb.
+    reserved: HashSet<usize>,
     /// LFU / γ-discounted request counts (per expert).
     counts: Vec<f64>,
     /// LRU timestamps (per expert).
@@ -94,6 +98,7 @@ impl LayerCache {
             capacity: capacity.min(n_experts),
             kind,
             resident: HashSet::new(),
+            reserved: HashSet::new(),
             counts: vec![0.0; n_experts],
             last_used: vec![0; n_experts],
             tick: 0,
@@ -165,6 +170,53 @@ impl LayerCache {
             }
         }
         self.resident.insert(expert);
+        evicted
+    }
+
+    /// Slots currently held for in-flight prefetches.
+    pub fn reserved_len(&self) -> usize {
+        self.reserved.len()
+    }
+
+    pub fn is_reserved(&self, expert: usize) -> bool {
+        self.reserved.contains(&expert)
+    }
+
+    /// Hold a slot for an in-flight lookahead prefetch of `expert`.
+    /// Returns `false` — and the caller skips the prefetch — when the
+    /// expert is already resident or reserved, or when *reservations*
+    /// have saturated the layer's slot count.  Note the bound is on
+    /// outstanding reservations, not physically free slots: on a full
+    /// cache (the pressure regime lookahead targets) prefetch must still
+    /// flow, and the commit evicts in policy order when it lands —
+    /// never touching the step's pin set.
+    pub fn reserve(&mut self, expert: usize) -> bool {
+        if self.capacity == 0
+            || self.resident.contains(&expert)
+            || self.reserved.contains(&expert)
+            || self.reserved.len() >= self.capacity
+        {
+            return false;
+        }
+        self.reserved.insert(expert);
+        true
+    }
+
+    /// Land an in-flight prefetch: clear the reservation and make the
+    /// expert resident.  Eviction (if the cache filled up since the
+    /// reservation) follows normal policy order but never touches
+    /// `pinned` — an arriving prefetch can never evict the step's
+    /// pin set.  When every resident is pinned the arrival is dropped
+    /// (no residency change).  Returns the evicted expert, if any.
+    pub fn commit(&mut self, expert: usize, pinned: &[usize]) -> Option<usize> {
+        self.reserved.remove(&expert);
+        if self.resident.contains(&expert) {
+            return None;
+        }
+        let evicted = self.insert(expert, pinned);
+        if self.resident.contains(&expert) {
+            self.stats.prefetch_loads += 1;
+        }
         evicted
     }
 
@@ -426,6 +478,54 @@ mod tests {
         let loads = cold.prefill_union(&[5, 6, 7, 8, 9]);
         assert_eq!(loads, vec![5, 6, 7, 8]);
         assert_eq!(cold.resident_len(), 4);
+    }
+
+    #[test]
+    fn reserve_commit_roundtrip() {
+        let mut c = LayerCache::new(16, 2, EvictionKind::Lfu);
+        assert!(c.reserve(3));
+        assert!(c.is_reserved(3) && !c.contains(3));
+        assert!(!c.reserve(3), "double reservation refused");
+        assert_eq!(c.reserved_len(), 1);
+        assert_eq!(c.commit(3, &[]), None);
+        assert!(c.contains(3) && !c.is_reserved(3));
+        assert_eq!(c.stats.prefetch_loads, 1);
+        // resident experts are not reservable
+        assert!(!c.reserve(3));
+        // committing an already-resident expert is a no-op
+        assert_eq!(c.commit(3, &[]), None);
+        assert_eq!(c.stats.prefetch_loads, 1);
+    }
+
+    #[test]
+    fn reserve_caps_at_capacity() {
+        let mut c = LayerCache::new(16, 2, EvictionKind::Lfu);
+        assert!(c.reserve(0));
+        assert!(c.reserve(1));
+        assert!(!c.reserve(2), "reservations saturate at the slot count");
+        assert_eq!(c.reserved_len(), 2);
+        assert!(!LayerCache::new(8, 0, EvictionKind::Lfu).reserve(1));
+    }
+
+    #[test]
+    fn commit_evicts_in_policy_order_but_never_pinned() {
+        let mut c = LayerCache::new(16, 2, EvictionKind::Lfu);
+        for _ in 0..3 {
+            c.request(7);
+        }
+        c.insert(7, &[]);
+        c.request(9);
+        c.insert(9, &[]);
+        assert!(c.reserve(4));
+        // cache filled since the reservation: commit evicts the coldest
+        // non-pinned resident (9, one request, vs 7 with three)
+        assert_eq!(c.commit(4, &[7]), Some(9));
+        assert!(c.contains(4) && c.contains(7) && !c.contains(9));
+        // everything pinned: the arrival is dropped, residency unchanged
+        assert!(c.reserve(5));
+        assert_eq!(c.commit(5, &[4, 7]), None);
+        assert!(!c.contains(5) && !c.is_reserved(5));
+        assert_eq!(c.resident_len(), 2);
     }
 
     #[test]

@@ -130,6 +130,13 @@ impl ClusterConfig {
         self
     }
 
+    /// Layer-ahead transfer pipeline depth on every replica
+    /// (`--lookahead`; 0 = admit-time prefetch only).
+    pub fn with_lookahead(mut self, depth: usize) -> ClusterConfig {
+        self.spec.lookahead = depth;
+        self
+    }
+
     pub fn with_output(mut self, output: OutputLen) -> ClusterConfig {
         self.workload.output = output;
         self
@@ -156,6 +163,8 @@ pub struct ReplicaSummary {
     pub h2d: u64,
     pub pcie_gb: f64,
     pub stall_seconds: f64,
+    /// Transfer time hidden behind compute (prefetch overlap).
+    pub overlapped_seconds: f64,
     pub busy_seconds: f64,
     pub peak_queue_depth: usize,
 }
@@ -167,6 +176,8 @@ pub struct ClusterReport {
     pub scheduler: SchedulerMode,
     /// Per-step prompt-token budget the fleet ran with.
     pub prefill_chunk: usize,
+    /// Layer-ahead transfer pipeline depth the fleet ran with.
+    pub lookahead: usize,
     pub n_requests: usize,
     pub output_tokens: usize,
     /// Last completion time (simulated seconds).
@@ -184,6 +195,13 @@ pub struct ClusterReport {
     pub latency: Percentiles,
     /// Total H2D traffic across the fleet, GB.
     pub pcie_gb: f64,
+    /// Decode time lost stalled on expert transfers, fleet total
+    /// (demand stalls + residual waits on caught in-flight prefetches).
+    pub stall_seconds: f64,
+    /// Transfer time hidden behind compute, fleet total.
+    pub overlapped_seconds: f64,
+    /// `overlapped / (overlapped + stalled)` — the overlap fraction.
+    pub overlap_fraction: f64,
     pub replicas: Vec<ReplicaSummary>,
 }
 
@@ -258,6 +276,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
     let latencies: Vec<f64> = completions.iter().map(|c| c.latency()).collect();
     let (mut hits, mut lookups) = (0u64, 0u64);
     let mut pcie_bytes = 0.0f64;
+    let (mut stall_seconds, mut overlapped_seconds) = (0.0f64, 0.0f64);
     let replicas: Vec<ReplicaSummary> = reps
         .iter()
         .map(|r| {
@@ -265,6 +284,8 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
             hits += stats.hits;
             lookups += stats.requests();
             pcie_bytes += r.pcie.stats.h2d_bytes;
+            stall_seconds += r.pcie.stats.stall_time;
+            overlapped_seconds += r.pcie.stats.overlapped_time;
             ReplicaSummary {
                 id: r.id,
                 requests: r.completions.len(),
@@ -273,6 +294,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
                 h2d: r.pcie.stats.h2d_count,
                 pcie_gb: r.pcie.stats.h2d_bytes / 1e9,
                 stall_seconds: r.pcie.stats.stall_time,
+                overlapped_seconds: r.pcie.stats.overlapped_time,
                 busy_seconds: r.busy_seconds,
                 peak_queue_depth: r.peak_queue_depth,
             }
@@ -282,6 +304,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         balancer: bal.name().to_string(),
         scheduler: cfg.scheduler,
         prefill_chunk: cfg.prefill_chunk.max(1),
+        lookahead: cfg.spec.lookahead,
         n_requests: completions.len(),
         output_tokens,
         makespan,
@@ -292,6 +315,9 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         tpot: Percentiles::of(&tpots),
         latency: Percentiles::of(&latencies),
         pcie_gb: pcie_bytes / 1e9,
+        stall_seconds,
+        overlapped_seconds,
+        overlap_fraction: crate::metrics::overlap_fraction(overlapped_seconds, stall_seconds),
         replicas,
     })
 }
@@ -478,6 +504,14 @@ mod tests {
         assert!(rep.tpot.p50 > 0.0);
         let per_replica_gb: f64 = rep.replicas.iter().map(|r| r.pcie_gb).sum();
         assert!((per_replica_gb - rep.pcie_gb).abs() < 1e-9);
+        // overlap accounting: fleet totals are the per-replica sums and
+        // the fraction is a valid ratio
+        let per_replica_stall: f64 = rep.replicas.iter().map(|r| r.stall_seconds).sum();
+        assert!((per_replica_stall - rep.stall_seconds).abs() < 1e-9);
+        let per_replica_ovl: f64 = rep.replicas.iter().map(|r| r.overlapped_seconds).sum();
+        assert!((per_replica_ovl - rep.overlapped_seconds).abs() < 1e-9);
+        assert!((0.0..=1.0).contains(&rep.overlap_fraction));
+        assert_eq!(rep.lookahead, 0, "synthetic default is admit-only prefetch");
         let table = comparison_table(&[rep]);
         assert!(table.render().contains("expert-affinity"));
     }

@@ -49,6 +49,10 @@ pub struct ReplicaSpec {
     pub quant: QuantMode,
     /// Refresh the union prefetch plan of the in-flight set on admission.
     pub prefetch: bool,
+    /// Layer-ahead transfer pipeline depth (`--lookahead`): during layer
+    /// ℓ's compute, prefetch the next `lookahead` layers' upcoming
+    /// expert sets non-blocking; 0 disables (admit-time prefetch only).
+    pub lookahead: usize,
     pub gpu: GpuSpec,
     pub dims: PaperDims,
 }
@@ -80,6 +84,7 @@ impl ReplicaSpec {
             eviction: EvictionKind::Lfu,
             quant,
             prefetch: true,
+            lookahead: 0,
             gpu,
             dims,
         }
@@ -290,9 +295,25 @@ impl Replica {
                 if set.is_empty() {
                     continue;
                 }
-                let loads = self.cache.layer(l).prefill_union(set);
-                for _ in loads {
-                    self.pcie.prefetch_h2d(&self.cost, &self.clock, self.spec.quant);
+                // skip non-resident experts whose lookahead transfer is
+                // already on the link — they arrive via the tracked
+                // pipeline; re-issuing would double-pay the transfer.
+                // (Resident in-flight experts stay in the target: the
+                // union protects them from eviction and never re-loads
+                // residents.)
+                let want: Vec<usize> = set
+                    .iter()
+                    .copied()
+                    .filter(|&e| {
+                        self.cache.layers[l].contains(e) || !self.pcie.in_flight_contains(l, e)
+                    })
+                    .collect();
+                // tracked issue: residency is immediate (prefill_union
+                // above), but the link entry keeps the stall/overlap
+                // split exact and lets an evicted-then-remissed expert
+                // catch its own transfer at the residual
+                for e in self.cache.layer(l).prefill_union(&want) {
+                    self.pcie.prefetch_expert(&self.cost, &self.clock, l, e, self.spec.quant);
                 }
             }
         }
@@ -314,37 +335,72 @@ impl Replica {
 
     /// Advance the live batch one step: replay each sequence's routing —
     /// one decode token, or a whole prefill chunk — against the
-    /// persistent caches (misses demand-transfer and stall; the pin set
-    /// tracks every expert the step executes, so a peer's miss can never
-    /// evict one), then charge the step's compute amortized over every
-    /// token the step consumes (a prefill chunk's union expert set
-    /// streams once — the Sarathi prefill term).  Sequences whose trace
-    /// ends retire immediately.
+    /// persistent caches, then charge the step's compute amortized over
+    /// every token the step consumes (a prefill chunk's union expert set
+    /// streams once — the Sarathi prefill term).  The clock advances
+    /// *layer by layer*: misses at layer ℓ stall (a cold miss pays the
+    /// full transfer, a miss whose lookahead prefetch is already on the
+    /// link pays only the residual), then the next `lookahead` layers'
+    /// upcoming expert sets are issued non-blocking, then layer ℓ's
+    /// compute runs — hiding the issued transfers behind it.  The
+    /// per-layer pin sets track every expert the step executes, so
+    /// neither a peer's miss nor an arriving prefetch can evict one.
+    /// Sequences whose trace ends retire immediately.
+    ///
+    /// The lookahead candidates come from the pre-drawn routing traces —
+    /// the replica models a gate-ahead next-layer predictor (Huang et
+    /// al.'s "Towards MoE Deployment" overlap) at the accuracy the trace
+    /// implies; the artifact engine's honest equivalent is
+    /// `predictor::predict_next_layer`.
     fn step_once(&mut self) {
         debug_assert!(!self.in_flight.is_empty());
         let quant = self.spec.quant;
+        let n_layers = self.spec.n_layers;
         let counts: Vec<usize> =
             self.in_flight.iter().map(|seq| self.tokens_this_step(seq)).collect();
         let t: usize = counts.iter().sum();
-        let mut compute = self.cost.head_time(t);
-        for l in 0..self.spec.n_layers {
-            // the step's routed experts at this layer — the pin set and
-            // the distinct-expert working set across every consumed token
-            let mut pinned: Vec<usize> = Vec::new();
-            let mut assignments = 0usize;
-            for (seq, &c) in self.in_flight.iter().zip(&counts) {
-                for step in seq.step..seq.step + c {
-                    let Some(experts) = seq.req.routing.get(step).and_then(|s| s.get(l)) else {
-                        continue;
-                    };
+        // per-layer distinct-expert working sets (the pin sets) and
+        // assignment counts for the whole step, gathered once
+        let mut pinned_by_layer: Vec<Vec<usize>> = vec![Vec::new(); n_layers];
+        let mut assignments_by_layer: Vec<usize> = vec![0; n_layers];
+        for (seq, &c) in self.in_flight.iter().zip(&counts) {
+            for step in seq.step..seq.step + c {
+                let Some(layers) = seq.req.routing.get(step) else { continue };
+                for (l, experts) in layers.iter().enumerate().take(n_layers) {
                     for &e in experts {
-                        assignments += 1;
-                        if !pinned.contains(&e) {
-                            pinned.push(e);
+                        assignments_by_layer[l] += 1;
+                        if !pinned_by_layer[l].contains(&e) {
+                            pinned_by_layer[l].push(e);
                         }
                     }
                 }
             }
+        }
+        let depth = self.spec.lookahead;
+        if depth > 0 {
+            // one next-layer prediction consult per step
+            self.clock.advance(self.cost.predictor_time());
+        }
+        for l in 0..n_layers {
+            // land prefetches that arrived during earlier layers'
+            // compute; commits never evict an expert this step executes
+            let now = self.clock.now();
+            for (tl, te) in self.pcie.drain_arrived(now) {
+                let landed = self.pcie.commit_arrival(
+                    &mut self.cache.layers[tl],
+                    &self.cost,
+                    quant,
+                    te,
+                    &pinned_by_layer[tl],
+                );
+                if !landed {
+                    // every resident pinned: the arrival stays in
+                    // staging, claimable at zero residual
+                    self.pcie.track_landed(tl, te, now);
+                }
+            }
+            // resolve residency: hits are free, an in-flight prefetch
+            // pays the residual, cold misses demand-transfer and stall
             for (seq, &c) in self.in_flight.iter().zip(&counts) {
                 for step in seq.step..seq.step + c {
                     let Some(experts) = seq.req.routing.get(step).and_then(|s| s.get(l)) else {
@@ -352,23 +408,53 @@ impl Replica {
                     };
                     for &e in experts {
                         let hit = self.cache.layers[l].request(e);
-                        if !hit {
-                            self.pcie.demand_h2d(&self.cost, &mut self.clock, quant);
-                            if self.cache.layers[l].insert(e, &pinned).is_some() {
-                                self.pcie.evict_d2h(&self.cost, quant);
-                            }
+                        if hit {
+                            continue;
+                        }
+                        if self.pcie.wait_for(l, e, &mut self.clock).is_some() {
+                            // the claim consumed the transfer's one
+                            // stall-free use; commit lands it whenever
+                            // the pin set allows
+                            self.pcie.commit_arrival(
+                                &mut self.cache.layers[l],
+                                &self.cost,
+                                quant,
+                                e,
+                                &pinned_by_layer[l],
+                            );
+                            continue;
+                        }
+                        self.pcie.demand_h2d(&self.cost, &mut self.clock, quant);
+                        if self.cache.layers[l].insert(e, &pinned_by_layer[l]).is_some() {
+                            self.pcie.evict_d2h(&self.cost, quant);
                         }
                     }
                 }
             }
-            compute += self.cost.attn_time(t)
-                + if pinned.is_empty() {
-                    0.0
-                } else {
-                    self.cost.expert_exec_time(pinned.len(), assignments, quant)
-                };
+            // layer-ahead pipeline: issue the next `depth` layers'
+            // working sets non-blocking, before this layer's compute, so
+            // the transfers hide behind it
+            for nl in l + 1..=(l + depth).min(n_layers.saturating_sub(1)) {
+                for &e in &pinned_by_layer[nl] {
+                    if self.cache.layers[nl].contains(e) || self.pcie.in_flight_contains(nl, e) {
+                        continue;
+                    }
+                    if !self.cache.layer(nl).reserve(e) {
+                        break; // reservations saturated this layer
+                    }
+                    self.pcie.prefetch_expert(&self.cost, &self.clock, nl, e, quant);
+                }
+            }
+            // this layer's compute: attention over every consumed token
+            // plus grouped execution of the step's distinct working set
+            let exec = if pinned_by_layer[l].is_empty() {
+                0.0
+            } else {
+                self.cost.expert_exec_time(pinned_by_layer[l].len(), assignments_by_layer[l], quant)
+            };
+            self.clock.advance(self.cost.attn_time(t) + exec);
         }
-        self.clock.advance(compute);
+        self.clock.advance(self.cost.head_time(t));
         self.cache.token_tick();
 
         // advance cursors; retire finished sequences immediately — their

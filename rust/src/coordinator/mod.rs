@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::metrics::Percentiles;
+use crate::pcie::TransferStats;
 
 /// One retired sequence, in the decoder's simulated timeline.
 #[derive(Debug, Clone)]
@@ -83,6 +84,12 @@ pub trait Decoder {
     /// [`ServerConfig::prefill_chunk`]; decoders without a prefill
     /// concept may ignore it (the default does).
     fn set_prefill_chunk(&mut self, _chunk: usize) {}
+    /// PCIe transfer accounting snapshot (stall vs overlapped split, see
+    /// `pcie`).  Decoders without a transfer model return the default
+    /// zeros.
+    fn transfer_stats(&self) -> TransferStats {
+        TransferStats::default()
+    }
 }
 
 /// How the scheduler fills decode slots.
@@ -184,6 +191,13 @@ pub struct ServerStats {
     pub ttft: Percentiles,
     /// p50/p95/p99 of simulated time-per-output-token.
     pub tpot: Percentiles,
+    /// Decode time lost stalled on expert transfers (demand stalls plus
+    /// residual waits on caught in-flight prefetches).
+    pub pcie_stall_seconds: f64,
+    /// Transfer time hidden behind compute (admit + lookahead prefetch).
+    pub pcie_overlapped_seconds: f64,
+    /// `overlapped / (overlapped + stalled)` — the overlap fraction.
+    pub pcie_overlap_fraction: f64,
 }
 
 struct Job {
@@ -299,6 +313,10 @@ impl<D: Decoder> Scheduler<D> {
     pub fn into_stats(mut self) -> ServerStats {
         self.stats.prefill_chunk = self.cfg.prefill_chunk.max(1);
         self.stats.total_sim_seconds = self.dec.now();
+        let ts = self.dec.transfer_stats();
+        self.stats.pcie_stall_seconds = ts.stall_time;
+        self.stats.pcie_overlapped_seconds = ts.overlapped_time;
+        self.stats.pcie_overlap_fraction = ts.overlap_fraction();
         if !self.batch_sizes.is_empty() {
             self.stats.mean_batch_size =
                 self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64;

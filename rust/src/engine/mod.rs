@@ -4,8 +4,10 @@
 //!   1. `layer_step` (PJRT): attention over the KV cache + router probs;
 //!   2. top-K selection on the host (paper Eq. 1);
 //!   3. the offload policy resolves each routed expert — cache hit,
-//!      demand PCIe transfer (stalling the simulated clock, Eq. 3),
-//!      CPU execution (Fiddler), or sparsity skip (FLoE);
+//!      residual wait on an in-flight lookahead prefetch (`--lookahead`,
+//!      the layer-ahead transfer pipeline), demand PCIe transfer
+//!      (stalling the simulated clock, Eq. 3), CPU execution (Fiddler),
+//!      or sparsity skip (FLoE);
 //!   4. `expert_group` (PJRT, the Pallas kernel) executes the routed
 //!      experts with the *actual* resident weights (dequantized if the
 //!      policy quantizes residency) — quality effects are real;
@@ -42,7 +44,9 @@ use crate::metrics::{Report, RequestMetrics};
 use crate::moe::{MoeConfig, PredictorWeights, RoutingProfile, WeightStore};
 use crate::pcie::TransferEngine;
 use crate::policies::{PolicyConfig, Prefetch};
-use crate::predictor::{predict_plan, predict_plan_batch, profile_plan, PrefetchPlan};
+use crate::predictor::{
+    predict_next_layer, predict_plan, predict_plan_batch, profile_plan, PrefetchPlan,
+};
 use crate::runtime::Runtime;
 use crate::tensor::add;
 
@@ -373,6 +377,22 @@ impl<'a> Engine<'a> {
                     self.profile.ok_or_else(|| anyhow::anyhow!("policy wants a routing profile"))?;
                 Ok(profile_plan(pr, self.cfg, cap))
             }
+            // lookahead's admit-time plan comes from whatever source the
+            // engine carries; with neither, the per-step pipeline still
+            // runs off the session's observed activation counts
+            Prefetch::Lookahead { .. } => {
+                if let Some(pw) = self.predictor {
+                    if prompts.len() == 1 {
+                        predict_plan(self.rt, pw, self.cfg, &self.weights.embed, &prompts[0], cap)
+                    } else {
+                        predict_plan_batch(self.rt, pw, self.cfg, &self.weights.embed, prompts, cap)
+                    }
+                } else if let Some(pr) = self.profile {
+                    Ok(profile_plan(pr, self.cfg, cap))
+                } else {
+                    Ok(PrefetchPlan::empty(self.cfg.n_layers))
+                }
+            }
         }
     }
 
@@ -411,9 +431,13 @@ impl<'a> Engine<'a> {
     }
 
     /// Resolve residency for one token's selected experts at one layer
-    /// and advance the clock on demand misses.  `pinned` is the whole
-    /// chunk's union expert set at this layer, so resolving one chunk
-    /// token can never evict an expert another chunk token executes.
+    /// and advance the clock on misses.  A miss first consults the
+    /// in-flight transfer pipeline: an expert whose lookahead prefetch is
+    /// already on the link pays only the *residual* wait and lands via
+    /// the cache's commit path, instead of re-paying the full transfer.
+    /// `pinned` is the whole chunk's union expert set at this layer, so
+    /// resolving one chunk token can never evict an expert another chunk
+    /// token executes.
     fn resolve_residency(
         &self,
         layer: usize,
@@ -427,11 +451,21 @@ impl<'a> Engine<'a> {
             if hit {
                 continue;
             }
+            if ctx.pcie.wait_for(layer, e, ctx.clock).is_some() {
+                // the claim consumed the transfer's one stall-free use;
+                // commit lands it whenever the pin set allows
+                ctx.pcie.commit_arrival(ctx.cache.layer(layer), &self.cost, quant, e, pinned);
+                continue;
+            }
             if self.policy.cpu_compute {
-                // Fiddler: run on CPU when cheaper than transfer + GPU exec
+                // Fiddler: run on CPU when cheaper than transfer + GPU
+                // exec; the GPU path pays the current link-queue wait
+                // before its own transfer, so a congested link correctly
+                // favors CPU compute
                 let cpu_t = self.cost.cpu_expert_time(1);
-                let gpu_t =
-                    self.cost.transfer_time(quant) + self.cost.expert_exec_time(1, 1, quant);
+                let gpu_t = ctx.pcie.link_wait(ctx.clock.now())
+                    + self.cost.transfer_time(quant)
+                    + self.cost.expert_exec_time(1, 1, quant);
                 if cpu_t < gpu_t {
                     ctx.clock.advance(cpu_t);
                     *ctx.cpu_execs += 1;
@@ -441,6 +475,58 @@ impl<'a> Engine<'a> {
             ctx.pcie.demand_h2d(&self.cost, ctx.clock, quant);
             if let Some(_evicted) = ctx.cache.layer(layer).insert(e, pinned) {
                 ctx.pcie.evict_d2h(&self.cost, quant);
+            }
+        }
+    }
+
+    /// Land every lookahead transfer that has completed by now
+    /// (`TransferEngine::commit_arrival`).  Entries for the layer being
+    /// resolved commit under the chunk-union pin set, so an arriving
+    /// prefetch can never evict an expert the current chunk executes;
+    /// an arrival that cannot commit (every resident pinned) stays in
+    /// staging, claimable at zero residual, instead of being re-paid as
+    /// a demand fetch.
+    fn land_arrived(&self, layer: usize, pinned: &[usize], ctx: &mut StepCtx) {
+        let now = ctx.clock.now();
+        let quant = self.policy.quant;
+        for (tl, te) in ctx.pcie.drain_arrived(now) {
+            let pin: &[usize] = if tl == layer { pinned } else { &[] };
+            if !ctx.pcie.commit_arrival(ctx.cache.layer(tl), &self.cost, quant, te, pin) {
+                ctx.pcie.track_landed(tl, te, now);
+            }
+        }
+    }
+
+    /// Layer-ahead prefetch: issue non-blocking transfers for the next
+    /// `depth` layers' predicted experts (`predict_next_layer` over the
+    /// sequence's admit-time plan, the session's observed activation
+    /// counts, and layer ℓ's actual selections), before this layer's
+    /// expert execution so the transfers hide behind its compute.
+    /// Resident and already-in-flight experts are skipped; the cache's
+    /// reservation bound caps the in-flight set at the layer's slot
+    /// count.
+    fn issue_lookahead(
+        &self,
+        st: &SeqState,
+        layer: usize,
+        depth: usize,
+        cur_union: &[usize],
+        ctx: &mut StepCtx,
+    ) {
+        for d in 1..=depth {
+            let nl = layer + d;
+            if nl >= self.cfg.n_layers {
+                break;
+            }
+            let cap = ctx.cache.layers[nl].capacity();
+            for e in predict_next_layer(&st.plan, &ctx.trace.counts, cur_union, nl, cap) {
+                if ctx.cache.layers[nl].contains(e) || ctx.pcie.in_flight_contains(nl, e) {
+                    continue;
+                }
+                if !ctx.cache.layer(nl).reserve(e) {
+                    break; // reservations saturated this layer
+                }
+                ctx.pcie.prefetch_expert(&self.cost, ctx.clock, nl, e, self.policy.quant);
             }
         }
     }
@@ -512,11 +598,23 @@ impl<'a> Engine<'a> {
                 sel_tokens[i].push(sel.iter().map(|(e, _)| *e).collect());
                 selections.push(sel);
             }
+            // land lookahead transfers that arrived during earlier
+            // layers' compute — committed residency turns would-be
+            // misses into hits below
+            self.land_arrived(l, &union, ctx);
             // residency: each token resolves against the cache with the
-            // chunk union pinned — a miss transfers once, later chunk
-            // tokens hit, and nothing the chunk executes can be evicted
+            // chunk union pinned — a miss transfers once (an in-flight
+            // prefetch pays only its residual), later chunk tokens hit,
+            // and nothing the chunk executes can be evicted
             for sel in &selections {
                 self.resolve_residency(l, sel, &union, ctx);
+            }
+            // layer-ahead pipeline: issue the next layers' predicted
+            // experts now, so the transfers overlap this layer's
+            // execution below
+            let depth = self.policy.prefetch.lookahead_depth();
+            if depth > 0 {
+                self.issue_lookahead(st, l, depth, &union, ctx);
             }
             // execute: real numerics per token; the union's weights
             // stream once per layer in the cost model (chunk_exec_time)
@@ -630,9 +728,25 @@ impl<'a> Engine<'a> {
                 if set.is_empty() {
                     continue;
                 }
-                let loads = sess.cache.layer(l).prefill_union(set);
-                for _ in loads {
-                    sess.pcie.prefetch_h2d(&self.cost, &sess.clock, self.policy.quant);
+                // a non-resident expert whose lookahead transfer is
+                // already on the link arrives via the tracked pipeline —
+                // re-issuing it here would double-pay the transfer.
+                // (Resident in-flight experts stay in the target: the
+                // union protects them from eviction and never re-loads
+                // residents.)
+                let want: Vec<usize> = set
+                    .iter()
+                    .copied()
+                    .filter(|&e| {
+                        sess.cache.layers[l].contains(e) || !sess.pcie.in_flight_contains(l, e)
+                    })
+                    .collect();
+                // tracked issue: residency is immediate (prefill_union
+                // above), but the link entry keeps the stall/overlap
+                // split exact and lets an evicted-then-remissed expert
+                // catch its own transfer at the residual
+                for e in sess.cache.layer(l).prefill_union(&want) {
+                    sess.pcie.prefetch_expert(&self.cost, &sess.clock, l, e, self.policy.quant);
                 }
             }
             // No sync barrier: prefetch transfers overlap compute
@@ -661,6 +775,11 @@ impl<'a> Engine<'a> {
         let batch = sess.seqs.len();
         if batch == 0 {
             return Ok(Vec::new());
+        }
+        // layer-ahead prediction machinery: one consult per step covers
+        // every in-flight sequence's next-layer candidate sets
+        if self.policy.prefetch.lookahead_depth() > 0 {
+            sess.clock.advance(self.cost.predictor_time());
         }
         let chunk = sess.prefill_chunk.max(1);
         // per-sequence token counts this step: prefills take a chunk

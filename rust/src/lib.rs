@@ -19,16 +19,24 @@
 //!                     Eq. 3), incl. the chunked-prefill exec term
 //!                     (`CostModel::chunk_exec_time`).
 //! * [`vram`]        — VRAM budget ledger (capacity derivation, Fig. 11).
-//! * [`pcie`]        — H2D/D2H transfer engine + counters (Fig. 1a).
+//! * [`pcie`]        — asynchronous H2D/D2H transfer pipeline: FIFO link
+//!                     with tracked in-flight `(layer, expert)` entries,
+//!                     residual waits on caught prefetches, and the
+//!                     stall/overlap accounting split (Fig. 1a,
+//!                     `ext_overlap`).
 //! * [`cache`]       — per-layer expert caches: LRU / LFU / γ-discounted
-//!                     (paper Def. C.1).
+//!                     (paper Def. C.1), plus the reserve/commit path
+//!                     for in-flight prefetch residency.
 //! * [`moe`]         — model config + weight store (base / fine-tuned).
 //! * [`runtime`]     — PJRT executable loading & dispatch (xla crate).
 //! * [`predictor`]   — activation-predictor inference + prefetch sets
-//!                     (incl. capped union plans for mid-flight refresh).
+//!                     (capped union plans for mid-flight refresh, and
+//!                     `predict_next_layer` layer-ahead candidates for
+//!                     the lookahead pipeline).
 //! * [`engine`]      — the offloaded decode engine: step-granular
 //!                     `DecodeSession`s (admit/step/retire-at-EOS,
-//!                     chunked prefill via `prefill_chunk`, the
+//!                     chunked prefill via `prefill_chunk`, layer-ahead
+//!                     lookahead prefetch with residual waits, the
 //!                     session-persistent device-buffer memo) with
 //!                     `decode`/`decode_batch` as thin wrappers.
 //! * [`policies`]    — MELINOE + Fiddler / Mixtral-Offloading /

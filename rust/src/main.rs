@@ -30,7 +30,7 @@ commands:
                      (table1 fig1a fig1b fig3 table2 table3 fig4 fig5 table4
                       table5 table11 fig6 heatmaps fig11 table12 fig12 fig13
                       table13 ext_layerwise ext_cluster ext_continuous
-                      ext_prefill)
+                      ext_prefill ext_overlap)
   serve              step-level serving loop over the eval workload
   cluster            multi-replica serving simulation: compare balancers
   decode             decode one prompt, print tokens + transfer stats
@@ -52,6 +52,11 @@ common options:
                      consumes per step, piggybacked on live decodes
                      (default 1 = token-at-a-time; 8-32 cuts long-prompt
                      TTFT, see docs/SERVING.md)
+  --lookahead <d>    serve/cluster: layer-ahead transfer pipeline — during
+                     layer l's compute, prefetch the next d layers'
+                     predicted experts non-blocking; a decode catching a
+                     transfer on the link pays only the residual wait
+                     (default 0 = admit-time prefetch only)
 
 cluster options:
   --replicas <n>     fleet size (default 4)
@@ -118,6 +123,10 @@ impl Decoder for OwnedEngine {
     fn set_prefill_chunk(&mut self, chunk: usize) {
         self.sess.set_prefill_chunk(chunk);
     }
+
+    fn transfer_stats(&self) -> melinoe::pcie::TransferStats {
+        self.sess.pcie.stats.clone()
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -129,6 +138,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch = args.get_usize("batch", 4)?;
     let scheduler = SchedulerMode::parse(args.get_or("scheduler", "continuous"))?;
     let prefill_chunk = args.get_usize("prefill-chunk", 1)?.max(1);
+    let has_lookahead = args.get("lookahead").is_some();
+    let lookahead = args.get_usize("lookahead", 0)?;
     let ds = args.get_or("dataset", "dolly").to_string();
 
     // load the prompts up-front (the server thread owns the engine)
@@ -149,7 +160,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         move || -> Result<OwnedEngine> {
             let ctx = Ctx::load(&melinoe::artifacts_dir(), &preset)?;
             let ft = if ds2 == "dolly" { "ft_dolly" } else { "ft_gsm" };
-            let policy = policy_by_name(&policy_name, ctx.cfg.cache_capacity, ctx.cfg.top_k, ft)?;
+            let mut policy =
+                policy_by_name(&policy_name, ctx.cfg.cache_capacity, ctx.cfg.top_k, ft)?;
+            // an explicit `--lookahead 0` still swaps in lookahead's
+            // admit-plan source (predictor, else profile), so comparing
+            // `--lookahead 0` vs `--lookahead 1` isolates the pipeline
+            // itself rather than also changing the admit-time plan
+            if has_lookahead {
+                policy = policy.with_lookahead(lookahead);
+            }
             let parts = ctx.parts(&policy, &ds2)?;
             Ok(OwnedEngine::new(ctx, parts, gpu2))
         },
@@ -173,6 +192,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut t = Table::new(&["metric", "value"]);
     t.row(vec!["scheduler".into(), format!("{scheduler:?}").to_lowercase()]);
     t.row(vec!["prefill chunk".into(), stats.prefill_chunk.to_string()]);
+    t.row(vec![
+        "lookahead".into(),
+        // `--lookahead 0` is a distinct configuration from omitting the
+        // flag (it swaps the admit-plan source; docs/SERVING.md)
+        if has_lookahead { lookahead.to_string() } else { "- (policy native)".into() },
+    ]);
     t.row(vec!["requests".into(), stats.requests.to_string()]);
     t.row(vec!["token steps".into(), stats.steps.to_string()]);
     t.row(vec!["mean slot occupancy".into(), fmt2(stats.mean_batch_size)]);
@@ -185,6 +210,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     t.row(vec!["tpot p50/p95/p99 (ms)".into(), stats.tpot.cell(1e3)]);
     t.row(vec!["sim latency p50/p95/p99 (s)".into(), stats.sim_latency.cell(1.0)]);
     t.row(vec!["queue wait p50/p95/p99 (ms)".into(), stats.queue_wait.cell(1e3)]);
+    t.row(vec!["pcie stall (s)".into(), fmt2(stats.pcie_stall_seconds)]);
+    t.row(vec!["pcie overlap frac".into(), format!("{:.3}", stats.pcie_overlap_fraction)]);
     t.row(vec!["wall seconds".into(), fmt2(wall)]);
     println!("{}", t.render());
     Ok(())
@@ -248,10 +275,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let long_frac = args.get_f64("long-frac", 0.0)?.clamp(0.0, 1.0);
     let scheduler = SchedulerMode::parse(args.get_or("scheduler", "continuous"))?;
     let prefill_chunk = args.get_usize("prefill-chunk", 1)?.max(1);
+    let lookahead = args.get_usize("lookahead", 0)?;
 
     let mut cfg = cluster::ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu, seed)
         .with_scheduler(scheduler)
-        .with_prefill_chunk(prefill_chunk);
+        .with_prefill_chunk(prefill_chunk)
+        .with_lookahead(lookahead);
     cfg.max_batch = max_batch;
     cfg.workload.output = if long_frac > 0.0 {
         OutputLen::Bimodal { short: (tokens / 8).max(1), long: tokens, long_frac }
@@ -281,9 +310,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     };
     println!(
         "cluster: {} replicas × C={} experts/layer, {} requests over {} tasks ({}), \
-         {} slots/replica, {:?} scheduler, prefill chunk {}",
+         {} slots/replica, {:?} scheduler, prefill chunk {}, lookahead {}",
         cfg.replicas, cfg.spec.capacity, n_requests, n_tasks, arrival_desc, cfg.max_batch,
-        scheduler, cfg.prefill_chunk
+        scheduler, cfg.prefill_chunk, cfg.spec.lookahead
     );
 
     let which = args.get_or("balancer", "all");
@@ -295,9 +324,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         let depths: Vec<String> =
             r.replicas.iter().map(|s| s.peak_queue_depth.to_string()).collect();
         println!(
-            "  {}: makespan {:.2}s, peak queue depths [{}]",
+            "  {}: makespan {:.2}s, pcie stall {:.2}s, overlap frac {:.3}, \
+             peak queue depths [{}]",
             r.balancer,
             r.makespan,
+            r.stall_seconds,
+            r.overlap_fraction,
             depths.join(", ")
         );
     }

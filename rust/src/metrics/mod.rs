@@ -186,6 +186,18 @@ pub fn fmt4(x: f64) -> String {
     format!("{x:.4}")
 }
 
+/// Fraction of expert-transfer time hidden behind compute:
+/// `overlapped / (overlapped + stalled)`.  1.0 means every transfer was
+/// fully pipelined behind execution, 0.0 means every transfer stalled
+/// the decode (or there was no transfer time at all).
+pub fn overlap_fraction(overlapped: f64, stalled: f64) -> f64 {
+    let total = overlapped + stalled;
+    if !total.is_finite() || total <= 0.0 {
+        return 0.0;
+    }
+    (overlapped / total).clamp(0.0, 1.0)
+}
+
 /// "N.NNx" improvement of `value` over `baseline` for latency-like
 /// metrics (baseline / value — higher is better; "n/a" when degenerate).
 pub fn fmt_speedup(baseline: f64, value: f64) -> String {
@@ -280,6 +292,19 @@ mod tests {
     fn percentiles_cell_format() {
         let p = Percentiles { p50: 0.001, p95: 0.002, p99: 0.003 };
         assert_eq!(p.cell(1e3), "1.00/2.00/3.00");
+    }
+
+    #[test]
+    fn overlap_fraction_ratio_and_guards() {
+        assert_eq!(overlap_fraction(0.0, 0.0), 0.0);
+        assert_eq!(overlap_fraction(1.0, 0.0), 1.0);
+        assert_eq!(overlap_fraction(0.0, 2.0), 0.0);
+        assert!((overlap_fraction(3.0, 1.0) - 0.75).abs() < 1e-12);
+        // degenerate inputs stay in [0, 1] (negative overlap can appear
+        // transiently mid-settlement; reporting clamps)
+        assert_eq!(overlap_fraction(-1.0, 2.0), 0.0);
+        assert_eq!(overlap_fraction(f64::NAN, 1.0), 0.0);
+        assert_eq!(overlap_fraction(f64::INFINITY, 1.0), 0.0);
     }
 
     #[test]

@@ -1,13 +1,41 @@
-//! PCIe transfer engine: H2D/D2H accounting + async overlap model.
+//! PCIe transfer engine: an asynchronous, link-serialized transfer
+//! pipeline with in-flight residual-wait tracking.
 //!
 //! Every expert-cache miss becomes a host-to-device transfer here; every
 //! eviction a device-to-host buffer release.  The engine mirrors the
 //! post-deployment mechanics of §3.2: offloaded experts live in *pinned*
 //! host memory and transfers are issued *non-blocking*, so a transfer
-//! whose issue time precedes the consuming kernel can partially overlap.
-//! Counters feed Fig. 1a (transfer counts) and the Tx/L columns of
-//! Table 3 / Figs. 12–13.
+//! whose issue time precedes the consuming kernel can partially overlap
+//! with compute.  Three issue paths share one FIFO link:
+//!
+//! * [`TransferEngine::demand_h2d`] — a cold miss: the decode stalls for
+//!   the link-queue wait plus the full transfer (Eq. 3's
+//!   `N_miss · Time_transfer` term).
+//! * [`TransferEngine::prefetch_expert`] — tracked non-blocking
+//!   prefetch, used both for the admit-time plan (residency set
+//!   immediately by `LayerCache::prefill_union`) and for layer-ahead
+//!   lookahead (residency commits when the transfer *lands*:
+//!   [`TransferEngine::drain_arrived`] → `LayerCache::commit`).  Either
+//!   way the in-flight `(layer, expert, completes_at)` entry means a
+//!   decode that catches the transfer still on the link pays only the
+//!   *residual* wait ([`TransferEngine::wait_for`]) instead of
+//!   re-paying the full transfer.
+//! * [`TransferEngine::prefetch_h2d`] — untracked non-blocking issue
+//!   (optimistic overlap credit, never settled against stall windows);
+//!   kept for barrier-style callers that pair it with
+//!   [`TransferEngine::sync_prefetches`].  No production path uses it —
+//!   new callers should prefer the tracked
+//!   [`TransferEngine::prefetch_expert`].
+//!
+//! Accounting invariant: every transfer's duration lands in
+//! `h2d_seconds`; the split between `stall_time` (decode blocked) and
+//! `overlapped_time` (hidden behind compute) is settled at resolution —
+//! a tracked transfer counts fully overlapped at issue and `wait_for`
+//! moves the un-hidden residual share over to `stall_time`.  Counters
+//! feed Fig. 1a (transfer counts), the Tx/L columns of Table 3 /
+//! Figs. 12–13, and the overlap-fraction metric of `repro ext_overlap`.
 
+use crate::cache::LayerCache;
 use crate::clock::{CostModel, SimClock};
 use crate::quant::QuantMode;
 
@@ -24,7 +52,14 @@ pub struct TransferStats {
     pub d2h_count: u64,
     pub h2d_bytes: f64,
     pub d2h_bytes: f64,
+    /// Sum of H2D transfer durations on the link (queue waits excluded).
+    pub h2d_seconds: f64,
+    /// Decode time lost blocked on transfers: demand stalls (link wait +
+    /// full duration), residual waits on caught in-flight prefetches, and
+    /// explicit sync barriers.
     pub stall_time: f64,
+    /// Transfer time hidden behind compute (prefetch traffic the decode
+    /// never had to wait for).
     pub overlapped_time: f64,
 }
 
@@ -32,60 +67,236 @@ impl TransferStats {
     pub fn total_count(&self) -> u64 {
         self.h2d_count + self.d2h_count
     }
+
+    /// Fraction of transfer-related time hidden behind compute:
+    /// `overlapped / (overlapped + stalled)`.
+    pub fn overlap_fraction(&self) -> f64 {
+        crate::metrics::overlap_fraction(self.overlapped_time, self.stall_time)
+    }
 }
 
-/// Transfer engine with a single-link occupancy model: the PCIe link frees
-/// at `link_free`; a non-blocking transfer issued early may overlap with
-/// compute, a demand miss stalls the decode for its full duration.
+/// One tracked transfer in flight on the PCIe link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InFlight {
+    pub layer: usize,
+    pub expert: usize,
+    /// Transfer duration on the link (excludes queue wait ahead of it).
+    pub duration: f64,
+    /// Link-serialized completion time.
+    pub completes_at: f64,
+}
+
+/// Transfer engine over a single FIFO link: the link frees at
+/// `link_free`, every issue serializes behind it, and tracked prefetches
+/// carry per-expert completion times so a decode catching one mid-flight
+/// charges only the residual wait.
 #[derive(Debug, Clone)]
 pub struct TransferEngine {
     pub pinned_host: bool,
     pub stats: TransferStats,
     link_free: f64,
+    /// Tracked transfers: link issues in FIFO order (`completes_at`
+    /// non-decreasing at issue — a property test locks this in), plus
+    /// landed-but-uncommitted staging entries re-queued by
+    /// `track_landed` with `completes_at` in the past.  Consumers must
+    /// not assume the Vec is sorted: `drain_arrived`/`wait_for` scan
+    /// every entry.
+    in_flight: Vec<InFlight>,
 }
 
 impl TransferEngine {
     pub fn new() -> TransferEngine {
-        TransferEngine { pinned_host: true, stats: TransferStats::default(), link_free: 0.0 }
+        TransferEngine {
+            pinned_host: true,
+            stats: TransferStats::default(),
+            link_free: 0.0,
+            in_flight: Vec::new(),
+        }
     }
 
-    /// Demand-fetch one expert: the decode stalls until the transfer
-    /// completes (paper Eq. 3's N_miss · Time_transfer term).  Returns the
-    /// stall duration applied to `clock`.
-    pub fn demand_h2d(&mut self, cm: &CostModel, clock: &mut SimClock, mode: QuantMode) -> f64 {
+    /// One expert's transfer duration on the link (pageable host memory
+    /// roughly halves effective PCIe bandwidth).
+    fn h2d_duration(&self, cm: &CostModel, mode: QuantMode) -> f64 {
         let mut dt = cm.transfer_time(mode);
         if !self.pinned_host {
-            // pageable host memory roughly halves effective PCIe bandwidth
             dt += cm.dims.expert_bytes(mode) / cm.gpu.pcie_bw;
         }
-        // serialize on the link
-        let start = clock.now().max(self.link_free);
-        let wait = start - clock.now();
-        self.link_free = start + dt;
-        let stall = wait + dt;
-        clock.advance(stall);
+        dt
+    }
+
+    fn account_h2d(&mut self, cm: &CostModel, mode: QuantMode, dt: f64) {
         self.stats.h2d_count += 1;
         self.stats.h2d_bytes += cm.dims.expert_bytes(mode);
+        self.stats.h2d_seconds += dt;
+    }
+
+    /// Time until the link drains from `now`'s point of view — what a
+    /// transfer issued now would wait before starting.
+    pub fn link_wait(&self, now: f64) -> f64 {
+        (self.link_free - now).max(0.0)
+    }
+
+    /// Tracked in-flight transfers (lookahead prefetches not yet claimed
+    /// or drained).
+    pub fn in_flight_len(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    pub fn in_flight_contains(&self, layer: usize, expert: usize) -> bool {
+        self.in_flight.iter().any(|t| t.layer == layer && t.expert == expert)
+    }
+
+    /// Move the parts of tracked transfers that fall inside the decode's
+    /// stall window `[from, to]` out of the overlapped bucket: link time
+    /// spent transferring while the decode was blocked is not hidden.
+    /// Stall windows are disjoint (the clock is monotone), so each
+    /// instant of a transfer is un-hidden at most once — together with
+    /// the claimed-entry share in [`TransferEngine::wait_for`] this
+    /// makes the tracked pipeline's stall/overlap split exact.  (The
+    /// untracked `prefetch_h2d` path keeps its optimistic issue-time
+    /// credit — it carries no completion record to attribute.)
+    fn unhide_window(&mut self, from: f64, to: f64) {
+        if to <= from {
+            return;
+        }
+        for t in &self.in_flight {
+            let start = t.completes_at - t.duration;
+            let covered = (t.completes_at.min(to) - start.max(from)).max(0.0);
+            self.stats.overlapped_time -= covered;
+        }
+    }
+
+    /// Demand-fetch one expert: the decode stalls for the link-queue wait
+    /// plus the full transfer (paper Eq. 3's N_miss · Time_transfer
+    /// term).  Tracked transfers the decode blocks through lose their
+    /// overlap credit.  Returns the stall duration applied to `clock`.
+    pub fn demand_h2d(&mut self, cm: &CostModel, clock: &mut SimClock, mode: QuantMode) -> f64 {
+        let dt = self.h2d_duration(cm, mode);
+        let wait = self.link_wait(clock.now());
+        self.link_free = clock.now().max(self.link_free) + dt;
+        let stall = wait + dt;
+        self.unhide_window(clock.now(), clock.now() + stall);
+        clock.advance(stall);
+        self.account_h2d(cm, mode, dt);
         self.stats.stall_time += stall;
         stall
     }
 
-    /// Prefetch one expert (non-blocking): occupies the link but does not
-    /// stall the clock; the caller advances the clock only if decode
-    /// catches up with the link (`sync_prefetches`).
+    /// Untracked non-blocking prefetch: occupies the link but does not
+    /// stall the clock and leaves no in-flight record.  Counted fully
+    /// overlapped (optimistic) — [`TransferEngine::sync_prefetches`] is
+    /// the explicit barrier for callers that want start-of-decode
+    /// semantics.  The serving paths use the tracked
+    /// [`TransferEngine::prefetch_expert`] instead.
     pub fn prefetch_h2d(&mut self, cm: &CostModel, clock: &SimClock, mode: QuantMode) {
-        let dt = cm.transfer_time(mode);
+        let dt = self.h2d_duration(cm, mode);
         let start = clock.now().max(self.link_free);
         self.link_free = start + dt;
-        self.stats.h2d_count += 1;
-        self.stats.h2d_bytes += cm.dims.expert_bytes(mode);
+        self.account_h2d(cm, mode, dt);
         self.stats.overlapped_time += dt;
     }
 
-    /// Block until all issued prefetches have landed (start-of-decode
-    /// barrier; the paper measures ~0.05 s here).  Returns the wait.
+    /// Layer-ahead lookahead prefetch (non-blocking, tracked): occupies
+    /// the link and records an in-flight `(layer, expert, completes_at)`
+    /// entry.  Residency commits when the transfer lands
+    /// ([`TransferEngine::drain_arrived`]); a decode that catches it
+    /// mid-flight charges only the residual ([`TransferEngine::wait_for`]).
+    /// Counted fully overlapped at issue; `wait_for` settles the split.
+    /// Returns the completion time.
+    pub fn prefetch_expert(
+        &mut self,
+        cm: &CostModel,
+        clock: &SimClock,
+        layer: usize,
+        expert: usize,
+        mode: QuantMode,
+    ) -> f64 {
+        let dt = self.h2d_duration(cm, mode);
+        let start = clock.now().max(self.link_free);
+        let completes_at = start + dt;
+        self.link_free = completes_at;
+        self.account_h2d(cm, mode, dt);
+        self.stats.overlapped_time += dt;
+        self.in_flight.push(InFlight { layer, expert, duration: dt, completes_at });
+        completes_at
+    }
+
+    /// Block until the tracked transfer for `(layer, expert)` lands,
+    /// charging only the *residual* wait — the part of the transfer (and
+    /// its link queue) that compute did not already hide.  Free when the
+    /// transfer has completed.  Returns `None` when no such transfer is
+    /// in flight (the caller falls back to a demand fetch).
+    pub fn wait_for(&mut self, layer: usize, expert: usize, clock: &mut SimClock) -> Option<f64> {
+        let i = self.in_flight.iter().position(|t| t.layer == layer && t.expert == expert)?;
+        let t = self.in_flight.remove(i);
+        let residual = (t.completes_at - clock.now()).max(0.0);
+        // settle the optimistic issue-time accounting: the un-hidden part
+        // of the transfer's own duration moves from overlapped to stall,
+        // and so does the stall-window share of every transfer still
+        // queued on the link — the decode blocked through them too
+        self.stats.overlapped_time -= residual.min(t.duration);
+        self.unhide_window(clock.now(), clock.now() + residual);
+        clock.advance(residual);
+        self.stats.stall_time += residual;
+        Some(residual)
+    }
+
+    /// Remove and return every tracked transfer that has completed by
+    /// `now` — the caller commits them to the expert cache
+    /// (`LayerCache::commit`).  Arrival order is preserved.
+    pub fn drain_arrived(&mut self, now: f64) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        self.in_flight.retain(|t| {
+            if t.completes_at <= now {
+                out.push((t.layer, t.expert));
+                false
+            } else {
+                true
+            }
+        });
+        out
+    }
+
+    /// Keep a landed-but-uncommitted *arrival* claimable (drain path,
+    /// when every resident was pinned): the expert stays in staging at
+    /// zero residual until a later commit lands it or a miss claims it.
+    /// A claim ([`TransferEngine::wait_for`]) consumes the entry — one
+    /// paid transfer buys residency or exactly one stall-free
+    /// execution, never more.
+    pub fn track_landed(&mut self, layer: usize, expert: usize, now: f64) {
+        self.in_flight.push(InFlight { layer, expert, duration: 0.0, completes_at: now });
+    }
+
+    /// Land one arrived (or just-claimed) lookahead transfer into the
+    /// layer's residency: commit — never evicting `pinned` — and count
+    /// the eviction as D2H traffic.  Returns whether the expert ended up
+    /// resident.  Shared by the engine and the cluster replica so the
+    /// commit/evict invariant cannot desynchronize; drain-path callers
+    /// keep un-committable arrivals in staging via
+    /// [`TransferEngine::track_landed`], while a caught-in-flight claim
+    /// has already consumed the transfer's one stall-free use.
+    pub fn commit_arrival(
+        &mut self,
+        cache: &mut LayerCache,
+        cm: &CostModel,
+        mode: QuantMode,
+        expert: usize,
+        pinned: &[usize],
+    ) -> bool {
+        if cache.commit(expert, pinned).is_some() {
+            self.evict_d2h(cm, mode);
+        }
+        cache.contains(expert)
+    }
+
+    /// Block until all issued transfers have landed (start-of-decode
+    /// barrier; the paper measures ~0.05 s here).  Tracked entries stay
+    /// queued for [`TransferEngine::drain_arrived`], but their no-longer-
+    /// hidden shares move from overlapped to stall.  Returns the wait.
     pub fn sync_prefetches(&mut self, clock: &mut SimClock) -> f64 {
-        let wait = (self.link_free - clock.now()).max(0.0);
+        let now = clock.now();
+        let wait = self.link_wait(now);
+        self.unhide_window(now, now + wait);
         clock.advance(wait);
         self.stats.stall_time += wait;
         wait
@@ -127,6 +338,7 @@ mod tests {
         assert!(stall > 0.0);
         assert_eq!(eng.stats.h2d_count, 1);
         assert!((clock.now() - stall).abs() < 1e-12);
+        assert!((eng.stats.h2d_seconds - stall).abs() < 1e-12, "no queue: stall == duration");
     }
 
     #[test]
@@ -175,6 +387,115 @@ mod tests {
         eb.sync_prefetches(&mut cb);
         assert!(cb.now() <= ca.now() * 1.001 + 1e-12);
         assert!(eb.stats.stall_time < ea.stats.stall_time);
+    }
+
+    #[test]
+    fn tracked_prefetch_registers_and_drains() {
+        let cm = cm();
+        let mut clock = SimClock::new();
+        let mut eng = TransferEngine::new();
+        let done = eng.prefetch_expert(&cm, &clock, 3, 17, QuantMode::Fp16);
+        assert!(eng.in_flight_contains(3, 17));
+        assert_eq!(eng.in_flight_len(), 1);
+        assert!(eng.drain_arrived(clock.now()).is_empty(), "not yet landed");
+        clock.advance(done);
+        assert_eq!(eng.drain_arrived(clock.now()), vec![(3, 17)]);
+        assert_eq!(eng.in_flight_len(), 0);
+        // never waited on: the whole duration stays overlapped
+        assert!((eng.stats.overlapped_time - eng.stats.h2d_seconds).abs() < 1e-12);
+        assert_eq!(eng.stats.stall_time, 0.0);
+    }
+
+    #[test]
+    fn caught_in_flight_charges_residual_not_full_transfer() {
+        let cm = cm();
+        let dt = cm.transfer_time(QuantMode::Fp16);
+        // cold demand baseline
+        let mut cd = SimClock::new();
+        let mut ed = TransferEngine::new();
+        let demand_stall = ed.demand_h2d(&cm, &mut cd, QuantMode::Fp16);
+        // prefetch issued, compute hides 60% of it, decode catches it
+        let mut clock = SimClock::new();
+        let mut eng = TransferEngine::new();
+        eng.prefetch_expert(&cm, &clock, 0, 7, QuantMode::Fp16);
+        clock.advance(0.6 * dt);
+        let residual = eng.wait_for(0, 7, &mut clock).unwrap();
+        assert!((residual - 0.4 * dt).abs() < 1e-12, "residual {residual} vs 0.4·{dt}");
+        assert!(residual < demand_stall, "caught in-flight must beat a cold demand fetch");
+        assert!((clock.now() - dt).abs() < 1e-12, "decode resumes exactly at arrival");
+        // split settles: hidden 0.6·dt overlapped, residual 0.4·dt stalled
+        assert!((eng.stats.overlapped_time - 0.6 * dt).abs() < 1e-12);
+        assert!((eng.stats.stall_time - 0.4 * dt).abs() < 1e-12);
+        assert!(
+            (eng.stats.overlapped_time + eng.stats.stall_time - eng.stats.h2d_seconds).abs()
+                < 1e-12,
+            "stall + overlap conserves the transfer duration"
+        );
+    }
+
+    #[test]
+    fn stalling_through_queued_prefetches_unhides_their_overlap() {
+        let cm = cm();
+        let dt = cm.transfer_time(QuantMode::Fp16);
+        let mut eng = TransferEngine::new();
+        let mut clock = SimClock::new();
+        eng.prefetch_expert(&cm, &clock, 0, 1, QuantMode::Fp16); // A
+        eng.prefetch_expert(&cm, &clock, 0, 2, QuantMode::Fp16); // B, behind A
+        // the decode immediately misses on B: it blocks 2·dt, through
+        // the whole of A's transfer as well — nothing was hidden
+        let r = eng.wait_for(0, 2, &mut clock).unwrap();
+        assert!((r - 2.0 * dt).abs() < 1e-12);
+        assert!(eng.stats.overlapped_time.abs() < 1e-12, "A kept overlap credit");
+        assert!((eng.stats.stall_time - 2.0 * dt).abs() < 1e-12);
+        // A's later claim is free and does not double-subtract
+        assert_eq!(eng.wait_for(0, 1, &mut clock), Some(0.0));
+        assert!(eng.stats.overlapped_time.abs() < 1e-12);
+        assert!((eng.stats.stall_time - 2.0 * dt).abs() < 1e-12);
+    }
+
+    #[test]
+    fn demand_behind_prefetch_unhides_queued_overlap() {
+        let cm = cm();
+        let dt = cm.transfer_time(QuantMode::Fp16);
+        let mut eng = TransferEngine::new();
+        let mut clock = SimClock::new();
+        eng.prefetch_expert(&cm, &clock, 0, 1, QuantMode::Fp16); // occupies [0, dt]
+        let stall = eng.demand_h2d(&cm, &mut clock, QuantMode::Fp16); // queues behind it
+        assert!((stall - 2.0 * dt).abs() < 1e-12, "link wait + own transfer");
+        // the decode was blocked through the prefetch's transfer too
+        assert!(eng.stats.overlapped_time.abs() < 1e-12);
+        assert!((eng.stats.stall_time - 2.0 * dt).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wait_for_completed_transfer_is_free() {
+        let cm = cm();
+        let mut clock = SimClock::new();
+        let mut eng = TransferEngine::new();
+        let done = eng.prefetch_expert(&cm, &clock, 1, 2, QuantMode::Int4);
+        clock.advance(done + 1.0);
+        let before = clock.now();
+        let residual = eng.wait_for(1, 2, &mut clock).unwrap();
+        assert_eq!(residual, 0.0);
+        assert_eq!(clock.now(), before);
+        assert_eq!(eng.stats.stall_time, 0.0);
+        // unknown transfers fall back to demand
+        assert!(eng.wait_for(1, 2, &mut clock).is_none());
+        assert!(eng.wait_for(9, 9, &mut clock).is_none());
+    }
+
+    #[test]
+    fn link_wait_sees_queue_depth() {
+        let cm = cm();
+        let clock = SimClock::new();
+        let mut eng = TransferEngine::new();
+        assert_eq!(eng.link_wait(0.0), 0.0);
+        eng.prefetch_expert(&cm, &clock, 0, 0, QuantMode::Fp16);
+        eng.prefetch_expert(&cm, &clock, 0, 1, QuantMode::Fp16);
+        let dt = cm.transfer_time(QuantMode::Fp16);
+        assert!((eng.link_wait(0.0) - 2.0 * dt).abs() < 1e-12);
+        assert!((eng.link_wait(dt) - dt).abs() < 1e-12);
+        assert_eq!(eng.link_wait(10.0 * dt), 0.0);
     }
 
     #[test]

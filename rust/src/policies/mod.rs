@@ -21,6 +21,26 @@ pub enum Prefetch {
     Predictor,
     /// MoE-Infinity-style historical activation-frequency profile.
     Profile,
+    /// Layer-ahead transfer pipeline: the admit-time plan comes from
+    /// whatever source the engine carries (predictor, else profile, else
+    /// nothing), and during every step the engine additionally issues
+    /// non-blocking prefetches for the next `depth` layers' predicted
+    /// experts (`predictor::predict_next_layer`), overlapped with the
+    /// current layer's compute and tracked in-flight so a decode that
+    /// catches a transfer on the link pays only the residual wait
+    /// (`--lookahead`, docs/SERVING.md).
+    Lookahead { depth: usize },
+}
+
+impl Prefetch {
+    /// Per-step layer-ahead prefetch depth (0 for every non-lookahead
+    /// policy).
+    pub fn lookahead_depth(&self) -> usize {
+        match self {
+            Prefetch::Lookahead { depth } => *depth,
+            _ => 0,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -196,6 +216,14 @@ impl PolicyConfig {
         self
     }
 
+    /// Enable the layer-ahead transfer pipeline at the given depth
+    /// (`--lookahead`); the admit-time plan source falls back to the
+    /// engine's predictor/profile, see [`Prefetch::Lookahead`].
+    pub fn with_lookahead(mut self, depth: usize) -> PolicyConfig {
+        self.prefetch = Prefetch::Lookahead { depth };
+        self
+    }
+
     pub fn with_layer_capacities(mut self, caps: Vec<usize>) -> PolicyConfig {
         self.layer_capacities = Some(caps);
         self
@@ -269,6 +297,16 @@ mod tests {
         assert_eq!(f.variant, "ft_dolly");
         let b = PolicyConfig::floe(8).with_variant("base");
         assert_eq!(b.name, "floe");
+    }
+
+    #[test]
+    fn lookahead_depth_accessor() {
+        assert_eq!(Prefetch::None.lookahead_depth(), 0);
+        assert_eq!(Prefetch::Predictor.lookahead_depth(), 0);
+        assert_eq!(Prefetch::Lookahead { depth: 2 }.lookahead_depth(), 2);
+        let p = PolicyConfig::base_offload(8).with_lookahead(1);
+        assert_eq!(p.prefetch, Prefetch::Lookahead { depth: 1 });
+        assert_eq!(p.prefetch.lookahead_depth(), 1);
     }
 
     #[test]

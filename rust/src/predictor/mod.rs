@@ -57,6 +57,59 @@ impl PrefetchPlan {
     }
 }
 
+/// Layer-ahead candidate experts for `next_layer`, consulted while layer
+/// ℓ = `next_layer - d` is still computing (the lookahead prefetch
+/// pipeline; "Towards MoE Deployment"-style next-layer overlap).  Ranked
+/// by source quality, deduplicated, at most `cap` experts:
+///
+/// 1. the sequence's admit-time plan at `next_layer` — the Ψ_MLP
+///    predictor's (or routing profile's) per-layer Top-C, the same
+///    machinery `predict_plan`/`profile_plan` feed;
+/// 2. the session's observed activation counts at `next_layer` (an
+///    online profile — what this session's traffic actually routed);
+/// 3. layer ℓ's own selections as an identity prior, the last resort
+///    when neither source knows anything about `next_layer` yet.
+pub fn predict_next_layer(
+    plan: &PrefetchPlan,
+    counts: &[Vec<u64>],
+    cur_selected: &[usize],
+    next_layer: usize,
+    cap: usize,
+) -> Vec<usize> {
+    let mut out: Vec<usize> = Vec::with_capacity(cap);
+    if let Some(set) = plan.per_layer.get(next_layer) {
+        for &e in set {
+            if out.len() >= cap {
+                return out;
+            }
+            if !out.contains(&e) {
+                out.push(e);
+            }
+        }
+    }
+    if let Some(row) = counts.get(next_layer) {
+        let mut ranked: Vec<usize> = (0..row.len()).filter(|&e| row[e] > 0).collect();
+        ranked.sort_by(|&a, &b| row[b].cmp(&row[a]).then(a.cmp(&b)));
+        for e in ranked {
+            if out.len() >= cap {
+                return out;
+            }
+            if !out.contains(&e) {
+                out.push(e);
+            }
+        }
+    }
+    for &e in cur_selected {
+        if out.len() >= cap {
+            return out;
+        }
+        if !out.contains(&e) {
+            out.push(e);
+        }
+    }
+    out
+}
+
 /// Mean-pooled token embedding of the prompt: Ψ_EMB(q).
 pub fn prompt_embedding(embed: &HostTensor, prompt: &[usize]) -> Vec<f32> {
     let d = embed.dims[1];
@@ -171,6 +224,25 @@ mod tests {
         // cap larger than the union keeps everything
         let all = PrefetchPlan::union_capped(&[&a, &b], &[16]);
         assert_eq!(all.per_layer[0].len(), 8);
+    }
+
+    #[test]
+    fn predict_next_layer_ranks_plan_then_counts_then_identity() {
+        let plan = PrefetchPlan { per_layer: vec![vec![], vec![5, 6]] };
+        let counts = vec![vec![0; 8], vec![0, 9, 0, 2, 0, 7, 0, 0]];
+        // plan first (5, 6), then counts ranked 1 (9 hits) > 3 (2 hits);
+        // 5's count never duplicates it; identity prior fills the tail
+        let c = predict_next_layer(&plan, &counts, &[0, 7], 1, 8);
+        assert_eq!(c, vec![5, 6, 1, 3, 0, 7]);
+        // cap truncates in rank order
+        assert_eq!(predict_next_layer(&plan, &counts, &[0, 7], 1, 3), vec![5, 6, 1]);
+        // nothing known beyond the current selections: identity prior only
+        let empty = PrefetchPlan::empty(2);
+        let zero = vec![vec![0u64; 8]; 2];
+        assert_eq!(predict_next_layer(&empty, &zero, &[2, 4], 1, 8), vec![2, 4]);
+        // out-of-range layer: plan/counts rows missing are skipped
+        assert_eq!(predict_next_layer(&empty, &zero, &[1], 7, 4), vec![1]);
+        assert!(predict_next_layer(&empty, &zero, &[], 7, 4).is_empty());
     }
 
     #[test]

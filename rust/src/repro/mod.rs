@@ -51,18 +51,46 @@ impl Ctx {
     }
 
     /// Load the parts an engine needs for one policy on one dataset.
+    /// A lookahead policy's admit-time plan uses whatever source is
+    /// available — predictor first, then profile, else nothing (the
+    /// per-step pipeline runs off session activation counts regardless).
     pub fn parts(&self, policy: &PolicyConfig, ds_short: &str) -> Result<EngineParts> {
         let store = WeightStore::load(&self.dir, &self.cfg, &policy.variant, policy.quant)?;
-        let predictor = if policy.prefetch == Prefetch::Predictor {
-            let (v, d) = Self::predictor_key(&policy.variant, ds_short);
-            Some(PredictorWeights::load(&self.dir, &v, &d)?)
-        } else {
-            None
+        let predictor = match policy.prefetch {
+            Prefetch::Predictor => {
+                let (v, d) = Self::predictor_key(&policy.variant, ds_short);
+                Some(PredictorWeights::load(&self.dir, &v, &d)?)
+            }
+            Prefetch::Lookahead { .. } => {
+                let (v, d) = Self::predictor_key(&policy.variant, ds_short);
+                match PredictorWeights::load(&self.dir, &v, &d) {
+                    Ok(p) => Some(p),
+                    Err(e) => {
+                        eprintln!(
+                            "[lookahead: no predictor artifact ({e}); \
+                             admit-time plan falls back to profile]"
+                        );
+                        None
+                    }
+                }
+            }
+            _ => None,
         };
-        let profile = if policy.prefetch == Prefetch::Profile {
-            Some(RoutingProfile::load(&self.dir, "base", ds_short)?)
-        } else {
-            None
+        let profile = match policy.prefetch {
+            Prefetch::Profile => Some(RoutingProfile::load(&self.dir, "base", ds_short)?),
+            Prefetch::Lookahead { .. } if predictor.is_none() => {
+                match RoutingProfile::load(&self.dir, "base", ds_short) {
+                    Ok(p) => Some(p),
+                    Err(e) => {
+                        eprintln!(
+                            "[lookahead: no routing profile either ({e}); \
+                             admit-time plan is empty]"
+                        );
+                        None
+                    }
+                }
+            }
+            _ => None,
         };
         Ok(EngineParts { store, predictor, profile, policy: policy.clone() })
     }
@@ -229,6 +257,7 @@ pub fn run(id: &str, args: &crate::util::cli::Args) -> Result<()> {
         "ext_cluster" => ex::ext_cluster(args),
         "ext_continuous" => ex::ext_continuous(args),
         "ext_prefill" => ex::ext_prefill(args),
+        "ext_overlap" => ex::ext_overlap(args),
         "all" => {
             for id in ex::ALL {
                 println!("\n================ {id} ================");
