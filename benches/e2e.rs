@@ -9,10 +9,10 @@
 //! Skips cleanly when artifacts are not built.
 
 use melinoe::clock::GpuSpec;
-use melinoe::cluster::workload::OutputLen;
+use melinoe::cluster::workload::{OutputLen, PriorityMix};
 use melinoe::cluster::{self, ClusterConfig};
 use melinoe::coordinator::workload::Arrival;
-use melinoe::coordinator::SchedulerMode;
+use melinoe::coordinator::{PreemptPolicy, SchedulerMode};
 use melinoe::policies::PolicyConfig;
 use melinoe::repro::Ctx;
 use melinoe::util::bench::Bench;
@@ -84,6 +84,24 @@ fn main() {
         b.bench(&format!("cluster 4r/16req tight cache [lookahead={depth}]"), || {
             let mut bal = cluster::balancer::by_name("expert-affinity").unwrap();
             std::hint::black_box(cluster::run_cluster(&ocfg, bal.as_mut()).unwrap());
+        });
+    }
+    b.finish();
+
+    // ---- priority preemption (wallclock cost of the suspend/resume
+    // machinery in the sim loop; the sim-time TTFT/latency numbers come
+    // from `melinoe repro ext_preempt`)
+    let mut b = Bench::new("preempt");
+    let skewed_prio = cfg
+        .clone()
+        .with_output(OutputLen::Fixed(16))
+        .with_priority_mix(PriorityMix { high: 0.2, low: 0.8 });
+    let thresh = skewed_prio.spec.est_service_seconds(4, 16) / 20.0;
+    for (label, policy) in [("off", PreemptPolicy::Off), ("on", PreemptPolicy::After(thresh))] {
+        let pcfg = skewed_prio.clone().with_preempt(policy);
+        b.bench(&format!("cluster 4r/16req 20% high [preempt={label}]"), || {
+            let mut bal = cluster::balancer::by_name("expert-affinity").unwrap();
+            std::hint::black_box(cluster::run_cluster(&pcfg, bal.as_mut()).unwrap());
         });
     }
     b.finish();

@@ -12,7 +12,7 @@
 use std::time::Duration;
 
 use melinoe::clock::GpuSpec;
-use melinoe::coordinator::{Decoder, SchedulerMode, SeqFinish, Server, ServerConfig};
+use melinoe::coordinator::{Decoder, PreemptPolicy, SchedulerMode, SeqFinish, Server, ServerConfig};
 use melinoe::engine::{DecodeSession, Engine};
 use melinoe::metrics::{fmt2, Table};
 use melinoe::policies::PolicyConfig;
@@ -108,6 +108,7 @@ fn main() -> anyhow::Result<()> {
             max_output,
             scheduler,
             prefill_chunk,
+            preempt: PreemptPolicy::Off,
         },
     );
 

@@ -14,8 +14,19 @@
 //! The engine *pins* the experts selected by the current token so that a
 //! tight cache (e.g. the DeepSpeed-MoE-style capacity = K configuration)
 //! can never evict an expert it is about to execute.
+//!
+//! On top of the per-step pin argument there is a *scheduler-owned pin
+//! ledger* ([`LayerCache::pin_set`] / [`LayerCache::release`]): the
+//! scheduler registers every in-flight sequence's full planned hot set —
+//! not just the current step's experts — and the two *bulk* residency
+//! paths, [`LayerCache::prefill_union`] (burst admission refresh) and
+//! [`LayerCache::commit`] (lookahead arrival), never evict a
+//! ledger-pinned resident.  Demand misses keep today's policy-order
+//! eviction: genuine per-token churn may still displace a warm expert,
+//! but bulk and speculative traffic cannot wipe a live sequence's warm
+//! working set.  Preempted and retired sequences release their pins.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum EvictionKind {
@@ -88,6 +99,11 @@ pub struct LayerCache {
     /// LRU timestamps (per expert).
     last_used: Vec<u64>,
     tick: u64,
+    /// Scheduler-owned pin ledger: owner (sequence/request id) → its
+    /// planned hot set at this layer, capped at the slot count.
+    pins: HashMap<u64, Vec<usize>>,
+    /// Per-expert ledger pin counts (several owners may pin one expert).
+    pin_counts: Vec<u32>,
     pub stats: CacheStats,
 }
 
@@ -102,6 +118,8 @@ impl LayerCache {
             counts: vec![0.0; n_experts],
             last_used: vec![0; n_experts],
             tick: 0,
+            pins: HashMap::new(),
+            pin_counts: vec![0; n_experts],
             stats: CacheStats::default(),
         }
     }
@@ -173,6 +191,49 @@ impl LayerCache {
         evicted
     }
 
+    /// Register `owner`'s planned hot set in the pin ledger, replacing
+    /// any previous set it held.  The set is deduplicated and capped at
+    /// the layer's slot count (a plan bigger than the cache can hold
+    /// would otherwise freeze the whole layer), keeping the plan's own
+    /// ranking — its leading experts are the predictor's best.
+    /// Ledger-pinned *residents* survive any [`LayerCache::prefill_union`]
+    /// or [`LayerCache::commit`]; pinning does not itself load anything.
+    pub fn pin_set(&mut self, owner: u64, experts: &[usize]) {
+        self.release(owner);
+        let mut set: Vec<usize> = Vec::new();
+        for &e in experts {
+            if set.len() >= self.capacity {
+                break;
+            }
+            if e < self.n_experts && !set.contains(&e) {
+                set.push(e);
+            }
+        }
+        for &e in &set {
+            self.pin_counts[e] += 1;
+        }
+        self.pins.insert(owner, set);
+    }
+
+    /// Drop `owner`'s ledger entry (sequence retired or preempted).
+    pub fn release(&mut self, owner: u64) {
+        if let Some(set) = self.pins.remove(&owner) {
+            for e in set {
+                self.pin_counts[e] -= 1;
+            }
+        }
+    }
+
+    /// Whether any in-flight owner holds `expert` in its pinned hot set.
+    pub fn ledger_pinned(&self, expert: usize) -> bool {
+        self.pin_counts[expert] > 0
+    }
+
+    /// Number of owners with a live ledger entry.
+    pub fn pinned_owners(&self) -> usize {
+        self.pins.len()
+    }
+
     /// Slots currently held for in-flight prefetches.
     pub fn reserved_len(&self) -> usize {
         self.reserved.len()
@@ -205,18 +266,31 @@ impl LayerCache {
     /// Land an in-flight prefetch: clear the reservation and make the
     /// expert resident.  Eviction (if the cache filled up since the
     /// reservation) follows normal policy order but never touches
-    /// `pinned` — an arriving prefetch can never evict the step's
-    /// pin set.  When every resident is pinned the arrival is dropped
+    /// `pinned` *or a ledger-pinned resident* — an arriving prefetch can
+    /// never evict the step's pin set nor a live sequence's planned hot
+    /// set.  When every resident is protected the arrival is dropped
     /// (no residency change).  Returns the evicted expert, if any.
     pub fn commit(&mut self, expert: usize, pinned: &[usize]) -> Option<usize> {
         self.reserved.remove(&expert);
-        if self.resident.contains(&expert) {
+        if self.capacity == 0 || self.resident.contains(&expert) {
             return None;
         }
-        let evicted = self.insert(expert, pinned);
-        if self.resident.contains(&expert) {
-            self.stats.prefetch_loads += 1;
+        let mut evicted = None;
+        if self.resident.len() >= self.capacity {
+            let pinned: HashSet<usize> = pinned.iter().copied().collect();
+            let victim = self
+                .resident
+                .iter()
+                .copied()
+                .filter(|&e| !pinned.contains(&e) && !self.ledger_pinned(e) && e != expert)
+                .min_by(|&a, &b| self.eviction_rank(a, b));
+            let Some(victim) = victim else { return None };
+            self.resident.remove(&victim);
+            self.stats.evictions += 1;
+            evicted = Some(victim);
         }
+        self.resident.insert(expert);
+        self.stats.prefetch_loads += 1;
         evicted
     }
 
@@ -234,9 +308,11 @@ impl LayerCache {
     /// Additive prefetch refresh (mid-flight admission under continuous
     /// batching): load the target experts *without* dropping warm
     /// residents unless capacity forces it, and then only by evicting
-    /// residents outside the target set in normal policy order — a
-    /// refresh can never evict the planned working set.  On a cold cache
-    /// this equals [`LayerCache::prefill`].  Returns the experts loaded.
+    /// residents outside the target set — and outside the scheduler's
+    /// pin ledger — in normal policy order: a burst admission's refresh
+    /// can never evict the planned working set of any live sequence.  On
+    /// a cold cache this equals [`LayerCache::prefill`].  Returns the
+    /// experts loaded.
     pub fn prefill_union(&mut self, experts: &[usize]) -> Vec<usize> {
         if self.capacity == 0 {
             return Vec::new();
@@ -252,7 +328,7 @@ impl LayerCache {
                     .resident
                     .iter()
                     .copied()
-                    .filter(|r| !target.contains(r))
+                    .filter(|&r| !target.contains(&r) && !self.ledger_pinned(r))
                     .min_by(|&a, &b| self.eviction_rank(a, b));
                 let Some(victim) = victim else { break };
                 self.resident.remove(&victim);
@@ -310,6 +386,23 @@ impl ExpertCache {
     pub fn token_tick(&mut self) {
         for l in &mut self.layers {
             l.token_tick();
+        }
+    }
+
+    /// Register `owner`'s per-layer planned hot sets in every layer's pin
+    /// ledger (scheduler-owned eviction protection; see
+    /// [`LayerCache::pin_set`]).  Layers beyond `per_layer` pin nothing.
+    pub fn pin_set(&mut self, owner: u64, per_layer: &[Vec<usize>]) {
+        for (l, cache) in self.layers.iter_mut().enumerate() {
+            cache.pin_set(owner, per_layer.get(l).map(|s| s.as_slice()).unwrap_or(&[]));
+        }
+    }
+
+    /// Drop `owner`'s ledger entries across all layers (sequence retired
+    /// or preempted).
+    pub fn release(&mut self, owner: u64) {
+        for cache in &mut self.layers {
+            cache.release(owner);
         }
     }
 
@@ -526,6 +619,81 @@ mod tests {
         assert_eq!(c.commit(5, &[4, 7]), None);
         assert!(!c.contains(5) && !c.is_reserved(5));
         assert_eq!(c.resident_len(), 2);
+    }
+
+    // ---------------------------------------------------- pin ledger
+    #[test]
+    fn pin_set_release_roundtrip_and_caps_at_capacity() {
+        let mut c = LayerCache::new(16, 3, EvictionKind::Lfu);
+        c.pin_set(7, &[1, 2, 2, 4, 5, 6]); // dedup + cap at 3
+        assert!(c.ledger_pinned(1) && c.ledger_pinned(2) && c.ledger_pinned(4));
+        assert!(!c.ledger_pinned(5) && !c.ledger_pinned(6), "cap at the slot count");
+        assert_eq!(c.pinned_owners(), 1);
+        // replacing an owner's set drops the old pins
+        c.pin_set(7, &[9]);
+        assert!(!c.ledger_pinned(1) && c.ledger_pinned(9));
+        // overlapping owners: the expert stays pinned until both release
+        c.pin_set(8, &[9]);
+        c.release(7);
+        assert!(c.ledger_pinned(9));
+        c.release(8);
+        assert!(!c.ledger_pinned(9));
+        assert_eq!(c.pinned_owners(), 0);
+        // releasing an unknown owner is a no-op
+        c.release(12345);
+        // out-of-range experts are ignored
+        c.pin_set(1, &[99, 3]);
+        assert!(c.ledger_pinned(3) && !c.ledger_pinned(15));
+        // zero capacity pins nothing
+        let mut z = LayerCache::new(8, 0, EvictionKind::Lfu);
+        z.pin_set(1, &[1, 2]);
+        assert!(!z.ledger_pinned(1));
+    }
+
+    #[test]
+    fn prefill_union_never_evicts_ledger_pinned() {
+        let mut c = LayerCache::new(16, 3, EvictionKind::Lfu);
+        // warm the live sequence's working set and pin it
+        c.prefill_union(&[1, 2, 3]);
+        c.pin_set(0, &[1, 2, 3]);
+        // a burst admission refresh cannot displace the pinned residents
+        let loads = c.prefill_union(&[10, 11, 12]);
+        assert!(loads.is_empty(), "no victim available: refresh loads nothing");
+        assert!(c.contains(1) && c.contains(2) && c.contains(3));
+        // release one slot's protection: the refresh may now evict it
+        c.pin_set(0, &[1, 2]);
+        let loads = c.prefill_union(&[10]);
+        assert_eq!(loads, vec![10]);
+        assert!(c.contains(1) && c.contains(2) && !c.contains(3));
+    }
+
+    #[test]
+    fn commit_never_evicts_ledger_pinned() {
+        let mut c = LayerCache::new(16, 2, EvictionKind::Lfu);
+        c.prefill_union(&[1, 2]);
+        c.pin_set(0, &[1, 2]);
+        assert!(c.reserve(5));
+        // all residents ledger-pinned: the arrival is dropped
+        assert_eq!(c.commit(5, &[]), None);
+        assert!(!c.contains(5) && c.contains(1) && c.contains(2));
+        // unpin expert 2: the commit may evict it in policy order
+        c.pin_set(0, &[1]);
+        assert!(c.reserve(5));
+        assert_eq!(c.commit(5, &[]), Some(2));
+        assert!(c.contains(5) && c.contains(1) && !c.contains(2));
+    }
+
+    #[test]
+    fn demand_insert_still_churns_past_the_ledger() {
+        // ledger protection is scoped to the bulk paths: a genuine
+        // demand miss may still displace a ledger-pinned resident
+        let mut c = LayerCache::new(16, 2, EvictionKind::Lru);
+        c.prefill_union(&[1, 2]);
+        c.pin_set(0, &[1, 2]);
+        c.token_tick();
+        c.request(9);
+        assert!(c.insert(9, &[9]).is_some(), "demand path keeps policy-order eviction");
+        assert!(c.contains(9));
     }
 
     #[test]

@@ -34,12 +34,12 @@ use anyhow::Result;
 
 use crate::clock::GpuSpec;
 use crate::coordinator::workload::Arrival;
-use crate::coordinator::SchedulerMode;
+use crate::coordinator::{PreemptPolicy, Priority, SchedulerMode};
 use crate::metrics::{fmt2, Percentiles, Table};
 
 use balancer::{Balancer, ReplicaView};
 use replica::{Completion, Replica, ReplicaSpec};
-use workload::{ClusterRequest, OutputLen, TaskProfile, WorkloadSpec};
+use workload::{ClusterRequest, OutputLen, PriorityMix, TaskProfile, WorkloadSpec};
 
 /// The three stock balancers, in comparison-table order.
 pub const BALANCERS: &[&str] = &["round-robin", "least-loaded", "expert-affinity"];
@@ -62,6 +62,9 @@ pub struct ClusterConfig {
     /// Prompt tokens a prefilling sequence consumes per step on every
     /// replica (`--prefill-chunk`; 1 = token-at-a-time prefill).
     pub prefill_chunk: usize,
+    /// When a waiting higher-priority request may preempt an in-flight
+    /// sequence on a replica (`--preempt`; continuous scheduler only).
+    pub preempt: PreemptPolicy,
     pub spec: ReplicaSpec,
     pub workload: WorkloadSpec,
     pub tasks: Vec<TaskProfile>,
@@ -97,6 +100,7 @@ impl ClusterConfig {
             max_queue: n_requests.max(8),
             scheduler: SchedulerMode::Continuous,
             prefill_chunk: 1,
+            preempt: PreemptPolicy::Off,
             spec,
             workload: WorkloadSpec {
                 n_requests,
@@ -104,6 +108,7 @@ impl ClusterConfig {
                 prompt_tokens,
                 output: OutputLen::Fixed(max_output),
                 balanced_tasks: true,
+                priorities: PriorityMix::none(),
                 seed,
             },
             tasks,
@@ -127,6 +132,18 @@ impl ClusterConfig {
 
     pub fn with_prefill_chunk(mut self, chunk: usize) -> ClusterConfig {
         self.prefill_chunk = chunk.max(1);
+        self
+    }
+
+    /// Preemption policy applied on every replica (`--preempt`).
+    pub fn with_preempt(mut self, preempt: PreemptPolicy) -> ClusterConfig {
+        self.preempt = preempt;
+        self
+    }
+
+    /// Per-request priority distribution of the generated workload.
+    pub fn with_priority_mix(mut self, mix: PriorityMix) -> ClusterConfig {
+        self.workload.priorities = mix;
         self
     }
 
@@ -167,6 +184,22 @@ pub struct ReplicaSummary {
     pub overlapped_seconds: f64,
     pub busy_seconds: f64,
     pub peak_queue_depth: usize,
+    /// Sequences suspended out of a slot by a higher-priority waiter.
+    pub preemptions: u64,
+}
+
+/// Per-priority-class latency slice of a cluster run (only classes that
+/// actually completed requests appear, highest class first).
+#[derive(Debug, Clone)]
+pub struct PriorityClass {
+    pub priority: Priority,
+    pub requests: usize,
+    /// Arrival → first output token.
+    pub ttft: Percentiles,
+    /// Arrival → retirement.
+    pub latency: Percentiles,
+    /// Simulated seconds spent suspended after preemptions.
+    pub preempted_wait: Percentiles,
 }
 
 /// Fleet-level outcome of one (config, balancer) run.
@@ -202,6 +235,11 @@ pub struct ClusterReport {
     pub overlapped_seconds: f64,
     /// `overlapped / (overlapped + stalled)` — the overlap fraction.
     pub overlap_fraction: f64,
+    /// Fleet-total preemptions (suspensions of an in-flight sequence).
+    pub preemptions: u64,
+    /// Per-priority-class TTFT/latency slices (High first; only classes
+    /// with completed requests appear).
+    pub priorities: Vec<PriorityClass>,
     pub replicas: Vec<ReplicaSummary>,
 }
 
@@ -215,7 +253,9 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
     let requests = cfg.requests();
     let mut reps: Vec<Replica> = (0..cfg.replicas.max(1))
         .map(|i| {
-            Replica::new(i, cfg.spec.clone(), cfg.scheduler).with_prefill_chunk(cfg.prefill_chunk)
+            Replica::new(i, cfg.spec.clone(), cfg.scheduler)
+                .with_prefill_chunk(cfg.prefill_chunk)
+                .with_preempt(cfg.preempt)
         })
         .collect();
     let max_queue = cfg.max_queue.max(1);
@@ -277,6 +317,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
     let (mut hits, mut lookups) = (0u64, 0u64);
     let mut pcie_bytes = 0.0f64;
     let (mut stall_seconds, mut overlapped_seconds) = (0.0f64, 0.0f64);
+    let mut preemptions = 0u64;
     let replicas: Vec<ReplicaSummary> = reps
         .iter()
         .map(|r| {
@@ -286,6 +327,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
             pcie_bytes += r.pcie.stats.h2d_bytes;
             stall_seconds += r.pcie.stats.stall_time;
             overlapped_seconds += r.pcie.stats.overlapped_time;
+            preemptions += r.preemptions;
             ReplicaSummary {
                 id: r.id,
                 requests: r.completions.len(),
@@ -297,7 +339,29 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
                 overlapped_seconds: r.pcie.stats.overlapped_time,
                 busy_seconds: r.busy_seconds,
                 peak_queue_depth: r.peak_queue_depth,
+                preemptions: r.preemptions,
             }
+        })
+        .collect();
+    let priorities: Vec<PriorityClass> = Priority::ALL
+        .iter()
+        .rev()
+        .copied()
+        .filter_map(|p| {
+            let of: Vec<&Completion> =
+                completions.iter().copied().filter(|c| c.priority == p).collect();
+            if of.is_empty() {
+                return None;
+            }
+            Some(PriorityClass {
+                priority: p,
+                requests: of.len(),
+                ttft: Percentiles::of(&of.iter().map(|c| c.ttft()).collect::<Vec<f64>>()),
+                latency: Percentiles::of(&of.iter().map(|c| c.latency()).collect::<Vec<f64>>()),
+                preempted_wait: Percentiles::of(
+                    &of.iter().map(|c| c.preempted_wait).collect::<Vec<f64>>(),
+                ),
+            })
         })
         .collect();
     Ok(ClusterReport {
@@ -318,6 +382,8 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         stall_seconds,
         overlapped_seconds,
         overlap_fraction: crate::metrics::overlap_fraction(overlapped_seconds, stall_seconds),
+        preemptions,
+        priorities,
         replicas,
     })
 }
@@ -512,6 +578,13 @@ mod tests {
         assert!((per_replica_ovl - rep.overlapped_seconds).abs() < 1e-9);
         assert!((0.0..=1.0).contains(&rep.overlap_fraction));
         assert_eq!(rep.lookahead, 0, "synthetic default is admit-only prefetch");
+        // priority-free default: no preemptions, one all-Normal class
+        assert_eq!(rep.preemptions, 0);
+        assert_eq!(rep.priorities.len(), 1);
+        assert_eq!(rep.priorities[0].priority, Priority::Normal);
+        assert_eq!(rep.priorities[0].requests, rep.n_requests);
+        assert_eq!(rep.priorities[0].preempted_wait.p99, 0.0);
+        assert!(rep.replicas.iter().all(|r| r.preemptions == 0));
         let table = comparison_table(&[rep]);
         assert!(table.render().contains("expert-affinity"));
     }

@@ -29,7 +29,7 @@ use std::collections::VecDeque;
 
 use crate::cache::{EvictionKind, ExpertCache};
 use crate::clock::{CostModel, GpuSpec, PaperDims, SimClock};
-use crate::coordinator::SchedulerMode;
+use crate::coordinator::{PreemptPolicy, Priority, SchedulerMode};
 use crate::pcie::TransferEngine;
 use crate::predictor::PrefetchPlan;
 use crate::quant::QuantMode;
@@ -111,6 +111,7 @@ impl ReplicaSpec {
 pub struct Completion {
     pub request_id: u64,
     pub task: usize,
+    pub priority: Priority,
     pub arrival: f64,
     /// Admitted into a decode slot.
     pub started: f64,
@@ -118,6 +119,10 @@ pub struct Completion {
     pub first_token: f64,
     pub finished: f64,
     pub output_tokens: usize,
+    /// Simulated seconds spent suspended after preemptions (0.0 when the
+    /// request was never preempted) — reported separately from queueing
+    /// so preemption cost stays visible.
+    pub preempted_wait: f64,
 }
 
 impl Completion {
@@ -150,6 +155,8 @@ struct ActiveSeq {
     step: usize,
     started: f64,
     first_token: f64,
+    /// Simulated seconds this sequence has spent suspended so far.
+    preempted_wait: f64,
 }
 
 /// One serving replica (see module docs).
@@ -163,8 +170,16 @@ pub struct Replica {
     scheduler: SchedulerMode,
     /// Prompt tokens a prefilling sequence consumes per step (≥ 1).
     prefill_chunk: usize,
-    queue: VecDeque<ClusterRequest>,
+    /// When a waiting higher-priority request may preempt an in-flight
+    /// sequence (mirrors the coordinator's `--preempt` policy).
+    preempt: PreemptPolicy,
+    /// Pending arrivals, one FIFO queue per [`Priority`] class.
+    queues: [VecDeque<ClusterRequest>; 3],
     in_flight: Vec<ActiveSeq>,
+    /// Preempted sequences waiting to reattach: (sequence, suspended-at).
+    suspended: Vec<(ActiveSeq, f64)>,
+    /// Sequences suspended out of their slot by a higher-priority waiter.
+    pub preemptions: u64,
     /// Prefetch plan of the most recently enqueued request: the replica's
     /// *planned* residency, which the affinity scorer may consult before
     /// the caches have warmed (burst arrivals dispatch ahead of decode).
@@ -187,8 +202,11 @@ impl Replica {
             clock: SimClock::new(),
             scheduler,
             prefill_chunk: 1,
-            queue: VecDeque::new(),
+            preempt: PreemptPolicy::Off,
+            queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
             in_flight: Vec::new(),
+            suspended: Vec::new(),
+            preemptions: 0,
             last_plan: None,
             completions: Vec::new(),
             busy_seconds: 0.0,
@@ -203,14 +221,20 @@ impl Replica {
         self
     }
 
+    /// Set the preemption policy (see [`PreemptPolicy`]).
+    pub fn with_preempt(mut self, preempt: PreemptPolicy) -> Replica {
+        self.preempt = preempt;
+        self
+    }
+
     pub fn enqueue(&mut self, req: ClusterRequest) {
         self.last_plan = Some(req.plan.clone());
-        self.queue.push_back(req);
-        self.peak_queue_depth = self.peak_queue_depth.max(self.queue.len());
+        self.queues[req.priority.idx()].push_back(req);
+        self.peak_queue_depth = self.peak_queue_depth.max(self.queue_depth());
     }
 
     pub fn queue_depth(&self) -> usize {
-        self.queue.len()
+        self.queues.iter().map(|q| q.len()).sum()
     }
 
     /// Live decode-slot occupancy (the in-flight sequence count).
@@ -218,12 +242,27 @@ impl Replica {
         self.in_flight.len()
     }
 
+    /// Preempted sequences waiting to reattach.
+    pub fn suspended_len(&self) -> usize {
+        self.suspended.len()
+    }
+
     pub fn has_work(&self) -> bool {
-        !self.in_flight.is_empty() || !self.queue.is_empty()
+        !self.in_flight.is_empty()
+            || !self.suspended.is_empty()
+            || self.queues.iter().any(|q| !q.is_empty())
     }
 
     pub fn busy_until(&self) -> f64 {
         self.clock.now()
+    }
+
+    /// Earliest arrival time across the per-priority queues.
+    fn next_arrival(&self) -> Option<f64> {
+        self.queues
+            .iter()
+            .filter_map(|q| q.front().map(|r| r.at))
+            .min_by(f64::total_cmp)
     }
 
     /// Fraction of `plan`'s experts resident in this replica's caches,
@@ -256,9 +295,11 @@ impl Replica {
         }
     }
 
-    /// Admit queued, already-arrived requests into free slots.  Static
-    /// mode only opens admission once every slot has drained (the
-    /// run-to-completion batch); continuous mode admits at every step.
+    /// Admit into free slots, highest priority class first; within a
+    /// class, preempted sequences reattach (in suspension order) before
+    /// new arrivals admit.  Static mode only opens admission once every
+    /// slot has drained (the run-to-completion batch); continuous mode
+    /// admits at every step.
     fn admit_ready(&mut self, max_batch: usize) {
         let open = match self.scheduler {
             SchedulerMode::Continuous => true,
@@ -268,57 +309,154 @@ impl Replica {
             return;
         }
         while self.in_flight.len() < max_batch.max(1) {
-            let ready = matches!(self.queue.front(), Some(r) if r.at <= self.clock.now());
-            if !ready {
-                break;
+            let now = self.clock.now();
+            // best suspended candidate (highest class, earliest suspension)
+            let sus = self
+                .suspended
+                .iter()
+                .enumerate()
+                .max_by(|a, b| {
+                    a.1 .0
+                        .req
+                        .priority
+                        .cmp(&b.1 .0.req.priority)
+                        .then(b.1 .1.total_cmp(&a.1 .1))
+                })
+                .map(|(i, (s, _))| (i, s.req.priority));
+            // best ready queue class
+            let ready = Priority::ALL
+                .iter()
+                .rev()
+                .copied()
+                .find(|p| matches!(self.queues[p.idx()].front(), Some(r) if r.at <= now));
+            match (sus, ready) {
+                // suspended wins ties: it has already made progress
+                (Some((i, sp)), Some(rp)) if sp >= rp => self.reattach(i),
+                (Some((i, _)), None) => self.reattach(i),
+                (_, Some(p)) => {
+                    let req = self.queues[p.idx()].pop_front().unwrap();
+                    self.admit_one(req);
+                }
+                (None, None) => break,
             }
-            let req = self.queue.pop_front().unwrap();
-            self.admit_one(req);
         }
     }
 
-    /// Put one request into a decode slot: rebuild the union prefetch
-    /// plan of the *live* in-flight set plus the newcomer (in-flight
-    /// plans come first, so capacity ties keep the warm working set) and
-    /// top the cache up additively — the refresh never drops the planned
-    /// working set, and warm residents outside it are evicted only under
-    /// capacity pressure, in normal policy order.
-    fn admit_one(&mut self, req: ClusterRequest) {
-        if self.spec.prefetch {
-            self.clock.advance(self.cost.predictor_time());
-            let mut plans: Vec<&PrefetchPlan> =
-                self.in_flight.iter().map(|a| &a.req.plan).collect();
-            plans.push(&req.plan);
-            let caps = vec![self.spec.capacity; self.spec.n_layers];
-            let union = PrefetchPlan::union_capped(&plans, &caps);
-            for (l, set) in union.per_layer.iter().enumerate() {
-                if set.is_empty() {
-                    continue;
-                }
-                // skip non-resident experts whose lookahead transfer is
-                // already on the link — they arrive via the tracked
-                // pipeline; re-issuing would double-pay the transfer.
-                // (Resident in-flight experts stay in the target: the
-                // union protects them from eviction and never re-loads
-                // residents.)
-                let want: Vec<usize> = set
-                    .iter()
-                    .copied()
-                    .filter(|&e| {
-                        self.cache.layers[l].contains(e) || !self.pcie.in_flight_contains(l, e)
-                    })
-                    .collect();
-                // tracked issue: residency is immediate (prefill_union
-                // above), but the link entry keeps the stall/overlap
-                // split exact and lets an evicted-then-remissed expert
-                // catch its own transfer at the residual
-                for e in self.cache.layer(l).prefill_union(&want) {
-                    self.pcie.prefetch_expert(&self.cost, &self.clock, l, e, self.spec.quant);
-                }
+    /// Rebuild the union prefetch plan of the *live* in-flight set plus
+    /// `plan` (in-flight plans come first, so capacity ties keep the warm
+    /// working set) and top the cache up additively — the refresh never
+    /// drops the planned working set of any live sequence (the pin
+    /// ledger backs this), and warm residents outside it are evicted
+    /// only under capacity pressure, in normal policy order.
+    fn refresh_plan(&mut self, plan: &PrefetchPlan) {
+        self.clock.advance(self.cost.predictor_time());
+        let mut plans: Vec<&PrefetchPlan> = self.in_flight.iter().map(|a| &a.req.plan).collect();
+        plans.push(plan);
+        let caps = vec![self.spec.capacity; self.spec.n_layers];
+        let union = PrefetchPlan::union_capped(&plans, &caps);
+        for (l, set) in union.per_layer.iter().enumerate() {
+            if set.is_empty() {
+                continue;
+            }
+            // skip non-resident experts whose lookahead transfer is
+            // already on the link — they arrive via the tracked
+            // pipeline; re-issuing would double-pay the transfer.
+            // (Resident in-flight experts stay in the target: the
+            // union protects them from eviction and never re-loads
+            // residents.)
+            let want: Vec<usize> = set
+                .iter()
+                .copied()
+                .filter(|&e| {
+                    self.cache.layers[l].contains(e) || !self.pcie.in_flight_contains(l, e)
+                })
+                .collect();
+            // tracked issue: residency is immediate (prefill_union
+            // above), but the link entry keeps the stall/overlap
+            // split exact and lets an evicted-then-remissed expert
+            // catch its own transfer at the residual
+            for e in self.cache.layer(l).prefill_union(&want) {
+                self.pcie.prefetch_expert(&self.cost, &self.clock, l, e, self.spec.quant);
             }
         }
+    }
+
+    /// Put one request into a decode slot: refresh the union prefetch
+    /// plan and register its planned hot set in the cache's
+    /// scheduler-owned pin ledger, so burst admissions and lookahead
+    /// commits can never evict it while the sequence is live.
+    fn admit_one(&mut self, req: ClusterRequest) {
+        if self.spec.prefetch {
+            self.refresh_plan(&req.plan);
+        }
+        self.cache.pin_set(req.id, &req.plan.per_layer);
         let now = self.clock.now();
-        self.in_flight.push(ActiveSeq { req, step: 0, started: now, first_token: now });
+        self.in_flight.push(ActiveSeq {
+            req,
+            step: 0,
+            started: now,
+            first_token: now,
+            preempted_wait: 0.0,
+        });
+    }
+
+    /// Reattach suspended sequence `i`: accumulate its suspended time,
+    /// re-run the admit-time plan refresh from its *memoized* plan, and
+    /// re-register its pin-ledger entries.  The step cursor is untouched,
+    /// so the replayed routing — and with it every completion metric —
+    /// continues exactly where suspension stopped.
+    fn reattach(&mut self, i: usize) {
+        let (mut seq, since) = self.suspended.remove(i);
+        seq.preempted_wait += self.clock.now() - since;
+        if self.spec.prefetch {
+            self.refresh_plan(&seq.req.plan);
+        }
+        self.cache.pin_set(seq.req.id, &seq.req.plan.per_layer);
+        self.in_flight.push(seq);
+    }
+
+    /// Under [`PreemptPolicy::After`], suspend the lowest-priority (most
+    /// recently started) in-flight sequence for every ready arrival of a
+    /// strictly higher class that has out-waited the threshold.  The
+    /// victim's pin-ledger entries release immediately — a suspended
+    /// sequence no longer protects its warm set.  Continuous mode only.
+    fn maybe_preempt(&mut self, max_batch: usize) {
+        let Some(thresh) = self.preempt.threshold() else { return };
+        if self.scheduler != SchedulerMode::Continuous {
+            return;
+        }
+        let now = self.clock.now();
+        for p in [Priority::High, Priority::Normal] {
+            loop {
+                if self.in_flight.len() < max_batch.max(1) {
+                    return; // a slot is free: admission handles the waiter
+                }
+                let waited = match self.queues[p.idx()].front() {
+                    Some(r) if r.at <= now => now - r.at,
+                    _ => break,
+                };
+                if waited <= thresh {
+                    break;
+                }
+                let victim = self
+                    .in_flight
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| s.req.priority < p)
+                    .min_by(|(_, a), (_, b)| {
+                        a.req
+                            .priority
+                            .cmp(&b.req.priority)
+                            .then(b.started.total_cmp(&a.started))
+                    })
+                    .map(|(i, _)| i);
+                let Some(i) = victim else { break };
+                let seq = self.in_flight.remove(i);
+                self.cache.release(seq.req.id);
+                self.preemptions += 1;
+                self.suspended.push((seq, now));
+            }
+        }
     }
 
     /// Tokens one sequence consumes this step: a prefilling sequence
@@ -473,14 +611,17 @@ impl Replica {
             }
             if seq.step >= seq.req.routing.len() {
                 let seq = self.in_flight.remove(i);
+                self.cache.release(seq.req.id);
                 self.completions.push(Completion {
                     request_id: seq.req.id,
                     task: seq.req.task,
+                    priority: seq.req.priority,
                     arrival: seq.req.at,
                     started: seq.started,
                     first_token: seq.first_token,
                     finished: now,
                     output_tokens: seq.req.max_output,
+                    preempted_wait: seq.preempted_wait,
                 });
             } else {
                 i += 1;
@@ -488,20 +629,22 @@ impl Replica {
         }
     }
 
-    /// Admit what's ready and advance exactly one token step (fast-
-    /// forwarding an idle clock to the next queued arrival first).
+    /// Preempt if allowed, admit what's ready, and advance exactly one
+    /// token step (fast-forwarding an idle clock to the next queued
+    /// arrival first — suspended sequences reattach without waiting).
     pub fn run_one_step(&mut self, max_batch: usize) {
-        if self.in_flight.is_empty() {
-            match self.queue.front() {
+        if self.in_flight.is_empty() && self.suspended.is_empty() {
+            match self.next_arrival() {
                 None => return,
-                Some(r) if r.at > self.clock.now() => {
-                    let dt = r.at - self.clock.now();
+                Some(at) if at > self.clock.now() => {
+                    let dt = at - self.clock.now();
                     self.clock.advance(dt);
                 }
                 _ => {}
             }
         }
         let t0 = self.clock.now();
+        self.maybe_preempt(max_batch);
         self.admit_ready(max_batch);
         if self.in_flight.is_empty() {
             return;
@@ -515,9 +658,9 @@ impl Replica {
     /// by one step — in-flight sequences stay resumable across calls).
     pub fn run_until(&mut self, horizon: f64, max_batch: usize) {
         while self.has_work() {
-            if self.in_flight.is_empty() {
+            if self.in_flight.is_empty() && self.suspended.is_empty() {
                 // next possible start is the front arrival
-                let at = self.queue.front().map(|r| r.at).unwrap_or(f64::INFINITY);
+                let at = self.next_arrival().unwrap_or(f64::INFINITY);
                 if self.clock.now().max(at) >= horizon {
                     break;
                 }
@@ -550,7 +693,7 @@ fn plan_overlap(a: &PrefetchPlan, b: &PrefetchPlan) -> f64 {
 
 #[cfg(test)]
 mod tests {
-    use super::super::workload::{generate, OutputLen, TaskProfile, WorkloadSpec};
+    use super::super::workload::{generate, OutputLen, PriorityMix, TaskProfile, WorkloadSpec};
     use super::*;
     use crate::coordinator::workload::Arrival;
     use crate::util::rng::Rng;
@@ -573,6 +716,7 @@ mod tests {
             prompt_tokens: 2,
             output: OutputLen::Fixed(4),
             balanced_tasks: false,
+            priorities: PriorityMix::none(),
             seed,
         };
         generate(&wl, &profiles, s.n_layers, s.n_experts, s.top_k)
@@ -599,12 +743,27 @@ mod tests {
         ClusterRequest {
             id,
             task: 0,
+            priority: Priority::Normal,
             at: 0.0,
             prompt_tokens,
             max_output: out,
             routing,
             plan: profiles[0].plan(),
         }
+    }
+
+    /// `req_shaped` with an explicit priority class.
+    fn req_prio(
+        id: u64,
+        prompt_tokens: usize,
+        out: usize,
+        priority: Priority,
+        s: &ReplicaSpec,
+        seed: u64,
+    ) -> ClusterRequest {
+        let mut r = req_shaped(id, prompt_tokens, out, s, seed);
+        r.priority = priority;
+        r
     }
 
     /// A one-prompt-token request with a chosen output length.
@@ -824,5 +983,87 @@ mod tests {
         assert!((2..=64).contains(&s.capacity), "capacity {}", s.capacity);
         let big = ReplicaSpec::from_vram_gb(GpuSpec::h100(), s.dims, 400.0);
         assert_eq!(big.capacity, s.dims.n_experts);
+    }
+
+    // --------------------------------------------------- priority/preemption
+
+    /// One slot held by a long Low decode, a High arriving shortly after:
+    /// with preemption the High's TTFT is bounded near the threshold and
+    /// the Low resumes to the same completion accounting as an
+    /// uninterrupted run (same output tokens; only timing shifts).
+    #[test]
+    fn preemption_bounds_high_ttft_and_victim_resumes() {
+        let s = spec();
+        // a solo decode step's duration bounds the preemption detection lag
+        let step_t = s.est_service_seconds(1, 40) / 41.0;
+        let arrive_at = 4.0 * step_t;
+        let thresh = 2.0 * step_t;
+        let build = |preempt: PreemptPolicy| {
+            let mut r = Replica::new(0, s.clone(), SchedulerMode::Continuous)
+                .with_preempt(preempt);
+            r.enqueue(req_prio(0, 1, 40, Priority::Low, &s, 1));
+            let mut high = req_prio(1, 1, 3, Priority::High, &s, 2);
+            high.at = arrive_at;
+            r.enqueue(high);
+            r.run_until(f64::INFINITY, 1);
+            r
+        };
+        let off = build(PreemptPolicy::Off);
+        let on = build(PreemptPolicy::After(thresh));
+        assert_eq!(off.preemptions, 0);
+        assert_eq!(on.preemptions, 1, "the High must have preempted the Low");
+        let high_of = |r: &Replica| {
+            r.completions.iter().find(|c| c.request_id == 1).cloned().unwrap()
+        };
+        let (h_off, h_on) = (high_of(&off), high_of(&on));
+        assert!(
+            h_on.ttft() < h_off.ttft(),
+            "preemption must cut High TTFT: {} vs {}",
+            h_on.ttft(),
+            h_off.ttft()
+        );
+        // without preemption the High waits out the whole Low decode
+        assert!(h_off.ttft() > 30.0 * step_t);
+        // with preemption it starts within threshold + a couple of steps
+        // (one in-flight step finishes before the boundary check)
+        assert!(h_on.ttft() <= thresh + 4.0 * step_t + 1e-9, "ttft {}", h_on.ttft());
+        // the victim resumed and completed with identical token accounting
+        let low_of = |r: &Replica| {
+            r.completions.iter().find(|c| c.request_id == 0).cloned().unwrap()
+        };
+        let (l_off, l_on) = (low_of(&off), low_of(&on));
+        assert_eq!(l_off.output_tokens, l_on.output_tokens);
+        assert!(l_on.preempted_wait > 0.0, "suspension time must be reported");
+        assert_eq!(l_off.preempted_wait, 0.0);
+        assert!(l_on.finished > l_off.finished, "the victim pays the suspension");
+        // identical routed work overall: same cache request totals
+        assert_eq!(
+            off.cache.total_stats().requests(),
+            on.cache.total_stats().requests(),
+            "suspension must not add or drop routed traffic"
+        );
+    }
+
+    /// Suspended state survives an idle queue: with nothing else to run,
+    /// the replica reattaches the victim rather than deadlocking.
+    #[test]
+    fn suspended_sequence_always_reattaches() {
+        let s = spec();
+        let step_t = s.est_service_seconds(1, 20) / 21.0;
+        let mut r = Replica::new(0, s.clone(), SchedulerMode::Continuous)
+            .with_preempt(PreemptPolicy::After(0.0));
+        r.enqueue(req_prio(0, 1, 20, Priority::Low, &s, 3));
+        let mut high = req_prio(1, 1, 2, Priority::High, &s, 4);
+        high.at = 2.0 * step_t;
+        r.enqueue(high);
+        let mut steps = 0;
+        while r.has_work() {
+            r.run_one_step(1);
+            steps += 1;
+            assert!(steps < 200, "replica failed to drain suspended work");
+        }
+        assert_eq!(r.completions.len(), 2);
+        assert_eq!(r.suspended_len(), 0);
+        assert!(r.preemptions >= 1);
     }
 }

@@ -15,6 +15,7 @@
 //! dimension rather than replacing it.
 
 use crate::coordinator::workload::Arrival;
+use crate::coordinator::Priority;
 use crate::predictor::PrefetchPlan;
 use crate::util::rng::Rng;
 
@@ -147,12 +148,51 @@ impl OutputLen {
     }
 }
 
+/// Per-request priority distribution: `high` of arrivals are High,
+/// `low` are Low, the rest Normal.  [`PriorityMix::none`] (all Normal)
+/// consumes no randomness, so priority-free workloads stay byte-identical
+/// to the pre-priority generator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PriorityMix {
+    pub high: f64,
+    pub low: f64,
+}
+
+impl PriorityMix {
+    /// Every request Normal (the default; draws no randomness).
+    pub fn none() -> PriorityMix {
+        PriorityMix { high: 0.0, low: 0.0 }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.high <= 0.0 && self.low <= 0.0
+    }
+
+    /// Draw one request's priority.
+    pub fn draw(&self, rng: &mut Rng) -> Priority {
+        if self.is_none() {
+            return Priority::Normal;
+        }
+        let high = self.high.clamp(0.0, 1.0);
+        let low = self.low.clamp(0.0, 1.0 - high);
+        let x = rng.f64();
+        if x < high {
+            Priority::High
+        } else if x < high + low {
+            Priority::Low
+        } else {
+            Priority::Normal
+        }
+    }
+}
+
 /// One admitted request, with its routing trace pre-drawn so every
 /// balancer sees byte-identical traffic.
 #[derive(Debug, Clone)]
 pub struct ClusterRequest {
     pub id: u64,
     pub task: usize,
+    pub priority: Priority,
     /// Arrival time (simulated seconds).
     pub at: f64,
     pub prompt_tokens: usize,
@@ -170,6 +210,7 @@ impl ClusterRequest {
         ClusterRequest {
             id: 0,
             task,
+            priority: Priority::Normal,
             at: 0.0,
             prompt_tokens: 0,
             max_output: 0,
@@ -193,6 +234,9 @@ pub struct WorkloadSpec {
     /// per arrival but stream volumes are stable).  `false`: every
     /// arrival draws its task independently by weight.
     pub balanced_tasks: bool,
+    /// Per-request priority distribution ([`PriorityMix::none`] keeps the
+    /// generator's random stream byte-identical to priority-free runs).
+    pub priorities: PriorityMix,
     pub seed: u64,
 }
 
@@ -246,6 +290,7 @@ pub fn generate(
                     task
                 }
             };
+            let priority = spec.priorities.draw(&mut rng);
             let out_len = spec.output.draw(&mut rng);
             let steps = spec.prompt_tokens + out_len;
             let routing = (0..steps)
@@ -258,6 +303,7 @@ pub fn generate(
             ClusterRequest {
                 id: i as u64,
                 task,
+                priority,
                 at,
                 prompt_tokens: spec.prompt_tokens,
                 max_output: out_len,
@@ -279,6 +325,7 @@ mod tests {
             prompt_tokens: 4,
             output: OutputLen::Fixed(8),
             balanced_tasks: false,
+            priorities: PriorityMix::none(),
             seed: 7,
         }
     }
@@ -403,5 +450,39 @@ mod tests {
         let tasks = TaskProfile::synthetic(2, 4, 64, 8, 0.9);
         let plan = tasks[1].plan();
         assert_eq!(plan.per_layer, tasks[1].hot);
+    }
+
+    #[test]
+    fn priority_mix_skews_and_stays_deterministic() {
+        let tasks = TaskProfile::synthetic(2, 2, 64, 8, 0.9);
+        let mut s = spec(200, Arrival::Burst);
+        s.priorities = PriorityMix { high: 0.2, low: 0.5 };
+        let a = generate(&s, &tasks, 2, 64, 4);
+        let b = generate(&s, &tasks, 2, 64, 4);
+        let highs = a.iter().filter(|r| r.priority == Priority::High).count();
+        let lows = a.iter().filter(|r| r.priority == Priority::Low).count();
+        let normals = a.iter().filter(|r| r.priority == Priority::Normal).count();
+        assert_eq!(highs + lows + normals, 200);
+        assert!((20..=80).contains(&highs), "high fraction ~20%, got {highs}/200");
+        assert!((60..=140).contains(&lows), "low fraction ~50%, got {lows}/200");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.priority, y.priority);
+            assert_eq!(x.routing, y.routing);
+        }
+    }
+
+    /// `PriorityMix::none` consumes no randomness: the pre-drawn traces
+    /// are byte-identical to a generator without the priority dimension
+    /// (locked in so priority-free comparisons keep their traffic).
+    #[test]
+    fn none_mix_is_all_normal_and_draw_free() {
+        let tasks = TaskProfile::synthetic(2, 2, 64, 8, 0.9);
+        let s = spec(50, Arrival::Poisson(10.0));
+        let reqs = generate(&s, &tasks, 2, 64, 4);
+        assert!(reqs.iter().all(|r| r.priority == Priority::Normal));
+        let mut rng = Rng::new(1);
+        let before = rng.clone().next_u64();
+        assert_eq!(PriorityMix::none().draw(&mut rng), Priority::Normal);
+        assert_eq!(rng.next_u64(), before, "none mix must not consume the stream");
     }
 }

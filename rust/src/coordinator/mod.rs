@@ -15,9 +15,22 @@
 //! freed slots re-admit immediately.  [`SchedulerMode::Static`] recovers
 //! the legacy drain-batch-then-decode-to-completion behaviour for
 //! comparison (`--scheduler static|continuous` on the CLI).
+//!
+//! Scheduling is *priority-aware* end to end: every [`Request`] carries a
+//! [`Priority`] (Low/Normal/High), pending requests queue per class and
+//! admit highest-class-first, and under a [`PreemptPolicy`] a request
+//! that has waited longer than the policy threshold may *preempt* the
+//! lowest-priority in-flight sequence at a step boundary — the decoder
+//! detaches its state ([`Decoder::suspend`]), the slot re-admits the
+//! waiter, and the victim reattaches later ([`Decoder::resume`]) with
+//! bit-identical continuation.  Time a sequence spends suspended is
+//! reported separately from initial queueing
+//! ([`ServerStats::preempted_wait`] vs [`ServerStats::queue_wait`]), so
+//! preemption cost is visible rather than laundered into queue time.
 
 pub mod workload;
 
+use std::any::Any;
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::thread::JoinHandle;
@@ -27,6 +40,78 @@ use anyhow::Result;
 
 use crate::metrics::Percentiles;
 use crate::pcie::TransferStats;
+
+/// Request priority class.  Ordered: `Low < Normal < High` — the
+/// scheduler admits pending requests highest class first, and under a
+/// [`PreemptPolicy`] a waiter may suspend an in-flight sequence of a
+/// *strictly lower* class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Low,
+    Normal,
+    High,
+}
+
+impl Priority {
+    /// All classes, lowest first (`ALL.iter().rev()` is admission order).
+    pub const ALL: [Priority; 3] = [Priority::Low, Priority::Normal, Priority::High];
+
+    pub fn parse(s: &str) -> Result<Priority> {
+        Ok(match s {
+            "low" => Priority::Low,
+            "normal" => Priority::Normal,
+            "high" => Priority::High,
+            _ => anyhow::bail!("unknown priority {s:?} (low|normal|high)"),
+        })
+    }
+
+    /// Dense index for per-class storage (`Low = 0 … High = 2`).
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
+
+/// When a waiting request may preempt an in-flight sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum PreemptPolicy {
+    /// Never preempt: priority only reorders admission.
+    #[default]
+    Off,
+    /// Preempt once a strictly-higher-priority request has waited more
+    /// than this many *simulated* seconds for a slot.  `0.0` preempts as
+    /// soon as a higher-priority request finds every slot occupied.
+    After(f64),
+}
+
+impl PreemptPolicy {
+    /// `--preempt off` or `--preempt <seconds>`.
+    pub fn parse(s: &str) -> Result<PreemptPolicy> {
+        if s == "off" {
+            return Ok(PreemptPolicy::Off);
+        }
+        let t: f64 = s.parse().map_err(|e| anyhow::anyhow!("--preempt {s:?}: {e}"))?;
+        if !t.is_finite() || t < 0.0 {
+            anyhow::bail!("preempt threshold must be a finite non-negative number, got {s:?}");
+        }
+        Ok(PreemptPolicy::After(t))
+    }
+
+    /// The wait threshold, or `None` when preemption is off.
+    pub fn threshold(self) -> Option<f64> {
+        match self {
+            PreemptPolicy::Off => None,
+            PreemptPolicy::After(t) => Some(t),
+        }
+    }
+}
 
 /// One retired sequence, in the decoder's simulated timeline.
 #[derive(Debug, Clone)]
@@ -90,6 +175,20 @@ pub trait Decoder {
     fn transfer_stats(&self) -> TransferStats {
         TransferStats::default()
     }
+    /// Detach an in-flight sequence's state at a step boundary so its
+    /// slot frees (priority preemption).  The returned opaque state is
+    /// handed back verbatim to [`Decoder::resume`]; the sequence must
+    /// continue bit-identically from where it stopped.  Decoders without
+    /// suspension support refuse (the scheduler only calls this under an
+    /// active [`PreemptPolicy`]).
+    fn suspend(&mut self, _seq: u64) -> Result<Box<dyn Any>> {
+        anyhow::bail!("this decoder does not support preemption")
+    }
+    /// Reattach a sequence detached by [`Decoder::suspend`] into a free
+    /// slot, returning its original handle.
+    fn resume(&mut self, _state: Box<dyn Any>) -> Result<u64> {
+        anyhow::bail!("this decoder does not support preemption")
+    }
 }
 
 /// How the scheduler fills decode slots.
@@ -122,14 +221,20 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<usize>,
     pub max_output: usize,
+    pub priority: Priority,
 }
 
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
     pub tokens: Vec<usize>,
-    /// Wallclock seconds between submission and slot admission.
+    /// Wallclock seconds between submission and *first* slot admission
+    /// (initial queueing only — time spent suspended after a preemption
+    /// is reported separately in `preempted_wait`).
     pub queue_wait: f64,
+    /// Simulated seconds spent suspended after preemptions (0.0 for a
+    /// request that was never preempted).
+    pub preempted_wait: f64,
     /// Simulated seconds from admission to retirement.
     pub sim_latency: f64,
     /// Simulated time-to-first-token (from admission).
@@ -157,6 +262,11 @@ pub struct ServerConfig {
     /// shortens its own TTFT by `~chunk×` without ever stalling live
     /// decodes.  1 (the default) recovers token-at-a-time prefill.
     pub prefill_chunk: usize,
+    /// When a waiting higher-priority request may preempt an in-flight
+    /// sequence (`--preempt`).  Only meaningful under
+    /// [`SchedulerMode::Continuous`] — static batches cannot re-admit a
+    /// freed slot mid-batch, so preemption is gated off there.
+    pub preempt: PreemptPolicy,
 }
 
 impl Default for ServerConfig {
@@ -167,6 +277,7 @@ impl Default for ServerConfig {
             max_output: 32,
             scheduler: SchedulerMode::Continuous,
             prefill_chunk: 1,
+            preempt: PreemptPolicy::Off,
         }
     }
 }
@@ -183,8 +294,15 @@ pub struct ServerStats {
     pub total_sim_seconds: f64,
     /// Mean in-flight sequences per executed step (slot occupancy).
     pub mean_batch_size: f64,
-    /// p50/p95/p99 of per-request wallclock queue wait (seconds).
+    /// Sequences suspended out of their slot by a higher-priority waiter.
+    pub preemptions: u64,
+    /// p50/p95/p99 of per-request wallclock *initial* queue wait
+    /// (seconds) — submission to first admission only.
     pub queue_wait: Percentiles,
+    /// p50/p95/p99 of per-request simulated seconds spent suspended
+    /// after preemptions (0 everywhere when preemption never fired).
+    /// Split out from `queue_wait` so preemption cost is visible.
+    pub preempted_wait: Percentiles,
     /// p50/p95/p99 of per-request simulated admission→finish latency.
     pub sim_latency: Percentiles,
     /// p50/p95/p99 of simulated time-to-first-token.
@@ -204,9 +322,21 @@ struct Job {
     req: Request,
     tx: Sender<Response>,
     submitted: Instant,
+    /// Decoder sim time at enqueue (preemption thresholds are measured
+    /// on the simulated clock, so tests stay deterministic).
+    enqueued_sim: f64,
     /// Set at admission: wallclock queue wait and slot occupancy.
     queue_wait: f64,
     batch_at_admit: usize,
+    /// Total simulated seconds spent suspended after preemptions.
+    preempted_wait: f64,
+    /// Sim time of the latest suspension (while in the suspended store).
+    suspended_at: f64,
+    /// Sim time of the *first* admission — preemption victims are the
+    /// most recently (first-)admitted among the lowest class, i.e. the
+    /// least-progressed sequence; resume does not reset it, so a
+    /// just-resumed sequence cannot become the permanent victim.
+    admitted_sim: f64,
 }
 
 /// The step-level scheduling core, independent of threads and channels:
@@ -215,11 +345,16 @@ struct Job {
 pub struct Scheduler<D: Decoder> {
     dec: D,
     cfg: ServerConfig,
-    pending: VecDeque<Job>,
+    /// Pending jobs, one FIFO queue per [`Priority`] class.
+    pending: [VecDeque<Job>; 3],
     inflight: HashMap<u64, Job>,
+    /// Preempted sequences waiting to reattach: (decoder handle, job,
+    /// opaque suspended state), in suspension order.
+    suspended: Vec<(u64, Job, Box<dyn Any>)>,
     stats: ServerStats,
     batch_sizes: Vec<usize>,
     queue_waits: Vec<f64>,
+    preempted_waits: Vec<f64>,
     sim_latencies: Vec<f64>,
     ttfts: Vec<f64>,
     tpots: Vec<f64>,
@@ -231,11 +366,13 @@ impl<D: Decoder> Scheduler<D> {
         Scheduler {
             dec,
             cfg,
-            pending: VecDeque::new(),
+            pending: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
             inflight: HashMap::new(),
+            suspended: Vec::new(),
             stats: ServerStats::default(),
             batch_sizes: Vec::new(),
             queue_waits: Vec::new(),
+            preempted_waits: Vec::new(),
             sim_latencies: Vec::new(),
             ttfts: Vec::new(),
             tpots: Vec::new(),
@@ -243,23 +380,38 @@ impl<D: Decoder> Scheduler<D> {
     }
 
     pub fn enqueue(&mut self, req: Request, tx: Sender<Response>, submitted: Instant) {
-        self.pending.push_back(Job { req, tx, submitted, queue_wait: 0.0, batch_at_admit: 0 });
+        let enqueued_sim = self.dec.now();
+        self.pending[req.priority.idx()].push_back(Job {
+            req,
+            tx,
+            submitted,
+            enqueued_sim,
+            queue_wait: 0.0,
+            batch_at_admit: 0,
+            preempted_wait: 0.0,
+            suspended_at: 0.0,
+            admitted_sim: 0.0,
+        });
     }
 
     pub fn has_work(&self) -> bool {
-        !self.pending.is_empty() || self.dec.active() > 0
+        self.pending.iter().any(|q| !q.is_empty())
+            || !self.suspended.is_empty()
+            || self.dec.active() > 0
     }
 
     pub fn pending_len(&self) -> usize {
-        self.pending.len()
+        self.pending.iter().map(|q| q.len()).sum()
     }
 
     pub fn decoder(&self) -> &D {
         &self.dec
     }
 
-    /// Admit what the mode allows, then advance one token step.
+    /// Preempt if allowed, admit what the mode allows, then advance one
+    /// token step.
     pub fn tick(&mut self) -> Result<()> {
+        self.maybe_preempt()?;
         self.admit()?;
         if self.dec.active() == 0 {
             return Ok(());
@@ -272,6 +424,61 @@ impl<D: Decoder> Scheduler<D> {
         Ok(())
     }
 
+    /// Under [`PreemptPolicy::After`], suspend the lowest-priority (most
+    /// recently admitted) in-flight sequence for every pending request of
+    /// a strictly higher class that has out-waited the threshold on the
+    /// simulated clock.  Continuous mode only: a static batch cannot
+    /// re-admit the freed slot until it drains, so suspension would only
+    /// idle it.
+    fn maybe_preempt(&mut self) -> Result<()> {
+        let Some(thresh) = self.cfg.preempt.threshold() else { return Ok(()) };
+        if self.cfg.scheduler != SchedulerMode::Continuous {
+            return Ok(());
+        }
+        let max_batch = self.cfg.max_batch.max(1);
+        let now = self.dec.now();
+        for p in [Priority::High, Priority::Normal] {
+            loop {
+                if self.dec.active() < max_batch {
+                    // a slot is already free: admission handles the waiter
+                    return Ok(());
+                }
+                let waited = match self.pending[p.idx()].front() {
+                    Some(job) => now - job.enqueued_sim,
+                    None => break,
+                };
+                if waited <= thresh {
+                    break;
+                }
+                // lowest class first, then latest first admission, then
+                // highest handle — the id tiebreak keeps victim choice
+                // deterministic across runs (HashMap iteration is not)
+                let victim = self
+                    .inflight
+                    .iter()
+                    .filter(|(_, j)| j.req.priority < p)
+                    .min_by(|a, b| {
+                        a.1.req
+                            .priority
+                            .cmp(&b.1.req.priority)
+                            .then(b.1.admitted_sim.total_cmp(&a.1.admitted_sim))
+                            .then(b.0.cmp(a.0))
+                    })
+                    .map(|(id, _)| *id);
+                let Some(vid) = victim else { break };
+                let state = self.dec.suspend(vid)?;
+                let mut job = self.inflight.remove(&vid).expect("victim is in flight");
+                job.suspended_at = now;
+                self.stats.preemptions += 1;
+                self.suspended.push((vid, job, state));
+            }
+        }
+        Ok(())
+    }
+
+    /// Admission order: highest priority class first; within a class,
+    /// preempted sequences reattach (in suspension order) before new
+    /// requests admit — they have already made progress and hold KV state.
     fn admit(&mut self) -> Result<()> {
         let open = match self.cfg.scheduler {
             SchedulerMode::Continuous => true,
@@ -280,13 +487,30 @@ impl<D: Decoder> Scheduler<D> {
         if !open {
             return Ok(());
         }
-        while self.dec.active() < self.cfg.max_batch.max(1) {
-            let Some(mut job) = self.pending.pop_front() else { break };
-            let id = self.dec.admit(&job.req.prompt, job.req.max_output)?;
-            job.queue_wait = job.submitted.elapsed().as_secs_f64();
-            job.batch_at_admit = self.dec.active();
-            self.queue_waits.push(job.queue_wait);
-            self.inflight.insert(id, job);
+        let max_batch = self.cfg.max_batch.max(1);
+        for p in [Priority::High, Priority::Normal, Priority::Low] {
+            while self.dec.active() < max_batch {
+                let pos = self.suspended.iter().position(|(_, j, _)| j.req.priority == p);
+                let Some(i) = pos else { break };
+                let (seq, mut job, state) = self.suspended.remove(i);
+                let id = self.dec.resume(state)?;
+                debug_assert_eq!(id, seq, "resume must keep the sequence handle");
+                job.preempted_wait += self.dec.now() - job.suspended_at;
+                // admitted_sim keeps the *first* admission time: victim
+                // selection targets the least-progressed sequence, and a
+                // just-resumed one must not become the permanent victim
+                // (this also matches the replica's `started` semantics)
+                self.inflight.insert(id, job);
+            }
+            while self.dec.active() < max_batch {
+                let Some(mut job) = self.pending[p.idx()].pop_front() else { break };
+                let id = self.dec.admit(&job.req.prompt, job.req.max_output)?;
+                job.queue_wait = job.submitted.elapsed().as_secs_f64();
+                job.batch_at_admit = self.dec.active();
+                job.admitted_sim = self.dec.now();
+                self.queue_waits.push(job.queue_wait);
+                self.inflight.insert(id, job);
+            }
         }
         Ok(())
     }
@@ -299,10 +523,12 @@ impl<D: Decoder> Scheduler<D> {
         self.sim_latencies.push(latency);
         self.ttfts.push(ttft);
         self.tpots.push(tpot);
+        self.preempted_waits.push(job.preempted_wait);
         let _ = job.tx.send(Response {
             id: job.req.id,
             tokens: fin.tokens,
             queue_wait: job.queue_wait,
+            preempted_wait: job.preempted_wait,
             sim_latency: latency,
             sim_ttft: ttft,
             sim_tpot: tpot,
@@ -322,6 +548,7 @@ impl<D: Decoder> Scheduler<D> {
                 self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64;
         }
         self.stats.queue_wait = Percentiles::of(&self.queue_waits);
+        self.stats.preempted_wait = Percentiles::of(&self.preempted_waits);
         self.stats.sim_latency = Percentiles::of(&self.sim_latencies);
         self.stats.ttft = Percentiles::of(&self.ttfts);
         self.stats.tpot = Percentiles::of(&self.tpots);
@@ -353,11 +580,22 @@ impl Server {
         Server { tx, handle, next_id: std::sync::atomic::AtomicU64::new(0) }
     }
 
-    /// Submit a request; returns the channel the response arrives on.
+    /// Submit a Normal-priority request; returns the response channel.
     pub fn submit(&self, prompt: Vec<usize>, max_output: usize) -> Receiver<Response> {
+        self.submit_prio(prompt, max_output, Priority::Normal)
+    }
+
+    /// Submit a request with an explicit [`Priority`].
+    pub fn submit_prio(
+        &self,
+        prompt: Vec<usize>,
+        max_output: usize,
+        priority: Priority,
+    ) -> Receiver<Response> {
         let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (rtx, rrx) = channel();
-        let _ = self.tx.send(Msg::Job(Request { id, prompt, max_output }, rtx, Instant::now()));
+        let req = Request { id, prompt, max_output, priority };
+        let _ = self.tx.send(Msg::Job(req, rtx, Instant::now()));
         rrx
     }
 
@@ -490,6 +728,25 @@ mod tests {
         fn now(&self) -> f64 {
             self.clock
         }
+
+        fn suspend(&mut self, seq: u64) -> Result<Box<dyn Any>> {
+            let i = self
+                .seqs
+                .iter()
+                .position(|s| s.id == seq)
+                .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
+            Ok(Box::new(self.seqs.remove(i)))
+        }
+
+        fn resume(&mut self, state: Box<dyn Any>) -> Result<u64> {
+            let s = state
+                .downcast::<MockSeq>()
+                .map_err(|_| anyhow::anyhow!("foreign suspended state"))?;
+            let id = s.id;
+            self.seqs.push(*s);
+            self.peak_active = self.peak_active.max(self.seqs.len());
+            Ok(id)
+        }
     }
 
     fn cfg(max_batch: usize, scheduler: SchedulerMode) -> ServerConfig {
@@ -499,6 +756,7 @@ mod tests {
             max_output: 32,
             scheduler,
             prefill_chunk: 1,
+            preempt: PreemptPolicy::Off,
         }
     }
 
@@ -508,8 +766,18 @@ mod tests {
         prompt: Vec<usize>,
         max_output: usize,
     ) -> Receiver<Response> {
+        submit_prio(s, id, prompt, max_output, Priority::Normal)
+    }
+
+    fn submit_prio(
+        s: &mut Scheduler<Mock>,
+        id: u64,
+        prompt: Vec<usize>,
+        max_output: usize,
+        priority: Priority,
+    ) -> Receiver<Response> {
         let (tx, rx) = channel();
-        s.enqueue(Request { id, prompt, max_output }, tx, Instant::now());
+        s.enqueue(Request { id, prompt, max_output, priority }, tx, Instant::now());
         rx
     }
 
@@ -612,6 +880,7 @@ mod tests {
             max_output: 8,
             scheduler: SchedulerMode::Continuous,
             prefill_chunk: 1,
+            preempt: PreemptPolicy::Off,
         };
         let server = Server::start(|| Ok(Mock::new(0.5)), cfg);
         let rxs: Vec<_> = (0..6).map(|i| server.submit(vec![i, i + 1], 4)).collect();
@@ -630,6 +899,7 @@ mod tests {
             max_output: 8,
             scheduler: SchedulerMode::Continuous,
             prefill_chunk: 1,
+            preempt: PreemptPolicy::Off,
         };
         let server = Server::start(|| Ok(Mock::new(0.5)), cfg);
         let rx = server.submit(vec![7], 4);
@@ -647,6 +917,7 @@ mod tests {
                 max_output: 8,
                 scheduler: mode,
                 prefill_chunk: 1,
+                preempt: PreemptPolicy::Off,
             };
             let server = Server::start(|| Ok(Mock::new(0.01)), cfg);
             let rxs: Vec<_> = (0..30).map(|i| server.submit(vec![i], 4)).collect();
@@ -659,5 +930,136 @@ mod tests {
             assert_eq!(got, 30, "{mode:?}");
             server.shutdown().unwrap();
         }
+    }
+
+    // ------------------------------------------------- priority/preemption
+
+    #[test]
+    fn priority_parse_and_order() {
+        assert_eq!(Priority::parse("high").unwrap(), Priority::High);
+        assert_eq!(Priority::parse("normal").unwrap(), Priority::Normal);
+        assert_eq!(Priority::parse("low").unwrap(), Priority::Low);
+        assert!(Priority::parse("urgent").is_err());
+        assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
+        assert_eq!(PreemptPolicy::parse("off").unwrap(), PreemptPolicy::Off);
+        assert_eq!(PreemptPolicy::parse("0.5").unwrap(), PreemptPolicy::After(0.5));
+        assert_eq!(PreemptPolicy::parse("0").unwrap().threshold(), Some(0.0));
+        assert!(PreemptPolicy::parse("-1").is_err());
+        assert!(PreemptPolicy::parse("NaN").is_err());
+        assert!(PreemptPolicy::parse("soon").is_err());
+    }
+
+    /// With one slot and both requests queued before the first step, the
+    /// High request is admitted first even though Low enqueued earlier.
+    #[test]
+    fn high_priority_admits_before_earlier_low() {
+        let mut s = Scheduler::new(Mock::new(1.0), cfg(1, SchedulerMode::Continuous));
+        let _rl = submit_prio(&mut s, 0, vec![1, 2], 2, Priority::Low);
+        let rh = submit_prio(&mut s, 1, vec![8, 9], 2, Priority::High);
+        s.tick().unwrap();
+        assert_eq!(s.decoder().seqs.len(), 1);
+        assert_eq!(s.decoder().seqs[0].out, vec![9, 8], "High must take the only slot");
+        drain(&mut s);
+        assert_eq!(rh.recv().unwrap().tokens, vec![9, 8]);
+    }
+
+    /// Full slots of long Low decodes: under `--preempt 2`, a High
+    /// arrival's time to first token is bounded by the threshold plus a
+    /// couple of steps; the preempted Low still completes bit-identically
+    /// (its echo output is untouched) and reports its suspended time.
+    #[test]
+    fn preemption_bounds_high_wait_and_resumes_bit_identical() {
+        let mut config = cfg(2, SchedulerMode::Continuous);
+        config.preempt = PreemptPolicy::After(2.0);
+        let mut s = Scheduler::new(Mock::new(1.0), config);
+        let low_prompt: Vec<usize> = (0..50).collect();
+        let rl0 = submit_prio(&mut s, 0, low_prompt.clone(), 50, Priority::Low);
+        let rl1 = submit_prio(&mut s, 1, low_prompt.clone(), 50, Priority::Low);
+        s.tick().unwrap();
+        s.tick().unwrap();
+        let enqueued_at = s.decoder().now();
+        let rh = submit_prio(&mut s, 2, vec![5, 6, 7], 3, Priority::High);
+        // drive until the High response lands; record the sim time
+        let mut high_done_at = f64::NAN;
+        let mut guard = 0;
+        while s.has_work() {
+            s.tick().unwrap();
+            if high_done_at.is_nan() && rh.try_recv().is_ok() {
+                high_done_at = s.decoder().now();
+            }
+            guard += 1;
+            assert!(guard < 1000, "scheduler failed to drain");
+        }
+        // wait ≤ threshold + one step to detect + the 3 decode steps
+        assert!(
+            high_done_at <= enqueued_at + 2.0 + 1.0 + 3.0 + 1e-9,
+            "high finished at {high_done_at}, enqueued at {enqueued_at}"
+        );
+        // the victim resumed and completed its full echo, bit-identical
+        let (l0, l1) = (rl0.recv().unwrap(), rl1.recv().unwrap());
+        let echo: Vec<usize> = low_prompt.iter().rev().copied().collect();
+        assert_eq!(l0.tokens, echo);
+        assert_eq!(l1.tokens, echo);
+        let preempted: Vec<&Response> =
+            [&l0, &l1].into_iter().filter(|r| r.preempted_wait > 0.0).collect();
+        assert_eq!(preempted.len(), 1, "exactly one Low was suspended");
+        let stats = s.into_stats();
+        assert_eq!(stats.preemptions, 1);
+        assert!(stats.preempted_wait.p99 > 0.0);
+        // queue_wait (initial queueing, wallclock) stays split from the
+        // suspended time — the preempted request's suspension shows up in
+        // preempted_wait, not in queue_wait percentiles
+        assert!(stats.queue_wait.p50 < 1.0, "wallclock queue wait is sub-second in tests");
+    }
+
+    /// The same scenario with preemption off: the High request cannot
+    /// start until one of the 50-token Lows retires.
+    #[test]
+    fn preempt_off_high_waits_for_a_free_slot() {
+        let mut s = Scheduler::new(Mock::new(1.0), cfg(2, SchedulerMode::Continuous));
+        let low_prompt: Vec<usize> = (0..50).collect();
+        let _rl0 = submit_prio(&mut s, 0, low_prompt.clone(), 50, Priority::Low);
+        let _rl1 = submit_prio(&mut s, 1, low_prompt, 50, Priority::Low);
+        s.tick().unwrap();
+        s.tick().unwrap();
+        let rh = submit_prio(&mut s, 2, vec![5, 6, 7], 3, Priority::High);
+        let mut high_done_at = f64::NAN;
+        let mut guard = 0;
+        while s.has_work() {
+            s.tick().unwrap();
+            if high_done_at.is_nan() && rh.try_recv().is_ok() {
+                high_done_at = s.decoder().now();
+            }
+            guard += 1;
+            assert!(guard < 1000, "scheduler failed to drain");
+        }
+        assert!(
+            high_done_at >= 50.0,
+            "without preemption the High must wait out a Low: finished at {high_done_at}"
+        );
+        let stats = s.into_stats();
+        assert_eq!(stats.preemptions, 0);
+        assert_eq!(stats.preempted_wait.p99, 0.0);
+    }
+
+    /// Preemption suspends the *lowest* class first and never a peer of
+    /// the waiter's own class.
+    #[test]
+    fn preemption_never_touches_equal_or_higher_class() {
+        let mut config = cfg(1, SchedulerMode::Continuous);
+        config.preempt = PreemptPolicy::After(0.0);
+        let mut s = Scheduler::new(Mock::new(1.0), config);
+        let rn = submit_prio(&mut s, 0, (0..20).collect(), 20, Priority::Normal);
+        s.tick().unwrap();
+        // a Normal waiter must NOT preempt the in-flight Normal sequence
+        let _rn2 = submit_prio(&mut s, 1, vec![1, 2], 2, Priority::Normal);
+        for _ in 0..5 {
+            s.tick().unwrap();
+        }
+        assert_eq!(s.decoder().seqs.len(), 1);
+        assert_eq!(s.decoder().seqs[0].out.len(), 20, "the long Normal kept its slot");
+        drain(&mut s);
+        assert_eq!(rn.recv().unwrap().tokens.len(), 20);
+        assert_eq!(s.into_stats().preemptions, 0);
     }
 }

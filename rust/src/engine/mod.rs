@@ -25,9 +25,15 @@
 //! streaming) over every token the step consumes.  Sequences are
 //! admitted mid-flight ([`Engine::admit`]) and retire at EOS
 //! immediately, so the active batch size — and with it the amortization
-//! — changes every step.  This is what the coordinator's continuous
-//! scheduler and the cluster layer build on; [`Engine::decode`] and
-//! [`Engine::decode_batch`] are thin run-to-completion wrappers.
+//! — changes every step.  A scheduler may also detach a sequence at a
+//! step boundary ([`Engine::suspend`], priority preemption) and reattach
+//! it later ([`Engine::resume`]) with bit-identical continuation; while
+//! a sequence is in flight its planned hot set is registered in the
+//! cache's scheduler-owned pin ledger, so burst admissions and lookahead
+//! commits can never evict a live sequence's warm working set.  This is
+//! what the coordinator's continuous scheduler and the cluster layer
+//! build on; [`Engine::decode`] and [`Engine::decode_batch`] are thin
+//! run-to-completion wrappers.
 //!
 //! Two time axes are tracked: simulated seconds (the cost model at paper
 //! scale — all reported throughput numbers) and wallclock (sanity).
@@ -696,18 +702,68 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Admit one sequence into the session — mid-flight admission is the
-    /// continuous-batching case.  Allocates KV caches, rebuilds the union
-    /// prefetch plan of the *live* in-flight set plus the newcomer
+    /// Attach-time plan refresh, shared by [`Engine::admit`] and
+    /// [`Engine::resume`]: register `owner`'s planned hot set in the
+    /// scheduler-owned pin ledger (so bulk admissions and lookahead
+    /// commits can never evict it while the sequence is live), rebuild
+    /// the union prefetch plan of the *live* in-flight set plus `plan`
     /// (in-flight plans first, so established residents win capacity
-    /// ties; retired sequences no longer influence the plan), and tops
+    /// ties), and top the cache up additively with tracked non-blocking
+    /// transfers.
+    fn attach_plan(&self, sess: &mut DecodeSession, owner: u64, plan: &PrefetchPlan) {
+        sess.cache.pin_set(owner, &plan.per_layer);
+        if self.policy.prefetch == Prefetch::None {
+            return;
+        }
+        let caps = self.policy.effective_layer_capacities(self.cfg.n_layers, self.cfg.n_experts);
+        let mut plans: Vec<&PrefetchPlan> = sess.seqs.iter().map(|s| &s.plan).collect();
+        plans.push(plan);
+        let union = PrefetchPlan::union_capped(&plans, &caps);
+        sess.clock.advance(self.cost.predictor_time());
+        for (l, set) in union.per_layer.iter().enumerate() {
+            if set.is_empty() {
+                continue;
+            }
+            // a non-resident expert whose lookahead transfer is
+            // already on the link arrives via the tracked pipeline —
+            // re-issuing it here would double-pay the transfer.
+            // (Resident in-flight experts stay in the target: the
+            // union protects them from eviction and never re-loads
+            // residents.)
+            let want: Vec<usize> = set
+                .iter()
+                .copied()
+                .filter(|&e| {
+                    sess.cache.layers[l].contains(e) || !sess.pcie.in_flight_contains(l, e)
+                })
+                .collect();
+            // tracked issue: residency is immediate (prefill_union
+            // above), but the link entry keeps the stall/overlap
+            // split exact and lets an evicted-then-remissed expert
+            // catch its own transfer at the residual
+            for e in sess.cache.layer(l).prefill_union(&want) {
+                sess.pcie.prefetch_expert(&self.cost, &sess.clock, l, e, self.policy.quant);
+            }
+        }
+        // No sync barrier: prefetch transfers overlap compute
+        // (non-blocking, pinned memory — §3.2).  Early demand misses
+        // naturally serialize behind the in-flight prefetch traffic
+        // via the link-occupancy model in `pcie`.
+    }
+
+    /// Admit one sequence into the session — mid-flight admission is the
+    /// continuous-batching case.  Allocates KV caches, pins the planned
+    /// hot set in the cache's scheduler ledger, rebuilds the union
+    /// prefetch plan of the *live* in-flight set plus the newcomer
+    /// (retired sequences no longer influence the plan), and tops
     /// the cache up additively — a refresh never drops the planned
     /// working set, and warm residents outside it are evicted only under
     /// capacity pressure, in normal policy order.
     ///
     /// The per-request plan is predicted *once* here, from the whole
     /// prompt, and reused across every prefill chunk the sequence
-    /// consumes — chunked prefill never re-runs the predictor per chunk.
+    /// consumes — chunked prefill never re-runs the predictor per chunk
+    /// (and [`Engine::resume`] reuses it too, never re-predicting).
     pub fn admit(
         &self,
         sess: &mut DecodeSession,
@@ -718,46 +774,53 @@ impl<'a> Engine<'a> {
         let mut incoming = PrefetchPlan::empty(self.cfg.n_layers);
         if self.policy.prefetch != Prefetch::None {
             incoming = self.prefetch_plan(std::slice::from_ref(&prompt.to_vec()))?;
-            let caps =
-                self.policy.effective_layer_capacities(self.cfg.n_layers, self.cfg.n_experts);
-            let mut plans: Vec<&PrefetchPlan> = sess.seqs.iter().map(|s| &s.plan).collect();
-            plans.push(&incoming);
-            let union = PrefetchPlan::union_capped(&plans, &caps);
-            sess.clock.advance(self.cost.predictor_time());
-            for (l, set) in union.per_layer.iter().enumerate() {
-                if set.is_empty() {
-                    continue;
-                }
-                // a non-resident expert whose lookahead transfer is
-                // already on the link arrives via the tracked pipeline —
-                // re-issuing it here would double-pay the transfer.
-                // (Resident in-flight experts stay in the target: the
-                // union protects them from eviction and never re-loads
-                // residents.)
-                let want: Vec<usize> = set
-                    .iter()
-                    .copied()
-                    .filter(|&e| {
-                        sess.cache.layers[l].contains(e) || !sess.pcie.in_flight_contains(l, e)
-                    })
-                    .collect();
-                // tracked issue: residency is immediate (prefill_union
-                // above), but the link entry keeps the stall/overlap
-                // split exact and lets an evicted-then-remissed expert
-                // catch its own transfer at the residual
-                for e in sess.cache.layer(l).prefill_union(&want) {
-                    sess.pcie.prefetch_expert(&self.cost, &sess.clock, l, e, self.policy.quant);
-                }
-            }
-            // No sync barrier: prefetch transfers overlap compute
-            // (non-blocking, pinned memory — §3.2).  Early demand misses
-            // naturally serialize behind the in-flight prefetch traffic
-            // via the link-occupancy model in `pcie`.
         }
         let id = sess.next_id;
         sess.next_id += 1;
-        let seq = self.new_seq(id, prompt, max_output, incoming, sess.clock.now())?;
+        // allocate the fallible state *before* attach_plan's side effects
+        // (ledger pins, clock advance, issued transfers): a failed KV
+        // allocation must not leak pins for a sequence that never existed
+        let mut seq = self.new_seq(id, prompt, max_output, incoming, sess.clock.now())?;
+        self.attach_plan(sess, id, &seq.plan);
+        seq.sim_admitted = sess.clock.now();
+        seq.sim_first_token = seq.sim_admitted;
         sess.seqs.push(seq);
+        Ok(id)
+    }
+
+    /// Detach an in-flight sequence from its decode slot (priority
+    /// preemption).  The returned [`SeqState`] owns everything the
+    /// sequence needs to continue — token buffer, per-layer KV handles,
+    /// prompt cursor (mid-prefill progress included), memoized prefetch
+    /// plan, timeline marks — so a later [`Engine::resume`] continues
+    /// bit-identically.  The sequence's pin-ledger entries release
+    /// immediately: a suspended sequence no longer protects its warm set.
+    pub fn suspend(&self, sess: &mut DecodeSession, seq: u64) -> Result<SeqState> {
+        let i = sess
+            .seqs
+            .iter()
+            .position(|s| s.id == seq)
+            .ok_or_else(|| anyhow::anyhow!("sequence {seq} is not in flight"))?;
+        sess.cache.release(seq);
+        Ok(sess.seqs.remove(i))
+    }
+
+    /// Reattach a sequence detached by [`Engine::suspend`], keeping its
+    /// original handle.  The admit-time machinery is rebuilt from the
+    /// sequence's *memoized* plan — the union prefetch plan refreshes
+    /// over the live set, the pin ledger re-registers the hot set, and
+    /// the cache tops up additively — but the predictor itself never
+    /// re-runs.  Decoded tokens are bit-identical to an uninterrupted
+    /// run: suspension reshapes residency timing only, never numerics.
+    pub fn resume(&self, sess: &mut DecodeSession, st: SeqState) -> Result<u64> {
+        anyhow::ensure!(
+            sess.seqs.iter().all(|s| s.id != st.id),
+            "sequence {} is already in flight",
+            st.id
+        );
+        let id = st.id;
+        self.attach_plan(sess, id, &st.plan);
+        sess.seqs.push(st);
         Ok(id)
     }
 
@@ -843,7 +906,8 @@ impl<'a> Engine<'a> {
             // across chunk sizes
             sess.trace.steps.extend(sel);
         }
-        // retire sequences that hit EOS or their budget
+        // retire sequences that hit EOS or their budget; a retiring
+        // sequence's pin-ledger entries release with its slot
         let now = sess.clock.now();
         let ignore_eos = self.ignore_eos;
         let mut finished = Vec::new();
@@ -865,6 +929,9 @@ impl<'a> Engine<'a> {
             }
         }
         sess.seqs = keep;
+        for fin in &finished {
+            sess.cache.release(fin.seq);
+        }
         Ok(finished)
     }
 

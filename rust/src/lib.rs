@@ -25,8 +25,11 @@
 //!                     stall/overlap accounting split (Fig. 1a,
 //!                     `ext_overlap`).
 //! * [`cache`]       — per-layer expert caches: LRU / LFU / γ-discounted
-//!                     (paper Def. C.1), plus the reserve/commit path
-//!                     for in-flight prefetch residency.
+//!                     (paper Def. C.1), the reserve/commit path for
+//!                     in-flight prefetch residency, and the
+//!                     scheduler-owned pin ledger (`pin_set`/`release`)
+//!                     protecting live sequences' planned hot sets from
+//!                     bulk admissions and lookahead commits.
 //! * [`moe`]         — model config + weight store (base / fine-tuned).
 //! * [`runtime`]     — PJRT executable loading & dispatch (xla crate).
 //! * [`predictor`]   — activation-predictor inference + prefetch sets
@@ -35,6 +38,7 @@
 //!                     the lookahead pipeline).
 //! * [`engine`]      — the offloaded decode engine: step-granular
 //!                     `DecodeSession`s (admit/step/retire-at-EOS,
+//!                     suspend/resume with bit-identical continuation,
 //!                     chunked prefill via `prefill_chunk`, layer-ahead
 //!                     lookahead prefetch with residual waits, the
 //!                     session-persistent device-buffer memo) with
@@ -45,19 +49,23 @@
 //!                     batching (admit every token step, retire at EOS)
 //!                     or static run-to-completion batches; per-step
 //!                     prefill token budget (`--prefill-chunk`);
-//!                     TTFT/TPOT serving stats (see docs/SERVING.md).
+//!                     priority classes with per-class queues and
+//!                     `--preempt` suspend/resume preemption;
+//!                     TTFT/TPOT + preempted-wait serving stats (see
+//!                     docs/SERVING.md).
 //! * [`eval`]        — ROUGE-L, exact-match accuracy, perplexity.
 //! * [`metrics`]     — throughput/latency/transfer reporting.
 //! * [`repro`]       — one harness per paper table/figure.
 //!
 //! Cluster layer (the first tier above the single-engine stack):
 //! * [`cluster`]     — replica fleet simulator: per-replica cache/PCIe/
-//!   VRAM/clock stacks with step-granular decode slots, behind pluggable
-//!   dispatchers (round-robin, least-loaded, expert-affinity) that see
-//!   live slot occupancy.  Affinity routing sends each request to the
-//!   replica whose resident experts best match its `predict_plan`
-//!   prefetch set, compounding MELINOE's top-C routing concentration
-//!   fleet-wide (see docs/CLUSTER.md).
+//!   VRAM/clock stacks with step-granular decode slots (per-priority
+//!   queues, `--preempt` suspend/resume, per-class latency slices),
+//!   behind pluggable dispatchers (round-robin, least-loaded,
+//!   expert-affinity) that see live slot occupancy.  Affinity routing
+//!   sends each request to the replica whose resident experts best
+//!   match its `predict_plan` prefetch set, compounding MELINOE's top-C
+//!   routing concentration fleet-wide (see docs/CLUSTER.md).
 
 pub mod cache;
 pub mod clock;

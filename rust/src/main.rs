@@ -11,15 +11,16 @@
 use anyhow::{anyhow, Result};
 use melinoe::clock::GpuSpec;
 use melinoe::cluster;
-use melinoe::cluster::workload::OutputLen;
+use melinoe::cluster::workload::{OutputLen, PriorityMix};
 use melinoe::coordinator::workload::Arrival;
-use melinoe::coordinator::{Decoder, SchedulerMode, SeqFinish, Server, ServerConfig};
-use melinoe::engine::{DecodeSession, Engine};
+use melinoe::coordinator::{Decoder, PreemptPolicy, SchedulerMode, SeqFinish, Server, ServerConfig};
+use melinoe::engine::{DecodeSession, Engine, SeqState};
 use melinoe::metrics::{fmt2, Table};
 use melinoe::policies::PolicyConfig;
 use melinoe::quant::QuantMode;
 use melinoe::repro::{Ctx, EngineParts};
 use melinoe::util::cli::Args;
+use melinoe::util::rng::Rng;
 
 const USAGE: &str = "melinoe — memory-efficient MoE serving (MELINOE reproduction)
 
@@ -30,7 +31,7 @@ commands:
                      (table1 fig1a fig1b fig3 table2 table3 fig4 fig5 table4
                       table5 table11 fig6 heatmaps fig11 table12 fig12 fig13
                       table13 ext_layerwise ext_cluster ext_continuous
-                      ext_prefill ext_overlap)
+                      ext_prefill ext_overlap ext_preempt)
   serve              step-level serving loop over the eval workload
   cluster            multi-replica serving simulation: compare balancers
   decode             decode one prompt, print tokens + transfer stats
@@ -57,6 +58,15 @@ common options:
                      predicted experts non-blocking; a decode catching a
                      transfer on the link pays only the residual wait
                      (default 0 = admit-time prefetch only)
+  --preempt <p>      serve/cluster: off (default) or a threshold in
+                     simulated seconds — once a higher-priority request
+                     has waited longer for a slot, the lowest-priority
+                     in-flight sequence is suspended at a step boundary
+                     and resumed later, bit-identically (docs/SERVING.md)
+  --high-frac <f>    serve/cluster: fraction of requests submitted High
+                     priority (default 0)
+  --low-frac <f>     serve/cluster: fraction of requests submitted Low
+                     priority (default 0; the rest are Normal)
 
 cluster options:
   --replicas <n>     fleet size (default 4)
@@ -127,6 +137,19 @@ impl Decoder for OwnedEngine {
     fn transfer_stats(&self) -> melinoe::pcie::TransferStats {
         self.sess.pcie.stats.clone()
     }
+
+    fn suspend(&mut self, seq: u64) -> Result<Box<dyn std::any::Any>> {
+        let engine: Engine = self.parts.engine(&self.ctx, self.gpu.clone());
+        Ok(Box::new(engine.suspend(&mut self.sess, seq)?))
+    }
+
+    fn resume(&mut self, state: Box<dyn std::any::Any>) -> Result<u64> {
+        let st = state
+            .downcast::<SeqState>()
+            .map_err(|_| anyhow!("foreign suspended state handed to the engine"))?;
+        let engine: Engine = self.parts.engine(&self.ctx, self.gpu.clone());
+        engine.resume(&mut self.sess, *st)
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -140,6 +163,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let prefill_chunk = args.get_usize("prefill-chunk", 1)?.max(1);
     let has_lookahead = args.get("lookahead").is_some();
     let lookahead = args.get_usize("lookahead", 0)?;
+    let preempt = PreemptPolicy::parse(args.get_or("preempt", "off"))?;
+    let high_frac = args.get_f64("high-frac", 0.0)?.clamp(0.0, 1.0);
+    let low_frac = args.get_f64("low-frac", 0.0)?.clamp(0.0, 1.0 - high_frac);
+    let seed = args.get_usize("seed", 42)? as u64;
     let ds = args.get_or("dataset", "dolly").to_string();
 
     // load the prompts up-front (the server thread owns the engine)
@@ -178,11 +205,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_output,
             scheduler,
             prefill_chunk,
+            preempt,
         },
     );
 
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = prompts.into_iter().map(|p| server.submit(p, max_output)).collect();
+    let mix = PriorityMix { high: high_frac, low: low_frac };
+    let mut prio_rng = Rng::new(seed);
+    let rxs: Vec<_> = prompts
+        .into_iter()
+        .map(|p| server.submit_prio(p, max_output, mix.draw(&mut prio_rng)))
+        .collect();
     let mut total_tokens = 0usize;
     for rx in rxs {
         total_tokens += rx.recv()?.tokens.len();
@@ -210,6 +243,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     t.row(vec!["tpot p50/p95/p99 (ms)".into(), stats.tpot.cell(1e3)]);
     t.row(vec!["sim latency p50/p95/p99 (s)".into(), stats.sim_latency.cell(1.0)]);
     t.row(vec!["queue wait p50/p95/p99 (ms)".into(), stats.queue_wait.cell(1e3)]);
+    t.row(vec![
+        "preempt".into(),
+        match preempt {
+            PreemptPolicy::Off => "off".into(),
+            PreemptPolicy::After(s) => format!("after {s}s wait"),
+        },
+    ]);
+    t.row(vec!["preemptions".into(), stats.preemptions.to_string()]);
+    t.row(vec!["preempted wait p50/p95/p99 (ms)".into(), stats.preempted_wait.cell(1e3)]);
     t.row(vec!["pcie stall (s)".into(), fmt2(stats.pcie_stall_seconds)]);
     t.row(vec!["pcie overlap frac".into(), format!("{:.3}", stats.pcie_overlap_fraction)]);
     t.row(vec!["wall seconds".into(), fmt2(wall)]);
@@ -276,11 +318,16 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let scheduler = SchedulerMode::parse(args.get_or("scheduler", "continuous"))?;
     let prefill_chunk = args.get_usize("prefill-chunk", 1)?.max(1);
     let lookahead = args.get_usize("lookahead", 0)?;
+    let preempt = PreemptPolicy::parse(args.get_or("preempt", "off"))?;
+    let high_frac = args.get_f64("high-frac", 0.0)?.clamp(0.0, 1.0);
+    let low_frac = args.get_f64("low-frac", 0.0)?.clamp(0.0, 1.0 - high_frac);
 
     let mut cfg = cluster::ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu, seed)
         .with_scheduler(scheduler)
         .with_prefill_chunk(prefill_chunk)
-        .with_lookahead(lookahead);
+        .with_lookahead(lookahead)
+        .with_preempt(preempt)
+        .with_priority_mix(PriorityMix { high: high_frac, low: low_frac });
     cfg.max_batch = max_batch;
     cfg.workload.output = if long_frac > 0.0 {
         OutputLen::Bimodal { short: (tokens / 8).max(1), long: tokens, long_frac }
@@ -325,13 +372,27 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             r.replicas.iter().map(|s| s.peak_queue_depth.to_string()).collect();
         println!(
             "  {}: makespan {:.2}s, pcie stall {:.2}s, overlap frac {:.3}, \
-             peak queue depths [{}]",
+             preemptions {}, peak queue depths [{}]",
             r.balancer,
             r.makespan,
             r.stall_seconds,
             r.overlap_fraction,
+            r.preemptions,
             depths.join(", ")
         );
+        if r.priorities.len() > 1 {
+            for pc in &r.priorities {
+                println!(
+                    "    {:>6}: {} reqs, ttft p50/p95/p99 {}s, latency p50/p95/p99 {}s, \
+                     preempted wait p95 {:.3}s",
+                    pc.priority.name(),
+                    pc.requests,
+                    pc.ttft.cell(1.0),
+                    pc.latency.cell(1.0),
+                    pc.preempted_wait.p95
+                );
+            }
+        }
     }
     Ok(())
 }

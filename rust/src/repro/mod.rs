@@ -258,6 +258,7 @@ pub fn run(id: &str, args: &crate::util::cli::Args) -> Result<()> {
         "ext_continuous" => ex::ext_continuous(args),
         "ext_prefill" => ex::ext_prefill(args),
         "ext_overlap" => ex::ext_overlap(args),
+        "ext_preempt" => ex::ext_preempt(args),
         "all" => {
             for id in ex::ALL {
                 println!("\n================ {id} ================");

@@ -18,7 +18,8 @@ use melinoe::cluster::workload::{OutputLen, TaskProfile};
 use melinoe::cluster::{balancer, run_cluster, ClusterConfig, ClusterReport};
 use melinoe::coordinator::workload::Arrival;
 use melinoe::coordinator::{
-    Decoder, Request, Response, Scheduler, SchedulerMode, SeqFinish, ServerConfig,
+    Decoder, PreemptPolicy, Priority, Request, Response, Scheduler, SchedulerMode, SeqFinish,
+    ServerConfig,
 };
 
 /// Saturated single-task scenario with 10x output-length skew: offered
@@ -208,7 +209,8 @@ fn submit(
     out: usize,
 ) -> Receiver<Response> {
     let (tx, rx) = channel();
-    s.enqueue(Request { id, prompt, max_output: out }, tx, Instant::now());
+    let req = Request { id, prompt, max_output: out, priority: Priority::Normal };
+    s.enqueue(req, tx, Instant::now());
     rx
 }
 
@@ -225,6 +227,7 @@ fn huge_prompt_never_stalls_inflight_decode_at_any_chunk() {
             max_output: 16,
             scheduler: SchedulerMode::Continuous,
             prefill_chunk: chunk,
+            preempt: PreemptPolicy::Off,
         };
         let mut s = Scheduler::new(ChunkMock::new(), cfg);
         // the in-flight decode: 1-token prompt, 16 output tokens

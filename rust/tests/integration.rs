@@ -8,7 +8,7 @@
 
 use melinoe::cache::EvictionKind;
 use melinoe::clock::GpuSpec;
-use melinoe::coordinator::{Decoder, SchedulerMode, SeqFinish, Server, ServerConfig};
+use melinoe::coordinator::{Decoder, PreemptPolicy, SchedulerMode, SeqFinish, Server, ServerConfig};
 use melinoe::engine::{DecodeSession, Engine};
 use melinoe::moe::load_goldens;
 use melinoe::policies::{PolicyConfig, Prefetch};
@@ -387,6 +387,7 @@ fn serving_loop_end_to_end() {
             max_output: 8,
             scheduler: SchedulerMode::Continuous,
             prefill_chunk: 1,
+            preempt: PreemptPolicy::Off,
         },
     );
     // submit prompts loaded fresh (server thread owns its own ctx)

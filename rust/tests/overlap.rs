@@ -22,10 +22,10 @@
 use melinoe::cache::EvictionKind;
 use melinoe::clock::{CostModel, GpuSpec, PaperDims, SimClock};
 use melinoe::cluster::replica::ReplicaSpec;
-use melinoe::cluster::workload::{OutputLen, TaskProfile, WorkloadSpec};
+use melinoe::cluster::workload::{OutputLen, PriorityMix, TaskProfile, WorkloadSpec};
 use melinoe::cluster::{balancer, run_cluster, ClusterConfig, ClusterReport};
 use melinoe::coordinator::workload::Arrival;
-use melinoe::coordinator::SchedulerMode;
+use melinoe::coordinator::{PreemptPolicy, SchedulerMode};
 use melinoe::pcie::TransferEngine;
 use melinoe::policies::PolicyConfig;
 use melinoe::quant::QuantMode;
@@ -226,6 +226,7 @@ fn pressure_cfg(seed: u64) -> ClusterConfig {
         max_queue: 64,
         scheduler: SchedulerMode::Continuous,
         prefill_chunk: 1,
+        preempt: PreemptPolicy::Off,
         spec,
         workload: WorkloadSpec {
             n_requests: 24,
@@ -233,6 +234,7 @@ fn pressure_cfg(seed: u64) -> ClusterConfig {
             prompt_tokens: 4,
             output: OutputLen::Fixed(12),
             balanced_tasks: false,
+            priorities: PriorityMix::none(),
             seed,
         },
         tasks,

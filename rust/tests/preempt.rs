@@ -1,0 +1,433 @@
+//! Priority-aware preemption tests.
+//!
+//! Four tiers:
+//!
+//! 1. **Cluster-level acceptance** (artifact-free: analytic cost model +
+//!    pre-drawn routing traces): under a priority-skewed Poisson workload
+//!    at equal capacity, preemption on cuts High-priority p95 TTFT and
+//!    p95 latency versus preemption off (which already admits
+//!    priority-first), with aggregate tok/s and hit-rate no worse than
+//!    5% off baseline and identical per-request token accounting — the
+//!    suspended work is conserved, only reordered.
+//! 2. **Mock-Decoder bound** (the public `Scheduler` API driven
+//!    synchronously): a High arrival's time to first token is bounded by
+//!    the preemption threshold plus a couple of steps even when every
+//!    slot is held by a long Low decode.
+//! 3. **Pin-ledger property**: experts a `pin_set` protects survive any
+//!    storm of `prefill_union` refreshes and reserve/`commit` arrivals,
+//!    and become evictable again after `release`.
+//! 4. **Bit-identity** (artifact-gated, mirrors the prefill/lookahead
+//!    identity tests): a sequence suspended mid-decode or mid-prefill
+//!    resumes to exactly the tokens of an uninterrupted run — suspension
+//!    reshapes residency timing only, never numerics.
+
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+use melinoe::cache::{EvictionKind, LayerCache};
+use melinoe::clock::GpuSpec;
+use melinoe::cluster::workload::{OutputLen, PriorityMix, TaskProfile};
+use melinoe::cluster::{balancer, run_cluster, ClusterConfig, ClusterReport};
+use melinoe::coordinator::workload::Arrival;
+use melinoe::coordinator::{
+    Decoder, PreemptPolicy, Priority, Request, Response, Scheduler, SchedulerMode, SeqFinish,
+    ServerConfig,
+};
+use melinoe::policies::PolicyConfig;
+use melinoe::repro::Ctx;
+use melinoe::util::prop::check_no_shrink;
+use melinoe::util::rng::Rng;
+
+// ------------------------------------------------------ cluster acceptance
+
+/// Priority-skewed saturated scenario: one replica, two slots, fixed
+/// 32-token outputs, 20% High over a mostly-Low mix, offered load ≈
+/// 1.5× capacity — a High arrival almost always finds the slots full,
+/// so the off/on contrast isolates the preemption decision.
+fn preempt_cfg(seed: u64) -> (ClusterConfig, f64) {
+    let mut cfg = ClusterConfig::synthetic(1, 40, 1, GpuSpec::h100(), seed);
+    // small model so the test stays fast
+    cfg.spec.n_layers = 4;
+    cfg.spec.n_experts = 32;
+    cfg.spec.top_k = 4;
+    cfg.spec.capacity = 12; // hot set (8) fully resident, plus slack
+    cfg.tasks = TaskProfile::synthetic(1, 4, 32, 8, 0.95);
+    cfg.workload.prompt_tokens = 2;
+    cfg.workload.output = OutputLen::Fixed(32);
+    cfg.workload.priorities = PriorityMix { high: 0.2, low: 0.8 };
+    cfg.max_batch = 2;
+    let est = cfg.spec.est_service_seconds(2, 32).max(1e-12);
+    // threshold: one solo token-step of waiting, then preempt
+    let thresh = est / 34.0;
+    (cfg.with_arrival(Arrival::Poisson(1.5 / est)), thresh)
+}
+
+fn run(cfg: &ClusterConfig) -> ClusterReport {
+    let mut b = balancer::by_name("expert-affinity").unwrap();
+    run_cluster(cfg, b.as_mut()).unwrap()
+}
+
+fn class(rep: &ClusterReport, p: Priority) -> &melinoe::cluster::PriorityClass {
+    rep.priorities.iter().find(|c| c.priority == p).expect("class present")
+}
+
+#[test]
+fn preemption_cuts_high_priority_p95_ttft_and_latency() {
+    for seed in [7u64, 21, 42] {
+        let (cfg, thresh) = preempt_cfg(seed);
+        let off = run(&cfg);
+        let on = run(&cfg.clone().with_preempt(PreemptPolicy::After(thresh)));
+        // identical pre-drawn traffic on both sides
+        assert_eq!(off.n_requests, 40, "seed {seed}");
+        assert_eq!(on.n_requests, 40, "seed {seed}");
+        assert_eq!(off.output_tokens, on.output_tokens, "seed {seed}");
+        assert_eq!(off.preemptions, 0, "seed {seed}: off must never suspend");
+        assert!(on.preemptions > 0, "seed {seed}: the skewed mix must trigger preemption");
+
+        let (h_off, h_on) = (class(&off, Priority::High), class(&on, Priority::High));
+        assert!(h_off.requests > 0, "seed {seed}: mix must draw High requests");
+        // the headline: High p95 TTFT and p95 latency fall
+        assert!(
+            h_on.ttft.p95 < h_off.ttft.p95,
+            "seed {seed}: preempt-on High p95 ttft {:.4}s not under off {:.4}s",
+            h_on.ttft.p95,
+            h_off.ttft.p95
+        );
+        assert!(
+            h_on.latency.p95 < h_off.latency.p95,
+            "seed {seed}: preempt-on High p95 latency {:.4}s not under off {:.4}s",
+            h_on.latency.p95,
+            h_off.latency.p95
+        );
+        // the cost lands visibly on the preempted class, not hidden
+        let l_on = class(&on, Priority::Low);
+        assert!(l_on.preempted_wait.p99 > 0.0, "seed {seed}: suspended time must surface");
+        assert_eq!(
+            class(&off, Priority::Low).preempted_wait.p99,
+            0.0,
+            "seed {seed}: off reports zero suspended time"
+        );
+        // aggregate efficiency holds: work is conserved, only reordered
+        assert!(
+            on.tokens_per_sec >= 0.95 * off.tokens_per_sec,
+            "seed {seed}: preempt-on {:.2} tok/s under 95% of off {:.2}",
+            on.tokens_per_sec,
+            off.tokens_per_sec
+        );
+        assert!(
+            on.hit_rate >= off.hit_rate - 0.05,
+            "seed {seed}: preempt-on hit rate {:.4} fell below off {:.4}",
+            on.hit_rate,
+            off.hit_rate
+        );
+    }
+}
+
+/// Preempted-then-resumed sequences complete with exactly the same
+/// per-request token accounting as the uninterrupted run, and the same
+/// total routed cache traffic — suspension never adds, drops, or reroutes
+/// a token.
+#[test]
+fn preemption_conserves_per_request_token_accounting() {
+    let (cfg, thresh) = preempt_cfg(5);
+    let off = run(&cfg);
+    let on = run(&cfg.clone().with_preempt(PreemptPolicy::After(thresh)));
+    assert!(on.preemptions > 0);
+    let totals = |rep: &ClusterReport| {
+        let mut v: Vec<(usize, usize)> = rep
+            .replicas
+            .iter()
+            .map(|r| (r.requests, r.output_tokens))
+            .collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(totals(&off), totals(&on), "same requests and tokens per replica");
+    assert_eq!(off.output_tokens, on.output_tokens);
+}
+
+// --------------------------------------------------------- mock decoder
+
+/// Echo decoder with suspend/resume: one output token per step (the
+/// prompt reversed), a fixed simulated `dt` per step.
+struct EchoMock {
+    dt: f64,
+    clock: f64,
+    next: u64,
+    seqs: Vec<EchoSeq>,
+}
+
+struct EchoSeq {
+    id: u64,
+    out: Vec<usize>,
+    produced: usize,
+    admitted: f64,
+    first: f64,
+}
+
+impl Decoder for EchoMock {
+    fn admit(&mut self, prompt: &[usize], max_output: usize) -> anyhow::Result<u64> {
+        let id = self.next;
+        self.next += 1;
+        let out: Vec<usize> = prompt.iter().rev().copied().take(max_output.max(1)).collect();
+        self.seqs.push(EchoSeq { id, out, produced: 0, admitted: self.clock, first: 0.0 });
+        Ok(id)
+    }
+
+    fn step(&mut self) -> anyhow::Result<Vec<SeqFinish>> {
+        self.clock += self.dt;
+        let now = self.clock;
+        let mut done = Vec::new();
+        let mut keep = Vec::new();
+        for mut s in self.seqs.drain(..) {
+            if s.produced == 0 {
+                s.first = now;
+            }
+            s.produced += 1;
+            if s.produced >= s.out.len() {
+                done.push(SeqFinish {
+                    seq: s.id,
+                    tokens: s.out,
+                    sim_admitted: s.admitted,
+                    sim_first_token: s.first,
+                    sim_finished: now,
+                });
+            } else {
+                keep.push(s);
+            }
+        }
+        self.seqs = keep;
+        Ok(done)
+    }
+
+    fn active(&self) -> usize {
+        self.seqs.len()
+    }
+
+    fn now(&self) -> f64 {
+        self.clock
+    }
+
+    fn suspend(&mut self, seq: u64) -> anyhow::Result<Box<dyn std::any::Any>> {
+        let i = self
+            .seqs
+            .iter()
+            .position(|s| s.id == seq)
+            .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
+        Ok(Box::new(self.seqs.remove(i)))
+    }
+
+    fn resume(&mut self, state: Box<dyn std::any::Any>) -> anyhow::Result<u64> {
+        let s = state
+            .downcast::<EchoSeq>()
+            .map_err(|_| anyhow::anyhow!("foreign suspended state"))?;
+        let id = s.id;
+        self.seqs.push(*s);
+        Ok(id)
+    }
+}
+
+fn submit(
+    s: &mut Scheduler<EchoMock>,
+    id: u64,
+    prompt: Vec<usize>,
+    out: usize,
+    priority: Priority,
+) -> Receiver<Response> {
+    let (tx, rx) = channel();
+    s.enqueue(Request { id, prompt, max_output: out, priority }, tx, Instant::now());
+    rx
+}
+
+/// Every slot held by a 100-token Low decode: a High arrival's first
+/// token lands within `threshold + 2 steps` of its submission (one step
+/// to cross the threshold at a boundary, one for its own decode), and
+/// the suspended Low still drains to its full bit-identical echo.
+#[test]
+fn mock_high_ttft_bounded_under_full_slots() {
+    let thresh = 3.0;
+    let dt = 1.0;
+    let cfg = ServerConfig {
+        max_batch: 2,
+        batch_wait: Duration::from_millis(1),
+        max_output: 128,
+        scheduler: SchedulerMode::Continuous,
+        prefill_chunk: 1,
+        preempt: PreemptPolicy::After(thresh),
+    };
+    let dec = EchoMock { dt, clock: 0.0, next: 0, seqs: Vec::new() };
+    let mut s = Scheduler::new(dec, cfg);
+    let long: Vec<usize> = (0..100).collect();
+    let rl0 = submit(&mut s, 0, long.clone(), 100, Priority::Low);
+    let rl1 = submit(&mut s, 1, long.clone(), 100, Priority::Low);
+    s.tick().unwrap();
+    s.tick().unwrap();
+    let submitted_at = s.decoder().now();
+    let rh = submit(&mut s, 2, vec![3, 1, 4], 3, Priority::High);
+    let mut first_token_at = f64::NAN;
+    let mut guard = 0;
+    while s.has_work() {
+        s.tick().unwrap();
+        // the mock emits one token per step, so the High's first token
+        // lands exactly (out_len - 1) steps before its response
+        if first_token_at.is_nan() && rh.try_recv().is_ok() {
+            first_token_at = s.decoder().now() - 2.0 * dt;
+        }
+        guard += 1;
+        assert!(guard < 1000, "scheduler failed to drain");
+    }
+    assert!(
+        first_token_at - submitted_at <= thresh + 2.0 * dt + 1e-9,
+        "High waited {} with threshold {thresh}",
+        first_token_at - submitted_at
+    );
+    let echo: Vec<usize> = long.iter().rev().copied().collect();
+    let (l0, l1) = (rl0.recv().unwrap(), rl1.recv().unwrap());
+    assert_eq!(l0.tokens, echo, "suspended Low must continue bit-identically");
+    assert_eq!(l1.tokens, echo);
+    assert_eq!([&l0, &l1].iter().filter(|r| r.preempted_wait > 0.0).count(), 1);
+    let stats = s.into_stats();
+    assert_eq!(stats.preemptions, 1);
+    assert!(stats.preempted_wait.p99 > 0.0);
+}
+
+// ------------------------------------------------------ pin-ledger property
+
+/// Experts protected by `pin_set` survive arbitrary storms of
+/// `prefill_union` refreshes and reserve/`commit` arrivals; after
+/// `release` a capacity-sized refresh may evict them again.
+#[test]
+fn prop_pin_set_survives_prefill_union_and_commit_storms() {
+    check_no_shrink(
+        120,
+        |r| {
+            let capacity = r.range(2, 7);
+            let pinned_n = r.range(1, capacity + 1);
+            let seed = r.next_u64();
+            let ops = r.range(20, 120);
+            (capacity, pinned_n, seed, ops)
+        },
+        |&(capacity, pinned_n, seed, ops)| {
+            const E: usize = 16;
+            let mut rng = Rng::new(seed);
+            let mut c = LayerCache::new(E, capacity, EvictionKind::Lfu);
+            let pinned = rng.sample_indices(E, pinned_n);
+            c.prefill_union(&pinned);
+            c.pin_set(1, &pinned);
+            if !pinned.iter().all(|&e| c.contains(e)) {
+                return false; // cold fill of ≤ capacity experts must land
+            }
+            for _ in 0..ops {
+                match rng.below(3) {
+                    0 => {
+                        let n = rng.range(1, capacity + 2);
+                        let target = rng.sample_indices(E, n);
+                        c.prefill_union(&target);
+                    }
+                    1 => {
+                        let e = rng.below(E);
+                        c.reserve(e);
+                        c.commit(e, &[]);
+                    }
+                    _ => {
+                        c.token_tick();
+                        c.request(rng.below(E));
+                    }
+                }
+                if !pinned.iter().all(|&e| c.contains(e)) {
+                    return false; // a bulk path evicted a pinned expert
+                }
+            }
+            // after release, a full-capacity refresh of disjoint experts
+            // evicts the formerly pinned set in policy order
+            c.release(1);
+            let disjoint: Vec<usize> =
+                (0..E).filter(|e| !pinned.contains(e)).take(capacity).collect();
+            c.prefill_union(&disjoint);
+            disjoint.iter().filter(|&&e| c.contains(e)).count() == capacity
+                && pinned.iter().any(|&e| !c.contains(e))
+        },
+    );
+}
+
+// ------------------------------------------------------- engine-level
+// (artifact-gated: skips cleanly when no PJRT artifacts are built)
+
+/// First preset with complete artifacts (config + eval set), if any.
+fn any_preset() -> Option<Ctx> {
+    let dir = melinoe::artifacts_dir();
+    for preset in ["olmoe-micro", "phi-micro", "mixtral-micro"] {
+        if let Ok(ctx) = Ctx::load(&dir, preset) {
+            if ctx.eval_set("dolly").is_ok() {
+                return Some(ctx);
+            }
+        }
+    }
+    eprintln!("SKIP: no artifacts built (run `make artifacts`)");
+    None
+}
+
+/// A sequence suspended mid-decode — and one suspended mid-prefill under
+/// chunked prefill — resumes to exactly the tokens of an uninterrupted
+/// run, even with an unrelated sequence admitted and retired while it
+/// was detached (perturbing cache residency, clock and buffer memo).
+#[test]
+fn engine_suspend_resume_bit_identical_mid_decode_and_mid_prefill() {
+    let Some(ctx) = any_preset() else { return };
+    // a tight cache so suspension genuinely perturbs residency, but a
+    // residency-independent policy so routing cannot depend on it
+    let cap = (ctx.cfg.n_experts / 4).max(ctx.cfg.top_k);
+    let pol = PolicyConfig::base_offload(cap);
+    let parts = ctx.parts(&pol, "dolly").unwrap();
+    let engine = parts.engine(&ctx, GpuSpec::h100()).with_ignore_eos(true);
+    let eval = ctx.eval_set("dolly").unwrap();
+    let prompt: Vec<usize> =
+        eval.samples[0].prompt.iter().cycle().take(24).copied().collect();
+    let other: Vec<usize> = eval.samples[1 % eval.samples.len()].prompt.clone();
+    let max_output = 8;
+
+    // uninterrupted baseline (prefill chunk 8 throughout)
+    let baseline = {
+        let mut sess = engine.session();
+        sess.set_prefill_chunk(8);
+        engine.admit(&mut sess, &prompt, max_output).unwrap();
+        let mut fins = Vec::new();
+        while sess.active() > 0 {
+            fins.extend(engine.step(&mut sess).unwrap());
+        }
+        assert_eq!(fins.len(), 1);
+        fins.pop().unwrap().tokens
+    };
+
+    // suspend after `steps_before` scheduler steps, run an unrelated
+    // request to completion while detached, then resume and drain.
+    // steps_before = 1 suspends mid-prefill (24-token prompt, chunk 8);
+    // steps_before = 5 suspends mid-decode.
+    for steps_before in [1usize, 5] {
+        let mut sess = engine.session();
+        sess.set_prefill_chunk(8);
+        let id = engine.admit(&mut sess, &prompt, max_output).unwrap();
+        for _ in 0..steps_before {
+            let fins = engine.step(&mut sess).unwrap();
+            assert!(fins.is_empty(), "must suspend before retirement");
+        }
+        let detached = engine.suspend(&mut sess, id).unwrap();
+        assert_eq!(sess.active(), 0);
+        // unrelated traffic churns the cache and clock while detached
+        engine.admit(&mut sess, &other, 4).unwrap();
+        while sess.active() > 0 {
+            engine.step(&mut sess).unwrap();
+        }
+        let resumed = engine.resume(&mut sess, detached).unwrap();
+        assert_eq!(resumed, id, "resume keeps the sequence handle");
+        let mut fins = Vec::new();
+        while sess.active() > 0 {
+            fins.extend(engine.step(&mut sess).unwrap());
+        }
+        let fin = fins.into_iter().find(|f| f.seq == id).expect("sequence retires");
+        assert_eq!(
+            fin.tokens, baseline,
+            "steps_before={steps_before}: suspension changed decoded tokens"
+        );
+    }
+}

@@ -1,0 +1,234 @@
+#!/usr/bin/env python3
+"""CI invariant gate over the repro smoke JSONs.
+
+The workflow runs the artifact-free extension experiments
+(`melinoe repro ext_*`), which write `results/<id>.json`; this script
+parses them and FAILS the build if a headline invariant regresses:
+
+  ext_cluster     expert-affinity hit-rate >= round-robin, per fleet size
+  ext_continuous  continuous p95 latency <= static p95 latency
+  ext_prefill     chunked prefill p95 TTFT <= token-at-a-time p95 TTFT
+  ext_overlap     best lookahead stall < depth-0 stall, per (dims, C)
+  ext_preempt     preempt-on High p95 TTFT <= off, tok/s within 5%,
+                  hit-rate within 0.05, per capacity
+
+It also writes a $GITHUB_STEP_SUMMARY table of tok/s, hit-rate and
+overlap fraction per experiment, so every CI run leaves a perf snapshot
+in the job summary.  Stdlib only — no third-party imports.
+
+Usage: check_repro.py [results_dir]   (default: results)
+"""
+
+import json
+import os
+import sys
+
+REQUIRED = ["ext_cluster", "ext_continuous", "ext_prefill", "ext_overlap", "ext_preempt"]
+
+failures = []
+summary_rows = []  # (experiment, headline, tok/s, hit-rate, overlap frac)
+
+
+def load(results_dir, name):
+    path = os.path.join(results_dir, f"{name}.json")
+    if not os.path.exists(path):
+        failures.append(f"{name}: missing {path} (did the smoke step run?)")
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def check(name, ok, detail):
+    status = "ok  " if ok else "FAIL"
+    print(f"[{status}] {name}: {detail}")
+    if not ok:
+        failures.append(f"{name}: {detail}")
+
+
+def fmt(x):
+    return f"{x:.3f}" if isinstance(x, (int, float)) else str(x)
+
+
+def check_cluster(rows):
+    by_fleet = {}
+    for r in rows:
+        by_fleet.setdefault(r["replicas"], {})[r["balancer"]] = r
+    for replicas, bals in sorted(by_fleet.items()):
+        aff, rr = bals.get("expert-affinity"), bals.get("round-robin")
+        if not aff or not rr:
+            check("ext_cluster", False, f"{replicas} replicas: missing balancer rows")
+            continue
+        check(
+            "ext_cluster",
+            aff["hit_rate"] >= rr["hit_rate"] - 1e-9,
+            f"{replicas} replicas: affinity hit-rate {fmt(aff['hit_rate'])} "
+            f"vs round-robin {fmt(rr['hit_rate'])}",
+        )
+    top = max(by_fleet)
+    aff = by_fleet[top].get("expert-affinity")
+    if aff:
+        summary_rows.append(
+            ("ext_cluster", f"affinity @ {top} replicas", aff["tok_s"], aff["hit_rate"], None)
+        )
+
+
+def check_continuous(rows):
+    by_sched = {r["scheduler"]: r for r in rows}
+    cont, stat = by_sched.get("continuous"), by_sched.get("static")
+    if not cont or not stat:
+        check("ext_continuous", False, "missing scheduler rows")
+        return
+    check(
+        "ext_continuous",
+        cont["latency_p95_s"] <= stat["latency_p95_s"] + 1e-9,
+        f"continuous p95 latency {fmt(cont['latency_p95_s'])}s "
+        f"vs static {fmt(stat['latency_p95_s'])}s",
+    )
+    summary_rows.append(
+        ("ext_continuous", "continuous", cont["tok_s"], cont["hit_rate"], None)
+    )
+
+
+def check_prefill(rows):
+    by_chunk = {int(r["prefill_chunk"]): r for r in rows}
+    c1 = by_chunk.get(1)
+    chunked = [r for c, r in by_chunk.items() if c > 1]
+    if not c1 or not chunked:
+        check("ext_prefill", False, "missing chunk rows")
+        return
+    best = min(r["ttft_p95_s"] for r in chunked)
+    check(
+        "ext_prefill",
+        best <= c1["ttft_p95_s"] + 1e-9,
+        f"best chunked p95 TTFT {fmt(best)}s vs chunk=1 {fmt(c1['ttft_p95_s'])}s",
+    )
+    top = max(c for c in by_chunk if c > 1)
+    summary_rows.append(
+        ("ext_prefill", f"chunk {top}", by_chunk[top]["tok_s"], by_chunk[top]["hit_rate"], None)
+    )
+
+
+def check_overlap(rows):
+    groups = {}
+    for r in rows:
+        groups.setdefault((r["dims"], r["capacity"]), {})[int(r["lookahead"])] = r
+    best_row = None
+    for (dims, cap), depths in sorted(groups.items()):
+        la0 = depths.get(0)
+        ahead = [r for d, r in depths.items() if d > 0]
+        if not la0 or not ahead:
+            check("ext_overlap", False, f"{dims}/C={cap}: missing lookahead rows")
+            continue
+        best = min(r["stall_s"] for r in ahead)
+        check(
+            "ext_overlap",
+            best < la0["stall_s"],
+            f"{dims}/C={cap}: best lookahead stall {fmt(best)}s "
+            f"vs depth-0 {fmt(la0['stall_s'])}s",
+        )
+        cand = max(ahead, key=lambda r: r["overlap_fraction"])
+        if best_row is None or cand["overlap_fraction"] > best_row["overlap_fraction"]:
+            best_row = cand
+    if best_row:
+        summary_rows.append(
+            (
+                "ext_overlap",
+                f"{best_row['dims']}/C={int(best_row['capacity'])} "
+                f"lookahead {int(best_row['lookahead'])}",
+                best_row["tok_s"],
+                best_row["hit_rate"],
+                best_row["overlap_fraction"],
+            )
+        )
+
+
+def check_preempt(rows):
+    groups = {}
+    for r in rows:
+        groups.setdefault(int(r["capacity"]), {})[int(r["preempt_on"])] = r
+    shown = None
+    for cap, sides in sorted(groups.items()):
+        off, on = sides.get(0), sides.get(1)
+        if not off or not on:
+            check("ext_preempt", False, f"C={cap}: missing preempt rows")
+            continue
+        check(
+            "ext_preempt",
+            on["preemptions"] > 0,
+            f"C={cap}: preemption fired {int(on['preemptions'])} times",
+        )
+        check(
+            "ext_preempt",
+            on["high_ttft_p95_s"] <= off["high_ttft_p95_s"] + 1e-9,
+            f"C={cap}: preempt-on High p95 TTFT {fmt(on['high_ttft_p95_s'])}s "
+            f"vs off {fmt(off['high_ttft_p95_s'])}s",
+        )
+        check(
+            "ext_preempt",
+            on["tok_s"] >= 0.95 * off["tok_s"],
+            f"C={cap}: preempt-on {fmt(on['tok_s'])} tok/s "
+            f"vs off {fmt(off['tok_s'])} (>= 95% required)",
+        )
+        check(
+            "ext_preempt",
+            on["hit_rate"] >= off["hit_rate"] - 0.05,
+            f"C={cap}: preempt-on hit-rate {fmt(on['hit_rate'])} "
+            f"vs off {fmt(off['hit_rate'])} (within 0.05 required)",
+        )
+        shown = shown or on
+    if shown:
+        summary_rows.append(
+            (
+                "ext_preempt",
+                f"preempt on @ C={int(shown['capacity'])}",
+                shown["tok_s"],
+                shown["hit_rate"],
+                shown.get("overlap_fraction"),
+            )
+        )
+
+
+def write_summary():
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    lines = ["## Repro invariant gate", ""]
+    lines.append("| experiment | headline config | tok/s | hit-rate | overlap frac |")
+    lines.append("|---|---|---|---|---|")
+    for exp, headline, tok_s, hit, ovl in summary_rows:
+        ovl_s = f"{ovl:.3f}" if isinstance(ovl, (int, float)) else "—"
+        lines.append(f"| {exp} | {headline} | {tok_s:.2f} | {hit:.4f} | {ovl_s} |")
+    lines.append("")
+    lines.append(
+        f"**{'PASS' if not failures else 'FAIL'}** — "
+        f"{len(failures)} invariant regression(s)."
+    )
+    for f in failures:
+        lines.append(f"- ❌ {f}")
+    text = "\n".join(lines) + "\n"
+    print(text)
+    if path:
+        with open(path, "a") as f:
+            f.write(text)
+
+
+def main():
+    results_dir = sys.argv[1] if len(sys.argv) > 1 else "results"
+    checkers = {
+        "ext_cluster": check_cluster,
+        "ext_continuous": check_continuous,
+        "ext_prefill": check_prefill,
+        "ext_overlap": check_overlap,
+        "ext_preempt": check_preempt,
+    }
+    for name in REQUIRED:
+        rows = load(results_dir, name)
+        if rows is not None:
+            try:
+                checkers[name](rows)
+            except (KeyError, TypeError, ValueError) as e:
+                failures.append(f"{name}: malformed JSON ({e!r})")
+    write_summary()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()
