@@ -83,6 +83,14 @@ impl CacheStats {
     }
 }
 
+/// What a [`LayerCache::prefill_union`] refresh did: which experts it
+/// loaded, and which residents it evicted to make room.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PrefillOutcome {
+    pub loaded: Vec<usize>,
+    pub evicted: Vec<usize>,
+}
+
 /// Expert cache for a single MoE layer.
 #[derive(Debug, Clone)]
 pub struct LayerCache {
@@ -311,14 +319,15 @@ impl LayerCache {
     /// residents outside the target set — and outside the scheduler's
     /// pin ledger — in normal policy order: a burst admission's refresh
     /// can never evict the planned working set of any live sequence.  On
-    /// a cold cache this equals [`LayerCache::prefill`].  Returns the
-    /// experts loaded.
-    pub fn prefill_union(&mut self, experts: &[usize]) -> Vec<usize> {
+    /// a cold cache this equals [`LayerCache::prefill`].  Returns both
+    /// the experts loaded *and* the victims evicted to make room, so the
+    /// caller's trace stream can account every residency change.
+    pub fn prefill_union(&mut self, experts: &[usize]) -> PrefillOutcome {
+        let mut out = PrefillOutcome::default();
         if self.capacity == 0 {
-            return Vec::new();
+            return out;
         }
         let target: HashSet<usize> = experts.iter().copied().take(self.capacity).collect();
-        let mut loads = Vec::new();
         for &e in experts.iter().take(self.capacity) {
             if self.resident.contains(&e) {
                 continue;
@@ -333,12 +342,13 @@ impl LayerCache {
                 let Some(victim) = victim else { break };
                 self.resident.remove(&victim);
                 self.stats.evictions += 1;
+                out.evicted.push(victim);
             }
             self.resident.insert(e);
             self.stats.prefetch_loads += 1;
-            loads.push(e);
+            out.loaded.push(e);
         }
-        loads
+        out
     }
 
     /// Policy ordering for victim selection (smaller = evicted first).
@@ -551,25 +561,27 @@ mod tests {
         c.request(9);
         c.insert(9, &[]);
         // additive refresh: room for both targets, nothing dropped
-        let loads = c.prefill_union(&[1, 2]);
-        assert_eq!(loads, vec![1, 2]);
+        let out = c.prefill_union(&[1, 2]);
+        assert_eq!(out.loaded, vec![1, 2]);
+        assert!(out.evicted.is_empty());
         assert!(c.contains(7) && c.contains(9), "refresh must not drop warm residents");
         assert_eq!(c.resident_len(), 4);
         // at capacity: only non-target residents are evictable, coldest
         // (LFU) first — expert 9 (1 request) goes before expert 7 (3)
-        let loads = c.prefill_union(&[1, 2, 3]);
-        assert_eq!(loads, vec![3]);
+        let out = c.prefill_union(&[1, 2, 3]);
+        assert_eq!(out.loaded, vec![3]);
+        assert_eq!(out.evicted, vec![9], "the eviction is reported, not swallowed");
         assert!(!c.contains(9) && c.contains(7));
         assert_eq!(c.stats.evictions, 1);
         // when every resident is part of the target, loading just stops
-        let loads = c.prefill_union(&[1, 2, 3, 7, 11]);
+        let out = c.prefill_union(&[1, 2, 3, 7, 11]);
         assert!(c.contains(1) && c.contains(2) && c.contains(3) && c.contains(7));
-        assert!(loads.is_empty() && !c.contains(11));
+        assert!(out.loaded.is_empty() && out.evicted.is_empty() && !c.contains(11));
         assert_eq!(c.resident_len(), 4);
         // cold cache: equivalent to prefill
         let mut cold = LayerCache::new(16, 4, EvictionKind::Lfu);
-        let loads = cold.prefill_union(&[5, 6, 7, 8, 9]);
-        assert_eq!(loads, vec![5, 6, 7, 8]);
+        let out = cold.prefill_union(&[5, 6, 7, 8, 9]);
+        assert_eq!(out.loaded, vec![5, 6, 7, 8]);
         assert_eq!(cold.resident_len(), 4);
     }
 
@@ -657,13 +669,14 @@ mod tests {
         c.prefill_union(&[1, 2, 3]);
         c.pin_set(0, &[1, 2, 3]);
         // a burst admission refresh cannot displace the pinned residents
-        let loads = c.prefill_union(&[10, 11, 12]);
-        assert!(loads.is_empty(), "no victim available: refresh loads nothing");
+        let out = c.prefill_union(&[10, 11, 12]);
+        assert!(out.loaded.is_empty(), "no victim available: refresh loads nothing");
         assert!(c.contains(1) && c.contains(2) && c.contains(3));
         // release one slot's protection: the refresh may now evict it
         c.pin_set(0, &[1, 2]);
-        let loads = c.prefill_union(&[10]);
-        assert_eq!(loads, vec![10]);
+        let out = c.prefill_union(&[10]);
+        assert_eq!(out.loaded, vec![10]);
+        assert_eq!(out.evicted, vec![3]);
         assert!(c.contains(1) && c.contains(2) && !c.contains(3));
     }
 

@@ -45,6 +45,13 @@ pub trait Balancer {
     /// Index into `views` of the replica that receives `req`.
     /// `views` is never empty.
     fn pick(&mut self, req: &ClusterRequest, views: &[ReplicaView]) -> usize;
+    /// The policy's scalar preference for `view` — what `pick` maximizes
+    /// when the policy is score-based.  State-free policies report the
+    /// view's expert overlap so dispatch traces always carry a
+    /// comparable affinity number.
+    fn score(&self, view: &ReplicaView) -> f64 {
+        view.overlap
+    }
 }
 
 /// Rotate through replicas regardless of state.
@@ -112,15 +119,13 @@ impl Default for ExpertAffinity {
     }
 }
 
-impl ExpertAffinity {
-    pub fn score(&self, v: &ReplicaView) -> f64 {
-        v.overlap - self.load_penalty * v.load() as f64
-    }
-}
-
 impl Balancer for ExpertAffinity {
     fn name(&self) -> &'static str {
         "expert-affinity"
+    }
+
+    fn score(&self, v: &ReplicaView) -> f64 {
+        v.overlap - self.load_penalty * v.load() as f64
     }
 
     fn pick(&mut self, _req: &ClusterRequest, views: &[ReplicaView]) -> usize {

@@ -36,6 +36,7 @@ use crate::clock::GpuSpec;
 use crate::coordinator::workload::Arrival;
 use crate::coordinator::{PreemptPolicy, Priority, SchedulerMode};
 use crate::metrics::{fmt2, Percentiles, Table};
+use crate::trace::{Recorder, Trace, TraceEvent};
 
 use balancer::{Balancer, ReplicaView};
 use replica::{Completion, Replica, ReplicaSpec};
@@ -65,6 +66,11 @@ pub struct ClusterConfig {
     /// When a waiting higher-priority request may preempt an in-flight
     /// sequence on a replica (`--preempt`; continuous scheduler only).
     pub preempt: PreemptPolicy,
+    /// Record sim-time structured traces on every replica plus the
+    /// dispatcher lane (`--trace`); `run_cluster` then runs the
+    /// cross-layer conservation audits per replica and returns the
+    /// merged fleet timeline in [`ClusterReport::trace`].
+    pub trace: bool,
     pub spec: ReplicaSpec,
     pub workload: WorkloadSpec,
     pub tasks: Vec<TaskProfile>,
@@ -101,6 +107,7 @@ impl ClusterConfig {
             scheduler: SchedulerMode::Continuous,
             prefill_chunk: 1,
             preempt: PreemptPolicy::Off,
+            trace: false,
             spec,
             workload: WorkloadSpec {
                 n_requests,
@@ -138,6 +145,12 @@ impl ClusterConfig {
     /// Preemption policy applied on every replica (`--preempt`).
     pub fn with_preempt(mut self, preempt: PreemptPolicy) -> ClusterConfig {
         self.preempt = preempt;
+        self
+    }
+
+    /// Record structured traces fleet-wide (`--trace`; see `trace`).
+    pub fn with_trace(mut self, on: bool) -> ClusterConfig {
+        self.trace = on;
         self
     }
 
@@ -233,6 +246,8 @@ pub struct ClusterReport {
     pub stall_seconds: f64,
     /// Transfer time hidden behind compute, fleet total.
     pub overlapped_seconds: f64,
+    /// Total H2D link occupancy across the fleet (seconds).
+    pub h2d_seconds: f64,
     /// `overlapped / (overlapped + stalled)` — the overlap fraction.
     pub overlap_fraction: f64,
     /// Fleet-total preemptions (suspensions of an in-flight sequence).
@@ -241,6 +256,10 @@ pub struct ClusterReport {
     /// with completed requests appear).
     pub priorities: Vec<PriorityClass>,
     pub replicas: Vec<ReplicaSummary>,
+    /// Merged fleet timeline (one lane per replica + the dispatcher
+    /// lane) when [`ClusterConfig::trace`] was set; every replica's
+    /// stream has already passed the conservation audits.
+    pub trace: Option<Trace>,
 }
 
 /// Run one cluster simulation, arrival by arrival: bring the fleet's
@@ -256,8 +275,15 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
             Replica::new(i, cfg.spec.clone(), cfg.scheduler)
                 .with_prefill_chunk(cfg.prefill_chunk)
                 .with_preempt(cfg.preempt)
+                .with_trace(cfg.trace)
         })
         .collect();
+    // the dispatcher records on its own lane, one past the replica ids
+    let mut drec = if cfg.trace {
+        Recorder::on(cfg.replicas.max(1) as u32, "dispatcher")
+    } else {
+        Recorder::off()
+    };
     let max_queue = cfg.max_queue.max(1);
     for req in &requests {
         // advance every replica to the arrival instant so dispatch sees
@@ -300,10 +326,45 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
                 .map(|v| v.id)
                 .expect("back-pressure loop freed a queue");
         }
+        if drec.enabled() {
+            drec.emit(
+                req.at,
+                TraceEvent::Dispatch {
+                    request: req.id,
+                    replica: choice as u32,
+                    score: bal.score(&views[choice]),
+                },
+            );
+        }
         reps[choice].enqueue(req.clone());
     }
     for r in &mut reps {
         r.run_until(f64::INFINITY, cfg.max_batch);
+    }
+
+    // conservation audits: each replica's event stream must reconcile
+    // with its own TransferStats, pin ledger, cache occupancy, and the
+    // PCIe in-flight set before the lanes merge into the fleet timeline
+    let mut trace: Option<Trace> = None;
+    for r in &mut reps {
+        let Some(t) = r.take_trace() else { continue };
+        t.audit_lane_monotonic()?;
+        t.reconcile(&r.pcie.stats, 1e-6)?;
+        t.audit_prefetch_landed(r.pcie.in_flight_len())?;
+        t.audit_pins(r.cache.layers[0].pinned_owners())?;
+        let resident: Vec<usize> =
+            r.cache.layers.iter().map(|l| l.resident_len()).collect();
+        t.audit_occupancy(&resident)?;
+        match &mut trace {
+            Some(all) => all.merge(t),
+            None => trace = Some(t),
+        }
+    }
+    if let Some(dt) = drec.take() {
+        match &mut trace {
+            Some(all) => all.merge(dt),
+            None => trace = Some(dt),
+        }
     }
 
     // aggregate fleet metrics
@@ -317,6 +378,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
     let (mut hits, mut lookups) = (0u64, 0u64);
     let mut pcie_bytes = 0.0f64;
     let (mut stall_seconds, mut overlapped_seconds) = (0.0f64, 0.0f64);
+    let mut h2d_seconds = 0.0f64;
     let mut preemptions = 0u64;
     let replicas: Vec<ReplicaSummary> = reps
         .iter()
@@ -327,6 +389,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
             pcie_bytes += r.pcie.stats.h2d_bytes;
             stall_seconds += r.pcie.stats.stall_time;
             overlapped_seconds += r.pcie.stats.overlapped_time;
+            h2d_seconds += r.pcie.stats.h2d_seconds;
             preemptions += r.preemptions;
             ReplicaSummary {
                 id: r.id,
@@ -381,10 +444,12 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         pcie_gb: pcie_bytes / 1e9,
         stall_seconds,
         overlapped_seconds,
+        h2d_seconds,
         overlap_fraction: crate::metrics::overlap_fraction(overlapped_seconds, stall_seconds),
         preemptions,
         priorities,
         replicas,
+        trace,
     })
 }
 

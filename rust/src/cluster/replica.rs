@@ -33,6 +33,7 @@ use crate::coordinator::{PreemptPolicy, Priority, SchedulerMode};
 use crate::pcie::TransferEngine;
 use crate::predictor::PrefetchPlan;
 use crate::quant::QuantMode;
+use crate::trace::{PcieSnap, Recorder, Trace, TraceEvent};
 use crate::vram::VramBudget;
 
 use super::workload::ClusterRequest;
@@ -184,6 +185,10 @@ pub struct Replica {
     /// *planned* residency, which the affinity scorer may consult before
     /// the caches have warmed (burst arrivals dispatch ahead of decode).
     last_plan: Option<PrefetchPlan>,
+    /// Structured event recorder on this replica's lane (see `trace`);
+    /// off by default — a disabled recorder adds no allocation to the
+    /// step path.
+    rec: Recorder,
     pub completions: Vec<Completion>,
     pub busy_seconds: f64,
     pub peak_queue_depth: usize,
@@ -208,6 +213,7 @@ impl Replica {
             suspended: Vec::new(),
             preemptions: 0,
             last_plan: None,
+            rec: Recorder::off(),
             completions: Vec::new(),
             busy_seconds: 0.0,
             peak_queue_depth: 0,
@@ -225,6 +231,22 @@ impl Replica {
     pub fn with_preempt(mut self, preempt: PreemptPolicy) -> Replica {
         self.preempt = preempt;
         self
+    }
+
+    /// Enable (or disable) sim-time structured tracing: the replica's
+    /// lane in the merged fleet timeline is its id.
+    pub fn with_trace(mut self, on: bool) -> Replica {
+        self.rec = if on {
+            Recorder::on(self.id as u32, &format!("replica {}", self.id))
+        } else {
+            Recorder::off()
+        };
+        self
+    }
+
+    /// Drain the recorded event stream (`None` when tracing was off).
+    pub fn take_trace(&mut self) -> Option<Trace> {
+        self.rec.take()
     }
 
     pub fn enqueue(&mut self, req: ClusterRequest) {
@@ -375,8 +397,23 @@ impl Replica {
             // above), but the link entry keeps the stall/overlap
             // split exact and lets an evicted-then-remissed expert
             // catch its own transfer at the residual
-            for e in self.cache.layer(l).prefill_union(&want) {
+            let out = self.cache.layer(l).prefill_union(&want);
+            let t = self.clock.now();
+            for &v in &out.evicted {
+                self.rec.emit(t, TraceEvent::CacheEvict { layer: l as u32, expert: v as u32 });
+            }
+            for e in out.loaded {
+                let snap = PcieSnap::of(&self.pcie.stats);
                 self.pcie.prefetch_expert(&self.cost, &self.clock, l, e, self.spec.quant);
+                self.rec.emit(
+                    t,
+                    TraceEvent::PrefetchIssued {
+                        layer: l as u32,
+                        expert: e as u32,
+                        delta: snap.delta(&self.pcie.stats),
+                    },
+                );
+                self.rec.emit(t, TraceEvent::CacheInsert { layer: l as u32, expert: e as u32 });
             }
         }
     }
@@ -391,6 +428,8 @@ impl Replica {
         }
         self.cache.pin_set(req.id, &req.plan.per_layer);
         let now = self.clock.now();
+        self.rec.emit(now, TraceEvent::RequestAdmit { seq: req.id });
+        self.rec.emit(now, TraceEvent::PinSet { owner: req.id });
         self.in_flight.push(ActiveSeq {
             req,
             step: 0,
@@ -412,6 +451,9 @@ impl Replica {
             self.refresh_plan(&seq.req.plan);
         }
         self.cache.pin_set(seq.req.id, &seq.req.plan.per_layer);
+        let now = self.clock.now();
+        self.rec.emit(now, TraceEvent::Resume { seq: seq.req.id });
+        self.rec.emit(now, TraceEvent::PinSet { owner: seq.req.id });
         self.in_flight.push(seq);
     }
 
@@ -453,6 +495,8 @@ impl Replica {
                 let Some(i) = victim else { break };
                 let seq = self.in_flight.remove(i);
                 self.cache.release(seq.req.id);
+                self.rec.emit(now, TraceEvent::Suspend { seq: seq.req.id });
+                self.rec.emit(now, TraceEvent::PinRelease { owner: seq.req.id });
                 self.preemptions += 1;
                 self.suspended.push((seq, now));
             }
@@ -497,6 +541,19 @@ impl Replica {
         let counts: Vec<usize> =
             self.in_flight.iter().map(|seq| self.tokens_this_step(seq)).collect();
         let t: usize = counts.iter().sum();
+        if self.rec.enabled() {
+            let t0 = self.clock.now();
+            self.rec.emit(
+                t0,
+                TraceEvent::StepStart { tokens: t as u32, batch: counts.len() as u32 },
+            );
+            let rec = &mut self.rec;
+            for (seq, &c) in self.in_flight.iter().zip(&counts) {
+                if seq.step < seq.req.prompt_tokens {
+                    rec.emit(t0, TraceEvent::PrefillChunk { seq: seq.req.id, tokens: c as u32 });
+                }
+            }
+        }
         // per-layer distinct-expert working sets (the pin sets) and
         // assignment counts for the whole step, gathered once
         let mut pinned_by_layer: Vec<Vec<usize>> = vec![Vec::new(); n_layers];
@@ -524,16 +581,37 @@ impl Replica {
             // compute; commits never evict an expert this step executes
             let now = self.clock.now();
             for (tl, te) in self.pcie.drain_arrived(now) {
-                let landed = self.pcie.commit_arrival(
+                let out = self.pcie.commit_arrival(
                     &mut self.cache.layers[tl],
                     &self.cost,
                     quant,
                     te,
                     &pinned_by_layer[tl],
                 );
-                if !landed {
+                if out.resident {
+                    self.rec.emit(
+                        now,
+                        TraceEvent::TransferLanded { layer: tl as u32, expert: te as u32 },
+                    );
+                    if out.loaded {
+                        self.rec.emit(
+                            now,
+                            TraceEvent::CacheInsert { layer: tl as u32, expert: te as u32 },
+                        );
+                        if let Some(v) = out.evicted {
+                            self.rec.emit(
+                                now,
+                                TraceEvent::CacheEvict { layer: tl as u32, expert: v as u32 },
+                            );
+                        }
+                    }
+                } else {
                     // every resident pinned: the arrival stays in
                     // staging, claimable at zero residual
+                    self.rec.emit(
+                        now,
+                        TraceEvent::PinProtected { layer: tl as u32, expert: te as u32 },
+                    );
                     self.pcie.track_landed(tl, te, now);
                 }
             }
@@ -549,22 +627,87 @@ impl Replica {
                         if hit {
                             continue;
                         }
+                        let (l32, e32) = (l as u32, e as u32);
+                        let snap = PcieSnap::of(&self.pcie.stats);
                         if self.pcie.wait_for(l, e, &mut self.clock).is_some() {
                             // the claim consumed the transfer's one
                             // stall-free use; commit lands it whenever
                             // the pin set allows
-                            self.pcie.commit_arrival(
+                            let now = self.clock.now();
+                            self.rec.emit(
+                                now,
+                                TraceEvent::DemandStall {
+                                    layer: l32,
+                                    expert: e32,
+                                    residual: true,
+                                    delta: snap.delta(&self.pcie.stats),
+                                },
+                            );
+                            let out = self.pcie.commit_arrival(
                                 &mut self.cache.layers[l],
                                 &self.cost,
                                 quant,
                                 e,
                                 &pinned_by_layer[l],
                             );
+                            // the claim consumed the in-flight entry
+                            // either way, so the transfer always lands
+                            self.rec.emit(
+                                now,
+                                TraceEvent::TransferLanded { layer: l32, expert: e32 },
+                            );
+                            if out.loaded {
+                                self.rec.emit(
+                                    now,
+                                    TraceEvent::CacheInsert { layer: l32, expert: e32 },
+                                );
+                                if let Some(v) = out.evicted {
+                                    self.rec.emit(
+                                        now,
+                                        TraceEvent::CacheEvict { layer: l32, expert: v as u32 },
+                                    );
+                                }
+                            } else if !out.resident {
+                                self.rec.emit(
+                                    now,
+                                    TraceEvent::PinProtected { layer: l32, expert: e32 },
+                                );
+                            }
                             continue;
                         }
                         self.pcie.demand_h2d(&self.cost, &mut self.clock, quant);
-                        if self.cache.layers[l].insert(e, &pinned_by_layer[l]).is_some() {
+                        self.rec.emit(
+                            self.clock.now(),
+                            TraceEvent::DemandStall {
+                                layer: l32,
+                                expert: e32,
+                                residual: false,
+                                delta: snap.delta(&self.pcie.stats),
+                            },
+                        );
+                        let evicted = self.cache.layers[l].insert(e, &pinned_by_layer[l]);
+                        if evicted.is_some() {
                             self.pcie.evict_d2h(&self.cost, quant);
+                        }
+                        if self.rec.enabled() {
+                            let now = self.clock.now();
+                            if self.cache.layers[l].contains(e) {
+                                self.rec.emit(
+                                    now,
+                                    TraceEvent::CacheInsert { layer: l32, expert: e32 },
+                                );
+                                if let Some(v) = evicted {
+                                    self.rec.emit(
+                                        now,
+                                        TraceEvent::CacheEvict { layer: l32, expert: v as u32 },
+                                    );
+                                }
+                            } else {
+                                self.rec.emit(
+                                    now,
+                                    TraceEvent::PinProtected { layer: l32, expert: e32 },
+                                );
+                            }
                         }
                     }
                 }
@@ -580,7 +723,16 @@ impl Replica {
                     if !self.cache.layer(nl).reserve(e) {
                         break; // reservations saturated this layer
                     }
+                    let snap = PcieSnap::of(&self.pcie.stats);
                     self.pcie.prefetch_expert(&self.cost, &self.clock, nl, e, quant);
+                    self.rec.emit(
+                        self.clock.now(),
+                        TraceEvent::PrefetchIssued {
+                            layer: nl as u32,
+                            expert: e as u32,
+                            delta: snap.delta(&self.pcie.stats),
+                        },
+                    );
                 }
             }
             // this layer's compute: attention over every consumed token
@@ -600,6 +752,7 @@ impl Replica {
         // `counts` is indexed in the original in-flight order, which the
         // removal-by-index walk preserves.
         let now = self.clock.now();
+        self.rec.emit(now, TraceEvent::StepEnd { tokens: t as u32, batch: counts.len() as u32 });
         let mut i = 0;
         for &c in &counts {
             let seq = &mut self.in_flight[i];
@@ -612,6 +765,14 @@ impl Replica {
             if seq.step >= seq.req.routing.len() {
                 let seq = self.in_flight.remove(i);
                 self.cache.release(seq.req.id);
+                self.rec.emit(
+                    now,
+                    TraceEvent::RequestRetire {
+                        seq: seq.req.id,
+                        output_tokens: seq.req.max_output as u32,
+                    },
+                );
+                self.rec.emit(now, TraceEvent::PinRelease { owner: seq.req.id });
                 self.completions.push(Completion {
                     request_id: seq.req.id,
                     task: seq.req.task,

@@ -40,6 +40,7 @@ use anyhow::Result;
 
 use crate::metrics::Percentiles;
 use crate::pcie::TransferStats;
+use crate::trace::Trace;
 
 /// Request priority class.  Ordered: `Low < Normal < High` — the
 /// scheduler admits pending requests highest class first, and under a
@@ -189,6 +190,15 @@ pub trait Decoder {
     fn resume(&mut self, _state: Box<dyn Any>) -> Result<u64> {
         anyhow::bail!("this decoder does not support preemption")
     }
+    /// Enable or disable structured event tracing (see `trace`).  The
+    /// scheduler sets this once from [`ServerConfig::trace`]; decoders
+    /// without a recorder ignore it (the default does).
+    fn set_tracing(&mut self, _on: bool) {}
+    /// Drain the recorded event stream at shutdown, or `None` when the
+    /// decoder never traced.
+    fn take_trace(&mut self) -> Option<Trace> {
+        None
+    }
 }
 
 /// How the scheduler fills decode slots.
@@ -267,6 +277,10 @@ pub struct ServerConfig {
     /// [`SchedulerMode::Continuous`] — static batches cannot re-admit a
     /// freed slot mid-batch, so preemption is gated off there.
     pub preempt: PreemptPolicy,
+    /// Record the structured sim-time event stream (`--trace`): the
+    /// scheduler enables the decoder's recorder at construction and
+    /// surfaces the drained [`Trace`] in [`ServerStats::trace`].
+    pub trace: bool,
 }
 
 impl Default for ServerConfig {
@@ -278,6 +292,7 @@ impl Default for ServerConfig {
             scheduler: SchedulerMode::Continuous,
             prefill_chunk: 1,
             preempt: PreemptPolicy::Off,
+            trace: false,
         }
     }
 }
@@ -316,6 +331,9 @@ pub struct ServerStats {
     pub pcie_overlapped_seconds: f64,
     /// `overlapped / (overlapped + stalled)` — the overlap fraction.
     pub pcie_overlap_fraction: f64,
+    /// The decoder's drained event stream when [`ServerConfig::trace`]
+    /// was set (and the decoder supports recording), else `None`.
+    pub trace: Option<Trace>,
 }
 
 struct Job {
@@ -363,6 +381,9 @@ pub struct Scheduler<D: Decoder> {
 impl<D: Decoder> Scheduler<D> {
     pub fn new(mut dec: D, cfg: ServerConfig) -> Scheduler<D> {
         dec.set_prefill_chunk(cfg.prefill_chunk.max(1));
+        if cfg.trace {
+            dec.set_tracing(true);
+        }
         Scheduler {
             dec,
             cfg,
@@ -543,6 +564,7 @@ impl<D: Decoder> Scheduler<D> {
         self.stats.pcie_stall_seconds = ts.stall_time;
         self.stats.pcie_overlapped_seconds = ts.overlapped_time;
         self.stats.pcie_overlap_fraction = ts.overlap_fraction();
+        self.stats.trace = self.dec.take_trace();
         if !self.batch_sizes.is_empty() {
             self.stats.mean_batch_size =
                 self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64;
@@ -757,6 +779,7 @@ mod tests {
             scheduler,
             prefill_chunk: 1,
             preempt: PreemptPolicy::Off,
+            trace: false,
         }
     }
 
@@ -881,6 +904,7 @@ mod tests {
             scheduler: SchedulerMode::Continuous,
             prefill_chunk: 1,
             preempt: PreemptPolicy::Off,
+            trace: false,
         };
         let server = Server::start(|| Ok(Mock::new(0.5)), cfg);
         let rxs: Vec<_> = (0..6).map(|i| server.submit(vec![i, i + 1], 4)).collect();
@@ -900,6 +924,7 @@ mod tests {
             scheduler: SchedulerMode::Continuous,
             prefill_chunk: 1,
             preempt: PreemptPolicy::Off,
+            trace: false,
         };
         let server = Server::start(|| Ok(Mock::new(0.5)), cfg);
         let rx = server.submit(vec![7], 4);
@@ -918,6 +943,7 @@ mod tests {
                 scheduler: mode,
                 prefill_chunk: 1,
                 preempt: PreemptPolicy::Off,
+                trace: false,
             };
             let server = Server::start(|| Ok(Mock::new(0.01)), cfg);
             let rxs: Vec<_> = (0..30).map(|i| server.submit(vec![i], 4)).collect();

@@ -55,6 +55,7 @@ use crate::predictor::{
 };
 use crate::runtime::Runtime;
 use crate::tensor::add;
+use crate::trace::{PcieSnap, Recorder, Trace, TraceEvent};
 
 pub const EOS: usize = 2;
 
@@ -192,6 +193,10 @@ pub struct DecodeSession {
     /// "session-persistent device buffers").
     buf_cache: std::cell::RefCell<BufMap>,
     buf_hits: std::cell::Cell<u64>,
+    /// Structured event recorder (off by default — a disabled recorder
+    /// is a `None` and every emission is a no-op branch; see
+    /// [`DecodeSession::set_tracing`]).
+    rec: Recorder,
 }
 
 impl DecodeSession {
@@ -225,6 +230,30 @@ impl DecodeSession {
         self.buf_hits.get()
     }
 
+    /// Enable or disable sim-time structured tracing.  Tracing does not
+    /// change decode numerics: decoded tokens are bit-identical with
+    /// tracing on or off (a property test locks this in).
+    pub fn set_tracing(&mut self, on: bool) {
+        if on {
+            if !self.rec.enabled() {
+                self.rec = Recorder::on(0, "engine");
+            }
+        } else {
+            self.rec = Recorder::off();
+        }
+    }
+
+    /// Whether structured tracing is currently enabled.
+    pub fn tracing(&self) -> bool {
+        self.rec.enabled()
+    }
+
+    /// Drain the recorded events (disables tracing); `None` when tracing
+    /// was never enabled.
+    pub fn take_trace(&mut self) -> Option<Trace> {
+        self.rec.take()
+    }
+
     /// Cache/transfer snapshot (callers fill in `requests`).
     pub fn report_base(&self) -> Report {
         Report {
@@ -248,6 +277,7 @@ struct StepCtx<'s> {
     sparsity_skips: &'s mut u64,
     bufs: &'s std::cell::RefCell<BufMap>,
     buf_hits: &'s std::cell::Cell<u64>,
+    rec: &'s mut Recorder,
 }
 
 impl<'a> Engine<'a> {
@@ -452,15 +482,37 @@ impl<'a> Engine<'a> {
         ctx: &mut StepCtx,
     ) {
         let quant = self.policy.quant;
+        let l32 = layer as u32;
         for &(e, _) in selected {
             let hit = ctx.cache.layer(layer).request(e);
             if hit {
                 continue;
             }
+            let snap = PcieSnap::of(&ctx.pcie.stats);
             if ctx.pcie.wait_for(layer, e, ctx.clock).is_some() {
                 // the claim consumed the transfer's one stall-free use;
                 // commit lands it whenever the pin set allows
-                ctx.pcie.commit_arrival(ctx.cache.layer(layer), &self.cost, quant, e, pinned);
+                let t = ctx.clock.now();
+                ctx.rec.emit(
+                    t,
+                    TraceEvent::DemandStall {
+                        layer: l32,
+                        expert: e as u32,
+                        residual: true,
+                        delta: snap.delta(&ctx.pcie.stats),
+                    },
+                );
+                let out =
+                    ctx.pcie.commit_arrival(ctx.cache.layer(layer), &self.cost, quant, e, pinned);
+                ctx.rec.emit(t, TraceEvent::TransferLanded { layer: l32, expert: e as u32 });
+                if out.loaded {
+                    ctx.rec.emit(t, TraceEvent::CacheInsert { layer: l32, expert: e as u32 });
+                    if let Some(v) = out.evicted {
+                        ctx.rec.emit(t, TraceEvent::CacheEvict { layer: l32, expert: v as u32 });
+                    }
+                } else if !out.resident {
+                    ctx.rec.emit(t, TraceEvent::PinProtected { layer: l32, expert: e as u32 });
+                }
                 continue;
             }
             if self.policy.cpu_compute {
@@ -479,8 +531,29 @@ impl<'a> Engine<'a> {
                 }
             }
             ctx.pcie.demand_h2d(&self.cost, ctx.clock, quant);
-            if let Some(_evicted) = ctx.cache.layer(layer).insert(e, pinned) {
+            let t = ctx.clock.now();
+            ctx.rec.emit(
+                t,
+                TraceEvent::DemandStall {
+                    layer: l32,
+                    expert: e as u32,
+                    residual: false,
+                    delta: snap.delta(&ctx.pcie.stats),
+                },
+            );
+            let evicted = ctx.cache.layer(layer).insert(e, pinned);
+            if evicted.is_some() {
                 ctx.pcie.evict_d2h(&self.cost, quant);
+            }
+            if ctx.rec.enabled() {
+                if ctx.cache.layers[layer].contains(e) {
+                    ctx.rec.emit(t, TraceEvent::CacheInsert { layer: l32, expert: e as u32 });
+                    if let Some(v) = evicted {
+                        ctx.rec.emit(t, TraceEvent::CacheEvict { layer: l32, expert: v as u32 });
+                    }
+                } else {
+                    ctx.rec.emit(t, TraceEvent::PinProtected { layer: l32, expert: e as u32 });
+                }
             }
         }
     }
@@ -497,7 +570,28 @@ impl<'a> Engine<'a> {
         let quant = self.policy.quant;
         for (tl, te) in ctx.pcie.drain_arrived(now) {
             let pin: &[usize] = if tl == layer { pinned } else { &[] };
-            if !ctx.pcie.commit_arrival(ctx.cache.layer(tl), &self.cost, quant, te, pin) {
+            let out = ctx.pcie.commit_arrival(ctx.cache.layer(tl), &self.cost, quant, te, pin);
+            if out.resident {
+                // the in-flight entry is consumed: the transfer landed
+                ctx.rec
+                    .emit(now, TraceEvent::TransferLanded { layer: tl as u32, expert: te as u32 });
+                if out.loaded {
+                    ctx.rec.emit(
+                        now,
+                        TraceEvent::CacheInsert { layer: tl as u32, expert: te as u32 },
+                    );
+                    if let Some(v) = out.evicted {
+                        ctx.rec.emit(
+                            now,
+                            TraceEvent::CacheEvict { layer: tl as u32, expert: v as u32 },
+                        );
+                    }
+                }
+            } else {
+                // every resident pinned: the arrival re-stages (still in
+                // flight, claimable at zero residual) — not landed yet
+                ctx.rec
+                    .emit(now, TraceEvent::PinProtected { layer: tl as u32, expert: te as u32 });
                 ctx.pcie.track_landed(tl, te, now);
             }
         }
@@ -532,7 +626,16 @@ impl<'a> Engine<'a> {
                 if !ctx.cache.layer(nl).reserve(e) {
                     break; // reservations saturated this layer
                 }
+                let snap = PcieSnap::of(&ctx.pcie.stats);
                 ctx.pcie.prefetch_expert(&self.cost, ctx.clock, nl, e, self.policy.quant);
+                ctx.rec.emit(
+                    ctx.clock.now(),
+                    TraceEvent::PrefetchIssued {
+                        layer: nl as u32,
+                        expert: e as u32,
+                        delta: snap.delta(&ctx.pcie.stats),
+                    },
+                );
             }
         }
     }
@@ -699,6 +802,7 @@ impl<'a> Engine<'a> {
             prefill_chunk: 1,
             buf_cache: std::cell::RefCell::new(BufMap::new()),
             buf_hits: std::cell::Cell::new(0),
+            rec: Recorder::off(),
         }
     }
 
@@ -712,6 +816,7 @@ impl<'a> Engine<'a> {
     /// transfers.
     fn attach_plan(&self, sess: &mut DecodeSession, owner: u64, plan: &PrefetchPlan) {
         sess.cache.pin_set(owner, &plan.per_layer);
+        sess.rec.emit(sess.clock.now(), TraceEvent::PinSet { owner });
         if self.policy.prefetch == Prefetch::None {
             return;
         }
@@ -741,8 +846,23 @@ impl<'a> Engine<'a> {
             // above), but the link entry keeps the stall/overlap
             // split exact and lets an evicted-then-remissed expert
             // catch its own transfer at the residual
-            for e in sess.cache.layer(l).prefill_union(&want) {
+            let out = sess.cache.layer(l).prefill_union(&want);
+            let t = sess.clock.now();
+            for &v in &out.evicted {
+                sess.rec.emit(t, TraceEvent::CacheEvict { layer: l as u32, expert: v as u32 });
+            }
+            for e in out.loaded {
+                let snap = PcieSnap::of(&sess.pcie.stats);
                 sess.pcie.prefetch_expert(&self.cost, &sess.clock, l, e, self.policy.quant);
+                sess.rec.emit(
+                    t,
+                    TraceEvent::PrefetchIssued {
+                        layer: l as u32,
+                        expert: e as u32,
+                        delta: snap.delta(&sess.pcie.stats),
+                    },
+                );
+                sess.rec.emit(t, TraceEvent::CacheInsert { layer: l as u32, expert: e as u32 });
             }
         }
         // No sync barrier: prefetch transfers overlap compute
@@ -781,6 +901,7 @@ impl<'a> Engine<'a> {
         // (ledger pins, clock advance, issued transfers): a failed KV
         // allocation must not leak pins for a sequence that never existed
         let mut seq = self.new_seq(id, prompt, max_output, incoming, sess.clock.now())?;
+        sess.rec.emit(sess.clock.now(), TraceEvent::RequestAdmit { seq: id });
         self.attach_plan(sess, id, &seq.plan);
         seq.sim_admitted = sess.clock.now();
         seq.sim_first_token = seq.sim_admitted;
@@ -802,6 +923,9 @@ impl<'a> Engine<'a> {
             .position(|s| s.id == seq)
             .ok_or_else(|| anyhow::anyhow!("sequence {seq} is not in flight"))?;
         sess.cache.release(seq);
+        let now = sess.clock.now();
+        sess.rec.emit(now, TraceEvent::Suspend { seq });
+        sess.rec.emit(now, TraceEvent::PinRelease { owner: seq });
         Ok(sess.seqs.remove(i))
     }
 
@@ -819,6 +943,7 @@ impl<'a> Engine<'a> {
             st.id
         );
         let id = st.id;
+        sess.rec.emit(sess.clock.now(), TraceEvent::Resume { seq: id });
         self.attach_plan(sess, id, &st.plan);
         sess.seqs.push(st);
         Ok(id)
@@ -860,12 +985,20 @@ impl<'a> Engine<'a> {
             })
             .collect();
         let step_tokens: usize = counts.iter().sum();
+        sess.rec.emit(
+            sess.clock.now(),
+            TraceEvent::StepStart { tokens: step_tokens as u32, batch: batch as u32 },
+        );
         let mut single_sel: Option<Vec<Vec<Vec<usize>>>> = None;
         for i in 0..batch {
             let (tokens, want) = {
                 let st = &sess.seqs[i];
                 if st.pos < st.prompt.len() {
                     let c = counts[i];
+                    sess.rec.emit(
+                        sess.clock.now(),
+                        TraceEvent::PrefillChunk { seq: st.id, tokens: c as u32 },
+                    );
                     (st.prompt[st.pos..st.pos + c].to_vec(), st.pos + c >= st.prompt.len())
                 } else {
                     let last =
@@ -882,6 +1015,7 @@ impl<'a> Engine<'a> {
                 sparsity_skips: &mut sess.sparsity_skips,
                 bufs: &sess.buf_cache,
                 buf_hits: &sess.buf_hits,
+                rec: &mut sess.rec,
             };
             let (logits, sel) =
                 self.step_chunk(&mut sess.seqs[i], &tokens, step_tokens, &mut ctx, want)?;
@@ -909,6 +1043,8 @@ impl<'a> Engine<'a> {
         // retire sequences that hit EOS or their budget; a retiring
         // sequence's pin-ledger entries release with its slot
         let now = sess.clock.now();
+        sess.rec
+            .emit(now, TraceEvent::StepEnd { tokens: step_tokens as u32, batch: batch as u32 });
         let ignore_eos = self.ignore_eos;
         let mut finished = Vec::new();
         let mut keep = Vec::with_capacity(batch);
@@ -931,6 +1067,14 @@ impl<'a> Engine<'a> {
         sess.seqs = keep;
         for fin in &finished {
             sess.cache.release(fin.seq);
+            sess.rec.emit(
+                now,
+                TraceEvent::RequestRetire {
+                    seq: fin.seq,
+                    output_tokens: fin.tokens.len() as u32,
+                },
+            );
+            sess.rec.emit(now, TraceEvent::PinRelease { owner: fin.seq });
         }
         Ok(finished)
     }
@@ -978,6 +1122,7 @@ impl<'a> Engine<'a> {
         let (mut cpu, mut skips) = (0u64, 0u64);
         let bufs = std::cell::RefCell::new(BufMap::new());
         let buf_hits = std::cell::Cell::new(0u64);
+        let mut rec = Recorder::off();
         let mut st = self.new_seq(0, tokens, 0, PrefetchPlan::empty(self.cfg.n_layers), 0.0)?;
         let mut nlls = Vec::with_capacity(tokens.len().saturating_sub(1));
         for (i, &t) in tokens.iter().enumerate() {
@@ -991,6 +1136,7 @@ impl<'a> Engine<'a> {
                 sparsity_skips: &mut skips,
                 bufs: &bufs,
                 buf_hits: &buf_hits,
+                rec: &mut rec,
             };
             let (lg, _sel) = self.step_chunk(&mut st, &[t], 1, &mut ctx, want)?;
             cache.token_tick();

@@ -55,6 +55,13 @@
 //!                     docs/SERVING.md).
 //! * [`eval`]        — ROUGE-L, exact-match accuracy, perplexity.
 //! * [`metrics`]     — throughput/latency/transfer reporting.
+//! * [`trace`]       — sim-time structured event recorder (zero-alloc
+//!                     when off), metrics registry with per-expert churn
+//!                     and per-layer stall tables, Chrome trace-event /
+//!                     Perfetto export, and the cross-layer conservation
+//!                     audits reconciling the event stream against
+//!                     `TransferStats` and the cache's pin ledger /
+//!                     occupancy (see docs/OBSERVABILITY.md).
 //! * [`repro`]       — one harness per paper table/figure.
 //!
 //! Cluster layer (the first tier above the single-engine stack):
@@ -82,6 +89,7 @@ pub mod quant;
 pub mod repro;
 pub mod runtime;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 pub mod vram;
 

@@ -35,6 +35,8 @@ commands:
   serve              step-level serving loop over the eval workload
   cluster            multi-replica serving simulation: compare balancers
   decode             decode one prompt, print tokens + transfer stats
+  trace summary <f>  render counter / expert-churn / stall tables from a
+                     --trace JSON export (--top <n> rows, default 10)
   info               artifact inventory
 
 common options:
@@ -67,6 +69,10 @@ common options:
                      priority (default 0)
   --low-frac <f>     serve/cluster: fraction of requests submitted Low
                      priority (default 0; the rest are Normal)
+  --trace <file>     serve/cluster: record the structured sim-time event
+                     stream and write a Chrome/Perfetto trace JSON (open
+                     in ui.perfetto.dev; one lane per replica plus a
+                     dispatcher lane; docs/OBSERVABILITY.md)
 
 cluster options:
   --replicas <n>     fleet size (default 4)
@@ -150,6 +156,14 @@ impl Decoder for OwnedEngine {
         let engine: Engine = self.parts.engine(&self.ctx, self.gpu.clone());
         engine.resume(&mut self.sess, *st)
     }
+
+    fn set_tracing(&mut self, on: bool) {
+        self.sess.set_tracing(on);
+    }
+
+    fn take_trace(&mut self) -> Option<melinoe::trace::Trace> {
+        self.sess.take_trace()
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -168,6 +182,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let low_frac = args.get_f64("low-frac", 0.0)?.clamp(0.0, 1.0 - high_frac);
     let seed = args.get_usize("seed", 42)? as u64;
     let ds = args.get_or("dataset", "dolly").to_string();
+    let trace_path = args.get("trace").map(str::to_string);
 
     // load the prompts up-front (the server thread owns the engine)
     let ctx0 = Ctx::load(&melinoe::artifacts_dir(), &preset)?;
@@ -206,6 +221,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             scheduler,
             prefill_chunk,
             preempt,
+            trace: trace_path.is_some(),
         },
     );
 
@@ -256,6 +272,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     t.row(vec!["pcie overlap frac".into(), format!("{:.3}", stats.pcie_overlap_fraction)]);
     t.row(vec!["wall seconds".into(), fmt2(wall)]);
     println!("{}", t.render());
+    if let Some(path) = &trace_path {
+        match &stats.trace {
+            Some(tr) => {
+                std::fs::write(path, tr.to_chrome_json().to_string())
+                    .map_err(|e| anyhow!("write {path}: {e}"))?;
+                println!("trace: {} events -> {path}", tr.events.len());
+            }
+            None => println!("trace: engine recorded no events"),
+        }
+    }
     Ok(())
 }
 
@@ -327,7 +353,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         .with_prefill_chunk(prefill_chunk)
         .with_lookahead(lookahead)
         .with_preempt(preempt)
-        .with_priority_mix(PriorityMix { high: high_frac, low: low_frac });
+        .with_priority_mix(PriorityMix { high: high_frac, low: low_frac })
+        .with_trace(args.get("trace").is_some());
     cfg.max_batch = max_batch;
     cfg.workload.output = if long_frac > 0.0 {
         OutputLen::Bimodal { short: (tokens / 8).max(1), long: tokens, long_frac }
@@ -394,6 +421,40 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             }
         }
     }
+    if let Some(path) = args.get("trace") {
+        // `compare` reuses one path per balancer; export the last run's
+        // timeline (replica lanes + dispatcher lane)
+        match reports.iter().rev().find_map(|r| r.trace.as_ref().map(|t| (&r.balancer, t))) {
+            Some((name, tr)) => {
+                std::fs::write(path, tr.to_chrome_json().to_string())
+                    .map_err(|e| anyhow!("write {path}: {e}"))?;
+                println!("trace ({name}): {} events -> {path}", tr.events.len());
+            }
+            None => println!("trace: no events recorded"),
+        }
+    }
+    Ok(())
+}
+
+/// `trace summary <file>`: render the metrics registry embedded in a
+/// `--trace` export (counters, top-N expert churn, stalls by layer).
+fn cmd_trace(args: &Args) -> Result<()> {
+    let usage = "usage: melinoe trace summary <trace.json> [--top <n>]";
+    if args.positional.get(1).map(String::as_str) != Some("summary") {
+        return Err(anyhow!("{usage}"));
+    }
+    let path = args.positional.get(2).ok_or_else(|| anyhow!("{usage}"))?;
+    let top = args.get_usize("top", 10)?;
+    let j = melinoe::util::json::Json::from_file(path)?;
+    let reg = j
+        .opt("melinoe")
+        .ok_or_else(|| {
+            anyhow!("{path}: no \"melinoe\" registry snapshot (not a --trace export?)")
+        })?;
+    for (title, table) in melinoe::trace::summary_tables(reg, top)? {
+        println!("{title}");
+        println!("{}", table.render());
+    }
     Ok(())
 }
 
@@ -447,6 +508,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "cluster" => cmd_cluster(&args),
         "decode" => cmd_decode(&args),
+        "trace" => cmd_trace(&args),
         "info" => cmd_info(&args),
         other => Err(anyhow!("unknown command {other:?}\n{USAGE}")),
     }

@@ -249,6 +249,22 @@ mod tests {
     }
 
     #[test]
+    fn empty_report_yields_finite_zeroes() {
+        // a run that admitted nothing must report clean zeroes, not
+        // NaN from 0/0 — repro JSON embeds these verbatim and
+        // scripts/check_repro.py rejects non-finite values
+        let r = Report::default();
+        assert_eq!(r.mean_ttft(), 0.0);
+        assert_eq!(r.total_output_tokens(), 0);
+        assert_eq!(r.total_sim_seconds(), 0.0);
+        assert_eq!(r.ttft_percentiles(), Percentiles::default());
+        assert_eq!(r.latency_percentiles(), Percentiles::default());
+        for v in [r.tokens_per_sec(), r.mean_ttft(), r.latency_pct(99.0)] {
+            assert!(v.is_finite());
+        }
+    }
+
+    #[test]
     fn percentile_helpers_agree_with_latency_pct() {
         let mut r = Report::default();
         for i in 1..=200 {

@@ -86,6 +86,16 @@ pub struct InFlight {
     pub completes_at: f64,
 }
 
+/// What [`TransferEngine::commit_arrival`] did: whether the expert
+/// ended up resident, whether this call made it resident (vs already
+/// there), and which victim (if any) was evicted to make room.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommitOutcome {
+    pub resident: bool,
+    pub loaded: bool,
+    pub evicted: Option<usize>,
+}
+
 /// Transfer engine over a single FIFO link: the link frees at
 /// `link_free`, every issue serializes behind it, and tracked prefetches
 /// carry per-expert completion times so a decode catching one mid-flight
@@ -269,10 +279,12 @@ impl TransferEngine {
 
     /// Land one arrived (or just-claimed) lookahead transfer into the
     /// layer's residency: commit — never evicting `pinned` — and count
-    /// the eviction as D2H traffic.  Returns whether the expert ended up
-    /// resident.  Shared by the engine and the cluster replica so the
-    /// commit/evict invariant cannot desynchronize; drain-path callers
-    /// keep un-committable arrivals in staging via
+    /// the eviction as D2H traffic.  Returns a [`CommitOutcome`]
+    /// describing what happened (resident? newly loaded? who was
+    /// evicted?), so the caller can emit the matching trace events.
+    /// Shared by the engine and the cluster replica so the commit/evict
+    /// invariant cannot desynchronize; drain-path callers keep
+    /// un-committable arrivals in staging via
     /// [`TransferEngine::track_landed`], while a caught-in-flight claim
     /// has already consumed the transfer's one stall-free use.
     pub fn commit_arrival(
@@ -282,11 +294,14 @@ impl TransferEngine {
         mode: QuantMode,
         expert: usize,
         pinned: &[usize],
-    ) -> bool {
-        if cache.commit(expert, pinned).is_some() {
+    ) -> CommitOutcome {
+        let was_resident = cache.contains(expert);
+        let evicted = cache.commit(expert, pinned);
+        if evicted.is_some() {
             self.evict_d2h(cm, mode);
         }
-        cache.contains(expert)
+        let resident = cache.contains(expert);
+        CommitOutcome { resident, loaded: resident && !was_resident, evicted }
     }
 
     /// Block until all issued transfers have landed (start-of-decode

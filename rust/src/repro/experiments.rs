@@ -61,6 +61,17 @@ fn try_run(
     }
 }
 
+/// Metrics snapshot for a cluster report's merged trace (`Json::Null`
+/// when tracing was off) — embedded in every ext_* repro row so
+/// `scripts/check_repro.py` can reconcile the trace-derived stall /
+/// overlap / H2D totals against the fleet's `TransferStats` sums.
+fn trace_metrics(rep: &crate::cluster::ClusterReport) -> Json {
+    rep.trace
+        .as_ref()
+        .map(|t| t.metrics_json(rep.stall_seconds, rep.overlapped_seconds, rep.h2d_seconds))
+        .unwrap_or(Json::Null)
+}
+
 fn summary_json(rs: &[RunSummary]) -> Json {
     arr(rs
         .iter()
@@ -915,7 +926,8 @@ pub fn ext_cluster(args: &Args) -> Result<()> {
     ]);
     let mut jrows = Vec::new();
     for replicas in [2usize, 4, 8] {
-        let mut cfg = ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu.clone(), seed);
+        let mut cfg = ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu.clone(), seed)
+            .with_trace(true);
         if burst {
             cfg = cfg.with_arrival(Arrival::Burst);
         }
@@ -938,6 +950,7 @@ pub fn ext_cluster(args: &Args) -> Result<()> {
                 ("queue_p99_s", num(rep.queue_wait.p99)),
                 ("latency_p99_s", num(rep.latency.p99)),
                 ("makespan_s", num(rep.makespan)),
+                ("metrics", trace_metrics(&rep)),
             ]));
         }
     }
@@ -971,7 +984,8 @@ pub fn ext_continuous(args: &Args) -> Result<()> {
 
     let output = OutputLen::Bimodal { short, long, long_frac };
     let mut base = ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu, seed)
-        .with_output(output);
+        .with_output(output)
+        .with_trace(true);
     // saturate: offered load ≈ 2.5× the fleet's single-stream capacity,
     // so scheduling efficiency — not offered load — bounds throughput
     let est = base
@@ -1017,6 +1031,7 @@ pub fn ext_continuous(args: &Args) -> Result<()> {
             ("latency_p95_s", num(rep.latency.p95)),
             ("pcie_gb", num(rep.pcie_gb)),
             ("makespan_s", num(rep.makespan)),
+            ("metrics", trace_metrics(&rep)),
         ]));
     }
     print_and_save("ext_continuous", &t, arr(jrows))
@@ -1046,7 +1061,8 @@ pub fn ext_prefill(args: &Args) -> Result<()> {
     let prompt = args.get_usize("prompt", 96)?.max(1);
     let tokens = args.get_usize("tokens", 16)?.max(1);
 
-    let mut base = ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu, seed);
+    let mut base =
+        ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu, seed).with_trace(true);
     base.workload.prompt_tokens = prompt;
     base.workload.output = OutputLen::Fixed(tokens);
     // stable queueing: offered load ≈ 0.8× the fleet's compute-only
@@ -1091,6 +1107,7 @@ pub fn ext_prefill(args: &Args) -> Result<()> {
             ("hit_rate", num(rep.hit_rate)),
             ("pcie_gb", num(rep.pcie_gb)),
             ("makespan_s", num(rep.makespan)),
+            ("metrics", trace_metrics(&rep)),
         ]));
     }
     print_and_save("ext_prefill", &t, arr(jrows))
@@ -1121,6 +1138,8 @@ pub fn ext_overlap(args: &Args) -> Result<()> {
     let replicas = args.get_usize("replicas", 2)?;
     let seed = args.get_usize("seed", 42)? as u64;
     let tokens = args.get_usize("tokens", 16)?.max(1);
+    let trace_out = args.get("trace").map(str::to_string);
+    let mut last_chrome: Option<String> = None;
 
     // (name, paper dims, task hot-set size, capacities under pressure)
     let olmoe = PaperDims {
@@ -1171,6 +1190,7 @@ pub fn ext_overlap(args: &Args) -> Result<()> {
                 scheduler: SchedulerMode::Continuous,
                 prefill_chunk: 1,
                 preempt: PreemptPolicy::Off,
+                trace: true,
                 spec,
                 workload: WorkloadSpec {
                     n_requests,
@@ -1211,9 +1231,17 @@ pub fn ext_overlap(args: &Args) -> Result<()> {
                     ("overlap_fraction", num(rep.overlap_fraction)),
                     ("pcie_gb", num(rep.pcie_gb)),
                     ("makespan_s", num(rep.makespan)),
+                    ("metrics", trace_metrics(&rep)),
                 ]));
+                if let (Some(_), Some(tr)) = (&trace_out, &rep.trace) {
+                    last_chrome = Some(tr.to_chrome_json().to_string());
+                }
             }
         }
+    }
+    if let (Some(path), Some(chrome)) = (&trace_out, &last_chrome) {
+        std::fs::write(path, chrome).map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+        println!("trace (last run): -> {path}");
     }
     print_and_save("ext_overlap", &t, arr(jrows))
 }
@@ -1287,6 +1315,7 @@ pub fn ext_preempt(args: &Args) -> Result<()> {
             scheduler: SchedulerMode::Continuous,
             prefill_chunk: 1,
             preempt: PreemptPolicy::Off,
+            trace: true,
             spec,
             workload: WorkloadSpec {
                 n_requests,
@@ -1336,6 +1365,7 @@ pub fn ext_preempt(args: &Args) -> Result<()> {
                 ("preempted_wait_p95_s", num(low.map_or(0.0, |c| c.preempted_wait.p95))),
                 ("overlap_fraction", num(rep.overlap_fraction)),
                 ("makespan_s", num(rep.makespan)),
+                ("metrics", trace_metrics(&rep)),
             ]));
         }
     }

@@ -1,0 +1,1044 @@
+//! Sim-time structured tracing + metrics registry + Perfetto export.
+//!
+//! MELINOE's argument is about *where time goes* — expert churn, PCIe
+//! stall vs overlap, pin-ledger protection — so the serving stack can
+//! emit a structured event stream stamped with the simulated clock:
+//!
+//! * [`TraceEvent`] — one `Copy` variant per interesting transition
+//!   (request admit/retire, step start/end, prefill chunks, prefetch
+//!   issued / transfer landed, demand stalls with their residual flag,
+//!   cache insert/evict, pin ledger set/release, suspend/resume, and
+//!   cluster dispatch decisions with the balancer's affinity score).
+//! * [`Recorder`] — the handle the engine / replica / scheduler hold.
+//!   Off by default and **zero-allocation when off**: the disabled
+//!   recorder is an `Option<Box<Sink>>::None`, so `emit` is a branch on
+//!   a null pointer and every event payload is a stack `Copy` value.
+//! * [`MetricsRegistry`] — named counters / gauges / fixed-bucket
+//!   histograms updated *from the event stream* (a single entry point,
+//!   so counters can never disagree with the events), including the
+//!   per-expert churn table (loads / evictions / demand misses /
+//!   pin-protected evict attempts per expert id) and per-layer stalls.
+//! * [`Trace`] — the drained result: events + registry + lane names,
+//!   mergeable across replicas, exportable as Chrome trace-event JSON
+//!   ([`Trace::to_chrome_json`]) that Perfetto / `chrome://tracing`
+//!   open directly (one process per replica, one thread per subsystem:
+//!   compute, PCIe link, scheduler).
+//!
+//! The payoff beyond visibility is the **conservation audit**: every
+//! PCIe-touching event embeds the [`PcieDelta`] the call added to
+//! [`TransferStats`], so trace-derived stall/overlap/h2d totals must
+//! reconcile with the engine's own accounting ([`Trace::reconcile`]),
+//! pin events must replay to the cache's ledger ([`Trace::audit_pins`]),
+//! insert/evict events must replay to cache occupancy
+//! ([`Trace::audit_occupancy`]), and every `PrefetchIssued` must be
+//! consumed by a `TransferLanded` or still be on the link
+//! ([`Trace::audit_prefetch_landed`]) — a cross-layer self-check of the
+//! PR 4 overlap accounting and the PR 5 pin ledger.  `run_cluster` runs
+//! all four audits per replica whenever tracing is on.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::Table;
+use crate::pcie::TransferStats;
+use crate::util::json::{arr, num, obj, s, Json};
+
+// ------------------------------------------------------------------ deltas
+
+/// Snapshot of the [`TransferStats`] time accumulators, taken *before* a
+/// pcie call so the call's exact contribution can be attached to the
+/// event ([`PcieSnap::delta`]).  Plain `Copy` — snapshotting allocates
+/// nothing, so it is safe on the step hot path whether or not tracing
+/// is enabled.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PcieSnap {
+    stall: f64,
+    overlapped: f64,
+    h2d_seconds: f64,
+}
+
+impl PcieSnap {
+    pub fn of(stats: &TransferStats) -> PcieSnap {
+        PcieSnap {
+            stall: stats.stall_time,
+            overlapped: stats.overlapped_time,
+            h2d_seconds: stats.h2d_seconds,
+        }
+    }
+
+    /// What the intervening pcie call(s) added.  Components may be
+    /// *negative*: a stall window un-hides previously-overlapped queued
+    /// transfers (`unhide_window`), which moves time from `overlapped`
+    /// to `stall` — the per-event deltas still sum to the stats totals,
+    /// which is exactly what the reconciliation audit checks.
+    pub fn delta(&self, stats: &TransferStats) -> PcieDelta {
+        PcieDelta {
+            stall: stats.stall_time - self.stall,
+            overlapped: stats.overlapped_time - self.overlapped,
+            h2d_seconds: stats.h2d_seconds - self.h2d_seconds,
+        }
+    }
+}
+
+/// The contribution one pcie call made to the stall/overlap/h2d
+/// accumulators, embedded in the event that caused it.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PcieDelta {
+    pub stall: f64,
+    pub overlapped: f64,
+    pub h2d_seconds: f64,
+}
+
+// ------------------------------------------------------------------ events
+
+/// One structured, sim-clock-stamped event.  All payloads are `Copy`
+/// (no strings, no vecs): emitting an event never allocates beyond the
+/// recorder's own buffer growth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceEvent {
+    /// A sequence entered a decode slot.
+    RequestAdmit { seq: u64 },
+    /// A sequence retired (EOS or budget), freeing its slot.
+    RequestRetire { seq: u64, output_tokens: u32 },
+    /// A batch token-step began (`tokens` = step token total including
+    /// prefill chunks, `batch` = live sequences).
+    StepStart { tokens: u32, batch: u32 },
+    /// The step's compute + transfer settlement finished.
+    StepEnd { tokens: u32, batch: u32 },
+    /// A prefilling sequence consumed `tokens` prompt tokens this step.
+    PrefillChunk { seq: u64, tokens: u32 },
+    /// A tracked non-blocking transfer was issued onto the PCIe link.
+    PrefetchIssued { layer: u32, expert: u32, delta: PcieDelta },
+    /// An in-flight transfer was consumed: drained-and-committed, or
+    /// claimed by a `wait_for`.  Every `PrefetchIssued` is matched by
+    /// exactly one `TransferLanded` or a still-in-flight entry at end
+    /// of run ([`Trace::audit_prefetch_landed`]).
+    TransferLanded { layer: u32, expert: u32 },
+    /// The decode blocked on a transfer: a cold demand miss
+    /// (`residual: false`) or the residual wait on a caught in-flight
+    /// prefetch (`residual: true`).
+    DemandStall { layer: u32, expert: u32, residual: bool, delta: PcieDelta },
+    /// An expert became resident (demand insert, prefill top-up, or
+    /// in-flight commit).
+    CacheInsert { layer: u32, expert: u32 },
+    /// A resident expert was evicted to make room.
+    CacheEvict { layer: u32, expert: u32 },
+    /// An arrival could not commit (or an insert could not evict)
+    /// because every candidate victim was pinned — the pin ledger
+    /// protecting a live sequence's warm set.
+    PinProtected { layer: u32, expert: u32 },
+    /// A sequence's planned hot set was registered in the pin ledger.
+    PinSet { owner: u64 },
+    /// A sequence's ledger pins were released (retire or suspend).
+    PinRelease { owner: u64 },
+    /// A sequence was preempted out of its slot at a step boundary.
+    Suspend { seq: u64 },
+    /// A suspended sequence reattached to a slot.
+    Resume { seq: u64 },
+    /// The cluster dispatcher routed `request` to `replica`; `score` is
+    /// the balancer's affinity score for the chosen replica.
+    Dispatch { request: u64, replica: u32, score: f64 },
+}
+
+/// An event with its simulated timestamp and lane (replica id, or the
+/// dispatcher lane = fleet size).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stamped {
+    pub t: f64,
+    pub lane: u32,
+    pub ev: TraceEvent,
+}
+
+// ---------------------------------------------------------------- registry
+
+/// Fixed-bucket histogram: `counts[i]` holds samples `<= bounds[i]`,
+/// with one overflow bucket past the last bound.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    pub bounds: &'static [f64],
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub n: u64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &'static [f64]) -> Histogram {
+        Histogram { bounds, counts: vec![0; bounds.len() + 1], sum: 0.0, n: 0 }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let i = self.bounds.iter().position(|b| v <= *b).unwrap_or(self.bounds.len());
+        self.counts[i] += 1;
+        self.sum += v;
+        self.n += 1;
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        debug_assert_eq!(self.bounds, other.bounds);
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum += other.sum;
+        self.n += other.n;
+    }
+}
+
+/// Per-expert churn row: how often this expert id was loaded, evicted,
+/// demand-missed, and how often the pin ledger blocked an evict attempt
+/// that targeted (or an arrival that needed) it.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ExpertChurn {
+    pub loads: u64,
+    pub evictions: u64,
+    pub demand_misses: u64,
+    pub pin_protected: u64,
+}
+
+/// Per-layer stall row.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LayerStall {
+    pub events: u64,
+    pub seconds: f64,
+}
+
+/// Trace-side stall/overlap/h2d totals: the sum of every event's
+/// [`PcieDelta`].  Must reconcile with [`TransferStats`] within 1e-6.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PcieTotals {
+    pub stall: f64,
+    pub overlapped: f64,
+    pub h2d_seconds: f64,
+}
+
+/// Stall-duration buckets (seconds): sub-0.1ms residuals up to
+/// full-transfer stalls.
+pub const STALL_BUCKETS: &[f64] = &[1e-4, 1e-3, 1e-2, 0.1, 1.0];
+/// Live-batch-size buckets for the step histogram.
+pub const BATCH_BUCKETS: &[f64] = &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+
+/// Named counters / gauges / histograms, updated exclusively from the
+/// event stream ([`MetricsRegistry::observe`]) so the numbers can never
+/// drift from the events.  Counter keys are `&'static str`: updating a
+/// counter allocates nothing after its first insertion.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    pub counters: BTreeMap<&'static str, u64>,
+    pub gauges: BTreeMap<&'static str, f64>,
+    pub histograms: BTreeMap<&'static str, Histogram>,
+    pub churn: BTreeMap<usize, ExpertChurn>,
+    pub stall_by_layer: BTreeMap<usize, LayerStall>,
+    pub pcie: PcieTotals,
+}
+
+impl MetricsRegistry {
+    fn count(&mut self, key: &'static str) {
+        *self.counters.entry(key).or_insert(0) += 1;
+    }
+
+    fn gauge_max(&mut self, key: &'static str, v: f64) {
+        let g = self.gauges.entry(key).or_insert(f64::NEG_INFINITY);
+        if v > *g {
+            *g = v;
+        }
+    }
+
+    fn hist(&mut self, key: &'static str, bounds: &'static [f64], v: f64) {
+        self.histograms.entry(key).or_insert_with(|| Histogram::new(bounds)).record(v);
+    }
+
+    fn add_delta(&mut self, d: &PcieDelta) {
+        self.pcie.stall += d.stall;
+        self.pcie.overlapped += d.overlapped;
+        self.pcie.h2d_seconds += d.h2d_seconds;
+    }
+
+    /// The single entry point: fold one stamped event into every
+    /// counter/gauge/histogram/table it touches.
+    pub fn observe(&mut self, t: f64, ev: &TraceEvent) {
+        self.gauge_max("sim_time", t);
+        match ev {
+            TraceEvent::RequestAdmit { .. } => self.count("requests_admitted"),
+            TraceEvent::RequestRetire { .. } => self.count("requests_retired"),
+            TraceEvent::StepStart { .. } => self.count("steps"),
+            TraceEvent::StepEnd { batch, .. } => {
+                self.hist("step_batch", BATCH_BUCKETS, *batch as f64);
+            }
+            TraceEvent::PrefillChunk { .. } => self.count("prefill_chunks"),
+            TraceEvent::PrefetchIssued { expert, delta, .. } => {
+                self.count("prefetch_issued");
+                self.add_delta(delta);
+                self.churn.entry(*expert as usize).or_default();
+            }
+            TraceEvent::TransferLanded { .. } => self.count("transfer_landed"),
+            TraceEvent::DemandStall { layer, expert, residual, delta } => {
+                self.count(if *residual { "residual_claims" } else { "demand_misses" });
+                if !residual {
+                    self.churn.entry(*expert as usize).or_default().demand_misses += 1;
+                }
+                self.add_delta(delta);
+                self.hist("stall_seconds", STALL_BUCKETS, delta.stall);
+                let row = self.stall_by_layer.entry(*layer as usize).or_default();
+                row.events += 1;
+                row.seconds += delta.stall;
+            }
+            TraceEvent::CacheInsert { expert, .. } => {
+                self.count("cache_inserts");
+                self.churn.entry(*expert as usize).or_default().loads += 1;
+            }
+            TraceEvent::CacheEvict { expert, .. } => {
+                self.count("cache_evictions");
+                self.churn.entry(*expert as usize).or_default().evictions += 1;
+            }
+            TraceEvent::PinProtected { expert, .. } => {
+                self.count("pin_protected");
+                self.churn.entry(*expert as usize).or_default().pin_protected += 1;
+            }
+            TraceEvent::PinSet { .. } => self.count("pins_set"),
+            TraceEvent::PinRelease { .. } => self.count("pins_released"),
+            TraceEvent::Suspend { .. } => self.count("suspends"),
+            TraceEvent::Resume { .. } => self.count("resumes"),
+            TraceEvent::Dispatch { .. } => self.count("dispatches"),
+        }
+    }
+
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauge_max(k, *v);
+        }
+        for (k, h) in &other.histograms {
+            match self.histograms.get_mut(k) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.histograms.insert(k, h.clone());
+                }
+            }
+        }
+        for (e, c) in &other.churn {
+            let row = self.churn.entry(*e).or_default();
+            row.loads += c.loads;
+            row.evictions += c.evictions;
+            row.demand_misses += c.demand_misses;
+            row.pin_protected += c.pin_protected;
+        }
+        for (l, st) in &other.stall_by_layer {
+            let row = self.stall_by_layer.entry(*l).or_default();
+            row.events += st.events;
+            row.seconds += st.seconds;
+        }
+        self.pcie.stall += other.pcie.stall;
+        self.pcie.overlapped += other.pcie.overlapped;
+        self.pcie.h2d_seconds += other.pcie.h2d_seconds;
+    }
+
+    /// Full JSON snapshot (embedded as the `"melinoe"` key of the
+    /// Chrome export; `trace summary` reads it back).
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters.iter().map(|(k, v)| (k.to_string(), num(*v as f64))).collect(),
+        );
+        let gauges =
+            Json::Obj(self.gauges.iter().map(|(k, v)| (k.to_string(), num(*v))).collect());
+        let churn = arr(self
+            .churn
+            .iter()
+            .map(|(e, c)| {
+                obj(vec![
+                    ("expert", num(*e as f64)),
+                    ("loads", num(c.loads as f64)),
+                    ("evictions", num(c.evictions as f64)),
+                    ("demand_misses", num(c.demand_misses as f64)),
+                    ("pin_protected", num(c.pin_protected as f64)),
+                ])
+            })
+            .collect());
+        let stalls = arr(self
+            .stall_by_layer
+            .iter()
+            .map(|(l, r)| {
+                obj(vec![
+                    ("layer", num(*l as f64)),
+                    ("events", num(r.events as f64)),
+                    ("seconds", num(r.seconds)),
+                ])
+            })
+            .collect());
+        let hists = arr(self
+            .histograms
+            .iter()
+            .map(|(k, h)| {
+                obj(vec![
+                    ("name", s(*k)),
+                    ("bounds", arr(h.bounds.iter().map(|b| num(*b)).collect())),
+                    ("counts", arr(h.counts.iter().map(|c| num(*c as f64)).collect())),
+                    ("sum", num(h.sum)),
+                    ("n", num(h.n as f64)),
+                ])
+            })
+            .collect());
+        obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("pcie", obj(vec![
+                ("stall_s", num(self.pcie.stall)),
+                ("overlapped_s", num(self.pcie.overlapped)),
+                ("h2d_s", num(self.pcie.h2d_seconds)),
+            ])),
+            ("churn", churn),
+            ("stall_by_layer", stalls),
+            ("histograms", hists),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------- recorder
+
+/// The live per-lane buffer behind an enabled recorder.
+#[derive(Debug)]
+struct Sink {
+    lane: u32,
+    name: String,
+    events: Vec<Stamped>,
+    registry: MetricsRegistry,
+}
+
+impl Sink {
+    fn push(&mut self, t: f64, ev: TraceEvent) {
+        self.registry.observe(t, &ev);
+        self.events.push(Stamped { t, lane: self.lane, ev });
+    }
+}
+
+/// The handle the engine / replica / scheduler hold.  Disabled is the
+/// default and costs one null-check per emission site — no allocation,
+/// no event construction survives past the (Copy) stack value.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    inner: Option<Box<Sink>>,
+}
+
+impl Recorder {
+    /// The disabled recorder (`Default` is the same).
+    pub fn off() -> Recorder {
+        Recorder { inner: None }
+    }
+
+    /// An enabled recorder writing to `lane` (shown as the Perfetto
+    /// process name).
+    pub fn on(lane: u32, name: &str) -> Recorder {
+        Recorder {
+            inner: Some(Box::new(Sink {
+                lane,
+                name: name.to_string(),
+                events: Vec::new(),
+                registry: MetricsRegistry::default(),
+            })),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    pub fn emit(&mut self, t: f64, ev: TraceEvent) {
+        if let Some(sink) = &mut self.inner {
+            sink.push(t, ev);
+        }
+    }
+
+    /// Drain into a [`Trace`], disabling the recorder.  `None` if it
+    /// was never enabled.
+    pub fn take(&mut self) -> Option<Trace> {
+        self.inner.take().map(|sink| {
+            let mut lanes = BTreeMap::new();
+            lanes.insert(sink.lane, sink.name);
+            Trace { events: sink.events, registry: sink.registry, lanes }
+        })
+    }
+}
+
+// ------------------------------------------------------------------- trace
+
+/// A drained event stream with its registry and lane names.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<Stamped>,
+    pub registry: MetricsRegistry,
+    pub lanes: BTreeMap<u32, String>,
+}
+
+impl Trace {
+    /// Append another lane's trace; events re-sort by (lane, time) so
+    /// per-lane monotonicity survives merging interleaved lanes.
+    pub fn merge(&mut self, other: Trace) {
+        self.events.extend(other.events);
+        self.registry.merge(&other.registry);
+        self.lanes.extend(other.lanes);
+        self.events.sort_by(|a, b| a.lane.cmp(&b.lane).then(a.t.total_cmp(&b.t)));
+    }
+
+    // ----------------------------------------------------------- audits
+
+    /// Audit: within each lane, timestamps never go backwards.
+    pub fn audit_lane_monotonic(&self) -> Result<()> {
+        let mut last: BTreeMap<u32, f64> = BTreeMap::new();
+        for e in &self.events {
+            let prev = last.entry(e.lane).or_insert(f64::NEG_INFINITY);
+            if e.t < *prev {
+                bail!(
+                    "lane {} time went backwards: {} after {} ({:?})",
+                    e.lane,
+                    e.t,
+                    prev,
+                    e.ev
+                );
+            }
+            *prev = e.t;
+        }
+        Ok(())
+    }
+
+    /// Audit: trace-derived stall/overlap/h2d totals (the sum of every
+    /// event's [`PcieDelta`]) match the engine's [`TransferStats`]
+    /// within `tol`.  A missed emission site breaks this immediately.
+    pub fn reconcile(&self, stats: &TransferStats, tol: f64) -> Result<()> {
+        let p = &self.registry.pcie;
+        for (name, trace, engine) in [
+            ("stall", p.stall, stats.stall_time),
+            ("overlapped", p.overlapped, stats.overlapped_time),
+            ("h2d_seconds", p.h2d_seconds, stats.h2d_seconds),
+        ] {
+            if (trace - engine).abs() > tol {
+                bail!(
+                    "trace/stats {name} mismatch: trace {trace} vs TransferStats {engine} \
+                     (tol {tol})"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Audit: every `PrefetchIssued` was consumed by exactly one
+    /// `TransferLanded`, or is still on the link at end of run.
+    pub fn audit_prefetch_landed(&self, in_flight: usize) -> Result<()> {
+        let issued = self.registry.counters.get("prefetch_issued").copied().unwrap_or(0);
+        let landed = self.registry.counters.get("transfer_landed").copied().unwrap_or(0);
+        if issued != landed + in_flight as u64 {
+            bail!(
+                "prefetch/landed mismatch: {issued} issued != {landed} landed + \
+                 {in_flight} in flight"
+            );
+        }
+        Ok(())
+    }
+
+    /// Audit: replaying `PinSet`/`PinRelease` yields the cache's final
+    /// ledger population (`pinned_owners`).
+    pub fn audit_pins(&self, pinned_owners: usize) -> Result<()> {
+        let mut owners = std::collections::HashSet::new();
+        for e in &self.events {
+            match e.ev {
+                TraceEvent::PinSet { owner } => {
+                    owners.insert(owner);
+                }
+                TraceEvent::PinRelease { owner } => {
+                    owners.remove(&owner);
+                }
+                _ => {}
+            }
+        }
+        if owners.len() != pinned_owners {
+            bail!(
+                "pin-ledger mismatch: trace replay holds {} owners, cache ledger holds {}",
+                owners.len(),
+                pinned_owners
+            );
+        }
+        Ok(())
+    }
+
+    /// Audit: per layer, `#CacheInsert − #CacheEvict` equals the
+    /// cache's final occupancy.
+    pub fn audit_occupancy(&self, resident_by_layer: &[usize]) -> Result<()> {
+        let mut net: BTreeMap<u32, i64> = BTreeMap::new();
+        for e in &self.events {
+            match e.ev {
+                TraceEvent::CacheInsert { layer, .. } => *net.entry(layer).or_insert(0) += 1,
+                TraceEvent::CacheEvict { layer, .. } => *net.entry(layer).or_insert(0) -= 1,
+                _ => {}
+            }
+        }
+        for (layer, resident) in resident_by_layer.iter().enumerate() {
+            let traced = net.get(&(layer as u32)).copied().unwrap_or(0);
+            if traced != *resident as i64 {
+                bail!(
+                    "occupancy mismatch at layer {layer}: trace nets {traced} residents, \
+                     cache holds {resident}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    // ----------------------------------------------------------- exports
+
+    /// The metrics snapshot embedded in `ext_*` repro JSON rows: the
+    /// registry counters plus both sides of the reconciliation (trace
+    /// totals and the engine's `TransferStats` totals), so
+    /// `scripts/check_repro.py` can gate on the 1e-6 agreement.
+    pub fn metrics_json(&self, stall_s: f64, overlapped_s: f64, h2d_s: f64) -> Json {
+        let counters = Json::Obj(
+            self.registry
+                .counters
+                .iter()
+                .map(|(k, v)| (k.to_string(), num(*v as f64)))
+                .collect(),
+        );
+        obj(vec![
+            ("events", num(self.events.len() as f64)),
+            ("counters", counters),
+            ("trace_stall_s", num(self.registry.pcie.stall)),
+            ("trace_overlapped_s", num(self.registry.pcie.overlapped)),
+            ("trace_h2d_s", num(self.registry.pcie.h2d_seconds)),
+            ("stats_stall_s", num(stall_s)),
+            ("stats_overlapped_s", num(overlapped_s)),
+            ("stats_h2d_s", num(h2d_s)),
+        ])
+    }
+
+    /// Chrome trace-event / Perfetto JSON.  Open at <https://ui.perfetto.dev>
+    /// or `chrome://tracing`.  Layout: one *process* (pid) per lane
+    /// (replica or dispatcher), and per lane one *thread* each for
+    /// compute (step spans + stall slices), the PCIe link (transfer
+    /// spans + landing instants), and the scheduler (cache/pin/request
+    /// instants).  Timestamps are simulated microseconds.  The full
+    /// [`MetricsRegistry`] snapshot rides along under the `"melinoe"`
+    /// key.
+    pub fn to_chrome_json(&self) -> Json {
+        const TID_COMPUTE: f64 = 0.0;
+        const TID_LINK: f64 = 1.0;
+        const TID_SCHED: f64 = 2.0;
+        let us = |t: f64| num(t * 1e6);
+        let mut evs: Vec<Json> = Vec::new();
+        // metadata: lane names + fixed thread names
+        for (lane, name) in &self.lanes {
+            let pid = num(*lane as f64);
+            evs.push(obj(vec![
+                ("ph", s("M")),
+                ("name", s("process_name")),
+                ("pid", pid.clone()),
+                ("args", obj(vec![("name", s(name.clone()))])),
+            ]));
+            for (tid, tname) in
+                [(TID_COMPUTE, "compute"), (TID_LINK, "pcie link"), (TID_SCHED, "scheduler")]
+            {
+                evs.push(obj(vec![
+                    ("ph", s("M")),
+                    ("name", s("thread_name")),
+                    ("pid", pid.clone()),
+                    ("tid", num(tid)),
+                    ("args", obj(vec![("name", s(tname))])),
+                ]));
+            }
+        }
+        let instant = |t: f64, lane: u32, tid: f64, name: &str, args: Vec<(&str, Json)>| {
+            obj(vec![
+                ("ph", s("i")),
+                ("name", s(name)),
+                ("pid", num(lane as f64)),
+                ("tid", num(tid)),
+                ("ts", us(t)),
+                ("s", s("t")),
+                ("args", obj(args)),
+            ])
+        };
+        for e in &self.events {
+            let pid = num(e.lane as f64);
+            match e.ev {
+                TraceEvent::StepStart { tokens, batch } => evs.push(obj(vec![
+                    ("ph", s("B")),
+                    ("name", s("step")),
+                    ("pid", pid),
+                    ("tid", num(TID_COMPUTE)),
+                    ("ts", us(e.t)),
+                    ("args", obj(vec![
+                        ("tokens", num(tokens as f64)),
+                        ("batch", num(batch as f64)),
+                    ])),
+                ])),
+                TraceEvent::StepEnd { .. } => evs.push(obj(vec![
+                    ("ph", s("E")),
+                    ("name", s("step")),
+                    ("pid", pid),
+                    ("tid", num(TID_COMPUTE)),
+                    ("ts", us(e.t)),
+                ])),
+                TraceEvent::DemandStall { layer, expert, residual, delta } => {
+                    // the stall occupied [t - stall, t] on the compute lane
+                    let dur = delta.stall.max(0.0);
+                    evs.push(obj(vec![
+                        ("ph", s("X")),
+                        ("name", s(if residual { "residual wait" } else { "demand stall" })),
+                        ("pid", pid),
+                        ("tid", num(TID_COMPUTE)),
+                        ("ts", us(e.t - dur)),
+                        ("dur", us(dur)),
+                        ("args", obj(vec![
+                            ("layer", num(layer as f64)),
+                            ("expert", num(expert as f64)),
+                            ("stall_s", num(delta.stall)),
+                        ])),
+                    ]));
+                }
+                TraceEvent::PrefetchIssued { layer, expert, delta } => evs.push(obj(vec![
+                    ("ph", s("X")),
+                    ("name", s("prefetch")),
+                    ("pid", pid),
+                    ("tid", num(TID_LINK)),
+                    ("ts", us(e.t)),
+                    ("dur", us(delta.h2d_seconds.max(0.0))),
+                    ("args", obj(vec![
+                        ("layer", num(layer as f64)),
+                        ("expert", num(expert as f64)),
+                    ])),
+                ])),
+                TraceEvent::TransferLanded { layer, expert } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_LINK,
+                    "landed",
+                    vec![("layer", num(layer as f64)), ("expert", num(expert as f64))],
+                )),
+                TraceEvent::RequestAdmit { seq } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "admit",
+                    vec![("seq", num(seq as f64))],
+                )),
+                TraceEvent::RequestRetire { seq, output_tokens } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "retire",
+                    vec![
+                        ("seq", num(seq as f64)),
+                        ("output_tokens", num(output_tokens as f64)),
+                    ],
+                )),
+                TraceEvent::PrefillChunk { seq, tokens } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "prefill chunk",
+                    vec![("seq", num(seq as f64)), ("tokens", num(tokens as f64))],
+                )),
+                TraceEvent::CacheInsert { layer, expert } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "cache insert",
+                    vec![("layer", num(layer as f64)), ("expert", num(expert as f64))],
+                )),
+                TraceEvent::CacheEvict { layer, expert } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "cache evict",
+                    vec![("layer", num(layer as f64)), ("expert", num(expert as f64))],
+                )),
+                TraceEvent::PinProtected { layer, expert } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "pin protected",
+                    vec![("layer", num(layer as f64)), ("expert", num(expert as f64))],
+                )),
+                TraceEvent::PinSet { owner } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "pin set",
+                    vec![("owner", num(owner as f64))],
+                )),
+                TraceEvent::PinRelease { owner } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "pin release",
+                    vec![("owner", num(owner as f64))],
+                )),
+                TraceEvent::Suspend { seq } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "suspend",
+                    vec![("seq", num(seq as f64))],
+                )),
+                TraceEvent::Resume { seq } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "resume",
+                    vec![("seq", num(seq as f64))],
+                )),
+                TraceEvent::Dispatch { request, replica, score } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "dispatch",
+                    vec![
+                        ("request", num(request as f64)),
+                        ("replica", num(replica as f64)),
+                        ("score", num(score)),
+                    ],
+                )),
+            }
+        }
+        obj(vec![
+            ("traceEvents", arr(evs)),
+            ("displayTimeUnit", s("ms")),
+            ("melinoe", self.registry.to_json()),
+        ])
+    }
+}
+
+// ---------------------------------------------------------- trace summary
+
+/// Render the `trace summary` tables from the `"melinoe"` registry
+/// snapshot of an exported Chrome JSON: top-`top_n` churned experts and
+/// stall events by layer (plus the raw counters).
+pub fn summary_tables(registry: &Json, top_n: usize) -> Result<Vec<(String, Table)>> {
+    let mut out = Vec::new();
+
+    let mut counters = Table::new(&["counter", "value"]);
+    for (k, v) in registry.get("counters")?.as_obj()? {
+        counters.row(vec![k.clone(), format!("{}", v.as_f64()? as u64)]);
+    }
+    out.push(("counters".to_string(), counters));
+
+    let mut rows: Vec<(u64, u64, u64, u64, usize)> = Vec::new();
+    for row in registry.get("churn")?.as_arr()? {
+        rows.push((
+            row.get("loads")?.as_f64()? as u64,
+            row.get("evictions")?.as_f64()? as u64,
+            row.get("demand_misses")?.as_f64()? as u64,
+            row.get("pin_protected")?.as_f64()? as u64,
+            row.get("expert")?.as_usize()?,
+        ));
+    }
+    // most-churned first: loads + evictions, then demand misses
+    rows.sort_by(|a, b| (b.0 + b.1, b.2).cmp(&(a.0 + a.1, a.2)));
+    let mut churn = Table::new(&["expert", "loads", "evictions", "demand misses", "pin protected"]);
+    for (loads, evs, misses, pinned, expert) in rows.into_iter().take(top_n.max(1)) {
+        churn.row(vec![
+            expert.to_string(),
+            loads.to_string(),
+            evs.to_string(),
+            misses.to_string(),
+            pinned.to_string(),
+        ]);
+    }
+    out.push((format!("top {} churned experts", top_n.max(1)), churn));
+
+    let mut stalls = Table::new(&["layer", "stall events", "stall seconds"]);
+    for row in registry.get("stall_by_layer")?.as_arr()? {
+        stalls.row(vec![
+            row.get("layer")?.as_usize()?.to_string(),
+            format!("{}", row.get("events")?.as_f64()? as u64),
+            format!("{:.4}", row.get("seconds")?.as_f64()?),
+        ]);
+    }
+    out.push(("stall events by layer".to_string(), stalls));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(stall: f64, overlapped: f64, h2d: f64) -> PcieDelta {
+        PcieDelta { stall, overlapped, h2d_seconds: h2d }
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let mut r = Recorder::off();
+        assert!(!r.enabled());
+        r.emit(1.0, TraceEvent::StepStart { tokens: 1, batch: 1 });
+        assert!(r.take().is_none());
+        assert!(!Recorder::default().enabled());
+    }
+
+    #[test]
+    fn recorder_collects_and_registry_counts() {
+        let mut r = Recorder::on(3, "replica 3");
+        r.emit(0.0, TraceEvent::RequestAdmit { seq: 7 });
+        r.emit(0.1, TraceEvent::StepStart { tokens: 2, batch: 2 });
+        r.emit(
+            0.2,
+            TraceEvent::DemandStall {
+                layer: 1,
+                expert: 4,
+                residual: false,
+                delta: d(0.05, 0.0, 0.05),
+            },
+        );
+        r.emit(0.2, TraceEvent::CacheInsert { layer: 1, expert: 4 });
+        r.emit(0.3, TraceEvent::StepEnd { tokens: 2, batch: 2 });
+        r.emit(0.4, TraceEvent::RequestRetire { seq: 7, output_tokens: 5 });
+        let tr = r.take().expect("enabled recorder drains");
+        assert!(!r.enabled(), "take disables");
+        assert_eq!(tr.events.len(), 6);
+        assert_eq!(tr.lanes.get(&3).map(|s| s.as_str()), Some("replica 3"));
+        let c = &tr.registry.counters;
+        assert_eq!(c.get("requests_admitted"), Some(&1));
+        assert_eq!(c.get("demand_misses"), Some(&1));
+        assert_eq!(c.get("cache_inserts"), Some(&1));
+        assert_eq!(c.get("steps"), Some(&1));
+        assert_eq!(tr.registry.churn.get(&4).unwrap().demand_misses, 1);
+        assert_eq!(tr.registry.churn.get(&4).unwrap().loads, 1);
+        assert_eq!(tr.registry.stall_by_layer.get(&1).unwrap().events, 1);
+        assert!((tr.registry.pcie.stall - 0.05).abs() < 1e-12);
+        assert_eq!(tr.registry.gauges.get("sim_time"), Some(&0.4));
+        tr.audit_lane_monotonic().unwrap();
+    }
+
+    #[test]
+    fn histogram_buckets_and_merge() {
+        let mut h = Histogram::new(STALL_BUCKETS);
+        h.record(5e-5); // <= 1e-4
+        h.record(0.5); // <= 1.0
+        h.record(10.0); // overflow
+        assert_eq!(h.counts, vec![1, 0, 0, 0, 1, 1]);
+        assert_eq!(h.n, 3);
+        let mut h2 = Histogram::new(STALL_BUCKETS);
+        h2.record(5e-5);
+        h.merge(&h2);
+        assert_eq!(h.counts[0], 2);
+        assert_eq!(h.n, 4);
+    }
+
+    #[test]
+    fn merge_sorts_per_lane_and_sums_registries() {
+        let mut a = Recorder::on(0, "replica 0");
+        a.emit(0.2, TraceEvent::StepStart { tokens: 1, batch: 1 });
+        a.emit(0.4, TraceEvent::StepEnd { tokens: 1, batch: 1 });
+        let mut b = Recorder::on(1, "replica 1");
+        b.emit(0.1, TraceEvent::StepStart { tokens: 1, batch: 1 });
+        b.emit(0.3, TraceEvent::StepEnd { tokens: 1, batch: 1 });
+        let mut tr = a.take().unwrap();
+        tr.merge(b.take().unwrap());
+        assert_eq!(tr.events.len(), 4);
+        assert_eq!(tr.lanes.len(), 2);
+        assert_eq!(tr.registry.counters.get("steps"), Some(&2));
+        tr.audit_lane_monotonic().unwrap();
+        // lanes are grouped and time-ordered within each
+        assert_eq!(tr.events[0].lane, 0);
+        assert_eq!(tr.events[3].lane, 1);
+    }
+
+    #[test]
+    fn reconcile_catches_missing_delta() {
+        let mut r = Recorder::on(0, "x");
+        r.emit(
+            0.1,
+            TraceEvent::PrefetchIssued { layer: 0, expert: 1, delta: d(0.0, 0.02, 0.02) },
+        );
+        let tr = r.take().unwrap();
+        let mut stats = TransferStats {
+            overlapped_time: 0.02,
+            h2d_seconds: 0.02,
+            ..TransferStats::default()
+        };
+        tr.reconcile(&stats, 1e-6).unwrap();
+        stats.stall_time = 0.5; // an unemitted demand stall
+        assert!(tr.reconcile(&stats, 1e-6).is_err());
+    }
+
+    #[test]
+    fn prefetch_landed_audit() {
+        let mut r = Recorder::on(0, "x");
+        r.emit(0.1, TraceEvent::PrefetchIssued { layer: 0, expert: 1, delta: d(0.0, 0.02, 0.02) });
+        r.emit(0.2, TraceEvent::PrefetchIssued { layer: 0, expert: 2, delta: d(0.0, 0.02, 0.02) });
+        r.emit(0.3, TraceEvent::TransferLanded { layer: 0, expert: 1 });
+        let tr = r.take().unwrap();
+        tr.audit_prefetch_landed(1).unwrap(); // one still in flight
+        assert!(tr.audit_prefetch_landed(0).is_err());
+    }
+
+    #[test]
+    fn pin_and_occupancy_audits() {
+        let mut r = Recorder::on(0, "x");
+        r.emit(0.0, TraceEvent::PinSet { owner: 1 });
+        r.emit(0.0, TraceEvent::PinSet { owner: 2 });
+        r.emit(0.1, TraceEvent::PinSet { owner: 1 }); // re-pin is a set no-op
+        r.emit(0.2, TraceEvent::PinRelease { owner: 2 });
+        r.emit(0.0, TraceEvent::CacheInsert { layer: 0, expert: 1 });
+        r.emit(0.1, TraceEvent::CacheInsert { layer: 0, expert: 2 });
+        r.emit(0.2, TraceEvent::CacheEvict { layer: 0, expert: 1 });
+        let tr = r.take().unwrap();
+        tr.audit_pins(1).unwrap();
+        assert!(tr.audit_pins(2).is_err());
+        tr.audit_occupancy(&[1]).unwrap();
+        assert!(tr.audit_occupancy(&[2]).is_err());
+    }
+
+    #[test]
+    fn chrome_export_and_summary_roundtrip() {
+        let mut r = Recorder::on(0, "replica 0");
+        r.emit(0.0, TraceEvent::StepStart { tokens: 2, batch: 2 });
+        r.emit(
+            0.01,
+            TraceEvent::DemandStall {
+                layer: 2,
+                expert: 9,
+                residual: true,
+                delta: d(0.004, -0.001, 0.0),
+            },
+        );
+        r.emit(0.01, TraceEvent::CacheInsert { layer: 2, expert: 9 });
+        r.emit(0.02, TraceEvent::StepEnd { tokens: 2, batch: 2 });
+        r.emit(0.03, TraceEvent::Dispatch { request: 5, replica: 0, score: 0.75 });
+        let tr = r.take().unwrap();
+        let j = tr.to_chrome_json();
+        // survives our own parser (what `trace summary` does)
+        let back = Json::parse(&j.to_string()).unwrap();
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        // 4 metadata (1 process + 3 threads) + 5 events
+        assert_eq!(evs.len(), 9);
+        assert!(j.to_string().contains("\"displayTimeUnit\""));
+        let reg = back.get("melinoe").unwrap();
+        let tables = summary_tables(reg, 5).unwrap();
+        assert_eq!(tables.len(), 3);
+        let churn = tables[1].1.render();
+        assert!(churn.contains('9'), "expert 9 appears in the churn table: {churn}");
+        let stalls = tables[2].1.render();
+        assert!(stalls.contains('2'), "layer 2 appears in the stall table: {stalls}");
+    }
+
+    #[test]
+    fn metrics_json_shape() {
+        let mut r = Recorder::on(0, "x");
+        r.emit(
+            0.1,
+            TraceEvent::DemandStall {
+                layer: 0,
+                expert: 3,
+                residual: false,
+                delta: d(0.2, 0.0, 0.2),
+            },
+        );
+        let tr = r.take().unwrap();
+        let j = tr.metrics_json(0.2, 0.0, 0.2);
+        assert_eq!(j.get("trace_stall_s").unwrap().as_f64().unwrap(), 0.2);
+        assert_eq!(j.get("stats_stall_s").unwrap().as_f64().unwrap(), 0.2);
+        assert_eq!(
+            j.get("counters").unwrap().get("demand_misses").unwrap().as_f64().unwrap(),
+            1.0
+        );
+    }
+}

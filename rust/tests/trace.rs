@@ -1,0 +1,205 @@
+//! Structured-tracing integration tests.
+//!
+//! The artifact-free tests drive the cluster simulator with tracing on
+//! and lock in the observability contract: every run passes the
+//! conservation audits `run_cluster` applies per replica (lane
+//! monotonicity, trace-vs-`TransferStats` reconciliation, prefetch
+//! issued/landed matching, pin-ledger and occupancy replay), the merged
+//! fleet timeline carries sane counters, and — the zero-overhead
+//! guarantee — every number in the [`ClusterReport`] is bit-identical
+//! with tracing on vs off.  The engine-level test (artifact-gated,
+//! skips without built artifacts) asserts decoded tokens are
+//! bit-identical too, and reconciles the engine's own trace.
+
+use melinoe::clock::GpuSpec;
+use melinoe::cluster::replica::Replica;
+use melinoe::cluster::workload::{self, OutputLen, TaskProfile};
+use melinoe::cluster::{balancer, run_cluster, ClusterConfig, ClusterReport};
+use melinoe::coordinator::workload::Arrival;
+use melinoe::coordinator::SchedulerMode;
+use melinoe::policies::PolicyConfig;
+use melinoe::repro::Ctx;
+use melinoe::trace::TraceEvent;
+
+/// Small but non-trivial fleet: cache pressure (capacity below the task
+/// hot set), lookahead pipeline on, so every event family fires.
+fn traced_cfg(seed: u64) -> ClusterConfig {
+    let mut cfg =
+        ClusterConfig::synthetic(2, 24, 2, GpuSpec::h100(), seed).with_trace(true);
+    cfg.spec.n_layers = 4;
+    cfg.spec.n_experts = 32;
+    cfg.spec.top_k = 4;
+    cfg.spec.capacity = 6; // below the hot set → demand misses + evictions
+    cfg.spec.lookahead = 1;
+    cfg.tasks = TaskProfile::synthetic(2, 4, 32, 8, 0.9);
+    cfg.workload.prompt_tokens = 8;
+    cfg.workload.output = OutputLen::Fixed(6);
+    cfg.max_batch = 3;
+    cfg.with_arrival(Arrival::Burst)
+}
+
+fn run(cfg: &ClusterConfig) -> ClusterReport {
+    let mut b = balancer::by_name("expert-affinity").unwrap();
+    run_cluster(cfg, b.as_mut()).unwrap()
+}
+
+#[test]
+fn traced_runs_pass_conservation_audits_and_count_sanely() {
+    for seed in [3u64, 17, 42] {
+        let cfg = traced_cfg(seed);
+        // run_cluster itself fails on any per-replica audit violation;
+        // an Ok report with a merged trace is the primary assertion
+        let rep = run(&cfg);
+        let tr = rep.trace.as_ref().expect("tracing was on");
+        tr.audit_lane_monotonic().unwrap();
+        assert!(!tr.events.is_empty(), "seed {seed}: empty trace");
+        // lanes: one per replica plus the dispatcher
+        assert_eq!(tr.lanes.len(), cfg.replicas + 1, "seed {seed}");
+        assert_eq!(tr.lanes.get(&(cfg.replicas as u32)).map(String::as_str), Some("dispatcher"));
+
+        let c = |k: &str| tr.registry.counters.get(k).copied().unwrap_or(0);
+        let n = cfg.workload.n_requests as u64;
+        assert_eq!(c("dispatches"), n, "seed {seed}: every request dispatched once");
+        assert_eq!(c("requests_admitted"), n, "seed {seed}");
+        assert_eq!(c("requests_retired"), n, "seed {seed}");
+        assert!(c("steps") > 0, "seed {seed}");
+        // every landed transfer answers an issued one; leftovers may
+        // still sit in flight at drain time, never the reverse
+        assert!(c("transfer_landed") <= c("prefetch_issued"), "seed {seed}");
+        // pin ledger balances: pins come from admits + resumes, releases
+        // from retires + suspends, and nothing stays suspended at drain
+        assert_eq!(
+            c("pins_set") + c("suspends"),
+            c("pins_released") + c("resumes"),
+            "seed {seed}"
+        );
+        // per-request token accounting survives into the event stream
+        let retired_tokens: u64 = tr
+            .events
+            .iter()
+            .filter_map(|s| match s.ev {
+                TraceEvent::RequestRetire { output_tokens, .. } => Some(output_tokens as u64),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(retired_tokens, rep.output_tokens as u64, "seed {seed}");
+    }
+}
+
+#[test]
+fn direct_replica_trace_reconciles_and_replays_cache_state() {
+    let cfg = traced_cfg(9);
+    let reqs = workload::generate(
+        &cfg.workload,
+        &cfg.tasks,
+        cfg.spec.n_layers,
+        cfg.spec.n_experts,
+        cfg.spec.top_k,
+    );
+    let mut r = Replica::new(0, cfg.spec.clone(), SchedulerMode::Continuous)
+        .with_prefill_chunk(cfg.prefill_chunk)
+        .with_trace(true);
+    for req in reqs {
+        r.enqueue(req);
+    }
+    let mut guard = 0;
+    while r.has_work() {
+        r.run_one_step(cfg.max_batch);
+        guard += 1;
+        assert!(guard < 200_000, "replica failed to drain");
+    }
+    let tr = r.take_trace().expect("tracing was on");
+    assert_eq!(tr.lanes.get(&0).map(String::as_str), Some("replica 0"));
+    tr.audit_lane_monotonic().unwrap();
+    // the trace's snapshot-delta stall/overlap/h2d totals must equal the
+    // TransferEngine's own accounting exactly (same additions, observed
+    // at emission time)
+    tr.reconcile(&r.pcie.stats, 1e-6).unwrap();
+    tr.audit_prefetch_landed(r.pcie.in_flight_len()).unwrap();
+    tr.audit_pins(r.cache.layers[0].pinned_owners()).unwrap();
+    let resident: Vec<usize> = r.cache.layers.iter().map(|l| l.resident_len()).collect();
+    tr.audit_occupancy(&resident).unwrap();
+    // and the chrome export is loadable json with the registry embedded
+    let j = tr.to_chrome_json().to_string();
+    let parsed = melinoe::util::json::Json::parse(&j).unwrap();
+    assert!(!parsed.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    assert!(parsed.get("melinoe").unwrap().get("counters").is_ok());
+}
+
+#[test]
+fn report_numbers_bit_identical_with_tracing_on_vs_off() {
+    for seed in [5u64, 42] {
+        let on_cfg = traced_cfg(seed);
+        let off_cfg = on_cfg.clone().with_trace(false);
+        let on = run(&on_cfg);
+        let off = run(&off_cfg);
+        assert!(on.trace.is_some() && off.trace.is_none());
+        // tracing is pure observation: the simulation's numbers do not
+        // move by a single ULP
+        assert_eq!(on.n_requests, off.n_requests, "seed {seed}");
+        assert_eq!(on.output_tokens, off.output_tokens, "seed {seed}");
+        assert_eq!(on.makespan.to_bits(), off.makespan.to_bits(), "seed {seed}");
+        assert_eq!(on.hit_rate.to_bits(), off.hit_rate.to_bits(), "seed {seed}");
+        assert_eq!(on.stall_seconds.to_bits(), off.stall_seconds.to_bits(), "seed {seed}");
+        assert_eq!(
+            on.overlapped_seconds.to_bits(),
+            off.overlapped_seconds.to_bits(),
+            "seed {seed}"
+        );
+        assert_eq!(on.h2d_seconds.to_bits(), off.h2d_seconds.to_bits(), "seed {seed}");
+        assert_eq!(on.pcie_gb.to_bits(), off.pcie_gb.to_bits(), "seed {seed}");
+        assert_eq!(on.ttft.p95.to_bits(), off.ttft.p95.to_bits(), "seed {seed}");
+        assert_eq!(on.latency.p99.to_bits(), off.latency.p99.to_bits(), "seed {seed}");
+        assert_eq!(on.preemptions, off.preemptions, "seed {seed}");
+    }
+}
+
+// ------------------------------------------------------- engine-level
+// (artifact-gated: skips cleanly when no PJRT artifacts are built)
+
+/// First preset with complete artifacts (config + eval set), if any.
+fn any_preset() -> Option<Ctx> {
+    let dir = melinoe::artifacts_dir();
+    for preset in ["olmoe-micro", "phi-micro", "mixtral-micro"] {
+        if let Ok(ctx) = Ctx::load(&dir, preset) {
+            if ctx.eval_set("dolly").is_ok() {
+                return Some(ctx);
+            }
+        }
+    }
+    eprintln!("SKIP: no artifacts built (run `make artifacts`)");
+    None
+}
+
+#[test]
+fn engine_decode_bit_identical_with_tracing_on_vs_off() {
+    let Some(ctx) = any_preset() else { return };
+    let pol = PolicyConfig::base_offload(ctx.cfg.n_experts);
+    let parts = ctx.parts(&pol, "dolly").unwrap();
+    let engine = parts.engine(&ctx, GpuSpec::h100()).with_ignore_eos(true);
+    let eval = ctx.eval_set("dolly").unwrap();
+    let prompt = &eval.samples[0].prompt;
+
+    let mut outs: Vec<Vec<usize>> = Vec::new();
+    let mut sims = Vec::new();
+    for tracing in [false, true] {
+        let mut sess = engine.session();
+        sess.set_tracing(tracing);
+        engine.admit(&mut sess, prompt, 8).unwrap();
+        let mut fins = Vec::new();
+        while sess.active() > 0 {
+            fins.extend(engine.step(&mut sess).unwrap());
+        }
+        assert_eq!(fins.len(), 1, "tracing {tracing}");
+        outs.push(fins[0].tokens.clone());
+        sims.push(sess.now());
+        if tracing {
+            let tr = sess.take_trace().expect("tracing was on");
+            tr.audit_lane_monotonic().unwrap();
+            tr.reconcile(&sess.pcie.stats, 1e-6).unwrap();
+            assert!(tr.registry.counters.get("steps").copied().unwrap_or(0) > 0);
+        }
+    }
+    assert_eq!(outs[0], outs[1], "tracing changed the decoded tokens");
+    assert_eq!(sims[0].to_bits(), sims[1].to_bits(), "tracing moved the sim clock");
+}

@@ -12,6 +12,13 @@ parses them and FAILS the build if a headline invariant regresses:
   ext_preempt     preempt-on High p95 TTFT <= off, tok/s within 5%,
                   hit-rate within 0.05, per capacity
 
+Every ext_* row also embeds a `metrics` snapshot from the run's merged
+structured trace (docs/OBSERVABILITY.md); the gate rejects NaN /
+negative counters and any trace-vs-TransferStats drift beyond 1e-6 —
+the conservation audit over the prefetch/stall accounting.  When the
+smoke step exported `results/ext_overlap_trace.json` (via `--trace`),
+its Chrome-trace shape is sanity-checked too.
+
 It also writes a $GITHUB_STEP_SUMMARY table of tok/s, hit-rate and
 overlap fraction per experiment, so every CI run leaves a perf snapshot
 in the job summary.  Stdlib only — no third-party imports.
@@ -20,10 +27,14 @@ Usage: check_repro.py [results_dir]   (default: results)
 """
 
 import json
+import math
 import os
 import sys
 
 REQUIRED = ["ext_cluster", "ext_continuous", "ext_prefill", "ext_overlap", "ext_preempt"]
+
+# trace-derived PCIe totals must match TransferStats to this tolerance
+TRACE_TOL = 1e-6
 
 failures = []
 summary_rows = []  # (experiment, headline, tok/s, hit-rate, overlap frac)
@@ -188,6 +199,79 @@ def check_preempt(rows):
         )
 
 
+def finite(v):
+    return isinstance(v, (int, float)) and math.isfinite(v)
+
+
+def check_metrics(name, rows):
+    """Validate the per-row metrics snapshot: counters finite and
+    non-negative, trace totals reconciled with TransferStats."""
+    problems = []
+    max_drift = 0.0
+    snapshots = 0
+    for i, r in enumerate(rows):
+        m = r.get("metrics")
+        if not isinstance(m, dict):
+            problems.append(f"row {i}: missing metrics snapshot")
+            continue
+        snapshots += 1
+        for k, v in sorted(m.get("counters", {}).items()):
+            if not finite(v) or v < 0:
+                problems.append(f"row {i}: counter {k}={v!r}")
+        triplet_keys = [
+            "trace_stall_s", "trace_overlapped_s", "trace_h2d_s",
+            "stats_stall_s", "stats_overlapped_s", "stats_h2d_s",
+        ]
+        vals = {k: m.get(k) for k in ["events"] + triplet_keys}
+        bad = [f"{k}={v!r}" for k, v in vals.items() if not finite(v)]
+        if bad:
+            problems.append(f"row {i}: non-finite {', '.join(bad)}")
+            continue
+        if vals["events"] <= 0:
+            problems.append(f"row {i}: empty trace ({vals['events']} events)")
+        for side in ("stall", "overlapped", "h2d"):
+            drift = abs(vals[f"trace_{side}_s"] - vals[f"stats_{side}_s"])
+            max_drift = max(max_drift, drift)
+    check(
+        name,
+        not problems,
+        f"metrics snapshots clean ({snapshots}/{len(rows)} rows)"
+        if not problems
+        else "; ".join(problems[:5]),
+    )
+    if snapshots:
+        check(
+            name,
+            max_drift <= TRACE_TOL,
+            f"trace vs TransferStats max drift {max_drift:.3g} (tol {TRACE_TOL:g})",
+        )
+
+
+def check_trace_export(results_dir):
+    """Shape-check the optional Chrome-trace export from the smoke run."""
+    path = os.path.join(results_dir, "ext_overlap_trace.json")
+    if not os.path.exists(path):
+        print(f"[skip] {path} not present (smoke ran without --trace)")
+        return
+    try:
+        with open(path) as f:
+            t = json.load(f)
+    except ValueError as e:
+        check("trace_export", False, f"unparseable {path}: {e}")
+        return
+    evs = t.get("traceEvents")
+    check(
+        "trace_export",
+        isinstance(evs, list) and len(evs) > 0,
+        f"{len(evs) if isinstance(evs, list) else 0} traceEvents in {path}",
+    )
+    check(
+        "trace_export",
+        isinstance(t.get("melinoe"), dict) and "counters" in t["melinoe"],
+        "embedded metrics registry under \"melinoe\"",
+    )
+
+
 def write_summary():
     path = os.environ.get("GITHUB_STEP_SUMMARY")
     lines = ["## Repro invariant gate", ""]
@@ -224,8 +308,10 @@ def main():
         if rows is not None:
             try:
                 checkers[name](rows)
+                check_metrics(name, rows)
             except (KeyError, TypeError, ValueError) as e:
                 failures.append(f"{name}: malformed JSON ({e!r})")
+    check_trace_export(results_dir)
     write_summary()
     sys.exit(1 if failures else 0)
 
