@@ -25,8 +25,27 @@
 //! eviction: genuine per-token churn may still displace a warm expert,
 //! but bulk and speculative traffic cannot wipe a live sequence's warm
 //! working set.  Preempted and retired sequences release their pins.
+//!
+//! Residency is *byte-budgeted per tier* (§3.2 / Table 12): every
+//! resident entry carries the layer's [`QuantMode`] tier, the slot count
+//! is a byte budget divided by the tier's per-expert cost (int4 fits
+//! ~3.6× the experts of fp16 in the same VRAM), and an optional
+//! *little store* ([`LayerCache::enable_little`]) carves a fixed
+//! fraction of that byte budget into low-bit fallback copies of hot
+//! experts — MoBiLE's big-little scheme.  [`LayerCache::used_units`] /
+//! [`LayerCache::budget_units`] expose the exact occupancy arithmetic
+//! (cost units are exact binary fractions, so the sums never drift) and
+//! a property test holds `used ≤ budget` through insert/evict/pin
+//! storms at every tier mix.
 
+use crate::quant::QuantMode;
 use std::collections::{HashMap, HashSet};
+
+/// Fraction of a layer's byte budget carved out for little fallback
+/// copies when [`LayerCache::enable_little`] is on.  One quarter keeps
+/// ~92% of the big store's slots at int4/int3 tier mixes while funding
+/// a little set large enough to cover the hot experts.
+pub const LITTLE_BUDGET_FRAC: f64 = 0.25;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum EvictionKind {
@@ -97,6 +116,17 @@ pub struct LayerCache {
     n_experts: usize,
     capacity: usize,
     kind: EvictionKind,
+    /// Precision tier of every big-store resident (the serving tier).
+    /// `capacity` slots at this tier define the layer's byte budget.
+    tier: QuantMode,
+    /// Tier of the little fallback store, when enabled.
+    little_tier: Option<QuantMode>,
+    /// Little-store slot count, carved out of the byte budget.
+    little_capacity: usize,
+    /// Low-bit fallback copies of hot experts (never in `resident`, so
+    /// hit/miss accounting and decode numerics are untouched when the
+    /// fallback never fires).
+    little: HashSet<usize>,
     resident: HashSet<usize>,
     /// Slots held for in-flight lookahead prefetches (reserve/commit
     /// path): reserved experts are not yet resident, but reservations
@@ -121,6 +151,10 @@ impl LayerCache {
             n_experts,
             capacity: capacity.min(n_experts),
             kind,
+            tier: QuantMode::Fp16,
+            little_tier: None,
+            little_capacity: 0,
+            little: HashSet::new(),
             resident: HashSet::new(),
             reserved: HashSet::new(),
             counts: vec![0.0; n_experts],
@@ -138,6 +172,102 @@ impl LayerCache {
 
     pub fn resident_len(&self) -> usize {
         self.resident.len()
+    }
+
+    pub fn tier(&self) -> QuantMode {
+        self.tier
+    }
+
+    pub fn little_tier(&self) -> Option<QuantMode> {
+        self.little_tier
+    }
+
+    /// Set the big-store precision tier.  The slot count is unchanged —
+    /// callers size `capacity` for the tier via
+    /// `PolicyConfig::effective_capacity`, so `capacity × tier cost` *is*
+    /// the layer's byte budget.  Construction-time call.
+    pub fn set_tier(&mut self, tier: QuantMode) {
+        debug_assert!(self.resident.is_empty(), "set_tier is a construction-time call");
+        self.tier = tier;
+    }
+
+    /// Carve `frac` of the layer's byte budget into a little fallback
+    /// store at tier `little`: little slots are funded by *shrinking*
+    /// the big store, so total budget bytes never grow.  Exact unit
+    /// arithmetic — after the carve,
+    /// `budget_units() ≤ old capacity × tier cost` always holds.
+    /// Construction-time call (the stores must be empty).
+    pub fn enable_little(&mut self, little: QuantMode, frac: f64) {
+        debug_assert!(
+            self.resident.is_empty() && self.little.is_empty(),
+            "enable_little is a construction-time call"
+        );
+        let budget = self.capacity as f64 * self.tier.cost_units();
+        let little_cap =
+            ((budget * frac.clamp(0.0, 1.0) / little.cost_units()) as usize).min(self.n_experts);
+        let big_cap =
+            ((budget - little_cap as f64 * little.cost_units()) / self.tier.cost_units()) as usize;
+        self.little_tier = Some(little);
+        self.little_capacity = little_cap;
+        self.capacity = big_cap.min(self.n_experts);
+    }
+
+    /// The layer's VRAM byte budget in fp16-expert units: big slots at
+    /// the serving tier plus the little carve-out.
+    pub fn budget_units(&self) -> f64 {
+        self.capacity as f64 * self.tier.cost_units()
+            + self.little_capacity as f64 * self.little_tier.map_or(0.0, |t| t.cost_units())
+    }
+
+    /// Bytes currently occupied, in fp16-expert units: the sum of
+    /// per-tier entry costs across both stores.  Invariant (property
+    /// tested): `used_units() ≤ budget_units()` at all times.
+    pub fn used_units(&self) -> f64 {
+        self.resident.len() as f64 * self.tier.cost_units()
+            + self.little.len() as f64 * self.little_tier.map_or(0.0, |t| t.cost_units())
+    }
+
+    /// Entries resident at any tier (big + little) — what the trace
+    /// occupancy-replay audit balances against.
+    pub fn occupancy_len(&self) -> usize {
+        self.resident.len() + self.little.len()
+    }
+
+    pub fn little_capacity(&self) -> usize {
+        self.little_capacity
+    }
+
+    pub fn little_len(&self) -> usize {
+        self.little.len()
+    }
+
+    pub fn has_little(&self, expert: usize) -> bool {
+        self.little.contains(&expert)
+    }
+
+    /// Install a little fallback copy of `expert`, evicting the coldest
+    /// little entry (policy order) when the carve-out is full.  Returns
+    /// `None` when nothing changed (no carve-out, already installed,
+    /// out of range); otherwise `Some(evicted)` so the caller can
+    /// account the transfer and emit matching trace events.
+    pub fn install_little(&mut self, expert: usize) -> Option<Option<usize>> {
+        if self.little_capacity == 0 || expert >= self.n_experts || self.little.contains(&expert) {
+            return None;
+        }
+        let mut evicted = None;
+        if self.little.len() >= self.little_capacity {
+            let victim = self
+                .little
+                .iter()
+                .copied()
+                .filter(|&e| e != expert)
+                .min_by(|&a, &b| self.eviction_rank(a, b));
+            let Some(victim) = victim else { return None };
+            self.little.remove(&victim);
+            evicted = Some(victim);
+        }
+        self.little.insert(expert);
+        Some(evicted)
     }
 
     pub fn contains(&self, expert: usize) -> bool {
@@ -386,6 +516,18 @@ impl ExpertCache {
     pub fn with_capacities(n_experts: usize, capacities: &[usize], kind: EvictionKind) -> Self {
         ExpertCache {
             layers: capacities.iter().map(|&c| LayerCache::new(n_experts, c, kind)).collect(),
+        }
+    }
+
+    /// Apply the serving tier (and optional little carve-out at
+    /// [`LITTLE_BUDGET_FRAC`]) to every layer.  Construction-time call —
+    /// see [`LayerCache::set_tier`] / [`LayerCache::enable_little`].
+    pub fn set_tiers(&mut self, tier: QuantMode, little: Option<QuantMode>) {
+        for l in &mut self.layers {
+            l.set_tier(tier);
+            if let Some(lt) = little {
+                l.enable_little(lt, LITTLE_BUDGET_FRAC);
+            }
         }
     }
 
@@ -799,6 +941,129 @@ mod tests {
                 let m4 = run_trace(EvictionKind::Lfu, 4, trace).stats.misses;
                 let m8 = run_trace(EvictionKind::Lfu, 8, trace).stats.misses;
                 m8 <= m4
+            },
+        );
+    }
+
+    // ------------------------------------------------- tiers & little store
+    #[test]
+    fn enable_little_carves_budget_without_growing_it() {
+        let mut c = LayerCache::new(64, 32, EvictionKind::Lfu);
+        c.set_tier(QuantMode::Int4);
+        let before = c.budget_units(); // 32 × 9/32 = 9.0 exactly
+        assert_eq!(before, 9.0);
+        c.enable_little(QuantMode::Int3, LITTLE_BUDGET_FRAC);
+        assert_eq!(c.little_tier(), Some(QuantMode::Int3));
+        assert!(c.little_capacity() > 0, "the carve-out funds real little slots");
+        assert!(c.capacity() < 32, "little slots are paid for by the big store");
+        assert!(c.budget_units() <= before + 1e-12, "the carve never grows the budget");
+    }
+
+    #[test]
+    fn little_store_installs_and_evicts_in_policy_order() {
+        let mut c = LayerCache::new(16, 8, EvictionKind::Lfu);
+        c.set_tier(QuantMode::Int4);
+        c.enable_little(QuantMode::Int3, 0.5);
+        let cap = c.little_capacity();
+        assert!(cap >= 2);
+        // fill the carve-out; expert 0 is hot, the rest cold
+        for _ in 0..5 {
+            c.request(0);
+        }
+        for e in 0..cap {
+            assert_eq!(c.install_little(e), Some(None));
+            assert!(c.has_little(e));
+        }
+        assert_eq!(c.install_little(0), None, "already installed is a no-op");
+        // overflow evicts the coldest little entry, never the hot one
+        let out = c.install_little(15).unwrap().unwrap();
+        assert_ne!(out, 0);
+        assert!(c.has_little(15) && c.has_little(0));
+        assert_eq!(c.little_len(), cap);
+        // little copies never appear in big residency or hit accounting
+        assert!(!c.contains(15));
+        let hits = c.stats.hits;
+        c.request(15);
+        assert_eq!(c.stats.hits, hits, "a little copy is not a cache hit");
+    }
+
+    #[test]
+    fn no_little_store_without_carve_out() {
+        let mut c = LayerCache::new(16, 4, EvictionKind::Lfu);
+        assert_eq!(c.install_little(3), None);
+        assert_eq!(c.little_len(), 0);
+        assert_eq!(c.budget_units(), 4.0, "fp16 default: one unit per slot");
+    }
+
+    #[test]
+    fn prop_byte_occupancy_never_exceeds_budget() {
+        // satellite: random insert/evict/pin/prefill/commit storms across
+        // tier mixes never push per-tier byte occupancy past the budget
+        check(
+            150,
+            |r| {
+                let tier = [QuantMode::Fp16, QuantMode::Int4][r.below(2)];
+                let little = match (tier, r.below(3)) {
+                    (QuantMode::Int4, 0) => Some(QuantMode::Int3),
+                    (QuantMode::Fp16, 0) => Some(QuantMode::Int4),
+                    _ => None,
+                };
+                let cap = r.below(10);
+                let ops: Vec<usize> = (0..r.below(120)).map(|_| r.below(1 << 12)).collect();
+                (tier, little, cap, ops)
+            },
+            |(tier, little, cap, ops)| {
+                shrink_vec(ops, |_| vec![])
+                    .into_iter()
+                    .map(|o| (*tier, *little, *cap, o))
+                    .collect()
+            },
+            |(tier, little, cap, ops)| {
+                let mut c = LayerCache::new(16, *cap, EvictionKind::Gamma(0.8));
+                c.set_tier(*tier);
+                if let Some(lt) = *little {
+                    c.enable_little(lt, LITTLE_BUDGET_FRAC);
+                }
+                let budget = c.budget_units();
+                assert!(budget <= *cap as f64 * tier.cost_units() + 1e-12);
+                for &op in ops {
+                    let e = op % 16;
+                    match (op >> 4) % 6 {
+                        0 => {
+                            c.token_tick();
+                            if !c.request(e) {
+                                c.insert(e, &[e]);
+                            }
+                        }
+                        1 => {
+                            c.install_little(e);
+                        }
+                        2 => {
+                            c.pin_set((op >> 7) as u64 % 4, &[e, (e + 3) % 16]);
+                        }
+                        3 => {
+                            c.release((op >> 7) as u64 % 4);
+                        }
+                        4 => {
+                            c.prefill_union(&[e, (e + 1) % 16, (e + 5) % 16]);
+                        }
+                        _ => {
+                            if c.reserve(e) {
+                                c.commit(e, &[(e + 1) % 16]);
+                            }
+                        }
+                    }
+                    if c.used_units() > c.budget_units() + 1e-12 {
+                        return false;
+                    }
+                    if c.resident_len() > c.capacity() || c.little_len() > c.little_capacity() {
+                        return false;
+                    }
+                    if c.occupancy_len() != c.resident_len() + c.little_len() {
+                        return false;
+                    }
+                }
+                true
             },
         );
     }

@@ -36,6 +36,7 @@ use crate::clock::GpuSpec;
 use crate::coordinator::workload::Arrival;
 use crate::coordinator::{PreemptPolicy, Priority, SchedulerMode};
 use crate::metrics::{fmt2, Percentiles, Table};
+use crate::quant::QuantMode;
 use crate::trace::{Recorder, Trace, TraceEvent};
 
 use balancer::{Balancer, ReplicaView};
@@ -167,6 +168,30 @@ impl ClusterConfig {
         self
     }
 
+    /// Weight precision tier every replica stores and executes resident
+    /// experts at (`--quant`).  Preserves the spec's VRAM *byte* budget:
+    /// the per-layer slot count is rescaled by the tier cost ratio, so a
+    /// lower-bit tier holds proportionally more experts in the same
+    /// bytes (and the current tier is a no-op — cost units are exact
+    /// binary fractions).
+    pub fn with_quant(mut self, quant: QuantMode) -> ClusterConfig {
+        let budget = self.spec.capacity as f64 * self.spec.quant.cost_units();
+        self.spec.capacity =
+            ((budget / quant.cost_units()) as usize).clamp(1, self.spec.n_experts);
+        self.spec.quant = quant;
+        self
+    }
+
+    /// Big-little fallback on every replica (`--little-tier`,
+    /// `--fallback-threshold`): keep `little`-tier copies of the hottest
+    /// experts resident and, on a demand miss, execute the little copy
+    /// at zero stall when the expected wait exceeds `threshold` seconds.
+    pub fn with_fallback(mut self, little: Option<QuantMode>, threshold: f64) -> ClusterConfig {
+        self.spec.little_tier = little;
+        self.spec.fallback_threshold = threshold.max(0.0);
+        self
+    }
+
     pub fn with_output(mut self, output: OutputLen) -> ClusterConfig {
         self.workload.output = output;
         self
@@ -199,6 +224,9 @@ pub struct ReplicaSummary {
     pub peak_queue_depth: usize,
     /// Sequences suspended out of a slot by a higher-priority waiter.
     pub preemptions: u64,
+    /// Fraction of this replica's routed assignments the big-little
+    /// fallback served from a degraded little copy.
+    pub degraded_token_frac: f64,
 }
 
 /// Per-priority-class latency slice of a cluster run (only classes that
@@ -252,6 +280,16 @@ pub struct ClusterReport {
     pub overlap_fraction: f64,
     /// Fleet-total preemptions (suspensions of an in-flight sequence).
     pub preemptions: u64,
+    /// Fraction of routed (token, expert) assignments the big-little
+    /// fallback served from a degraded low-bit little copy, fleet-wide
+    /// (0.0 when `--little-tier` is off; a quality proxy, not a speed
+    /// metric).
+    pub degraded_token_frac: f64,
+    /// Fleet-total H2D bytes split by precision tier
+    /// (`[fp16, int4, int3]` — [`QuantMode::idx`] order).
+    pub h2d_bytes_by_tier: [f64; 3],
+    /// Fleet-total D2H (eviction write-back) bytes split by tier.
+    pub d2h_bytes_by_tier: [f64; 3],
     /// Per-priority-class TTFT/latency slices (High first; only classes
     /// with completed requests appear).
     pub priorities: Vec<PriorityClass>,
@@ -352,8 +390,10 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         t.reconcile(&r.pcie.stats, 1e-6)?;
         t.audit_prefetch_landed(r.pcie.in_flight_len())?;
         t.audit_pins(r.cache.layers[0].pinned_owners())?;
+        // big residents plus little-tier copies: LittleInstall/LittleEvict
+        // events balance against the same ledger as CacheInsert/CacheEvict
         let resident: Vec<usize> =
-            r.cache.layers.iter().map(|l| l.resident_len()).collect();
+            r.cache.layers.iter().map(|l| l.occupancy_len()).collect();
         t.audit_occupancy(&resident)?;
         match &mut trace {
             Some(all) => all.merge(t),
@@ -380,6 +420,9 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
     let (mut stall_seconds, mut overlapped_seconds) = (0.0f64, 0.0f64);
     let mut h2d_seconds = 0.0f64;
     let mut preemptions = 0u64;
+    let (mut degraded, mut assignments) = (0u64, 0u64);
+    let mut h2d_bytes_by_tier = [0.0f64; 3];
+    let mut d2h_bytes_by_tier = [0.0f64; 3];
     let replicas: Vec<ReplicaSummary> = reps
         .iter()
         .map(|r| {
@@ -391,6 +434,12 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
             overlapped_seconds += r.pcie.stats.overlapped_time;
             h2d_seconds += r.pcie.stats.h2d_seconds;
             preemptions += r.preemptions;
+            degraded += r.degraded_execs;
+            assignments += r.total_assignments;
+            for t in 0..3 {
+                h2d_bytes_by_tier[t] += r.pcie.stats.h2d_bytes_by_tier[t];
+                d2h_bytes_by_tier[t] += r.pcie.stats.d2h_bytes_by_tier[t];
+            }
             ReplicaSummary {
                 id: r.id,
                 requests: r.completions.len(),
@@ -403,6 +452,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
                 busy_seconds: r.busy_seconds,
                 peak_queue_depth: r.peak_queue_depth,
                 preemptions: r.preemptions,
+                degraded_token_frac: r.degraded_token_frac(),
             }
         })
         .collect();
@@ -447,6 +497,9 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         h2d_seconds,
         overlap_fraction: crate::metrics::overlap_fraction(overlapped_seconds, stall_seconds),
         preemptions,
+        degraded_token_frac: crate::metrics::degraded_frac(degraded, assignments),
+        h2d_bytes_by_tier,
+        d2h_bytes_by_tier,
         priorities,
         replicas,
         trace,
@@ -472,6 +525,7 @@ pub fn comparison_table(reports: &[ClusterReport]) -> Table {
         "tok/s",
         "hit rate",
         "PCIe GB",
+        "degraded",
         "queue p50/p95/p99 (s)",
         "latency p50/p95/p99 (s)",
     ]);
@@ -482,6 +536,7 @@ pub fn comparison_table(reports: &[ClusterReport]) -> Table {
             fmt2(r.tokens_per_sec),
             format!("{:.3}", r.hit_rate),
             fmt2(r.pcie_gb),
+            format!("{:.3}", r.degraded_token_frac),
             r.queue_wait.cell(1.0),
             r.latency.cell(1.0),
         ]);
@@ -650,7 +705,61 @@ mod tests {
         assert_eq!(rep.priorities[0].requests, rep.n_requests);
         assert_eq!(rep.priorities[0].preempted_wait.p99, 0.0);
         assert!(rep.replicas.iter().all(|r| r.preemptions == 0));
+        // fallback off by default: nothing degraded, and every byte of
+        // H2D traffic rode the serving tier (int4 for the synthetic
+        // OLMoE spec) — no fp16 or little-tier traffic
+        assert_eq!(rep.degraded_token_frac, 0.0);
+        assert!(rep.replicas.iter().all(|r| r.degraded_token_frac == 0.0));
+        let tier_sum: f64 = rep.h2d_bytes_by_tier.iter().sum();
+        assert!((tier_sum / 1e9 - rep.pcie_gb).abs() < 1e-9);
+        assert_eq!(rep.h2d_bytes_by_tier[QuantMode::Fp16.idx()], 0.0);
+        assert!(rep.h2d_bytes_by_tier[QuantMode::Int4.idx()] > 0.0);
+        assert_eq!(rep.h2d_bytes_by_tier[QuantMode::Int3.idx()], 0.0);
         let table = comparison_table(&[rep]);
         assert!(table.render().contains("expert-affinity"));
+    }
+
+    /// Big-little fallback fleet-wide: int4 big copies, int3 little
+    /// copies, zero-threshold fallback.  The conservation audits inside
+    /// `run_cluster` (per-tier byte reconcile, occupancy replay with
+    /// mixed tiers) must pass, and the degraded fraction must be a valid
+    /// ratio sourced only from the two low-bit tiers.
+    #[test]
+    fn fallback_cluster_traces_reconcile() {
+        let cfg = small_cfg(2, 29)
+            .with_quant(QuantMode::Int4)
+            .with_fallback(Some(QuantMode::Int3), 0.0)
+            .with_trace(true);
+        let mut b = balancer::by_name("least-loaded").unwrap();
+        let rep = run_cluster(&cfg, b.as_mut()).unwrap();
+        assert_eq!(rep.n_requests, cfg.workload.n_requests);
+        assert!((0.0..=1.0).contains(&rep.degraded_token_frac));
+        assert!(rep.trace.is_some());
+        // demand/prefetch traffic is int4; little installs ride int3;
+        // nothing moves at fp16
+        assert!(rep.h2d_bytes_by_tier[1] > 0.0);
+        assert_eq!(rep.h2d_bytes_by_tier[0], 0.0);
+        let tier_sum: f64 = rep.h2d_bytes_by_tier.iter().sum();
+        assert!((tier_sum / 1e9 - rep.pcie_gb).abs() < 1e-9);
+    }
+
+    #[test]
+    fn with_quant_preserves_byte_budget() {
+        let cfg = small_cfg(1, 7); // synthetic spec serves at int4
+        assert_eq!(cfg.spec.quant, QuantMode::Int4);
+        let bytes = cfg.spec.capacity as f64 * cfg.spec.quant.cost_units();
+        // same tier: exact no-op (cost units are exact binary fractions)
+        let same = cfg.clone().with_quant(QuantMode::Int4);
+        assert_eq!(same.spec.capacity, cfg.spec.capacity);
+        // fp16 at the same bytes holds ~3.6× fewer experts, never zero
+        let fp16 = cfg.clone().with_quant(QuantMode::Fp16);
+        assert_eq!(fp16.spec.quant, QuantMode::Fp16);
+        assert!(fp16.spec.capacity >= 1 && fp16.spec.capacity < cfg.spec.capacity);
+        let fp16_bytes = fp16.spec.capacity as f64 * QuantMode::Fp16.cost_units();
+        assert!(fp16_bytes <= bytes + 1e-12, "rescaling never grows the budget");
+        // int3 holds more experts in the same bytes (clamped to n_experts)
+        let int3 = cfg.with_quant(QuantMode::Int3);
+        assert!(int3.spec.capacity > same.spec.capacity);
+        assert!(int3.spec.capacity <= int3.spec.n_experts);
     }
 }

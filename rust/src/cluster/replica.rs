@@ -48,6 +48,14 @@ pub struct ReplicaSpec {
     pub capacity: usize,
     pub eviction: EvictionKind,
     pub quant: QuantMode,
+    /// Keep low-bit little copies of the hottest experts resident (the
+    /// big-little fallback; `None` disables).  The little store carves
+    /// its bytes out of the same VRAM budget — see `cache`.
+    pub little_tier: Option<QuantMode>,
+    /// Execute a missed expert's little copy degraded, at zero stall,
+    /// when the expected wait on the full-tier transfer exceeds this
+    /// many simulated seconds (`--fallback-threshold`).
+    pub fallback_threshold: f64,
     /// Refresh the union prefetch plan of the in-flight set on admission.
     pub prefetch: bool,
     /// Layer-ahead transfer pipeline depth (`--lookahead`): during layer
@@ -84,6 +92,8 @@ impl ReplicaSpec {
             capacity,
             eviction: EvictionKind::Lfu,
             quant,
+            little_tier: None,
+            fallback_threshold: 0.0,
             prefetch: true,
             lookahead: 0,
             gpu,
@@ -181,6 +191,16 @@ pub struct Replica {
     suspended: Vec<(ActiveSeq, f64)>,
     /// Sequences suspended out of their slot by a higher-priority waiter.
     pub preemptions: u64,
+    /// (token, expert) assignments served degraded from a little-tier
+    /// copy (big-little fallback).
+    pub degraded_execs: u64,
+    /// All routed (token, expert) assignments replayed so far — the
+    /// denominator of [`Replica::degraded_token_frac`].
+    pub total_assignments: u64,
+    /// Per-layer routed-assignment counts accumulated from the replayed
+    /// traces: the signal the little store's hottest-set refresh ranks by
+    /// (the replica-side analogue of the engine's `ActivationTrace`).
+    route_counts: Vec<Vec<u64>>,
     /// Prefetch plan of the most recently enqueued request: the replica's
     /// *planned* residency, which the affinity scorer may consult before
     /// the caches have warmed (burst arrivals dispatch ahead of decode).
@@ -196,8 +216,11 @@ pub struct Replica {
 
 impl Replica {
     pub fn new(id: usize, spec: ReplicaSpec, scheduler: SchedulerMode) -> Replica {
-        let cache = ExpertCache::new(spec.n_layers, spec.n_experts, spec.capacity, spec.eviction);
+        let mut cache =
+            ExpertCache::new(spec.n_layers, spec.n_experts, spec.capacity, spec.eviction);
+        cache.set_tiers(spec.quant, spec.little_tier);
         let cost = spec.cost_model();
+        let route_counts = vec![vec![0; spec.n_experts]; spec.n_layers];
         Replica {
             id,
             spec,
@@ -212,6 +235,9 @@ impl Replica {
             in_flight: Vec::new(),
             suspended: Vec::new(),
             preemptions: 0,
+            degraded_execs: 0,
+            total_assignments: 0,
+            route_counts,
             last_plan: None,
             rec: Recorder::off(),
             completions: Vec::new(),
@@ -247,6 +273,12 @@ impl Replica {
     /// Drain the recorded event stream (`None` when tracing was off).
     pub fn take_trace(&mut self) -> Option<Trace> {
         self.rec.take()
+    }
+
+    /// Fraction of routed assignments served degraded by the big-little
+    /// fallback (0.0 when the fallback is off; always in [0, 1]).
+    pub fn degraded_token_frac(&self) -> f64 {
+        crate::metrics::degraded_frac(self.degraded_execs, self.total_assignments)
     }
 
     pub fn enqueue(&mut self, req: ClusterRequest) {
@@ -410,10 +442,60 @@ impl Replica {
                     TraceEvent::PrefetchIssued {
                         layer: l as u32,
                         expert: e as u32,
+                        tier: self.spec.quant.idx() as u8,
                         delta: snap.delta(&self.pcie.stats),
                     },
                 );
                 self.rec.emit(t, TraceEvent::CacheInsert { layer: l as u32, expert: e as u32 });
+            }
+        }
+    }
+
+    /// Refresh the little store: per layer, rank experts by the routed
+    /// assignment counts replayed so far and install little-tier copies
+    /// of the hottest ones not already big-resident, up to the store's
+    /// carved capacity.  Installs ride the untracked
+    /// [`TransferEngine::prefetch_h2d`] path at the little tier and emit
+    /// [`TraceEvent::LittleInstall`] carrying the byte delta; displaced
+    /// little copies are dropped in place (derived read-only data — no
+    /// D2H) with a [`TraceEvent::LittleEvict`].
+    fn install_little_set(&mut self) {
+        let Some(lt) = self.spec.little_tier else {
+            return;
+        };
+        for l in 0..self.spec.n_layers {
+            let cap = self.cache.layers[l].little_capacity();
+            if cap == 0 {
+                continue;
+            }
+            let mut ranked: Vec<usize> = (0..self.spec.n_experts).collect();
+            ranked.sort_by_key(|&e| std::cmp::Reverse(self.route_counts[l][e]));
+            ranked.retain(|&e| !self.cache.layers[l].contains(e));
+            ranked.truncate(cap);
+            for e in ranked {
+                if self.cache.layers[l].has_little(e) {
+                    continue;
+                }
+                let snap = PcieSnap::of(&self.pcie.stats);
+                self.pcie.prefetch_h2d(&self.cost, &self.clock, lt);
+                let t = self.clock.now();
+                if let Some(evicted) = self.cache.layers[l].install_little(e) {
+                    self.rec.emit(
+                        t,
+                        TraceEvent::LittleInstall {
+                            layer: l as u32,
+                            expert: e as u32,
+                            tier: lt.idx() as u8,
+                            delta: snap.delta(&self.pcie.stats),
+                        },
+                    );
+                    if let Some(v) = evicted {
+                        self.rec.emit(
+                            t,
+                            TraceEvent::LittleEvict { layer: l as u32, expert: v as u32 },
+                        );
+                    }
+                }
             }
         }
     }
@@ -426,6 +508,7 @@ impl Replica {
         if self.spec.prefetch {
             self.refresh_plan(&req.plan);
         }
+        self.install_little_set();
         self.cache.pin_set(req.id, &req.plan.per_layer);
         let now = self.clock.now();
         self.rec.emit(now, TraceEvent::RequestAdmit { seq: req.id });
@@ -450,6 +533,7 @@ impl Replica {
         if self.spec.prefetch {
             self.refresh_plan(&seq.req.plan);
         }
+        self.install_little_set();
         self.cache.pin_set(seq.req.id, &seq.req.plan.per_layer);
         let now = self.clock.now();
         self.rec.emit(now, TraceEvent::Resume { seq: seq.req.id });
@@ -537,6 +621,7 @@ impl Replica {
     fn step_once(&mut self) {
         debug_assert!(!self.in_flight.is_empty());
         let quant = self.spec.quant;
+        let tier = quant.idx() as u8;
         let n_layers = self.spec.n_layers;
         let counts: Vec<usize> =
             self.in_flight.iter().map(|seq| self.tokens_this_step(seq)).collect();
@@ -564,6 +649,8 @@ impl Replica {
                 for (l, experts) in layers.iter().enumerate().take(n_layers) {
                     for &e in experts {
                         assignments_by_layer[l] += 1;
+                        self.total_assignments += 1;
+                        self.route_counts[l][e] += 1;
                         if !pinned_by_layer[l].contains(&e) {
                             pinned_by_layer[l].push(e);
                         }
@@ -591,7 +678,7 @@ impl Replica {
                 if out.resident {
                     self.rec.emit(
                         now,
-                        TraceEvent::TransferLanded { layer: tl as u32, expert: te as u32 },
+                        TraceEvent::TransferLanded { layer: tl as u32, expert: te as u32, tier },
                     );
                     if out.loaded {
                         self.rec.emit(
@@ -616,7 +703,11 @@ impl Replica {
                 }
             }
             // resolve residency: hits are free, an in-flight prefetch
-            // pays the residual, cold misses demand-transfer and stall
+            // pays the residual, cold misses demand-transfer and stall —
+            // unless the big-little fallback serves the miss degraded
+            // from a resident little copy at zero stall
+            let mut degraded_assigns = 0usize;
+            let mut degraded_set: Vec<usize> = Vec::new();
             for (seq, &c) in self.in_flight.iter().zip(&counts) {
                 for step in seq.step..seq.step + c {
                     let Some(experts) = seq.req.routing.get(step).and_then(|s| s.get(l)) else {
@@ -628,6 +719,30 @@ impl Replica {
                             continue;
                         }
                         let (l32, e32) = (l as u32, e as u32);
+                        if let Some(lt) = self.spec.little_tier {
+                            if self.cache.layers[l].has_little(e) {
+                                let now = self.clock.now();
+                                let wait = self.pcie.residual_of(l, e, now).unwrap_or_else(|| {
+                                    self.pcie.demand_estimate(&self.cost, now, quant)
+                                });
+                                if wait > self.spec.fallback_threshold {
+                                    self.degraded_execs += 1;
+                                    degraded_assigns += 1;
+                                    if !degraded_set.contains(&e) {
+                                        degraded_set.push(e);
+                                    }
+                                    self.rec.emit(
+                                        now,
+                                        TraceEvent::DegradedExec {
+                                            layer: l32,
+                                            expert: e32,
+                                            tier: lt.idx() as u8,
+                                        },
+                                    );
+                                    continue;
+                                }
+                            }
+                        }
                         let snap = PcieSnap::of(&self.pcie.stats);
                         if self.pcie.wait_for(l, e, &mut self.clock).is_some() {
                             // the claim consumed the transfer's one
@@ -639,6 +754,7 @@ impl Replica {
                                 TraceEvent::DemandStall {
                                     layer: l32,
                                     expert: e32,
+                                    tier,
                                     residual: true,
                                     delta: snap.delta(&self.pcie.stats),
                                 },
@@ -654,7 +770,7 @@ impl Replica {
                             // either way, so the transfer always lands
                             self.rec.emit(
                                 now,
-                                TraceEvent::TransferLanded { layer: l32, expert: e32 },
+                                TraceEvent::TransferLanded { layer: l32, expert: e32, tier },
                             );
                             if out.loaded {
                                 self.rec.emit(
@@ -681,6 +797,7 @@ impl Replica {
                             TraceEvent::DemandStall {
                                 layer: l32,
                                 expert: e32,
+                                tier,
                                 residual: false,
                                 delta: snap.delta(&self.pcie.stats),
                             },
@@ -730,17 +847,32 @@ impl Replica {
                         TraceEvent::PrefetchIssued {
                             layer: nl as u32,
                             expert: e as u32,
+                            tier,
                             delta: snap.delta(&self.pcie.stats),
                         },
                     );
                 }
             }
             // this layer's compute: attention over every consumed token
-            // plus grouped execution of the step's distinct working set
+            // plus grouped execution of the step's distinct working set.
+            // Degraded assignments execute from the little-tier copies
+            // (cheaper weight streaming, dequant overhead included); the
+            // rest stream the full-tier working set.
             let exec = if pinned_by_layer[l].is_empty() {
                 0.0
-            } else {
+            } else if degraded_assigns == 0 {
                 self.cost.expert_exec_time(pinned_by_layer[l].len(), assignments_by_layer[l], quant)
+            } else {
+                let lt = self.spec.little_tier.expect("degraded exec implies a little tier");
+                let big_assigns = assignments_by_layer[l] - degraded_assigns;
+                let mut exec =
+                    self.cost.expert_exec_time(degraded_set.len(), degraded_assigns, lt);
+                if big_assigns > 0 {
+                    let big_unique =
+                        pinned_by_layer[l].len().saturating_sub(degraded_set.len()).max(1);
+                    exec += self.cost.expert_exec_time(big_unique, big_assigns, quant);
+                }
+                exec
             };
             self.clock.advance(self.cost.attn_time(t) + exec);
         }

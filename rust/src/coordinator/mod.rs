@@ -199,6 +199,12 @@ pub trait Decoder {
     fn take_trace(&mut self) -> Option<Trace> {
         None
     }
+    /// Fraction of routed (token, expert) assignments the big-little
+    /// fallback served from a degraded low-bit little copy (quality
+    /// proxy; see `quant`).  Decoders without the fallback report 0.0.
+    fn degraded_token_frac(&self) -> f64 {
+        0.0
+    }
 }
 
 /// How the scheduler fills decode slots.
@@ -331,6 +337,9 @@ pub struct ServerStats {
     pub pcie_overlapped_seconds: f64,
     /// `overlapped / (overlapped + stalled)` — the overlap fraction.
     pub pcie_overlap_fraction: f64,
+    /// Fraction of routed (token, expert) assignments served degraded by
+    /// the big-little fallback (0.0 when the fallback is off; in [0, 1]).
+    pub degraded_token_frac: f64,
     /// The decoder's drained event stream when [`ServerConfig::trace`]
     /// was set (and the decoder supports recording), else `None`.
     pub trace: Option<Trace>,
@@ -564,6 +573,7 @@ impl<D: Decoder> Scheduler<D> {
         self.stats.pcie_stall_seconds = ts.stall_time;
         self.stats.pcie_overlapped_seconds = ts.overlapped_time;
         self.stats.pcie_overlap_fraction = ts.overlap_fraction();
+        self.stats.degraded_token_frac = self.dec.degraded_token_frac();
         self.stats.trace = self.dec.take_trace();
         if !self.batch_sizes.is_empty() {
             self.stats.mean_batch_size =
@@ -931,6 +941,9 @@ mod tests {
         let stats = server.shutdown().unwrap();
         assert_eq!(rx.recv().unwrap().tokens, vec![7]);
         assert_eq!(stats.requests, 1);
+        // decoders without the big-little fallback report a zero quality
+        // proxy through the defaulted trait accessor
+        assert_eq!(stats.degraded_token_frac, 0.0);
     }
 
     #[test]

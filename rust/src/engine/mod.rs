@@ -7,7 +7,11 @@
 //!      residual wait on an in-flight lookahead prefetch (`--lookahead`,
 //!      the layer-ahead transfer pipeline), demand PCIe transfer
 //!      (stalling the simulated clock, Eq. 3), CPU execution (Fiddler),
-//!      or sparsity skip (FLoE);
+//!      sparsity skip (FLoE), or — when a little-tier copy of the expert
+//!      is resident and the expected wait on the full transfer exceeds
+//!      `--fallback-threshold` — a *degraded* execution from the low-bit
+//!      little copy at zero stall (the big-little fallback; every such
+//!      assignment is counted into `degraded_token_frac`);
 //!   4. `expert_group` (PJRT, the Pallas kernel) executes the routed
 //!      experts with the *actual* resident weights (dequantized if the
 //!      policy quantizes residency) — quality effects are real;
@@ -53,6 +57,7 @@ use crate::policies::{PolicyConfig, Prefetch};
 use crate::predictor::{
     predict_next_layer, predict_plan, predict_plan_batch, profile_plan, PrefetchPlan,
 };
+use crate::quant::{dequantize, quantize};
 use crate::runtime::Runtime;
 use crate::tensor::add;
 use crate::trace::{PcieSnap, Recorder, Trace, TraceEvent};
@@ -178,6 +183,12 @@ pub struct DecodeSession {
     pub trace: ActivationTrace,
     pub cpu_execs: u64,
     pub sparsity_skips: u64,
+    /// (token, expert) assignments served by a degraded little-tier copy
+    /// (big-little fallback) instead of the full-tier weights.
+    pub degraded_execs: u64,
+    /// All routed (token, expert) assignments — the denominator of
+    /// [`DecodeSession::degraded_token_frac`].
+    pub total_assignments: u64,
     seqs: Vec<SeqState>,
     next_id: u64,
     /// Prompt tokens a prefilling sequence may consume in one step (≥ 1;
@@ -254,6 +265,12 @@ impl DecodeSession {
         self.rec.take()
     }
 
+    /// Fraction of routed assignments served degraded by the big-little
+    /// fallback (0.0 whenever the fallback is disabled; always in [0, 1]).
+    pub fn degraded_token_frac(&self) -> f64 {
+        crate::metrics::degraded_frac(self.degraded_execs, self.total_assignments)
+    }
+
     /// Cache/transfer snapshot (callers fill in `requests`).
     pub fn report_base(&self) -> Report {
         Report {
@@ -261,6 +278,7 @@ impl DecodeSession {
             cache: self.cache.total_stats(),
             transfers: self.pcie.stats.clone(),
             misses_per_layer: self.cache.misses_per_layer(),
+            degraded_token_frac: self.degraded_token_frac(),
             wall_seconds: 0.0,
         }
     }
@@ -275,6 +293,8 @@ struct StepCtx<'s> {
     trace: &'s mut ActivationTrace,
     cpu_execs: &'s mut u64,
     sparsity_skips: &'s mut u64,
+    degraded_execs: &'s mut u64,
+    total_assignments: &'s mut u64,
     bufs: &'s std::cell::RefCell<BufMap>,
     buf_hits: &'s std::cell::Cell<u64>,
     rec: &'s mut Recorder,
@@ -309,26 +329,53 @@ impl<'a> Engine<'a> {
     }
 
     /// Stacked routed-set weights as device buffers, memoized in the
-    /// session (`memo`/`hits` are the session's cells).
+    /// session (`memo`/`hits` are the session's cells).  `degraded[i]`
+    /// marks experts served by the big-little fallback: their weights go
+    /// through a quantize→dequantize roundtrip at the little tier before
+    /// upload, so the quality effect of a degraded execution is real.
+    /// Degraded entries memoize under ids offset by `n_experts`, so a
+    /// full-precision dispatch of the same routed set never aliases a
+    /// degraded one.
     fn stacked_buffers(
         &self,
         memo: &std::cell::RefCell<BufMap>,
         hits: &std::cell::Cell<u64>,
         layer: usize,
         idx: &[usize],
+        degraded: &[bool],
     ) -> Result<std::rc::Rc<StackedBufs>> {
-        let key = (layer, idx.to_vec());
+        let key_ids: Vec<usize> = idx
+            .iter()
+            .zip(degraded)
+            .map(|(&e, &dg)| if dg { e + self.cfg.n_experts } else { e })
+            .collect();
+        let key = (layer, key_ids);
         if let Some(hit) = memo.borrow().get(&key) {
             hits.set(hits.get() + 1);
             return Ok(hit.clone());
         }
         let st = self.weights.stack_experts(layer, idx, self.cfg.d_model, self.cfg.d_ff)?;
         let (k, d, dff) = (idx.len(), self.cfg.d_model, self.cfg.d_ff);
-        let host = |lit: &xla::Literal| lit.to_vec::<f32>();
+        let mut wg = st.wg.to_vec::<f32>()?;
+        let mut wu = st.wu.to_vec::<f32>()?;
+        let mut wd = st.wd.to_vec::<f32>()?;
+        if let Some(lt) = self.policy.little_tier {
+            let per = d * dff; // elements per expert in each stacked matrix
+            for (i, &dg) in degraded.iter().enumerate() {
+                if !dg {
+                    continue;
+                }
+                for w in [&mut wg, &mut wu, &mut wd] {
+                    let s = &mut w[i * per..(i + 1) * per];
+                    let rt = dequantize(&quantize(s, lt));
+                    s.copy_from_slice(&rt);
+                }
+            }
+        }
         let bufs = std::rc::Rc::new(StackedBufs {
-            wg: self.rt.to_device(&host(&st.wg)?, &[k, dff, d])?,
-            wu: self.rt.to_device(&host(&st.wu)?, &[k, dff, d])?,
-            wd: self.rt.to_device(&host(&st.wd)?, &[k, d, dff])?,
+            wg: self.rt.to_device(&wg, &[k, dff, d])?,
+            wu: self.rt.to_device(&wu, &[k, dff, d])?,
+            wd: self.rt.to_device(&wd, &[k, d, dff])?,
         });
         let mut cache = memo.borrow_mut();
         if cache.len() >= BUF_CACHE_CAP {
@@ -350,22 +397,28 @@ impl<'a> Engine<'a> {
         layer: usize,
         idx: &[usize],
         gates: &[f32],
+        degraded: &[bool],
         h2: &xla::Literal,
     ) -> Result<Vec<f32>> {
-        let (mut idx_p, mut gates_p);
-        let (idx, gates) = if idx.len() < self.cfg.top_k {
+        let (mut idx_p, mut gates_p, mut deg_p);
+        let (idx, gates, degraded) = if idx.len() < self.cfg.top_k {
             idx_p = idx.to_vec();
             gates_p = gates.to_vec();
+            deg_p = degraded.to_vec();
             while idx_p.len() < self.cfg.top_k {
                 idx_p.push(idx[0]);
                 gates_p.push(0.0);
+                deg_p.push(degraded[0]);
             }
-            (&idx_p[..], &gates_p[..])
+            (&idx_p[..], &gates_p[..], &deg_p[..])
         } else {
-            (idx, gates)
+            (idx, gates, degraded)
         };
-        if self.use_buffers {
-            let bufs = self.stacked_buffers(memo, hits, layer, idx)?;
+        // degraded selections always take the buffered path: the
+        // quantize→dequantize roundtrip happens on the host copy before
+        // upload, which the literal-direct path has no hook for
+        if self.use_buffers || degraded.iter().any(|&d| d) {
+            let bufs = self.stacked_buffers(memo, hits, layer, idx, degraded)?;
             self.rt.expert_group_b(gates, h2, &bufs.wg, &bufs.wu, &bufs.wd)
         } else {
             let st = self.weights.stack_experts(layer, idx, self.cfg.d_model, self.cfg.d_ff)?;
@@ -389,7 +442,10 @@ impl<'a> Engine<'a> {
 
     fn new_cache(&self) -> ExpertCache {
         let caps = self.policy.effective_layer_capacities(self.cfg.n_layers, self.cfg.n_experts);
-        ExpertCache::with_capacities(self.cfg.n_experts, &caps, self.policy.eviction)
+        let mut cache =
+            ExpertCache::with_capacities(self.cfg.n_experts, &caps, self.policy.eviction);
+        cache.set_tiers(self.policy.quant, self.policy.little_tier);
+        cache
     }
 
     fn prefetch_plan(&self, prompts: &[Vec<usize>]) -> Result<PrefetchPlan> {
@@ -474,19 +530,52 @@ impl<'a> Engine<'a> {
     /// `pinned` is the whole chunk's union expert set at this layer, so
     /// resolving one chunk token can never evict an expert another chunk
     /// token executes.
+    ///
+    /// Returns the experts this token will execute *degraded* from their
+    /// little-tier copies (empty unless the big-little fallback fires).
     fn resolve_residency(
         &self,
         layer: usize,
         selected: &[(usize, f32)],
         pinned: &[usize],
         ctx: &mut StepCtx,
-    ) {
+    ) -> Vec<usize> {
         let quant = self.policy.quant;
+        let tier = quant.idx() as u8;
         let l32 = layer as u32;
+        let mut degraded = Vec::new();
         for &(e, _) in selected {
             let hit = ctx.cache.layer(layer).request(e);
             if hit {
                 continue;
+            }
+            // big-little fallback: a miss whose little-tier copy is
+            // resident may execute degraded at zero stall when the
+            // expected wait on the full-tier transfer (residual of an
+            // in-flight prefetch, else a cold demand estimate) exceeds
+            // the policy threshold.  The big copy is *not* installed —
+            // an in-flight transfer keeps draining and lands normally.
+            if let Some(lt) = self.policy.little_tier {
+                if ctx.cache.layers[layer].has_little(e) {
+                    let now = ctx.clock.now();
+                    let wait = ctx
+                        .pcie
+                        .residual_of(layer, e, now)
+                        .unwrap_or_else(|| ctx.pcie.demand_estimate(&self.cost, now, quant));
+                    if wait > self.policy.fallback_threshold {
+                        *ctx.degraded_execs += 1;
+                        ctx.rec.emit(
+                            now,
+                            TraceEvent::DegradedExec {
+                                layer: l32,
+                                expert: e as u32,
+                                tier: lt.idx() as u8,
+                            },
+                        );
+                        degraded.push(e);
+                        continue;
+                    }
+                }
             }
             let snap = PcieSnap::of(&ctx.pcie.stats);
             if ctx.pcie.wait_for(layer, e, ctx.clock).is_some() {
@@ -498,13 +587,14 @@ impl<'a> Engine<'a> {
                     TraceEvent::DemandStall {
                         layer: l32,
                         expert: e as u32,
+                        tier,
                         residual: true,
                         delta: snap.delta(&ctx.pcie.stats),
                     },
                 );
                 let out =
                     ctx.pcie.commit_arrival(ctx.cache.layer(layer), &self.cost, quant, e, pinned);
-                ctx.rec.emit(t, TraceEvent::TransferLanded { layer: l32, expert: e as u32 });
+                ctx.rec.emit(t, TraceEvent::TransferLanded { layer: l32, expert: e as u32, tier });
                 if out.loaded {
                     ctx.rec.emit(t, TraceEvent::CacheInsert { layer: l32, expert: e as u32 });
                     if let Some(v) = out.evicted {
@@ -537,6 +627,7 @@ impl<'a> Engine<'a> {
                 TraceEvent::DemandStall {
                     layer: l32,
                     expert: e as u32,
+                    tier,
                     residual: false,
                     delta: snap.delta(&ctx.pcie.stats),
                 },
@@ -556,6 +647,7 @@ impl<'a> Engine<'a> {
                 }
             }
         }
+        degraded
     }
 
     /// Land every lookahead transfer that has completed by now
@@ -568,13 +660,16 @@ impl<'a> Engine<'a> {
     fn land_arrived(&self, layer: usize, pinned: &[usize], ctx: &mut StepCtx) {
         let now = ctx.clock.now();
         let quant = self.policy.quant;
+        let tier = quant.idx() as u8;
         for (tl, te) in ctx.pcie.drain_arrived(now) {
             let pin: &[usize] = if tl == layer { pinned } else { &[] };
             let out = ctx.pcie.commit_arrival(ctx.cache.layer(tl), &self.cost, quant, te, pin);
             if out.resident {
                 // the in-flight entry is consumed: the transfer landed
-                ctx.rec
-                    .emit(now, TraceEvent::TransferLanded { layer: tl as u32, expert: te as u32 });
+                ctx.rec.emit(
+                    now,
+                    TraceEvent::TransferLanded { layer: tl as u32, expert: te as u32, tier },
+                );
                 if out.loaded {
                     ctx.rec.emit(
                         now,
@@ -633,6 +728,7 @@ impl<'a> Engine<'a> {
                     TraceEvent::PrefetchIssued {
                         layer: nl as u32,
                         expert: e as u32,
+                        tier: self.policy.quant.idx() as u8,
                         delta: snap.delta(&ctx.pcie.stats),
                     },
                 );
@@ -700,6 +796,7 @@ impl<'a> Engine<'a> {
                 for &(e, _) in &sel {
                     ctx.trace.counts[l][e] += 1;
                     assignments += 1;
+                    *ctx.total_assignments += 1;
                     if !union.contains(&e) {
                         union.push(e);
                     }
@@ -714,9 +811,12 @@ impl<'a> Engine<'a> {
             // residency: each token resolves against the cache with the
             // chunk union pinned — a miss transfers once (an in-flight
             // prefetch pays only its residual), later chunk tokens hit,
-            // and nothing the chunk executes can be evicted
+            // and nothing the chunk executes can be evicted.  Tokens the
+            // big-little fallback serves degraded come back per token so
+            // the exec below uses the roundtripped little-tier weights.
+            let mut degraded_tok: Vec<Vec<usize>> = Vec::with_capacity(c);
             for sel in &selections {
-                self.resolve_residency(l, sel, &union, ctx);
+                degraded_tok.push(self.resolve_residency(l, sel, &union, ctx));
             }
             // layer-ahead pipeline: issue the next layers' predicted
             // experts now, so the transfers overlap this layer's
@@ -734,7 +834,8 @@ impl<'a> Engine<'a> {
                 } else {
                     let idx: Vec<usize> = sel.iter().map(|(e, _)| *e).collect();
                     let gates: Vec<f32> = sel.iter().map(|(_, g)| *g).collect();
-                    let y = self.run_experts(ctx.bufs, ctx.buf_hits, l, &idx, &gates, &h2)?;
+                    let dg: Vec<bool> = idx.iter().map(|e| degraded_tok[i].contains(e)).collect();
+                    let y = self.run_experts(ctx.bufs, ctx.buf_hits, l, &idx, &gates, &dg, &h2)?;
                     xs[i] = add(&h_res, &y);
                 }
             }
@@ -797,6 +898,8 @@ impl<'a> Engine<'a> {
             trace: ActivationTrace::new(self.cfg.n_layers, self.cfg.n_experts),
             cpu_execs: 0,
             sparsity_skips: 0,
+            degraded_execs: 0,
+            total_assignments: 0,
             seqs: Vec::new(),
             next_id: 0,
             prefill_chunk: 1,
@@ -817,6 +920,9 @@ impl<'a> Engine<'a> {
     fn attach_plan(&self, sess: &mut DecodeSession, owner: u64, plan: &PrefetchPlan) {
         sess.cache.pin_set(owner, &plan.per_layer);
         sess.rec.emit(sess.clock.now(), TraceEvent::PinSet { owner });
+        // refresh the little store before the big-tier top-up: the
+        // fallback works under any prefetch policy, including None
+        self.install_little_set(sess);
         if self.policy.prefetch == Prefetch::None {
             return;
         }
@@ -859,6 +965,7 @@ impl<'a> Engine<'a> {
                     TraceEvent::PrefetchIssued {
                         layer: l as u32,
                         expert: e as u32,
+                        tier: self.policy.quant.idx() as u8,
                         delta: snap.delta(&sess.pcie.stats),
                     },
                 );
@@ -869,6 +976,58 @@ impl<'a> Engine<'a> {
         // (non-blocking, pinned memory — §3.2).  Early demand misses
         // naturally serialize behind the in-flight prefetch traffic
         // via the link-occupancy model in `pcie`.
+    }
+
+    /// Refresh the little store: per layer, rank experts by the session's
+    /// observed activation counts (the predictor's signal accumulates
+    /// there) and install little-tier copies of the hottest ones — up to
+    /// the store's carved capacity, skipping big residents.  Installs
+    /// ride the untracked [`TransferEngine::prefetch_h2d`] path at the
+    /// little tier and emit [`TraceEvent::LittleInstall`] carrying the
+    /// byte delta, so `Trace::reconcile` balances.  A displaced little
+    /// copy is simply dropped (no D2H: little copies are derived,
+    /// read-only data) and emits [`TraceEvent::LittleEvict`].
+    fn install_little_set(&self, sess: &mut DecodeSession) {
+        let Some(lt) = self.policy.little_tier else {
+            return;
+        };
+        for l in 0..self.cfg.n_layers {
+            let cap = sess.cache.layers[l].little_capacity();
+            if cap == 0 {
+                continue;
+            }
+            let mut ranked: Vec<usize> = (0..self.cfg.n_experts).collect();
+            ranked.sort_by_key(|&e| std::cmp::Reverse(sess.trace.counts[l][e]));
+            // big residents never need a little copy — filter before
+            // taking, so the store fills with the hottest *eligible* set
+            ranked.retain(|&e| !sess.cache.layers[l].contains(e));
+            ranked.truncate(cap);
+            for e in ranked {
+                if sess.cache.layers[l].has_little(e) {
+                    continue;
+                }
+                let snap = PcieSnap::of(&sess.pcie.stats);
+                sess.pcie.prefetch_h2d(&self.cost, &sess.clock, lt);
+                let t = sess.clock.now();
+                if let Some(evicted) = sess.cache.layer(l).install_little(e) {
+                    sess.rec.emit(
+                        t,
+                        TraceEvent::LittleInstall {
+                            layer: l as u32,
+                            expert: e as u32,
+                            tier: lt.idx() as u8,
+                            delta: snap.delta(&sess.pcie.stats),
+                        },
+                    );
+                    if let Some(v) = evicted {
+                        sess.rec.emit(
+                            t,
+                            TraceEvent::LittleEvict { layer: l as u32, expert: v as u32 },
+                        );
+                    }
+                }
+            }
+        }
     }
 
     /// Admit one sequence into the session — mid-flight admission is the
@@ -1013,6 +1172,8 @@ impl<'a> Engine<'a> {
                 trace: &mut sess.trace,
                 cpu_execs: &mut sess.cpu_execs,
                 sparsity_skips: &mut sess.sparsity_skips,
+                degraded_execs: &mut sess.degraded_execs,
+                total_assignments: &mut sess.total_assignments,
                 bufs: &sess.buf_cache,
                 buf_hits: &sess.buf_hits,
                 rec: &mut sess.rec,
@@ -1120,6 +1281,7 @@ impl<'a> Engine<'a> {
         let mut pcie = TransferEngine::new();
         let mut trace = ActivationTrace::new(self.cfg.n_layers, self.cfg.n_experts);
         let (mut cpu, mut skips) = (0u64, 0u64);
+        let (mut deg, mut assigns) = (0u64, 0u64);
         let bufs = std::cell::RefCell::new(BufMap::new());
         let buf_hits = std::cell::Cell::new(0u64);
         let mut rec = Recorder::off();
@@ -1134,6 +1296,8 @@ impl<'a> Engine<'a> {
                 trace: &mut trace,
                 cpu_execs: &mut cpu,
                 sparsity_skips: &mut skips,
+                degraded_execs: &mut deg,
+                total_assignments: &mut assigns,
                 bufs: &bufs,
                 buf_hits: &buf_hits,
                 rec: &mut rec,

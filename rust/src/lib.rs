@@ -14,22 +14,33 @@
 //! * [`util`]        — from-scratch JSON / CLI / RNG / property-testing
 //!                     (offline image carries no serde/clap/proptest).
 //! * [`tensor`]      — host tensors + `.npz` weight loading.
-//! * [`quant`]       — INT4/INT3 group quantization (HQQ stand-in).
+//! * [`quant`]       — INT4/INT3 group quantization (HQQ stand-in), now
+//!                     a first-class serving dimension: per-tier byte
+//!                     costs (`QuantMode::cost_units`) drive the cache's
+//!                     byte budgets, PCIe transfer durations and the
+//!                     big-little fallback's degraded numerics
+//!                     (`--quant` / `--little-tier`, Table 12,
+//!                     `ext_quant`).
 //! * [`clock`]       — simulated clock + GPU/PCIe cost models (paper
 //!                     Eq. 3), incl. the chunked-prefill exec term
 //!                     (`CostModel::chunk_exec_time`).
 //! * [`vram`]        — VRAM budget ledger (capacity derivation, Fig. 11).
 //! * [`pcie`]        — asynchronous H2D/D2H transfer pipeline: FIFO link
 //!                     with tracked in-flight `(layer, expert)` entries,
-//!                     residual waits on caught prefetches, and the
+//!                     residual waits on caught prefetches, the
 //!                     stall/overlap accounting split (Fig. 1a,
-//!                     `ext_overlap`).
+//!                     `ext_overlap`), and byte-accurate per-tier
+//!                     transfer costing with per-tier byte counters the
+//!                     trace audits reconcile to 1e-6.
 //! * [`cache`]       — per-layer expert caches: LRU / LFU / γ-discounted
 //!                     (paper Def. C.1), the reserve/commit path for
-//!                     in-flight prefetch residency, and the
+//!                     in-flight prefetch residency, the
 //!                     scheduler-owned pin ledger (`pin_set`/`release`)
 //!                     protecting live sequences' planned hot sets from
-//!                     bulk admissions and lookahead commits.
+//!                     bulk admissions and lookahead commits, and
+//!                     byte-budgeted per-tier residency with an optional
+//!                     little store of low-bit fallback copies
+//!                     (`enable_little`).
 //! * [`moe`]         — model config + weight store (base / fine-tuned).
 //! * [`runtime`]     — PJRT executable loading & dispatch (xla crate).
 //! * [`predictor`]   — activation-predictor inference + prefetch sets
@@ -41,8 +52,10 @@
 //!                     suspend/resume with bit-identical continuation,
 //!                     chunked prefill via `prefill_chunk`, layer-ahead
 //!                     lookahead prefetch with residual waits, the
-//!                     session-persistent device-buffer memo) with
-//!                     `decode`/`decode_batch` as thin wrappers.
+//!                     session-persistent device-buffer memo, and the
+//!                     big-little fallback executing degraded low-bit
+//!                     copies at zero stall under `--fallback-threshold`)
+//!                     with `decode`/`decode_batch` as thin wrappers.
 //! * [`policies`]    — MELINOE + Fiddler / Mixtral-Offloading /
 //!                     DeepSpeed-MoE / FLoE / MoE-Infinity.
 //! * [`coordinator`] — request queue + step-level scheduler: continuous

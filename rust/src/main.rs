@@ -31,7 +31,7 @@ commands:
                      (table1 fig1a fig1b fig3 table2 table3 fig4 fig5 table4
                       table5 table11 fig6 heatmaps fig11 table12 fig12 fig13
                       table13 ext_layerwise ext_cluster ext_continuous
-                      ext_prefill ext_overlap ext_preempt)
+                      ext_prefill ext_overlap ext_preempt ext_quant)
   serve              step-level serving loop over the eval workload
   cluster            multi-replica serving simulation: compare balancers
   decode             decode one prompt, print tokens + transfer stats
@@ -73,6 +73,22 @@ common options:
                      stream and write a Chrome/Perfetto trace JSON (open
                      in ui.perfetto.dev; one lane per replica plus a
                      dispatcher lane; docs/OBSERVABILITY.md)
+  --quant <t>        serve/cluster/decode: precision tier resident experts
+                     are stored and executed at — fp16 | int4 | int3
+                     (default: the policy's / replica spec's own tier);
+                     lower tiers shrink per-expert bytes, so the same
+                     VRAM budget holds proportionally more experts and
+                     PCIe transfers cost proportionally less
+  --little-tier <t>  serve/cluster: keep low-bit \"little\" copies of the
+                     hottest experts resident alongside the --quant
+                     copies; must be strictly fewer bits than --quant
+                     (enables the big-little fallback, docs/SERVING.md)
+  --fallback-threshold <s>
+                     serve/cluster: expected transfer wait (simulated
+                     seconds) above which a demand miss executes the
+                     resident little copy at zero stall instead of
+                     waiting (default 0 = any wait falls back); degraded
+                     executions surface as degraded_token_frac
 
 cluster options:
   --replicas <n>     fleet size (default 4)
@@ -97,6 +113,32 @@ fn policy_by_name(name: &str, cap: usize, top_k: usize, ft: &str) -> Result<Poli
         "base" => PolicyConfig::base_offload(cap),
         _ => return Err(anyhow!("unknown policy {name:?}")),
     })
+}
+
+/// Parse the precision flags shared by `serve` and `cluster`, resolving
+/// an omitted `--quant` to `default_quant` (each policy / replica spec
+/// carries its own serving tier, so the flag is an *override*, not a
+/// reset).  Surfaces `QuantMode::parse` errors (which list the valid
+/// tiers) verbatim, and rejects a `--little-tier` that is not strictly
+/// smaller than the effective serving tier.
+fn quant_args(
+    args: &Args,
+    default_quant: QuantMode,
+) -> Result<(QuantMode, Option<QuantMode>, f64)> {
+    let quant = match args.get("quant") {
+        Some(q) => QuantMode::parse(q)?,
+        None => default_quant,
+    };
+    let little = match args.get("little-tier") {
+        Some(l) => {
+            let lt = QuantMode::parse(l)?;
+            melinoe::quant::validate_little_tier(quant, lt)?;
+            Some(lt)
+        }
+        None => None,
+    };
+    let threshold = args.get_f64("fallback-threshold", 0.0)?.max(0.0);
+    Ok((quant, little, threshold))
 }
 
 /// Owns everything the serving thread needs (constructed in-thread; PJRT
@@ -164,6 +206,10 @@ impl Decoder for OwnedEngine {
     fn take_trace(&mut self) -> Option<melinoe::trace::Trace> {
         self.sess.take_trace()
     }
+
+    fn degraded_token_frac(&self) -> f64 {
+        self.sess.degraded_token_frac()
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -187,6 +233,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // load the prompts up-front (the server thread owns the engine)
     let ctx0 = Ctx::load(&melinoe::artifacts_dir(), &preset)?;
     let eval = ctx0.eval_set(&ds)?;
+    // resolve --quant/--little-tier against the policy's own serving
+    // tier (a probe config: the real policy is built on the server
+    // thread), so omitting --quant keeps each baseline's native tier
+    let ft0 = if ds == "dolly" { "ft_dolly" } else { "ft_gsm" };
+    let default_quant =
+        policy_by_name(&policy_name, ctx0.cfg.cache_capacity, ctx0.cfg.top_k, ft0)?.quant;
+    let (quant, little, fallback_threshold) = quant_args(args, default_quant)?;
     let prompts: Vec<Vec<usize>> = eval
         .samples
         .iter()
@@ -211,6 +264,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if has_lookahead {
                 policy = policy.with_lookahead(lookahead);
             }
+            policy = policy.with_quant(quant).with_fallback(little, fallback_threshold);
             let parts = ctx.parts(&policy, &ds2)?;
             Ok(OwnedEngine::new(ctx, parts, gpu2))
         },
@@ -270,6 +324,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     t.row(vec!["preempted wait p50/p95/p99 (ms)".into(), stats.preempted_wait.cell(1e3)]);
     t.row(vec!["pcie stall (s)".into(), fmt2(stats.pcie_stall_seconds)]);
     t.row(vec!["pcie overlap frac".into(), format!("{:.3}", stats.pcie_overlap_fraction)]);
+    t.row(vec!["quant".into(), quant.name().into()]);
+    t.row(vec![
+        "little tier / fallback".into(),
+        match little {
+            Some(lt) => format!("{} / {}s", lt.name(), fallback_threshold),
+            None => "off".into(),
+        },
+    ]);
+    t.row(vec!["degraded token frac".into(), format!("{:.4}", stats.degraded_token_frac)]);
     t.row(vec!["wall seconds".into(), fmt2(wall)]);
     println!("{}", t.render());
     if let Some(path) = &trace_path {
@@ -347,7 +410,6 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let preempt = PreemptPolicy::parse(args.get_or("preempt", "off"))?;
     let high_frac = args.get_f64("high-frac", 0.0)?.clamp(0.0, 1.0);
     let low_frac = args.get_f64("low-frac", 0.0)?.clamp(0.0, 1.0 - high_frac);
-
     let mut cfg = cluster::ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu, seed)
         .with_scheduler(scheduler)
         .with_prefill_chunk(prefill_chunk)
@@ -355,6 +417,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         .with_preempt(preempt)
         .with_priority_mix(PriorityMix { high: high_frac, low: low_frac })
         .with_trace(args.get("trace").is_some());
+    // resolve --quant against the spec's own serving tier, so omitting
+    // the flag keeps the VRAM-derived default; with_quant preserves the
+    // byte budget by rescaling the per-layer slot count
+    let (quant, little, fallback_threshold) = quant_args(args, cfg.spec.quant)?;
+    cfg = cfg.with_quant(quant).with_fallback(little, fallback_threshold);
     cfg.max_batch = max_batch;
     cfg.workload.output = if long_frac > 0.0 {
         OutputLen::Bimodal { short: (tokens / 8).max(1), long: tokens, long_frac }
@@ -382,11 +449,17 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         Arrival::Poisson(r) => format!("poisson {r:.2} req/s"),
         Arrival::Uniform(g) => format!("uniform {g:.3}s gap"),
     };
+    let tiers_desc = match cfg.spec.little_tier {
+        Some(lt) => {
+            format!("{} + little {} @ {}s", quant.name(), lt.name(), cfg.spec.fallback_threshold)
+        }
+        None => quant.name().to_string(),
+    };
     println!(
         "cluster: {} replicas × C={} experts/layer, {} requests over {} tasks ({}), \
-         {} slots/replica, {:?} scheduler, prefill chunk {}, lookahead {}",
+         {} slots/replica, {:?} scheduler, prefill chunk {}, lookahead {}, quant {}",
         cfg.replicas, cfg.spec.capacity, n_requests, n_tasks, arrival_desc, cfg.max_batch,
-        scheduler, cfg.prefill_chunk, cfg.spec.lookahead
+        scheduler, cfg.prefill_chunk, cfg.spec.lookahead, tiers_desc
     );
 
     let which = args.get_or("balancer", "all");

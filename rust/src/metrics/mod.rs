@@ -87,6 +87,11 @@ pub struct Report {
     pub transfers: TransferStats,
     pub misses_per_layer: f64,
     pub wall_seconds: f64,
+    /// Quality proxy for the big-little fallback: the fraction of routed
+    /// (token, expert) assignments served by a degraded low-bit little
+    /// copy instead of the full-tier weights.  0.0 whenever the fallback
+    /// is disabled; always in [0, 1].
+    pub degraded_token_frac: f64,
 }
 
 impl Report {
@@ -131,6 +136,15 @@ impl Report {
         let v: Vec<f64> = self.requests.iter().map(|r| r.sim_ttft).collect();
         Percentiles::of(&v)
     }
+}
+
+/// `degraded / total` guarded against empty runs: the canonical
+/// `degraded_token_frac` computation shared by engine and replica.
+pub fn degraded_frac(degraded: u64, total: u64) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    (degraded as f64 / total as f64).clamp(0.0, 1.0)
 }
 
 /// Simple fixed-width table printer for the repro harnesses.
@@ -321,6 +335,16 @@ mod tests {
         assert_eq!(overlap_fraction(-1.0, 2.0), 0.0);
         assert_eq!(overlap_fraction(f64::NAN, 1.0), 0.0);
         assert_eq!(overlap_fraction(f64::INFINITY, 1.0), 0.0);
+    }
+
+    #[test]
+    fn degraded_frac_bounded_and_zero_safe() {
+        assert_eq!(degraded_frac(0, 0), 0.0);
+        assert_eq!(degraded_frac(5, 0), 0.0);
+        assert_eq!(degraded_frac(0, 10), 0.0);
+        assert!((degraded_frac(3, 12) - 0.25).abs() < 1e-12);
+        assert_eq!(degraded_frac(12, 12), 1.0);
+        assert_eq!(Report::default().degraded_token_frac, 0.0);
     }
 
     #[test]

@@ -21,11 +21,11 @@
 //!   *residual* wait ([`TransferEngine::wait_for`]) instead of
 //!   re-paying the full transfer.
 //! * [`TransferEngine::prefetch_h2d`] — untracked non-blocking issue
-//!   (optimistic overlap credit, never settled against stall windows);
-//!   kept for barrier-style callers that pair it with
-//!   [`TransferEngine::sync_prefetches`].  No production path uses it —
-//!   new callers should prefer the tracked
-//!   [`TransferEngine::prefetch_expert`].
+//!   (optimistic overlap credit, never settled against stall windows).
+//!   Used for *little-copy* installs — background traffic that never
+//!   carries a claimable completion — and by barrier-style callers that
+//!   pair it with [`TransferEngine::sync_prefetches`]; decode-critical
+//!   traffic uses the tracked [`TransferEngine::prefetch_expert`].
 //!
 //! Accounting invariant: every transfer's duration lands in
 //! `h2d_seconds`; the split between `stall_time` (decode blocked) and
@@ -34,6 +34,14 @@
 //! moves the un-hidden residual share over to `stall_time`.  Counters
 //! feed Fig. 1a (transfer counts), the Tx/L columns of Table 3 /
 //! Figs. 12–13, and the overlap-fraction metric of `repro ext_overlap`.
+//!
+//! Transfers are *byte-accurate per tier*: every issue path takes the
+//! [`QuantMode`] of the payload, so an int4 expert charges ~9/32 of the
+//! fp16 link time and the per-tier byte counters
+//! ([`TransferStats::h2d_bytes_by_tier`]) let the repro sweeps report
+//! bytes-moved per precision alongside tok/s.  The sum of the per-tier
+//! counters always equals the aggregate byte counters (the trace
+//! `reconcile` audit checks this).
 
 use crate::cache::LayerCache;
 use crate::clock::{CostModel, SimClock};
@@ -52,6 +60,12 @@ pub struct TransferStats {
     pub d2h_count: u64,
     pub h2d_bytes: f64,
     pub d2h_bytes: f64,
+    /// H2D bytes split by payload tier, indexed by [`QuantMode::idx`]
+    /// (fp16/int4/int3).  Sums to `h2d_bytes` — `Trace::reconcile`
+    /// asserts the balance to 1e-6.
+    pub h2d_bytes_by_tier: [f64; 3],
+    /// D2H bytes split by payload tier, indexed by [`QuantMode::idx`].
+    pub d2h_bytes_by_tier: [f64; 3],
     /// Sum of H2D transfer durations on the link (queue waits excluded).
     pub h2d_seconds: f64,
     /// Decode time lost blocked on transfers: demand stalls (link wait +
@@ -135,8 +149,10 @@ impl TransferEngine {
     }
 
     fn account_h2d(&mut self, cm: &CostModel, mode: QuantMode, dt: f64) {
+        let bytes = cm.dims.expert_bytes(mode);
         self.stats.h2d_count += 1;
-        self.stats.h2d_bytes += cm.dims.expert_bytes(mode);
+        self.stats.h2d_bytes += bytes;
+        self.stats.h2d_bytes_by_tier[mode.idx()] += bytes;
         self.stats.h2d_seconds += dt;
     }
 
@@ -154,6 +170,25 @@ impl TransferEngine {
 
     pub fn in_flight_contains(&self, layer: usize, expert: usize) -> bool {
         self.in_flight.iter().any(|t| t.layer == layer && t.expert == expert)
+    }
+
+    /// Residual wait a decode would pay *right now* to claim the tracked
+    /// transfer for `(layer, expert)` — a side-effect-free peek used by
+    /// the little-fallback policy to decide whether waiting beats a
+    /// degraded execution.  `None` when no such transfer is in flight.
+    pub fn residual_of(&self, layer: usize, expert: usize, now: f64) -> Option<f64> {
+        self.in_flight
+            .iter()
+            .find(|t| t.layer == layer && t.expert == expert)
+            .map(|t| (t.completes_at - now).max(0.0))
+    }
+
+    /// What a cold demand fetch issued at `now` would stall: link-queue
+    /// wait plus the full tier transfer.  Side-effect-free estimate (the
+    /// fallback policy's cold-miss counterpart to
+    /// [`TransferEngine::residual_of`]).
+    pub fn demand_estimate(&self, cm: &CostModel, now: f64, mode: QuantMode) -> f64 {
+        self.link_wait(now) + self.h2d_duration(cm, mode)
     }
 
     /// Move the parts of tracked transfers that fall inside the decode's
@@ -196,8 +231,9 @@ impl TransferEngine {
     /// stall the clock and leaves no in-flight record.  Counted fully
     /// overlapped (optimistic) — [`TransferEngine::sync_prefetches`] is
     /// the explicit barrier for callers that want start-of-decode
-    /// semantics.  The serving paths use the tracked
-    /// [`TransferEngine::prefetch_expert`] instead.
+    /// semantics.  Little-copy installs use this path (they are pure
+    /// background traffic with no claimable completion); decode-critical
+    /// transfers use the tracked [`TransferEngine::prefetch_expert`].
     pub fn prefetch_h2d(&mut self, cm: &CostModel, clock: &SimClock, mode: QuantMode) {
         let dt = self.h2d_duration(cm, mode);
         let start = clock.now().max(self.link_free);
@@ -321,8 +357,10 @@ impl TransferEngine {
     /// weights are read-only so no payload is written back, but buffer
     /// frees appear as D2H traffic in the paper's Fig. 1a profile).
     pub fn evict_d2h(&mut self, cm: &CostModel, mode: QuantMode) {
+        let bytes = cm.dims.expert_bytes(mode);
         self.stats.d2h_count += 1;
-        self.stats.d2h_bytes += cm.dims.expert_bytes(mode);
+        self.stats.d2h_bytes += bytes;
+        self.stats.d2h_bytes_by_tier[mode.idx()] += bytes;
     }
 }
 
@@ -532,5 +570,68 @@ mod tests {
         eng.evict_d2h(&cm, QuantMode::Fp16);
         assert_eq!(eng.stats.d2h_count, 1);
         assert!(eng.stats.d2h_bytes > 0.0);
+    }
+
+    #[test]
+    fn per_tier_byte_counters_sum_to_aggregate() {
+        let cm = cm();
+        let mut clock = SimClock::new();
+        let mut eng = TransferEngine::new();
+        eng.demand_h2d(&cm, &mut clock, QuantMode::Fp16);
+        eng.prefetch_h2d(&cm, &clock, QuantMode::Int4);
+        eng.prefetch_expert(&cm, &clock, 0, 3, QuantMode::Int3);
+        eng.evict_d2h(&cm, QuantMode::Fp16);
+        eng.evict_d2h(&cm, QuantMode::Int4);
+        let s = &eng.stats;
+        assert!((s.h2d_bytes_by_tier.iter().sum::<f64>() - s.h2d_bytes).abs() < 1e-9);
+        assert!((s.d2h_bytes_by_tier.iter().sum::<f64>() - s.d2h_bytes).abs() < 1e-9);
+        for m in QuantMode::ALL {
+            assert!(
+                (s.h2d_bytes_by_tier[m.idx()] - cm.dims.expert_bytes(m)).abs() < 1e-9,
+                "one h2d per tier"
+            );
+        }
+        assert_eq!(s.d2h_bytes_by_tier[QuantMode::Int3.idx()], 0.0);
+        // int tiers really move fewer bytes than fp16
+        assert!(s.h2d_bytes_by_tier[1] < s.h2d_bytes_by_tier[0] / 3.0);
+        assert!(s.h2d_bytes_by_tier[2] < s.h2d_bytes_by_tier[1]);
+    }
+
+    #[test]
+    fn residual_peek_matches_wait_for_without_consuming() {
+        let cm = cm();
+        let dt = cm.transfer_time(QuantMode::Fp16);
+        let mut clock = SimClock::new();
+        let mut eng = TransferEngine::new();
+        assert_eq!(eng.residual_of(0, 7, clock.now()), None);
+        eng.prefetch_expert(&cm, &clock, 0, 7, QuantMode::Fp16);
+        clock.advance(0.6 * dt);
+        let peek = eng.residual_of(0, 7, clock.now()).unwrap();
+        assert!((peek - 0.4 * dt).abs() < 1e-12);
+        assert!(eng.in_flight_contains(0, 7), "peek is side-effect-free");
+        let stall0 = eng.stats.stall_time;
+        let claimed = eng.wait_for(0, 7, &mut clock).unwrap();
+        assert!((claimed - peek).abs() < 1e-12, "peek predicted the claim");
+        assert!(eng.stats.stall_time > stall0);
+        // landed transfers peek at zero residual
+        let done = eng.prefetch_expert(&cm, &clock, 1, 2, QuantMode::Int4);
+        assert_eq!(eng.residual_of(1, 2, done + 1.0), Some(0.0));
+    }
+
+    #[test]
+    fn demand_estimate_matches_actual_demand_stall() {
+        let cm = cm();
+        let mut clock = SimClock::new();
+        let mut eng = TransferEngine::new();
+        eng.prefetch_expert(&cm, &clock, 0, 1, QuantMode::Fp16); // queue depth
+        let est = eng.demand_estimate(&cm, clock.now(), QuantMode::Int4);
+        let stall = eng.demand_h2d(&cm, &mut clock, QuantMode::Int4);
+        assert!((est - stall).abs() < 1e-12);
+        // int tiers estimate (and pay) less than fp16 at equal queue depth
+        let eng2 = TransferEngine::new();
+        assert!(
+            eng2.demand_estimate(&cm, 0.0, QuantMode::Int4)
+                < eng2.demand_estimate(&cm, 0.0, QuantMode::Fp16)
+        );
     }
 }

@@ -64,6 +64,17 @@ pub struct PolicyConfig {
     /// When set, layer ℓ gets `layer_capacities[ℓ]` slots (before the
     /// quantization multiplier) instead of the uniform `capacity`.
     pub layer_capacities: Option<Vec<usize>>,
+    /// Big-little fallback (MoBiLE-style): keep low-bit copies of the
+    /// hottest experts resident in a carve-out of the byte budget, and
+    /// on a demand miss execute the little copy at zero stall instead of
+    /// waiting out the transfer.  `None` disables the fallback entirely
+    /// (decode numerics are then bit-identical to the seed).  Must be a
+    /// strictly smaller tier than `quant` (`validate_little_tier`).
+    pub little_tier: Option<QuantMode>,
+    /// Only fall back when the residual wait for the full-tier copy
+    /// exceeds this many seconds (`--fallback-threshold`).  0.0 falls
+    /// back on every miss with a little copy available.
+    pub fallback_threshold: f64,
 }
 
 impl PolicyConfig {
@@ -80,6 +91,8 @@ impl PolicyConfig {
             sparsity_tau: 0.0,
             capacity,
             layer_capacities: None,
+            little_tier: None,
+            fallback_threshold: 0.0,
         }
     }
 
@@ -105,6 +118,8 @@ impl PolicyConfig {
             sparsity_tau: 0.0,
             capacity,
             layer_capacities: None,
+            little_tier: None,
+            fallback_threshold: 0.0,
         }
     }
 
@@ -121,6 +136,8 @@ impl PolicyConfig {
             sparsity_tau: 0.0,
             capacity,
             layer_capacities: None,
+            little_tier: None,
+            fallback_threshold: 0.0,
         }
     }
 
@@ -138,6 +155,8 @@ impl PolicyConfig {
             sparsity_tau: 0.0,
             capacity: top_k,
             layer_capacities: None,
+            little_tier: None,
+            fallback_threshold: 0.0,
         }
     }
 
@@ -154,6 +173,8 @@ impl PolicyConfig {
             sparsity_tau: 0.04,
             capacity,
             layer_capacities: None,
+            little_tier: None,
+            fallback_threshold: 0.0,
         }
     }
 
@@ -169,6 +190,8 @@ impl PolicyConfig {
             sparsity_tau: 0.0,
             capacity,
             layer_capacities: None,
+            little_tier: None,
+            fallback_threshold: 0.0,
         }
     }
 
@@ -184,6 +207,8 @@ impl PolicyConfig {
             sparsity_tau: 0.0,
             capacity,
             layer_capacities: None,
+            little_tier: None,
+            fallback_threshold: 0.0,
         }
     }
 
@@ -208,6 +233,17 @@ impl PolicyConfig {
 
     pub fn with_quant(mut self, q: QuantMode) -> PolicyConfig {
         self.quant = q;
+        self
+    }
+
+    /// Enable the big-little fallback: keep `little`-tier copies of the
+    /// hottest experts resident and serve demand misses from them when
+    /// the residual wait exceeds `threshold` seconds (`None` leaves the
+    /// fallback off).  The caller validates `little` against `quant`
+    /// (`validate_little_tier`).
+    pub fn with_fallback(mut self, little: Option<QuantMode>, threshold: f64) -> PolicyConfig {
+        self.little_tier = little;
+        self.fallback_threshold = threshold;
         self
     }
 
@@ -307,6 +343,17 @@ mod tests {
         let p = PolicyConfig::base_offload(8).with_lookahead(1);
         assert_eq!(p.prefetch, Prefetch::Lookahead { depth: 1 });
         assert_eq!(p.prefetch.lookahead_depth(), 1);
+    }
+
+    #[test]
+    fn fallback_defaults_off_and_builder_sets_it() {
+        let m = PolicyConfig::melinoe("ft_dolly", 16);
+        assert_eq!(m.little_tier, None, "fallback must default off (bit-identical decode)");
+        assert_eq!(m.fallback_threshold, 0.0);
+        let f = m.with_fallback(Some(QuantMode::Int3), 2.5e-3);
+        assert_eq!(f.little_tier, Some(QuantMode::Int3));
+        assert_eq!(f.fallback_threshold, 2.5e-3);
+        assert!(crate::quant::validate_little_tier(f.quant, QuantMode::Int3).is_ok());
     }
 
     #[test]

@@ -48,6 +48,34 @@ impl QuantMode {
         }
     }
 
+    /// VRAM cost of one resident expert at this tier, in units of one
+    /// fp16 expert.  Exact binary fractions (fp16 = 1, int4 = 9/32,
+    /// int3 = 7/32), so summed budget accounting in f64 is exact and the
+    /// byte-occupancy audits can compare with `==`-tight tolerances.
+    pub fn cost_units(self) -> f64 {
+        self.bytes_per_element() / QuantMode::Fp16.bytes_per_element()
+    }
+
+    /// Dense index for per-tier counters (`Fp16 = 0 … Int3 = 2`).
+    pub fn idx(self) -> usize {
+        match self {
+            QuantMode::Fp16 => 0,
+            QuantMode::Int4 => 1,
+            QuantMode::Int3 => 2,
+        }
+    }
+
+    /// All tiers, in `idx` order.
+    pub const ALL: [QuantMode; 3] = [QuantMode::Fp16, QuantMode::Int4, QuantMode::Int3];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMode::Fp16 => "fp16",
+            QuantMode::Int4 => "int4",
+            QuantMode::Int3 => "int3",
+        }
+    }
+
     pub fn parse(s: &str) -> Result<QuantMode> {
         Ok(match s {
             "fp16" => QuantMode::Fp16,
@@ -56,6 +84,20 @@ impl QuantMode {
             _ => bail!("unknown quant mode {s:?} (fp16|int4|int3)"),
         })
     }
+}
+
+/// A "little" fallback copy must be strictly smaller than the serving
+/// tier, or keeping it resident costs more than it saves.
+pub fn validate_little_tier(quant: QuantMode, little: QuantMode) -> Result<()> {
+    if little.bits() >= quant.bits() {
+        bail!(
+            "--little-tier {} must be strictly smaller than --quant {} \
+             (a little copy needs fewer bits than the serving tier)",
+            little.name(),
+            quant.name()
+        );
+    }
+    Ok(())
 }
 
 /// A group-quantized f32 blob: signed integers packed one-per-i8 (we trade
@@ -150,6 +192,27 @@ mod tests {
         assert!((QuantMode::Int4.capacity_multiplier() - 3.55).abs() < 0.1);
         assert!(QuantMode::Int3.capacity_multiplier() > 4.0);
         assert_eq!(QuantMode::Fp16.capacity_multiplier(), 1.0);
+    }
+
+    #[test]
+    fn cost_units_are_exact_binary_fractions() {
+        // exact f64 fractions: budget sums in the cache never drift
+        assert_eq!(QuantMode::Fp16.cost_units(), 1.0);
+        assert_eq!(QuantMode::Int4.cost_units(), 9.0 / 32.0);
+        assert_eq!(QuantMode::Int3.cost_units(), 7.0 / 32.0);
+        for m in QuantMode::ALL {
+            assert_eq!(QuantMode::ALL[m.idx()], m);
+        }
+    }
+
+    #[test]
+    fn little_tier_must_be_strictly_smaller() {
+        assert!(validate_little_tier(QuantMode::Fp16, QuantMode::Int4).is_ok());
+        assert!(validate_little_tier(QuantMode::Int4, QuantMode::Int3).is_ok());
+        assert!(validate_little_tier(QuantMode::Int4, QuantMode::Int4).is_err());
+        assert!(validate_little_tier(QuantMode::Int4, QuantMode::Fp16).is_err());
+        let err = validate_little_tier(QuantMode::Int3, QuantMode::Int4).unwrap_err();
+        assert!(err.to_string().contains("strictly smaller"), "{err}");
     }
 
     #[test]

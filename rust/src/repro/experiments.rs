@@ -18,7 +18,7 @@ pub const ALL: &[&str] = &[
     "table1", "fig1a", "fig1b", "fig3", "table2", "table3", "fig4", "fig5", "table4",
     "table5", "table11", "fig6", "heatmaps", "fig11", "table12", "fig12", "fig13", "table13",
     "ext_layerwise", "ext_cluster", "ext_continuous", "ext_prefill", "ext_overlap",
-    "ext_preempt",
+    "ext_preempt", "ext_quant",
 ];
 
 fn workload(args: &Args) -> Result<Workload> {
@@ -65,11 +65,21 @@ fn try_run(
 /// when tracing was off) — embedded in every ext_* repro row so
 /// `scripts/check_repro.py` can reconcile the trace-derived stall /
 /// overlap / H2D totals against the fleet's `TransferStats` sums.
+/// The fleet's per-precision-tier byte counters ride along
+/// (`h2d_bytes_<tier>` / `d2h_bytes_<tier>`), so equal-VRAM comparisons
+/// across quant tiers are auditable from the JSON alone.
 fn trace_metrics(rep: &crate::cluster::ClusterReport) -> Json {
-    rep.trace
-        .as_ref()
-        .map(|t| t.metrics_json(rep.stall_seconds, rep.overlapped_seconds, rep.h2d_seconds))
-        .unwrap_or(Json::Null)
+    let mut j = match rep.trace.as_ref() {
+        Some(t) => t.metrics_json(rep.stall_seconds, rep.overlapped_seconds, rep.h2d_seconds),
+        None => return Json::Null,
+    };
+    if let Json::Obj(m) = &mut j {
+        for (i, tier) in QuantMode::ALL.iter().enumerate() {
+            m.insert(format!("h2d_bytes_{}", tier.name()), num(rep.h2d_bytes_by_tier[i]));
+            m.insert(format!("d2h_bytes_{}", tier.name()), num(rep.d2h_bytes_by_tier[i]));
+        }
+    }
+    j
 }
 
 fn summary_json(rs: &[RunSummary]) -> Json {
@@ -1175,6 +1185,8 @@ pub fn ext_overlap(args: &Args) -> Result<()> {
                 capacity: cap,
                 eviction: EvictionKind::Lfu,
                 quant: QuantMode::Int4,
+                little_tier: None,
+                fallback_threshold: 0.0,
                 prefetch: true,
                 lookahead: 0,
                 gpu: gpu.clone(),
@@ -1297,6 +1309,8 @@ pub fn ext_preempt(args: &Args) -> Result<()> {
             capacity: cap,
             eviction: EvictionKind::Lfu,
             quant: QuantMode::Int4,
+            little_tier: None,
+            fallback_threshold: 0.0,
             prefetch: true,
             lookahead: 0,
             gpu: gpu.clone(),
@@ -1370,4 +1384,155 @@ pub fn ext_preempt(args: &Args) -> Result<()> {
         }
     }
     print_and_save("ext_preempt", &t, arr(jrows))
+}
+
+/// Extension — quantized expert tiers with big-little fallback: the
+/// same saturated workload served at *equal VRAM bytes* under three
+/// arms per capacity point — fp16 residency, int4 residency (the byte
+/// budget holds ~3.6× the experts), and int4 residency with an int3
+/// little store (`LITTLE_BUDGET_FRAC` of the budget) whose hot-expert
+/// copies execute at zero stall when a demand miss's expected wait
+/// exceeds the fallback threshold.  Expected shape: int4 strictly cuts
+/// stall time and lifts tok/s vs fp16 at equal bytes (more of the task
+/// hot set fits, and each transfer moves ~3.6× fewer bytes), and the
+/// fallback arms cut stall further still, paying with a nonzero
+/// `degraded_token_frac` — the quality-for-latency dial.  Every row's
+/// `metrics` snapshot carries the fleet's per-tier byte counters, so
+/// the equal-bytes claim is auditable from the JSON alone.
+pub fn ext_quant(args: &Args) -> Result<()> {
+    use crate::cache::LITTLE_BUDGET_FRAC;
+    use crate::clock::PaperDims;
+    use crate::cluster::replica::ReplicaSpec;
+    use crate::cluster::workload::{OutputLen, PriorityMix, TaskProfile, WorkloadSpec};
+    use crate::cluster::{self, ClusterConfig};
+    use crate::coordinator::workload::Arrival;
+    use crate::coordinator::{PreemptPolicy, SchedulerMode};
+
+    let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
+    let n_requests = args.get_usize("requests", 32)?;
+    let replicas = args.get_usize("replicas", 2)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let tokens = args.get_usize("tokens", 16)?.max(1);
+
+    let dims = PaperDims {
+        n_layers: 16,
+        n_experts: 64,
+        top_k: 8,
+        d_model: 2048,
+        d_ff: 1024,
+        vocab: 50304,
+    };
+    let hot = 16; // synthetic task hot-set size (experts/layer)
+    let prompt_tokens = 8;
+
+    let mut t = Table::new(&[
+        "fp16-eq C", "arm", "slots/layer", "tok/s", "hit rate", "stall s", "degraded",
+        "PCIe GB",
+    ]);
+    let mut jrows = Vec::new();
+    // fp16 capacities well under the hot set: the regime where residency
+    // bytes are the binding constraint (Eq. 3's transfer term dominates)
+    for fp16_cap in [4usize, 6] {
+        let budget_units = fp16_cap as f64 * QuantMode::Fp16.cost_units();
+        let int4_cap = ((budget_units / QuantMode::Int4.cost_units()) as usize)
+            .min(dims.n_experts)
+            .max(1);
+        let mk_spec = |capacity: usize, quant, little_tier, fallback_threshold| ReplicaSpec {
+            n_layers: dims.n_layers,
+            n_experts: dims.n_experts,
+            top_k: dims.top_k,
+            capacity,
+            eviction: EvictionKind::Lfu,
+            quant,
+            little_tier,
+            fallback_threshold,
+            prefetch: true,
+            lookahead: 0,
+            gpu: gpu.clone(),
+            dims,
+        };
+        let probe = mk_spec(fp16_cap, QuantMode::Fp16, None, 0.0);
+        let est = probe.est_service_seconds(prompt_tokens, tokens).max(1e-9);
+        // threshold sweep: 0 (any wait falls back) and one solo
+        // token-step of waiting (only step-dominating waits fall back)
+        let step_s = est / (prompt_tokens + tokens) as f64;
+        let arms: Vec<(String, ReplicaSpec)> = vec![
+            ("fp16".into(), probe.clone()),
+            ("int4".into(), mk_spec(int4_cap, QuantMode::Int4, None, 0.0)),
+            (
+                "int4+int3 @0s".into(),
+                mk_spec(int4_cap, QuantMode::Int4, Some(QuantMode::Int3), 0.0),
+            ),
+            (
+                format!("int4+int3 @{step_s:.4}s"),
+                mk_spec(int4_cap, QuantMode::Int4, Some(QuantMode::Int3), step_s),
+            ),
+        ];
+        for (arm, spec) in arms {
+            let tasks = TaskProfile::synthetic(2, dims.n_layers, dims.n_experts, hot, 0.9);
+            let cfg = ClusterConfig {
+                replicas,
+                max_batch: 4,
+                max_queue: n_requests.max(8),
+                scheduler: SchedulerMode::Continuous,
+                prefill_chunk: 1,
+                preempt: PreemptPolicy::Off,
+                trace: true,
+                spec: spec.clone(),
+                workload: WorkloadSpec {
+                    n_requests,
+                    // saturated: serving efficiency, not offered load,
+                    // bounds throughput
+                    arrival: Arrival::Poisson(1.5 * replicas.max(1) as f64 / est),
+                    prompt_tokens,
+                    output: OutputLen::Fixed(tokens),
+                    balanced_tasks: true,
+                    priorities: PriorityMix::none(),
+                    seed,
+                },
+                tasks,
+            };
+            let mut b = cluster::balancer::by_name("expert-affinity")?;
+            let rep = cluster::run_cluster(&cfg, b.as_mut())?;
+            let little = spec.little_tier.map_or("none", |lt| lt.name());
+            // what the byte budget actually funds per layer (the little
+            // carve shrinks the big store; LITTLE_BUDGET_FRAC of bytes)
+            let slots = match spec.little_tier {
+                Some(lt) => {
+                    let budget = spec.capacity as f64 * spec.quant.cost_units();
+                    let lc = (budget * LITTLE_BUDGET_FRAC / lt.cost_units()) as usize;
+                    let bc = ((budget - lc as f64 * lt.cost_units()) / spec.quant.cost_units())
+                        as usize;
+                    format!("{bc}+{lc}L")
+                }
+                None => spec.capacity.to_string(),
+            };
+            t.row(vec![
+                fp16_cap.to_string(),
+                arm.clone(),
+                slots,
+                fmt2(rep.tokens_per_sec),
+                fmt4(rep.hit_rate),
+                fmt2(rep.stall_seconds),
+                format!("{:.4}", rep.degraded_token_frac),
+                fmt2(rep.pcie_gb),
+            ]);
+            jrows.push(obj(vec![
+                ("fp16_eq_capacity", num(fp16_cap as f64)),
+                ("arm", s(arm)),
+                ("quant", s(spec.quant.name())),
+                ("little_tier", s(little)),
+                ("fallback_threshold_s", num(spec.fallback_threshold)),
+                ("budget_units", num(budget_units)),
+                ("tok_s", num(rep.tokens_per_sec)),
+                ("hit_rate", num(rep.hit_rate)),
+                ("stall_s", num(rep.stall_seconds)),
+                ("degraded_token_frac", num(rep.degraded_token_frac)),
+                ("pcie_gb", num(rep.pcie_gb)),
+                ("makespan_s", num(rep.makespan)),
+                ("metrics", trace_metrics(&rep)),
+            ]));
+        }
+    }
+    print_and_save("ext_quant", &t, arr(jrows))
 }

@@ -259,6 +259,7 @@ pub fn run(id: &str, args: &crate::util::cli::Args) -> Result<()> {
         "ext_prefill" => ex::ext_prefill(args),
         "ext_overlap" => ex::ext_overlap(args),
         "ext_preempt" => ex::ext_preempt(args),
+        "ext_quant" => ex::ext_quant(args),
         "all" => {
             for id in ex::ALL {
                 println!("\n================ {id} ================");

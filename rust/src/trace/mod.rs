@@ -42,7 +42,14 @@ use anyhow::{bail, Result};
 
 use crate::metrics::Table;
 use crate::pcie::TransferStats;
+use crate::quant::QuantMode;
 use crate::util::json::{arr, num, obj, s, Json};
+
+/// Human-readable tier name for an event's `tier` payload
+/// ([`QuantMode::idx`]-encoded, so event payloads stay `Copy`).
+fn tier_name(tier: u8) -> &'static str {
+    QuantMode::ALL.get(tier as usize).map_or("?", |m| m.name())
+}
 
 // ------------------------------------------------------------------ deltas
 
@@ -109,16 +116,27 @@ pub enum TraceEvent {
     /// A prefilling sequence consumed `tokens` prompt tokens this step.
     PrefillChunk { seq: u64, tokens: u32 },
     /// A tracked non-blocking transfer was issued onto the PCIe link.
-    PrefetchIssued { layer: u32, expert: u32, delta: PcieDelta },
+    /// `tier` is the payload's [`QuantMode::idx`] (byte-accurate costing).
+    PrefetchIssued { layer: u32, expert: u32, tier: u8, delta: PcieDelta },
     /// An in-flight transfer was consumed: drained-and-committed, or
     /// claimed by a `wait_for`.  Every `PrefetchIssued` is matched by
     /// exactly one `TransferLanded` or a still-in-flight entry at end
     /// of run ([`Trace::audit_prefetch_landed`]).
-    TransferLanded { layer: u32, expert: u32 },
+    TransferLanded { layer: u32, expert: u32, tier: u8 },
     /// The decode blocked on a transfer: a cold demand miss
     /// (`residual: false`) or the residual wait on a caught in-flight
     /// prefetch (`residual: true`).
-    DemandStall { layer: u32, expert: u32, residual: bool, delta: PcieDelta },
+    DemandStall { layer: u32, expert: u32, tier: u8, residual: bool, delta: PcieDelta },
+    /// A little (low-bit) fallback copy was installed in the layer's
+    /// carve-out; the untracked background transfer's [`PcieDelta`]
+    /// rides along so the reconciliation audit stays exact.
+    LittleInstall { layer: u32, expert: u32, tier: u8, delta: PcieDelta },
+    /// A little copy was displaced by a hotter install.
+    LittleEvict { layer: u32, expert: u32 },
+    /// A demand miss was served by executing the resident little copy at
+    /// zero stall instead of waiting out the full-tier transfer — the
+    /// degraded-quality exec counted into `degraded_token_frac`.
+    DegradedExec { layer: u32, expert: u32, tier: u8 },
     /// An expert became resident (demand insert, prefill top-up, or
     /// in-flight commit).
     CacheInsert { layer: u32, expert: u32 },
@@ -271,7 +289,14 @@ impl MetricsRegistry {
                 self.churn.entry(*expert as usize).or_default();
             }
             TraceEvent::TransferLanded { .. } => self.count("transfer_landed"),
-            TraceEvent::DemandStall { layer, expert, residual, delta } => {
+            TraceEvent::LittleInstall { expert, delta, .. } => {
+                self.count("little_installs");
+                self.add_delta(delta);
+                self.churn.entry(*expert as usize).or_default();
+            }
+            TraceEvent::LittleEvict { .. } => self.count("little_evictions"),
+            TraceEvent::DegradedExec { .. } => self.count("degraded_execs"),
+            TraceEvent::DemandStall { layer, expert, residual, delta, .. } => {
                 self.count(if *residual { "residual_claims" } else { "demand_misses" });
                 if !residual {
                     self.churn.entry(*expert as usize).or_default().demand_misses += 1;
@@ -518,6 +543,17 @@ impl Trace {
                 );
             }
         }
+        // the per-tier byte counters must partition the aggregates
+        // (relative tolerance: byte totals are ~GB-scale)
+        for (name, total, by_tier) in [
+            ("h2d_bytes", stats.h2d_bytes, &stats.h2d_bytes_by_tier),
+            ("d2h_bytes", stats.d2h_bytes, &stats.d2h_bytes_by_tier),
+        ] {
+            let sum: f64 = by_tier.iter().sum();
+            if (sum - total).abs() > tol * total.max(1.0) {
+                bail!("per-tier {name} counters sum to {sum}, aggregate is {total} (tol {tol})");
+            }
+        }
         Ok(())
     }
 
@@ -560,14 +596,19 @@ impl Trace {
         Ok(())
     }
 
-    /// Audit: per layer, `#CacheInsert − #CacheEvict` equals the
-    /// cache's final occupancy.
+    /// Audit: per layer, `#CacheInsert − #CacheEvict` plus the little
+    /// store's `#LittleInstall − #LittleEvict` equals the cache's final
+    /// occupancy across both tiers (`LayerCache::occupancy_len`), so
+    /// the replay balances at every tier mix.
     pub fn audit_occupancy(&self, resident_by_layer: &[usize]) -> Result<()> {
         let mut net: BTreeMap<u32, i64> = BTreeMap::new();
         for e in &self.events {
             match e.ev {
-                TraceEvent::CacheInsert { layer, .. } => *net.entry(layer).or_insert(0) += 1,
-                TraceEvent::CacheEvict { layer, .. } => *net.entry(layer).or_insert(0) -= 1,
+                TraceEvent::CacheInsert { layer, .. }
+                | TraceEvent::LittleInstall { layer, .. } => *net.entry(layer).or_insert(0) += 1,
+                TraceEvent::CacheEvict { layer, .. } | TraceEvent::LittleEvict { layer, .. } => {
+                    *net.entry(layer).or_insert(0) -= 1
+                }
                 _ => {}
             }
         }
@@ -676,7 +717,7 @@ impl Trace {
                     ("tid", num(TID_COMPUTE)),
                     ("ts", us(e.t)),
                 ])),
-                TraceEvent::DemandStall { layer, expert, residual, delta } => {
+                TraceEvent::DemandStall { layer, expert, tier, residual, delta } => {
                     // the stall occupied [t - stall, t] on the compute lane
                     let dur = delta.stall.max(0.0);
                     evs.push(obj(vec![
@@ -689,11 +730,12 @@ impl Trace {
                         ("args", obj(vec![
                             ("layer", num(layer as f64)),
                             ("expert", num(expert as f64)),
+                            ("tier", s(tier_name(tier))),
                             ("stall_s", num(delta.stall)),
                         ])),
                     ]));
                 }
-                TraceEvent::PrefetchIssued { layer, expert, delta } => evs.push(obj(vec![
+                TraceEvent::PrefetchIssued { layer, expert, tier, delta } => evs.push(obj(vec![
                     ("ph", s("X")),
                     ("name", s("prefetch")),
                     ("pid", pid),
@@ -703,14 +745,50 @@ impl Trace {
                     ("args", obj(vec![
                         ("layer", num(layer as f64)),
                         ("expert", num(expert as f64)),
+                        ("tier", s(tier_name(tier))),
                     ])),
                 ])),
-                TraceEvent::TransferLanded { layer, expert } => evs.push(instant(
+                TraceEvent::TransferLanded { layer, expert, tier } => evs.push(instant(
                     e.t,
                     e.lane,
                     TID_LINK,
                     "landed",
+                    vec![
+                        ("layer", num(layer as f64)),
+                        ("expert", num(expert as f64)),
+                        ("tier", s(tier_name(tier))),
+                    ],
+                )),
+                TraceEvent::LittleInstall { layer, expert, tier, delta } => evs.push(obj(vec![
+                    ("ph", s("X")),
+                    ("name", s("little install")),
+                    ("pid", pid),
+                    ("tid", num(TID_LINK)),
+                    ("ts", us(e.t)),
+                    ("dur", us(delta.h2d_seconds.max(0.0))),
+                    ("args", obj(vec![
+                        ("layer", num(layer as f64)),
+                        ("expert", num(expert as f64)),
+                        ("tier", s(tier_name(tier))),
+                    ])),
+                ])),
+                TraceEvent::LittleEvict { layer, expert } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "little evict",
                     vec![("layer", num(layer as f64)), ("expert", num(expert as f64))],
+                )),
+                TraceEvent::DegradedExec { layer, expert, tier } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_COMPUTE,
+                    "degraded exec",
+                    vec![
+                        ("layer", num(layer as f64)),
+                        ("expert", num(expert as f64)),
+                        ("tier", s(tier_name(tier))),
+                    ],
                 )),
                 TraceEvent::RequestAdmit { seq } => evs.push(instant(
                     e.t,
@@ -883,6 +961,7 @@ mod tests {
             TraceEvent::DemandStall {
                 layer: 1,
                 expert: 4,
+                tier: 0,
                 residual: false,
                 delta: d(0.05, 0.0, 0.05),
             },
@@ -946,7 +1025,7 @@ mod tests {
         let mut r = Recorder::on(0, "x");
         r.emit(
             0.1,
-            TraceEvent::PrefetchIssued { layer: 0, expert: 1, delta: d(0.0, 0.02, 0.02) },
+            TraceEvent::PrefetchIssued { layer: 0, expert: 1, tier: 1, delta: d(0.0, 0.02, 0.02) },
         );
         let tr = r.take().unwrap();
         let mut stats = TransferStats {
@@ -957,14 +1036,22 @@ mod tests {
         tr.reconcile(&stats, 1e-6).unwrap();
         stats.stall_time = 0.5; // an unemitted demand stall
         assert!(tr.reconcile(&stats, 1e-6).is_err());
+        stats.stall_time = 0.0;
+        // per-tier byte counters that do not partition the aggregate fail
+        stats.h2d_bytes = 100.0;
+        stats.h2d_bytes_by_tier = [50.0, 25.0, 0.0];
+        assert!(tr.reconcile(&stats, 1e-6).is_err());
+        stats.h2d_bytes_by_tier = [50.0, 25.0, 25.0];
+        tr.reconcile(&stats, 1e-6).unwrap();
     }
 
     #[test]
     fn prefetch_landed_audit() {
         let mut r = Recorder::on(0, "x");
-        r.emit(0.1, TraceEvent::PrefetchIssued { layer: 0, expert: 1, delta: d(0.0, 0.02, 0.02) });
-        r.emit(0.2, TraceEvent::PrefetchIssued { layer: 0, expert: 2, delta: d(0.0, 0.02, 0.02) });
-        r.emit(0.3, TraceEvent::TransferLanded { layer: 0, expert: 1 });
+        let dl = d(0.0, 0.02, 0.02);
+        r.emit(0.1, TraceEvent::PrefetchIssued { layer: 0, expert: 1, tier: 0, delta: dl });
+        r.emit(0.2, TraceEvent::PrefetchIssued { layer: 0, expert: 2, tier: 0, delta: dl });
+        r.emit(0.3, TraceEvent::TransferLanded { layer: 0, expert: 1, tier: 0 });
         let tr = r.take().unwrap();
         tr.audit_prefetch_landed(1).unwrap(); // one still in flight
         assert!(tr.audit_prefetch_landed(0).is_err());
@@ -988,6 +1075,36 @@ mod tests {
     }
 
     #[test]
+    fn occupancy_audit_balances_with_mixed_tiers() {
+        // big inserts/evicts and little installs/evicts replay together:
+        // layer 0 nets two big + one little resident, layer 1 nets one
+        // little after a displacement
+        let mut r = Recorder::on(0, "x");
+        r.emit(0.0, TraceEvent::CacheInsert { layer: 0, expert: 1 });
+        r.emit(0.1, TraceEvent::CacheInsert { layer: 0, expert: 2 });
+        let dl = d(0.0, 0.01, 0.01);
+        r.emit(0.1, TraceEvent::LittleInstall { layer: 0, expert: 5, tier: 2, delta: dl });
+        r.emit(0.2, TraceEvent::LittleInstall { layer: 1, expert: 7, tier: 2, delta: dl });
+        r.emit(0.3, TraceEvent::LittleInstall { layer: 1, expert: 8, tier: 2, delta: dl });
+        r.emit(0.3, TraceEvent::LittleEvict { layer: 1, expert: 7 });
+        r.emit(0.4, TraceEvent::DegradedExec { layer: 1, expert: 8, tier: 2 });
+        let tr = r.take().unwrap();
+        tr.audit_occupancy(&[3, 1]).unwrap();
+        assert!(tr.audit_occupancy(&[2, 1]).is_err(), "little copies count toward occupancy");
+        let c = &tr.registry.counters;
+        assert_eq!(c.get("little_installs"), Some(&3));
+        assert_eq!(c.get("little_evictions"), Some(&1));
+        assert_eq!(c.get("degraded_execs"), Some(&1));
+        // the little installs' untracked transfer deltas reconcile
+        let stats = TransferStats {
+            overlapped_time: 0.03,
+            h2d_seconds: 0.03,
+            ..TransferStats::default()
+        };
+        tr.reconcile(&stats, 1e-6).unwrap();
+    }
+
+    #[test]
     fn chrome_export_and_summary_roundtrip() {
         let mut r = Recorder::on(0, "replica 0");
         r.emit(0.0, TraceEvent::StepStart { tokens: 2, batch: 2 });
@@ -996,6 +1113,7 @@ mod tests {
             TraceEvent::DemandStall {
                 layer: 2,
                 expert: 9,
+                tier: 1,
                 residual: true,
                 delta: d(0.004, -0.001, 0.0),
             },
@@ -1028,6 +1146,7 @@ mod tests {
             TraceEvent::DemandStall {
                 layer: 0,
                 expert: 3,
+                tier: 0,
                 residual: false,
                 delta: d(0.2, 0.0, 0.2),
             },

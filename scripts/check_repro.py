@@ -11,6 +11,9 @@ parses them and FAILS the build if a headline invariant regresses:
   ext_overlap     best lookahead stall < depth-0 stall, per (dims, C)
   ext_preempt     preempt-on High p95 TTFT <= off, tok/s within 5%,
                   hit-rate within 0.05, per capacity
+  ext_quant       int4 + little-fallback stall < fp16 stall and tok/s
+                  above fp16 at equal VRAM bytes; degraded_token_frac
+                  finite in [0,1], and exactly 0 with the fallback off
 
 Every ext_* row also embeds a `metrics` snapshot from the run's merged
 structured trace (docs/OBSERVABILITY.md); the gate rejects NaN /
@@ -31,7 +34,10 @@ import math
 import os
 import sys
 
-REQUIRED = ["ext_cluster", "ext_continuous", "ext_prefill", "ext_overlap", "ext_preempt"]
+REQUIRED = [
+    "ext_cluster", "ext_continuous", "ext_prefill", "ext_overlap", "ext_preempt",
+    "ext_quant",
+]
 
 # trace-derived PCIe totals must match TransferStats to this tolerance
 TRACE_TOL = 1e-6
@@ -199,6 +205,57 @@ def check_preempt(rows):
         )
 
 
+def check_quant(rows):
+    groups = {}
+    for r in rows:
+        groups.setdefault(int(r["fp16_eq_capacity"]), []).append(r)
+    shown = None
+    for cap, arms in sorted(groups.items()):
+        fp16 = next((r for r in arms if r["quant"] == "fp16"), None)
+        fallback = [r for r in arms if r["little_tier"] != "none"]
+        if not fp16 or not fallback:
+            check("ext_quant", False, f"C={cap}: missing fp16 / fallback arms")
+            continue
+        for r in arms:
+            d = r["degraded_token_frac"]
+            check(
+                "ext_quant",
+                finite(d) and 0.0 <= d <= 1.0,
+                f"C={cap} {r['arm']}: degraded_token_frac {d!r} in [0,1]",
+            )
+            if r["little_tier"] == "none":
+                check(
+                    "ext_quant",
+                    d == 0.0,
+                    f"C={cap} {r['arm']}: fallback off => degraded 0 (got {d!r})",
+                )
+        best = min(fallback, key=lambda r: r["stall_s"])
+        check(
+            "ext_quant",
+            best["stall_s"] < fp16["stall_s"],
+            f"C={cap}: int4+fallback stall {fmt(best['stall_s'])}s "
+            f"vs fp16 {fmt(fp16['stall_s'])}s at equal bytes",
+        )
+        check(
+            "ext_quant",
+            best["tok_s"] > fp16["tok_s"],
+            f"C={cap}: int4+fallback {fmt(best['tok_s'])} tok/s "
+            f"vs fp16 {fmt(fp16['tok_s'])} at equal bytes",
+        )
+        shown = shown or best
+    if shown:
+        summary_rows.append(
+            (
+                "ext_quant",
+                f"{shown['arm']} @ C={int(shown['fp16_eq_capacity'])} "
+                f"(degraded {shown['degraded_token_frac']:.4f})",
+                shown["tok_s"],
+                shown["hit_rate"],
+                None,
+            )
+        )
+
+
 def finite(v):
     return isinstance(v, (int, float)) and math.isfinite(v)
 
@@ -302,6 +359,7 @@ def main():
         "ext_prefill": check_prefill,
         "ext_overlap": check_overlap,
         "ext_preempt": check_preempt,
+        "ext_quant": check_quant,
     }
     for name in REQUIRED:
         rows = load(results_dir, name)
