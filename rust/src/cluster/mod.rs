@@ -14,7 +14,8 @@
 //! * [`workload`] — open-loop Poisson arrivals over per-task routing
 //!   profiles (pre-drawn traces: all balancers see identical traffic),
 //!   with per-request output lengths (skew is continuous batching's win
-//!   case).
+//!   case) and streaming-client behaviour — TTFT deadlines, cancel-after-N
+//!   hang-ups, queue-time disconnects ([`workload::StreamMix`]).
 //! * [`replica`]  — one GPU's cache/PCIe/VRAM/clock stack with a
 //!   step-granular decode loop: slots admit mid-flight, sequences retire
 //!   at trace end (see [`crate::coordinator::SchedulerMode`]), and
@@ -39,9 +40,10 @@ use crate::metrics::{fmt2, Percentiles, Table};
 use crate::quant::QuantMode;
 use crate::trace::{Recorder, Trace, TraceEvent};
 
+use crate::coordinator::Outcome;
 use balancer::{Balancer, ReplicaView};
 use replica::{Completion, Replica, ReplicaSpec};
-use workload::{ClusterRequest, OutputLen, PriorityMix, TaskProfile, WorkloadSpec};
+use workload::{ClusterRequest, OutputLen, PriorityMix, StreamMix, TaskProfile, WorkloadSpec};
 
 /// The three stock balancers, in comparison-table order.
 pub const BALANCERS: &[&str] = &["round-robin", "least-loaded", "expert-affinity"];
@@ -67,6 +69,11 @@ pub struct ClusterConfig {
     /// When a waiting higher-priority request may preempt an in-flight
     /// sequence on a replica (`--preempt`; continuous scheduler only).
     pub preempt: PreemptPolicy,
+    /// SLO-aware admission control on every replica (`--admission`):
+    /// deadline-tagged requests whose compute-optimistic TTFT estimate
+    /// already misses are rejected at admission instead of decoding only
+    /// to miss at p99.
+    pub admission: bool,
     /// Record sim-time structured traces on every replica plus the
     /// dispatcher lane (`--trace`); `run_cluster` then runs the
     /// cross-layer conservation audits per replica and returns the
@@ -108,6 +115,7 @@ impl ClusterConfig {
             scheduler: SchedulerMode::Continuous,
             prefill_chunk: 1,
             preempt: PreemptPolicy::Off,
+            admission: false,
             trace: false,
             spec,
             workload: WorkloadSpec {
@@ -117,6 +125,7 @@ impl ClusterConfig {
                 output: OutputLen::Fixed(max_output),
                 balanced_tasks: true,
                 priorities: PriorityMix::none(),
+                stream: StreamMix::none(),
                 seed,
             },
             tasks,
@@ -125,6 +134,12 @@ impl ClusterConfig {
 
     pub fn with_arrival(mut self, arrival: Arrival) -> ClusterConfig {
         self.workload.arrival = arrival;
+        self
+    }
+
+    /// Decode slots per replica (`--batch`).
+    pub fn with_max_batch(mut self, slots: usize) -> ClusterConfig {
+        self.max_batch = slots.max(1);
         self
     }
 
@@ -161,10 +176,24 @@ impl ClusterConfig {
         self
     }
 
+    /// Per-request streaming-client behaviour of the generated workload:
+    /// deadlines, cancel-after-N hang-ups and queue-time disconnects
+    /// (`--deadline-mix` / `--cancel-after` / `--disconnect-rate`).
+    pub fn with_stream_mix(mut self, mix: StreamMix) -> ClusterConfig {
+        self.workload.stream = mix;
+        self
+    }
+
+    /// SLO-aware admission control on every replica (`--admission`).
+    pub fn with_admission(mut self, on: bool) -> ClusterConfig {
+        self.admission = on;
+        self
+    }
+
     /// Layer-ahead transfer pipeline depth on every replica
     /// (`--lookahead`; 0 = admit-time prefetch only).
     pub fn with_lookahead(mut self, depth: usize) -> ClusterConfig {
-        self.spec.lookahead = depth;
+        self.spec = self.spec.with_lookahead(depth);
         self
     }
 
@@ -187,8 +216,7 @@ impl ClusterConfig {
     /// experts resident and, on a demand miss, execute the little copy
     /// at zero stall when the expected wait exceeds `threshold` seconds.
     pub fn with_fallback(mut self, little: Option<QuantMode>, threshold: f64) -> ClusterConfig {
-        self.spec.little_tier = little;
-        self.spec.fallback_threshold = threshold.max(0.0);
+        self.spec = self.spec.with_fallback(little, threshold);
         self
     }
 
@@ -253,7 +281,22 @@ pub struct ClusterReport {
     /// Layer-ahead transfer pipeline depth the fleet ran with.
     pub lookahead: usize,
     pub n_requests: usize,
+    /// All decoded output tokens, including the partial outputs of
+    /// cancelled requests (they occupied slots and compute).
     pub output_tokens: usize,
+    /// Requests that decoded their full output.
+    pub completed: usize,
+    /// Requests the client hung up on (queue-time disconnects plus
+    /// cancel-after-N mid-decode hang-ups).
+    pub cancelled: usize,
+    /// Requests admission control turned away.
+    pub rejected: usize,
+    /// Output tokens of completed requests whose first token landed
+    /// within their deadline (deadline-free completions always attain).
+    pub goodput_tokens: usize,
+    /// SLO-attaining throughput: `goodput_tokens` per simulated second of
+    /// makespan — the number that matters once requests carry deadlines.
+    pub goodput_per_sec: f64,
     /// Last completion time (simulated seconds).
     pub makespan: f64,
     /// Fleet throughput: output tokens per simulated second of makespan.
@@ -313,6 +356,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
             Replica::new(i, cfg.spec.clone(), cfg.scheduler)
                 .with_prefill_chunk(cfg.prefill_chunk)
                 .with_preempt(cfg.preempt)
+                .with_admission(cfg.admission)
                 .with_trace(cfg.trace)
         })
         .collect();
@@ -407,14 +451,23 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         }
     }
 
-    // aggregate fleet metrics
+    // aggregate fleet metrics.  Latency percentiles sample *completed*
+    // requests only — a rejected request's zero-latency terminal (or a
+    // cancelled one's truncated decode) says nothing about served
+    // latency; their populations are reported as counts instead.
     let completions: Vec<&Completion> = reps.iter().flat_map(|r| r.completions.iter()).collect();
     let output_tokens: usize = completions.iter().map(|c| c.output_tokens).sum();
+    let completed_set: Vec<&Completion> =
+        completions.iter().copied().filter(|c| c.outcome == Outcome::Completed).collect();
+    let cancelled = completions.iter().filter(|c| c.outcome == Outcome::Cancelled).count();
+    let rejected = completions.iter().filter(|c| c.outcome == Outcome::Rejected).count();
+    let goodput_tokens: usize =
+        completed_set.iter().filter(|c| c.attained()).map(|c| c.output_tokens).sum();
     let makespan = completions.iter().map(|c| c.finished).fold(0.0f64, f64::max);
-    let queue_waits: Vec<f64> = completions.iter().map(|c| c.queue_wait()).collect();
-    let ttfts: Vec<f64> = completions.iter().map(|c| c.ttft()).collect();
-    let tpots: Vec<f64> = completions.iter().map(|c| c.tpot()).collect();
-    let latencies: Vec<f64> = completions.iter().map(|c| c.latency()).collect();
+    let queue_waits: Vec<f64> = completed_set.iter().map(|c| c.queue_wait()).collect();
+    let ttfts: Vec<f64> = completed_set.iter().map(|c| c.ttft()).collect();
+    let tpots: Vec<f64> = completed_set.iter().map(|c| c.tpot()).collect();
+    let latencies: Vec<f64> = completed_set.iter().map(|c| c.latency()).collect();
     let (mut hits, mut lookups) = (0u64, 0u64);
     let mut pcie_bytes = 0.0f64;
     let (mut stall_seconds, mut overlapped_seconds) = (0.0f64, 0.0f64);
@@ -462,7 +515,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         .copied()
         .filter_map(|p| {
             let of: Vec<&Completion> =
-                completions.iter().copied().filter(|c| c.priority == p).collect();
+                completed_set.iter().copied().filter(|c| c.priority == p).collect();
             if of.is_empty() {
                 return None;
             }
@@ -484,6 +537,11 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         lookahead: cfg.spec.lookahead,
         n_requests: completions.len(),
         output_tokens,
+        completed: completed_set.len(),
+        cancelled,
+        rejected,
+        goodput_tokens,
+        goodput_per_sec: if makespan > 0.0 { goodput_tokens as f64 / makespan } else { 0.0 },
         makespan,
         tokens_per_sec: if makespan > 0.0 { output_tokens as f64 / makespan } else { 0.0 },
         hit_rate: if lookups > 0 { hits as f64 / lookups as f64 } else { 0.0 },
@@ -523,6 +581,7 @@ pub fn comparison_table(reports: &[ClusterReport]) -> Table {
         "balancer",
         "replicas",
         "tok/s",
+        "goodput tok/s",
         "hit rate",
         "PCIe GB",
         "degraded",
@@ -534,6 +593,7 @@ pub fn comparison_table(reports: &[ClusterReport]) -> Table {
             r.balancer.clone(),
             r.replicas.len().to_string(),
             fmt2(r.tokens_per_sec),
+            fmt2(r.goodput_per_sec),
             format!("{:.3}", r.hit_rate),
             fmt2(r.pcie_gb),
             format!("{:.3}", r.degraded_token_frac),
@@ -683,6 +743,13 @@ mod tests {
         assert_eq!(rep.output_tokens, cfg.workload.n_requests * cfg.workload.output.cap());
         assert!(rep.makespan > 0.0);
         assert!(rep.tokens_per_sec > 0.0);
+        // streaming knobs off: every request completes, and goodput is
+        // exactly raw throughput (deadline-free requests always attain)
+        assert_eq!(rep.completed, rep.n_requests);
+        assert_eq!(rep.cancelled, 0);
+        assert_eq!(rep.rejected, 0);
+        assert_eq!(rep.goodput_tokens, rep.output_tokens);
+        assert!((rep.goodput_per_sec - rep.tokens_per_sec).abs() < 1e-9);
         assert!((0.0..=1.0).contains(&rep.hit_rate));
         assert!(rep.latency.p50 <= rep.latency.p99);
         assert!(rep.queue_wait.p50 <= rep.queue_wait.p99);
@@ -741,6 +808,79 @@ mod tests {
         assert_eq!(rep.h2d_bytes_by_tier[0], 0.0);
         let tier_sum: f64 = rep.h2d_bytes_by_tier.iter().sum();
         assert!((tier_sum / 1e9 - rep.pcie_gb).abs() < 1e-9);
+    }
+
+    /// Deadline-heavy burst overload: SLO-aware admission strictly
+    /// improves goodput over serving everything — rejecting a deadline
+    /// the optimistic estimate already misses frees its slots and
+    /// compute for requests that can still attain.
+    #[test]
+    fn admission_improves_goodput_under_deadline_overload() {
+        let base = small_cfg(2, 31);
+        let slack = 3.0 * base.spec.est_service_seconds(
+            base.workload.prompt_tokens,
+            base.workload.output.cap(),
+        );
+        let run = |admission: bool| {
+            let cfg = base
+                .clone()
+                .with_arrival(Arrival::Burst)
+                .with_stream_mix(StreamMix {
+                    deadline_frac: 0.8,
+                    deadline_slack: slack,
+                    cancel_frac: 0.0,
+                    cancel_after: 0,
+                    disconnect_frac: 0.0,
+                })
+                .with_admission(admission);
+            let mut b = balancer::by_name("least-loaded").unwrap();
+            run_cluster(&cfg, b.as_mut()).unwrap()
+        };
+        let off = run(false);
+        let on = run(true);
+        assert_eq!(off.rejected, 0, "no admission control, nothing rejected");
+        assert_eq!(off.completed, off.n_requests);
+        assert!(
+            off.goodput_tokens < off.output_tokens,
+            "overload must make some deadline requests miss"
+        );
+        assert!(on.rejected > 0, "admission must turn the hopeless tail away");
+        assert_eq!(on.completed + on.rejected, on.n_requests);
+        assert!(
+            on.goodput_per_sec > off.goodput_per_sec,
+            "admission goodput {} must beat no-admission {}",
+            on.goodput_per_sec,
+            off.goodput_per_sec
+        );
+    }
+
+    /// Cancel storm (cancel-after-1 plus queue disconnects) with tracing
+    /// on: `run_cluster`'s conservation audits — pin ledger, occupancy,
+    /// PCIe reconcile — must balance, proving cancelled sequences leak
+    /// zero pins or reservations, and every request still gets exactly
+    /// one terminal outcome.
+    #[test]
+    fn cancel_storm_leaks_nothing_and_audits_balance() {
+        let cfg = small_cfg(2, 37)
+            .with_stream_mix(StreamMix {
+                deadline_frac: 0.0,
+                deadline_slack: 0.0,
+                cancel_frac: 0.4,
+                cancel_after: 1,
+                disconnect_frac: 0.15,
+            })
+            .with_trace(true);
+        let mut b = balancer::by_name("expert-affinity").unwrap();
+        let rep = run_cluster(&cfg, b.as_mut()).unwrap();
+        assert_eq!(rep.n_requests, cfg.workload.n_requests);
+        assert!(rep.cancelled > 0, "the storm must actually cancel something");
+        assert_eq!(rep.completed + rep.cancelled + rep.rejected, rep.n_requests);
+        assert!(
+            rep.output_tokens < cfg.workload.n_requests * cfg.workload.output.cap(),
+            "cancel-after-1 must truncate decodes"
+        );
+        assert!(rep.goodput_tokens <= rep.output_tokens);
+        assert!(rep.trace.is_some(), "audited lanes merge into the fleet timeline");
     }
 
     #[test]

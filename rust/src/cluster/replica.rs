@@ -29,7 +29,7 @@ use std::collections::VecDeque;
 
 use crate::cache::{EvictionKind, ExpertCache};
 use crate::clock::{CostModel, GpuSpec, PaperDims, SimClock};
-use crate::coordinator::{PreemptPolicy, Priority, SchedulerMode};
+use crate::coordinator::{Outcome, PreemptPolicy, Priority, SchedulerMode};
 use crate::pcie::TransferEngine;
 use crate::predictor::PrefetchPlan;
 use crate::quant::QuantMode;
@@ -101,6 +101,28 @@ impl ReplicaSpec {
         }
     }
 
+    /// Serving-tier override (spec-level; `ClusterConfig::with_quant`
+    /// additionally rescales capacity to preserve the VRAM byte budget).
+    pub fn with_quant(mut self, quant: QuantMode) -> ReplicaSpec {
+        self.quant = quant;
+        self
+    }
+
+    /// Layer-ahead transfer pipeline depth (0 = admit-time prefetch only).
+    pub fn with_lookahead(mut self, depth: usize) -> ReplicaSpec {
+        self.lookahead = depth;
+        self
+    }
+
+    /// Big-little fallback: little-tier copies of the hottest experts,
+    /// executed degraded when the expected transfer wait exceeds
+    /// `threshold` simulated seconds (`None` disables).
+    pub fn with_fallback(mut self, little: Option<QuantMode>, threshold: f64) -> ReplicaSpec {
+        self.little_tier = little;
+        self.fallback_threshold = threshold.max(0.0);
+        self
+    }
+
     pub fn cost_model(&self) -> CostModel {
         CostModel::new(self.gpu.clone(), self.dims)
     }
@@ -134,6 +156,13 @@ pub struct Completion {
     /// request was never preempted) — reported separately from queueing
     /// so preemption cost stays visible.
     pub preempted_wait: f64,
+    /// How the request ended: `Completed` (full output), `Cancelled`
+    /// (client hang-up — partial output), or `Rejected` (admission turned
+    /// it away; no output).  Latency percentiles sample `Completed` only.
+    pub outcome: Outcome,
+    /// The request's absolute TTFT deadline, carried through so the
+    /// report can score goodput (deadline-free completions always attain).
+    pub deadline: Option<f64>,
 }
 
 impl Completion {
@@ -156,6 +185,14 @@ impl Completion {
 
     pub fn latency(&self) -> f64 {
         (self.finished - self.arrival).max(0.0)
+    }
+
+    /// `true` when this completion's tokens count toward goodput: the
+    /// request completed and its first token landed within its deadline
+    /// (deadline-free completions always attain).
+    pub fn attained(&self) -> bool {
+        self.outcome == Outcome::Completed
+            && self.deadline.map_or(true, |d| self.first_token <= d)
     }
 }
 
@@ -184,6 +221,11 @@ pub struct Replica {
     /// When a waiting higher-priority request may preempt an in-flight
     /// sequence (mirrors the coordinator's `--preempt` policy).
     preempt: PreemptPolicy,
+    /// SLO-aware admission control (mirrors the coordinator's
+    /// `--admission`): a deadline-tagged request whose compute-optimistic
+    /// TTFT estimate cannot meet its deadline is rejected at admission
+    /// instead of occupying a slot only to miss at p99.
+    admission: bool,
     /// Pending arrivals, one FIFO queue per [`Priority`] class.
     queues: [VecDeque<ClusterRequest>; 3],
     in_flight: Vec<ActiveSeq>,
@@ -231,6 +273,7 @@ impl Replica {
             scheduler,
             prefill_chunk: 1,
             preempt: PreemptPolicy::Off,
+            admission: false,
             queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
             in_flight: Vec::new(),
             suspended: Vec::new(),
@@ -256,6 +299,12 @@ impl Replica {
     /// Set the preemption policy (see [`PreemptPolicy`]).
     pub fn with_preempt(mut self, preempt: PreemptPolicy) -> Replica {
         self.preempt = preempt;
+        self
+    }
+
+    /// Enable (or disable) SLO-aware admission control.
+    pub fn with_admission(mut self, on: bool) -> Replica {
+        self.admission = on;
         self
     }
 
@@ -389,11 +438,73 @@ impl Replica {
                 (Some((i, _)), None) => self.reattach(i),
                 (_, Some(p)) => {
                     let req = self.queues[p.idx()].pop_front().unwrap();
+                    if req.disconnect {
+                        // the client hung up while the request was still
+                        // queued: drop it before it ever takes a slot
+                        self.drop_disconnected(req);
+                        continue;
+                    }
+                    if self.admission && !self.deadline_feasible(&req) {
+                        self.reject(req);
+                        continue;
+                    }
                     self.admit_one(req);
                 }
                 (None, None) => break,
             }
         }
+    }
+
+    /// Compute-optimistic feasibility of `req`'s TTFT deadline if it were
+    /// admitted right now: prefill steps at the configured chunk, no
+    /// transfer stalls.  Optimistic on purpose — admission only turns a
+    /// request away when even the best case already misses, so it never
+    /// rejects a request the replica could have served in time.
+    fn deadline_feasible(&self, req: &ClusterRequest) -> bool {
+        let Some(d) = req.deadline else { return true };
+        let per_step = self.spec.est_service_seconds(1, 0);
+        let prefill_steps = req.prompt_tokens.div_ceil(self.prefill_chunk).max(1);
+        self.clock.now() + prefill_steps as f64 * per_step <= d
+    }
+
+    /// Terminal-reject `req` (admission control).  No pin events: the
+    /// request never reached a slot, so there is nothing to release.
+    fn reject(&mut self, req: ClusterRequest) {
+        let now = self.clock.now();
+        self.rec.emit(now, TraceEvent::Reject { seq: req.id });
+        self.completions.push(Completion {
+            request_id: req.id,
+            task: req.task,
+            priority: req.priority,
+            arrival: req.at,
+            started: now,
+            first_token: now,
+            finished: now,
+            output_tokens: 0,
+            preempted_wait: 0.0,
+            outcome: Outcome::Rejected,
+            deadline: req.deadline,
+        });
+    }
+
+    /// Terminal-cancel a request whose client disconnected while queued.
+    /// No pin events: the request was never admitted.
+    fn drop_disconnected(&mut self, req: ClusterRequest) {
+        let now = self.clock.now();
+        self.rec.emit(now, TraceEvent::Cancel { seq: req.id });
+        self.completions.push(Completion {
+            request_id: req.id,
+            task: req.task,
+            priority: req.priority,
+            arrival: req.at,
+            started: now,
+            first_token: now,
+            finished: now,
+            output_tokens: 0,
+            preempted_wait: 0.0,
+            outcome: Outcome::Cancelled,
+            deadline: req.deadline,
+        });
     }
 
     /// Rebuild the union prefetch plan of the *live* in-flight set plus
@@ -894,7 +1005,12 @@ impl Replica {
             if before < first_at && seq.step >= first_at {
                 seq.first_token = now;
             }
+            let produced =
+                seq.step.saturating_sub(seq.req.prompt_tokens).min(seq.req.max_output);
+            let hangup = seq.req.cancel_after.is_some_and(|n| produced >= n);
             if seq.step >= seq.req.routing.len() {
+                // natural completion (wins a same-step tie with a hangup:
+                // the client got its full output)
                 let seq = self.in_flight.remove(i);
                 self.cache.release(seq.req.id);
                 self.rec.emit(
@@ -915,6 +1031,29 @@ impl Replica {
                     finished: now,
                     output_tokens: seq.req.max_output,
                     preempted_wait: seq.preempted_wait,
+                    outcome: Outcome::Completed,
+                    deadline: seq.req.deadline,
+                });
+            } else if hangup {
+                // cancel-after-N: the client hung up mid-decode — the
+                // one-way suspend: slot and pin-ledger entries reclaim
+                // now, and the completion reports the partial output
+                let seq = self.in_flight.remove(i);
+                self.cache.release(seq.req.id);
+                self.rec.emit(now, TraceEvent::Cancel { seq: seq.req.id });
+                self.rec.emit(now, TraceEvent::PinRelease { owner: seq.req.id });
+                self.completions.push(Completion {
+                    request_id: seq.req.id,
+                    task: seq.req.task,
+                    priority: seq.req.priority,
+                    arrival: seq.req.at,
+                    started: seq.started,
+                    first_token: seq.first_token,
+                    finished: now,
+                    output_tokens: produced,
+                    preempted_wait: seq.preempted_wait,
+                    outcome: Outcome::Cancelled,
+                    deadline: seq.req.deadline,
                 });
             } else {
                 i += 1;
@@ -986,7 +1125,9 @@ fn plan_overlap(a: &PrefetchPlan, b: &PrefetchPlan) -> f64 {
 
 #[cfg(test)]
 mod tests {
-    use super::super::workload::{generate, OutputLen, PriorityMix, TaskProfile, WorkloadSpec};
+    use super::super::workload::{
+        generate, OutputLen, PriorityMix, StreamMix, TaskProfile, WorkloadSpec,
+    };
     use super::*;
     use crate::coordinator::workload::Arrival;
     use crate::util::rng::Rng;
@@ -1010,6 +1151,7 @@ mod tests {
             output: OutputLen::Fixed(4),
             balanced_tasks: false,
             priorities: PriorityMix::none(),
+            stream: StreamMix::none(),
             seed,
         };
         generate(&wl, &profiles, s.n_layers, s.n_experts, s.top_k)
@@ -1040,6 +1182,9 @@ mod tests {
             at: 0.0,
             prompt_tokens,
             max_output: out,
+            deadline: None,
+            cancel_after: None,
+            disconnect: false,
             routing,
             plan: profiles[0].plan(),
         }
@@ -1358,5 +1503,90 @@ mod tests {
         assert_eq!(r.completions.len(), 2);
         assert_eq!(r.suspended_len(), 0);
         assert!(r.preemptions >= 1);
+    }
+
+    // ------------------------------------------------ streaming front-end
+
+    /// Cancel-after-N mid-decode: the slot and pin-ledger entries reclaim
+    /// the moment the hang-up step ends (the queued request admits into
+    /// the freed slot), the completion reports the partial output, and
+    /// the trace's pin conservation audit balances to zero.
+    #[test]
+    fn cancel_after_frees_slot_and_balances_pins() {
+        let s = spec();
+        let mut r =
+            Replica::new(0, s.clone(), SchedulerMode::Continuous).with_trace(true);
+        let mut early = req_shaped(0, 1, 40, &s, 1);
+        early.cancel_after = Some(2);
+        r.enqueue(early);
+        r.enqueue(req_shaped(1, 1, 3, &s, 2));
+        r.run_until(f64::INFINITY, 1);
+        assert_eq!(r.completions.len(), 2);
+        let c0 = r.completions.iter().find(|c| c.request_id == 0).unwrap();
+        assert_eq!(c0.outcome, Outcome::Cancelled);
+        assert_eq!(c0.output_tokens, 2, "partial output up to the hang-up");
+        let c1 = r.completions.iter().find(|c| c.request_id == 1).unwrap();
+        assert_eq!(c1.outcome, Outcome::Completed);
+        assert!(
+            c1.started < c0.started + s.est_service_seconds(1, 40),
+            "the freed slot must re-admit well before the cancelled decode would have ended"
+        );
+        assert_eq!(r.slots_in_use(), 0);
+        let tr = r.take_trace().expect("tracing was on");
+        tr.audit_pins(0);
+    }
+
+    /// A queue-time disconnect never takes a slot: it terminal-cancels
+    /// with zero output and the replica's caches see only the survivor's
+    /// traffic.
+    #[test]
+    fn queued_disconnect_never_admits() {
+        let s = spec();
+        let mut r = Replica::new(0, s.clone(), SchedulerMode::Continuous);
+        let mut gone = req_shaped(0, 2, 4, &s, 3);
+        gone.disconnect = true;
+        let stay = req_shaped(1, 2, 4, &s, 4);
+        let expected: u64 =
+            stay.routing.iter().flatten().map(|e| e.len() as u64).sum();
+        r.enqueue(gone);
+        r.enqueue(stay);
+        r.run_until(f64::INFINITY, 2);
+        let c0 = r.completions.iter().find(|c| c.request_id == 0).unwrap();
+        assert_eq!(c0.outcome, Outcome::Cancelled);
+        assert_eq!(c0.output_tokens, 0);
+        assert!(!c0.attained());
+        let stats = r.cache.total_stats();
+        assert_eq!(stats.requests(), expected, "the disconnected request must not decode");
+    }
+
+    /// Admission control turns away a deadline the compute-optimistic
+    /// estimate already misses, and leaves feasible deadlines alone.
+    #[test]
+    fn admission_rejects_only_hopeless_deadlines() {
+        let s = spec();
+        let mut r =
+            Replica::new(0, s.clone(), SchedulerMode::Continuous).with_admission(true);
+        let mut hopeless = req_shaped(0, 4, 4, &s, 5);
+        hopeless.deadline = Some(1e-12);
+        let mut feasible = req_shaped(1, 4, 4, &s, 6);
+        feasible.deadline = Some(1e9);
+        r.enqueue(hopeless);
+        r.enqueue(feasible);
+        r.run_until(f64::INFINITY, 2);
+        let c0 = r.completions.iter().find(|c| c.request_id == 0).unwrap();
+        assert_eq!(c0.outcome, Outcome::Rejected);
+        assert_eq!(c0.output_tokens, 0);
+        let c1 = r.completions.iter().find(|c| c.request_id == 1).unwrap();
+        assert_eq!(c1.outcome, Outcome::Completed);
+        assert!(c1.attained(), "a met deadline counts toward goodput");
+        // admission off: the hopeless request is served anyway (and misses)
+        let mut off = Replica::new(0, s.clone(), SchedulerMode::Continuous);
+        let mut hopeless = req_shaped(0, 4, 4, &s, 5);
+        hopeless.deadline = Some(1e-12);
+        off.enqueue(hopeless);
+        off.run_until(f64::INFINITY, 2);
+        let c = &off.completions[0];
+        assert_eq!(c.outcome, Outcome::Completed);
+        assert!(!c.attained(), "a missed deadline must not count toward goodput");
     }
 }

@@ -186,6 +186,63 @@ impl PriorityMix {
     }
 }
 
+/// Per-request streaming-client behaviour: deadlines, early cancels and
+/// queue-time disconnects.  [`StreamMix::none`] (the default) consumes no
+/// randomness, so streaming-free workloads stay byte-identical to the
+/// pre-streaming generator (same guarantee [`PriorityMix::none`] gives).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamMix {
+    /// Fraction of requests carrying a TTFT deadline.
+    pub deadline_frac: f64,
+    /// Slack granted to deadline-tagged requests: the deadline is
+    /// `arrival + deadline_slack` (simulated seconds).
+    pub deadline_slack: f64,
+    /// Fraction of requests whose client hangs up after consuming
+    /// `cancel_after` tokens.
+    pub cancel_frac: f64,
+    /// Tokens a cancelling client consumes before hanging up.
+    pub cancel_after: usize,
+    /// Fraction of requests whose client disconnects while still queued
+    /// (never admitted; counted as cancelled-in-queue).
+    pub disconnect_frac: f64,
+}
+
+impl StreamMix {
+    /// No deadlines, cancels or disconnects (draws no randomness).
+    pub fn none() -> StreamMix {
+        StreamMix {
+            deadline_frac: 0.0,
+            deadline_slack: 0.0,
+            cancel_frac: 0.0,
+            cancel_after: 0,
+            disconnect_frac: 0.0,
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.deadline_frac <= 0.0 && self.cancel_frac <= 0.0 && self.disconnect_frac <= 0.0
+    }
+
+    /// Draw one request's streaming behaviour.  Consumes exactly three
+    /// draws whenever any knob is active (so per-request traffic stays
+    /// aligned when fractions change), and zero when the mix is off.
+    /// Returns `(deadline, cancel_after, disconnect)` with the deadline
+    /// absolute (arrival `at` + slack).
+    pub fn draw(&self, rng: &mut Rng, at: f64) -> (Option<f64>, Option<usize>, bool) {
+        if self.is_none() {
+            return (None, None, false);
+        }
+        let deadline = rng.f64() < self.deadline_frac;
+        let cancel = rng.f64() < self.cancel_frac;
+        let disconnect = rng.f64() < self.disconnect_frac;
+        (
+            if deadline { Some(at + self.deadline_slack.max(0.0)) } else { None },
+            if cancel { Some(self.cancel_after.max(1)) } else { None },
+            disconnect,
+        )
+    }
+}
+
 /// One admitted request, with its routing trace pre-drawn so every
 /// balancer sees byte-identical traffic.
 #[derive(Debug, Clone)]
@@ -197,6 +254,16 @@ pub struct ClusterRequest {
     pub at: f64,
     pub prompt_tokens: usize,
     pub max_output: usize,
+    /// Absolute TTFT deadline (simulated seconds); requests that cannot
+    /// meet it are rejected at admission when the replica's admission
+    /// control is on, and never count toward goodput when missed.
+    pub deadline: Option<f64>,
+    /// The client hangs up after consuming this many tokens (the request
+    /// finishes `Cancelled` with a partial output).
+    pub cancel_after: Option<usize>,
+    /// The client disconnects while the request is still queued; it is
+    /// dropped before admission as cancelled-in-queue.
+    pub disconnect: bool,
     /// `routing[step][layer]` — the top-K experts this request activates
     /// at each forward step (prompt prefill steps + decode steps).
     pub routing: Vec<Vec<Vec<usize>>>,
@@ -214,6 +281,9 @@ impl ClusterRequest {
             at: 0.0,
             prompt_tokens: 0,
             max_output: 0,
+            deadline: None,
+            cancel_after: None,
+            disconnect: false,
             routing: Vec::new(),
             plan: PrefetchPlan::empty(0),
         }
@@ -237,6 +307,10 @@ pub struct WorkloadSpec {
     /// Per-request priority distribution ([`PriorityMix::none`] keeps the
     /// generator's random stream byte-identical to priority-free runs).
     pub priorities: PriorityMix,
+    /// Per-request streaming-client behaviour ([`StreamMix::none`] keeps
+    /// the generator's random stream byte-identical to streaming-free
+    /// runs).
+    pub stream: StreamMix,
     pub seed: u64,
 }
 
@@ -291,6 +365,7 @@ pub fn generate(
                 }
             };
             let priority = spec.priorities.draw(&mut rng);
+            let (deadline, cancel_after, disconnect) = spec.stream.draw(&mut rng, at);
             let out_len = spec.output.draw(&mut rng);
             let steps = spec.prompt_tokens + out_len;
             let routing = (0..steps)
@@ -307,6 +382,9 @@ pub fn generate(
                 at,
                 prompt_tokens: spec.prompt_tokens,
                 max_output: out_len,
+                deadline,
+                cancel_after,
+                disconnect,
                 routing,
                 plan: tasks[task].plan(),
             }
@@ -326,6 +404,7 @@ mod tests {
             output: OutputLen::Fixed(8),
             balanced_tasks: false,
             priorities: PriorityMix::none(),
+            stream: StreamMix::none(),
             seed: 7,
         }
     }
@@ -484,5 +563,54 @@ mod tests {
         let before = rng.clone().next_u64();
         assert_eq!(PriorityMix::none().draw(&mut rng), Priority::Normal);
         assert_eq!(rng.next_u64(), before, "none mix must not consume the stream");
+    }
+
+    /// `StreamMix::none` consumes no randomness: streaming-free workloads
+    /// are byte-identical to the pre-streaming generator (locked in so
+    /// every existing repro keeps its traffic).
+    #[test]
+    fn none_stream_mix_is_inert_and_draw_free() {
+        let tasks = TaskProfile::synthetic(2, 2, 64, 8, 0.9);
+        let s = spec(50, Arrival::Poisson(10.0));
+        let reqs = generate(&s, &tasks, 2, 64, 4);
+        assert!(reqs.iter().all(|r| {
+            r.deadline.is_none() && r.cancel_after.is_none() && !r.disconnect
+        }));
+        let mut rng = Rng::new(1);
+        let before = rng.clone().next_u64();
+        assert_eq!(StreamMix::none().draw(&mut rng, 3.0), (None, None, false));
+        assert_eq!(rng.next_u64(), before, "none mix must not consume the stream");
+    }
+
+    #[test]
+    fn stream_mix_skews_and_stays_deterministic() {
+        let tasks = TaskProfile::synthetic(2, 2, 64, 8, 0.9);
+        let mut s = spec(200, Arrival::Poisson(20.0));
+        s.stream = StreamMix {
+            deadline_frac: 0.5,
+            deadline_slack: 2.0,
+            cancel_frac: 0.3,
+            cancel_after: 1,
+            disconnect_frac: 0.1,
+        };
+        let a = generate(&s, &tasks, 2, 64, 4);
+        let b = generate(&s, &tasks, 2, 64, 4);
+        let deadlines = a.iter().filter(|r| r.deadline.is_some()).count();
+        let cancels = a.iter().filter(|r| r.cancel_after.is_some()).count();
+        let disconnects = a.iter().filter(|r| r.disconnect).count();
+        assert!((60..=140).contains(&deadlines), "deadline ~50%, got {deadlines}/200");
+        assert!((30..=90).contains(&cancels), "cancel ~30%, got {cancels}/200");
+        assert!((5..=40).contains(&disconnects), "disconnect ~10%, got {disconnects}/200");
+        // the deadline is absolute: arrival plus the configured slack
+        assert!(a
+            .iter()
+            .filter_map(|r| r.deadline.map(|d| d - r.at))
+            .all(|slack| (slack - 2.0).abs() < 1e-12));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.deadline, y.deadline);
+            assert_eq!(x.cancel_after, y.cancel_after);
+            assert_eq!(x.disconnect, y.disconnect);
+            assert_eq!(x.routing, y.routing);
+        }
     }
 }

@@ -27,12 +27,33 @@
 //! reported separately from initial queueing
 //! ([`ServerStats::preempted_wait`] vs [`ServerStats::queue_wait`]), so
 //! preemption cost is visible rather than laundered into queue time.
+//!
+//! The front-end is *streaming*: [`Server::submit`] takes a
+//! [`RequestSpec`] and returns a [`TokenStream`] — tokens arrive
+//! per-step over a per-request channel, and the terminal [`Response`]
+//! carries an explicit [`Outcome`].  Three [`StreamPolicy`] behaviours
+//! ride on the same suspend machinery preemption introduced:
+//! *backpressure* (a bounded stream channel running full suspends the
+//! sequence at a step boundary instead of buffering unboundedly),
+//! *disconnect/cancel* (dropping the [`TokenStream`] or calling
+//! [`TokenStream::cancel`] reclaims the slot and pin ledger immediately
+//! — the one-way version of suspend — with a `Cancelled` terminal), and
+//! *SLO-aware admission* (deadline-tagged requests whose estimated TTFT
+//! under current occupancy cannot meet the deadline are `Rejected` up
+//! front instead of missing at p99).  Goodput — SLO-attaining tokens —
+//! is reported beside raw throughput.  With every streaming knob off
+//! the decode path is bit-identical to the pre-streaming coordinator.
 
 pub mod workload;
 
 use std::any::Any;
 use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+    TrySendError,
+};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -40,7 +61,7 @@ use anyhow::Result;
 
 use crate::metrics::Percentiles;
 use crate::pcie::TransferStats;
-use crate::trace::Trace;
+use crate::trace::{Trace, TraceEvent};
 
 /// Request priority class.  Ordered: `Low < Normal < High` — the
 /// scheduler admits pending requests highest class first, and under a
@@ -205,6 +226,29 @@ pub trait Decoder {
     fn degraded_token_frac(&self) -> f64 {
         0.0
     }
+    /// Cancel an in-flight sequence: detach-and-drop with immediate
+    /// slot + pin-ledger reclaim — the one-way version of
+    /// [`Decoder::suspend`].  Returns the output tokens produced so far
+    /// (they travel on the `Cancelled` terminal [`Response`]).  The
+    /// default reuses the suspend path and drops the detached state,
+    /// which reclaims correctly for any suspension-capable decoder but
+    /// loses the partial tokens; decoders that track per-sequence
+    /// output should override (the engine wrapper does, emitting
+    /// [`TraceEvent::Cancel`] instead of `Suspend`).
+    fn cancel(&mut self, seq: u64) -> Result<Vec<usize>> {
+        self.suspend(seq).map(|_| Vec::new())
+    }
+    /// Output tokens an in-flight sequence has produced so far (the
+    /// streaming front-end polls this after every step to forward newly
+    /// decoded tokens).  Decoders without per-token visibility return
+    /// empty — streaming then degrades to terminal-only delivery.
+    fn peek_tokens(&self, _seq: u64) -> Vec<usize> {
+        Vec::new()
+    }
+    /// Record a scheduler-originated event (queue-side cancellation,
+    /// admission rejection, stream stall) onto the decoder's trace lane
+    /// at its current simulated time.  No-op for untraced decoders.
+    fn note(&mut self, _ev: TraceEvent) {}
 }
 
 /// How the scheduler fills decode slots.
@@ -232,18 +276,342 @@ impl SchedulerMode {
     }
 }
 
+/// How a request left the system.  Every submission resolves with
+/// exactly one terminal [`Response`] carrying one of these — rejected
+/// and cancelled requests never silently drop their receiver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Decoded to EOS or its token budget.
+    Completed,
+    /// Client disconnect, explicit [`TokenStream::cancel`], or a
+    /// `cancel_after` knob fired; partial tokens ride on the terminal.
+    Cancelled,
+    /// Refused at admission: the estimated TTFT under current occupancy
+    /// could not meet the request's deadline.
+    Rejected,
+}
+
+impl Outcome {
+    pub fn name(self) -> &'static str {
+        match self {
+            Outcome::Completed => "completed",
+            Outcome::Cancelled => "cancelled",
+            Outcome::Rejected => "rejected",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<usize>,
     pub max_output: usize,
     pub priority: Priority,
+    /// TTFT SLO in simulated seconds from submission; `None` = no SLO.
+    /// Under [`StreamPolicy::admission`] a deadline the scheduler
+    /// estimates it cannot meet is `Rejected` up front; completed
+    /// requests count toward goodput only when the deadline was met.
+    pub deadline: Option<f64>,
+    /// Client walks away after this many output tokens (workload
+    /// modeling: "cancel after the first token").  The sequence cancels
+    /// at the next step boundary once the threshold is reached.
+    pub cancel_after: Option<usize>,
+}
+
+/// Builder for a submission: `RequestSpec::new(prompt)` then chain
+/// `.max_output(n)`, `.priority(p)`, `.deadline(d)`, `.cancel_after(k)`.
+/// Consumed by [`Server::submit`]; the single entry point replacing the
+/// old `submit`/`submit_prio` pair.
+#[derive(Debug, Clone)]
+pub struct RequestSpec {
+    prompt: Vec<usize>,
+    max_output: usize,
+    priority: Priority,
+    deadline: Option<f64>,
+    cancel_after: Option<usize>,
+}
+
+impl RequestSpec {
+    /// A Normal-priority spec with the default 32-token output budget
+    /// and no deadline or cancel knobs.
+    pub fn new(prompt: Vec<usize>) -> RequestSpec {
+        RequestSpec {
+            prompt,
+            max_output: 32,
+            priority: Priority::Normal,
+            deadline: None,
+            cancel_after: None,
+        }
+    }
+
+    /// Output token budget.
+    pub fn max_output(mut self, n: usize) -> RequestSpec {
+        self.max_output = n;
+        self
+    }
+
+    /// Scheduling class (see [`Priority`]).
+    pub fn priority(mut self, p: Priority) -> RequestSpec {
+        self.priority = p;
+        self
+    }
+
+    /// TTFT SLO in simulated seconds from submission.
+    pub fn deadline(mut self, d: f64) -> RequestSpec {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Client disconnects after this many output tokens.
+    pub fn cancel_after(mut self, n: usize) -> RequestSpec {
+        self.cancel_after = Some(n);
+        self
+    }
+
+    /// Materialize the [`Request`] under a server-assigned id.
+    pub fn into_request(self, id: u64) -> Request {
+        Request {
+            id,
+            prompt: self.prompt,
+            max_output: self.max_output,
+            priority: self.priority,
+            deadline: self.deadline,
+            cancel_after: self.cancel_after,
+        }
+    }
+}
+
+/// Streaming knobs, all off by default — and with all of them off the
+/// scheduler's decode path is bit-identical to the pre-streaming
+/// coordinator (tokens simply also mirror onto an unbounded channel).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamPolicy {
+    /// Per-request token channel bound; `0` = unbounded (no
+    /// backpressure).  When bounded, a consumer that falls behind
+    /// suspends the sequence at a step boundary (the PR 5 suspend path)
+    /// instead of buffering unboundedly; it resumes once the backlog
+    /// drains.
+    pub buffer: usize,
+    /// SLO-aware admission: reject deadline-tagged requests up front
+    /// when the estimated TTFT from current occupancy cannot meet the
+    /// deadline, producing [`Outcome::Rejected`] rather than a p99 miss.
+    pub admission: bool,
+}
+
+impl Default for StreamPolicy {
+    fn default() -> Self {
+        StreamPolicy { buffer: 0, admission: false }
+    }
+}
+
+impl StreamPolicy {
+    /// Bounded per-request token channel (`0` = unbounded).
+    pub fn with_buffer(mut self, n: usize) -> StreamPolicy {
+        self.buffer = n;
+        self
+    }
+
+    /// Toggle SLO-aware admission.
+    pub fn with_admission(mut self, on: bool) -> StreamPolicy {
+        self.admission = on;
+        self
+    }
+}
+
+/// Scheduler-side half of a per-request token channel: unbounded when
+/// [`StreamPolicy::buffer`] is 0, bounded (backpressure) otherwise.
+pub struct StreamTx(StreamTxInner);
+
+enum StreamTxInner {
+    Loose(Sender<usize>),
+    Tight(SyncSender<usize>),
+}
+
+/// Result of a non-blocking token push.
+enum StreamPush {
+    Sent,
+    /// Bounded channel full: the consumer is behind (backpressure).
+    Full,
+    /// Receiver dropped: the client is gone (disconnect).
+    Gone,
+}
+
+impl StreamTx {
+    fn pair(buffer: usize) -> (StreamTx, Receiver<usize>) {
+        if buffer == 0 {
+            let (tx, rx) = channel();
+            (StreamTx(StreamTxInner::Loose(tx)), rx)
+        } else {
+            let (tx, rx) = sync_channel(buffer);
+            (StreamTx(StreamTxInner::Tight(tx)), rx)
+        }
+    }
+
+    fn push(&self, t: usize) -> StreamPush {
+        match &self.0 {
+            StreamTxInner::Loose(tx) => {
+                if tx.send(t).is_ok() {
+                    StreamPush::Sent
+                } else {
+                    StreamPush::Gone
+                }
+            }
+            StreamTxInner::Tight(tx) => match tx.try_send(t) {
+                Ok(()) => StreamPush::Sent,
+                Err(TrySendError::Full(_)) => StreamPush::Full,
+                Err(TrySendError::Disconnected(_)) => StreamPush::Gone,
+            },
+        }
+    }
+}
+
+/// Client-side handle returned by [`Server::submit`]: tokens arrive
+/// per-step on a channel, the terminal [`Response`] (with its
+/// [`Outcome`]) arrives once.  Dropping the handle without waiting is a
+/// *disconnect* — the scheduler cancels the sequence and reclaims its
+/// slot and pins at the next step boundary; [`TokenStream::cancel`]
+/// does the same explicitly.
+pub struct TokenStream {
+    id: u64,
+    tokens: Receiver<usize>,
+    done: Option<Receiver<Response>>,
+    alive: Arc<AtomicBool>,
+    /// Cleared by `wait`/`wait_timeout`: consuming the stream to its
+    /// terminal is not a disconnect.
+    armed: bool,
+}
+
+impl TokenStream {
+    /// Server-assigned request id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Blocking next token; `None` once the stream closed (terminal
+    /// reached — poll [`TokenStream::poll_response`] or call
+    /// [`TokenStream::wait`] for the outcome).
+    pub fn next_token(&self) -> Option<usize> {
+        self.tokens.recv().ok()
+    }
+
+    /// Non-blocking token poll.
+    pub fn poll_token(&self) -> Option<usize> {
+        self.tokens.try_recv().ok()
+    }
+
+    /// Non-blocking terminal poll (does not consume the handle).
+    pub fn poll_response(&self) -> Option<Response> {
+        self.done.as_ref().and_then(|d| d.try_recv().ok())
+    }
+
+    /// Explicitly cancel: the scheduler reclaims the slot and pin
+    /// ledger at the next step boundary and resolves the terminal with
+    /// [`Outcome::Cancelled`] (partial tokens attached).
+    pub fn cancel(&self) {
+        self.alive.store(false, Ordering::Relaxed);
+    }
+
+    /// Block until the terminal [`Response`], draining the token
+    /// channel along the way so a bounded stream can never stall the
+    /// sequence it is waiting on.  The terminal carries the complete
+    /// token list, so unconsumed streamed tokens are not lost.
+    pub fn wait(mut self) -> Result<Response> {
+        self.armed = false;
+        let done = self.done.take().expect("terminal already consumed");
+        loop {
+            while self.tokens.try_recv().is_ok() {}
+            match done.recv_timeout(Duration::from_millis(5)) {
+                Ok(r) => return Ok(r),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("runner dropped the request without a terminal response")
+                }
+            }
+        }
+    }
+
+    /// [`TokenStream::wait`] with an overall timeout.
+    pub fn wait_timeout(mut self, timeout: Duration) -> Result<Response> {
+        self.armed = false;
+        let done = self.done.take().expect("terminal already consumed");
+        let deadline = Instant::now() + timeout;
+        loop {
+            while self.tokens.try_recv().is_ok() {}
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                anyhow::bail!("timed out waiting for a terminal response");
+            }
+            match done.recv_timeout(left.min(Duration::from_millis(5))) {
+                Ok(r) => return Ok(r),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("runner dropped the request without a terminal response")
+                }
+            }
+        }
+    }
+}
+
+impl Drop for TokenStream {
+    fn drop(&mut self) {
+        if self.armed {
+            self.alive.store(false, Ordering::Relaxed);
+        }
+    }
+}
+
+/// A request plus its client-side channel endpoints, as handed to
+/// [`Scheduler::enqueue`].
+pub struct Submission {
+    req: Request,
+    done: Sender<Response>,
+    stream: Option<StreamTx>,
+    alive: Arc<AtomicBool>,
+    submitted: Instant,
+}
+
+impl Submission {
+    /// Terminal-only submission (the pre-streaming shape): no token
+    /// channel, the client observes exactly one [`Response`].
+    pub fn terminal(req: Request) -> (Submission, Receiver<Response>) {
+        let (dtx, drx) = channel();
+        let sub = Submission {
+            req,
+            done: dtx,
+            stream: None,
+            alive: Arc::new(AtomicBool::new(true)),
+            submitted: Instant::now(),
+        };
+        (sub, drx)
+    }
+
+    /// Streaming submission under `policy`: the submission plus the
+    /// client-side [`TokenStream`] handle.
+    pub fn streaming(req: Request, policy: StreamPolicy) -> (Submission, TokenStream) {
+        let (dtx, drx) = channel();
+        let (stx, srx) = StreamTx::pair(policy.buffer);
+        let alive = Arc::new(AtomicBool::new(true));
+        let id = req.id;
+        let sub = Submission {
+            req,
+            done: dtx,
+            stream: Some(stx),
+            alive: alive.clone(),
+            submitted: Instant::now(),
+        };
+        (sub, TokenStream { id, tokens: srx, done: Some(drx), alive, armed: true })
+    }
 }
 
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
+    /// Complete output tokens (partial for `Cancelled`, empty for
+    /// `Rejected`) — authoritative even when streamed tokens went
+    /// unconsumed.
     pub tokens: Vec<usize>,
+    /// How the request left the system.
+    pub outcome: Outcome,
     /// Wallclock seconds between submission and *first* slot admission
     /// (initial queueing only — time spent suspended after a preemption
     /// is reported separately in `preempted_wait`).
@@ -287,6 +655,9 @@ pub struct ServerConfig {
     /// scheduler enables the decoder's recorder at construction and
     /// surfaces the drained [`Trace`] in [`ServerStats::trace`].
     pub trace: bool,
+    /// Streaming knobs: token-channel bound (backpressure) and
+    /// SLO-aware admission.  All off by default.
+    pub stream: StreamPolicy,
 }
 
 impl Default for ServerConfig {
@@ -299,13 +670,75 @@ impl Default for ServerConfig {
             prefill_chunk: 1,
             preempt: PreemptPolicy::Off,
             trace: false,
+            stream: StreamPolicy::default(),
         }
+    }
+}
+
+impl ServerConfig {
+    pub fn with_max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    pub fn with_batch_wait(mut self, d: Duration) -> Self {
+        self.batch_wait = d;
+        self
+    }
+
+    pub fn with_max_output(mut self, n: usize) -> Self {
+        self.max_output = n;
+        self
+    }
+
+    pub fn with_scheduler(mut self, m: SchedulerMode) -> Self {
+        self.scheduler = m;
+        self
+    }
+
+    pub fn with_prefill_chunk(mut self, c: usize) -> Self {
+        self.prefill_chunk = c;
+        self
+    }
+
+    pub fn with_preempt(mut self, p: PreemptPolicy) -> Self {
+        self.preempt = p;
+        self
+    }
+
+    pub fn with_trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+
+    pub fn with_stream(mut self, s: StreamPolicy) -> Self {
+        self.stream = s;
+        self
     }
 }
 
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
+    /// Requests that reached a terminal outcome
+    /// (`completed + cancelled + rejected`).
     pub requests: u64,
+    /// Terminal [`Outcome::Completed`] count.
+    pub completed: u64,
+    /// Terminal [`Outcome::Cancelled`] count (queue-side disconnects
+    /// included).
+    pub cancelled: u64,
+    /// Subset of `cancelled`: disconnects detected while still queued —
+    /// the request was never admitted into a slot.
+    pub cancelled_in_queue: u64,
+    /// Terminal [`Outcome::Rejected`] count (SLO-aware admission).
+    pub rejected: u64,
+    /// Backpressure suspensions: a bounded stream channel ran full and
+    /// the sequence was parked at a step boundary.
+    pub stream_stalls: u64,
+    /// Output tokens of completed requests that met their TTFT deadline
+    /// (deadline-free requests always attain).  `goodput()` divides by
+    /// the simulated clock.
+    pub goodput_tokens: u64,
     /// Token steps the scheduler executed.
     pub steps: u64,
     /// Prefill chunk the scheduler ran with (1 = token-at-a-time).
@@ -345,9 +778,29 @@ pub struct ServerStats {
     pub trace: Option<Trace>,
 }
 
+impl ServerStats {
+    /// Goodput: SLO-attaining simulated throughput (tokens of completed
+    /// requests that met their TTFT deadline, per simulated second;
+    /// deadline-free requests always attain).
+    pub fn goodput(&self) -> f64 {
+        if self.total_sim_seconds > 0.0 {
+            self.goodput_tokens as f64 / self.total_sim_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
 struct Job {
     req: Request,
-    tx: Sender<Response>,
+    done: Sender<Response>,
+    /// Per-request token channel (None for terminal-only submissions).
+    stream: Option<StreamTx>,
+    /// Cleared by the client on disconnect/cancel; checked while queued
+    /// (cancelled-in-queue) and after every step (cancel mid-decode).
+    alive: Arc<AtomicBool>,
+    /// Output tokens already forwarded onto the stream channel.
+    streamed: usize,
     submitted: Instant,
     /// Decoder sim time at enqueue (preemption thresholds are measured
     /// on the simulated clock, so tests stay deterministic).
@@ -366,6 +819,17 @@ struct Job {
     admitted_sim: f64,
 }
 
+/// A backpressured sequence: suspended out of its slot with a token
+/// backlog its consumer has yet to drain.
+struct Stalled {
+    seq: u64,
+    job: Job,
+    state: Box<dyn Any>,
+    /// Tokens produced before the stall (`job.streamed` of them already
+    /// delivered).
+    produced: Vec<usize>,
+}
+
 /// The step-level scheduling core, independent of threads and channels:
 /// the runner thread drives it from the mpsc queue; unit tests drive it
 /// synchronously against a mock decoder.
@@ -378,6 +842,9 @@ pub struct Scheduler<D: Decoder> {
     /// Preempted sequences waiting to reattach: (decoder handle, job,
     /// opaque suspended state), in suspension order.
     suspended: Vec<(u64, Job, Box<dyn Any>)>,
+    /// Backpressure-suspended sequences waiting for their consumers to
+    /// drain the backlog; they re-enter `suspended` once drained.
+    stalled: Vec<Stalled>,
     stats: ServerStats,
     batch_sizes: Vec<usize>,
     queue_waits: Vec<f64>,
@@ -399,6 +866,7 @@ impl<D: Decoder> Scheduler<D> {
             pending: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
             inflight: HashMap::new(),
             suspended: Vec::new(),
+            stalled: Vec::new(),
             stats: ServerStats::default(),
             batch_sizes: Vec::new(),
             queue_waits: Vec::new(),
@@ -409,11 +877,39 @@ impl<D: Decoder> Scheduler<D> {
         }
     }
 
-    pub fn enqueue(&mut self, req: Request, tx: Sender<Response>, submitted: Instant) {
+    /// Accept (or reject) a submission.  Under
+    /// [`StreamPolicy::admission`], a deadline-tagged request whose
+    /// estimated TTFT from current occupancy cannot meet its deadline
+    /// resolves immediately with [`Outcome::Rejected`].
+    pub fn enqueue(&mut self, sub: Submission) {
+        let Submission { req, done, stream, alive, submitted } = sub;
+        if self.cfg.stream.admission {
+            if let Some(d) = req.deadline {
+                if self.estimated_ttft(&req) > d {
+                    self.dec.note(TraceEvent::Reject { seq: req.id });
+                    let resp = Response {
+                        id: req.id,
+                        tokens: Vec::new(),
+                        outcome: Outcome::Rejected,
+                        queue_wait: 0.0,
+                        preempted_wait: 0.0,
+                        sim_latency: 0.0,
+                        sim_ttft: 0.0,
+                        sim_tpot: 0.0,
+                        batch_size: 0,
+                    };
+                    self.resolve(done, resp);
+                    return;
+                }
+            }
+        }
         let enqueued_sim = self.dec.now();
         self.pending[req.priority.idx()].push_back(Job {
             req,
-            tx,
+            done,
+            stream,
+            alive,
+            streamed: 0,
             submitted,
             enqueued_sim,
             queue_wait: 0.0,
@@ -424,10 +920,42 @@ impl<D: Decoder> Scheduler<D> {
         });
     }
 
+    /// TTFT estimate for an incoming request, from current occupancy:
+    /// each "wave" of work ahead of it (pending + suspended + stalled +
+    /// in flight, in units of `max_batch`) must produce up to the
+    /// configured output budget before a slot frees, then the request's
+    /// own chunked prefill runs.  Per-step cost is the observed mean;
+    /// with no steps observed yet there is no signal, so the estimate
+    /// is 0.0 (accept).
+    fn estimated_ttft(&self, req: &Request) -> f64 {
+        if self.stats.steps == 0 {
+            return 0.0;
+        }
+        let mean_step = self.dec.now() / self.stats.steps as f64;
+        let ahead = self.pending_len() + self.suspended.len() + self.stalled.len()
+            + self.dec.active();
+        let waves = ahead as f64 / self.cfg.max_batch.max(1) as f64;
+        let service_steps = self.cfg.max_output.max(1) as f64;
+        let prefill_steps =
+            (req.prompt.len() as f64 / self.cfg.prefill_chunk.max(1) as f64).ceil();
+        (waves * service_steps + prefill_steps) * mean_step
+    }
+
     pub fn has_work(&self) -> bool {
         self.pending.iter().any(|q| !q.is_empty())
             || !self.suspended.is_empty()
+            || !self.stalled.is_empty()
             || self.dec.active() > 0
+    }
+
+    /// Only backpressured sequences remain: nothing can progress until
+    /// their consumers drain (or disconnect).  The runner idles briefly
+    /// instead of spinning, and force-cancels them at shutdown.
+    pub fn only_stalled(&self) -> bool {
+        !self.stalled.is_empty()
+            && self.pending_len() == 0
+            && self.suspended.is_empty()
+            && self.dec.active() == 0
     }
 
     pub fn pending_len(&self) -> usize {
@@ -438,9 +966,13 @@ impl<D: Decoder> Scheduler<D> {
         &self.dec
     }
 
-    /// Preempt if allowed, admit what the mode allows, then advance one
-    /// token step.
+    /// One scheduler round: reap queue-side disconnects, retry stalled
+    /// stream backlogs, preempt if allowed, admit what the mode allows,
+    /// advance one token step, then pump freshly decoded tokens out to
+    /// their streams (cancelling / stalling as the consumers dictate).
     pub fn tick(&mut self) -> Result<()> {
+        self.reap_queue_disconnects();
+        self.flush_stalled();
         self.maybe_preempt()?;
         self.admit()?;
         if self.dec.active() == 0 {
@@ -451,7 +983,211 @@ impl<D: Decoder> Scheduler<D> {
         for fin in self.dec.step()? {
             self.retire(fin);
         }
+        self.pump_streams()?;
         Ok(())
+    }
+
+    /// Drop pending jobs whose client disconnected before admission:
+    /// they were never admitted, so there is nothing to reclaim — they
+    /// resolve as `Cancelled` and count as cancelled-in-queue.
+    fn reap_queue_disconnects(&mut self) {
+        let mut reaped: Vec<Job> = Vec::new();
+        for q in &mut self.pending {
+            if q.iter().all(|j| j.alive.load(Ordering::Relaxed)) {
+                continue;
+            }
+            let mut keep = VecDeque::with_capacity(q.len());
+            while let Some(job) = q.pop_front() {
+                if job.alive.load(Ordering::Relaxed) {
+                    keep.push_back(job);
+                } else {
+                    reaped.push(job);
+                }
+            }
+            *q = keep;
+        }
+        for job in reaped {
+            self.stats.cancelled_in_queue += 1;
+            self.dec.note(TraceEvent::Cancel { seq: job.req.id });
+            let resp = Response {
+                id: job.req.id,
+                tokens: Vec::new(),
+                outcome: Outcome::Cancelled,
+                queue_wait: 0.0,
+                preempted_wait: 0.0,
+                sim_latency: 0.0,
+                sim_ttft: 0.0,
+                sim_tpot: 0.0,
+                batch_size: 0,
+            };
+            self.resolve(job.done, resp);
+        }
+    }
+
+    /// Retry delivery of stalled backlogs.  A sequence whose backlog
+    /// drains re-enters the `suspended` store and reattaches through
+    /// the normal admission path; one whose consumer disconnected is
+    /// cancelled on the spot (its pins were already released when the
+    /// stall suspended it, so only the terminal remains).
+    fn flush_stalled(&mut self) {
+        if self.stalled.is_empty() {
+            return;
+        }
+        let now = self.dec.now();
+        let mut keep = Vec::new();
+        let mut cancels = Vec::new();
+        let mut resumes = Vec::new();
+        for mut st in std::mem::take(&mut self.stalled) {
+            let want = st.job.req.cancel_after.unwrap_or(usize::MAX);
+            let cap = want.min(st.produced.len());
+            let mut gone = !st.job.alive.load(Ordering::Relaxed);
+            if !gone {
+                let stream = st.job.stream.as_ref().expect("stalled jobs are streaming");
+                while st.job.streamed < cap {
+                    match stream.push(st.produced[st.job.streamed]) {
+                        StreamPush::Sent => st.job.streamed += 1,
+                        StreamPush::Full => break,
+                        StreamPush::Gone => {
+                            gone = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            if gone || st.produced.len() >= want {
+                cancels.push(st);
+            } else if st.job.streamed >= st.produced.len() {
+                resumes.push(st);
+            } else {
+                keep.push(st);
+            }
+        }
+        self.stalled = keep;
+        for st in cancels {
+            // the stall's suspend already released the pins; drop the
+            // detached state and resolve the terminal
+            let Stalled { seq, job, state, produced } = st;
+            drop(state);
+            self.dec.note(TraceEvent::Cancel { seq });
+            self.resolve_cancelled(job, produced, now);
+        }
+        for st in resumes {
+            self.suspended.push((st.seq, st.job, st.state));
+        }
+    }
+
+    /// After a step: forward freshly decoded tokens to each in-flight
+    /// stream, then act on consumer state — a full bounded channel
+    /// stalls the sequence (suspend + backlog), a dropped receiver or
+    /// cleared alive-flag or reached `cancel_after` cancels it
+    /// (detach-and-drop with immediate pin release).
+    fn pump_streams(&mut self) -> Result<()> {
+        enum Fate {
+            Stall(Vec<usize>),
+            Cancel,
+        }
+        let now = self.dec.now();
+        let mut ids: Vec<u64> = self.inflight.keys().copied().collect();
+        ids.sort_unstable();
+        let mut fates: Vec<(u64, Fate)> = Vec::new();
+        for id in ids {
+            let job = self.inflight.get_mut(&id).expect("id came from the in-flight set");
+            if !job.alive.load(Ordering::Relaxed) {
+                fates.push((id, Fate::Cancel));
+                continue;
+            }
+            if job.stream.is_none() && job.req.cancel_after.is_none() {
+                continue;
+            }
+            let produced = self.dec.peek_tokens(id);
+            let want = job.req.cancel_after.unwrap_or(usize::MAX);
+            let cap = want.min(produced.len());
+            let mut fate = None;
+            if let Some(stream) = &job.stream {
+                while job.streamed < cap {
+                    match stream.push(produced[job.streamed]) {
+                        StreamPush::Sent => job.streamed += 1,
+                        StreamPush::Full => {
+                            fate = Some(Fate::Stall(produced.clone()));
+                            break;
+                        }
+                        StreamPush::Gone => {
+                            fate = Some(Fate::Cancel);
+                            break;
+                        }
+                    }
+                }
+            } else {
+                job.streamed = cap;
+            }
+            if produced.len() >= want {
+                // the client walks away after `want` tokens
+                fate = Some(Fate::Cancel);
+            }
+            if let Some(f) = fate {
+                fates.push((id, f));
+            }
+        }
+        for (id, fate) in fates {
+            match fate {
+                Fate::Cancel => {
+                    let tokens = self.dec.cancel(id)?;
+                    let job = self.inflight.remove(&id).expect("cancelled job is in flight");
+                    self.resolve_cancelled(job, tokens, now);
+                }
+                Fate::Stall(produced) => {
+                    self.stats.stream_stalls += 1;
+                    self.dec.note(TraceEvent::StreamStall { seq: id });
+                    let state = self.dec.suspend(id)?;
+                    let mut job = self.inflight.remove(&id).expect("stalled job is in flight");
+                    job.suspended_at = now;
+                    self.stalled.push(Stalled { seq: id, job, state, produced });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Force-cancel every stalled stream (shutdown): a consumer that
+    /// never drains must not hold the runner open forever.
+    pub fn abort_stalled(&mut self) {
+        let now = self.dec.now();
+        for st in std::mem::take(&mut self.stalled) {
+            let Stalled { seq, job, state, produced } = st;
+            drop(state);
+            self.dec.note(TraceEvent::Cancel { seq });
+            self.resolve_cancelled(job, produced, now);
+        }
+    }
+
+    /// Resolve a cancelled request: terminal `Cancelled` with whatever
+    /// tokens it produced.  Latency percentiles track completed
+    /// requests only, so nothing is sampled here.
+    fn resolve_cancelled(&mut self, job: Job, tokens: Vec<usize>, now: f64) {
+        let resp = Response {
+            id: job.req.id,
+            tokens,
+            outcome: Outcome::Cancelled,
+            queue_wait: job.queue_wait,
+            preempted_wait: job.preempted_wait,
+            sim_latency: (now - job.admitted_sim).max(0.0),
+            sim_ttft: 0.0,
+            sim_tpot: 0.0,
+            batch_size: job.batch_at_admit,
+        };
+        self.resolve(job.done, resp);
+    }
+
+    /// The single terminal-send site: every submission resolves exactly
+    /// once through here, whatever its outcome.
+    fn resolve(&mut self, done: Sender<Response>, resp: Response) {
+        self.stats.requests += 1;
+        match resp.outcome {
+            Outcome::Completed => self.stats.completed += 1,
+            Outcome::Cancelled => self.stats.cancelled += 1,
+            Outcome::Rejected => self.stats.rejected += 1,
+        }
+        let _ = done.send(resp);
     }
 
     /// Under [`PreemptPolicy::After`], suspend the lowest-priority (most
@@ -546,24 +1282,46 @@ impl<D: Decoder> Scheduler<D> {
     }
 
     fn retire(&mut self, fin: SeqFinish) {
-        let Some(job) = self.inflight.remove(&fin.seq) else { return };
+        let Some(mut job) = self.inflight.remove(&fin.seq) else { return };
         let (latency, ttft, tpot) = (fin.latency(), fin.ttft(), fin.tpot());
-        self.stats.requests += 1;
         self.stats.total_output_tokens += fin.tokens.len() as u64;
+        // goodput: SLO-attaining tokens — the TTFT deadline is measured
+        // from submission on the simulated clock; deadline-free
+        // requests always attain
+        let attained = match job.req.deadline {
+            Some(d) => fin.sim_first_token - job.enqueued_sim <= d,
+            None => true,
+        };
+        if attained {
+            self.stats.goodput_tokens += fin.tokens.len() as u64;
+        }
         self.sim_latencies.push(latency);
         self.ttfts.push(ttft);
         self.tpots.push(tpot);
         self.preempted_waits.push(job.preempted_wait);
-        let _ = job.tx.send(Response {
+        // best-effort tail flush: the terminal Response carries the
+        // complete token list regardless, so a full bounded channel
+        // never blocks retirement
+        if let Some(stream) = &job.stream {
+            while job.streamed < fin.tokens.len() {
+                if !matches!(stream.push(fin.tokens[job.streamed]), StreamPush::Sent) {
+                    break;
+                }
+                job.streamed += 1;
+            }
+        }
+        let resp = Response {
             id: job.req.id,
             tokens: fin.tokens,
+            outcome: Outcome::Completed,
             queue_wait: job.queue_wait,
             preempted_wait: job.preempted_wait,
             sim_latency: latency,
             sim_ttft: ttft,
             sim_tpot: tpot,
             batch_size: job.batch_at_admit,
-        });
+        };
+        self.resolve(job.done, resp);
     }
 
     pub fn into_stats(mut self) -> ServerStats {
@@ -589,14 +1347,15 @@ impl<D: Decoder> Scheduler<D> {
 }
 
 enum Msg {
-    Job(Request, Sender<Response>, Instant),
+    Job(Submission),
     Shutdown,
 }
 
 pub struct Server {
     tx: Sender<Msg>,
     handle: JoinHandle<Result<ServerStats>>,
-    next_id: std::sync::atomic::AtomicU64,
+    next_id: AtomicU64,
+    stream: StreamPolicy,
 }
 
 impl Server {
@@ -607,31 +1366,54 @@ impl Server {
         D: Decoder,
         F: FnOnce() -> Result<D> + Send + 'static,
     {
+        let stream = cfg.stream;
         let (tx, rx) = channel::<Msg>();
         let handle = std::thread::spawn(move || runner(factory()?, rx, cfg));
-        Server { tx, handle, next_id: std::sync::atomic::AtomicU64::new(0) }
+        Server { tx, handle, next_id: AtomicU64::new(0), stream }
     }
 
-    /// Submit a Normal-priority request; returns the response channel.
-    pub fn submit(&self, prompt: Vec<usize>, max_output: usize) -> Receiver<Response> {
-        self.submit_prio(prompt, max_output, Priority::Normal)
+    /// Submit a request; returns its [`TokenStream`] handle.  Tokens
+    /// arrive per-step under the server's [`StreamPolicy`]; the
+    /// terminal [`Response`] carries the [`Outcome`] and the complete
+    /// token list.  Dropping the handle is a disconnect (the sequence
+    /// cancels); call [`TokenStream::wait`] to consume to completion.
+    pub fn submit(&self, spec: RequestSpec) -> TokenStream {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (sub, stream) = Submission::streaming(spec.into_request(id), self.stream);
+        let _ = self.tx.send(Msg::Job(sub));
+        stream
     }
 
-    /// Submit a request with an explicit [`Priority`].
+    /// Pre-streaming shape of `submit`: Normal priority, terminal-only
+    /// response channel.
+    #[deprecated(note = "build a `RequestSpec` and call `Server::submit`")]
+    pub fn submit_response(&self, prompt: Vec<usize>, max_output: usize) -> Receiver<Response> {
+        self.submit_terminal(RequestSpec::new(prompt).max_output(max_output))
+    }
+
+    /// Pre-streaming shape of `submit` with an explicit [`Priority`].
+    #[deprecated(note = "build a `RequestSpec` and call `Server::submit`")]
     pub fn submit_prio(
         &self,
         prompt: Vec<usize>,
         max_output: usize,
         priority: Priority,
     ) -> Receiver<Response> {
-        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let (rtx, rrx) = channel();
-        let req = Request { id, prompt, max_output, priority };
-        let _ = self.tx.send(Msg::Job(req, rtx, Instant::now()));
-        rrx
+        self.submit_terminal(RequestSpec::new(prompt).max_output(max_output).priority(priority))
     }
 
-    /// Drain outstanding work and stop the runner.
+    fn submit_terminal(&self, spec: RequestSpec) -> Receiver<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (sub, rx) = Submission::terminal(spec.into_request(id));
+        let _ = self.tx.send(Msg::Job(sub));
+        rx
+    }
+
+    /// Drain outstanding work and stop the runner.  Every submission
+    /// still in the system resolves with a terminal [`Response`] —
+    /// pending and in-flight work completes; streams still stalled on
+    /// an absent consumer are force-cancelled rather than holding the
+    /// runner open forever.
     pub fn shutdown(self) -> Result<ServerStats> {
         let _ = self.tx.send(Msg::Shutdown);
         self.handle.join().map_err(|_| anyhow::anyhow!("runner thread panicked"))?
@@ -651,14 +1433,14 @@ fn runner<D: Decoder>(dec: D, rx: Receiver<Msg>, cfg: ServerConfig) -> Result<Se
             // block for the first job, then give near-simultaneous
             // submitters a short window to join before the first step
             match rx.recv() {
-                Ok(Msg::Job(r, tx, t)) => sched.enqueue(r, tx, t),
+                Ok(Msg::Job(sub)) => sched.enqueue(sub),
                 Ok(Msg::Shutdown) | Err(_) => break,
             }
             let deadline = Instant::now() + batch_wait;
             while sched.pending_len() < max_batch {
                 let left = deadline.saturating_duration_since(Instant::now());
                 match rx.recv_timeout(left) {
-                    Ok(Msg::Job(r, tx, t)) => sched.enqueue(r, tx, t),
+                    Ok(Msg::Job(sub)) => sched.enqueue(sub),
                     Ok(Msg::Shutdown) => {
                         shutdown = true;
                         break;
@@ -674,7 +1456,7 @@ fn runner<D: Decoder>(dec: D, rx: Receiver<Msg>, cfg: ServerConfig) -> Result<Se
             // pick up whatever arrived since the last step, non-blocking
             loop {
                 match rx.try_recv() {
-                    Ok(Msg::Job(r, tx, t)) => sched.enqueue(r, tx, t),
+                    Ok(Msg::Job(sub)) => sched.enqueue(sub),
                     Ok(Msg::Shutdown) => shutdown = true,
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
@@ -682,6 +1464,15 @@ fn runner<D: Decoder>(dec: D, rx: Receiver<Msg>, cfg: ServerConfig) -> Result<Se
                         break;
                     }
                 }
+            }
+            if sched.only_stalled() {
+                if shutdown {
+                    // no consumer is coming to drain these
+                    sched.abort_stalled();
+                    continue;
+                }
+                // nothing can progress until a consumer drains; don't spin
+                std::thread::sleep(Duration::from_micros(200));
             }
             sched.tick()?;
         }
@@ -692,15 +1483,21 @@ fn runner<D: Decoder>(dec: D, rx: Receiver<Msg>, cfg: ServerConfig) -> Result<Se
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trace::Recorder;
 
     /// Step-level mock: one output token per step (the prompt reversed),
     /// a fixed simulated `dt` per step, retiring when the echo completes.
+    /// Carries an optional recorder mirroring the engine's pin-ledger
+    /// emission idiom (PinSet at admit/resume, PinRelease at
+    /// retire/suspend/cancel) so the trace conservation audits are
+    /// meaningful at the scheduler level.
     struct Mock {
         dt: f64,
         clock: f64,
         next: u64,
         seqs: Vec<MockSeq>,
         peak_active: usize,
+        rec: Recorder,
     }
 
     struct MockSeq {
@@ -713,7 +1510,7 @@ mod tests {
 
     impl Mock {
         fn new(dt: f64) -> Mock {
-            Mock { dt, clock: 0.0, next: 0, seqs: Vec::new(), peak_active: 0 }
+            Mock { dt, clock: 0.0, next: 0, seqs: Vec::new(), peak_active: 0, rec: Recorder::off() }
         }
     }
 
@@ -724,6 +1521,8 @@ mod tests {
             let out: Vec<usize> = prompt.iter().rev().copied().take(max_output.max(1)).collect();
             self.seqs.push(MockSeq { id, out, produced: 0, admitted: self.clock, first: 0.0 });
             self.peak_active = self.peak_active.max(self.seqs.len());
+            self.rec.emit(self.clock, TraceEvent::RequestAdmit { seq: id });
+            self.rec.emit(self.clock, TraceEvent::PinSet { owner: id });
             Ok(id)
         }
 
@@ -738,6 +1537,11 @@ mod tests {
                 }
                 s.produced += 1;
                 if s.produced >= s.out.len() {
+                    self.rec.emit(
+                        now,
+                        TraceEvent::RequestRetire { seq: s.id, output_tokens: s.out.len() as u32 },
+                    );
+                    self.rec.emit(now, TraceEvent::PinRelease { owner: s.id });
                     done.push(SeqFinish {
                         seq: s.id,
                         tokens: s.out,
@@ -767,6 +1571,8 @@ mod tests {
                 .iter()
                 .position(|s| s.id == seq)
                 .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
+            self.rec.emit(self.clock, TraceEvent::Suspend { seq });
+            self.rec.emit(self.clock, TraceEvent::PinRelease { owner: seq });
             Ok(Box::new(self.seqs.remove(i)))
         }
 
@@ -775,43 +1581,77 @@ mod tests {
                 .downcast::<MockSeq>()
                 .map_err(|_| anyhow::anyhow!("foreign suspended state"))?;
             let id = s.id;
+            self.rec.emit(self.clock, TraceEvent::Resume { seq: id });
+            self.rec.emit(self.clock, TraceEvent::PinSet { owner: id });
             self.seqs.push(*s);
             self.peak_active = self.peak_active.max(self.seqs.len());
             Ok(id)
         }
-    }
 
-    fn cfg(max_batch: usize, scheduler: SchedulerMode) -> ServerConfig {
-        ServerConfig {
-            max_batch,
-            batch_wait: Duration::from_millis(50),
-            max_output: 32,
-            scheduler,
-            prefill_chunk: 1,
-            preempt: PreemptPolicy::Off,
-            trace: false,
+        fn cancel(&mut self, seq: u64) -> Result<Vec<usize>> {
+            let i = self
+                .seqs
+                .iter()
+                .position(|s| s.id == seq)
+                .ok_or_else(|| anyhow::anyhow!("unknown sequence {seq}"))?;
+            self.rec.emit(self.clock, TraceEvent::Cancel { seq });
+            self.rec.emit(self.clock, TraceEvent::PinRelease { owner: seq });
+            let s = self.seqs.remove(i);
+            Ok(s.out[..s.produced.min(s.out.len())].to_vec())
+        }
+
+        fn peek_tokens(&self, seq: u64) -> Vec<usize> {
+            self.seqs
+                .iter()
+                .find(|s| s.id == seq)
+                .map(|s| s.out[..s.produced.min(s.out.len())].to_vec())
+                .unwrap_or_default()
+        }
+
+        fn note(&mut self, ev: TraceEvent) {
+            self.rec.emit(self.clock, ev);
+        }
+
+        fn set_tracing(&mut self, on: bool) {
+            if on {
+                if !self.rec.enabled() {
+                    self.rec = Recorder::on(0, "mock");
+                }
+            } else {
+                self.rec = Recorder::off();
+            }
+        }
+
+        fn take_trace(&mut self) -> Option<Trace> {
+            self.rec.take()
         }
     }
 
-    fn submit(
-        s: &mut Scheduler<Mock>,
-        id: u64,
-        prompt: Vec<usize>,
-        max_output: usize,
-    ) -> Receiver<Response> {
-        submit_prio(s, id, prompt, max_output, Priority::Normal)
+    fn cfg(max_batch: usize, scheduler: SchedulerMode) -> ServerConfig {
+        ServerConfig::default()
+            .with_max_batch(max_batch)
+            .with_batch_wait(Duration::from_millis(50))
+            .with_scheduler(scheduler)
     }
 
-    fn submit_prio(
+    /// The single submission helper (the old `submit`/`submit_prio`
+    /// pair collapsed into one `RequestSpec` path).
+    fn submit(s: &mut Scheduler<Mock>, id: u64, spec: RequestSpec) -> Receiver<Response> {
+        let (sub, rx) = Submission::terminal(spec.into_request(id));
+        s.enqueue(sub);
+        rx
+    }
+
+    /// Streaming submission under `policy`.
+    fn submit_stream(
         s: &mut Scheduler<Mock>,
         id: u64,
-        prompt: Vec<usize>,
-        max_output: usize,
-        priority: Priority,
-    ) -> Receiver<Response> {
-        let (tx, rx) = channel();
-        s.enqueue(Request { id, prompt, max_output, priority }, tx, Instant::now());
-        rx
+        spec: RequestSpec,
+        policy: StreamPolicy,
+    ) -> TokenStream {
+        let (sub, stream) = Submission::streaming(spec.into_request(id), policy);
+        s.enqueue(sub);
+        stream
     }
 
     fn drain(s: &mut Scheduler<Mock>) {
@@ -829,11 +1669,12 @@ mod tests {
     #[test]
     fn continuous_readmits_into_slots_freed_by_early_retirement() {
         let mut s = Scheduler::new(Mock::new(1.0), cfg(2, SchedulerMode::Continuous));
-        let ra = submit(&mut s, 0, (0..8).collect(), 8);
-        let rb = submit(&mut s, 1, vec![1, 2], 2);
-        let rc = submit(&mut s, 2, vec![3, 4], 2);
+        let ra = submit(&mut s, 0, RequestSpec::new((0..8).collect()).max_output(8));
+        let rb = submit(&mut s, 1, RequestSpec::new(vec![1, 2]).max_output(2));
+        let rc = submit(&mut s, 2, RequestSpec::new(vec![3, 4]).max_output(2));
         drain(&mut s);
         let (a, b, c) = (ra.recv().unwrap(), rb.recv().unwrap(), rc.recv().unwrap());
+        assert_eq!(a.outcome, Outcome::Completed);
         assert_eq!(a.tokens.len(), 8);
         assert_eq!(b.tokens, vec![2, 1]);
         assert_eq!(c.tokens, vec![4, 3]);
@@ -851,9 +1692,9 @@ mod tests {
     #[test]
     fn static_runs_batches_to_completion() {
         let mut s = Scheduler::new(Mock::new(1.0), cfg(2, SchedulerMode::Static));
-        let _ra = submit(&mut s, 0, (0..8).collect(), 8);
-        let _rb = submit(&mut s, 1, vec![1, 2], 2);
-        let rc = submit(&mut s, 2, vec![3, 4], 2);
+        let _ra = submit(&mut s, 0, RequestSpec::new((0..8).collect()).max_output(8));
+        let _rb = submit(&mut s, 1, RequestSpec::new(vec![1, 2]).max_output(2));
+        let rc = submit(&mut s, 2, RequestSpec::new(vec![3, 4]).max_output(2));
         drain(&mut s);
         let c = rc.recv().unwrap();
         assert_eq!(c.batch_size, 1, "static mode admits C into a fresh batch");
@@ -865,7 +1706,8 @@ mod tests {
     fn ttft_and_tpot_surface_in_stats() {
         let dt = 0.25;
         let mut s = Scheduler::new(Mock::new(dt), cfg(4, SchedulerMode::Continuous));
-        let rxs: Vec<_> = (0..4).map(|i| submit(&mut s, i, vec![1, 2, 3, 4], 4)).collect();
+        let rxs: Vec<_> =
+            (0..4).map(|i| submit(&mut s, i, RequestSpec::new(vec![1, 2, 3, 4]).max_output(4))).collect();
         drain(&mut s);
         for rx in rxs {
             let r = rx.recv().unwrap();
@@ -882,7 +1724,9 @@ mod tests {
     #[test]
     fn max_batch_bounds_slot_occupancy() {
         let mut s = Scheduler::new(Mock::new(1.0), cfg(2, SchedulerMode::Continuous));
-        let rxs: Vec<_> = (0..5).map(|i| submit(&mut s, i, vec![i as usize, 9], 2)).collect();
+        let rxs: Vec<_> = (0..5)
+            .map(|i| submit(&mut s, i, RequestSpec::new(vec![i as usize, 9]).max_output(2)))
+            .collect();
         drain(&mut s);
         for rx in rxs {
             assert!(rx.recv().unwrap().batch_size <= 2);
@@ -893,32 +1737,48 @@ mod tests {
     #[test]
     fn responses_match_requests_threaded() {
         let server = Server::start(|| Ok(Mock::new(0.5)), ServerConfig::default());
-        let rx1 = server.submit(vec![1, 2, 3], 8);
-        let rx2 = server.submit(vec![9, 8], 8);
-        let r1 = rx1.recv().unwrap();
-        let r2 = rx2.recv().unwrap();
+        let s1 = server.submit(RequestSpec::new(vec![1, 2, 3]).max_output(8));
+        let s2 = server.submit(RequestSpec::new(vec![9, 8]).max_output(8));
+        let (id1, id2) = (s1.id(), s2.id());
+        let r1 = s1.wait().unwrap();
+        let r2 = s2.wait().unwrap();
         assert_eq!(r1.tokens, vec![3, 2, 1]);
         assert_eq!(r2.tokens, vec![8, 9]);
+        assert_eq!(r1.outcome, Outcome::Completed);
+        assert_eq!((r1.id, r2.id), (id1, id2));
         assert_ne!(r1.id, r2.id);
         let stats = server.shutdown().unwrap();
         assert_eq!(stats.requests, 2);
+        assert_eq!(stats.completed, 2);
         assert!(stats.queue_wait.p99 >= stats.queue_wait.p50);
+    }
+
+    /// The pre-streaming wrappers still work: terminal-only channel,
+    /// Normal or explicit priority, same Response shape.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_submit_wrappers_still_resolve() {
+        let server = Server::start(|| Ok(Mock::new(0.5)), ServerConfig::default());
+        let rx1 = server.submit_response(vec![1, 2, 3], 8);
+        let rx2 = server.submit_prio(vec![9, 8], 8, Priority::High);
+        assert_eq!(rx1.recv().unwrap().tokens, vec![3, 2, 1]);
+        assert_eq!(rx2.recv().unwrap().tokens, vec![8, 9]);
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.completed, 2);
     }
 
     #[test]
     fn batching_groups_concurrent_requests() {
-        let cfg = ServerConfig {
-            max_batch: 8,
-            batch_wait: Duration::from_millis(50),
-            max_output: 8,
-            scheduler: SchedulerMode::Continuous,
-            prefill_chunk: 1,
-            preempt: PreemptPolicy::Off,
-            trace: false,
-        };
+        let cfg = ServerConfig::default()
+            .with_max_batch(8)
+            .with_batch_wait(Duration::from_millis(50))
+            .with_max_output(8);
         let server = Server::start(|| Ok(Mock::new(0.5)), cfg);
-        let rxs: Vec<_> = (0..6).map(|i| server.submit(vec![i, i + 1], 4)).collect();
-        let responses: Vec<Response> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let streams: Vec<_> = (0..6)
+            .map(|i| server.submit(RequestSpec::new(vec![i, i + 1]).max_output(4)))
+            .collect();
+        let responses: Vec<Response> =
+            streams.into_iter().map(|st| st.wait().unwrap()).collect();
         assert!(responses.iter().any(|r| r.batch_size > 1));
         let stats = server.shutdown().unwrap();
         assert_eq!(stats.requests, 6);
@@ -927,19 +1787,16 @@ mod tests {
 
     #[test]
     fn shutdown_drains_pending() {
-        let cfg = ServerConfig {
-            max_batch: 64,
-            batch_wait: Duration::from_millis(200),
-            max_output: 8,
-            scheduler: SchedulerMode::Continuous,
-            prefill_chunk: 1,
-            preempt: PreemptPolicy::Off,
-            trace: false,
-        };
+        let cfg = ServerConfig::default()
+            .with_max_batch(64)
+            .with_batch_wait(Duration::from_millis(200))
+            .with_max_output(8);
         let server = Server::start(|| Ok(Mock::new(0.5)), cfg);
-        let rx = server.submit(vec![7], 4);
+        let stream = server.submit(RequestSpec::new(vec![7]).max_output(4));
         let stats = server.shutdown().unwrap();
-        assert_eq!(rx.recv().unwrap().tokens, vec![7]);
+        let r = stream.wait().unwrap();
+        assert_eq!(r.tokens, vec![7]);
+        assert_eq!(r.outcome, Outcome::Completed);
         assert_eq!(stats.requests, 1);
         // decoders without the big-little fallback report a zero quality
         // proxy through the defaulted trait accessor
@@ -949,20 +1806,17 @@ mod tests {
     #[test]
     fn no_starvation_under_load() {
         for mode in [SchedulerMode::Static, SchedulerMode::Continuous] {
-            let cfg = ServerConfig {
-                max_batch: 3,
-                batch_wait: Duration::from_millis(1),
-                max_output: 8,
-                scheduler: mode,
-                prefill_chunk: 1,
-                preempt: PreemptPolicy::Off,
-                trace: false,
-            };
+            let cfg = ServerConfig::default()
+                .with_max_batch(3)
+                .with_batch_wait(Duration::from_millis(1))
+                .with_max_output(8)
+                .with_scheduler(mode);
             let server = Server::start(|| Ok(Mock::new(0.01)), cfg);
-            let rxs: Vec<_> = (0..30).map(|i| server.submit(vec![i], 4)).collect();
+            let streams: Vec<_> =
+                (0..30).map(|i| server.submit(RequestSpec::new(vec![i]).max_output(4))).collect();
             let mut got = 0;
-            for rx in rxs {
-                if rx.recv_timeout(Duration::from_secs(5)).is_ok() {
+            for st in streams {
+                if st.wait_timeout(Duration::from_secs(5)).is_ok() {
                     got += 1;
                 }
             }
@@ -993,8 +1847,9 @@ mod tests {
     #[test]
     fn high_priority_admits_before_earlier_low() {
         let mut s = Scheduler::new(Mock::new(1.0), cfg(1, SchedulerMode::Continuous));
-        let _rl = submit_prio(&mut s, 0, vec![1, 2], 2, Priority::Low);
-        let rh = submit_prio(&mut s, 1, vec![8, 9], 2, Priority::High);
+        let _rl = submit(&mut s, 0, RequestSpec::new(vec![1, 2]).max_output(2).priority(Priority::Low));
+        let rh =
+            submit(&mut s, 1, RequestSpec::new(vec![8, 9]).max_output(2).priority(Priority::High));
         s.tick().unwrap();
         assert_eq!(s.decoder().seqs.len(), 1);
         assert_eq!(s.decoder().seqs[0].out, vec![9, 8], "High must take the only slot");
@@ -1012,12 +1867,17 @@ mod tests {
         config.preempt = PreemptPolicy::After(2.0);
         let mut s = Scheduler::new(Mock::new(1.0), config);
         let low_prompt: Vec<usize> = (0..50).collect();
-        let rl0 = submit_prio(&mut s, 0, low_prompt.clone(), 50, Priority::Low);
-        let rl1 = submit_prio(&mut s, 1, low_prompt.clone(), 50, Priority::Low);
+        let low = |p: Vec<usize>| RequestSpec::new(p).max_output(50).priority(Priority::Low);
+        let rl0 = submit(&mut s, 0, low(low_prompt.clone()));
+        let rl1 = submit(&mut s, 1, low(low_prompt.clone()));
         s.tick().unwrap();
         s.tick().unwrap();
         let enqueued_at = s.decoder().now();
-        let rh = submit_prio(&mut s, 2, vec![5, 6, 7], 3, Priority::High);
+        let rh = submit(
+            &mut s,
+            2,
+            RequestSpec::new(vec![5, 6, 7]).max_output(3).priority(Priority::High),
+        );
         // drive until the High response lands; record the sim time
         let mut high_done_at = f64::NAN;
         let mut guard = 0;
@@ -1057,11 +1917,16 @@ mod tests {
     fn preempt_off_high_waits_for_a_free_slot() {
         let mut s = Scheduler::new(Mock::new(1.0), cfg(2, SchedulerMode::Continuous));
         let low_prompt: Vec<usize> = (0..50).collect();
-        let _rl0 = submit_prio(&mut s, 0, low_prompt.clone(), 50, Priority::Low);
-        let _rl1 = submit_prio(&mut s, 1, low_prompt, 50, Priority::Low);
+        let low = |p: Vec<usize>| RequestSpec::new(p).max_output(50).priority(Priority::Low);
+        let _rl0 = submit(&mut s, 0, low(low_prompt.clone()));
+        let _rl1 = submit(&mut s, 1, low(low_prompt));
         s.tick().unwrap();
         s.tick().unwrap();
-        let rh = submit_prio(&mut s, 2, vec![5, 6, 7], 3, Priority::High);
+        let rh = submit(
+            &mut s,
+            2,
+            RequestSpec::new(vec![5, 6, 7]).max_output(3).priority(Priority::High),
+        );
         let mut high_done_at = f64::NAN;
         let mut guard = 0;
         while s.has_work() {
@@ -1088,10 +1953,10 @@ mod tests {
         let mut config = cfg(1, SchedulerMode::Continuous);
         config.preempt = PreemptPolicy::After(0.0);
         let mut s = Scheduler::new(Mock::new(1.0), config);
-        let rn = submit_prio(&mut s, 0, (0..20).collect(), 20, Priority::Normal);
+        let rn = submit(&mut s, 0, RequestSpec::new((0..20).collect()).max_output(20));
         s.tick().unwrap();
         // a Normal waiter must NOT preempt the in-flight Normal sequence
-        let _rn2 = submit_prio(&mut s, 1, vec![1, 2], 2, Priority::Normal);
+        let _rn2 = submit(&mut s, 1, RequestSpec::new(vec![1, 2]).max_output(2));
         for _ in 0..5 {
             s.tick().unwrap();
         }
@@ -1100,5 +1965,217 @@ mod tests {
         drain(&mut s);
         assert_eq!(rn.recv().unwrap().tokens.len(), 20);
         assert_eq!(s.into_stats().preemptions, 0);
+    }
+
+    // ---------------------------------------------------------- streaming
+
+    /// Cancel mid-decode: the slot frees and the pin ledger is empty
+    /// within one step, the terminal is `Cancelled` with the partial
+    /// tokens, and the trace replay proves zero leaked pins.
+    #[test]
+    fn cancel_mid_decode_frees_slot_and_pin_ledger() {
+        let config = cfg(2, SchedulerMode::Continuous).with_trace(true);
+        let mut s = Scheduler::new(Mock::new(1.0), config);
+        let stream = submit_stream(
+            &mut s,
+            0,
+            RequestSpec::new((0..20).collect()).max_output(20),
+            StreamPolicy::default(),
+        );
+        let rb = submit(&mut s, 1, RequestSpec::new(vec![1, 2]).max_output(2));
+        s.tick().unwrap();
+        s.tick().unwrap();
+        stream.cancel();
+        s.tick().unwrap();
+        assert_eq!(s.decoder().active(), 0, "cancel must free the slot within one step");
+        let r = stream.wait().unwrap();
+        assert_eq!(r.outcome, Outcome::Cancelled);
+        assert!(!r.tokens.is_empty() && r.tokens.len() < 20, "partial tokens ride the terminal");
+        assert_eq!(rb.recv().unwrap().outcome, Outcome::Completed);
+        let stats = s.into_stats();
+        assert_eq!((stats.completed, stats.cancelled, stats.requests), (1, 1, 2));
+        let trace = stats.trace.expect("tracing was on");
+        trace.audit_pins(0).expect("a cancelled sequence must leak zero pins");
+    }
+
+    /// Disconnect while queued: the request is never admitted, counts
+    /// as cancelled-in-queue, and still resolves with a terminal.
+    #[test]
+    fn disconnect_while_queued_counts_cancelled_in_queue() {
+        let mut s = Scheduler::new(Mock::new(1.0), cfg(1, SchedulerMode::Continuous));
+        let ra = submit(&mut s, 0, RequestSpec::new((0..10).collect()).max_output(10));
+        let stream = submit_stream(
+            &mut s,
+            1,
+            RequestSpec::new(vec![1, 2, 3]).max_output(3),
+            StreamPolicy::default(),
+        );
+        s.tick().unwrap();
+        stream.cancel();
+        s.tick().unwrap();
+        drain(&mut s);
+        assert_eq!(s.decoder().peak_active, 1, "the disconnected request was never admitted");
+        assert_eq!(stream.wait().unwrap().outcome, Outcome::Cancelled);
+        assert_eq!(ra.recv().unwrap().outcome, Outcome::Completed);
+        let stats = s.into_stats();
+        assert_eq!((stats.completed, stats.cancelled, stats.cancelled_in_queue), (1, 1, 1));
+    }
+
+    /// SLO-aware admission under synthetic overload: hopeless deadlines
+    /// are rejected up front, so goodput (SLO-attaining tok/s) is
+    /// strictly better than letting them complete late — and no fewer
+    /// SLO-attaining tokens are produced.
+    #[test]
+    fn admission_rejects_hopeless_deadlines_and_protects_goodput() {
+        let run = |admission: bool| {
+            let config = cfg(1, SchedulerMode::Continuous)
+                .with_max_output(5)
+                .with_stream(StreamPolicy::default().with_admission(admission));
+            let mut s = Scheduler::new(Mock::new(1.0), config);
+            let warm = submit(&mut s, 0, RequestSpec::new((0..5).collect()).max_output(5));
+            s.tick().unwrap();
+            let rxs: Vec<_> = (1..=5)
+                .map(|i| {
+                    submit(
+                        &mut s,
+                        i,
+                        RequestSpec::new((0..5).collect()).max_output(5).deadline(3.0),
+                    )
+                })
+                .collect();
+            drain(&mut s);
+            assert_eq!(warm.recv().unwrap().outcome, Outcome::Completed);
+            let expect = if admission { Outcome::Rejected } else { Outcome::Completed };
+            for rx in rxs {
+                assert_eq!(rx.recv().unwrap().outcome, expect);
+            }
+            s.into_stats()
+        };
+        let off = run(false);
+        let on = run(true);
+        assert_eq!(off.rejected, 0);
+        assert_eq!(on.rejected, 5);
+        assert!(on.goodput_tokens >= off.goodput_tokens);
+        assert!(
+            on.goodput() > off.goodput(),
+            "admission on {} must beat off {}",
+            on.goodput(),
+            off.goodput()
+        );
+    }
+
+    /// Every submission resolves with exactly one terminal outcome —
+    /// completed, cancelled (mid-decode and in-queue), and rejected all
+    /// at once; no receiver is silently dropped.
+    #[test]
+    fn every_submission_resolves_with_a_terminal_outcome() {
+        let config = cfg(1, SchedulerMode::Continuous)
+            .with_max_output(4)
+            .with_stream(StreamPolicy::default().with_admission(true));
+        let mut s = Scheduler::new(Mock::new(1.0), config);
+        let completed = submit(&mut s, 0, RequestSpec::new(vec![1, 2, 3, 4]).max_output(4));
+        s.tick().unwrap();
+        let rejected =
+            submit(&mut s, 1, RequestSpec::new(vec![1, 2, 3]).max_output(4).deadline(1e-6));
+        let cancelled = submit_stream(
+            &mut s,
+            2,
+            RequestSpec::new((0..8).collect()).max_output(8),
+            StreamPolicy::default(),
+        );
+        let queue_dropped = submit_stream(
+            &mut s,
+            3,
+            RequestSpec::new(vec![5]).max_output(2),
+            StreamPolicy::default(),
+        );
+        queue_dropped.cancel();
+        for _ in 0..6 {
+            s.tick().unwrap();
+        }
+        cancelled.cancel();
+        drain(&mut s);
+        assert_eq!(completed.recv().unwrap().outcome, Outcome::Completed);
+        assert_eq!(rejected.recv().unwrap().outcome, Outcome::Rejected);
+        assert_eq!(cancelled.wait().unwrap().outcome, Outcome::Cancelled);
+        assert_eq!(queue_dropped.wait().unwrap().outcome, Outcome::Cancelled);
+        let stats = s.into_stats();
+        assert_eq!(stats.requests, 4);
+        assert_eq!(
+            (stats.completed, stats.cancelled, stats.cancelled_in_queue, stats.rejected),
+            (1, 2, 1, 1)
+        );
+    }
+
+    /// Backpressure: a bounded channel whose consumer stops reading
+    /// suspends the sequence at a step boundary; draining the channel
+    /// flushes the backlog, resumes the sequence, and it completes with
+    /// its full token list.  Pins balance throughout.
+    #[test]
+    fn bounded_stream_backpressures_then_resumes() {
+        let policy = StreamPolicy::default().with_buffer(2);
+        let config = cfg(2, SchedulerMode::Continuous).with_trace(true).with_stream(policy);
+        let mut s = Scheduler::new(Mock::new(1.0), config);
+        let stream =
+            submit_stream(&mut s, 0, RequestSpec::new((0..10).collect()).max_output(10), policy);
+        // nobody consumes: two tokens fill the channel, the third stalls
+        for _ in 0..5 {
+            s.tick().unwrap();
+        }
+        assert_eq!(s.decoder().active(), 0, "the stalled sequence left its slot");
+        // now consume: backlog flushes and the sequence resumes
+        let mut got = Vec::new();
+        let mut guard = 0;
+        let resp = loop {
+            while let Some(t) = stream.poll_token() {
+                got.push(t);
+            }
+            if let Some(r) = stream.poll_response() {
+                while let Some(t) = stream.poll_token() {
+                    got.push(t);
+                }
+                break r;
+            }
+            s.tick().unwrap();
+            guard += 1;
+            assert!(guard < 100, "stalled stream never completed");
+        };
+        assert_eq!(resp.outcome, Outcome::Completed);
+        assert_eq!(resp.tokens.len(), 10);
+        assert_eq!(&resp.tokens[..got.len()], &got[..], "streamed tokens are an in-order prefix");
+        let stats = s.into_stats();
+        assert!(stats.stream_stalls >= 1);
+        assert_eq!(stats.completed, 1);
+        let trace = stats.trace.expect("tracing was on");
+        trace.audit_pins(0).expect("stall/resume cycles must leak zero pins");
+    }
+
+    /// With every streaming knob off, attaching stream handles does not
+    /// perturb the decode: tokens, step count, and the simulated clock
+    /// are bit-identical to terminal-only submissions.
+    #[test]
+    fn streaming_handles_do_not_perturb_decode() {
+        let run = |streaming: bool| {
+            let mut s = Scheduler::new(Mock::new(1.0), cfg(2, SchedulerMode::Continuous));
+            let mut terminals = Vec::new();
+            let mut streams = Vec::new();
+            for i in 0..6u64 {
+                let spec = RequestSpec::new(vec![i as usize, 9, 7]).max_output(3);
+                if streaming {
+                    streams.push(submit_stream(&mut s, i, spec, StreamPolicy::default()));
+                } else {
+                    terminals.push(submit(&mut s, i, spec));
+                }
+            }
+            drain(&mut s);
+            let toks: Vec<Vec<usize>> = if streaming {
+                streams.into_iter().map(|st| st.wait().unwrap().tokens).collect()
+            } else {
+                terminals.into_iter().map(|rx| rx.recv().unwrap().tokens).collect()
+            };
+            let stats = s.into_stats();
+            (toks, stats.steps, stats.total_sim_seconds.to_bits())
+        };
+        assert_eq!(run(false), run(true));
     }
 }

@@ -271,6 +271,20 @@ impl DecodeSession {
         crate::metrics::degraded_frac(self.degraded_execs, self.total_assignments)
     }
 
+    /// Tokens an in-flight sequence has produced so far (empty for an
+    /// unknown or still-prefilling sequence).  The streaming front-end
+    /// polls this after each step to forward newly decoded tokens.
+    pub fn emitted_tokens(&self, seq: u64) -> Vec<usize> {
+        self.seqs.iter().find(|s| s.id == seq).map(|s| s.tokens.clone()).unwrap_or_default()
+    }
+
+    /// Record a scheduler-originated event (rejection, queue-side
+    /// cancellation, stream stall) onto this session's trace lane at the
+    /// current simulated time.  No-op when tracing is off.
+    pub fn note(&mut self, ev: TraceEvent) {
+        self.rec.emit(self.clock.now(), ev);
+    }
+
     /// Cache/transfer snapshot (callers fill in `requests`).
     pub fn report_base(&self) -> Report {
         Report {
@@ -1084,6 +1098,26 @@ impl<'a> Engine<'a> {
         sess.cache.release(seq);
         let now = sess.clock.now();
         sess.rec.emit(now, TraceEvent::Suspend { seq });
+        sess.rec.emit(now, TraceEvent::PinRelease { owner: seq });
+        Ok(sess.seqs.remove(i))
+    }
+
+    /// Cancel an in-flight sequence: the one-way version of
+    /// [`Engine::suspend`].  The slot frees and the pin-ledger entries
+    /// release immediately — same reclaim path as suspension — but the
+    /// detached state is returned only so the caller can harvest the
+    /// tokens produced so far; it is never resumed.  Emits
+    /// [`TraceEvent::Cancel`] + [`TraceEvent::PinRelease`] so the pin
+    /// conservation audit proves a cancelled sequence leaks nothing.
+    pub fn cancel(&self, sess: &mut DecodeSession, seq: u64) -> Result<SeqState> {
+        let i = sess
+            .seqs
+            .iter()
+            .position(|s| s.id == seq)
+            .ok_or_else(|| anyhow::anyhow!("sequence {seq} is not in flight"))?;
+        sess.cache.release(seq);
+        let now = sess.clock.now();
+        sess.rec.emit(now, TraceEvent::Cancel { seq });
         sess.rec.emit(now, TraceEvent::PinRelease { owner: seq });
         Ok(sess.seqs.remove(i))
     }

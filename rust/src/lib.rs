@@ -63,8 +63,12 @@
 //!                     or static run-to-completion batches; per-step
 //!                     prefill token budget (`--prefill-chunk`);
 //!                     priority classes with per-class queues and
-//!                     `--preempt` suspend/resume preemption;
-//!                     TTFT/TPOT + preempted-wait serving stats (see
+//!                     `--preempt` suspend/resume preemption; the
+//!                     streaming front-end (`RequestSpec` submission,
+//!                     per-token `TokenStream` handles with bounded-
+//!                     buffer backpressure, cancel/disconnect, SLO-aware
+//!                     admission, terminal `Outcome`s); TTFT/TPOT +
+//!                     preempted-wait + goodput serving stats (see
 //!                     docs/SERVING.md).
 //! * [`eval`]        — ROUGE-L, exact-match accuracy, perplexity.
 //! * [`metrics`]     — throughput/latency/transfer reporting.
@@ -80,9 +84,11 @@
 //! Cluster layer (the first tier above the single-engine stack):
 //! * [`cluster`]     — replica fleet simulator: per-replica cache/PCIe/
 //!   VRAM/clock stacks with step-granular decode slots (per-priority
-//!   queues, `--preempt` suspend/resume, per-class latency slices),
-//!   behind pluggable dispatchers (round-robin, least-loaded,
-//!   expert-affinity) that see live slot occupancy.  Affinity routing
+//!   queues, `--preempt` suspend/resume, per-class latency slices,
+//!   streaming clients via `StreamMix` — deadlines, cancel-after-N,
+//!   queued disconnects — with SLO-aware admission and goodput
+//!   accounting), behind pluggable dispatchers (round-robin,
+//!   least-loaded, expert-affinity) that see live slot occupancy.  Affinity routing
 //!   sends each request to the replica whose resident experts best
 //!   match its `predict_plan` prefetch set, compounding MELINOE's top-C
 //!   routing concentration fleet-wide (see docs/CLUSTER.md).

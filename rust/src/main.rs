@@ -11,9 +11,12 @@
 use anyhow::{anyhow, Result};
 use melinoe::clock::GpuSpec;
 use melinoe::cluster;
-use melinoe::cluster::workload::{OutputLen, PriorityMix};
+use melinoe::cluster::workload::{OutputLen, PriorityMix, StreamMix};
 use melinoe::coordinator::workload::Arrival;
-use melinoe::coordinator::{Decoder, PreemptPolicy, SchedulerMode, SeqFinish, Server, ServerConfig};
+use melinoe::coordinator::{
+    Decoder, Outcome, PreemptPolicy, RequestSpec, SchedulerMode, SeqFinish, Server, ServerConfig,
+    StreamPolicy,
+};
 use melinoe::engine::{DecodeSession, Engine, SeqState};
 use melinoe::metrics::{fmt2, Table};
 use melinoe::policies::PolicyConfig;
@@ -31,7 +34,8 @@ commands:
                      (table1 fig1a fig1b fig3 table2 table3 fig4 fig5 table4
                       table5 table11 fig6 heatmaps fig11 table12 fig12 fig13
                       table13 ext_layerwise ext_cluster ext_continuous
-                      ext_prefill ext_overlap ext_preempt ext_quant)
+                      ext_prefill ext_overlap ext_preempt ext_quant
+                      ext_stream)
   serve              step-level serving loop over the eval workload
   cluster            multi-replica serving simulation: compare balancers
   decode             decode one prompt, print tokens + transfer stats
@@ -69,6 +73,25 @@ common options:
                      priority (default 0)
   --low-frac <f>     serve/cluster: fraction of requests submitted Low
                      priority (default 0; the rest are Normal)
+  --deadline-mix <f> serve/cluster: fraction of requests carrying a TTFT
+                     deadline (default 0); goodput counts only completed
+                     requests whose first token met their deadline
+  --deadline-slack <s>
+                     serve/cluster: the deadline granted to deadline-mix
+                     requests, simulated seconds from arrival (default 1)
+  --cancel-after <n> serve/cluster: cancelling clients hang up after
+                     consuming n tokens (0 = off); the request terminates
+                     Cancelled with its partial output, slot and pins
+                     reclaimed at the step boundary
+  --cancel-frac <f>  serve/cluster: fraction of requests that cancel when
+                     --cancel-after is set (default 1)
+  --disconnect-rate <f>
+                     serve/cluster: fraction of clients that disconnect
+                     while still queued — never admitted, counted as
+                     cancelled-in-queue (default 0)
+  --admission        serve/cluster: SLO-aware admission control — reject
+                     deadline requests whose estimated TTFT already
+                     misses, instead of serving them to a p99 miss
   --trace <file>     serve/cluster: record the structured sim-time event
                      stream and write a Chrome/Perfetto trace JSON (open
                      in ui.perfetto.dev; one lane per replica plus a
@@ -141,6 +164,26 @@ fn quant_args(
     Ok((quant, little, threshold))
 }
 
+/// Parse the streaming-workload flags shared by `serve` and `cluster`
+/// into a [`StreamMix`] plus the admission toggle — one builder path for
+/// both subcommands, so the knobs can never drift apart.  With every
+/// flag omitted the mix is [`StreamMix::none`] and workloads (and decode
+/// numerics) are bit-identical to a pre-streaming build.
+fn stream_args(args: &Args) -> Result<(StreamMix, bool)> {
+    let deadline_frac = args.get_f64("deadline-mix", 0.0)?.clamp(0.0, 1.0);
+    let deadline_slack = args.get_f64("deadline-slack", 1.0)?.max(0.0);
+    let cancel_after = args.get_usize("cancel-after", 0)?;
+    let cancel_frac = if cancel_after > 0 {
+        args.get_f64("cancel-frac", 1.0)?.clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let disconnect_frac = args.get_f64("disconnect-rate", 0.0)?.clamp(0.0, 1.0);
+    let mix =
+        StreamMix { deadline_frac, deadline_slack, cancel_frac, cancel_after, disconnect_frac };
+    Ok((mix, args.has_flag("admission")))
+}
+
 /// Owns everything the serving thread needs (constructed in-thread; PJRT
 /// handles are not Send).  The persistent `DecodeSession` carries the
 /// in-flight sequences, expert cache and simulated clock across step
@@ -199,6 +242,20 @@ impl Decoder for OwnedEngine {
         engine.resume(&mut self.sess, *st)
     }
 
+    fn cancel(&mut self, seq: u64) -> Result<Vec<usize>> {
+        let engine: Engine = self.parts.engine(&self.ctx, self.gpu.clone());
+        let st = engine.cancel(&mut self.sess, seq)?;
+        Ok(st.tokens)
+    }
+
+    fn peek_tokens(&self, seq: u64) -> Vec<usize> {
+        self.sess.emitted_tokens(seq)
+    }
+
+    fn note(&mut self, ev: melinoe::trace::TraceEvent) {
+        self.sess.note(ev);
+    }
+
     fn set_tracing(&mut self, on: bool) {
         self.sess.set_tracing(on);
     }
@@ -229,6 +286,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed", 42)? as u64;
     let ds = args.get_or("dataset", "dolly").to_string();
     let trace_path = args.get("trace").map(str::to_string);
+    let (smix, admission) = stream_args(args)?;
 
     // load the prompts up-front (the server thread owns the engine)
     let ctx0 = Ctx::load(&melinoe::artifacts_dir(), &preset)?;
@@ -268,27 +326,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let parts = ctx.parts(&policy, &ds2)?;
             Ok(OwnedEngine::new(ctx, parts, gpu2))
         },
-        ServerConfig {
-            max_batch,
-            batch_wait: std::time::Duration::from_millis(5),
-            max_output,
-            scheduler,
-            prefill_chunk,
-            preempt,
-            trace: trace_path.is_some(),
-        },
+        ServerConfig::default()
+            .with_max_batch(max_batch)
+            .with_batch_wait(std::time::Duration::from_millis(5))
+            .with_max_output(max_output)
+            .with_scheduler(scheduler)
+            .with_prefill_chunk(prefill_chunk)
+            .with_preempt(preempt)
+            .with_trace(trace_path.is_some())
+            .with_stream(StreamPolicy::default().with_admission(admission)),
     );
 
     let t0 = std::time::Instant::now();
     let mix = PriorityMix { high: high_frac, low: low_frac };
     let mut prio_rng = Rng::new(seed);
-    let rxs: Vec<_> = prompts
+    let mut stream_rng = Rng::new(seed ^ 0x00c0_ffee);
+    let streams: Vec<_> = prompts
         .into_iter()
-        .map(|p| server.submit_prio(p, max_output, mix.draw(&mut prio_rng)))
+        .map(|p| {
+            let mut spec =
+                RequestSpec::new(p).max_output(max_output).priority(mix.draw(&mut prio_rng));
+            let (deadline, cancel_after, disconnect) = smix.draw(&mut stream_rng, 0.0);
+            if let Some(d) = deadline {
+                spec = spec.deadline(d);
+            }
+            if let Some(n) = cancel_after {
+                spec = spec.cancel_after(n);
+            }
+            let stream = server.submit(spec);
+            if disconnect {
+                // the client vanishes before consuming anything; the
+                // handle is kept only to collect the terminal outcome
+                stream.cancel();
+            }
+            stream
+        })
         .collect();
     let mut total_tokens = 0usize;
-    for rx in rxs {
-        total_tokens += rx.recv()?.tokens.len();
+    for stream in streams {
+        let resp = stream.wait()?;
+        if resp.outcome == Outcome::Completed {
+            total_tokens += resp.tokens.len();
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.shutdown()?;
@@ -302,6 +381,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if has_lookahead { lookahead.to_string() } else { "- (policy native)".into() },
     ]);
     t.row(vec!["requests".into(), stats.requests.to_string()]);
+    t.row(vec![
+        "completed / cancelled / rejected".into(),
+        format!("{} / {} / {}", stats.completed, stats.cancelled, stats.rejected),
+    ]);
+    t.row(vec!["cancelled in queue".into(), stats.cancelled_in_queue.to_string()]);
+    t.row(vec![
+        "admission".into(),
+        if admission { "slo-aware".into() } else { "off".to_string() },
+    ]);
     t.row(vec!["token steps".into(), stats.steps.to_string()]);
     t.row(vec!["mean slot occupancy".into(), fmt2(stats.mean_batch_size)]);
     t.row(vec!["output tokens".into(), total_tokens.to_string()]);
@@ -309,6 +397,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "sim throughput tok/s".into(),
         fmt2(total_tokens as f64 / stats.total_sim_seconds.max(1e-9)),
     ]);
+    t.row(vec!["goodput tok/s".into(), fmt2(stats.goodput())]);
     t.row(vec!["ttft p50/p95/p99 (s)".into(), stats.ttft.cell(1.0)]);
     t.row(vec!["tpot p50/p95/p99 (ms)".into(), stats.tpot.cell(1e3)]);
     t.row(vec!["sim latency p50/p95/p99 (s)".into(), stats.sim_latency.cell(1.0)]);
@@ -410,24 +499,27 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let preempt = PreemptPolicy::parse(args.get_or("preempt", "off"))?;
     let high_frac = args.get_f64("high-frac", 0.0)?.clamp(0.0, 1.0);
     let low_frac = args.get_f64("low-frac", 0.0)?.clamp(0.0, 1.0 - high_frac);
+    let (smix, admission) = stream_args(args)?;
     let mut cfg = cluster::ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu, seed)
         .with_scheduler(scheduler)
         .with_prefill_chunk(prefill_chunk)
         .with_lookahead(lookahead)
         .with_preempt(preempt)
         .with_priority_mix(PriorityMix { high: high_frac, low: low_frac })
+        .with_stream_mix(smix)
+        .with_admission(admission)
+        .with_max_batch(max_batch)
+        .with_output(if long_frac > 0.0 {
+            OutputLen::Bimodal { short: (tokens / 8).max(1), long: tokens, long_frac }
+        } else {
+            OutputLen::Fixed(tokens)
+        })
         .with_trace(args.get("trace").is_some());
     // resolve --quant against the spec's own serving tier, so omitting
     // the flag keeps the VRAM-derived default; with_quant preserves the
     // byte budget by rescaling the per-layer slot count
     let (quant, little, fallback_threshold) = quant_args(args, cfg.spec.quant)?;
     cfg = cfg.with_quant(quant).with_fallback(little, fallback_threshold);
-    cfg.max_batch = max_batch;
-    cfg.workload.output = if long_frac > 0.0 {
-        OutputLen::Bimodal { short: (tokens / 8).max(1), long: tokens, long_frac }
-    } else {
-        OutputLen::Fixed(tokens)
-    };
     // re-derive the service estimate for the overridden token budget so
     // the auto rate stays ≈1.5× fleet capacity
     let est = cfg
@@ -461,6 +553,19 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         cfg.replicas, cfg.spec.capacity, n_requests, n_tasks, arrival_desc, cfg.max_batch,
         scheduler, cfg.prefill_chunk, cfg.spec.lookahead, tiers_desc
     );
+    if !cfg.workload.stream.is_none() || cfg.admission {
+        let s = &cfg.workload.stream;
+        println!(
+            "  stream: deadline {:.0}% @ {:.2}s slack, cancel {:.0}% after {} tok, \
+             disconnect {:.0}%, admission {}",
+            100.0 * s.deadline_frac,
+            s.deadline_slack,
+            100.0 * s.cancel_frac,
+            s.cancel_after,
+            100.0 * s.disconnect_frac,
+            if cfg.admission { "slo-aware" } else { "off" }
+        );
+    }
 
     let which = args.get_or("balancer", "all");
     let names: Vec<&str> =
@@ -480,6 +585,13 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             r.preemptions,
             depths.join(", ")
         );
+        if r.cancelled > 0 || r.rejected > 0 {
+            println!(
+                "    outcomes: {} completed, {} cancelled, {} rejected; \
+                 goodput {:.2} tok/s (deadline-attained output only)",
+                r.completed, r.cancelled, r.rejected, r.goodput_per_sec
+            );
+        }
         if r.priorities.len() > 1 {
             for pc in &r.priorities {
                 println!(

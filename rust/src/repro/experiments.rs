@@ -18,7 +18,7 @@ pub const ALL: &[&str] = &[
     "table1", "fig1a", "fig1b", "fig3", "table2", "table3", "fig4", "fig5", "table4",
     "table5", "table11", "fig6", "heatmaps", "fig11", "table12", "fig12", "fig13", "table13",
     "ext_layerwise", "ext_cluster", "ext_continuous", "ext_prefill", "ext_overlap",
-    "ext_preempt", "ext_quant",
+    "ext_preempt", "ext_quant", "ext_stream",
 ];
 
 fn workload(args: &Args) -> Result<Workload> {
@@ -1138,7 +1138,7 @@ pub fn ext_prefill(args: &Args) -> Result<()> {
 pub fn ext_overlap(args: &Args) -> Result<()> {
     use crate::clock::PaperDims;
     use crate::cluster::replica::ReplicaSpec;
-    use crate::cluster::workload::{OutputLen, PriorityMix, TaskProfile, WorkloadSpec};
+    use crate::cluster::workload::{OutputLen, PriorityMix, StreamMix, TaskProfile, WorkloadSpec};
     use crate::cluster::{self, ClusterConfig};
     use crate::coordinator::workload::Arrival;
     use crate::coordinator::{PreemptPolicy, SchedulerMode};
@@ -1202,6 +1202,7 @@ pub fn ext_overlap(args: &Args) -> Result<()> {
                 scheduler: SchedulerMode::Continuous,
                 prefill_chunk: 1,
                 preempt: PreemptPolicy::Off,
+                admission: false,
                 trace: true,
                 spec,
                 workload: WorkloadSpec {
@@ -1213,6 +1214,7 @@ pub fn ext_overlap(args: &Args) -> Result<()> {
                     output: OutputLen::Fixed(tokens),
                     balanced_tasks: true,
                     priorities: PriorityMix::none(),
+                    stream: StreamMix::none(),
                     seed,
                 },
                 tasks,
@@ -1274,7 +1276,7 @@ pub fn ext_overlap(args: &Args) -> Result<()> {
 pub fn ext_preempt(args: &Args) -> Result<()> {
     use crate::clock::PaperDims;
     use crate::cluster::replica::ReplicaSpec;
-    use crate::cluster::workload::{OutputLen, PriorityMix, TaskProfile, WorkloadSpec};
+    use crate::cluster::workload::{OutputLen, PriorityMix, StreamMix, TaskProfile, WorkloadSpec};
     use crate::cluster::{self, ClusterConfig};
     use crate::coordinator::workload::Arrival;
     use crate::coordinator::{PreemptPolicy, Priority, SchedulerMode};
@@ -1329,6 +1331,7 @@ pub fn ext_preempt(args: &Args) -> Result<()> {
             scheduler: SchedulerMode::Continuous,
             prefill_chunk: 1,
             preempt: PreemptPolicy::Off,
+            admission: false,
             trace: true,
             spec,
             workload: WorkloadSpec {
@@ -1340,6 +1343,7 @@ pub fn ext_preempt(args: &Args) -> Result<()> {
                 output: OutputLen::Fixed(tokens),
                 balanced_tasks: true,
                 priorities: PriorityMix { high: high_frac, low: low_frac },
+                stream: StreamMix::none(),
                 seed,
             },
             tasks,
@@ -1403,7 +1407,7 @@ pub fn ext_quant(args: &Args) -> Result<()> {
     use crate::cache::LITTLE_BUDGET_FRAC;
     use crate::clock::PaperDims;
     use crate::cluster::replica::ReplicaSpec;
-    use crate::cluster::workload::{OutputLen, PriorityMix, TaskProfile, WorkloadSpec};
+    use crate::cluster::workload::{OutputLen, PriorityMix, StreamMix, TaskProfile, WorkloadSpec};
     use crate::cluster::{self, ClusterConfig};
     use crate::coordinator::workload::Arrival;
     use crate::coordinator::{PreemptPolicy, SchedulerMode};
@@ -1477,6 +1481,7 @@ pub fn ext_quant(args: &Args) -> Result<()> {
                 scheduler: SchedulerMode::Continuous,
                 prefill_chunk: 1,
                 preempt: PreemptPolicy::Off,
+                admission: false,
                 trace: true,
                 spec: spec.clone(),
                 workload: WorkloadSpec {
@@ -1488,6 +1493,7 @@ pub fn ext_quant(args: &Args) -> Result<()> {
                     output: OutputLen::Fixed(tokens),
                     balanced_tasks: true,
                     priorities: PriorityMix::none(),
+                    stream: StreamMix::none(),
                     seed,
                 },
                 tasks,
@@ -1535,4 +1541,149 @@ pub fn ext_quant(args: &Args) -> Result<()> {
         }
     }
     print_and_save("ext_quant", &t, arr(jrows))
+}
+
+/// Extension — streaming front-end under deadline overload and cancel
+/// storms.  Two arms over the same saturated fleet.  **deadline**: a
+/// burst workload where 80% of requests carry a TTFT deadline of
+/// 3× the solo service estimate, served with SLO-aware admission off vs
+/// on.  Off, hopeless requests are decoded anyway and crowd out the
+/// servable ones; on, the replica rejects a queued request at pop time
+/// once even an optimistic prefill estimate cannot make its deadline.
+/// Expected shape: admission strictly lifts goodput (deadline-attained
+/// tokens per second) while raw tok/s stays within noise — the fleet is
+/// saturated either way, admission only changes *which* requests it
+/// burns the capacity on.  **cancel-storm**: 35% of requests hang up
+/// after their first streamed token and 10% disconnect while still
+/// queued.  The gate is conservation, not speed: every cancelled
+/// sequence must release its slot and pins at the next step boundary,
+/// so the trace's `pins_set` / `pins_released` counters balance
+/// exactly (the in-run audits already hard-fail on leaks; the JSON row
+/// makes the balance auditable offline).
+pub fn ext_stream(args: &Args) -> Result<()> {
+    use crate::clock::PaperDims;
+    use crate::cluster::replica::ReplicaSpec;
+    use crate::cluster::workload::{OutputLen, PriorityMix, StreamMix, TaskProfile, WorkloadSpec};
+    use crate::cluster::{self, ClusterConfig};
+    use crate::coordinator::workload::Arrival;
+    use crate::coordinator::{PreemptPolicy, SchedulerMode};
+
+    let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
+    let n_requests = args.get_usize("requests", 48)?;
+    let replicas = args.get_usize("replicas", 2)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let tokens = args.get_usize("tokens", 32)?.max(2);
+
+    let dims = PaperDims {
+        n_layers: 16,
+        n_experts: 64,
+        top_k: 8,
+        d_model: 2048,
+        d_ff: 1024,
+        vocab: 50304,
+    };
+    let prompt_tokens = 8;
+    let spec = ReplicaSpec {
+        n_layers: dims.n_layers,
+        n_experts: dims.n_experts,
+        top_k: dims.top_k,
+        capacity: 8,
+        eviction: EvictionKind::Lfu,
+        quant: QuantMode::Int4,
+        little_tier: None,
+        fallback_threshold: 0.0,
+        prefetch: true,
+        lookahead: 0,
+        gpu: gpu.clone(),
+        dims,
+    };
+    let est = spec.est_service_seconds(prompt_tokens, tokens).max(1e-9);
+    // a burst fills the queue instantly, so a 3×-service slack strands
+    // roughly the back half of the deadline requests — the regime where
+    // admission has something to save
+    let deadline_mix = StreamMix {
+        deadline_frac: 0.8,
+        deadline_slack: 3.0 * est,
+        cancel_frac: 0.0,
+        cancel_after: 0,
+        disconnect_frac: 0.0,
+    };
+    let cancel_mix = StreamMix {
+        deadline_frac: 0.0,
+        deadline_slack: 0.0,
+        cancel_frac: 0.35,
+        cancel_after: 1,
+        disconnect_frac: 0.1,
+    };
+    let mk_cfg = |stream: StreamMix, arrival: Arrival, admission: bool| ClusterConfig {
+        replicas,
+        max_batch: 4,
+        max_queue: n_requests.max(8),
+        scheduler: SchedulerMode::Continuous,
+        prefill_chunk: 1,
+        preempt: PreemptPolicy::Off,
+        admission,
+        trace: true,
+        spec: spec.clone(),
+        workload: WorkloadSpec {
+            n_requests,
+            arrival,
+            prompt_tokens,
+            output: OutputLen::Fixed(tokens),
+            balanced_tasks: true,
+            priorities: PriorityMix::none(),
+            stream,
+            seed,
+        },
+        tasks: TaskProfile::synthetic(2, dims.n_layers, dims.n_experts, 16, 0.9),
+    };
+    let arms: Vec<(&str, &str, ClusterConfig)> = vec![
+        ("deadline", "least-loaded", mk_cfg(deadline_mix, Arrival::Burst, false)),
+        ("deadline", "least-loaded", mk_cfg(deadline_mix, Arrival::Burst, true)),
+        (
+            "cancel-storm",
+            "expert-affinity",
+            mk_cfg(
+                cancel_mix,
+                Arrival::Poisson(1.5 * replicas.max(1) as f64 / est),
+                false,
+            ),
+        ),
+    ];
+
+    let mut t = Table::new(&[
+        "arm", "admission", "tok/s", "goodput tok/s", "completed", "cancelled", "rejected",
+        "makespan s",
+    ]);
+    let mut jrows = Vec::new();
+    for (arm, balancer, cfg) in arms {
+        let mut b = cluster::balancer::by_name(balancer)?;
+        let rep = cluster::run_cluster(&cfg, b.as_mut())?;
+        t.row(vec![
+            arm.into(),
+            if cfg.admission { "slo-aware".into() } else { "off".to_string() },
+            fmt2(rep.tokens_per_sec),
+            fmt2(rep.goodput_per_sec),
+            rep.completed.to_string(),
+            rep.cancelled.to_string(),
+            rep.rejected.to_string(),
+            fmt2(rep.makespan),
+        ]);
+        jrows.push(obj(vec![
+            ("arm", s(arm)),
+            ("admission", num(if cfg.admission { 1.0 } else { 0.0 })),
+            ("tok_s", num(rep.tokens_per_sec)),
+            ("hit_rate", num(rep.hit_rate)),
+            ("goodput_tok_s", num(rep.goodput_per_sec)),
+            ("goodput_tokens", num(rep.goodput_tokens as f64)),
+            ("output_tokens", num(rep.output_tokens as f64)),
+            ("n_requests", num(n_requests as f64)),
+            ("completed", num(rep.completed as f64)),
+            ("cancelled", num(rep.cancelled as f64)),
+            ("rejected", num(rep.rejected as f64)),
+            ("makespan_s", num(rep.makespan)),
+            ("metrics", trace_metrics(&rep)),
+        ]));
+    }
+    print_and_save("ext_stream", &t, arr(jrows))
 }

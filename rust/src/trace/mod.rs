@@ -154,6 +154,20 @@ pub enum TraceEvent {
     Suspend { seq: u64 },
     /// A suspended sequence reattached to a slot.
     Resume { seq: u64 },
+    /// A sequence was cancelled (client disconnect or explicit cancel):
+    /// the one-way version of [`TraceEvent::Suspend`] — the slot frees
+    /// and the pin ledger releases, but the state is dropped, never
+    /// resumed.  Always paired with a `PinRelease` when the sequence had
+    /// reached a decode slot, so the pin conservation audit still
+    /// balances.
+    Cancel { seq: u64 },
+    /// A deadline-tagged request was refused at admission because the
+    /// estimated TTFT under current occupancy could not meet it.
+    Reject { seq: u64 },
+    /// A streaming consumer fell behind its bounded channel and the
+    /// sequence was suspended at a step boundary instead of buffering
+    /// unboundedly (backpressure).
+    StreamStall { seq: u64 },
     /// The cluster dispatcher routed `request` to `replica`; `score` is
     /// the balancer's affinity score for the chosen replica.
     Dispatch { request: u64, replica: u32, score: f64 },
@@ -323,6 +337,9 @@ impl MetricsRegistry {
             TraceEvent::PinRelease { .. } => self.count("pins_released"),
             TraceEvent::Suspend { .. } => self.count("suspends"),
             TraceEvent::Resume { .. } => self.count("resumes"),
+            TraceEvent::Cancel { .. } => self.count("cancels"),
+            TraceEvent::Reject { .. } => self.count("rejects"),
+            TraceEvent::StreamStall { .. } => self.count("stream_stalls"),
             TraceEvent::Dispatch { .. } => self.count("dispatches"),
         }
     }
@@ -861,6 +878,27 @@ impl Trace {
                     e.lane,
                     TID_SCHED,
                     "resume",
+                    vec![("seq", num(seq as f64))],
+                )),
+                TraceEvent::Cancel { seq } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "cancel",
+                    vec![("seq", num(seq as f64))],
+                )),
+                TraceEvent::Reject { seq } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "reject",
+                    vec![("seq", num(seq as f64))],
+                )),
+                TraceEvent::StreamStall { seq } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "stream stall",
                     vec![("seq", num(seq as f64))],
                 )),
                 TraceEvent::Dispatch { request, replica, score } => evs.push(instant(

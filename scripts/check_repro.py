@@ -14,6 +14,12 @@ parses them and FAILS the build if a headline invariant regresses:
   ext_quant       int4 + little-fallback stall < fp16 stall and tok/s
                   above fp16 at equal VRAM bytes; degraded_token_frac
                   finite in [0,1], and exactly 0 with the fallback off
+  ext_stream      SLO-aware admission lifts goodput on the deadline-
+                  heavy burst arm with raw tok/s within 5% of the
+                  no-admission baseline; the cancel-storm arm leaks
+                  nothing (pins_set == pins_released in the trace
+                  counters) and every request reaches a terminal
+                  outcome (completed + cancelled + rejected == n)
 
 Every ext_* row also embeds a `metrics` snapshot from the run's merged
 structured trace (docs/OBSERVABILITY.md); the gate rejects NaN /
@@ -36,7 +42,7 @@ import sys
 
 REQUIRED = [
     "ext_cluster", "ext_continuous", "ext_prefill", "ext_overlap", "ext_preempt",
-    "ext_quant",
+    "ext_quant", "ext_stream",
 ]
 
 # trace-derived PCIe totals must match TransferStats to this tolerance
@@ -256,6 +262,70 @@ def check_quant(rows):
         )
 
 
+def check_stream(rows):
+    for i, r in enumerate(rows):
+        total = r["completed"] + r["cancelled"] + r["rejected"]
+        check(
+            "ext_stream",
+            total == r["n_requests"],
+            f"row {i} ({r['arm']}): terminal outcomes {int(total)} "
+            f"of {int(r['n_requests'])} requests",
+        )
+    deadline = [r for r in rows if r["arm"] == "deadline"]
+    off = next((r for r in deadline if not r["admission"]), None)
+    on = next((r for r in deadline if r["admission"]), None)
+    if not off or not on:
+        check("ext_stream", False, "missing deadline admission off/on rows")
+    else:
+        check(
+            "ext_stream",
+            off["rejected"] == 0 and on["rejected"] > 0,
+            f"admission rejects only when on ({int(off['rejected'])} off, "
+            f"{int(on['rejected'])} on)",
+        )
+        check(
+            "ext_stream",
+            on["goodput_tok_s"] > off["goodput_tok_s"],
+            f"admission goodput {fmt(on['goodput_tok_s'])} tok/s "
+            f"vs off {fmt(off['goodput_tok_s'])} (strict improvement required)",
+        )
+        check(
+            "ext_stream",
+            0.95 * off["tok_s"] <= on["tok_s"] <= 1.05 * off["tok_s"],
+            f"admission raw {fmt(on['tok_s'])} tok/s vs off {fmt(off['tok_s'])} "
+            f"(within 5% required)",
+        )
+    storm = next((r for r in rows if r["arm"] == "cancel-storm"), None)
+    if not storm:
+        check("ext_stream", False, "missing cancel-storm row")
+    else:
+        check(
+            "ext_stream",
+            storm["cancelled"] > 0,
+            f"cancel storm fired ({int(storm['cancelled'])} cancelled)",
+        )
+        counters = (storm.get("metrics") or {}).get("counters", {})
+        pins_set = counters.get("pins_set", 0)
+        pins_rel = counters.get("pins_released", 0)
+        check(
+            "ext_stream",
+            abs(pins_set - pins_rel) <= TRACE_TOL and pins_set > 0,
+            f"cancel storm pin ledger balanced "
+            f"({int(pins_set)} set, {int(pins_rel)} released)",
+        )
+    if on:
+        summary_rows.append(
+            (
+                "ext_stream",
+                f"admission on ({int(on['rejected'])} rejected, "
+                f"goodput {on['goodput_tok_s']:.2f} tok/s)",
+                on["tok_s"],
+                on["hit_rate"],
+                None,
+            )
+        )
+
+
 def finite(v):
     return isinstance(v, (int, float)) and math.isfinite(v)
 
@@ -360,6 +430,7 @@ def main():
         "ext_overlap": check_overlap,
         "ext_preempt": check_preempt,
         "ext_quant": check_quant,
+        "ext_stream": check_stream,
     }
     for name in REQUIRED:
         rows = load(results_dir, name)
