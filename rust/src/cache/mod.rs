@@ -401,6 +401,32 @@ impl LayerCache {
         true
     }
 
+    /// Drop the reservation held for `expert` without landing it — the
+    /// in-flight transfer was lost to a link flap or arrived checksum-
+    /// corrupt, so the slot hold must not leak (a leaked reservation
+    /// would permanently shrink the layer's prefetch window).
+    pub fn unreserve(&mut self, expert: usize) {
+        self.reserved.remove(&expert);
+    }
+
+    /// Crash: VRAM contents are gone.  Drains the big store, the little
+    /// store, and every outstanding reservation; returns the evicted
+    /// `(big, little)` expert lists (sorted, for deterministic trace
+    /// emission) so the caller can emit the matching `CacheEvict` /
+    /// `LittleEvict` events and keep the occupancy-replay audit
+    /// balanced.  The pin ledger is *not* touched here: the replica
+    /// releases each owner explicitly so every `PinSet` still meets its
+    /// `PinRelease` in the event stream.  Hit/miss statistics survive —
+    /// they describe traffic served, not state lost.
+    pub fn crash_clear(&mut self) -> (Vec<usize>, Vec<usize>) {
+        let mut big: Vec<usize> = self.resident.drain().collect();
+        big.sort_unstable();
+        let mut little: Vec<usize> = self.little.drain().collect();
+        little.sort_unstable();
+        self.reserved.clear();
+        (big, little)
+    }
+
     /// Land an in-flight prefetch: clear the reservation and make the
     /// expert resident.  Eviction (if the cache filled up since the
     /// reservation) follows normal policy order but never touches
@@ -752,6 +778,41 @@ mod tests {
         assert!(!c.reserve(2), "reservations saturate at the slot count");
         assert_eq!(c.reserved_len(), 2);
         assert!(!LayerCache::new(8, 0, EvictionKind::Lfu).reserve(1));
+    }
+
+    #[test]
+    fn unreserve_frees_the_slot_hold() {
+        let mut c = LayerCache::new(16, 2, EvictionKind::Lfu);
+        assert!(c.reserve(0));
+        assert!(c.reserve(1));
+        assert!(!c.reserve(2), "saturated");
+        c.unreserve(0);
+        assert!(!c.is_reserved(0));
+        assert!(c.reserve(2), "lost transfer's hold is reusable");
+        c.unreserve(9); // unknown expert is a no-op
+        assert_eq!(c.reserved_len(), 2);
+    }
+
+    #[test]
+    fn crash_clear_drains_both_stores_and_reservations() {
+        let mut c = LayerCache::new(16, 4, EvictionKind::Lfu);
+        c.enable_little(QuantMode::Int3, 0.25);
+        assert!(c.little_capacity() >= 1 && c.capacity() >= 3);
+        assert_eq!(c.install_little(9), Some(None));
+        c.insert(5, &[]);
+        c.insert(2, &[]);
+        assert!(c.reserve(7));
+        c.request(5);
+        let hits_before = c.stats.hits;
+        let (big, little) = c.crash_clear();
+        assert_eq!(big, vec![2, 5], "sorted for deterministic trace emission");
+        assert_eq!(little, vec![9]);
+        assert_eq!(c.resident_len(), 0);
+        assert_eq!(c.little_len(), 0);
+        assert_eq!(c.reserved_len(), 0);
+        assert_eq!(c.stats.hits, hits_before, "traffic stats survive the crash");
+        // a second crash on empty state is a no-op
+        assert_eq!(c.crash_clear(), (vec![], vec![]));
     }
 
     #[test]

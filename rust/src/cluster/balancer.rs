@@ -11,10 +11,18 @@
 //!   resident experts, minus a queue-depth penalty.  Same-task traffic
 //!   converges onto the same replicas, multiplying the single-GPU cache
 //!   hit-rate advantage cluster-wide.
+//!
+//! Every policy is *health-aware*: a `Down` replica is never picked
+//! while any dispatchable one exists, and `Degraded` / `Recovering`
+//! replicas carry a virtual-load bias so traffic drains away from them
+//! without a hard cutoff.  With an all-`Healthy` fleet the bias is
+//! exactly zero and every pick is bit-identical to the pre-fault
+//! dispatcher — fault-free runs cannot diverge.
 
 use anyhow::{anyhow, Result};
 
 use super::workload::ClusterRequest;
+use crate::fault::Health;
 
 /// Scheduler-visible snapshot of one replica at dispatch time.  Under
 /// the step-granular serving loop this is *live* state — slot occupancy
@@ -31,12 +39,40 @@ pub struct ReplicaView {
     /// Fraction of the request's predicted expert set resident (or
     /// planned-resident) on this replica, in [0, 1].
     pub overlap: f64,
+    /// The dispatcher's health verdict for this replica at the arrival
+    /// instant ([`Health::Healthy`] in a fault-free fleet).
+    pub health: Health,
 }
 
 impl ReplicaView {
     /// Total outstanding work: queued plus in-flight.
     pub fn load(&self) -> usize {
         self.queue_depth + self.slots_in_use
+    }
+
+    /// Whether this replica may receive traffic at all.
+    pub fn dispatchable(&self) -> bool {
+        self.health.dispatchable()
+    }
+
+    /// Virtual load added by the health state: zero when `Healthy` (so
+    /// fault-free picks are bit-identical to the health-blind
+    /// dispatcher), a de-weighting surcharge when `Degraded` or
+    /// `Recovering`, and infinite when `Down` — an infinite load loses
+    /// every comparison against any live replica.
+    pub fn health_bias(&self) -> f64 {
+        match self.health {
+            Health::Healthy => 0.0,
+            Health::Recovering => 1.0,
+            Health::Degraded => 2.0,
+            Health::Down => f64::INFINITY,
+        }
+    }
+
+    /// Outstanding work plus the health surcharge — what the load-based
+    /// policies actually minimize.
+    pub fn effective_load(&self) -> f64 {
+        self.load() as f64 + self.health_bias()
     }
 }
 
@@ -73,14 +109,25 @@ impl Balancer for RoundRobin {
 
     fn pick(&mut self, _req: &ClusterRequest, views: &[ReplicaView]) -> usize {
         assert!(!views.is_empty());
-        let i = self.next % views.len();
-        self.next = self.next.wrapping_add(1);
-        i
+        let start = self.next % views.len();
+        // rotate past Down replicas; with an all-dispatchable fleet the
+        // first probe wins and the cursor advances exactly as before
+        for k in 0..views.len() {
+            let i = (start + k) % views.len();
+            if views[i].dispatchable() {
+                self.next = (start + k).wrapping_add(1);
+                return i;
+            }
+        }
+        self.next = start.wrapping_add(1);
+        start
     }
 }
 
-/// Join the least outstanding work (queued + in-flight); break ties
-/// toward the earliest-free replica.
+/// Join the least outstanding work (queued + in-flight, plus the health
+/// surcharge); break ties toward the earliest-free replica.  A `Down`
+/// replica's infinite effective load means it can never beat a live
+/// one.
 #[derive(Debug, Default)]
 pub struct LeastLoaded;
 
@@ -94,7 +141,8 @@ impl Balancer for LeastLoaded {
         let mut best = 0usize;
         for i in 1..views.len() {
             let (v, b) = (&views[i], &views[best]);
-            if v.load() < b.load() || (v.load() == b.load() && v.busy_until < b.busy_until) {
+            let (ve, be) = (v.effective_load(), b.effective_load());
+            if ve < be || (ve == be && v.busy_until < b.busy_until) {
                 best = i;
             }
         }
@@ -125,7 +173,10 @@ impl Balancer for ExpertAffinity {
     }
 
     fn score(&self, v: &ReplicaView) -> f64 {
-        v.overlap - self.load_penalty * v.load() as f64
+        if !v.dispatchable() {
+            return f64::NEG_INFINITY;
+        }
+        v.overlap - self.load_penalty * v.effective_load()
     }
 
     fn pick(&mut self, _req: &ClusterRequest, views: &[ReplicaView]) -> usize {
@@ -169,7 +220,14 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn view(id: usize, depth: usize, busy: f64, overlap: f64) -> ReplicaView {
-        ReplicaView { id, queue_depth: depth, slots_in_use: 0, busy_until: busy, overlap }
+        ReplicaView {
+            id,
+            queue_depth: depth,
+            slots_in_use: 0,
+            busy_until: busy,
+            overlap,
+            health: Health::Healthy,
+        }
     }
 
     fn random_views(r: &mut Rng) -> Vec<ReplicaView> {
@@ -181,8 +239,20 @@ mod tests {
                 slots_in_use: r.below(5),
                 busy_until: r.f64() * 10.0,
                 overlap: r.f64(),
+                health: Health::Healthy,
             })
             .collect()
+    }
+
+    /// Random fleet states with random health verdicts (fault regime).
+    fn random_mixed_health_views(r: &mut Rng) -> Vec<ReplicaView> {
+        let healths =
+            [Health::Healthy, Health::Degraded, Health::Down, Health::Recovering];
+        let mut views = random_views(r);
+        for v in &mut views {
+            v.health = healths[r.below(healths.len())];
+        }
+        views
     }
 
     #[test]
@@ -208,8 +278,22 @@ mod tests {
         let req = ClusterRequest::probe(0);
         // replica 0 has the shorter queue but more sequences in flight
         let views = vec![
-            ReplicaView { id: 0, queue_depth: 1, slots_in_use: 4, busy_until: 0.0, overlap: 0.0 },
-            ReplicaView { id: 1, queue_depth: 2, slots_in_use: 0, busy_until: 9.0, overlap: 0.0 },
+            ReplicaView {
+                id: 0,
+                queue_depth: 1,
+                slots_in_use: 4,
+                busy_until: 0.0,
+                overlap: 0.0,
+                health: Health::Healthy,
+            },
+            ReplicaView {
+                id: 1,
+                queue_depth: 2,
+                slots_in_use: 0,
+                busy_until: 9.0,
+                overlap: 0.0,
+                health: Health::Healthy,
+            },
         ];
         assert_eq!(b.pick(&req, &views), 1);
         assert_eq!(views[0].load(), 5);
@@ -224,6 +308,48 @@ mod tests {
         // 9 queued requests erase a 0.8 overlap advantage
         let hot_long = vec![view(0, 9, 0.0, 0.9), view(1, 0, 0.0, 0.1)];
         assert_eq!(b.pick(&req, &hot_long), 1);
+    }
+
+    #[test]
+    fn round_robin_skips_down_replicas() {
+        let mut b = RoundRobin::new();
+        let req = ClusterRequest::probe(0);
+        let mut views: Vec<ReplicaView> = (0..3).map(|i| view(i, 0, 0.0, 0.0)).collect();
+        views[1].health = Health::Down;
+        let picks: Vec<usize> = (0..4).map(|_| b.pick(&req, &views)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2], "the Down replica is rotated past");
+        // Degraded / Recovering stay in rotation — RR ignores weight
+        views[1].health = Health::Degraded;
+        assert_eq!(b.pick(&req, &views), 1);
+    }
+
+    #[test]
+    fn least_loaded_deweights_degraded_and_never_picks_down() {
+        let mut b = LeastLoaded;
+        let req = ClusterRequest::probe(0);
+        // idle but degraded loses to a lightly-loaded healthy replica
+        let mut views = vec![view(0, 1, 0.0, 0.0), view(1, 0, 0.0, 0.0)];
+        views[1].health = Health::Degraded;
+        assert_eq!(b.pick(&req, &views), 0, "degraded surcharge outweighs one queued request");
+        // an idle Down replica never beats a busy live one
+        views[1].health = Health::Down;
+        views[0].queue_depth = 50;
+        assert_eq!(b.pick(&req, &views), 0);
+    }
+
+    #[test]
+    fn affinity_scores_down_as_uninhabitable() {
+        let b = ExpertAffinity::default();
+        let mut v = view(0, 0, 0.0, 1.0);
+        assert!(b.score(&v) > 0.9);
+        v.health = Health::Down;
+        assert_eq!(b.score(&v), f64::NEG_INFINITY);
+        // a full-overlap Down replica loses to a zero-overlap healthy one
+        let mut af = ExpertAffinity::default();
+        let req = ClusterRequest::probe(0);
+        let mut views = vec![view(0, 0, 0.0, 1.0), view(1, 0, 0.0, 0.0)];
+        views[0].health = Health::Down;
+        assert_eq!(af.pick(&req, &views), 1);
     }
 
     #[test]
@@ -284,6 +410,25 @@ mod tests {
             let chosen = af.pick(&req, views);
             let cs = af.score(&views[chosen]);
             views.iter().all(|v| af.score(v) <= cs + 1e-9)
+        });
+    }
+
+    /// Under arbitrary health mixes, no policy ever picks a `Down`
+    /// replica while at least one dispatchable replica exists — the
+    /// dispatcher-side half of the "no dispatch to Down" invariant.
+    #[test]
+    fn prop_no_policy_picks_down_while_alternatives_exist() {
+        check_no_shrink(300, random_mixed_health_views, |views| {
+            if !views.iter().any(ReplicaView::dispatchable) {
+                return true; // run_cluster defers instead of dispatching
+            }
+            let req = ClusterRequest::probe(0);
+            let mut rr = RoundRobin::new();
+            let mut ll = LeastLoaded;
+            let mut af = ExpertAffinity::default();
+            views[rr.pick(&req, views)].dispatchable()
+                && views[ll.pick(&req, views)].dispatchable()
+                && views[af.pick(&req, views)].dispatchable()
         });
     }
 }

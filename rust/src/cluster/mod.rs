@@ -22,20 +22,28 @@
 //!   prompts prefill in chunks piggybacked on live decode steps
 //!   (`--prefill-chunk`).
 //! * [`balancer`] — RoundRobin / LeastLoaded / ExpertAffinity dispatch
-//!   against *live* slot occupancy.
-//! * [`run_cluster`] — the arrival-driven event loop + fleet metrics
-//!   (throughput, hit-rate, queue/TTFT/latency percentiles, PCIe per
-//!   replica).
+//!   against *live* slot occupancy and replica [`Health`] (never a Down
+//!   replica, de-weighted Degraded ones).
+//! * [`run_cluster`] — the event loop over arrivals, retry wake-ups and
+//!   the deterministic fault plan (`--faults`): crashes reclaim every
+//!   affected sequence for re-dispatch under the [`RetryPolicy`],
+//!   brownouts migrate live sequences to affinity-priced healthy peers,
+//!   link flaps and checksum corruption exercise the transfer pipeline —
+//!   plus fleet metrics (throughput, hit-rate, queue/TTFT/latency
+//!   percentiles, recovery accounting, PCIe per replica).
 
 pub mod balancer;
 pub mod replica;
 pub mod workload;
 
-use anyhow::Result;
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use anyhow::{ensure, Result};
 
 use crate::clock::GpuSpec;
 use crate::coordinator::workload::Arrival;
 use crate::coordinator::{PreemptPolicy, Priority, SchedulerMode};
+use crate::fault::{FaultEvent, FaultKind, FaultPlan, FaultSpec, Health, PhiDetector, RetryPolicy};
 use crate::metrics::{fmt2, Percentiles, Table};
 use crate::quant::QuantMode;
 use crate::trace::{Recorder, Trace, TraceEvent};
@@ -79,6 +87,14 @@ pub struct ClusterConfig {
     /// cross-layer conservation audits per replica and returns the
     /// merged fleet timeline in [`ClusterReport::trace`].
     pub trace: bool,
+    /// Deterministic fault plan parameters (`--faults`, `--mtbf`): drawn
+    /// from a dedicated salt of the workload seed so fault-free runs are
+    /// byte-identical whether or not this field is armed.
+    pub faults: FaultSpec,
+    /// Retry policy for fault-reclaimed requests (`--retry`): per-request
+    /// budget with exponential sim-time backoff; an exhausted budget is
+    /// the one terminal [`Outcome::Failed`].
+    pub retry: RetryPolicy,
     pub spec: ReplicaSpec,
     pub workload: WorkloadSpec,
     pub tasks: Vec<TaskProfile>,
@@ -117,6 +133,8 @@ impl ClusterConfig {
             preempt: PreemptPolicy::Off,
             admission: false,
             trace: false,
+            faults: FaultSpec::none(),
+            retry: RetryPolicy::off(),
             spec,
             workload: WorkloadSpec {
                 n_requests,
@@ -187,6 +205,20 @@ impl ClusterConfig {
     /// SLO-aware admission control on every replica (`--admission`).
     pub fn with_admission(mut self, on: bool) -> ClusterConfig {
         self.admission = on;
+        self
+    }
+
+    /// Fault-injection plan parameters (`--faults`, `--mtbf`; see
+    /// [`FaultSpec`]).  [`FaultSpec::none`] keeps the run byte-identical
+    /// to a build without the fault machinery.
+    pub fn with_faults(mut self, faults: FaultSpec) -> ClusterConfig {
+        self.faults = faults;
+        self
+    }
+
+    /// Retry policy for fault-reclaimed requests (`--retry`).
+    pub fn with_retry(mut self, retry: RetryPolicy) -> ClusterConfig {
+        self.retry = retry;
         self
     }
 
@@ -291,6 +323,24 @@ pub struct ClusterReport {
     pub cancelled: usize,
     /// Requests admission control turned away.
     pub rejected: usize,
+    /// Requests that exhausted their retry budget after fault reclaim
+    /// ([`Outcome::Failed`]; always 0 without fault injection).
+    pub failed: usize,
+    /// Re-dispatches of fault-reclaimed requests (`--retry`).
+    pub retries: u64,
+    /// Live-sequence migrations off browned-out replicas.
+    pub migrations: u64,
+    /// Distinct requests ever reclaimed by an injected fault.
+    pub injected: usize,
+    /// Reclaimed requests that still reached a served terminal outcome
+    /// (`injected == recovered + failed`, audited when faults are on).
+    pub recovered: usize,
+    /// Sim seconds from a recovered request's first reclaim to its
+    /// terminal outcome.
+    pub recovery_wait: Percentiles,
+    /// `(request id, outcome, output tokens)` for every terminal, sorted
+    /// by id — the bit-identity oracle for the fault property tests.
+    pub outcomes: Vec<(u64, Outcome, usize)>,
     /// Output tokens of completed requests whose first token landed
     /// within their deadline (deadline-free completions always attain).
     pub goodput_tokens: usize,
@@ -343,14 +393,29 @@ pub struct ClusterReport {
     pub trace: Option<Trace>,
 }
 
-/// Run one cluster simulation, arrival by arrival: bring the fleet's
-/// clocks up to each arrival instant (replicas admit and step
-/// continuously along the way), dispatch through `bal` against live slot
-/// occupancy, and drain.  No lockstep epochs: a freed slot on one
-/// replica re-admits from its queue immediately, regardless of what the
-/// rest of the fleet is doing.
+/// One fault-reclaimed (or fleet-down deferred) request waiting to
+/// re-dispatch at `ready_at` under the retry policy's backoff.
+struct RetryEntry {
+    ready_at: f64,
+    /// 0 for a deferred fresh arrival (no attempt burned), ≥ 1 for a
+    /// genuine retry of a reclaimed request.
+    attempt: u32,
+    req: ClusterRequest,
+}
+
+/// Run one cluster simulation, event by event: bring the fleet's clocks
+/// up to each arrival / retry wake-up / fault instant (replicas admit
+/// and step continuously along the way), dispatch through `bal` against
+/// live slot occupancy and health, and drain.  No lockstep epochs: a
+/// freed slot on one replica re-admits from its queue immediately,
+/// regardless of what the rest of the fleet is doing.  With a fault plan
+/// armed, crashes reclaim every affected sequence for re-dispatch under
+/// the retry budget, brownouts migrate live sequences to affinity-priced
+/// healthy peers, and the run bails if any request resolves with more
+/// (or fewer) than one terminal outcome.
 pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<ClusterReport> {
     let requests = cfg.requests();
+    let n_expected = requests.len();
     let mut reps: Vec<Replica> = (0..cfg.replicas.max(1))
         .map(|i| {
             Replica::new(i, cfg.spec.clone(), cfg.scheduler)
@@ -367,50 +432,238 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         Recorder::off()
     };
     let max_queue = cfg.max_queue.max(1);
-    for req in &requests {
-        // advance every replica to the arrival instant so dispatch sees
+    let n_replicas = reps.len();
+    let plan = FaultPlan::generate(&cfg.faults, n_replicas, cfg.workload.fault_seed());
+    let faults_on = !plan.is_empty();
+    // phi-style missed-heartbeat detector: every non-Down replica beats
+    // at every timeline event, so a silent replica's phi grows until the
+    // dispatcher stops believing in it — the dispatcher's health belief,
+    // layered over the coordinator's ground truth
+    let mut detector = PhiDetector::new(n_replicas, (cfg.faults.mtbf / 8.0).max(1e-9), 2.0);
+    let mut arrivals: VecDeque<ClusterRequest> = requests.into();
+    let mut fault_events: VecDeque<FaultEvent> = plan.events.into();
+    let mut pending: Vec<RetryEntry> = Vec::new();
+    let mut attempts: HashMap<u64, u32> = HashMap::new();
+    let mut first_reclaim: HashMap<u64, f64> = HashMap::new();
+    let mut injected_ids: HashSet<u64> = HashSet::new();
+    let mut failed_terminals: Vec<Completion> = Vec::new();
+    let (mut retries_total, mut migrations_total) = (0u64, 0u64);
+    loop {
+        let t_arr = arrivals.front().map(|r| r.at);
+        let t_retry = pending
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.ready_at.total_cmp(&b.1.ready_at))
+            .map(|(i, e)| (i, e.ready_at));
+        // trailing fault events are moot once nothing is left to perturb
+        let fleet_busy = reps.iter().any(|r| r.has_work());
+        let t_fault = if t_arr.is_none() && t_retry.is_none() && !fleet_busy {
+            None
+        } else {
+            fault_events.front().map(|e| e.at)
+        };
+        // earliest event wins; ties resolve arrival ≤ retry ≤ fault
+        let ta = t_arr.unwrap_or(f64::INFINITY);
+        let tr = t_retry.map_or(f64::INFINITY, |(_, t)| t);
+        let tf = t_fault.unwrap_or(f64::INFINITY);
+        let now = ta.min(tr).min(tf);
+        if !now.is_finite() {
+            break;
+        }
+        // advance every replica to the event instant so dispatch sees
         // live slot occupancy, not an epoch-boundary snapshot
         for r in &mut reps {
-            r.run_until(req.at, cfg.max_batch);
+            r.run_until(now, cfg.max_batch);
         }
-        // lossless back-pressure: when every queue is at the admission
-        // bound, step the least-advanced replica until a queue drains
-        while reps.iter().all(|r| r.queue_depth() >= max_queue) {
+        if faults_on {
+            // heartbeat sweep: advance every health machine, read phi
+            // before the beat (a Down replica stays silent), and refresh
+            // the fleet-degradation fallback escalation
+            for r in &mut reps {
+                r.refresh_health(now);
+            }
+            for (i, r) in reps.iter().enumerate() {
+                if r.health() != Health::Down {
+                    drec.emit(
+                        now,
+                        TraceEvent::Heartbeat { replica: i as u32, phi: detector.phi(i, now) },
+                    );
+                    detector.beat(i, now);
+                }
+            }
+            let any_down = reps.iter().any(|r| r.health() == Health::Down);
+            for r in &mut reps {
+                if r.health() != Health::Down {
+                    r.set_fallback_escalation(any_down);
+                }
+            }
+        }
+        let (req, attempt) = if ta <= tr && ta <= tf {
+            (arrivals.pop_front().expect("arrival front exists"), 0)
+        } else if tr <= tf {
+            let (i, _) = t_retry.expect("retry minimum exists");
+            let e = pending.swap_remove(i);
+            (e.req, e.attempt)
+        } else {
+            let f = fault_events.pop_front().expect("fault front exists");
+            let i = f.replica.min(n_replicas - 1);
+            match f.kind {
+                FaultKind::Crash => {
+                    // lost progress: reclaimed sequences re-decode from
+                    // scratch elsewhere (pre-drawn routing keeps their
+                    // tokens bit-identical), under the retry budget
+                    let back_up = now + cfg.faults.recovery.max(1e-9);
+                    for req in reps[i].crash(back_up) {
+                        injected_ids.insert(req.id);
+                        first_reclaim.entry(req.id).or_insert(now);
+                        let a = attempts.entry(req.id).or_insert(0);
+                        if *a >= cfg.retry.max_retries {
+                            // budget exhausted: the one terminal outcome
+                            drec.emit(now, TraceEvent::RequestFailed { request: req.id });
+                            failed_terminals.push(Completion {
+                                request_id: req.id,
+                                task: req.task,
+                                priority: req.priority,
+                                arrival: req.at,
+                                started: now,
+                                first_token: now,
+                                finished: now,
+                                output_tokens: 0,
+                                preempted_wait: 0.0,
+                                outcome: Outcome::Failed,
+                                deadline: req.deadline,
+                            });
+                        } else {
+                            *a += 1;
+                            let ready_at = now + cfg.retry.delay(*a - 1);
+                            pending.push(RetryEntry { ready_at, attempt: *a, req });
+                        }
+                    }
+                }
+                FaultKind::Brownout { factor, duration } => {
+                    // live migration: suspended progress moves whole to
+                    // an affinity-priced healthy peer (or rides out the
+                    // brownout in place when there is none)
+                    reps[i].set_brownout(factor, now + duration);
+                    for m in reps[i].extract_live() {
+                        let mut best: Option<(usize, f64)> = None;
+                        for (j, r) in reps.iter().enumerate() {
+                            if j == i || !r.health().dispatchable() {
+                                continue;
+                            }
+                            let load = (r.queue_depth() + r.slots_in_use()) as f64;
+                            let score = r.affinity_overlap(&m.req.plan) - 0.1 * load;
+                            if best.map_or(true, |(_, s)| score > s) {
+                                best = Some((j, score));
+                            }
+                        }
+                        match best {
+                            Some((j, _)) => {
+                                migrations_total += 1;
+                                drec.emit(
+                                    now,
+                                    TraceEvent::Migrate {
+                                        request: m.req.id,
+                                        from: i as u32,
+                                        to: j as u32,
+                                    },
+                                );
+                                reps[j].adopt(m, now);
+                            }
+                            None => reps[i].adopt(m, now),
+                        }
+                    }
+                }
+                FaultKind::LinkFlap { factor, duration } => {
+                    reps[i].apply_link_flap(factor, now + duration);
+                }
+                FaultKind::Corrupt => {
+                    let _ = reps[i].corrupt_transfer();
+                }
+            }
+            continue;
+        };
+        if !reps.iter().any(|r| r.health().dispatchable()) {
+            // whole fleet down: defer to the earliest recovery without
+            // burning a retry attempt
+            let ready_at = reps
+                .iter()
+                .filter(|r| r.health() == Health::Down)
+                .map(|r| r.recover_at())
+                .fold(f64::INFINITY, f64::min);
+            ensure!(ready_at.is_finite(), "no replica is dispatchable or recovering");
+            pending.push(RetryEntry { ready_at: ready_at.max(now), attempt, req });
+            continue;
+        }
+        // lossless back-pressure: when every dispatchable queue is at the
+        // admission bound, step the least-advanced replica until one drains
+        while reps
+            .iter()
+            .filter(|r| r.health().dispatchable())
+            .all(|r| r.queue_depth() >= max_queue)
+        {
             let i = reps
                 .iter()
                 .enumerate()
-                .filter(|(_, r)| r.has_work())
+                .filter(|(_, r)| r.has_work() && r.health().dispatchable())
                 .min_by(|(_, a), (_, b)| a.clock.now().total_cmp(&b.clock.now()))
                 .map(|(i, _)| i)
-                .expect("full queues imply outstanding work");
+                .expect("full queues imply outstanding dispatchable work");
             reps[i].run_one_step(cfg.max_batch);
         }
         let views: Vec<ReplicaView> = reps
             .iter()
-            .map(|r| ReplicaView {
-                id: r.id,
-                queue_depth: r.queue_depth(),
-                slots_in_use: r.slots_in_use(),
-                busy_until: r.busy_until(),
-                overlap: r.affinity_overlap(&req.plan),
+            .enumerate()
+            .map(|(i, r)| {
+                // layer the detector's belief over ground truth: a
+                // replica that stopped heartbeating is not a dispatch
+                // target even before its fault event is processed
+                let mut health = r.health();
+                if faults_on && health != Health::Down && detector.suspect(i, now) {
+                    health = Health::Down;
+                }
+                ReplicaView {
+                    id: r.id,
+                    queue_depth: r.queue_depth(),
+                    slots_in_use: r.slots_in_use(),
+                    busy_until: r.busy_until(),
+                    overlap: r.affinity_overlap(&req.plan),
+                    health,
+                }
             })
             .collect();
-        let mut choice = bal.pick(req, &views).min(reps.len() - 1);
-        if reps[choice].queue_depth() >= max_queue {
-            // shed to the fewest-queued replica with room (ties toward
-            // the earliest-free clock)
+        let mut choice = bal.pick(&req, &views).min(n_replicas - 1);
+        if !views[choice].dispatchable() || reps[choice].queue_depth() >= max_queue {
+            // shed to the fewest-queued dispatchable replica with room
+            // (ties toward the earliest-free clock)
             choice = views
                 .iter()
-                .filter(|v| v.queue_depth < max_queue)
+                .filter(|v| v.dispatchable() && v.queue_depth < max_queue)
                 .min_by(|a, b| {
                     a.queue_depth.cmp(&b.queue_depth).then(a.busy_until.total_cmp(&b.busy_until))
                 })
                 .map(|v| v.id)
-                .expect("back-pressure loop freed a queue");
+                .expect("back-pressure loop freed a dispatchable queue");
+        }
+        ensure!(
+            reps[choice].health().dispatchable(),
+            "dispatched request {} to Down replica {}",
+            req.id,
+            choice
+        );
+        if attempt > 0 {
+            retries_total += 1;
+            drec.emit(now, TraceEvent::Retry { request: req.id, attempt, replica: choice as u32 });
+            // a re-dispatched request must not decode in the target's
+            // past: its loss happened at fleet time `now`
+            let lag = now - reps[choice].clock.now();
+            if lag > 0.0 {
+                reps[choice].clock.advance(lag);
+            }
         }
         if drec.enabled() {
             drec.emit(
-                req.at,
+                now,
                 TraceEvent::Dispatch {
                     request: req.id,
                     replica: choice as u32,
@@ -418,7 +671,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
                 },
             );
         }
-        reps[choice].enqueue(req.clone());
+        reps[choice].enqueue(req);
     }
     for r in &mut reps {
         r.run_until(f64::INFINITY, cfg.max_batch);
@@ -455,12 +708,57 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
     // requests only — a rejected request's zero-latency terminal (or a
     // cancelled one's truncated decode) says nothing about served
     // latency; their populations are reported as counts instead.
-    let completions: Vec<&Completion> = reps.iter().flat_map(|r| r.completions.iter()).collect();
+    let completions: Vec<&Completion> = reps
+        .iter()
+        .flat_map(|r| r.completions.iter())
+        .chain(failed_terminals.iter())
+        .collect();
     let output_tokens: usize = completions.iter().map(|c| c.output_tokens).sum();
     let completed_set: Vec<&Completion> =
         completions.iter().copied().filter(|c| c.outcome == Outcome::Completed).collect();
     let cancelled = completions.iter().filter(|c| c.outcome == Outcome::Cancelled).count();
     let rejected = completions.iter().filter(|c| c.outcome == Outcome::Rejected).count();
+    let failed = completions.iter().filter(|c| c.outcome == Outcome::Failed).count();
+    // recovery conservation: every fault-reclaimed request either reached
+    // a served terminal or exhausted its retry budget — and nothing
+    // resolved twice or leaked
+    let injected = injected_ids.len();
+    let recovered = completions
+        .iter()
+        .filter(|c| injected_ids.contains(&c.request_id) && c.outcome != Outcome::Failed)
+        .count();
+    if faults_on {
+        let mut seen: HashSet<u64> = HashSet::with_capacity(completions.len());
+        for c in &completions {
+            ensure!(
+                seen.insert(c.request_id),
+                "request {} resolved with more than one terminal outcome",
+                c.request_id
+            );
+        }
+        ensure!(
+            completions.len() == n_expected,
+            "recovery leaked requests: {} terminals for {} arrivals",
+            completions.len(),
+            n_expected
+        );
+        ensure!(
+            injected == recovered + failed,
+            "recovery conservation broke: {injected} injected != {recovered} recovered \
+             + {failed} failed"
+        );
+    }
+    if let Some(tr) = &trace {
+        tr.audit_recovery(injected as u64, recovered as u64, failed as u64)?;
+    }
+    let recovery_waits: Vec<f64> = completions
+        .iter()
+        .filter(|c| c.outcome != Outcome::Failed)
+        .filter_map(|c| first_reclaim.get(&c.request_id).map(|t0| (c.finished - t0).max(0.0)))
+        .collect();
+    let mut outcomes: Vec<(u64, Outcome, usize)> =
+        completions.iter().map(|c| (c.request_id, c.outcome, c.output_tokens)).collect();
+    outcomes.sort_unstable_by_key(|o| o.0);
     let goodput_tokens: usize =
         completed_set.iter().filter(|c| c.attained()).map(|c| c.output_tokens).sum();
     let makespan = completions.iter().map(|c| c.finished).fold(0.0f64, f64::max);
@@ -540,6 +838,13 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         completed: completed_set.len(),
         cancelled,
         rejected,
+        failed,
+        retries: retries_total,
+        migrations: migrations_total,
+        injected,
+        recovered,
+        recovery_wait: Percentiles::of(&recovery_waits),
+        outcomes,
         goodput_tokens,
         goodput_per_sec: if makespan > 0.0 { goodput_tokens as f64 / makespan } else { 0.0 },
         makespan,
@@ -901,5 +1206,137 @@ mod tests {
         let int3 = cfg.with_quant(QuantMode::Int3);
         assert!(int3.spec.capacity > same.spec.capacity);
         assert!(int3.spec.capacity <= int3.spec.n_experts);
+    }
+
+    // ------------------------------------------------------ fault tolerance
+
+    /// Arming the retry policy without a fault plan is fully inert: the
+    /// report — makespan bits included — is identical to the default
+    /// config, and no fault accounting appears.
+    #[test]
+    fn fault_free_run_is_bit_identical_with_retry_armed() {
+        let base = small_cfg(2, 41);
+        let armed = base
+            .clone()
+            .with_faults(FaultSpec::none())
+            .with_retry(RetryPolicy::retries(3, 0.5));
+        let mut b1 = balancer::by_name("expert-affinity").unwrap();
+        let mut b2 = balancer::by_name("expert-affinity").unwrap();
+        let r1 = run_cluster(&base, b1.as_mut()).unwrap();
+        let r2 = run_cluster(&armed, b2.as_mut()).unwrap();
+        assert_eq!(r1.makespan.to_bits(), r2.makespan.to_bits());
+        assert_eq!(r1.hit_rate.to_bits(), r2.hit_rate.to_bits());
+        assert_eq!(r1.outcomes, r2.outcomes);
+        assert_eq!(r2.injected, 0);
+        assert_eq!(r2.retries, 0);
+        assert_eq!(r2.migrations, 0);
+        assert_eq!(r2.failed, 0);
+        assert_eq!(r2.recovery_wait.p99, 0.0);
+    }
+
+    /// Crash storm with a generous retry budget: every reclaimed request
+    /// recovers, terminals still partition the workload exactly, the
+    /// conservation audits inside `run_cluster` pass with tracing on,
+    /// and every Completed request decodes the same tokens as the
+    /// fault-free run.
+    #[test]
+    fn crash_storm_with_retry_recovers_and_stays_bit_identical() {
+        let base = small_cfg(2, 43).with_arrival(Arrival::Burst);
+        let est = base
+            .spec
+            .est_service_seconds(base.workload.prompt_tokens, base.workload.output.cap());
+        let storm = base
+            .clone()
+            .with_faults(FaultSpec::crash_storm(est / 2.0, 4.0 * est, est / 2.0))
+            .with_retry(RetryPolicy::retries(24, est / 8.0))
+            .with_trace(true);
+        let mut b1 = balancer::by_name("least-loaded").unwrap();
+        let mut b2 = balancer::by_name("least-loaded").unwrap();
+        let clean = run_cluster(&base, b1.as_mut()).unwrap();
+        let rep = run_cluster(&storm, b2.as_mut()).unwrap();
+        assert_eq!(rep.n_requests, storm.workload.n_requests);
+        assert_eq!(
+            rep.completed + rep.cancelled + rep.rejected + rep.failed,
+            rep.n_requests,
+            "terminal outcomes must partition the workload"
+        );
+        assert!(rep.injected > 0, "the storm must reclaim something");
+        assert_eq!(rep.injected, rep.recovered + rep.failed);
+        assert!(rep.retries >= (rep.injected - rep.failed) as u64);
+        assert!(rep.trace.is_some(), "audited lanes merged");
+        // Completed requests decode identical output to the clean run
+        let clean_tokens: HashMap<u64, usize> = clean
+            .outcomes
+            .iter()
+            .filter(|(_, o, _)| *o == Outcome::Completed)
+            .map(|&(id, _, tok)| (id, tok))
+            .collect();
+        for &(id, o, tok) in &rep.outcomes {
+            if o == Outcome::Completed {
+                assert_eq!(Some(&tok), clean_tokens.get(&id), "request {id} token drift");
+            }
+        }
+    }
+
+    /// Disconnects and mid-decode hang-ups racing replica crashes: each
+    /// request must still resolve with exactly one terminal outcome and
+    /// release its pin-ledger entry exactly once — both enforced inside
+    /// `run_cluster` (terminal-uniqueness bail + per-lane pin audits).
+    #[test]
+    fn disconnect_racing_crash_keeps_terminals_unique() {
+        let base = small_cfg(2, 47);
+        let est = base
+            .spec
+            .est_service_seconds(base.workload.prompt_tokens, base.workload.output.cap());
+        let cfg = base
+            .with_arrival(Arrival::Burst)
+            .with_stream_mix(StreamMix {
+                deadline_frac: 0.0,
+                deadline_slack: 0.0,
+                cancel_frac: 0.3,
+                cancel_after: 1,
+                disconnect_frac: 0.25,
+            })
+            .with_faults(FaultSpec::crash_storm(est / 2.0, 4.0 * est, est / 2.0))
+            .with_retry(RetryPolicy::retries(16, est / 8.0))
+            .with_trace(true);
+        let mut b = balancer::by_name("expert-affinity").unwrap();
+        let rep = run_cluster(&cfg, b.as_mut()).unwrap();
+        assert_eq!(rep.n_requests, cfg.workload.n_requests);
+        assert_eq!(rep.completed + rep.cancelled + rep.rejected + rep.failed, rep.n_requests);
+        assert!(rep.cancelled > 0, "the mix must actually cancel something");
+        assert_eq!(rep.injected, rep.recovered + rep.failed);
+        let mut ids: Vec<u64> = rep.outcomes.iter().map(|o| o.0).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), rep.n_requests, "one terminal per request");
+    }
+
+    /// Retry off under the same storm: reclaimed requests fail terminally
+    /// on first reclaim, while retry on strictly lifts the completed
+    /// fraction — the degradation the `--retry` knob exists to fix.
+    #[test]
+    fn retry_budget_strictly_lifts_completion_under_crashes() {
+        let base = small_cfg(2, 53).with_arrival(Arrival::Burst);
+        let est = base
+            .spec
+            .est_service_seconds(base.workload.prompt_tokens, base.workload.output.cap());
+        let faults = FaultSpec::crash_storm(est / 2.0, 4.0 * est, est / 2.0);
+        let run = |retry: RetryPolicy| {
+            let cfg = base.clone().with_faults(faults.clone()).with_retry(retry);
+            let mut b = balancer::by_name("round-robin").unwrap();
+            run_cluster(&cfg, b.as_mut()).unwrap()
+        };
+        let off = run(RetryPolicy::off());
+        let on = run(RetryPolicy::retries(24, est / 8.0));
+        assert!(off.failed > 0, "without retries a reclaimed request is lost");
+        assert_eq!(off.injected, off.recovered + off.failed);
+        assert_eq!(off.retries, 0);
+        assert!(
+            on.completed > off.completed,
+            "retry on ({}) must strictly beat retry off ({})",
+            on.completed,
+            off.completed
+        );
+        assert_eq!(on.injected, on.recovered + on.failed);
     }
 }

@@ -30,6 +30,7 @@ use std::collections::VecDeque;
 use crate::cache::{EvictionKind, ExpertCache};
 use crate::clock::{CostModel, GpuSpec, PaperDims, SimClock};
 use crate::coordinator::{Outcome, PreemptPolicy, Priority, SchedulerMode};
+use crate::fault::Health;
 use crate::pcie::TransferEngine;
 use crate::predictor::PrefetchPlan;
 use crate::quant::QuantMode;
@@ -207,6 +208,22 @@ struct ActiveSeq {
     preempted_wait: f64,
 }
 
+/// A live sequence detached from one replica for adoption by another
+/// (brownout migration — see `fault` and the cluster loop).  `ActiveSeq`
+/// is private; this is the portable wrapper: the step cursor and timing
+/// carry over verbatim, so the adopted sequence resumes its pre-drawn
+/// routing exactly where it stopped and its tokens stay bit-identical.
+#[derive(Debug, Clone)]
+pub struct MigratedSeq {
+    pub req: ClusterRequest,
+    pub step: usize,
+    pub started: f64,
+    pub first_token: f64,
+    pub preempted_wait: f64,
+    /// Sim time the sequence was detached (suspension-wait accounting).
+    pub since: f64,
+}
+
 /// One serving replica (see module docs).
 pub struct Replica {
     pub id: usize,
@@ -247,6 +264,17 @@ pub struct Replica {
     /// *planned* residency, which the affinity scorer may consult before
     /// the caches have warmed (burst arrivals dispatch ahead of decode).
     last_plan: Option<PrefetchPlan>,
+    /// Fault-injection state (see `fault`): health, the sim time a
+    /// crashed replica comes back up, and the active degradation
+    /// windows.  Inert at the defaults — `slow_factor` 1.0 multiplies
+    /// compute bit-exactly and `Healthy` contributes zero balancer
+    /// bias — so fault-free runs stay byte-identical.
+    health: Health,
+    recover_at: f64,
+    slow_factor: f64,
+    brownout_until: f64,
+    flap_until: f64,
+    escalated: bool,
     /// Structured event recorder on this replica's lane (see `trace`);
     /// off by default — a disabled recorder adds no allocation to the
     /// step path.
@@ -282,6 +310,12 @@ impl Replica {
             total_assignments: 0,
             route_counts,
             last_plan: None,
+            health: Health::Healthy,
+            recover_at: 0.0,
+            slow_factor: 1.0,
+            brownout_until: 0.0,
+            flap_until: 0.0,
+            escalated: false,
             rec: Recorder::off(),
             completions: Vec::new(),
             busy_seconds: 0.0,
@@ -328,6 +362,193 @@ impl Replica {
     /// fallback (0.0 when the fallback is off; always in [0, 1]).
     pub fn degraded_token_frac(&self) -> f64 {
         crate::metrics::degraded_frac(self.degraded_execs, self.total_assignments)
+    }
+
+    /// Current health (see [`Health`]); drives the balancer's
+    /// dispatchability filter and de-weighting.
+    pub fn health(&self) -> Health {
+        self.health
+    }
+
+    /// Sim time a crashed replica comes back up (0.0 if never crashed).
+    pub fn recover_at(&self) -> f64 {
+        self.recover_at
+    }
+
+    /// Advance the health state machine to `now`: expired degradation
+    /// windows reset their multipliers (`Degraded` turns `Healthy` once
+    /// both compute and link are nominal), and a `Down` replica whose
+    /// outage has elapsed turns `Recovering` — dispatchable again, and
+    /// promoted back to `Healthy` by its first served step.  Inert when
+    /// no fault state is set.
+    pub fn refresh_health(&mut self, now: f64) {
+        if self.slow_factor != 1.0 && now >= self.brownout_until {
+            self.slow_factor = 1.0;
+        }
+        if self.pcie.slowdown() != 1.0 && now >= self.flap_until {
+            self.pcie.set_slowdown(1.0);
+        }
+        match self.health {
+            Health::Down if now >= self.recover_at => self.health = Health::Recovering,
+            Health::Degraded if self.slow_factor == 1.0 && self.pcie.slowdown() == 1.0 => {
+                self.health = Health::Healthy;
+            }
+            _ => {}
+        }
+    }
+
+    /// Brownout: compute runs `factor`× slower until sim time `until`
+    /// and the replica reads `Degraded` to the balancer.
+    pub fn set_brownout(&mut self, factor: f64, until: f64) {
+        self.slow_factor = factor.max(1.0);
+        self.brownout_until = until;
+        if self.health != Health::Down {
+            self.health = Health::Degraded;
+        }
+    }
+
+    /// PCIe link flap: the link runs `factor`× slower until sim time
+    /// `until`, and every transfer in flight at the flap is lost — its
+    /// reservation releases and the consumer re-fetches via the normal
+    /// demand path (issue-side byte accounting stays; the trace's
+    /// prefetch audit counts the loss).
+    pub fn apply_link_flap(&mut self, factor: f64, until: f64) {
+        self.pcie.set_slowdown(factor);
+        self.flap_until = until;
+        if self.health != Health::Down {
+            self.health = Health::Degraded;
+        }
+        let now = self.clock.now();
+        for (l, e) in self.pcie.drop_in_flight() {
+            self.rec.emit(now, TraceEvent::TransferLost { layer: l as u32, expert: e as u32 });
+            self.cache.layer(l).unreserve(e);
+        }
+    }
+
+    /// Corrupt the oldest clean in-flight transfer (a checksum failure,
+    /// observable only at arrival — see `pcie`).  Returns whether a
+    /// transfer was there to corrupt.
+    pub fn corrupt_transfer(&mut self) -> bool {
+        self.pcie.corrupt_oldest_in_flight().is_some()
+    }
+
+    /// Escalate (or reset) the big-little fallback threshold to zero:
+    /// while part of the fleet is down, every miss backed by a little
+    /// copy serves degraded instead of stalling — graceful degradation
+    /// before load shedding.  No-op without a little tier.
+    pub fn set_fallback_escalation(&mut self, on: bool) {
+        self.escalated = on;
+    }
+
+    fn fallback_threshold(&self) -> f64 {
+        if self.escalated {
+            0.0
+        } else {
+            self.spec.fallback_threshold
+        }
+    }
+
+    /// Crash this replica: every live, suspended, and queued request is
+    /// reclaimed (returned for the coordinator to retry elsewhere), GPU
+    /// state — both cache tiers, reservations, in-flight transfers — is
+    /// lost, and the replica is `Down` until `recover_at`.  Pin-ledger
+    /// entries of in-flight sequences release exactly once here
+    /// (suspended sequences already released at suspension), so the
+    /// trace's pin conservation audit balances across the crash.
+    pub fn crash(&mut self, recover_at: f64) -> Vec<ClusterRequest> {
+        let now = self.clock.now();
+        let reclaimed = self.in_flight.len() + self.suspended.len() + self.queue_depth();
+        self.rec.emit(
+            now,
+            TraceEvent::Crash { replica: self.id as u32, reclaimed: reclaimed as u32 },
+        );
+        let mut reqs = Vec::with_capacity(reclaimed);
+        for seq in self.in_flight.drain(..) {
+            self.cache.release(seq.req.id);
+            self.rec.emit(now, TraceEvent::PinRelease { owner: seq.req.id });
+            reqs.push(seq.req);
+        }
+        for (seq, _) in self.suspended.drain(..) {
+            reqs.push(seq.req);
+        }
+        for q in &mut self.queues {
+            reqs.extend(q.drain(..));
+        }
+        for (l, e) in self.pcie.drop_in_flight() {
+            self.rec.emit(now, TraceEvent::TransferLost { layer: l as u32, expert: e as u32 });
+        }
+        for l in 0..self.spec.n_layers {
+            let (big, little) = self.cache.layer(l).crash_clear();
+            for e in big {
+                self.rec.emit(now, TraceEvent::CacheEvict { layer: l as u32, expert: e as u32 });
+            }
+            for e in little {
+                self.rec.emit(now, TraceEvent::LittleEvict { layer: l as u32, expert: e as u32 });
+            }
+        }
+        self.last_plan = None;
+        self.health = Health::Down;
+        self.recover_at = recover_at;
+        self.slow_factor = 1.0;
+        self.pcie.set_slowdown(1.0);
+        if recover_at > now {
+            self.clock.advance(recover_at - now);
+        }
+        reqs
+    }
+
+    /// Detach every live and suspended sequence for adoption by a healthy
+    /// replica (brownout migration).  In-flight sequences release their
+    /// pin-ledger entries here — the adopter re-pins at reattachment —
+    /// so each lane's pin conservation stays balanced.
+    pub fn extract_live(&mut self) -> Vec<MigratedSeq> {
+        let now = self.clock.now();
+        let mut out = Vec::with_capacity(self.in_flight.len() + self.suspended.len());
+        for seq in self.in_flight.drain(..) {
+            self.cache.release(seq.req.id);
+            self.rec.emit(now, TraceEvent::Suspend { seq: seq.req.id });
+            self.rec.emit(now, TraceEvent::PinRelease { owner: seq.req.id });
+            out.push(MigratedSeq {
+                req: seq.req,
+                step: seq.step,
+                started: seq.started,
+                first_token: seq.first_token,
+                preempted_wait: seq.preempted_wait,
+                since: now,
+            });
+        }
+        for (seq, since) in self.suspended.drain(..) {
+            out.push(MigratedSeq {
+                req: seq.req,
+                step: seq.step,
+                started: seq.started,
+                first_token: seq.first_token,
+                preempted_wait: seq.preempted_wait,
+                since,
+            });
+        }
+        out
+    }
+
+    /// Adopt a migrated sequence: it lands suspended (reattachment
+    /// re-runs the plan refresh and re-pins) and the clock fast-forwards
+    /// to the migration time so the adopter cannot serve it in its own
+    /// past.
+    pub fn adopt(&mut self, m: MigratedSeq, now: f64) {
+        if now > self.clock.now() {
+            self.clock.advance(now - self.clock.now());
+        }
+        self.last_plan = Some(m.req.plan.clone());
+        self.suspended.push((
+            ActiveSeq {
+                req: m.req,
+                step: m.step,
+                started: m.started,
+                first_token: m.first_token,
+                preempted_wait: m.preempted_wait,
+            },
+            m.since,
+        ));
     }
 
     pub fn enqueue(&mut self, req: ClusterRequest) {
@@ -640,7 +861,7 @@ impl Replica {
     /// continues exactly where suspension stopped.
     fn reattach(&mut self, i: usize) {
         let (mut seq, since) = self.suspended.remove(i);
-        seq.preempted_wait += self.clock.now() - since;
+        seq.preempted_wait += (self.clock.now() - since).max(0.0);
         if self.spec.prefetch {
             self.refresh_plan(&seq.req.plan);
         }
@@ -731,6 +952,16 @@ impl Replica {
     /// `predictor::predict_next_layer`.
     fn step_once(&mut self) {
         debug_assert!(!self.in_flight.is_empty());
+        // expire fault windows and surface checksum failures: a corrupt
+        // arrival is never committed — its reservation releases and the
+        // consumer re-fetches via the normal miss path (all inert when
+        // no faults were injected)
+        self.refresh_health(self.clock.now());
+        let now = self.clock.now();
+        for (l, e) in self.pcie.take_corrupt(now) {
+            self.rec.emit(now, TraceEvent::Corrupt { layer: l as u32, expert: e as u32 });
+            self.cache.layer(l).unreserve(e);
+        }
         let quant = self.spec.quant;
         let tier = quant.idx() as u8;
         let n_layers = self.spec.n_layers;
@@ -836,7 +1067,7 @@ impl Replica {
                                 let wait = self.pcie.residual_of(l, e, now).unwrap_or_else(|| {
                                     self.pcie.demand_estimate(&self.cost, now, quant)
                                 });
-                                if wait > self.spec.fallback_threshold {
+                                if wait > self.fallback_threshold() {
                                     self.degraded_execs += 1;
                                     degraded_assigns += 1;
                                     if !degraded_set.contains(&e) {
@@ -985,9 +1216,10 @@ impl Replica {
                 }
                 exec
             };
-            self.clock.advance(self.cost.attn_time(t) + exec);
+            // `* 1.0` is bit-exact, so a fault-free run pays nothing
+            self.clock.advance((self.cost.attn_time(t) + exec) * self.slow_factor);
         }
-        self.clock.advance(self.cost.head_time(t));
+        self.clock.advance(self.cost.head_time(t) * self.slow_factor);
         self.cache.token_tick();
 
         // advance cursors; retire finished sequences immediately — their
@@ -1058,6 +1290,10 @@ impl Replica {
             } else {
                 i += 1;
             }
+        }
+        // a recovering replica's first served step proves it out
+        if self.health == Health::Recovering {
+            self.health = Health::Healthy;
         }
     }
 
@@ -1533,7 +1769,7 @@ mod tests {
         );
         assert_eq!(r.slots_in_use(), 0);
         let tr = r.take_trace().expect("tracing was on");
-        tr.audit_pins(0);
+        tr.audit_pins(0).expect("a cancelled sequence must leak zero pins");
     }
 
     /// A queue-time disconnect never takes a slot: it terminal-cancels
@@ -1588,5 +1824,103 @@ mod tests {
         let c = &off.completions[0];
         assert_eq!(c.outcome, Outcome::Completed);
         assert!(!c.attained(), "a missed deadline must not count toward goodput");
+    }
+
+    // ------------------------------------------------------ fault injection
+
+    /// A crash reclaims every live and queued request exactly once, wipes
+    /// GPU state, rides out the outage on its own clock, and leaves the
+    /// pin conservation audit balanced (in-flight pins release at the
+    /// crash; suspended ones already released at suspension).
+    #[test]
+    fn crash_reclaims_everything_and_balances_pins() {
+        let s = spec();
+        let mut r = Replica::new(0, s.clone(), SchedulerMode::Continuous).with_trace(true);
+        for (i, seed) in [1u64, 2, 3].into_iter().enumerate() {
+            r.enqueue(req_shaped(i as u64, 1, 40, &s, seed));
+        }
+        for _ in 0..3 {
+            r.run_one_step(2);
+        }
+        assert_eq!(r.slots_in_use(), 2);
+        assert_eq!(r.queue_depth(), 1);
+        let down_until = r.clock.now() + 1.0;
+        let reclaimed = r.crash(down_until);
+        assert_eq!(reclaimed.len(), 3, "every live and queued request is reclaimed");
+        assert_eq!(r.health(), Health::Down);
+        assert!(!r.health().dispatchable());
+        assert!(!r.has_work());
+        assert!(r.clock.now() >= down_until, "the clock rides out the outage");
+        assert!(r.completions.is_empty(), "a crash is not a terminal outcome");
+        // GPU state is gone: planned and resident affinity both read cold
+        let profiles = TaskProfile::synthetic(1, s.n_layers, s.n_experts, s.capacity, 0.9);
+        assert_eq!(r.affinity_overlap(&profiles[0].plan()), 0.0);
+        assert!(r.crash(down_until).is_empty(), "a second crash has nothing to reclaim");
+        r.refresh_health(down_until);
+        assert_eq!(r.health(), Health::Recovering);
+        assert!(r.health().dispatchable());
+        r.take_trace().unwrap().audit_pins(0).expect("pins balance across the crash");
+    }
+
+    /// An expired brownout window is fully inert — the first step resets
+    /// the multiplier and the run is bit-identical to fault-free — while
+    /// a live window strictly slows compute and reads `Degraded`.
+    #[test]
+    fn brownout_slows_compute_and_expires_cleanly() {
+        let s = spec();
+        let run = |brownout: Option<(f64, f64)>| {
+            let mut r = Replica::new(0, s.clone(), SchedulerMode::Continuous);
+            if let Some((f, until)) = brownout {
+                r.set_brownout(f, until);
+            }
+            r.enqueue(req_shaped(0, 1, 8, &s, 7));
+            r.run_until(f64::INFINITY, 1);
+            r
+        };
+        let clean = run(None);
+        let slowed = run(Some((4.0, f64::INFINITY)));
+        let expired = run(Some((4.0, 0.0)));
+        assert!(slowed.clock.now() > clean.clock.now(), "a live brownout must cost time");
+        assert_eq!(slowed.health(), Health::Degraded);
+        assert_eq!(
+            expired.clock.now().to_bits(),
+            clean.clock.now().to_bits(),
+            "an expired window must be bit-identical to fault-free"
+        );
+        assert_eq!(expired.health(), Health::Healthy);
+    }
+
+    /// Mid-flight migration preserves the decode exactly: the adopter
+    /// resumes the step cursors and both requests complete with full
+    /// output, with both lanes' pin ledgers balanced.
+    #[test]
+    fn migrated_sequences_complete_on_the_adopter() {
+        let s = spec();
+        let mut a = Replica::new(0, s.clone(), SchedulerMode::Continuous).with_trace(true);
+        let mut b = Replica::new(1, s.clone(), SchedulerMode::Continuous).with_trace(true);
+        a.enqueue(req_shaped(0, 1, 24, &s, 5));
+        a.enqueue(req_shaped(1, 1, 24, &s, 6));
+        for _ in 0..4 {
+            a.run_one_step(2);
+        }
+        assert_eq!(a.slots_in_use(), 2);
+        let moved = a.extract_live();
+        assert_eq!(moved.len(), 2);
+        assert!(!a.has_work());
+        let t = a.clock.now();
+        for m in moved {
+            b.adopt(m, t);
+        }
+        assert_eq!(b.suspended_len(), 2);
+        b.run_until(f64::INFINITY, 2);
+        assert_eq!(b.completions.len(), 2);
+        for c in &b.completions {
+            assert_eq!(c.outcome, Outcome::Completed);
+            assert_eq!(c.output_tokens, 24, "migration must not drop decoded tokens");
+            assert!(c.preempted_wait >= 0.0);
+            assert!(c.finished >= t, "the adopter cannot finish in its own past");
+        }
+        a.take_trace().unwrap().audit_pins(0).expect("donor pins balance");
+        b.take_trace().unwrap().audit_pins(0).expect("adopter pins balance");
     }
 }

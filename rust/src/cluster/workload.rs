@@ -314,6 +314,17 @@ pub struct WorkloadSpec {
     pub seed: u64,
 }
 
+impl WorkloadSpec {
+    /// Seed for the fault-injection RNG stream: derived from the
+    /// workload seed but salted, so the fault plan is deterministic per
+    /// workload yet consumes *zero* draws from the request generator —
+    /// fault-free traffic stays byte-identical whether or not a fault
+    /// plan was ever sampled.
+    pub fn fault_seed(&self) -> u64 {
+        self.seed ^ crate::fault::FAULT_SEED_SALT
+    }
+}
+
 /// Generate the full request schedule: arrival process × task mix ×
 /// pre-drawn per-request routing traces.
 pub fn generate(

@@ -289,6 +289,10 @@ pub enum Outcome {
     /// Refused at admission: the estimated TTFT under current occupancy
     /// could not meet the request's deadline.
     Rejected,
+    /// Exhausted its retry budget after repeated replica failures
+    /// (fleet-level: single-node serving never produces this — see
+    /// [`crate::cluster::run_cluster`] and [`crate::fault`]).
+    Failed,
 }
 
 impl Outcome {
@@ -297,6 +301,7 @@ impl Outcome {
             Outcome::Completed => "completed",
             Outcome::Cancelled => "cancelled",
             Outcome::Rejected => "rejected",
+            Outcome::Failed => "failed",
         }
     }
 }
@@ -732,6 +737,10 @@ pub struct ServerStats {
     pub cancelled_in_queue: u64,
     /// Terminal [`Outcome::Rejected`] count (SLO-aware admission).
     pub rejected: u64,
+    /// Terminal [`Outcome::Failed`] count (retry budget exhausted after
+    /// replica failures).  Fleet-level: always zero in single-node
+    /// serving, where no fault plan runs.
+    pub failed: u64,
     /// Backpressure suspensions: a bounded stream channel ran full and
     /// the sequence was parked at a step boundary.
     pub stream_stalls: u64,
@@ -1186,6 +1195,7 @@ impl<D: Decoder> Scheduler<D> {
             Outcome::Completed => self.stats.completed += 1,
             Outcome::Cancelled => self.stats.cancelled += 1,
             Outcome::Rejected => self.stats.rejected += 1,
+            Outcome::Failed => self.stats.failed += 1,
         }
         let _ = done.send(resp);
     }

@@ -1,0 +1,421 @@
+//! Fleet fault injection and recovery primitives (docs/ROBUSTNESS.md).
+//!
+//! The cluster layer assumed every replica, PCIe link and expert
+//! transfer was perfect; this module supplies the failure model that
+//! turns the existing mechanisms — portable suspended `SeqState`,
+//! exactly-one terminal `Outcome`, the big-little fallback — into
+//! actual fault tolerance:
+//!
+//! * [`FaultPlan`] — a deterministic, seedable schedule of injected
+//!   faults.  It is drawn from a *dedicated* RNG stream
+//!   (`WorkloadSpec::fault_seed`), never the workload generator's, so a
+//!   fault-free run with this module compiled in is byte-identical to a
+//!   build without it.
+//! * [`FaultKind`] — the failure taxonomy: fail-stop replica crashes,
+//!   slow-replica brownouts (a compute multiplier over a sim-time
+//!   window), PCIe link flaps (bandwidth degradation plus loss of the
+//!   in-flight transfer pipeline), and expert-transfer corruption (a
+//!   checksum-failed arrival that is discarded, never committed).
+//! * [`Health`] — the per-replica state machine the dispatcher keys
+//!   routing decisions on (never dispatch to `Down`, de-weight
+//!   `Degraded` / `Recovering`).
+//! * [`PhiDetector`] — a phi-accrual-style missed-heartbeat detector:
+//!   the dispatcher samples every replica's sim-clock progress as a
+//!   heartbeat and grows suspicion with the gap, so `Down` is an
+//!   *observed* state, not an oracle read.
+//! * [`RetryPolicy`] — the per-request retry budget (`--retry <n>`)
+//!   with exponential backoff in sim time; a request that exhausts it
+//!   resolves with the terminal `Outcome::Failed`.
+
+use crate::util::rng::Rng;
+
+/// Salt XORed into the workload seed for the fault RNG stream.  A
+/// dedicated stream means fault generation consumes zero draws from the
+/// workload generator, so enabling the fault *machinery* (with no
+/// faults) can never perturb arrivals, routing traces, or decode
+/// numerics.
+pub const FAULT_SEED_SALT: u64 = 0xFA17_5EED;
+
+/// Hard cap on generated fault events — a backstop against a
+/// degenerate mtbf, far above any meaningful storm.
+const MAX_EVENTS: usize = 10_000;
+
+/// Replica health as seen by the dispatcher.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// Serving normally.
+    Healthy,
+    /// Up but impaired: a brownout compute multiplier or a link flap is
+    /// active.  Dispatchable, but de-weighted by the balancers.
+    Degraded,
+    /// Crashed: all state lost, nothing may be dispatched to it.
+    Down,
+    /// Restarted after a crash but cold (caches empty).  Dispatchable;
+    /// flips to [`Health::Healthy`] after its first served step.
+    Recovering,
+}
+
+impl Health {
+    pub fn name(self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Degraded => "degraded",
+            Health::Down => "down",
+            Health::Recovering => "recovering",
+        }
+    }
+
+    /// Whether the dispatcher may route work here.  `Down` is the only
+    /// non-dispatchable state — the invariant `run_cluster` hard-fails
+    /// on if violated.
+    pub fn dispatchable(self) -> bool {
+        !matches!(self, Health::Down)
+    }
+}
+
+/// One injected failure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Fail-stop crash: every queued and live sequence is reclaimed by
+    /// the dispatcher, VRAM residency and in-flight transfers are lost,
+    /// and the replica restarts cold after the spec's recovery delay.
+    Crash,
+    /// Slow replica: compute is multiplied by `factor` for `duration`
+    /// sim-seconds.  Live sequences migrate to healthy replicas with
+    /// progress intact (suspended `SeqState` is portable).
+    Brownout { factor: f64, duration: f64 },
+    /// PCIe link flap: H2D transfer durations are multiplied by
+    /// `factor` for `duration` sim-seconds and every tracked in-flight
+    /// transfer is lost (must be re-fetched).
+    LinkFlap { factor: f64, duration: f64 },
+    /// One tracked in-flight expert transfer arrives checksum-corrupt:
+    /// it is discarded without committing residency and must be
+    /// re-fetched by a later demand miss or prefetch.
+    Corrupt,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Brownout { .. } => "brownout",
+            FaultKind::LinkFlap { .. } => "link-flap",
+            FaultKind::Corrupt => "corrupt",
+        }
+    }
+}
+
+/// One scheduled fault: `kind` strikes `replica` at sim-time `at`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at: f64,
+    pub replica: usize,
+    pub kind: FaultKind,
+}
+
+/// Knobs for fault generation (CLI `--faults` / `--mtbf`).  The
+/// default [`FaultSpec::none`] is inert: no events, no RNG draws, no
+/// trace emissions — fault-free output stays byte-identical.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    pub enabled: bool,
+    /// Mean sim-seconds between injected faults, fleet-wide.
+    pub mtbf: f64,
+    /// Faults are injected in `[0, horizon)` sim-seconds.
+    pub horizon: f64,
+    /// Crash restart delay: a crashed replica is `Down` for this many
+    /// sim-seconds, then `Recovering` (cold).
+    pub recovery: f64,
+    /// Compute multiplier while a brownout window is active (> 1).
+    pub brownout_factor: f64,
+    pub brownout_duration: f64,
+    /// H2D duration multiplier while a link flap is active (> 1).
+    pub flap_factor: f64,
+    pub flap_duration: f64,
+    /// Relative draw weights for the four fault kinds.
+    pub crash_weight: f64,
+    pub brownout_weight: f64,
+    pub flap_weight: f64,
+    pub corrupt_weight: f64,
+}
+
+impl FaultSpec {
+    /// No faults.  Inert by construction: [`FaultPlan::generate`]
+    /// returns an empty plan without touching the RNG.
+    pub fn none() -> FaultSpec {
+        FaultSpec {
+            enabled: false,
+            mtbf: 0.0,
+            horizon: 0.0,
+            recovery: 0.0,
+            brownout_factor: 1.0,
+            brownout_duration: 0.0,
+            flap_factor: 1.0,
+            flap_duration: 0.0,
+            crash_weight: 0.0,
+            brownout_weight: 0.0,
+            flap_weight: 0.0,
+            corrupt_weight: 0.0,
+        }
+    }
+
+    /// Crash-only storm: fail-stop crashes at the given mtbf, each
+    /// followed by a `recovery`-second cold restart.
+    pub fn crash_storm(mtbf: f64, horizon: f64, recovery: f64) -> FaultSpec {
+        FaultSpec {
+            enabled: true,
+            mtbf,
+            horizon,
+            recovery,
+            crash_weight: 1.0,
+            ..FaultSpec::none()
+        }
+    }
+
+    /// All four fault kinds at equal weight.  `scale` is a
+    /// characteristic service time (e.g. one request's estimated
+    /// service seconds): it sizes the recovery delay and the
+    /// brownout / flap windows so the storm is disruptive but
+    /// recoverable at any simulated model size.
+    pub fn mixed(mtbf: f64, horizon: f64, scale: f64) -> FaultSpec {
+        FaultSpec {
+            enabled: true,
+            mtbf,
+            horizon,
+            recovery: scale,
+            brownout_factor: 3.0,
+            brownout_duration: 2.0 * scale,
+            flap_factor: 4.0,
+            flap_duration: 2.0 * scale,
+            crash_weight: 1.0,
+            brownout_weight: 1.0,
+            flap_weight: 1.0,
+            corrupt_weight: 1.0,
+        }
+    }
+}
+
+/// A deterministic schedule of fault events, sorted by time.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Draw a fault schedule from a dedicated RNG stream (`seed` should
+    /// be `WorkloadSpec::fault_seed()`).  Inter-fault gaps are
+    /// exponential at rate `1/mtbf`, the struck replica is uniform, and
+    /// the kind follows the spec's weights.  Disabled or degenerate
+    /// specs return an empty plan without consuming any randomness.
+    pub fn generate(spec: &FaultSpec, n_replicas: usize, seed: u64) -> FaultPlan {
+        let mut events = Vec::new();
+        let weight_sum =
+            spec.crash_weight + spec.brownout_weight + spec.flap_weight + spec.corrupt_weight;
+        if !spec.enabled
+            || n_replicas == 0
+            || spec.mtbf <= 0.0
+            || spec.horizon <= 0.0
+            || weight_sum <= 0.0
+        {
+            return FaultPlan { events };
+        }
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        loop {
+            t += rng.exp(1.0 / spec.mtbf);
+            if t >= spec.horizon || events.len() >= MAX_EVENTS {
+                break;
+            }
+            let replica = rng.below(n_replicas);
+            let mut draw = rng.f64() * weight_sum;
+            let kind = if draw < spec.crash_weight {
+                FaultKind::Crash
+            } else {
+                draw -= spec.crash_weight;
+                if draw < spec.brownout_weight {
+                    FaultKind::Brownout {
+                        factor: spec.brownout_factor,
+                        duration: spec.brownout_duration,
+                    }
+                } else if draw - spec.brownout_weight < spec.flap_weight {
+                    FaultKind::LinkFlap {
+                        factor: spec.flap_factor,
+                        duration: spec.flap_duration,
+                    }
+                } else {
+                    FaultKind::Corrupt
+                }
+            };
+            events.push(FaultEvent { at: t, replica, kind });
+        }
+        FaultPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Per-request retry budget with exponential backoff in sim time
+/// (CLI `--retry <n>`).  With the budget exhausted a reclaimed request
+/// resolves `Outcome::Failed`; [`RetryPolicy::off`] (budget 0) fails
+/// on the first reclaim.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    pub max_retries: u32,
+    /// Base backoff in sim-seconds; attempt `k` (0-based) waits
+    /// `backoff · 2^k` before re-dispatch.
+    pub backoff: f64,
+}
+
+impl RetryPolicy {
+    pub fn off() -> RetryPolicy {
+        RetryPolicy { max_retries: 0, backoff: 0.0 }
+    }
+
+    pub fn retries(max_retries: u32, backoff: f64) -> RetryPolicy {
+        RetryPolicy { max_retries, backoff: backoff.max(0.0) }
+    }
+
+    /// Sim-seconds to wait before re-dispatching attempt `attempt`
+    /// (0-based): exponential, capped so the shift cannot overflow.
+    pub fn delay(&self, attempt: u32) -> f64 {
+        self.backoff * f64::from(1u32 << attempt.min(20))
+    }
+}
+
+/// Phi-accrual-style failure detector.  Each replica's sim-clock
+/// progress is its heartbeat; suspicion `phi` grows linearly with the
+/// silence gap measured in expected heartbeat intervals, and a replica
+/// is *suspected* down once `phi` crosses the threshold.  The
+/// dispatcher emits each sample as a `Heartbeat` trace event, so
+/// detector behaviour is auditable from the timeline.
+#[derive(Debug, Clone)]
+pub struct PhiDetector {
+    expected: f64,
+    threshold: f64,
+    last: Vec<f64>,
+}
+
+impl PhiDetector {
+    /// `expected` is the anticipated gap between heartbeats in
+    /// sim-seconds; `threshold` the suspicion level (in expected
+    /// intervals of silence) at which a replica is suspected down.
+    pub fn new(n_replicas: usize, expected: f64, threshold: f64) -> PhiDetector {
+        PhiDetector {
+            expected: expected.max(1e-12),
+            threshold: threshold.max(1.0),
+            last: vec![0.0; n_replicas],
+        }
+    }
+
+    /// Record a heartbeat from `replica` at sim-time `at`.
+    pub fn beat(&mut self, replica: usize, at: f64) {
+        if let Some(slot) = self.last.get_mut(replica) {
+            if at > *slot {
+                *slot = at;
+            }
+        }
+    }
+
+    /// Suspicion level: silence since the last heartbeat, in expected
+    /// intervals.  0 immediately after a beat.
+    pub fn phi(&self, replica: usize, now: f64) -> f64 {
+        let last = self.last.get(replica).copied().unwrap_or(0.0);
+        ((now - last) / self.expected).max(0.0)
+    }
+
+    pub fn suspect(&self, replica: usize, now: f64) -> bool {
+        self.phi(replica, now) > self.threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_plan_is_empty_and_draw_free() {
+        let plan = FaultPlan::generate(&FaultSpec::none(), 4, 42);
+        assert!(plan.is_empty());
+        // a disabled spec must not consume RNG draws: generating twice
+        // from the same seed trivially matches, and the workload stream
+        // (a different seed) is untouched by construction
+        let again = FaultPlan::generate(&FaultSpec::none(), 4, 42);
+        assert_eq!(plan.events, again.events);
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_well_formed() {
+        let spec = FaultSpec::mixed(0.5, 10.0, 0.1);
+        let a = FaultPlan::generate(&spec, 4, 7);
+        let b = FaultPlan::generate(&spec, 4, 7);
+        assert_eq!(a.events, b.events, "same seed, same plan");
+        assert!(!a.is_empty(), "mtbf 0.5 over 10s should draw events");
+        let mut prev = 0.0;
+        for ev in &a.events {
+            assert!(ev.at >= prev, "events sorted by time");
+            assert!(ev.at < spec.horizon);
+            assert!(ev.replica < 4);
+            prev = ev.at;
+        }
+        let c = FaultPlan::generate(&spec, 4, 8);
+        assert_ne!(a.events, c.events, "different seed, different plan");
+    }
+
+    #[test]
+    fn crash_storm_draws_only_crashes() {
+        let spec = FaultSpec::crash_storm(0.25, 8.0, 0.05);
+        let plan = FaultPlan::generate(&spec, 3, 11);
+        assert!(!plan.is_empty());
+        assert!(plan.events.iter().all(|e| e.kind == FaultKind::Crash));
+    }
+
+    #[test]
+    fn mixed_spec_draws_every_kind() {
+        let spec = FaultSpec::mixed(0.02, 40.0, 0.1);
+        let plan = FaultPlan::generate(&spec, 4, 3);
+        let names: std::collections::HashSet<&str> =
+            plan.events.iter().map(|e| e.kind.name()).collect();
+        for kind in ["crash", "brownout", "link-flap", "corrupt"] {
+            assert!(names.contains(kind), "missing {kind} in a long mixed storm");
+        }
+    }
+
+    #[test]
+    fn retry_delay_doubles_per_attempt() {
+        let p = RetryPolicy::retries(3, 0.5);
+        assert_eq!(p.delay(0), 0.5);
+        assert_eq!(p.delay(1), 1.0);
+        assert_eq!(p.delay(2), 2.0);
+        assert_eq!(RetryPolicy::off().max_retries, 0);
+        assert_eq!(RetryPolicy::off().delay(0), 0.0);
+    }
+
+    #[test]
+    fn detector_suspects_silence_and_recovers_on_beat() {
+        let mut d = PhiDetector::new(2, 0.1, 3.0);
+        d.beat(0, 1.0);
+        d.beat(1, 1.0);
+        assert!(!d.suspect(0, 1.05));
+        assert!(d.phi(0, 1.2) > d.phi(0, 1.05), "suspicion grows with silence");
+        assert!(d.suspect(0, 1.5), "5 expected intervals of silence");
+        d.beat(0, 1.5);
+        assert!(!d.suspect(0, 1.55), "a beat clears suspicion");
+        // stale beats never move the watermark backwards
+        d.beat(1, 0.2);
+        assert!((d.phi(1, 1.0) - 0.0).abs() < 1e-12);
+        // out-of-range replicas are inert, not a panic
+        d.beat(9, 1.0);
+        assert!(d.suspect(9, 100.0));
+    }
+
+    #[test]
+    fn health_dispatchability() {
+        assert!(Health::Healthy.dispatchable());
+        assert!(Health::Degraded.dispatchable());
+        assert!(Health::Recovering.dispatchable());
+        assert!(!Health::Down.dispatchable());
+        assert_eq!(Health::Down.name(), "down");
+    }
+}

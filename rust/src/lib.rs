@@ -87,11 +87,19 @@
 //!   queues, `--preempt` suspend/resume, per-class latency slices,
 //!   streaming clients via `StreamMix` — deadlines, cancel-after-N,
 //!   queued disconnects — with SLO-aware admission and goodput
-//!   accounting), behind pluggable dispatchers (round-robin,
-//!   least-loaded, expert-affinity) that see live slot occupancy.  Affinity routing
+//!   accounting), behind pluggable health-aware dispatchers
+//!   (round-robin, least-loaded, expert-affinity) that see live slot
+//!   occupancy and replica `Health`.  Affinity routing
 //!   sends each request to the replica whose resident experts best
 //!   match its `predict_plan` prefetch set, compounding MELINOE's top-C
 //!   routing concentration fleet-wide (see docs/CLUSTER.md).
+//! * [`fault`]       — fleet fault injection and recovery: seedable
+//!   `FaultPlan` (crashes, brownouts, PCIe link flaps, transfer
+//!   corruption) drawn from a dedicated RNG stream, the per-replica
+//!   `Health` state machine with a phi-style heartbeat detector, and
+//!   the `RetryPolicy` (`--retry`) under which every reclaimed request
+//!   still resolves exactly one terminal `Outcome` — now including
+//!   `Outcome::Failed` (see docs/ROBUSTNESS.md).
 
 pub mod cache;
 pub mod clock;
@@ -99,6 +107,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod engine;
 pub mod eval;
+pub mod fault;
 pub mod metrics;
 pub mod moe;
 pub mod pcie;

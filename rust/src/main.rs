@@ -17,6 +17,7 @@ use melinoe::coordinator::{
     Decoder, Outcome, PreemptPolicy, RequestSpec, SchedulerMode, SeqFinish, Server, ServerConfig,
     StreamPolicy,
 };
+use melinoe::fault::{FaultSpec, RetryPolicy};
 use melinoe::engine::{DecodeSession, Engine, SeqState};
 use melinoe::metrics::{fmt2, Table};
 use melinoe::policies::PolicyConfig;
@@ -35,7 +36,7 @@ commands:
                       table5 table11 fig6 heatmaps fig11 table12 fig12 fig13
                       table13 ext_layerwise ext_cluster ext_continuous
                       ext_prefill ext_overlap ext_preempt ext_quant
-                      ext_stream)
+                      ext_stream ext_fault)
   serve              step-level serving loop over the eval workload
   cluster            multi-replica serving simulation: compare balancers
   decode             decode one prompt, print tokens + transfer stats
@@ -122,6 +123,18 @@ cluster options:
   --long-frac <f>    fraction of requests decoding the full --tokens
                      budget; the rest stop at --tokens/8 (0 = uniform)
   --seed <n>         workload seed
+  --faults <mode>    fault injection: off (default) | crash (fail-stop
+                     crash storm) | mixed (crashes + brownouts + link
+                     flaps + transfer corruption); the plan is drawn
+                     from its own seed lane, so --faults off stays
+                     byte-identical to a build without the fault module
+                     (docs/ROBUSTNESS.md)
+  --mtbf <s>         mean sim-seconds between injected faults (default:
+                     sized from the workload so a run sees a handful)
+  --retry <n>        per-request retry budget after a replica failure
+                     (default 0 = a reclaimed request terminates
+                     Failed); retries re-dispatch with exponential
+                     backoff and bit-identical continuation
 ";
 
 fn policy_by_name(name: &str, cap: usize, top_k: usize, ft: &str) -> Result<PolicyConfig> {
@@ -536,6 +549,24 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     } else {
         cfg = cfg.with_arrival(Arrival::Poisson(1.5 * cfg.replicas as f64 / est));
     }
+    // fault plan + retry budget; the horizon spans the expected run so
+    // --mtbf defaults to "a handful of faults per run"
+    let faults_mode = args.get_or("faults", "off").to_string();
+    let horizon = (n_requests as f64 * est / cfg.replicas.max(1) as f64).max(est);
+    let mtbf = args.get_f64("mtbf", horizon / 2.5)?.max(1e-6);
+    let fspec = match faults_mode.as_str() {
+        "off" => FaultSpec::none(),
+        "crash" => FaultSpec::crash_storm(mtbf, horizon, est / 4.0),
+        "mixed" => FaultSpec::mixed(mtbf, horizon, est),
+        other => return Err(anyhow!("unknown --faults {other:?} (off | crash | mixed)")),
+    };
+    let retry_budget = args.get_usize("retry", 0)? as u32;
+    let retry = if retry_budget > 0 {
+        RetryPolicy::retries(retry_budget, est / 8.0)
+    } else {
+        RetryPolicy::off()
+    };
+    cfg = cfg.with_faults(fspec).with_retry(retry);
     let arrival_desc = match cfg.workload.arrival {
         Arrival::Burst => "burst".to_string(),
         Arrival::Poisson(r) => format!("poisson {r:.2} req/s"),
@@ -566,6 +597,14 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             if cfg.admission { "slo-aware" } else { "off" }
         );
     }
+    if cfg.faults.enabled {
+        println!(
+            "  faults: {} (mtbf {:.2}s over {:.2}s horizon), retry budget {} \
+             (backoff {:.3}s, exponential)",
+            faults_mode, cfg.faults.mtbf, cfg.faults.horizon, cfg.retry.max_retries,
+            cfg.retry.backoff
+        );
+    }
 
     let which = args.get_or("balancer", "all");
     let names: Vec<&str> =
@@ -585,11 +624,23 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             r.preemptions,
             depths.join(", ")
         );
-        if r.cancelled > 0 || r.rejected > 0 {
+        if r.cancelled > 0 || r.rejected > 0 || r.failed > 0 {
             println!(
-                "    outcomes: {} completed, {} cancelled, {} rejected; \
+                "    outcomes: {} completed, {} cancelled, {} rejected, {} failed; \
                  goodput {:.2} tok/s (deadline-attained output only)",
-                r.completed, r.cancelled, r.rejected, r.goodput_per_sec
+                r.completed, r.cancelled, r.rejected, r.failed, r.goodput_per_sec
+            );
+        }
+        if r.injected > 0 {
+            println!(
+                "    faults: {} sequences reclaimed ({} recovered, {} failed), \
+                 {} retries, {} migrations, recovery wait p50/p95/p99 {}s",
+                r.injected,
+                r.recovered,
+                r.failed,
+                r.retries,
+                r.migrations,
+                r.recovery_wait.cell(1.0)
             );
         }
         if r.priorities.len() > 1 {

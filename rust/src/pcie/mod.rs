@@ -98,6 +98,11 @@ pub struct InFlight {
     pub duration: f64,
     /// Link-serialized completion time.
     pub completes_at: f64,
+    /// Fault injection marked this transfer checksum-corrupt: it still
+    /// occupies its link slot but never lands, is never claimable, and
+    /// is removed by [`TransferEngine::take_corrupt`] once its link
+    /// time elapses so the expert can be re-fetched.
+    pub corrupt: bool,
 }
 
 /// What [`TransferEngine::commit_arrival`] did: whether the expert
@@ -119,6 +124,11 @@ pub struct TransferEngine {
     pub pinned_host: bool,
     pub stats: TransferStats,
     link_free: f64,
+    /// Link-flap bandwidth degradation: every transfer duration is
+    /// multiplied by this factor.  `1.0` (the default) is nominal and
+    /// bit-exact — `x * 1.0 == x` — so a never-flapped engine computes
+    /// byte-identical timings to one without the field.
+    slowdown: f64,
     /// Tracked transfers: link issues in FIFO order (`completes_at`
     /// non-decreasing at issue — a property test locks this in), plus
     /// landed-but-uncommitted staging entries re-queued by
@@ -134,18 +144,70 @@ impl TransferEngine {
             pinned_host: true,
             stats: TransferStats::default(),
             link_free: 0.0,
+            slowdown: 1.0,
             in_flight: Vec::new(),
         }
     }
 
     /// One expert's transfer duration on the link (pageable host memory
-    /// roughly halves effective PCIe bandwidth).
+    /// roughly halves effective PCIe bandwidth; an active link flap
+    /// multiplies the whole duration by the slowdown factor).
     fn h2d_duration(&self, cm: &CostModel, mode: QuantMode) -> f64 {
         let mut dt = cm.transfer_time(mode);
         if !self.pinned_host {
             dt += cm.dims.expert_bytes(mode) / cm.gpu.pcie_bw;
         }
-        dt
+        dt * self.slowdown
+    }
+
+    /// The active link-flap bandwidth-degradation factor (1.0 = nominal).
+    pub fn slowdown(&self) -> f64 {
+        self.slowdown
+    }
+
+    /// Degrade (or restore, with `1.0`) effective link bandwidth:
+    /// subsequent transfer durations are multiplied by `factor`.
+    /// Clamped below at nominal — a flap never speeds the link up.
+    pub fn set_slowdown(&mut self, factor: f64) {
+        self.slowdown = factor.max(1.0);
+    }
+
+    /// Drop every tracked in-flight transfer (link flap or crash): the
+    /// issued transfers never land.  Returns the dropped
+    /// `(layer, expert)` pairs so the caller can emit `TransferLost`
+    /// events and clear the matching cache reservations.  The link time
+    /// already spent stays in the issue-time accounting — the bytes
+    /// really crossed the link before the loss.
+    pub fn drop_in_flight(&mut self) -> Vec<(usize, usize)> {
+        self.in_flight.drain(..).map(|t| (t.layer, t.expert)).collect()
+    }
+
+    /// Mark the oldest not-yet-corrupt tracked transfer checksum-
+    /// corrupt.  It keeps occupying its link slot but will never land
+    /// or be claimable; [`TransferEngine::take_corrupt`] removes it
+    /// once its link time elapses.  Returns the marked pair, or `None`
+    /// when nothing (uncorrupt) is in flight.
+    pub fn corrupt_oldest_in_flight(&mut self) -> Option<(usize, usize)> {
+        let t = self.in_flight.iter_mut().find(|t| !t.corrupt)?;
+        t.corrupt = true;
+        Some((t.layer, t.expert))
+    }
+
+    /// Remove corrupt transfers whose link time has elapsed by `now` —
+    /// a checksum failure is only observable at arrival.  The caller
+    /// emits `Corrupt` events and releases the cache reservations so
+    /// the expert is re-fetched on its next use.
+    pub fn take_corrupt(&mut self, now: f64) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        self.in_flight.retain(|t| {
+            if t.corrupt && t.completes_at <= now {
+                out.push((t.layer, t.expert));
+                false
+            } else {
+                true
+            }
+        });
+        out
     }
 
     fn account_h2d(&mut self, cm: &CostModel, mode: QuantMode, dt: f64) {
@@ -168,8 +230,11 @@ impl TransferEngine {
         self.in_flight.len()
     }
 
+    /// Whether a *claimable* (non-corrupt) tracked transfer for
+    /// `(layer, expert)` is on the link.  A corrupt entry doesn't count:
+    /// it will never land, so the caller is free to re-issue.
     pub fn in_flight_contains(&self, layer: usize, expert: usize) -> bool {
-        self.in_flight.iter().any(|t| t.layer == layer && t.expert == expert)
+        self.in_flight.iter().any(|t| t.layer == layer && t.expert == expert && !t.corrupt)
     }
 
     /// Residual wait a decode would pay *right now* to claim the tracked
@@ -179,7 +244,7 @@ impl TransferEngine {
     pub fn residual_of(&self, layer: usize, expert: usize, now: f64) -> Option<f64> {
         self.in_flight
             .iter()
-            .find(|t| t.layer == layer && t.expert == expert)
+            .find(|t| t.layer == layer && t.expert == expert && !t.corrupt)
             .map(|t| (t.completes_at - now).max(0.0))
     }
 
@@ -263,7 +328,7 @@ impl TransferEngine {
         self.link_free = completes_at;
         self.account_h2d(cm, mode, dt);
         self.stats.overlapped_time += dt;
-        self.in_flight.push(InFlight { layer, expert, duration: dt, completes_at });
+        self.in_flight.push(InFlight { layer, expert, duration: dt, completes_at, corrupt: false });
         completes_at
     }
 
@@ -273,7 +338,10 @@ impl TransferEngine {
     /// transfer has completed.  Returns `None` when no such transfer is
     /// in flight (the caller falls back to a demand fetch).
     pub fn wait_for(&mut self, layer: usize, expert: usize, clock: &mut SimClock) -> Option<f64> {
-        let i = self.in_flight.iter().position(|t| t.layer == layer && t.expert == expert)?;
+        let i = self
+            .in_flight
+            .iter()
+            .position(|t| t.layer == layer && t.expert == expert && !t.corrupt)?;
         let t = self.in_flight.remove(i);
         let residual = (t.completes_at - clock.now()).max(0.0);
         // settle the optimistic issue-time accounting: the un-hidden part
@@ -293,7 +361,7 @@ impl TransferEngine {
     pub fn drain_arrived(&mut self, now: f64) -> Vec<(usize, usize)> {
         let mut out = Vec::new();
         self.in_flight.retain(|t| {
-            if t.completes_at <= now {
+            if !t.corrupt && t.completes_at <= now {
                 out.push((t.layer, t.expert));
                 false
             } else {
@@ -310,7 +378,13 @@ impl TransferEngine {
     /// paid transfer buys residency or exactly one stall-free
     /// execution, never more.
     pub fn track_landed(&mut self, layer: usize, expert: usize, now: f64) {
-        self.in_flight.push(InFlight { layer, expert, duration: 0.0, completes_at: now });
+        self.in_flight.push(InFlight {
+            layer,
+            expert,
+            duration: 0.0,
+            completes_at: now,
+            corrupt: false,
+        });
     }
 
     /// Land one arrived (or just-claimed) lookahead transfer into the
@@ -616,6 +690,63 @@ mod tests {
         // landed transfers peek at zero residual
         let done = eng.prefetch_expert(&cm, &clock, 1, 2, QuantMode::Int4);
         assert_eq!(eng.residual_of(1, 2, done + 1.0), Some(0.0));
+    }
+
+    #[test]
+    fn slowdown_scales_durations_and_restores_exactly() {
+        let cm = cm();
+        let mut c1 = SimClock::new();
+        let mut nominal = TransferEngine::new();
+        let base = nominal.demand_h2d(&cm, &mut c1, QuantMode::Fp16);
+        let mut c2 = SimClock::new();
+        let mut flapped = TransferEngine::new();
+        flapped.set_slowdown(4.0);
+        assert_eq!(flapped.slowdown(), 4.0);
+        let slow = flapped.demand_h2d(&cm, &mut c2, QuantMode::Fp16);
+        assert!((slow - 4.0 * base).abs() < 1e-12);
+        // restore: durations are bit-identical to a never-flapped engine
+        flapped.set_slowdown(1.0);
+        assert_eq!(
+            flapped.h2d_duration(&cm, QuantMode::Fp16),
+            nominal.h2d_duration(&cm, QuantMode::Fp16)
+        );
+        // a flap never speeds the link up
+        flapped.set_slowdown(0.25);
+        assert_eq!(flapped.slowdown(), 1.0);
+    }
+
+    #[test]
+    fn drop_in_flight_loses_tracked_transfers() {
+        let cm = cm();
+        let clock = SimClock::new();
+        let mut eng = TransferEngine::new();
+        eng.prefetch_expert(&cm, &clock, 0, 1, QuantMode::Fp16);
+        eng.prefetch_expert(&cm, &clock, 1, 2, QuantMode::Fp16);
+        let dropped = eng.drop_in_flight();
+        assert_eq!(dropped, vec![(0, 1), (1, 2)]);
+        assert_eq!(eng.in_flight_len(), 0);
+        assert!(eng.drain_arrived(f64::MAX).is_empty(), "nothing ever lands");
+    }
+
+    #[test]
+    fn corrupt_transfer_never_lands_and_is_taken_at_arrival() {
+        let cm = cm();
+        let mut clock = SimClock::new();
+        let mut eng = TransferEngine::new();
+        let done = eng.prefetch_expert(&cm, &clock, 2, 9, QuantMode::Fp16);
+        assert_eq!(eng.corrupt_oldest_in_flight(), Some((2, 9)));
+        // a corrupt entry is invisible to every consume path
+        assert!(!eng.in_flight_contains(2, 9));
+        assert_eq!(eng.residual_of(2, 9, clock.now()), None);
+        assert!(eng.wait_for(2, 9, &mut clock).is_none());
+        // the checksum failure is only observable once the link time elapses
+        assert!(eng.take_corrupt(clock.now()).is_empty());
+        clock.advance(done);
+        assert!(eng.drain_arrived(clock.now()).is_empty(), "corrupt never commits");
+        assert_eq!(eng.take_corrupt(clock.now()), vec![(2, 9)]);
+        assert_eq!(eng.in_flight_len(), 0);
+        // nothing left to corrupt
+        assert_eq!(eng.corrupt_oldest_in_flight(), None);
     }
 
     #[test]

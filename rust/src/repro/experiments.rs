@@ -18,7 +18,7 @@ pub const ALL: &[&str] = &[
     "table1", "fig1a", "fig1b", "fig3", "table2", "table3", "fig4", "fig5", "table4",
     "table5", "table11", "fig6", "heatmaps", "fig11", "table12", "fig12", "fig13", "table13",
     "ext_layerwise", "ext_cluster", "ext_continuous", "ext_prefill", "ext_overlap",
-    "ext_preempt", "ext_quant", "ext_stream",
+    "ext_preempt", "ext_quant", "ext_stream", "ext_fault",
 ];
 
 fn workload(args: &Args) -> Result<Workload> {
@@ -1204,6 +1204,8 @@ pub fn ext_overlap(args: &Args) -> Result<()> {
                 preempt: PreemptPolicy::Off,
                 admission: false,
                 trace: true,
+                faults: crate::fault::FaultSpec::none(),
+                retry: crate::fault::RetryPolicy::off(),
                 spec,
                 workload: WorkloadSpec {
                     n_requests,
@@ -1333,6 +1335,8 @@ pub fn ext_preempt(args: &Args) -> Result<()> {
             preempt: PreemptPolicy::Off,
             admission: false,
             trace: true,
+            faults: crate::fault::FaultSpec::none(),
+            retry: crate::fault::RetryPolicy::off(),
             spec,
             workload: WorkloadSpec {
                 n_requests,
@@ -1483,6 +1487,8 @@ pub fn ext_quant(args: &Args) -> Result<()> {
                 preempt: PreemptPolicy::Off,
                 admission: false,
                 trace: true,
+                faults: crate::fault::FaultSpec::none(),
+                retry: crate::fault::RetryPolicy::off(),
                 spec: spec.clone(),
                 workload: WorkloadSpec {
                     n_requests,
@@ -1624,6 +1630,8 @@ pub fn ext_stream(args: &Args) -> Result<()> {
         preempt: PreemptPolicy::Off,
         admission,
         trace: true,
+        faults: crate::fault::FaultSpec::none(),
+        retry: crate::fault::RetryPolicy::off(),
         spec: spec.clone(),
         workload: WorkloadSpec {
             n_requests,
@@ -1686,4 +1694,182 @@ pub fn ext_stream(args: &Args) -> Result<()> {
         ]));
     }
     print_and_save("ext_stream", &t, arr(jrows))
+}
+
+/// Extension — fault-tolerant fleet.  Four arms over the same burst
+/// workload on an expert-affinity fleet: **fault-free** (baseline, and
+/// the byte-identity reference), a **crash-storm** served with retries
+/// off vs on, and a **brownout-mix** (crashes + brownouts + link flaps
+/// + transfer corruption) with retries on.  The fault-free arm runs
+/// first and its makespan sizes the storm horizon, so injected faults
+/// land inside the active window at any simulated model scale; the
+/// crash mtbf then walks a deterministic ladder until the *realized*
+/// plan lands a handful of early crashes — disruptive enough that
+/// retry-off visibly fails requests, bounded enough that retry-on stays
+/// within the check_repro tok/s envelope.  Expected shape: retry-off
+/// terminates every reclaimed request `Failed`; retry-on re-decodes
+/// them to completion (strictly higher completed fraction) at tok/s
+/// near fault-free, with Completed token counts bit-identical to the
+/// fault-free arm (asserted here, gated again offline).  Conservation
+/// (`injected == recovered + failed`) is hard-checked inside
+/// `run_cluster` on every faulty arm.
+pub fn ext_fault(args: &Args) -> Result<()> {
+    use crate::clock::PaperDims;
+    use crate::cluster::replica::ReplicaSpec;
+    use crate::cluster::workload::{OutputLen, PriorityMix, StreamMix, TaskProfile, WorkloadSpec};
+    use crate::cluster::{self, ClusterConfig};
+    use crate::coordinator::workload::Arrival;
+    use crate::coordinator::{Outcome, PreemptPolicy, SchedulerMode};
+    use crate::fault::{FaultPlan, FaultSpec, RetryPolicy};
+
+    let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
+    let n_requests = args.get_usize("requests", 64)?;
+    let replicas = args.get_usize("replicas", 4)?.max(2);
+    let seed = args.get_usize("seed", 42)? as u64;
+    let tokens = args.get_usize("tokens", 32)?.max(2);
+
+    let dims = PaperDims {
+        n_layers: 16,
+        n_experts: 64,
+        top_k: 8,
+        d_model: 2048,
+        d_ff: 1024,
+        vocab: 50304,
+    };
+    let prompt_tokens = 8;
+    let spec = ReplicaSpec {
+        n_layers: dims.n_layers,
+        n_experts: dims.n_experts,
+        top_k: dims.top_k,
+        capacity: 8,
+        eviction: EvictionKind::Lfu,
+        quant: QuantMode::Int4,
+        little_tier: None,
+        fallback_threshold: 0.0,
+        prefetch: true,
+        lookahead: 0,
+        gpu: gpu.clone(),
+        dims,
+    };
+    let est = spec.est_service_seconds(prompt_tokens, tokens).max(1e-9);
+    let mk_cfg = |faults: FaultSpec, retry: RetryPolicy| ClusterConfig {
+        replicas,
+        max_batch: 4,
+        max_queue: n_requests.max(8),
+        scheduler: SchedulerMode::Continuous,
+        prefill_chunk: 1,
+        preempt: PreemptPolicy::Off,
+        admission: false,
+        trace: true,
+        faults,
+        retry,
+        spec: spec.clone(),
+        workload: WorkloadSpec {
+            n_requests,
+            // burst: the queues are full from t=0, so any crash inside
+            // the horizon reclaims work and the retry-off arm has
+            // something to fail
+            arrival: Arrival::Burst,
+            prompt_tokens,
+            output: OutputLen::Fixed(tokens),
+            balanced_tasks: true,
+            priorities: PriorityMix::none(),
+            stream: StreamMix::none(),
+            seed,
+        },
+        tasks: TaskProfile::synthetic(2, dims.n_layers, dims.n_experts, 16, 0.9),
+    };
+
+    let clean_cfg = mk_cfg(FaultSpec::none(), RetryPolicy::off());
+    let mut b = cluster::balancer::by_name("expert-affinity")?;
+    let clean = cluster::run_cluster(&clean_cfg, b.as_mut())?;
+    let horizon = clean.makespan.max(est);
+    let fault_seed = clean_cfg.workload.fault_seed();
+    let mut storm = FaultSpec::crash_storm(horizon / 2.5, horizon, est / 4.0);
+    for div in [2.5, 3.5, 5.0, 7.0, 10.0] {
+        let cand = FaultSpec::crash_storm(horizon / div, horizon, est / 4.0);
+        let plan = FaultPlan::generate(&cand, replicas, fault_seed);
+        let early = plan.events.iter().filter(|e| e.at <= 0.7 * horizon).count();
+        if (2..=4).contains(&early) && plan.events.len() <= 5 {
+            storm = cand;
+            break;
+        }
+    }
+    let mixed = FaultSpec::mixed(horizon / 3.0, horizon, est);
+    let retry_on = RetryPolicy::retries(5, est / 8.0);
+
+    let mut reports: Vec<(&str, &str, cluster::ClusterReport)> =
+        vec![("fault-free", "off", clean)];
+    for (arm, retry_name, cfg) in [
+        ("crash-storm", "off", mk_cfg(storm.clone(), RetryPolicy::off())),
+        ("crash-storm", "on", mk_cfg(storm, retry_on)),
+        ("brownout-mix", "on", mk_cfg(mixed, retry_on)),
+    ] {
+        let mut b = cluster::balancer::by_name("expert-affinity")?;
+        let rep = cluster::run_cluster(&cfg, b.as_mut())?;
+        reports.push((arm, retry_name, rep));
+    }
+
+    // bit-identity oracle: every request a faulty arm completes must
+    // carry exactly the token count the fault-free arm produced for the
+    // same request id (re-decode replays the pre-drawn routing trace)
+    let clean_tokens: std::collections::HashMap<u64, usize> = reports[0]
+        .2
+        .outcomes
+        .iter()
+        .filter(|(_, o, _)| *o == Outcome::Completed)
+        .map(|(id, _, n)| (*id, *n))
+        .collect();
+    for (arm, _, rep) in &reports[1..] {
+        for (id, o, n) in &rep.outcomes {
+            if *o == Outcome::Completed {
+                anyhow::ensure!(
+                    clean_tokens.get(id) == Some(n),
+                    "{arm}: request {id} completed {n} tokens, != fault-free"
+                );
+            }
+        }
+    }
+
+    let mut t = Table::new(&[
+        "arm", "retry", "tok/s", "hit rate", "completed", "failed", "retries", "migr",
+        "injected", "recovery p95 (s)", "makespan s",
+    ]);
+    let mut jrows = Vec::new();
+    for (arm, retry_name, rep) in &reports {
+        t.row(vec![
+            (*arm).into(),
+            (*retry_name).into(),
+            fmt2(rep.tokens_per_sec),
+            fmt4(rep.hit_rate),
+            rep.completed.to_string(),
+            rep.failed.to_string(),
+            rep.retries.to_string(),
+            rep.migrations.to_string(),
+            rep.injected.to_string(),
+            format!("{:.3}", rep.recovery_wait.p95),
+            fmt2(rep.makespan),
+        ]);
+        jrows.push(obj(vec![
+            ("arm", s(*arm)),
+            ("retry", s(*retry_name)),
+            ("tok_s", num(rep.tokens_per_sec)),
+            ("hit_rate", num(rep.hit_rate)),
+            ("n_requests", num(n_requests as f64)),
+            ("completed", num(rep.completed as f64)),
+            ("cancelled", num(rep.cancelled as f64)),
+            ("rejected", num(rep.rejected as f64)),
+            ("failed", num(rep.failed as f64)),
+            ("retries", num(rep.retries as f64)),
+            ("migrations", num(rep.migrations as f64)),
+            ("injected", num(rep.injected as f64)),
+            ("recovered", num(rep.recovered as f64)),
+            ("recovery_wait_p95", num(rep.recovery_wait.p95)),
+            ("output_tokens", num(rep.output_tokens as f64)),
+            ("makespan_s", num(rep.makespan)),
+            ("bit_identical", num(1.0)),
+            ("metrics", trace_metrics(rep)),
+        ]));
+    }
+    print_and_save("ext_fault", &t, arr(jrows))
 }

@@ -261,6 +261,7 @@ pub fn run(id: &str, args: &crate::util::cli::Args) -> Result<()> {
         "ext_preempt" => ex::ext_preempt(args),
         "ext_quant" => ex::ext_quant(args),
         "ext_stream" => ex::ext_stream(args),
+        "ext_fault" => ex::ext_fault(args),
         "all" => {
             for id in ex::ALL {
                 println!("\n================ {id} ================");

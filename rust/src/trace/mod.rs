@@ -32,9 +32,12 @@
 //! insert/evict events must replay to cache occupancy
 //! ([`Trace::audit_occupancy`]), and every `PrefetchIssued` must be
 //! consumed by a `TransferLanded` or still be on the link
-//! ([`Trace::audit_prefetch_landed`]) — a cross-layer self-check of the
+//! ([`Trace::audit_prefetch_landed`], widened under fault injection to
+//! admit lost and corrupt transfers) — a cross-layer self-check of the
 //! PR 4 overlap accounting and the PR 5 pin ledger.  `run_cluster` runs
-//! all four audits per replica whenever tracing is on.
+//! all the audits per replica whenever tracing is on, plus the fleet
+//! recovery-conservation audit ([`Trace::audit_recovery`]: every fault-
+//! reclaimed request is either recovered or failed, never dropped).
 
 use std::collections::BTreeMap;
 
@@ -171,6 +174,31 @@ pub enum TraceEvent {
     /// The cluster dispatcher routed `request` to `replica`; `score` is
     /// the balancer's affinity score for the chosen replica.
     Dispatch { request: u64, replica: u32, score: f64 },
+    /// A replica crashed: its cache/pin/queue state is lost and
+    /// `reclaimed` sequences were handed back to the dispatcher for
+    /// retry ([`Trace::audit_recovery`] conserves them).
+    Crash { replica: u32, reclaimed: u32 },
+    /// A dispatcher-side heartbeat observation of `replica`; `phi` is
+    /// the missed-deadline suspicion level (0 = just heard from it).
+    /// Emitted only when fault injection is enabled, so fault-free
+    /// traces stay byte-identical.
+    Heartbeat { replica: u32, phi: f64 },
+    /// A reclaimed request was re-dispatched to `replica` on retry
+    /// `attempt` (1-based) after its sim-time backoff.
+    Retry { request: u64, attempt: u32, replica: u32 },
+    /// A live suspended sequence was migrated off a browned-out replica
+    /// (`from`) onto a healthy one (`to`) priced by the affinity score.
+    Migrate { request: u64, from: u32, to: u32 },
+    /// An in-flight expert transfer arrived checksum-corrupt and was
+    /// discarded without committing; the expert must be re-fetched.
+    Corrupt { layer: u32, expert: u32 },
+    /// An in-flight expert transfer was lost to a link flap before it
+    /// could land (the issue is consumed without a `TransferLanded`).
+    TransferLost { layer: u32, expert: u32 },
+    /// A reclaimed request exhausted its retry budget and resolved
+    /// `Outcome::Failed` — the only way a request terminates without
+    /// completing, cancelling, or being rejected.
+    RequestFailed { request: u64 },
 }
 
 /// An event with its simulated timestamp and lane (replica id, or the
@@ -265,7 +293,11 @@ pub struct MetricsRegistry {
 
 impl MetricsRegistry {
     fn count(&mut self, key: &'static str) {
-        *self.counters.entry(key).or_insert(0) += 1;
+        self.count_n(key, 1);
+    }
+
+    fn count_n(&mut self, key: &'static str, n: u64) {
+        *self.counters.entry(key).or_insert(0) += n;
     }
 
     fn gauge_max(&mut self, key: &'static str, v: f64) {
@@ -341,6 +373,16 @@ impl MetricsRegistry {
             TraceEvent::Reject { .. } => self.count("rejects"),
             TraceEvent::StreamStall { .. } => self.count("stream_stalls"),
             TraceEvent::Dispatch { .. } => self.count("dispatches"),
+            TraceEvent::Crash { reclaimed, .. } => {
+                self.count("crashes");
+                self.count_n("seqs_reclaimed", *reclaimed as u64);
+            }
+            TraceEvent::Heartbeat { .. } => self.count("heartbeats"),
+            TraceEvent::Retry { .. } => self.count("retries"),
+            TraceEvent::Migrate { .. } => self.count("migrations"),
+            TraceEvent::Corrupt { .. } => self.count("transfers_corrupt"),
+            TraceEvent::TransferLost { .. } => self.count("transfers_lost"),
+            TraceEvent::RequestFailed { .. } => self.count("requests_failed"),
         }
     }
 
@@ -575,15 +617,49 @@ impl Trace {
     }
 
     /// Audit: every `PrefetchIssued` was consumed by exactly one
-    /// `TransferLanded`, or is still on the link at end of run.
+    /// `TransferLanded`, lost to a link flap, discarded checksum-corrupt,
+    /// or is still on the link at end of run.  Fault-free the lost /
+    /// corrupt counters are absent and this is the original exact
+    /// issued == landed + in-flight conservation.
     pub fn audit_prefetch_landed(&self, in_flight: usize) -> Result<()> {
-        let issued = self.registry.counters.get("prefetch_issued").copied().unwrap_or(0);
-        let landed = self.registry.counters.get("transfer_landed").copied().unwrap_or(0);
-        if issued != landed + in_flight as u64 {
+        let c = |k: &str| self.registry.counters.get(k).copied().unwrap_or(0);
+        let issued = c("prefetch_issued");
+        let landed = c("transfer_landed");
+        let lost = c("transfers_lost");
+        let corrupt = c("transfers_corrupt");
+        if issued != landed + lost + corrupt + in_flight as u64 {
             bail!(
                 "prefetch/landed mismatch: {issued} issued != {landed} landed + \
-                 {in_flight} in flight"
+                 {lost} lost + {corrupt} corrupt + {in_flight} in flight"
             );
+        }
+        Ok(())
+    }
+
+    /// Audit: fault-recovery conservation.  Every request reclaimed by
+    /// a fault (`injected`) either resolved a non-Failed terminal
+    /// outcome (`recovered`) or exhausted its retry budget (`failed`) —
+    /// no request vanishes.  The trace's `requests_failed` counter must
+    /// agree with the coordinator's `failed` stat, and a non-zero
+    /// injection count must be witnessed by at least one `Crash` or
+    /// `Migrate` event in the stream.
+    pub fn audit_recovery(&self, injected: u64, recovered: u64, failed: u64) -> Result<()> {
+        if injected != recovered + failed {
+            bail!(
+                "recovery conservation broken: {injected} injected != \
+                 {recovered} recovered + {failed} failed"
+            );
+        }
+        let traced = self.registry.counters.get("requests_failed").copied().unwrap_or(0);
+        if traced != failed {
+            bail!("trace counts {traced} failed requests, coordinator counts {failed}");
+        }
+        if injected > 0 {
+            let crashes = self.registry.counters.get("crashes").copied().unwrap_or(0);
+            let migrations = self.registry.counters.get("migrations").copied().unwrap_or(0);
+            if crashes + migrations == 0 {
+                bail!("{injected} requests reclaimed but no Crash/Migrate event in trace");
+            }
         }
         Ok(())
     }
@@ -912,6 +988,66 @@ impl Trace {
                         ("score", num(score)),
                     ],
                 )),
+                TraceEvent::Crash { replica, reclaimed } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "crash",
+                    vec![
+                        ("replica", num(replica as f64)),
+                        ("reclaimed", num(reclaimed as f64)),
+                    ],
+                )),
+                TraceEvent::Heartbeat { replica, phi } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "heartbeat",
+                    vec![("replica", num(replica as f64)), ("phi", num(phi))],
+                )),
+                TraceEvent::Retry { request, attempt, replica } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "retry",
+                    vec![
+                        ("request", num(request as f64)),
+                        ("attempt", num(attempt as f64)),
+                        ("replica", num(replica as f64)),
+                    ],
+                )),
+                TraceEvent::Migrate { request, from, to } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "migrate",
+                    vec![
+                        ("request", num(request as f64)),
+                        ("from", num(from as f64)),
+                        ("to", num(to as f64)),
+                    ],
+                )),
+                TraceEvent::Corrupt { layer, expert } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_LINK,
+                    "corrupt transfer",
+                    vec![("layer", num(layer as f64)), ("expert", num(expert as f64))],
+                )),
+                TraceEvent::TransferLost { layer, expert } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_LINK,
+                    "transfer lost",
+                    vec![("layer", num(layer as f64)), ("expert", num(expert as f64))],
+                )),
+                TraceEvent::RequestFailed { request } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "request failed",
+                    vec![("request", num(request as f64))],
+                )),
             }
         }
         obj(vec![
@@ -1093,6 +1229,77 @@ mod tests {
         let tr = r.take().unwrap();
         tr.audit_prefetch_landed(1).unwrap(); // one still in flight
         assert!(tr.audit_prefetch_landed(0).is_err());
+    }
+
+    #[test]
+    fn prefetch_audit_admits_lost_and_corrupt_transfers() {
+        let mut r = Recorder::on(0, "x");
+        let dl = d(0.0, 0.02, 0.02);
+        for e in 0..4 {
+            r.emit(0.1, TraceEvent::PrefetchIssued { layer: 0, expert: e, tier: 0, delta: dl });
+        }
+        r.emit(0.2, TraceEvent::TransferLanded { layer: 0, expert: 0, tier: 0 });
+        r.emit(0.3, TraceEvent::TransferLost { layer: 0, expert: 1 });
+        r.emit(0.4, TraceEvent::Corrupt { layer: 0, expert: 2 });
+        let tr = r.take().unwrap();
+        // 4 issued = 1 landed + 1 lost + 1 corrupt + 1 in flight
+        tr.audit_prefetch_landed(1).unwrap();
+        assert!(tr.audit_prefetch_landed(0).is_err());
+        let c = &tr.registry.counters;
+        assert_eq!(c.get("transfers_lost"), Some(&1));
+        assert_eq!(c.get("transfers_corrupt"), Some(&1));
+    }
+
+    #[test]
+    fn recovery_audit_conserves_reclaimed_requests() {
+        let mut r = Recorder::on(0, "sched");
+        r.emit(1.0, TraceEvent::Crash { replica: 0, reclaimed: 3 });
+        r.emit(1.5, TraceEvent::Retry { request: 7, attempt: 1, replica: 1 });
+        r.emit(2.0, TraceEvent::RequestFailed { request: 9 });
+        let tr = r.take().unwrap();
+        let c = &tr.registry.counters;
+        assert_eq!(c.get("crashes"), Some(&1));
+        assert_eq!(c.get("seqs_reclaimed"), Some(&3));
+        assert_eq!(c.get("retries"), Some(&1));
+        assert_eq!(c.get("requests_failed"), Some(&1));
+        tr.audit_recovery(3, 2, 1).unwrap();
+        // conservation: injected != recovered + failed
+        assert!(tr.audit_recovery(3, 3, 1).is_err());
+        // trace/coordinator failed-count disagreement
+        assert!(tr.audit_recovery(3, 1, 2).is_err());
+        // injection witnessed by no Crash/Migrate event
+        let empty = Recorder::on(1, "y").take().unwrap();
+        assert!(empty.audit_recovery(1, 1, 0).is_err());
+        empty.audit_recovery(0, 0, 0).unwrap();
+    }
+
+    #[test]
+    fn fault_events_export_to_chrome() {
+        let mut r = Recorder::on(0, "sched");
+        r.emit(0.1, TraceEvent::Heartbeat { replica: 1, phi: 0.4 });
+        r.emit(0.2, TraceEvent::Crash { replica: 1, reclaimed: 2 });
+        r.emit(0.3, TraceEvent::Migrate { request: 4, from: 1, to: 0 });
+        r.emit(0.4, TraceEvent::TransferLost { layer: 0, expert: 3 });
+        r.emit(0.5, TraceEvent::Corrupt { layer: 1, expert: 5 });
+        r.emit(0.6, TraceEvent::Retry { request: 4, attempt: 1, replica: 0 });
+        r.emit(0.7, TraceEvent::RequestFailed { request: 8 });
+        let tr = r.take().unwrap();
+        let j = tr.to_chrome_json().to_string();
+        let names = [
+            "heartbeat",
+            "crash",
+            "migrate",
+            "transfer lost",
+            "corrupt transfer",
+            "retry",
+            "request failed",
+        ];
+        for name in names {
+            assert!(j.contains(name), "{name} missing from chrome export");
+        }
+        let back = Json::parse(&j).unwrap();
+        // 4 metadata (1 process + 3 threads) + 7 events
+        assert_eq!(back.get("traceEvents").unwrap().as_arr().unwrap().len(), 11);
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Fault-injection property storm (no artifacts required — the fleet
+//! simulation runs on the analytic cost model with synthetic routing
+//! traces).
+//!
+//! Three properties over randomized fault plans, at several workload
+//! seeds:
+//!
+//! 1. **Bit-identical recovery** — every request a faulty run completes
+//!    carries exactly the token count the fault-free run produced for
+//!    the same request id (re-decode and migration replay the pre-drawn
+//!    routing trace, so recovery never changes the output).
+//! 2. **Recovery conservation** — every sequence reclaimed by a fault
+//!    resolves exactly once: `injected == recovered + failed`, and the
+//!    four terminal outcomes partition the workload.
+//! 3. **No dispatch to Down replicas** — `run_cluster` hard-fails
+//!    (`Err`, not a silent misroute) if the balancer ever selects a
+//!    crashed replica, and its trace audits hard-fail on leaked pins or
+//!    unbalanced recovery counters; an `Ok` return *is* the property.
+
+use std::collections::HashMap;
+
+use melinoe::clock::GpuSpec;
+use melinoe::cluster::{balancer, run_cluster, ClusterConfig, ClusterReport};
+use melinoe::coordinator::workload::Arrival;
+use melinoe::coordinator::Outcome;
+use melinoe::fault::{FaultSpec, RetryPolicy};
+
+fn base(replicas: usize, requests: usize, seed: u64) -> ClusterConfig {
+    // burst saturation: queues are full from t=0, so faults always find
+    // work to disrupt
+    ClusterConfig::synthetic(replicas, requests, 4, GpuSpec::h100(), seed)
+        .with_arrival(Arrival::Burst)
+        .with_trace(true)
+}
+
+fn run(cfg: &ClusterConfig) -> ClusterReport {
+    let mut b = balancer::by_name("expert-affinity").unwrap();
+    run_cluster(cfg, b.as_mut()).unwrap()
+}
+
+fn est(cfg: &ClusterConfig) -> f64 {
+    cfg.spec
+        .est_service_seconds(
+            cfg.workload.prompt_tokens,
+            cfg.workload.output.mean().ceil().max(1.0) as usize,
+        )
+        .max(1e-9)
+}
+
+#[test]
+fn random_fault_plans_conserve_and_recover_bit_identically() {
+    for seed in [3u64, 11, 29, 47, 83] {
+        let clean_cfg = base(3, 36, seed);
+        let clean = run(&clean_cfg);
+        let clean_tokens: HashMap<u64, usize> = clean
+            .outcomes
+            .iter()
+            .filter(|(_, o, _)| *o == Outcome::Completed)
+            .map(|(id, _, n)| (*id, *n))
+            .collect();
+        let e = est(&clean_cfg);
+        let horizon = clean.makespan.max(e);
+        for (name, spec) in [
+            ("crash-storm", FaultSpec::crash_storm(horizon / 3.0, horizon, e / 2.0)),
+            ("mixed", FaultSpec::mixed(horizon / 3.0, horizon, e / 2.0)),
+        ] {
+            let cfg = base(3, 36, seed)
+                .with_faults(spec)
+                .with_retry(RetryPolicy::retries(16, e / 8.0));
+            // run_cluster hard-fails on dispatch-to-Down, leaked pins,
+            // double terminals, and conservation violations; unwrap in
+            // `run` is the no-misroute / no-leak property
+            let rep = run(&cfg);
+            assert_eq!(
+                rep.completed + rep.cancelled + rep.rejected + rep.failed,
+                rep.n_requests,
+                "{name} seed {seed}: terminal outcomes must partition the workload"
+            );
+            assert_eq!(
+                rep.injected,
+                rep.recovered + rep.failed,
+                "{name} seed {seed}: recovery conservation"
+            );
+            for (id, o, n) in &rep.outcomes {
+                match o {
+                    Outcome::Completed => assert_eq!(
+                        clean_tokens.get(id),
+                        Some(n),
+                        "{name} seed {seed}: request {id} completed with a \
+                         different token count than the fault-free run"
+                    ),
+                    Outcome::Failed => assert_eq!(
+                        *n, 0,
+                        "{name} seed {seed}: failed request {id} must not \
+                         contribute output tokens"
+                    ),
+                    _ => {}
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn retry_off_fails_reclaimed_requests_but_still_conserves() {
+    let clean_cfg = base(2, 24, 5);
+    let clean = run(&clean_cfg);
+    let e = est(&clean_cfg);
+    let horizon = clean.makespan.max(e);
+    // mtbf far below the makespan: several crashes are near-certain
+    let cfg = base(2, 24, 5)
+        .with_faults(FaultSpec::crash_storm(horizon / 6.0, horizon, e / 2.0))
+        .with_retry(RetryPolicy::off());
+    let rep = run(&cfg);
+    assert!(rep.injected > 0, "storm injected nothing — mtbf sizing is broken");
+    assert_eq!(rep.recovered, 0, "retry-off must not recover reclaimed sequences");
+    assert_eq!(rep.injected, rep.failed);
+    assert_eq!(rep.retries, 0);
+    assert_eq!(
+        rep.completed + rep.cancelled + rep.rejected + rep.failed,
+        rep.n_requests
+    );
+}
+
+#[test]
+fn fault_machinery_is_inert_when_disabled() {
+    for seed in [2u64, 19] {
+        let plain = run(&base(3, 24, seed));
+        // faults none + retry armed must not perturb a single bit
+        let armed_cfg = base(3, 24, seed)
+            .with_faults(FaultSpec::none())
+            .with_retry(RetryPolicy::retries(8, 0.25));
+        let armed = run(&armed_cfg);
+        assert_eq!(plain.outcomes, armed.outcomes, "seed {seed}");
+        assert_eq!(
+            plain.makespan.to_bits(),
+            armed.makespan.to_bits(),
+            "seed {seed}: makespan diverged with inert fault machinery"
+        );
+        assert_eq!(plain.hit_rate.to_bits(), armed.hit_rate.to_bits(), "seed {seed}");
+        assert_eq!((armed.injected, armed.retries, armed.migrations, armed.failed), (0, 0, 0, 0));
+    }
+}

@@ -1,0 +1,150 @@
+#!/usr/bin/env python3
+"""Emit a perf-trajectory snapshot (`BENCH_<n>.json`) from repro JSONs.
+
+The nightly workflow runs the artifact-free extension experiments
+(`melinoe repro ext_*`), which write `results/<id>.json`; this script
+distills every row of every ext_* result into a compact per-arm record —
+tok/s, p95 latency, cache hit-rate, PCIe overlap fraction — and writes
+one snapshot file at the repo root.  Committing or archiving successive
+snapshots gives a perf trajectory across nightly runs without diffing
+full result JSONs.
+
+Snapshot shape:
+
+    {
+      "schema": 1,
+      "generated_unix": 1754524800,
+      "git": "20f8e15",
+      "experiments": {
+        "ext_fault": [
+          {"label": "crash-storm retry=on", "tok_s": ..,
+           "latency_p95_s": .., "hit_rate": .., "overlap_fraction": ..},
+          ...
+        ], ...
+      }
+    }
+
+Metrics absent from a row (not every experiment reports every quantity)
+are recorded as null rather than dropped, so the per-arm schema is
+stable across experiments.  Stdlib only — no third-party imports.
+
+Usage: bench_snapshot.py [results_dir] [out.json]
+  results_dir  default: results
+  out.json     default: BENCH_<n>.json at the repo root, n = 1 + the
+               highest existing snapshot index
+"""
+
+import json
+import os
+import re
+import subprocess
+import sys
+import time
+
+# keys that distinguish arms within one experiment, in label order
+LABEL_KEYS = [
+    "arm", "balancer", "scheduler", "dims", "model", "quant", "replicas",
+    "capacity", "fp16_eq_capacity", "prefill_chunk", "lookahead", "preempt_on",
+    "admission", "retry",
+]
+
+# first match wins: the row's headline p95 latency
+P95_KEYS = ["latency_p95_s", "high_latency_p95_s", "ttft_p95_s", "recovery_wait_p95"]
+
+
+def short(v):
+    if isinstance(v, float) and v.is_integer():
+        return str(int(v))
+    return str(v)
+
+
+def label_of(row):
+    parts = []
+    for k in LABEL_KEYS:
+        if k in row:
+            parts.append(short(row[k]) if k == "arm" else f"{k}={short(row[k])}")
+    return " ".join(parts) or "default"
+
+
+def num_or_none(v):
+    return v if isinstance(v, (int, float)) and not isinstance(v, bool) else None
+
+
+def distill(row):
+    rec = {
+        "label": label_of(row),
+        "tok_s": num_or_none(row.get("tok_s")),
+        "latency_p95_s": None,
+        "hit_rate": num_or_none(row.get("hit_rate")),
+        "overlap_fraction": num_or_none(row.get("overlap_fraction")),
+    }
+    for k in P95_KEYS:
+        if num_or_none(row.get(k)) is not None:
+            rec["latency_p95_s"] = row[k]
+            break
+    return rec
+
+
+def git_rev(repo_root):
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=repo_root, capture_output=True, text=True, timeout=10,
+        )
+        return out.stdout.strip() or None
+    except OSError:
+        return None
+
+
+def next_snapshot_path(repo_root):
+    top = 0
+    for f in os.listdir(repo_root):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", f)
+        if m:
+            top = max(top, int(m.group(1)))
+    return os.path.join(repo_root, f"BENCH_{top + 1}.json")
+
+
+def main():
+    results_dir = sys.argv[1] if len(sys.argv) > 1 else "results"
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out_path = sys.argv[2] if len(sys.argv) > 2 else next_snapshot_path(repo_root)
+
+    experiments = {}
+    if not os.path.isdir(results_dir):
+        print(f"bench_snapshot: no results dir {results_dir!r}", file=sys.stderr)
+        sys.exit(1)
+    for f in sorted(os.listdir(results_dir)):
+        if not (f.startswith("ext_") and f.endswith(".json")):
+            continue
+        name = f[: -len(".json")]
+        if name.endswith("_trace"):
+            continue  # Chrome-trace exports, not result rows
+        with open(os.path.join(results_dir, f)) as fh:
+            try:
+                rows = json.load(fh)
+            except ValueError as e:
+                print(f"bench_snapshot: skipping unparseable {f}: {e}", file=sys.stderr)
+                continue
+        if isinstance(rows, list) and rows:
+            experiments[name] = [distill(r) for r in rows if isinstance(r, dict)]
+
+    if not experiments:
+        print(f"bench_snapshot: no ext_* results under {results_dir!r}", file=sys.stderr)
+        sys.exit(1)
+
+    snapshot = {
+        "schema": 1,
+        "generated_unix": int(time.time()),
+        "git": git_rev(repo_root),
+        "experiments": experiments,
+    }
+    with open(out_path, "w") as fh:
+        json.dump(snapshot, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    arms = sum(len(v) for v in experiments.values())
+    print(f"bench_snapshot: {len(experiments)} experiments, {arms} arms -> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

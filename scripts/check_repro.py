@@ -20,6 +20,15 @@ parses them and FAILS the build if a headline invariant regresses:
                   nothing (pins_set == pins_released in the trace
                   counters) and every request reaches a terminal
                   outcome (completed + cancelled + rejected == n)
+  ext_fault       the crash-storm arm really injects faults and fails
+                  requests with retries off; retry-on strictly lifts the
+                  completed fraction (to >= 99% of the workload) at
+                  tok/s within 10% of fault-free; recovery conservation
+                  (injected == recovered + failed) holds exactly on
+                  every arm, terminal outcomes partition the workload,
+                  and Completed tokens are bit-identical to fault-free
+                  (the repro asserts it in-process and exports
+                  bit_identical per row)
 
 Every ext_* row also embeds a `metrics` snapshot from the run's merged
 structured trace (docs/OBSERVABILITY.md); the gate rejects NaN /
@@ -42,7 +51,7 @@ import sys
 
 REQUIRED = [
     "ext_cluster", "ext_continuous", "ext_prefill", "ext_overlap", "ext_preempt",
-    "ext_quant", "ext_stream",
+    "ext_quant", "ext_stream", "ext_fault",
 ]
 
 # trace-derived PCIe totals must match TransferStats to this tolerance
@@ -59,6 +68,24 @@ def load(results_dir, name):
         return None
     with open(path) as f:
         return json.load(f)
+
+
+class GateError(Exception):
+    """A results row is structurally unusable (missing key / wrong shape).
+
+    Raised instead of letting a bare KeyError escape, so the gate names
+    the experiment, row, and key rather than dying with a stack trace or
+    a generic "malformed JSON"."""
+
+
+def require(row, key, ctx):
+    """Fetch `row[key]` or fail loudly, naming the row and key."""
+    if not isinstance(row, dict):
+        raise GateError(f"{ctx}: expected an object row, got {type(row).__name__}")
+    if key not in row:
+        have = ", ".join(sorted(row)) or "<empty>"
+        raise GateError(f"{ctx}: missing key {key!r} (row has: {have})")
+    return row[key]
 
 
 def check(name, ok, detail):
@@ -326,6 +353,84 @@ def check_stream(rows):
         )
 
 
+def check_fault(rows):
+    by = {}
+    for i, r in enumerate(rows):
+        arm = require(r, "arm", f"ext_fault row {i}")
+        retry = require(r, "retry", f"ext_fault row {i}")
+        by[(arm, retry)] = r
+    clean = by.get(("fault-free", "off"))
+    off = by.get(("crash-storm", "off"))
+    on = by.get(("crash-storm", "on"))
+    mix = by.get(("brownout-mix", "on"))
+    if not (clean and off and on and mix):
+        check("ext_fault", False, f"missing arms (have {sorted(by)})")
+        return
+    n = require(clean, "n_requests", "ext_fault fault-free")
+    check(
+        "ext_fault",
+        clean["injected"] == 0 and clean["failed"] == 0 and clean["completed"] == n,
+        f"fault-free arm clean ({int(clean['completed'])}/{int(n)} completed, "
+        f"{int(clean['injected'])} injected)",
+    )
+    check(
+        "ext_fault",
+        off["injected"] > 0 and off["failed"] > 0,
+        f"crash storm disrupts with retries off ({int(off['injected'])} injected, "
+        f"{int(off['failed'])} failed)",
+    )
+    for (arm, retry), r in sorted(by.items()):
+        ctx = f"ext_fault {arm}/retry-{retry}"
+        injected = require(r, "injected", ctx)
+        recovered = require(r, "recovered", ctx)
+        failed = require(r, "failed", ctx)
+        check(
+            "ext_fault",
+            injected == recovered + failed,
+            f"{arm}/retry-{retry}: conservation {int(injected)} injected == "
+            f"{int(recovered)} recovered + {int(failed)} failed (exact)",
+        )
+        total = r["completed"] + r["cancelled"] + r["rejected"] + failed
+        check(
+            "ext_fault",
+            total == r["n_requests"],
+            f"{arm}/retry-{retry}: terminal outcomes {int(total)} "
+            f"of {int(r['n_requests'])} requests",
+        )
+        check(
+            "ext_fault",
+            require(r, "bit_identical", ctx) == 1,
+            f"{arm}/retry-{retry}: Completed tokens bit-identical to fault-free",
+        )
+    check(
+        "ext_fault",
+        on["completed"] > off["completed"],
+        f"retry-on completed {int(on['completed'])} vs retry-off "
+        f"{int(off['completed'])} under the same storm (strict lift required)",
+    )
+    check(
+        "ext_fault",
+        on["completed"] >= 0.99 * n,
+        f"retry-on completed {int(on['completed'])}/{int(n)} (>= 99% required)",
+    )
+    check(
+        "ext_fault",
+        on["tok_s"] >= 0.90 * clean["tok_s"],
+        f"retry-on {fmt(on['tok_s'])} tok/s vs fault-free {fmt(clean['tok_s'])} "
+        f"(>= 90% required)",
+    )
+    summary_rows.append(
+        (
+            "ext_fault",
+            f"crash-storm retry-on ({int(on['injected'])} reclaimed, "
+            f"{int(on['retries'])} retries, {int(on['migrations'])} migrations)",
+            on["tok_s"],
+            on["hit_rate"],
+            None,
+        )
+    )
+
+
 def finite(v):
     return isinstance(v, (int, float)) and math.isfinite(v)
 
@@ -431,15 +536,24 @@ def main():
         "ext_preempt": check_preempt,
         "ext_quant": check_quant,
         "ext_stream": check_stream,
+        "ext_fault": check_fault,
     }
     for name in REQUIRED:
         rows = load(results_dir, name)
-        if rows is not None:
-            try:
-                checkers[name](rows)
-                check_metrics(name, rows)
-            except (KeyError, TypeError, ValueError) as e:
-                failures.append(f"{name}: malformed JSON ({e!r})")
+        if rows is None:
+            continue
+        if not isinstance(rows, list) or not rows:
+            check(name, False, f"results JSON holds no rows (got {type(rows).__name__})")
+            continue
+        try:
+            checkers[name](rows)
+            check_metrics(name, rows)
+        except GateError as e:
+            check(name, False, str(e))
+        except KeyError as e:
+            check(name, False, f"results row is missing key {e} (smoke/gate drift?)")
+        except (TypeError, ValueError) as e:
+            check(name, False, f"malformed results JSON ({e!r})")
     check_trace_export(results_dir)
     write_summary()
     sys.exit(1 if failures else 0)
