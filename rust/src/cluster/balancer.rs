@@ -1,7 +1,7 @@
 //! Pluggable request dispatchers for the replica fleet.
 //!
 //! A [`Balancer`] sees one arriving request plus a snapshot of every
-//! replica ([`ReplicaView`]) and picks the destination.  Three policies:
+//! replica ([`ReplicaView`]) and picks the destination.  Four policies:
 //!
 //! * [`RoundRobin`]     — rotate, ignore all state (the fleet baseline).
 //! * [`LeastLoaded`]    — shortest queue, earliest-free tiebreak (classic
@@ -11,6 +11,11 @@
 //!   resident experts, minus a queue-depth penalty.  Same-task traffic
 //!   converges onto the same replicas, multiplying the single-GPU cache
 //!   hit-rate advantage cluster-wide.
+//! * [`PriorityAffinity`] — ExpertAffinity made priority-aware: a High
+//!   request discounts a replica's Low-class work from the load penalty,
+//!   because preempting a Low on a warm replica beats queueing behind
+//!   Highs on a cold one.  Opt-in (`--balancer prio`), never part of the
+//!   stock comparison set.
 //!
 //! Every policy is *health-aware*: a `Down` replica is never picked
 //! while any dispatchable one exists, and `Degraded` / `Recovering`
@@ -22,6 +27,7 @@
 use anyhow::{anyhow, Result};
 
 use super::workload::ClusterRequest;
+use crate::coordinator::Priority;
 use crate::fault::Health;
 
 /// Scheduler-visible snapshot of one replica at dispatch time.  Under
@@ -39,6 +45,9 @@ pub struct ReplicaView {
     /// Fraction of the request's predicted expert set resident (or
     /// planned-resident) on this replica, in [0, 1].
     pub overlap: f64,
+    /// Queued plus in-flight Low-class requests — the preemption
+    /// headroom a priority-aware policy may discount from the load.
+    pub low_load: usize,
     /// The dispatcher's health verdict for this replica at the arrival
     /// instant ([`Health::Healthy`] in a fault-free fleet).
     pub health: Health,
@@ -87,6 +96,13 @@ pub trait Balancer {
     /// comparable affinity number.
     fn score(&self, view: &ReplicaView) -> f64 {
         view.overlap
+    }
+    /// Whether `pick` actually reads [`ReplicaView::overlap`].  The
+    /// cluster loop skips the O(plan) overlap computation for every
+    /// replica when the policy doesn't price affinity (it still fills
+    /// the chosen view before recording the dispatch score).
+    fn wants_overlap(&self) -> bool {
+        false
     }
 }
 
@@ -172,6 +188,10 @@ impl Balancer for ExpertAffinity {
         "expert-affinity"
     }
 
+    fn wants_overlap(&self) -> bool {
+        true
+    }
+
     fn score(&self, v: &ReplicaView) -> f64 {
         if !v.dispatchable() {
             return f64::NEG_INFINITY;
@@ -199,15 +219,88 @@ impl Balancer for ExpertAffinity {
     }
 }
 
+/// [`ExpertAffinity`] made priority-aware: for a High-class request,
+/// a replica's Low-class work is discounted from the load penalty — the
+/// preemption machinery will suspend those Lows on admission, so they
+/// cost the High nothing.  Preempting a Low on a warm replica can
+/// therefore beat queueing behind Highs on a cold one.  Normal and Low
+/// requests score exactly like [`ExpertAffinity`].
+#[derive(Debug)]
+pub struct PriorityAffinity {
+    /// Score subtracted per unit of (priority-discounted) load — same
+    /// scale as [`ExpertAffinity::load_penalty`].
+    pub load_penalty: f64,
+}
+
+impl Default for PriorityAffinity {
+    fn default() -> PriorityAffinity {
+        PriorityAffinity { load_penalty: 0.1 }
+    }
+}
+
+impl Balancer for PriorityAffinity {
+    fn name(&self) -> &'static str {
+        "priority-affinity"
+    }
+
+    fn wants_overlap(&self) -> bool {
+        true
+    }
+
+    /// The request-free score (what the dispatch trace records): plain
+    /// affinity-minus-load, identical to [`ExpertAffinity`].
+    fn score(&self, v: &ReplicaView) -> f64 {
+        if !v.dispatchable() {
+            return f64::NEG_INFINITY;
+        }
+        v.overlap - self.load_penalty * v.effective_load()
+    }
+
+    fn pick(&mut self, req: &ClusterRequest, views: &[ReplicaView]) -> usize {
+        assert!(!views.is_empty());
+        // the load as *this* request will experience it: a High request
+        // preempts Low work, so Lows don't stand in its way (the health
+        // surcharge always does — a Down replica stays uninhabitable)
+        let score = |v: &ReplicaView| -> f64 {
+            if !v.dispatchable() {
+                return f64::NEG_INFINITY;
+            }
+            let load = if req.priority == Priority::High {
+                v.load().saturating_sub(v.low_load) as f64 + v.health_bias()
+            } else {
+                v.effective_load()
+            };
+            v.overlap - self.load_penalty * load
+        };
+        let mut best = 0usize;
+        let mut best_score = score(&views[0]);
+        for i in 1..views.len() {
+            let s = score(&views[i]);
+            // same tie policy as ExpertAffinity: strictly better score
+            // wins, near-ties go to the replica that frees up first
+            if s > best_score + 1e-12
+                || ((s - best_score).abs() <= 1e-12
+                    && views[i].busy_until < views[best].busy_until)
+            {
+                best = i;
+                best_score = s;
+            }
+        }
+        best
+    }
+}
+
 /// Balancer registry for CLI / repro use.
 pub fn by_name(name: &str) -> Result<Box<dyn Balancer>> {
     Ok(match name {
         "rr" | "round-robin" => Box::new(RoundRobin::new()),
         "least" | "least-loaded" => Box::new(LeastLoaded),
         "affinity" | "expert-affinity" => Box::new(ExpertAffinity::default()),
+        "prio" | "priority-affinity" => Box::new(PriorityAffinity::default()),
         _ => {
             return Err(anyhow!(
-                "unknown balancer {name:?} (round-robin|least-loaded|expert-affinity)"
+                "unknown balancer {name:?} \
+                 (round-robin|least-loaded|expert-affinity|priority-affinity)"
             ))
         }
     })
@@ -226,6 +319,7 @@ mod tests {
             slots_in_use: 0,
             busy_until: busy,
             overlap,
+            low_load: 0,
             health: Health::Healthy,
         }
     }
@@ -233,13 +327,17 @@ mod tests {
     fn random_views(r: &mut Rng) -> Vec<ReplicaView> {
         let n = r.range(1, 9);
         (0..n)
-            .map(|i| ReplicaView {
-                id: i,
-                queue_depth: r.below(12),
-                slots_in_use: r.below(5),
-                busy_until: r.f64() * 10.0,
-                overlap: r.f64(),
-                health: Health::Healthy,
+            .map(|i| {
+                let (depth, slots) = (r.below(12), r.below(5));
+                ReplicaView {
+                    id: i,
+                    queue_depth: depth,
+                    slots_in_use: slots,
+                    busy_until: r.f64() * 10.0,
+                    overlap: r.f64(),
+                    low_load: r.below(depth + slots + 1),
+                    health: Health::Healthy,
+                }
             })
             .collect()
     }
@@ -284,6 +382,7 @@ mod tests {
                 slots_in_use: 4,
                 busy_until: 0.0,
                 overlap: 0.0,
+                low_load: 0,
                 health: Health::Healthy,
             },
             ReplicaView {
@@ -292,6 +391,7 @@ mod tests {
                 slots_in_use: 0,
                 busy_until: 9.0,
                 overlap: 0.0,
+                low_load: 0,
                 health: Health::Healthy,
             },
         ];
@@ -352,9 +452,46 @@ mod tests {
         assert_eq!(af.pick(&req, &views), 1);
     }
 
+    /// A High request sees Low work as preemptable headroom: the warm
+    /// replica buried in Lows still wins it.  Normal requests score like
+    /// plain ExpertAffinity, and the Low discount never resurrects a
+    /// Down replica.
+    #[test]
+    fn priority_affinity_discounts_low_work_for_high_requests() {
+        let mut b = PriorityAffinity::default();
+        let mut high = ClusterRequest::probe(0);
+        high.priority = Priority::High;
+        let normal = ClusterRequest::probe(0);
+        // replica 0: warm but 9 queued — all Low; replica 1: cold, idle
+        let mut views = vec![view(0, 9, 0.0, 0.9), view(1, 0, 0.0, 0.1)];
+        views[0].low_load = 9;
+        assert_eq!(b.pick(&normal, &views), 1, "a Normal request queues behind the Lows");
+        assert_eq!(b.pick(&high, &views), 0, "a High request preempts them instead");
+        // with nothing to preempt, the High queues like everyone else
+        views[0].low_load = 0;
+        assert_eq!(b.pick(&high, &views), 1);
+        // and it never makes a Down replica inhabitable
+        views[0].low_load = 9;
+        views[0].health = Health::Down;
+        assert_eq!(b.pick(&high, &views), 1);
+        // request-free trace score matches ExpertAffinity's
+        views[0].health = Health::Healthy;
+        let ea = ExpertAffinity::default();
+        assert_eq!(b.score(&views[0]).to_bits(), ea.score(&views[0]).to_bits());
+    }
+
     #[test]
     fn by_name_resolves_aliases() {
-        for n in ["rr", "round-robin", "least", "least-loaded", "affinity", "expert-affinity"] {
+        for n in [
+            "rr",
+            "round-robin",
+            "least",
+            "least-loaded",
+            "affinity",
+            "expert-affinity",
+            "prio",
+            "priority-affinity",
+        ] {
             assert!(by_name(n).is_ok(), "{n}");
         }
         assert!(by_name("random").is_err());
@@ -372,9 +509,11 @@ mod tests {
             let mut rr = RoundRobin::new();
             let mut ll = LeastLoaded;
             let mut af = ExpertAffinity::default();
+            let mut pa = PriorityAffinity::default();
             rr.pick(&req, views) < views.len()
                 && ll.pick(&req, views) < views.len()
                 && af.pick(&req, views) < views.len()
+                && pa.pick(&req, views) < views.len()
         });
     }
 
@@ -422,13 +561,16 @@ mod tests {
             if !views.iter().any(ReplicaView::dispatchable) {
                 return true; // run_cluster defers instead of dispatching
             }
-            let req = ClusterRequest::probe(0);
+            let mut req = ClusterRequest::probe(0);
+            req.priority = Priority::High; // exercise the Low discount too
             let mut rr = RoundRobin::new();
             let mut ll = LeastLoaded;
             let mut af = ExpertAffinity::default();
+            let mut pa = PriorityAffinity::default();
             views[rr.pick(&req, views)].dispatchable()
                 && views[ll.pick(&req, views)].dispatchable()
                 && views[af.pick(&req, views)].dispatchable()
+                && views[pa.pick(&req, views)].dispatchable()
         });
     }
 }

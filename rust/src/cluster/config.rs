@@ -1,0 +1,645 @@
+//! Cluster experiment configuration: [`ClusterConfig`], the
+//! work-stealing knobs ([`StealPolicy`]), and the validating
+//! [`ClusterBuilder`].
+//!
+//! Nine PRs of accreted knobs (prefill chunking, lookahead, preemption,
+//! quantization tiers, streaming mixes, fault plans, retry budgets, and
+//! now work stealing and aging) used to be assembled by flat struct
+//! literals scattered across `main.rs` and every repro experiment, each
+//! re-implementing its own ad-hoc sanity checks.  The builder is the
+//! one construction path: start from [`ClusterConfig::builder`]
+//! (the synthetic baseline), override what the experiment varies, and
+//! [`ClusterBuilder::build`] validates the *combination* — an invalid
+//! config (a retry budget with no fault plan to retry from, preemption
+//! under the static scheduler, a non-positive steal interval) fails at
+//! build time with one error message listing every violation.
+//!
+//! The chainable `with_*` methods remain on [`ClusterConfig`] for
+//! post-build arm sweeps (`base.clone().with_lookahead(d)`); they keep
+//! their historical clamping semantics and perform no cross-knob
+//! validation — that happens once, at build.
+
+use anyhow::{bail, Result};
+
+use crate::clock::GpuSpec;
+use crate::coordinator::workload::Arrival;
+use crate::coordinator::{PreemptPolicy, SchedulerMode};
+use crate::fault::{FaultSpec, RetryPolicy};
+use crate::quant::QuantMode;
+
+use super::replica::ReplicaSpec;
+use super::workload::{
+    self, ClusterRequest, OutputLen, PriorityMix, StreamMix, TaskProfile, WorkloadSpec,
+};
+
+/// Fleet-scale work stealing knobs (`--steal`): every `interval`
+/// sim-seconds, each idle dispatchable replica scans its peers and
+/// takes the single best-priced piece of work — the back of a loaded
+/// peer's lowest-priority queue, or (with `live` on) its
+/// lowest-priority suspended in-flight sequence, charging the KV/plan
+/// migration transfer over PCIe on the thief's clock.
+///
+/// Pricing mirrors the brownout-migration score: a steal fires only
+/// when `(thief overlap − load_coeff · thief load) − (victim overlap −
+/// load_coeff · (victim load − 1))`, minus the live steal's KV
+/// transfer time normalized by the request's service estimate, exceeds
+/// `threshold` — warm-cache advantage weighed against queue delay and
+/// migration cost.
+#[derive(Debug, Clone)]
+pub struct StealPolicy {
+    /// Sim-seconds between fleet-wide steal scans.
+    pub interval: f64,
+    /// Score subtracted per unit of outstanding load (queued plus
+    /// in-flight), same scale as `ExpertAffinity::load_penalty`.
+    pub load_coeff: f64,
+    /// Minimum pricing gain before a steal fires (0.0 = any gain).
+    pub threshold: f64,
+    /// Also steal suspended in-flight sequences (live migration priced
+    /// with the KV transfer charge); off limits stealing to queued work.
+    pub live: bool,
+}
+
+impl StealPolicy {
+    /// The default pricing at a given scan interval.
+    pub fn every(interval: f64) -> StealPolicy {
+        StealPolicy { interval, load_coeff: 0.1, threshold: 0.0, live: true }
+    }
+}
+
+/// Full description of one cluster experiment.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub replicas: usize,
+    /// Decode slots per replica.
+    pub max_batch: usize,
+    /// Admission bound: no replica's queue may exceed this depth.  When
+    /// the balancer's choice is full the dispatcher sheds to the replica
+    /// with the fewest queued requests; when *every* replica is full, the
+    /// fleet advances step by step until a slot drains (lossless
+    /// back-pressure).
+    pub max_queue: usize,
+    /// How replicas fill decode slots: step-level continuous batching or
+    /// legacy run-to-completion batches.
+    pub scheduler: SchedulerMode,
+    /// Prompt tokens a prefilling sequence consumes per step on every
+    /// replica (`--prefill-chunk`; 1 = token-at-a-time prefill).
+    pub prefill_chunk: usize,
+    /// When a waiting higher-priority request may preempt an in-flight
+    /// sequence on a replica (`--preempt`; continuous scheduler only).
+    pub preempt: PreemptPolicy,
+    /// SLO-aware admission control on every replica (`--admission`):
+    /// deadline-tagged requests whose compute-optimistic TTFT estimate
+    /// already misses are rejected at admission instead of decoding only
+    /// to miss at p99.
+    pub admission: bool,
+    /// Record sim-time structured traces on every replica plus the
+    /// dispatcher lane (`--trace`); `run_cluster` then runs the
+    /// cross-layer conservation audits per replica and returns the
+    /// merged fleet timeline in [`super::ClusterReport::trace`].
+    pub trace: bool,
+    /// Deterministic fault plan parameters (`--faults`, `--mtbf`): drawn
+    /// from a dedicated salt of the workload seed so fault-free runs are
+    /// byte-identical whether or not this field is armed.
+    pub faults: FaultSpec,
+    /// Retry policy for fault-reclaimed requests (`--retry`): per-request
+    /// budget with exponential sim-time backoff; an exhausted budget is
+    /// the one terminal [`crate::coordinator::Outcome::Failed`].
+    pub retry: RetryPolicy,
+    /// Fleet-scale work stealing (`--steal`); `None` disarms the steal
+    /// tick entirely, keeping the event timeline bit-identical to the
+    /// pre-steal loop.
+    pub steal: Option<StealPolicy>,
+    /// Age-based priority promotion threshold τ in sim-seconds
+    /// (`--age-promote`): a request waiting ≥ τ is promoted to Normal,
+    /// ≥ 2τ to High, so a Low request under a sustained High flood has
+    /// bounded `preempted_wait`.  `None` disables (zero behavior change).
+    pub age_promote: Option<f64>,
+    pub spec: ReplicaSpec,
+    pub workload: WorkloadSpec,
+    pub tasks: Vec<TaskProfile>,
+}
+
+impl ClusterConfig {
+    /// Heterogeneous synthetic scenario: `n_tasks` fine-tuned traffic
+    /// streams with tiled hot expert sets over OLMoE at paper scale, and
+    /// a Poisson arrival rate ~1.5× the fleet's compute-only capacity so
+    /// the comparison runs saturated (throughput reflects efficiency,
+    /// not offered load).
+    pub fn synthetic(
+        replicas: usize,
+        n_requests: usize,
+        n_tasks: usize,
+        gpu: GpuSpec,
+        seed: u64,
+    ) -> ClusterConfig {
+        let spec = ReplicaSpec::olmoe(gpu);
+        let tasks = TaskProfile::synthetic(
+            n_tasks.max(1),
+            spec.n_layers,
+            spec.n_experts,
+            spec.capacity,
+            0.92,
+        );
+        let (prompt_tokens, max_output) = (8, 24);
+        let est = spec.est_service_seconds(prompt_tokens, max_output).max(1e-6);
+        let rate = 1.5 * replicas.max(1) as f64 / est;
+        ClusterConfig {
+            replicas: replicas.max(1),
+            max_batch: 4,
+            max_queue: n_requests.max(8),
+            scheduler: SchedulerMode::Continuous,
+            prefill_chunk: 1,
+            preempt: PreemptPolicy::Off,
+            admission: false,
+            trace: false,
+            faults: FaultSpec::none(),
+            retry: RetryPolicy::off(),
+            steal: None,
+            age_promote: None,
+            spec,
+            workload: WorkloadSpec {
+                n_requests,
+                arrival: Arrival::Poisson(rate),
+                prompt_tokens,
+                output: OutputLen::Fixed(max_output),
+                balanced_tasks: true,
+                priorities: PriorityMix::none(),
+                stream: StreamMix::none(),
+                seed,
+            },
+            tasks,
+        }
+    }
+
+    /// The validating construction path: the synthetic baseline wrapped
+    /// in a [`ClusterBuilder`] (see the module docs).
+    pub fn builder(
+        replicas: usize,
+        n_requests: usize,
+        n_tasks: usize,
+        gpu: GpuSpec,
+        seed: u64,
+    ) -> ClusterBuilder {
+        ClusterBuilder { cfg: ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu, seed) }
+    }
+
+    pub fn with_arrival(mut self, arrival: Arrival) -> ClusterConfig {
+        self.workload.arrival = arrival;
+        self
+    }
+
+    /// Decode slots per replica (`--batch`).
+    pub fn with_max_batch(mut self, slots: usize) -> ClusterConfig {
+        self.max_batch = slots.max(1);
+        self
+    }
+
+    pub fn with_max_queue(mut self, bound: usize) -> ClusterConfig {
+        self.max_queue = bound.max(1);
+        self
+    }
+
+    pub fn with_scheduler(mut self, scheduler: SchedulerMode) -> ClusterConfig {
+        self.scheduler = scheduler;
+        self
+    }
+
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> ClusterConfig {
+        self.prefill_chunk = chunk.max(1);
+        self
+    }
+
+    /// Preemption policy applied on every replica (`--preempt`).
+    pub fn with_preempt(mut self, preempt: PreemptPolicy) -> ClusterConfig {
+        self.preempt = preempt;
+        self
+    }
+
+    /// Record structured traces fleet-wide (`--trace`; see `trace`).
+    pub fn with_trace(mut self, on: bool) -> ClusterConfig {
+        self.trace = on;
+        self
+    }
+
+    /// Per-request priority distribution of the generated workload.
+    pub fn with_priority_mix(mut self, mix: PriorityMix) -> ClusterConfig {
+        self.workload.priorities = mix;
+        self
+    }
+
+    /// Per-request streaming-client behaviour of the generated workload:
+    /// deadlines, cancel-after-N hang-ups and queue-time disconnects
+    /// (`--deadline-mix` / `--cancel-after` / `--disconnect-rate`).
+    pub fn with_stream_mix(mut self, mix: StreamMix) -> ClusterConfig {
+        self.workload.stream = mix;
+        self
+    }
+
+    /// SLO-aware admission control on every replica (`--admission`).
+    pub fn with_admission(mut self, on: bool) -> ClusterConfig {
+        self.admission = on;
+        self
+    }
+
+    /// Fault-injection plan parameters (`--faults`, `--mtbf`; see
+    /// [`FaultSpec`]).  [`FaultSpec::none`] keeps the run byte-identical
+    /// to a build without the fault machinery.
+    pub fn with_faults(mut self, faults: FaultSpec) -> ClusterConfig {
+        self.faults = faults;
+        self
+    }
+
+    /// Retry policy for fault-reclaimed requests (`--retry`).
+    pub fn with_retry(mut self, retry: RetryPolicy) -> ClusterConfig {
+        self.retry = retry;
+        self
+    }
+
+    /// Fleet-scale work stealing (`--steal`; see [`StealPolicy`]).
+    pub fn with_steal(mut self, steal: Option<StealPolicy>) -> ClusterConfig {
+        self.steal = steal;
+        self
+    }
+
+    /// Age-based priority promotion threshold (`--age-promote`; `None`
+    /// disables — see `age_promote`).
+    pub fn with_age_promote(mut self, tau: Option<f64>) -> ClusterConfig {
+        self.age_promote = tau;
+        self
+    }
+
+    /// Layer-ahead transfer pipeline depth on every replica
+    /// (`--lookahead`; 0 = admit-time prefetch only).
+    pub fn with_lookahead(mut self, depth: usize) -> ClusterConfig {
+        self.spec = self.spec.with_lookahead(depth);
+        self
+    }
+
+    /// Weight precision tier every replica stores and executes resident
+    /// experts at (`--quant`).  Preserves the spec's VRAM *byte* budget:
+    /// the per-layer slot count is rescaled by the tier cost ratio, so a
+    /// lower-bit tier holds proportionally more experts in the same
+    /// bytes (and the current tier is a no-op — cost units are exact
+    /// binary fractions).
+    pub fn with_quant(mut self, quant: QuantMode) -> ClusterConfig {
+        let budget = self.spec.capacity as f64 * self.spec.quant.cost_units();
+        self.spec.capacity =
+            ((budget / quant.cost_units()) as usize).clamp(1, self.spec.n_experts);
+        self.spec.quant = quant;
+        self
+    }
+
+    /// Big-little fallback on every replica (`--little-tier`,
+    /// `--fallback-threshold`): keep `little`-tier copies of the hottest
+    /// experts resident and, on a demand miss, execute the little copy
+    /// at zero stall when the expected wait exceeds `threshold` seconds.
+    pub fn with_fallback(mut self, little: Option<QuantMode>, threshold: f64) -> ClusterConfig {
+        self.spec = self.spec.with_fallback(little, threshold);
+        self
+    }
+
+    pub fn with_output(mut self, output: OutputLen) -> ClusterConfig {
+        self.workload.output = output;
+        self
+    }
+
+    pub(crate) fn requests(&self) -> Vec<ClusterRequest> {
+        workload::generate(
+            &self.workload,
+            &self.tasks,
+            self.spec.n_layers,
+            self.spec.n_experts,
+            self.spec.top_k,
+        )
+    }
+}
+
+/// Validating builder over [`ClusterConfig`] (see the module docs).
+/// Setters assign raw values — no silent clamping — and
+/// [`ClusterBuilder::build`] reports every violation in one error.
+#[derive(Debug, Clone)]
+pub struct ClusterBuilder {
+    cfg: ClusterConfig,
+}
+
+impl ClusterBuilder {
+    /// Read access to the draft config mid-chain — CLI parsing derives
+    /// dependent defaults (service-time estimates, fault horizons) from
+    /// the knobs set so far without building prematurely.
+    pub fn draft(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    pub fn replicas(mut self, n: usize) -> ClusterBuilder {
+        self.cfg.replicas = n;
+        self
+    }
+
+    /// Decode slots per replica (`--batch`).
+    pub fn max_batch(mut self, slots: usize) -> ClusterBuilder {
+        self.cfg.max_batch = slots;
+        self
+    }
+
+    pub fn max_queue(mut self, bound: usize) -> ClusterBuilder {
+        self.cfg.max_queue = bound;
+        self
+    }
+
+    pub fn scheduler(mut self, scheduler: SchedulerMode) -> ClusterBuilder {
+        self.cfg.scheduler = scheduler;
+        self
+    }
+
+    pub fn prefill_chunk(mut self, chunk: usize) -> ClusterBuilder {
+        self.cfg.prefill_chunk = chunk;
+        self
+    }
+
+    pub fn preempt(mut self, preempt: PreemptPolicy) -> ClusterBuilder {
+        self.cfg.preempt = preempt;
+        self
+    }
+
+    pub fn admission(mut self, on: bool) -> ClusterBuilder {
+        self.cfg.admission = on;
+        self
+    }
+
+    pub fn trace(mut self, on: bool) -> ClusterBuilder {
+        self.cfg.trace = on;
+        self
+    }
+
+    pub fn faults(mut self, faults: FaultSpec) -> ClusterBuilder {
+        self.cfg.faults = faults;
+        self
+    }
+
+    pub fn retry(mut self, retry: RetryPolicy) -> ClusterBuilder {
+        self.cfg.retry = retry;
+        self
+    }
+
+    pub fn steal(mut self, steal: Option<StealPolicy>) -> ClusterBuilder {
+        self.cfg.steal = steal;
+        self
+    }
+
+    pub fn age_promote(mut self, tau: Option<f64>) -> ClusterBuilder {
+        self.cfg.age_promote = tau;
+        self
+    }
+
+    /// Replace the replica model/memory spec wholesale (experiments that
+    /// sweep model dimensions or VRAM budgets).
+    pub fn spec(mut self, spec: ReplicaSpec) -> ClusterBuilder {
+        self.cfg.spec = spec;
+        self
+    }
+
+    /// Replace the task profiles (the synthetic default tiles the spec's
+    /// expert space; experiments re-tile after changing the spec).
+    pub fn tasks(mut self, tasks: Vec<TaskProfile>) -> ClusterBuilder {
+        self.cfg.tasks = tasks;
+        self
+    }
+
+    /// Replace the workload spec wholesale (keeps experiments that craft
+    /// the full arrival process to a single call).
+    pub fn workload(mut self, workload: WorkloadSpec) -> ClusterBuilder {
+        self.cfg.workload = workload;
+        self
+    }
+
+    pub fn arrival(mut self, arrival: Arrival) -> ClusterBuilder {
+        self.cfg.workload.arrival = arrival;
+        self
+    }
+
+    pub fn prompt_tokens(mut self, tokens: usize) -> ClusterBuilder {
+        self.cfg.workload.prompt_tokens = tokens;
+        self
+    }
+
+    pub fn output(mut self, output: OutputLen) -> ClusterBuilder {
+        self.cfg.workload.output = output;
+        self
+    }
+
+    pub fn priority_mix(mut self, mix: PriorityMix) -> ClusterBuilder {
+        self.cfg.workload.priorities = mix;
+        self
+    }
+
+    pub fn stream_mix(mut self, mix: StreamMix) -> ClusterBuilder {
+        self.cfg.workload.stream = mix;
+        self
+    }
+
+    /// Reweight the task profiles by a Zipf law (task `i` draws traffic
+    /// ∝ `1/(i+1)^alpha`) and switch the workload to weighted draws —
+    /// the imbalanced traffic work stealing exists to flatten.
+    pub fn zipf(mut self, alpha: f64) -> ClusterBuilder {
+        workload::zipf_weights(&mut self.cfg.tasks, alpha);
+        self.cfg.workload.balanced_tasks = false;
+        self
+    }
+
+    /// Serving tier with VRAM byte-budget rescale (`--quant`; delegates
+    /// to [`ClusterConfig::with_quant`]).
+    pub fn quant(mut self, quant: QuantMode) -> ClusterBuilder {
+        self.cfg = self.cfg.with_quant(quant);
+        self
+    }
+
+    /// Big-little fallback (see [`ClusterConfig::with_fallback`]).
+    pub fn fallback(mut self, little: Option<QuantMode>, threshold: f64) -> ClusterBuilder {
+        self.cfg = self.cfg.with_fallback(little, threshold);
+        self
+    }
+
+    /// Layer-ahead transfer pipeline depth (`--lookahead`).
+    pub fn lookahead(mut self, depth: usize) -> ClusterBuilder {
+        self.cfg.spec = self.cfg.spec.with_lookahead(depth);
+        self
+    }
+
+    /// Validate the combination and produce the config.  Every violation
+    /// is collected, so one failed build reports all of them at once.
+    pub fn build(self) -> Result<ClusterConfig> {
+        let c = &self.cfg;
+        let mut errs: Vec<String> = Vec::new();
+        if c.replicas == 0 {
+            errs.push("replicas must be >= 1".into());
+        }
+        if c.max_batch == 0 {
+            errs.push("max_batch (decode slots) must be >= 1".into());
+        }
+        if c.max_queue == 0 {
+            errs.push("max_queue (admission bound) must be >= 1".into());
+        }
+        if c.prefill_chunk == 0 {
+            errs.push("prefill_chunk must be >= 1 (1 = token-at-a-time)".into());
+        }
+        if c.workload.n_requests == 0 {
+            errs.push("workload must carry at least one request".into());
+        }
+        if c.tasks.is_empty() {
+            errs.push("at least one task profile is required".into());
+        }
+        match c.workload.arrival {
+            Arrival::Poisson(rate) if !(rate > 0.0 && rate.is_finite()) => {
+                errs.push(format!("Poisson arrival rate must be positive and finite, got {rate}"));
+            }
+            Arrival::Uniform(gap) if !(gap >= 0.0 && gap.is_finite()) => {
+                errs.push(format!("uniform arrival gap must be non-negative, got {gap}"));
+            }
+            _ => {}
+        }
+        if c.retry.max_retries > 0 && !c.faults.enabled {
+            errs.push(
+                "retry budget armed with fault injection off (--retry needs --faults): \
+                 there is nothing to retry from"
+                    .into(),
+            );
+        }
+        if c.faults.enabled {
+            if !(c.faults.mtbf > 0.0 && c.faults.mtbf.is_finite()) {
+                errs.push(format!("fault MTBF must be positive and finite, got {}", c.faults.mtbf));
+            }
+            if !(c.faults.horizon > 0.0 && c.faults.horizon.is_finite()) {
+                errs.push(format!(
+                    "fault horizon must be positive and finite, got {}",
+                    c.faults.horizon
+                ));
+            }
+            if c.faults.recovery < 0.0 {
+                errs.push(format!(
+                    "crash recovery time cannot be negative, got {}",
+                    c.faults.recovery
+                ));
+            }
+        }
+        if let Some(thresh) = c.preempt.threshold() {
+            if c.scheduler != SchedulerMode::Continuous {
+                errs.push(
+                    "preemption (--preempt) requires the continuous scheduler: the static \
+                     run-to-completion batch has no mid-flight slot to suspend"
+                        .into(),
+                );
+            }
+            if !(thresh >= 0.0 && thresh.is_finite()) {
+                errs.push(format!(
+                    "preemption threshold must be non-negative and finite, got {thresh}"
+                ));
+            }
+        }
+        if let Some(s) = &c.steal {
+            if !(s.interval > 0.0 && s.interval.is_finite()) {
+                errs.push(format!(
+                    "steal interval must be positive and finite, got {}",
+                    s.interval
+                ));
+            }
+            if s.load_coeff < 0.0 || s.load_coeff.is_nan() {
+                errs.push(format!(
+                    "steal load coefficient cannot be negative, got {}",
+                    s.load_coeff
+                ));
+            }
+        }
+        if let Some(tau) = c.age_promote {
+            if !(tau > 0.0 && tau.is_finite()) {
+                errs.push(format!(
+                    "age-promotion threshold must be positive and finite, got {tau}"
+                ));
+            }
+        }
+        if c.spec.fallback_threshold < 0.0 {
+            errs.push(format!(
+                "fallback threshold cannot be negative, got {}",
+                c.spec.fallback_threshold
+            ));
+        }
+        if !errs.is_empty() {
+            bail!("invalid cluster config: {}", errs.join("; "));
+        }
+        Ok(self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn builder() -> ClusterBuilder {
+        ClusterConfig::builder(2, 16, 2, GpuSpec::h100(), 7)
+    }
+
+    #[test]
+    fn synthetic_baseline_builds_clean() {
+        let cfg = builder().build().unwrap();
+        assert_eq!(cfg.replicas, 2);
+        assert!(cfg.steal.is_none());
+        assert!(cfg.age_promote.is_none());
+    }
+
+    #[test]
+    fn retry_without_faults_fails_at_build() {
+        let err = builder().retry(RetryPolicy::retries(3, 0.5)).build().unwrap_err();
+        assert!(err.to_string().contains("--retry needs --faults"), "{err}");
+    }
+
+    #[test]
+    fn one_error_message_lists_every_violation() {
+        let err = builder()
+            .max_batch(0)
+            .retry(RetryPolicy::retries(3, 0.5))
+            .steal(Some(StealPolicy::every(0.0)))
+            .age_promote(Some(-1.0))
+            .build()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.starts_with("invalid cluster config:"), "{msg}");
+        for needle in ["max_batch", "--retry needs --faults", "steal interval", "age-promotion"] {
+            assert!(msg.contains(needle), "missing {needle:?} in {msg}");
+        }
+    }
+
+    #[test]
+    fn preempt_under_static_scheduler_rejected() {
+        let err = builder()
+            .scheduler(SchedulerMode::Static)
+            .preempt(PreemptPolicy::After(0.5))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("continuous scheduler"), "{err}");
+        // the same policy under the continuous scheduler is fine
+        builder().preempt(PreemptPolicy::After(0.5)).build().unwrap();
+    }
+
+    #[test]
+    fn armed_faults_validate_their_plan_parameters() {
+        let mut faults = FaultSpec::none();
+        faults.enabled = true; // mtbf/horizon still zero
+        let err = builder().faults(faults).build().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("MTBF") && msg.contains("horizon"), "{msg}");
+    }
+
+    #[test]
+    fn zipf_reweights_and_unbalances() {
+        let cfg = builder().zipf(1.2).build().unwrap();
+        assert!(!cfg.workload.balanced_tasks);
+        assert!(cfg.tasks[0].weight > cfg.tasks[1].weight);
+        assert!((cfg.tasks[0].weight - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn builder_draft_exposes_derived_defaults() {
+        let b = builder();
+        let est = b.draft().spec.est_service_seconds(8, 24);
+        assert!(est > 0.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Sim-time event core for the cluster loop.
+//!
+//! `run_cluster` used to interleave its timeline selection with fault
+//! handling and dispatch inside one loop body; this module factors the
+//! timeline itself into an explicit [`EventQueue`] carrying every kind
+//! of fleet-level event — request arrivals, retry wake-ups, the
+//! deterministic fault plan (the PR 9 fault timeline merges into this
+//! queue), and the periodic work-stealing scan.  The cluster loop pops
+//! one event at a time, advances every replica to the event instant
+//! (step boundaries and transfer landings replay *inside*
+//! `Replica::run_until`, on each replica's own clock — they never need
+//! fleet-level arbitration), and reacts.
+//!
+//! Ordering is the exact contract the polling loop implemented, kept
+//! verbatim so existing seeds replay bit-identically:
+//!
+//! * Arrivals pop in FIFO order (the workload is pre-drawn sorted).
+//! * Retry wake-ups pop at the minimum `ready_at`; the scan order over
+//!   the pending set (first minimal element, `swap_remove` backfill)
+//!   matches the historical `Vec` bookkeeping bit for bit.
+//! * Fault events pop in plan order, and are suppressed once nothing is
+//!   left to perturb (no arrivals, no retries, idle fleet).
+//! * Ties resolve arrival ≤ retry ≤ fault ≤ steal.
+//! * The steal tick is only visible while the run is live (work in
+//!   flight, or arrivals/retries outstanding) — otherwise a drained
+//!   fleet would tick forever — and disarmed entirely when
+//!   `ClusterConfig::steal` is `None`, which reduces the queue to the
+//!   exact pre-steal timeline.
+
+use std::collections::VecDeque;
+
+use crate::fault::FaultEvent;
+
+use super::workload::ClusterRequest;
+
+/// One fault-reclaimed (or fleet-down deferred) request waiting to
+/// re-dispatch at `ready_at` under the retry policy's backoff.
+pub(crate) struct RetryEntry {
+    pub ready_at: f64,
+    /// 0 for a deferred fresh arrival (no attempt burned), ≥ 1 for a
+    /// genuine retry of a reclaimed request.
+    pub attempt: u32,
+    pub req: ClusterRequest,
+}
+
+/// One popped fleet-level event, tagged with what to do about it.
+pub(crate) enum Event {
+    /// A fresh request arrival (attempt 0).
+    Arrival(ClusterRequest),
+    /// A retry wake-up or fleet-down deferral re-entering dispatch.
+    Retry(RetryEntry),
+    /// The next entry of the deterministic fault plan.
+    Fault(FaultEvent),
+    /// Periodic work-stealing scan (armed by `ClusterConfig::steal`).
+    StealTick,
+}
+
+/// The fleet's sim-time event queue (see module docs for the ordering
+/// contract).
+pub(crate) struct EventQueue {
+    arrivals: VecDeque<ClusterRequest>,
+    retries: Vec<RetryEntry>,
+    faults: VecDeque<FaultEvent>,
+    next_steal: f64,
+    steal_interval: f64,
+}
+
+impl EventQueue {
+    /// Build the queue over the pre-drawn arrivals and fault plan; a
+    /// `None` steal interval disarms the tick entirely.
+    pub fn new(
+        arrivals: Vec<ClusterRequest>,
+        faults: Vec<FaultEvent>,
+        steal_interval: Option<f64>,
+    ) -> EventQueue {
+        let interval = steal_interval.unwrap_or(f64::INFINITY);
+        EventQueue {
+            arrivals: arrivals.into(),
+            retries: Vec::new(),
+            faults: faults.into(),
+            next_steal: interval,
+            steal_interval: interval,
+        }
+    }
+
+    /// Whether the fault plan was non-empty at construction *or* any
+    /// event remains — callers snapshot this before the first pop.
+    pub fn faults_armed(&self) -> bool {
+        !self.faults.is_empty()
+    }
+
+    /// Schedule a retry wake-up (or fleet-down deferral).
+    pub fn push_retry(&mut self, entry: RetryEntry) {
+        self.retries.push(entry);
+    }
+
+    /// Pop the earliest visible event, or `None` when the timeline is
+    /// exhausted (trailing faults and steal ticks are moot once nothing
+    /// is left to perturb).  `fleet_busy` is the caller's liveness
+    /// snapshot, taken *before* advancing replicas — the same order the
+    /// polling loop evaluated it in.
+    pub fn pop(&mut self, fleet_busy: bool) -> Option<(f64, Event)> {
+        let t_arr = self.arrivals.front().map(|r| r.at);
+        let t_retry = self
+            .retries
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.ready_at.total_cmp(&b.1.ready_at))
+            .map(|(i, e)| (i, e.ready_at));
+        // trailing fault events are moot once nothing is left to perturb
+        let live = fleet_busy || t_arr.is_some() || t_retry.is_some();
+        let t_fault = if live { self.faults.front().map(|e| e.at) } else { None };
+        // earliest event wins; ties resolve arrival ≤ retry ≤ fault ≤ steal
+        let ta = t_arr.unwrap_or(f64::INFINITY);
+        let tr = t_retry.map_or(f64::INFINITY, |(_, t)| t);
+        let tf = t_fault.unwrap_or(f64::INFINITY);
+        let ts = if live { self.next_steal } else { f64::INFINITY };
+        let now = ta.min(tr).min(tf).min(ts);
+        if !now.is_finite() {
+            return None;
+        }
+        let ev = if ta <= tr && ta <= tf && ta <= ts {
+            Event::Arrival(self.arrivals.pop_front().expect("arrival front exists"))
+        } else if tr <= tf && tr <= ts {
+            let (i, _) = t_retry.expect("retry minimum exists");
+            Event::Retry(self.retries.swap_remove(i))
+        } else if tf <= ts {
+            Event::Fault(self.faults.pop_front().expect("fault front exists"))
+        } else {
+            self.next_steal = now + self.steal_interval;
+            Event::StealTick
+        };
+        Some((now, ev))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::FaultKind;
+
+    fn req_at(id: u64, at: f64) -> ClusterRequest {
+        let mut r = ClusterRequest::probe(0);
+        r.id = id;
+        r.at = at;
+        r
+    }
+
+    #[test]
+    fn arrivals_pop_in_order_and_queue_drains() {
+        let mut q =
+            EventQueue::new(vec![req_at(0, 0.0), req_at(1, 1.0), req_at(2, 2.0)], vec![], None);
+        for want in 0..3u64 {
+            match q.pop(false) {
+                Some((t, Event::Arrival(r))) => {
+                    assert_eq!(r.id, want);
+                    assert_eq!(t, want as f64);
+                }
+                _ => panic!("expected arrival {want}"),
+            }
+        }
+        assert!(q.pop(false).is_none());
+    }
+
+    #[test]
+    fn tie_break_is_arrival_then_retry_then_fault_then_steal() {
+        let fault = FaultEvent { at: 1.0, replica: 0, kind: FaultKind::Corrupt };
+        let mut q = EventQueue::new(vec![req_at(0, 1.0)], vec![fault], Some(1.0));
+        q.push_retry(RetryEntry { ready_at: 1.0, attempt: 1, req: req_at(9, 0.0) });
+        assert!(matches!(q.pop(false), Some((_, Event::Arrival(_)))));
+        assert!(matches!(q.pop(false), Some((_, Event::Retry(_)))));
+        assert!(matches!(q.pop(false), Some((_, Event::Fault(_)))));
+        // the fleet is idle and nothing is pending: the steal tick (and
+        // the timeline) vanish rather than ticking forever
+        assert!(q.pop(false).is_none());
+        // a busy fleet keeps the tick alive, one interval at a time
+        match q.pop(true) {
+            Some((t, Event::StealTick)) => assert_eq!(t, 1.0),
+            _ => panic!("expected steal tick"),
+        }
+        match q.pop(true) {
+            Some((t, Event::StealTick)) => assert_eq!(t, 2.0),
+            _ => panic!("expected rescheduled steal tick"),
+        }
+    }
+
+    #[test]
+    fn trailing_faults_are_moot_on_an_idle_fleet() {
+        let fault = FaultEvent { at: 5.0, replica: 0, kind: FaultKind::Crash };
+        let mut q = EventQueue::new(vec![], vec![fault], None);
+        assert!(q.faults_armed());
+        assert!(q.pop(false).is_none(), "nothing left to perturb");
+        assert!(q.pop(true).is_some(), "a busy fleet still takes the fault");
+    }
+
+    #[test]
+    fn retry_scan_matches_historical_swap_remove_order() {
+        // two retries tie on ready_at: the first minimal element pops
+        // first, exactly like the polling loop's min_by + swap_remove
+        let mut q = EventQueue::new(vec![], vec![], None);
+        q.push_retry(RetryEntry { ready_at: 2.0, attempt: 1, req: req_at(0, 0.0) });
+        q.push_retry(RetryEntry { ready_at: 2.0, attempt: 1, req: req_at(1, 0.0) });
+        q.push_retry(RetryEntry { ready_at: 1.0, attempt: 1, req: req_at(2, 0.0) });
+        let ids: Vec<u64> = (0..3)
+            .map(|_| match q.pop(false) {
+                Some((_, Event::Retry(e))) => e.req.id,
+                _ => panic!("expected retry"),
+            })
+            .collect();
+        assert_eq!(ids, vec![2, 0, 1]);
+    }
+}

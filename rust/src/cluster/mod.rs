@@ -1,5 +1,5 @@
 //! Cluster serving simulator: a fleet of replicas behind a pluggable
-//! request dispatcher.
+//! request dispatcher, driven by one sim-time event queue.
 //!
 //! This is the first layer above the single-engine stack.  MELINOE makes
 //! each sequence's routing concentrate on a small, predictable expert set
@@ -21,252 +21,51 @@
 //!   at trace end (see [`crate::coordinator::SchedulerMode`]), and
 //!   prompts prefill in chunks piggybacked on live decode steps
 //!   (`--prefill-chunk`).
-//! * [`balancer`] — RoundRobin / LeastLoaded / ExpertAffinity dispatch
-//!   against *live* slot occupancy and replica [`Health`] (never a Down
-//!   replica, de-weighted Degraded ones).
-//! * [`run_cluster`] — the event loop over arrivals, retry wake-ups and
-//!   the deterministic fault plan (`--faults`): crashes reclaim every
-//!   affected sequence for re-dispatch under the [`RetryPolicy`],
-//!   brownouts migrate live sequences to affinity-priced healthy peers,
-//!   link flaps and checksum corruption exercise the transfer pipeline —
-//!   plus fleet metrics (throughput, hit-rate, queue/TTFT/latency
-//!   percentiles, recovery accounting, PCIe per replica).
+//! * [`balancer`] — RoundRobin / LeastLoaded / ExpertAffinity /
+//!   PriorityAffinity dispatch against *live* slot occupancy and replica
+//!   [`Health`] (never a Down replica, de-weighted Degraded ones).
+//! * `config` — [`ClusterConfig`] plus the validating [`ClusterBuilder`]
+//!   (the one construction path) and the work-stealing knobs
+//!   ([`StealPolicy`]).
+//! * `events` — the fleet's sim-time event queue: arrivals, retry
+//!   wake-ups, the deterministic fault plan, and the periodic steal scan
+//!   pop in one ordered timeline (step boundaries and transfer landings
+//!   replay inside each replica's own clock).
+//! * [`run_cluster`] — pops events one at a time: crashes reclaim every
+//!   affected sequence for re-dispatch under the
+//!   [`crate::fault::RetryPolicy`], brownouts migrate live sequences to
+//!   affinity-priced healthy peers, link flaps and checksum corruption
+//!   exercise the transfer pipeline, steal ticks let idle replicas take
+//!   queued or suspended work from loaded peers (priced warm-cache
+//!   advantage vs queue delay vs KV transfer), and age-based promotion
+//!   (`--age-promote`) bounds low-class starvation — plus fleet metrics
+//!   (throughput, hit-rate, queue/TTFT/latency percentiles, recovery
+//!   accounting, PCIe per replica).
 
 pub mod balancer;
+mod config;
+mod events;
 pub mod replica;
 pub mod workload;
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{HashMap, HashSet};
 
 use anyhow::{ensure, Result};
 
-use crate::clock::GpuSpec;
-use crate::coordinator::workload::Arrival;
-use crate::coordinator::{PreemptPolicy, Priority, SchedulerMode};
-use crate::fault::{FaultEvent, FaultKind, FaultPlan, FaultSpec, Health, PhiDetector, RetryPolicy};
+use crate::coordinator::{Outcome, Priority, SchedulerMode};
+use crate::fault::{FaultKind, FaultPlan, Health, PhiDetector};
 use crate::metrics::{fmt2, Percentiles, Table};
-use crate::quant::QuantMode;
 use crate::trace::{Recorder, Trace, TraceEvent};
 
-use crate::coordinator::Outcome;
 use balancer::{Balancer, ReplicaView};
-use replica::{Completion, Replica, ReplicaSpec};
-use workload::{ClusterRequest, OutputLen, PriorityMix, StreamMix, TaskProfile, WorkloadSpec};
+use events::{Event, EventQueue, RetryEntry};
+use replica::{Completion, Replica};
+use workload::ClusterRequest;
+
+pub use config::{ClusterBuilder, ClusterConfig, StealPolicy};
 
 /// The three stock balancers, in comparison-table order.
 pub const BALANCERS: &[&str] = &["round-robin", "least-loaded", "expert-affinity"];
-
-/// Full description of one cluster experiment.
-#[derive(Debug, Clone)]
-pub struct ClusterConfig {
-    pub replicas: usize,
-    /// Decode slots per replica.
-    pub max_batch: usize,
-    /// Admission bound: no replica's queue may exceed this depth.  When
-    /// the balancer's choice is full the dispatcher sheds to the replica
-    /// with the fewest queued requests; when *every* replica is full, the
-    /// fleet advances step by step until a slot drains (lossless
-    /// back-pressure).
-    pub max_queue: usize,
-    /// How replicas fill decode slots: step-level continuous batching or
-    /// legacy run-to-completion batches.
-    pub scheduler: SchedulerMode,
-    /// Prompt tokens a prefilling sequence consumes per step on every
-    /// replica (`--prefill-chunk`; 1 = token-at-a-time prefill).
-    pub prefill_chunk: usize,
-    /// When a waiting higher-priority request may preempt an in-flight
-    /// sequence on a replica (`--preempt`; continuous scheduler only).
-    pub preempt: PreemptPolicy,
-    /// SLO-aware admission control on every replica (`--admission`):
-    /// deadline-tagged requests whose compute-optimistic TTFT estimate
-    /// already misses are rejected at admission instead of decoding only
-    /// to miss at p99.
-    pub admission: bool,
-    /// Record sim-time structured traces on every replica plus the
-    /// dispatcher lane (`--trace`); `run_cluster` then runs the
-    /// cross-layer conservation audits per replica and returns the
-    /// merged fleet timeline in [`ClusterReport::trace`].
-    pub trace: bool,
-    /// Deterministic fault plan parameters (`--faults`, `--mtbf`): drawn
-    /// from a dedicated salt of the workload seed so fault-free runs are
-    /// byte-identical whether or not this field is armed.
-    pub faults: FaultSpec,
-    /// Retry policy for fault-reclaimed requests (`--retry`): per-request
-    /// budget with exponential sim-time backoff; an exhausted budget is
-    /// the one terminal [`Outcome::Failed`].
-    pub retry: RetryPolicy,
-    pub spec: ReplicaSpec,
-    pub workload: WorkloadSpec,
-    pub tasks: Vec<TaskProfile>,
-}
-
-impl ClusterConfig {
-    /// Heterogeneous synthetic scenario: `n_tasks` fine-tuned traffic
-    /// streams with tiled hot expert sets over OLMoE at paper scale, and
-    /// a Poisson arrival rate ~1.5× the fleet's compute-only capacity so
-    /// the comparison runs saturated (throughput reflects efficiency,
-    /// not offered load).
-    pub fn synthetic(
-        replicas: usize,
-        n_requests: usize,
-        n_tasks: usize,
-        gpu: GpuSpec,
-        seed: u64,
-    ) -> ClusterConfig {
-        let spec = ReplicaSpec::olmoe(gpu);
-        let tasks = TaskProfile::synthetic(
-            n_tasks.max(1),
-            spec.n_layers,
-            spec.n_experts,
-            spec.capacity,
-            0.92,
-        );
-        let (prompt_tokens, max_output) = (8, 24);
-        let est = spec.est_service_seconds(prompt_tokens, max_output).max(1e-6);
-        let rate = 1.5 * replicas.max(1) as f64 / est;
-        ClusterConfig {
-            replicas: replicas.max(1),
-            max_batch: 4,
-            max_queue: n_requests.max(8),
-            scheduler: SchedulerMode::Continuous,
-            prefill_chunk: 1,
-            preempt: PreemptPolicy::Off,
-            admission: false,
-            trace: false,
-            faults: FaultSpec::none(),
-            retry: RetryPolicy::off(),
-            spec,
-            workload: WorkloadSpec {
-                n_requests,
-                arrival: Arrival::Poisson(rate),
-                prompt_tokens,
-                output: OutputLen::Fixed(max_output),
-                balanced_tasks: true,
-                priorities: PriorityMix::none(),
-                stream: StreamMix::none(),
-                seed,
-            },
-            tasks,
-        }
-    }
-
-    pub fn with_arrival(mut self, arrival: Arrival) -> ClusterConfig {
-        self.workload.arrival = arrival;
-        self
-    }
-
-    /// Decode slots per replica (`--batch`).
-    pub fn with_max_batch(mut self, slots: usize) -> ClusterConfig {
-        self.max_batch = slots.max(1);
-        self
-    }
-
-    pub fn with_max_queue(mut self, bound: usize) -> ClusterConfig {
-        self.max_queue = bound.max(1);
-        self
-    }
-
-    pub fn with_scheduler(mut self, scheduler: SchedulerMode) -> ClusterConfig {
-        self.scheduler = scheduler;
-        self
-    }
-
-    pub fn with_prefill_chunk(mut self, chunk: usize) -> ClusterConfig {
-        self.prefill_chunk = chunk.max(1);
-        self
-    }
-
-    /// Preemption policy applied on every replica (`--preempt`).
-    pub fn with_preempt(mut self, preempt: PreemptPolicy) -> ClusterConfig {
-        self.preempt = preempt;
-        self
-    }
-
-    /// Record structured traces fleet-wide (`--trace`; see `trace`).
-    pub fn with_trace(mut self, on: bool) -> ClusterConfig {
-        self.trace = on;
-        self
-    }
-
-    /// Per-request priority distribution of the generated workload.
-    pub fn with_priority_mix(mut self, mix: PriorityMix) -> ClusterConfig {
-        self.workload.priorities = mix;
-        self
-    }
-
-    /// Per-request streaming-client behaviour of the generated workload:
-    /// deadlines, cancel-after-N hang-ups and queue-time disconnects
-    /// (`--deadline-mix` / `--cancel-after` / `--disconnect-rate`).
-    pub fn with_stream_mix(mut self, mix: StreamMix) -> ClusterConfig {
-        self.workload.stream = mix;
-        self
-    }
-
-    /// SLO-aware admission control on every replica (`--admission`).
-    pub fn with_admission(mut self, on: bool) -> ClusterConfig {
-        self.admission = on;
-        self
-    }
-
-    /// Fault-injection plan parameters (`--faults`, `--mtbf`; see
-    /// [`FaultSpec`]).  [`FaultSpec::none`] keeps the run byte-identical
-    /// to a build without the fault machinery.
-    pub fn with_faults(mut self, faults: FaultSpec) -> ClusterConfig {
-        self.faults = faults;
-        self
-    }
-
-    /// Retry policy for fault-reclaimed requests (`--retry`).
-    pub fn with_retry(mut self, retry: RetryPolicy) -> ClusterConfig {
-        self.retry = retry;
-        self
-    }
-
-    /// Layer-ahead transfer pipeline depth on every replica
-    /// (`--lookahead`; 0 = admit-time prefetch only).
-    pub fn with_lookahead(mut self, depth: usize) -> ClusterConfig {
-        self.spec = self.spec.with_lookahead(depth);
-        self
-    }
-
-    /// Weight precision tier every replica stores and executes resident
-    /// experts at (`--quant`).  Preserves the spec's VRAM *byte* budget:
-    /// the per-layer slot count is rescaled by the tier cost ratio, so a
-    /// lower-bit tier holds proportionally more experts in the same
-    /// bytes (and the current tier is a no-op — cost units are exact
-    /// binary fractions).
-    pub fn with_quant(mut self, quant: QuantMode) -> ClusterConfig {
-        let budget = self.spec.capacity as f64 * self.spec.quant.cost_units();
-        self.spec.capacity =
-            ((budget / quant.cost_units()) as usize).clamp(1, self.spec.n_experts);
-        self.spec.quant = quant;
-        self
-    }
-
-    /// Big-little fallback on every replica (`--little-tier`,
-    /// `--fallback-threshold`): keep `little`-tier copies of the hottest
-    /// experts resident and, on a demand miss, execute the little copy
-    /// at zero stall when the expected wait exceeds `threshold` seconds.
-    pub fn with_fallback(mut self, little: Option<QuantMode>, threshold: f64) -> ClusterConfig {
-        self.spec = self.spec.with_fallback(little, threshold);
-        self
-    }
-
-    pub fn with_output(mut self, output: OutputLen) -> ClusterConfig {
-        self.workload.output = output;
-        self
-    }
-
-    fn requests(&self) -> Vec<ClusterRequest> {
-        workload::generate(
-            &self.workload,
-            &self.tasks,
-            self.spec.n_layers,
-            self.spec.n_experts,
-            self.spec.top_k,
-        )
-    }
-}
 
 /// Per-replica slice of a cluster run.
 #[derive(Debug, Clone)]
@@ -284,6 +83,9 @@ pub struct ReplicaSummary {
     pub peak_queue_depth: usize,
     /// Sequences suspended out of a slot by a higher-priority waiter.
     pub preemptions: u64,
+    /// Queued or suspended requests promoted to a higher class by aging
+    /// on this replica (`--age-promote`).
+    pub promotions: u64,
     /// Fraction of this replica's routed assignments the big-little
     /// fallback served from a degraded little copy.
     pub degraded_token_frac: f64,
@@ -330,6 +132,14 @@ pub struct ClusterReport {
     pub retries: u64,
     /// Live-sequence migrations off browned-out replicas.
     pub migrations: u64,
+    /// Work-steal transfers between replicas (`--steal`): queued
+    /// requests plus live-stolen suspended sequences.
+    pub steals: u64,
+    /// The subset of `steals` that migrated a suspended in-flight
+    /// sequence (charged its KV transfer over PCIe).
+    pub live_steals: u64,
+    /// Age-based priority promotions across the fleet (`--age-promote`).
+    pub promotions: u64,
     /// Distinct requests ever reclaimed by an injected fault.
     pub injected: usize,
     /// Reclaimed requests that still reached a served terminal outcome
@@ -379,7 +189,7 @@ pub struct ClusterReport {
     /// metric).
     pub degraded_token_frac: f64,
     /// Fleet-total H2D bytes split by precision tier
-    /// (`[fp16, int4, int3]` — [`QuantMode::idx`] order).
+    /// (`[fp16, int4, int3]` — [`crate::quant::QuantMode::idx`] order).
     pub h2d_bytes_by_tier: [f64; 3],
     /// Fleet-total D2H (eviction write-back) bytes split by tier.
     pub d2h_bytes_by_tier: [f64; 3],
@@ -393,26 +203,17 @@ pub struct ClusterReport {
     pub trace: Option<Trace>,
 }
 
-/// One fault-reclaimed (or fleet-down deferred) request waiting to
-/// re-dispatch at `ready_at` under the retry policy's backoff.
-struct RetryEntry {
-    ready_at: f64,
-    /// 0 for a deferred fresh arrival (no attempt burned), ≥ 1 for a
-    /// genuine retry of a reclaimed request.
-    attempt: u32,
-    req: ClusterRequest,
-}
-
-/// Run one cluster simulation, event by event: bring the fleet's clocks
-/// up to each arrival / retry wake-up / fault instant (replicas admit
-/// and step continuously along the way), dispatch through `bal` against
-/// live slot occupancy and health, and drain.  No lockstep epochs: a
-/// freed slot on one replica re-admits from its queue immediately,
-/// regardless of what the rest of the fleet is doing.  With a fault plan
-/// armed, crashes reclaim every affected sequence for re-dispatch under
-/// the retry budget, brownouts migrate live sequences to affinity-priced
-/// healthy peers, and the run bails if any request resolves with more
-/// (or fewer) than one terminal outcome.
+/// Run one cluster simulation off the sim-time event queue: pop the
+/// earliest arrival / retry wake-up / fault / steal-tick event, bring
+/// every replica's clock up to the event instant (replicas admit and
+/// step continuously along the way), and react — dispatch through `bal`
+/// against live slot occupancy and health, reclaim and retry around
+/// crashes, migrate live sequences off brownouts, and on steal ticks
+/// let idle replicas take affinity-priced work from loaded peers.  No
+/// lockstep epochs: a freed slot on one replica re-admits from its
+/// queue immediately, regardless of what the rest of the fleet is
+/// doing.  The run bails if any request resolves with more (or fewer)
+/// than one terminal outcome.
 pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<ClusterReport> {
     let requests = cfg.requests();
     let n_expected = requests.len();
@@ -422,6 +223,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
                 .with_prefill_chunk(cfg.prefill_chunk)
                 .with_preempt(cfg.preempt)
                 .with_admission(cfg.admission)
+                .with_age_promote(cfg.age_promote)
                 .with_trace(cfg.trace)
         })
         .collect();
@@ -434,44 +236,26 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
     let max_queue = cfg.max_queue.max(1);
     let n_replicas = reps.len();
     let plan = FaultPlan::generate(&cfg.faults, n_replicas, cfg.workload.fault_seed());
-    let faults_on = !plan.is_empty();
     // phi-style missed-heartbeat detector: every non-Down replica beats
     // at every timeline event, so a silent replica's phi grows until the
     // dispatcher stops believing in it — the dispatcher's health belief,
     // layered over the coordinator's ground truth
     let mut detector = PhiDetector::new(n_replicas, (cfg.faults.mtbf / 8.0).max(1e-9), 2.0);
-    let mut arrivals: VecDeque<ClusterRequest> = requests.into();
-    let mut fault_events: VecDeque<FaultEvent> = plan.events.into();
-    let mut pending: Vec<RetryEntry> = Vec::new();
+    let mut queue =
+        EventQueue::new(requests, plan.events, cfg.steal.as_ref().map(|s| s.interval));
+    let faults_on = queue.faults_armed();
     let mut attempts: HashMap<u64, u32> = HashMap::new();
     let mut first_reclaim: HashMap<u64, f64> = HashMap::new();
     let mut injected_ids: HashSet<u64> = HashSet::new();
     let mut failed_terminals: Vec<Completion> = Vec::new();
     let (mut retries_total, mut migrations_total) = (0u64, 0u64);
+    let (mut steals_total, mut live_steals_total) = (0u64, 0u64);
     loop {
-        let t_arr = arrivals.front().map(|r| r.at);
-        let t_retry = pending
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.ready_at.total_cmp(&b.1.ready_at))
-            .map(|(i, e)| (i, e.ready_at));
-        // trailing fault events are moot once nothing is left to perturb
         let fleet_busy = reps.iter().any(|r| r.has_work());
-        let t_fault = if t_arr.is_none() && t_retry.is_none() && !fleet_busy {
-            None
-        } else {
-            fault_events.front().map(|e| e.at)
-        };
-        // earliest event wins; ties resolve arrival ≤ retry ≤ fault
-        let ta = t_arr.unwrap_or(f64::INFINITY);
-        let tr = t_retry.map_or(f64::INFINITY, |(_, t)| t);
-        let tf = t_fault.unwrap_or(f64::INFINITY);
-        let now = ta.min(tr).min(tf);
-        if !now.is_finite() {
-            break;
-        }
-        // advance every replica to the event instant so dispatch sees
-        // live slot occupancy, not an epoch-boundary snapshot
+        let Some((now, ev)) = queue.pop(fleet_busy) else { break };
+        // advance every replica to the event instant so dispatch (and
+        // the steal scan) sees live slot occupancy, not an
+        // epoch-boundary snapshot
         for r in &mut reps {
             r.run_until(now, cfg.max_batch);
         }
@@ -498,90 +282,98 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
                 }
             }
         }
-        let (req, attempt) = if ta <= tr && ta <= tf {
-            (arrivals.pop_front().expect("arrival front exists"), 0)
-        } else if tr <= tf {
-            let (i, _) = t_retry.expect("retry minimum exists");
-            let e = pending.swap_remove(i);
-            (e.req, e.attempt)
-        } else {
-            let f = fault_events.pop_front().expect("fault front exists");
-            let i = f.replica.min(n_replicas - 1);
-            match f.kind {
-                FaultKind::Crash => {
-                    // lost progress: reclaimed sequences re-decode from
-                    // scratch elsewhere (pre-drawn routing keeps their
-                    // tokens bit-identical), under the retry budget
-                    let back_up = now + cfg.faults.recovery.max(1e-9);
-                    for req in reps[i].crash(back_up) {
-                        injected_ids.insert(req.id);
-                        first_reclaim.entry(req.id).or_insert(now);
-                        let a = attempts.entry(req.id).or_insert(0);
-                        if *a >= cfg.retry.max_retries {
-                            // budget exhausted: the one terminal outcome
-                            drec.emit(now, TraceEvent::RequestFailed { request: req.id });
-                            failed_terminals.push(Completion {
-                                request_id: req.id,
-                                task: req.task,
-                                priority: req.priority,
-                                arrival: req.at,
-                                started: now,
-                                first_token: now,
-                                finished: now,
-                                output_tokens: 0,
-                                preempted_wait: 0.0,
-                                outcome: Outcome::Failed,
-                                deadline: req.deadline,
-                            });
-                        } else {
-                            *a += 1;
-                            let ready_at = now + cfg.retry.delay(*a - 1);
-                            pending.push(RetryEntry { ready_at, attempt: *a, req });
-                        }
-                    }
-                }
-                FaultKind::Brownout { factor, duration } => {
-                    // live migration: suspended progress moves whole to
-                    // an affinity-priced healthy peer (or rides out the
-                    // brownout in place when there is none)
-                    reps[i].set_brownout(factor, now + duration);
-                    for m in reps[i].extract_live() {
-                        let mut best: Option<(usize, f64)> = None;
-                        for (j, r) in reps.iter().enumerate() {
-                            if j == i || !r.health().dispatchable() {
-                                continue;
-                            }
-                            let load = (r.queue_depth() + r.slots_in_use()) as f64;
-                            let score = r.affinity_overlap(&m.req.plan) - 0.1 * load;
-                            if best.map_or(true, |(_, s)| score > s) {
-                                best = Some((j, score));
-                            }
-                        }
-                        match best {
-                            Some((j, _)) => {
-                                migrations_total += 1;
-                                drec.emit(
-                                    now,
-                                    TraceEvent::Migrate {
-                                        request: m.req.id,
-                                        from: i as u32,
-                                        to: j as u32,
-                                    },
-                                );
-                                reps[j].adopt(m, now);
-                            }
-                            None => reps[i].adopt(m, now),
-                        }
-                    }
-                }
-                FaultKind::LinkFlap { factor, duration } => {
-                    reps[i].apply_link_flap(factor, now + duration);
-                }
-                FaultKind::Corrupt => {
-                    let _ = reps[i].corrupt_transfer();
-                }
+        let (req, attempt) = match ev {
+            Event::Arrival(req) => (req, 0),
+            Event::Retry(e) => (e.req, e.attempt),
+            Event::StealTick => {
+                steal_pass(
+                    cfg,
+                    &mut reps,
+                    &mut drec,
+                    now,
+                    &mut steals_total,
+                    &mut live_steals_total,
+                );
+                continue;
             }
-            continue;
+            Event::Fault(f) => {
+                let i = f.replica.min(n_replicas - 1);
+                match f.kind {
+                    FaultKind::Crash => {
+                        // lost progress: reclaimed sequences re-decode from
+                        // scratch elsewhere (pre-drawn routing keeps their
+                        // tokens bit-identical), under the retry budget
+                        let back_up = now + cfg.faults.recovery.max(1e-9);
+                        for req in reps[i].crash(back_up) {
+                            injected_ids.insert(req.id);
+                            first_reclaim.entry(req.id).or_insert(now);
+                            let a = attempts.entry(req.id).or_insert(0);
+                            if *a >= cfg.retry.max_retries {
+                                // budget exhausted: the one terminal outcome
+                                drec.emit(now, TraceEvent::RequestFailed { request: req.id });
+                                failed_terminals.push(Completion {
+                                    request_id: req.id,
+                                    task: req.task,
+                                    priority: req.priority,
+                                    arrival: req.at,
+                                    started: now,
+                                    first_token: now,
+                                    finished: now,
+                                    output_tokens: 0,
+                                    preempted_wait: 0.0,
+                                    outcome: Outcome::Failed,
+                                    deadline: req.deadline,
+                                });
+                            } else {
+                                *a += 1;
+                                let ready_at = now + cfg.retry.delay(*a - 1);
+                                queue.push_retry(RetryEntry { ready_at, attempt: *a, req });
+                            }
+                        }
+                    }
+                    FaultKind::Brownout { factor, duration } => {
+                        // live migration: suspended progress moves whole to
+                        // an affinity-priced healthy peer (or rides out the
+                        // brownout in place when there is none)
+                        reps[i].set_brownout(factor, now + duration);
+                        for m in reps[i].extract_live() {
+                            let mut best: Option<(usize, f64)> = None;
+                            for (j, r) in reps.iter().enumerate() {
+                                if j == i || !r.health().dispatchable() {
+                                    continue;
+                                }
+                                let load = (r.queue_depth() + r.slots_in_use()) as f64;
+                                let score = r.affinity_overlap(&m.req.plan) - 0.1 * load;
+                                if best.map_or(true, |(_, s)| score > s) {
+                                    best = Some((j, score));
+                                }
+                            }
+                            match best {
+                                Some((j, _)) => {
+                                    migrations_total += 1;
+                                    drec.emit(
+                                        now,
+                                        TraceEvent::Migrate {
+                                            request: m.req.id,
+                                            from: i as u32,
+                                            to: j as u32,
+                                        },
+                                    );
+                                    reps[j].adopt(m, now);
+                                }
+                                None => reps[i].adopt(m, now),
+                            }
+                        }
+                    }
+                    FaultKind::LinkFlap { factor, duration } => {
+                        reps[i].apply_link_flap(factor, now + duration);
+                    }
+                    FaultKind::Corrupt => {
+                        let _ = reps[i].corrupt_transfer();
+                    }
+                }
+                continue;
+            }
         };
         if !reps.iter().any(|r| r.health().dispatchable()) {
             // whole fleet down: defer to the earliest recovery without
@@ -592,7 +384,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
                 .map(|r| r.recover_at())
                 .fold(f64::INFINITY, f64::min);
             ensure!(ready_at.is_finite(), "no replica is dispatchable or recovering");
-            pending.push(RetryEntry { ready_at: ready_at.max(now), attempt, req });
+            queue.push_retry(RetryEntry { ready_at: ready_at.max(now), attempt, req });
             continue;
         }
         // lossless back-pressure: when every dispatchable queue is at the
@@ -611,25 +403,24 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
                 .expect("full queues imply outstanding dispatchable work");
             reps[i].run_one_step(cfg.max_batch);
         }
-        let views: Vec<ReplicaView> = reps
+        let wants_overlap = bal.wants_overlap();
+        let mut views: Vec<ReplicaView> = reps
             .iter()
             .enumerate()
             .map(|(i, r)| {
                 // layer the detector's belief over ground truth: a
                 // replica that stopped heartbeating is not a dispatch
                 // target even before its fault event is processed
-                let mut health = r.health();
-                if faults_on && health != Health::Down && detector.suspect(i, now) {
-                    health = Health::Down;
+                let mut v = r.view();
+                if faults_on && v.health != Health::Down && detector.suspect(i, now) {
+                    v.health = Health::Down;
                 }
-                ReplicaView {
-                    id: r.id,
-                    queue_depth: r.queue_depth(),
-                    slots_in_use: r.slots_in_use(),
-                    busy_until: r.busy_until(),
-                    overlap: r.affinity_overlap(&req.plan),
-                    health,
+                // overlap is the one O(plan) field: fill it only for
+                // balancers that price affinity at pick time
+                if wants_overlap {
+                    v.overlap = r.affinity_overlap(&req.plan);
                 }
+                v
             })
             .collect();
         let mut choice = bal.pick(&req, &views).min(n_replicas - 1);
@@ -662,6 +453,12 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
             }
         }
         if drec.enabled() {
+            // affinity-free balancers never needed the overlap to pick;
+            // fill the chosen view lazily so the recorded dispatch score
+            // stays bit-identical to the eager assembly
+            if !wants_overlap {
+                views[choice].overlap = reps[choice].affinity_overlap(&req.plan);
+            }
             drec.emit(
                 now,
                 TraceEvent::Dispatch {
@@ -673,6 +470,153 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         }
         reps[choice].enqueue(req);
     }
+    let outcome = FleetOutcome {
+        n_expected,
+        failed_terminals,
+        retries: retries_total,
+        migrations: migrations_total,
+        steals: steals_total,
+        live_steals: live_steals_total,
+        injected_ids,
+        first_reclaim,
+        faults_on,
+    };
+    finalize(cfg, bal.name().to_string(), reps, drec, outcome)
+}
+
+/// One fleet-wide steal scan (`--steal`): every idle dispatchable
+/// replica prices the best queued candidate (back of each loaded peer's
+/// lowest-priority queue — tail steals never reorder a class's FIFO)
+/// and, with `live` on, the best suspended sequence (lowest class,
+/// least sunk wait), and takes the single highest-gain one.  Gain is
+/// the brownout-migration score difference — `(thief overlap − c·thief
+/// load) − (victim overlap − c·(victim load − 1))` — with a live steal
+/// additionally charged its KV/plan transfer over PCIe, normalized by
+/// the request's estimated service time.  Thieves scan in id order,
+/// one steal per thief per tick.
+fn steal_pass(
+    cfg: &ClusterConfig,
+    reps: &mut [Replica],
+    drec: &mut Recorder,
+    now: f64,
+    steals: &mut u64,
+    live_steals: &mut u64,
+) {
+    let Some(policy) = &cfg.steal else { return };
+    for thief in 0..reps.len() {
+        if reps[thief].has_work() || !reps[thief].health().dispatchable() {
+            continue;
+        }
+        let thief_load = (reps[thief].queue_depth() + reps[thief].slots_in_use()) as f64;
+        // (victim, live?, gain) of the best-priced candidate fleet-wide
+        let mut best: Option<(usize, bool, f64)> = None;
+        for victim in 0..reps.len() {
+            if victim == thief || !reps[victim].health().dispatchable() {
+                continue;
+            }
+            let victim_load =
+                (reps[victim].queue_depth() + reps[victim].slots_in_use()) as f64;
+            if let Some(req) = reps[victim].steal_candidate_queued() {
+                let gain = (reps[thief].affinity_overlap(&req.plan)
+                    - policy.load_coeff * thief_load)
+                    - (reps[victim].affinity_overlap(&req.plan)
+                        - policy.load_coeff * (victim_load - 1.0));
+                if gain > policy.threshold && best.map_or(true, |(_, _, g)| gain > g) {
+                    best = Some((victim, false, gain));
+                }
+            }
+            if policy.live {
+                if let Some((req, step)) = reps[victim].steal_candidate_live() {
+                    let kv = kv_transfer_seconds(cfg, req, step);
+                    let est = cfg
+                        .spec
+                        .est_service_seconds(req.prompt_tokens, req.max_output)
+                        .max(1e-9);
+                    let gain = (reps[thief].affinity_overlap(&req.plan)
+                        - policy.load_coeff * thief_load)
+                        - (reps[victim].affinity_overlap(&req.plan)
+                            - policy.load_coeff * (victim_load - 1.0))
+                        - kv / est;
+                    if gain > policy.threshold && best.map_or(true, |(_, _, g)| gain > g) {
+                        best = Some((victim, true, gain));
+                    }
+                }
+            }
+        }
+        let Some((victim, live, _)) = best else { continue };
+        if live {
+            let Some(m) = reps[victim].take_steal_suspended() else { continue };
+            let kv = kv_transfer_seconds(cfg, &m.req, m.step);
+            *steals += 1;
+            *live_steals += 1;
+            drec.emit(
+                now,
+                TraceEvent::Steal {
+                    request: m.req.id,
+                    from: victim as u32,
+                    to: thief as u32,
+                    live: true,
+                },
+            );
+            // the adopter cannot resume before the KV transfer lands
+            reps[thief].adopt(m, now + kv);
+        } else {
+            let Some(req) = reps[victim].take_steal_queued() else { continue };
+            *steals += 1;
+            drec.emit(
+                now,
+                TraceEvent::Steal {
+                    request: req.id,
+                    from: victim as u32,
+                    to: thief as u32,
+                    live: false,
+                },
+            );
+            // an idle thief's clock may lag the fleet: the stolen
+            // request changed hands at fleet time `now`, so it must not
+            // serve in the thief's past (mirrors the retry lag rule)
+            let lag = now - reps[thief].clock.now();
+            if lag > 0.0 {
+                reps[thief].clock.advance(lag);
+            }
+            reps[thief].enqueue(req);
+        }
+    }
+}
+
+/// Sim-seconds to move a suspended sequence's KV cache (fp16 K and V
+/// per token per layer) plus its plan over PCIe — the live steal's
+/// migration charge.
+fn kv_transfer_seconds(cfg: &ClusterConfig, req: &ClusterRequest, step: usize) -> f64 {
+    let tokens = (req.prompt_tokens + step) as f64;
+    let kv_bytes = 2.0 * 2.0 * cfg.spec.dims.d_model as f64 * cfg.spec.n_layers as f64 * tokens;
+    cfg.spec.gpu.pcie_lat + kv_bytes / cfg.spec.gpu.pcie_bw
+}
+
+/// Everything the cluster loop accumulated outside the replicas,
+/// handed to [`finalize`] — shared by the event-driven loop and the
+/// frozen polling oracle so both aggregate identically.
+struct FleetOutcome {
+    n_expected: usize,
+    failed_terminals: Vec<Completion>,
+    retries: u64,
+    migrations: u64,
+    steals: u64,
+    live_steals: u64,
+    injected_ids: HashSet<u64>,
+    first_reclaim: HashMap<u64, f64>,
+    faults_on: bool,
+}
+
+/// Drain the fleet, run the conservation audits, and aggregate the
+/// [`ClusterReport`].
+fn finalize(
+    cfg: &ClusterConfig,
+    balancer: String,
+    mut reps: Vec<Replica>,
+    mut drec: Recorder,
+    out: FleetOutcome,
+) -> Result<ClusterReport> {
     for r in &mut reps {
         r.run_until(f64::INFINITY, cfg.max_batch);
     }
@@ -689,8 +633,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         t.audit_pins(r.cache.layers[0].pinned_owners())?;
         // big residents plus little-tier copies: LittleInstall/LittleEvict
         // events balance against the same ledger as CacheInsert/CacheEvict
-        let resident: Vec<usize> =
-            r.cache.layers.iter().map(|l| l.occupancy_len()).collect();
+        let resident: Vec<usize> = r.cache.layers.iter().map(|l| l.occupancy_len()).collect();
         t.audit_occupancy(&resident)?;
         match &mut trace {
             Some(all) => all.merge(t),
@@ -711,7 +654,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
     let completions: Vec<&Completion> = reps
         .iter()
         .flat_map(|r| r.completions.iter())
-        .chain(failed_terminals.iter())
+        .chain(out.failed_terminals.iter())
         .collect();
     let output_tokens: usize = completions.iter().map(|c| c.output_tokens).sum();
     let completed_set: Vec<&Completion> =
@@ -722,12 +665,12 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
     // recovery conservation: every fault-reclaimed request either reached
     // a served terminal or exhausted its retry budget — and nothing
     // resolved twice or leaked
-    let injected = injected_ids.len();
+    let injected = out.injected_ids.len();
     let recovered = completions
         .iter()
-        .filter(|c| injected_ids.contains(&c.request_id) && c.outcome != Outcome::Failed)
+        .filter(|c| out.injected_ids.contains(&c.request_id) && c.outcome != Outcome::Failed)
         .count();
-    if faults_on {
+    if out.faults_on {
         let mut seen: HashSet<u64> = HashSet::with_capacity(completions.len());
         for c in &completions {
             ensure!(
@@ -737,10 +680,10 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
             );
         }
         ensure!(
-            completions.len() == n_expected,
+            completions.len() == out.n_expected,
             "recovery leaked requests: {} terminals for {} arrivals",
             completions.len(),
-            n_expected
+            out.n_expected
         );
         ensure!(
             injected == recovered + failed,
@@ -748,13 +691,15 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
              + {failed} failed"
         );
     }
+    let promotions: u64 = reps.iter().map(|r| r.promotions).sum();
     if let Some(tr) = &trace {
         tr.audit_recovery(injected as u64, recovered as u64, failed as u64)?;
+        tr.audit_steal_promote(out.steals, promotions)?;
     }
     let recovery_waits: Vec<f64> = completions
         .iter()
         .filter(|c| c.outcome != Outcome::Failed)
-        .filter_map(|c| first_reclaim.get(&c.request_id).map(|t0| (c.finished - t0).max(0.0)))
+        .filter_map(|c| out.first_reclaim.get(&c.request_id).map(|t0| (c.finished - t0).max(0.0)))
         .collect();
     let mut outcomes: Vec<(u64, Outcome, usize)> =
         completions.iter().map(|c| (c.request_id, c.outcome, c.output_tokens)).collect();
@@ -803,6 +748,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
                 busy_seconds: r.busy_seconds,
                 peak_queue_depth: r.peak_queue_depth,
                 preemptions: r.preemptions,
+                promotions: r.promotions,
                 degraded_token_frac: r.degraded_token_frac(),
             }
         })
@@ -829,7 +775,7 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         })
         .collect();
     Ok(ClusterReport {
-        balancer: bal.name().to_string(),
+        balancer,
         scheduler: cfg.scheduler,
         prefill_chunk: cfg.prefill_chunk.max(1),
         lookahead: cfg.spec.lookahead,
@@ -839,8 +785,11 @@ pub fn run_cluster(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<Cluste
         cancelled,
         rejected,
         failed,
-        retries: retries_total,
-        migrations: migrations_total,
+        retries: out.retries,
+        migrations: out.migrations,
+        steals: out.steals,
+        live_steals: out.live_steals,
+        promotions,
         injected,
         recovered,
         recovery_wait: Percentiles::of(&recovery_waits),
@@ -909,9 +858,267 @@ pub fn comparison_table(reports: &[ClusterReport]) -> Table {
     t
 }
 
+/// The pre-event-queue per-step polling loop, frozen verbatim as the
+/// determinism oracle: [`run_cluster`]'s event core must reproduce this
+/// loop's report bit for bit under the same seeds (with steal and aging
+/// off — this loop predates both knobs and ignores them).
+#[cfg(test)]
+fn run_cluster_polling(cfg: &ClusterConfig, bal: &mut dyn Balancer) -> Result<ClusterReport> {
+    use std::collections::VecDeque;
+
+    let requests = cfg.requests();
+    let n_expected = requests.len();
+    let mut reps: Vec<Replica> = (0..cfg.replicas.max(1))
+        .map(|i| {
+            Replica::new(i, cfg.spec.clone(), cfg.scheduler)
+                .with_prefill_chunk(cfg.prefill_chunk)
+                .with_preempt(cfg.preempt)
+                .with_admission(cfg.admission)
+                .with_trace(cfg.trace)
+        })
+        .collect();
+    let mut drec = if cfg.trace {
+        Recorder::on(cfg.replicas.max(1) as u32, "dispatcher")
+    } else {
+        Recorder::off()
+    };
+    let max_queue = cfg.max_queue.max(1);
+    let n_replicas = reps.len();
+    let plan = FaultPlan::generate(&cfg.faults, n_replicas, cfg.workload.fault_seed());
+    let faults_on = !plan.is_empty();
+    let mut detector = PhiDetector::new(n_replicas, (cfg.faults.mtbf / 8.0).max(1e-9), 2.0);
+    let mut arrivals: VecDeque<ClusterRequest> = requests.into();
+    let mut fault_events: VecDeque<_> = plan.events.into();
+    let mut pending: Vec<RetryEntry> = Vec::new();
+    let mut attempts: HashMap<u64, u32> = HashMap::new();
+    let mut first_reclaim: HashMap<u64, f64> = HashMap::new();
+    let mut injected_ids: HashSet<u64> = HashSet::new();
+    let mut failed_terminals: Vec<Completion> = Vec::new();
+    let (mut retries_total, mut migrations_total) = (0u64, 0u64);
+    loop {
+        let t_arr = arrivals.front().map(|r| r.at);
+        let t_retry = pending
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.ready_at.total_cmp(&b.1.ready_at))
+            .map(|(i, e)| (i, e.ready_at));
+        let fleet_busy = reps.iter().any(|r| r.has_work());
+        let t_fault = if t_arr.is_none() && t_retry.is_none() && !fleet_busy {
+            None
+        } else {
+            fault_events.front().map(|e| e.at)
+        };
+        let ta = t_arr.unwrap_or(f64::INFINITY);
+        let tr = t_retry.map_or(f64::INFINITY, |(_, t)| t);
+        let tf = t_fault.unwrap_or(f64::INFINITY);
+        let now = ta.min(tr).min(tf);
+        if !now.is_finite() {
+            break;
+        }
+        for r in &mut reps {
+            r.run_until(now, cfg.max_batch);
+        }
+        if faults_on {
+            for r in &mut reps {
+                r.refresh_health(now);
+            }
+            for (i, r) in reps.iter().enumerate() {
+                if r.health() != Health::Down {
+                    drec.emit(
+                        now,
+                        TraceEvent::Heartbeat { replica: i as u32, phi: detector.phi(i, now) },
+                    );
+                    detector.beat(i, now);
+                }
+            }
+            let any_down = reps.iter().any(|r| r.health() == Health::Down);
+            for r in &mut reps {
+                if r.health() != Health::Down {
+                    r.set_fallback_escalation(any_down);
+                }
+            }
+        }
+        let (req, attempt) = if ta <= tr && ta <= tf {
+            (arrivals.pop_front().expect("arrival front exists"), 0)
+        } else if tr <= tf {
+            let (i, _) = t_retry.expect("retry minimum exists");
+            let e = pending.swap_remove(i);
+            (e.req, e.attempt)
+        } else {
+            let f = fault_events.pop_front().expect("fault front exists");
+            let i = f.replica.min(n_replicas - 1);
+            match f.kind {
+                FaultKind::Crash => {
+                    let back_up = now + cfg.faults.recovery.max(1e-9);
+                    for req in reps[i].crash(back_up) {
+                        injected_ids.insert(req.id);
+                        first_reclaim.entry(req.id).or_insert(now);
+                        let a = attempts.entry(req.id).or_insert(0);
+                        if *a >= cfg.retry.max_retries {
+                            drec.emit(now, TraceEvent::RequestFailed { request: req.id });
+                            failed_terminals.push(Completion {
+                                request_id: req.id,
+                                task: req.task,
+                                priority: req.priority,
+                                arrival: req.at,
+                                started: now,
+                                first_token: now,
+                                finished: now,
+                                output_tokens: 0,
+                                preempted_wait: 0.0,
+                                outcome: Outcome::Failed,
+                                deadline: req.deadline,
+                            });
+                        } else {
+                            *a += 1;
+                            let ready_at = now + cfg.retry.delay(*a - 1);
+                            pending.push(RetryEntry { ready_at, attempt: *a, req });
+                        }
+                    }
+                }
+                FaultKind::Brownout { factor, duration } => {
+                    reps[i].set_brownout(factor, now + duration);
+                    for m in reps[i].extract_live() {
+                        let mut best: Option<(usize, f64)> = None;
+                        for (j, r) in reps.iter().enumerate() {
+                            if j == i || !r.health().dispatchable() {
+                                continue;
+                            }
+                            let load = (r.queue_depth() + r.slots_in_use()) as f64;
+                            let score = r.affinity_overlap(&m.req.plan) - 0.1 * load;
+                            if best.map_or(true, |(_, s)| score > s) {
+                                best = Some((j, score));
+                            }
+                        }
+                        match best {
+                            Some((j, _)) => {
+                                migrations_total += 1;
+                                drec.emit(
+                                    now,
+                                    TraceEvent::Migrate {
+                                        request: m.req.id,
+                                        from: i as u32,
+                                        to: j as u32,
+                                    },
+                                );
+                                reps[j].adopt(m, now);
+                            }
+                            None => reps[i].adopt(m, now),
+                        }
+                    }
+                }
+                FaultKind::LinkFlap { factor, duration } => {
+                    reps[i].apply_link_flap(factor, now + duration);
+                }
+                FaultKind::Corrupt => {
+                    let _ = reps[i].corrupt_transfer();
+                }
+            }
+            continue;
+        };
+        if !reps.iter().any(|r| r.health().dispatchable()) {
+            let ready_at = reps
+                .iter()
+                .filter(|r| r.health() == Health::Down)
+                .map(|r| r.recover_at())
+                .fold(f64::INFINITY, f64::min);
+            ensure!(ready_at.is_finite(), "no replica is dispatchable or recovering");
+            pending.push(RetryEntry { ready_at: ready_at.max(now), attempt, req });
+            continue;
+        }
+        while reps
+            .iter()
+            .filter(|r| r.health().dispatchable())
+            .all(|r| r.queue_depth() >= max_queue)
+        {
+            let i = reps
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.has_work() && r.health().dispatchable())
+                .min_by(|(_, a), (_, b)| a.clock.now().total_cmp(&b.clock.now()))
+                .map(|(i, _)| i)
+                .expect("full queues imply outstanding dispatchable work");
+            reps[i].run_one_step(cfg.max_batch);
+        }
+        let views: Vec<ReplicaView> = reps
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let mut health = r.health();
+                if faults_on && health != Health::Down && detector.suspect(i, now) {
+                    health = Health::Down;
+                }
+                ReplicaView {
+                    id: r.id,
+                    queue_depth: r.queue_depth(),
+                    slots_in_use: r.slots_in_use(),
+                    busy_until: r.busy_until(),
+                    overlap: r.affinity_overlap(&req.plan),
+                    low_load: 0,
+                    health,
+                }
+            })
+            .collect();
+        let mut choice = bal.pick(&req, &views).min(n_replicas - 1);
+        if !views[choice].dispatchable() || reps[choice].queue_depth() >= max_queue {
+            choice = views
+                .iter()
+                .filter(|v| v.dispatchable() && v.queue_depth < max_queue)
+                .min_by(|a, b| {
+                    a.queue_depth.cmp(&b.queue_depth).then(a.busy_until.total_cmp(&b.busy_until))
+                })
+                .map(|v| v.id)
+                .expect("back-pressure loop freed a dispatchable queue");
+        }
+        ensure!(
+            reps[choice].health().dispatchable(),
+            "dispatched request {} to Down replica {}",
+            req.id,
+            choice
+        );
+        if attempt > 0 {
+            retries_total += 1;
+            drec.emit(now, TraceEvent::Retry { request: req.id, attempt, replica: choice as u32 });
+            let lag = now - reps[choice].clock.now();
+            if lag > 0.0 {
+                reps[choice].clock.advance(lag);
+            }
+        }
+        if drec.enabled() {
+            drec.emit(
+                now,
+                TraceEvent::Dispatch {
+                    request: req.id,
+                    replica: choice as u32,
+                    score: bal.score(&views[choice]),
+                },
+            );
+        }
+        reps[choice].enqueue(req);
+    }
+    let outcome = FleetOutcome {
+        n_expected,
+        failed_terminals,
+        retries: retries_total,
+        migrations: migrations_total,
+        steals: 0,
+        live_steals: 0,
+        injected_ids,
+        first_reclaim,
+        faults_on,
+    };
+    finalize(cfg, bal.name().to_string(), reps, drec, outcome)
+}
+
 #[cfg(test)]
 mod tests {
+    use super::workload::{OutputLen, PriorityMix, StreamMix, TaskProfile};
     use super::*;
+    use crate::clock::GpuSpec;
+    use crate::coordinator::workload::Arrival;
+    use crate::coordinator::PreemptPolicy;
+    use crate::fault::{FaultSpec, RetryPolicy};
+    use crate::quant::QuantMode;
 
     /// Small-but-real config: heterogeneous tasks, saturated arrivals.
     /// Balanced stream volumes (the synthetic default) make the balancer
@@ -1077,6 +1284,10 @@ mod tests {
         assert_eq!(rep.priorities[0].requests, rep.n_requests);
         assert_eq!(rep.priorities[0].preempted_wait.p99, 0.0);
         assert!(rep.replicas.iter().all(|r| r.preemptions == 0));
+        // steal and aging off by default: both stay inert
+        assert_eq!(rep.steals, 0);
+        assert_eq!(rep.live_steals, 0);
+        assert_eq!(rep.promotions, 0);
         // fallback off by default: nothing degraded, and every byte of
         // H2D traffic rode the serving tier (int4 for the synthetic
         // OLMoE spec) — no fp16 or little-tier traffic
@@ -1122,10 +1333,10 @@ mod tests {
     #[test]
     fn admission_improves_goodput_under_deadline_overload() {
         let base = small_cfg(2, 31);
-        let slack = 3.0 * base.spec.est_service_seconds(
-            base.workload.prompt_tokens,
-            base.workload.output.cap(),
-        );
+        let slack = 3.0
+            * base
+                .spec
+                .est_service_seconds(base.workload.prompt_tokens, base.workload.output.cap());
         let run = |admission: bool| {
             let cfg = base
                 .clone()
@@ -1216,10 +1427,8 @@ mod tests {
     #[test]
     fn fault_free_run_is_bit_identical_with_retry_armed() {
         let base = small_cfg(2, 41);
-        let armed = base
-            .clone()
-            .with_faults(FaultSpec::none())
-            .with_retry(RetryPolicy::retries(3, 0.5));
+        let armed =
+            base.clone().with_faults(FaultSpec::none()).with_retry(RetryPolicy::retries(3, 0.5));
         let mut b1 = balancer::by_name("expert-affinity").unwrap();
         let mut b2 = balancer::by_name("expert-affinity").unwrap();
         let r1 = run_cluster(&base, b1.as_mut()).unwrap();
@@ -1338,5 +1547,173 @@ mod tests {
             off.completed
         );
         assert_eq!(on.injected, on.recovered + on.failed);
+    }
+
+    // --------------------------------------------------- event-core oracle
+
+    /// The event-driven loop and the frozen polling loop must agree to
+    /// the bit on every comparable metric.
+    fn assert_matches_polling(cfg: &ClusterConfig, name: &str) {
+        let mut b1 = balancer::by_name(name).unwrap();
+        let mut b2 = balancer::by_name(name).unwrap();
+        let ev = run_cluster(cfg, b1.as_mut()).unwrap();
+        let poll = run_cluster_polling(cfg, b2.as_mut()).unwrap();
+        assert_eq!(ev.makespan.to_bits(), poll.makespan.to_bits(), "{name}: makespan drift");
+        assert_eq!(ev.hit_rate.to_bits(), poll.hit_rate.to_bits(), "{name}: hit-rate drift");
+        assert_eq!(
+            ev.tokens_per_sec.to_bits(),
+            poll.tokens_per_sec.to_bits(),
+            "{name}: tok/s drift"
+        );
+        assert_eq!(
+            ev.latency.p99.to_bits(),
+            poll.latency.p99.to_bits(),
+            "{name}: latency drift"
+        );
+        assert_eq!(ev.pcie_gb.to_bits(), poll.pcie_gb.to_bits(), "{name}: PCIe drift");
+        assert_eq!(ev.outcomes, poll.outcomes, "{name}: outcome drift");
+        assert_eq!(ev.retries, poll.retries, "{name}: retry drift");
+        assert_eq!(ev.migrations, poll.migrations, "{name}: migration drift");
+        assert_eq!(ev.steals, 0, "{name}: steal must stay inert");
+        assert_eq!(ev.promotions, 0, "{name}: aging must stay inert");
+    }
+
+    /// Determinism oracle, ext_cluster shape: Poisson and burst traffic
+    /// across fleet sizes under every stock balancer, plus a traced run
+    /// (the recorded timelines pass the same audits on both loops).
+    #[test]
+    fn event_core_matches_polling_loop_bit_for_bit() {
+        for &replicas in &[2usize, 4] {
+            for name in BALANCERS {
+                assert_matches_polling(&small_cfg(replicas, 61), name);
+                assert_matches_polling(
+                    &small_cfg(replicas, 62).with_arrival(Arrival::Burst).with_max_queue(5),
+                    name,
+                );
+            }
+        }
+        assert_matches_polling(&small_cfg(3, 63).with_trace(true), "expert-affinity");
+    }
+
+    /// Determinism oracle, ext_fault shape: crash storms and the
+    /// all-kinds mixed storm with retries, traced — the merged fault
+    /// timeline pops in exactly the order the polling loop processed it.
+    #[test]
+    fn event_core_matches_polling_loop_under_fault_storms() {
+        let base = small_cfg(2, 43).with_arrival(Arrival::Burst);
+        let est = base
+            .spec
+            .est_service_seconds(base.workload.prompt_tokens, base.workload.output.cap());
+        let storm = base
+            .clone()
+            .with_faults(FaultSpec::crash_storm(est / 2.0, 4.0 * est, est / 2.0))
+            .with_retry(RetryPolicy::retries(24, est / 8.0))
+            .with_trace(true);
+        for name in BALANCERS {
+            assert_matches_polling(&storm, name);
+        }
+        let mixed = base
+            .with_faults(FaultSpec::mixed(est / 2.0, 4.0 * est, est / 2.0))
+            .with_retry(RetryPolicy::retries(16, est / 8.0));
+        assert_matches_polling(&mixed, "expert-affinity");
+    }
+
+    // ------------------------------------------------------- work stealing
+
+    /// A steal tick that can never fire (interval beyond the horizon)
+    /// leaves the run bit-identical to an unarmed config.
+    #[test]
+    fn never_firing_steal_tick_is_inert() {
+        let base = small_cfg(2, 71);
+        let armed = base.clone().with_steal(Some(StealPolicy::every(1e9)));
+        let mut b1 = balancer::by_name("expert-affinity").unwrap();
+        let mut b2 = balancer::by_name("expert-affinity").unwrap();
+        let r1 = run_cluster(&base, b1.as_mut()).unwrap();
+        let r2 = run_cluster(&armed, b2.as_mut()).unwrap();
+        assert_eq!(r1.makespan.to_bits(), r2.makespan.to_bits());
+        assert_eq!(r1.outcomes, r2.outcomes);
+        assert_eq!(r2.steals, 0);
+        assert_eq!(r2.live_steals, 0);
+    }
+
+    /// Zipf-imbalanced burst traffic under affinity dispatch piles the
+    /// head task's backlog onto the warm replicas; with stealing armed,
+    /// drained replicas take from that backlog.  Conservation must hold
+    /// (every request still one terminal, audits balance with tracing
+    /// on) and the steal/counter ledgers must agree.
+    #[test]
+    fn idle_replica_steals_queued_backlog_from_loaded_peer() {
+        let mut base = small_cfg(2, 73).with_arrival(Arrival::Burst);
+        workload::zipf_weights(&mut base.tasks, 1.5);
+        base.workload.balanced_tasks = false;
+        let est = base
+            .spec
+            .est_service_seconds(base.workload.prompt_tokens, base.workload.output.cap());
+        let armed =
+            base.clone().with_steal(Some(StealPolicy::every(est / 4.0))).with_trace(true);
+        let mut b1 = balancer::by_name("expert-affinity").unwrap();
+        let mut b2 = balancer::by_name("expert-affinity").unwrap();
+        let off = run_cluster(&base, b1.as_mut()).unwrap();
+        let on = run_cluster(&armed, b2.as_mut()).unwrap();
+        assert!(on.steals > 0, "imbalanced backlog must trigger steals");
+        assert!(on.live_steals <= on.steals);
+        assert_eq!(on.completed, on.n_requests, "stolen requests still complete");
+        assert_eq!(off.completed, off.n_requests);
+        let total: usize = on.replicas.iter().map(|r| r.requests).sum();
+        assert_eq!(total, on.n_requests, "each request exactly one terminal home");
+        assert!(on.trace.is_some(), "Steal events passed the counter audit");
+        // same decoded tokens per completed request: stealing moves work,
+        // never alters the pre-drawn routing
+        assert_eq!(
+            on.outcomes.iter().map(|o| o.2).sum::<usize>(),
+            off.outcomes.iter().map(|o| o.2).sum::<usize>()
+        );
+    }
+
+    // --------------------------------------------------- age-based promotion
+
+    /// Sustained 80%-High burst flood over a starved Low minority with
+    /// zero-threshold preemption: without aging the Low class's
+    /// suspended wait grows unboundedly with the flood; with aging on,
+    /// promotion caps it.  (A promoted request completes in its
+    /// promoted class, so the bound is asserted on the fleet-wide worst
+    /// class, which includes every promoted ex-Low completion.)
+    #[test]
+    fn aging_bounds_starvation_under_high_flood() {
+        let base = small_cfg(1, 79)
+            .with_arrival(Arrival::Burst)
+            .with_max_batch(2)
+            .with_preempt(PreemptPolicy::After(0.0))
+            .with_priority_mix(PriorityMix { high: 0.8, low: 0.2 });
+        let est = base
+            .spec
+            .est_service_seconds(base.workload.prompt_tokens, base.workload.output.cap());
+        let aged = base.clone().with_age_promote(Some(est));
+        let mut b1 = balancer::by_name("round-robin").unwrap();
+        let mut b2 = balancer::by_name("round-robin").unwrap();
+        let off = run_cluster(&base, b1.as_mut()).unwrap();
+        let on = run_cluster(&aged, b2.as_mut()).unwrap();
+        let worst = |r: &ClusterReport| {
+            r.priorities.iter().map(|c| c.preempted_wait.p99).fold(0.0f64, f64::max)
+        };
+        assert_eq!(off.promotions, 0, "aging off never promotes");
+        assert!(on.promotions > 0, "the flood must age someone up");
+        let low_off = off
+            .priorities
+            .iter()
+            .find(|c| c.priority == Priority::Low)
+            .expect("un-aged run completes Low requests as Low");
+        assert!(
+            low_off.preempted_wait.p99 > 0.0,
+            "the flood must actually starve the Low class"
+        );
+        assert!(
+            worst(&on) < worst(&off),
+            "aging must shrink the worst-class suspended wait: {} !< {}",
+            worst(&on),
+            worst(&off)
+        );
+        // conservation: promotion re-classes requests, never loses them
+        assert_eq!(on.completed + on.cancelled + on.rejected, on.n_requests);
     }
 }

@@ -37,6 +37,7 @@ use crate::quant::QuantMode;
 use crate::trace::{PcieSnap, Recorder, Trace, TraceEvent};
 use crate::vram::VramBudget;
 
+use super::balancer::ReplicaView;
 use super::workload::ClusterRequest;
 
 /// Static description of one replica's model + memory configuration.
@@ -243,6 +244,10 @@ pub struct Replica {
     /// TTFT estimate cannot meet its deadline is rejected at admission
     /// instead of occupying a slot only to miss at p99.
     admission: bool,
+    /// Promote a queued or suspended request one priority class after it
+    /// has waited this long, two classes after twice as long; `None`
+    /// disables aging (`--age-promote`).
+    age_promote: Option<f64>,
     /// Pending arrivals, one FIFO queue per [`Priority`] class.
     queues: [VecDeque<ClusterRequest>; 3],
     in_flight: Vec<ActiveSeq>,
@@ -250,6 +255,9 @@ pub struct Replica {
     suspended: Vec<(ActiveSeq, f64)>,
     /// Sequences suspended out of their slot by a higher-priority waiter.
     pub preemptions: u64,
+    /// Queued or suspended requests aged up a priority class on this
+    /// replica (`--age-promote`).
+    pub promotions: u64,
     /// (token, expert) assignments served degraded from a little-tier
     /// copy (big-little fallback).
     pub degraded_execs: u64,
@@ -302,10 +310,12 @@ impl Replica {
             prefill_chunk: 1,
             preempt: PreemptPolicy::Off,
             admission: false,
+            age_promote: None,
             queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
             in_flight: Vec::new(),
             suspended: Vec::new(),
             preemptions: 0,
+            promotions: 0,
             degraded_execs: 0,
             total_assignments: 0,
             route_counts,
@@ -339,6 +349,15 @@ impl Replica {
     /// Enable (or disable) SLO-aware admission control.
     pub fn with_admission(mut self, on: bool) -> Replica {
         self.admission = on;
+        self
+    }
+
+    /// Arm age-based priority promotion: a queued or suspended request
+    /// that has waited `tau` sim seconds is promoted one class, two
+    /// classes after `2·tau`.  Non-positive or non-finite `tau` disables
+    /// aging, same as `None`.
+    pub fn with_age_promote(mut self, tau: Option<f64>) -> Replica {
+        self.age_promote = tau.filter(|t| t.is_finite() && *t > 0.0);
         self
     }
 
@@ -579,6 +598,128 @@ impl Replica {
 
     pub fn busy_until(&self) -> f64 {
         self.clock.now()
+    }
+
+    /// Queued plus in-flight Low-class requests — the preemption-headroom
+    /// signal the priority-aware balancer prices at dispatch.
+    pub fn low_load(&self) -> usize {
+        self.queues[Priority::Low.idx()].len()
+            + self.in_flight.iter().filter(|s| s.req.priority == Priority::Low).count()
+    }
+
+    /// This replica's dispatch-facing state — the single source of truth
+    /// behind balancer views and the steal scan.  Every field reads an
+    /// O(1) counter or an O(slots) scan; `overlap` is left 0.0, the one
+    /// O(plan) field, for the caller to fill only when its balancer
+    /// actually prices affinity.
+    pub fn view(&self) -> ReplicaView {
+        ReplicaView {
+            id: self.id,
+            queue_depth: self.queue_depth(),
+            slots_in_use: self.slots_in_use(),
+            busy_until: self.busy_until(),
+            overlap: 0.0,
+            low_load: self.low_load(),
+            health: self.health(),
+        }
+    }
+
+    /// The queued request a thief would take: the back of the
+    /// lowest-priority nonempty queue.  Tail steals never reorder a
+    /// class's FIFO, and the lowest class loses work first.
+    pub fn steal_candidate_queued(&self) -> Option<&ClusterRequest> {
+        Priority::ALL.iter().find_map(|p| self.queues[p.idx()].back())
+    }
+
+    /// Remove and return the queued steal candidate
+    /// ([`Replica::steal_candidate_queued`]).
+    pub fn take_steal_queued(&mut self) -> Option<ClusterRequest> {
+        self.queues.iter_mut().find(|q| !q.is_empty()).and_then(|q| q.pop_back())
+    }
+
+    /// The suspended sequence a thief would live-steal — lowest priority
+    /// class, then least sunk suspension wait (latest `since`): the one
+    /// the local scheduler wants back last.  Returns its request and
+    /// decode step (the KV-transfer size drivers).
+    pub fn steal_candidate_live(&self) -> Option<(&ClusterRequest, usize)> {
+        self.suspended
+            .iter()
+            .min_by(|a, b| a.0.req.priority.cmp(&b.0.req.priority).then(b.1.total_cmp(&a.1)))
+            .map(|(s, _)| (&s.req, s.step))
+    }
+
+    /// Remove and return the live steal candidate
+    /// ([`Replica::steal_candidate_live`]) as a portable suspended
+    /// sequence, keeping its original suspension instant — its pins were
+    /// already released at preemption, so nothing unwinds here.
+    pub fn take_steal_suspended(&mut self) -> Option<MigratedSeq> {
+        let i = self
+            .suspended
+            .iter()
+            .enumerate()
+            .min_by(|a, b| {
+                a.1 .0.req.priority.cmp(&b.1 .0.req.priority).then(b.1 .1.total_cmp(&a.1 .1))
+            })
+            .map(|(i, _)| i)?;
+        let (seq, since) = self.suspended.remove(i);
+        Some(MigratedSeq {
+            req: seq.req,
+            step: seq.step,
+            started: seq.started,
+            first_token: seq.first_token,
+            preempted_wait: seq.preempted_wait,
+            since,
+        })
+    }
+
+    /// Age-based priority promotion (`--age-promote`): a queued request
+    /// that has waited `tau` seconds since arrival — or a suspended one,
+    /// since suspension — moves up one class, two after `2·tau`.
+    /// Promotion mutates the request's class: it admits, preempts, and
+    /// completes as the promoted class from here on.
+    fn promote_aged(&mut self) {
+        let Some(tau) = self.age_promote else { return };
+        let now = self.clock.now();
+        for from in [Priority::Low, Priority::Normal] {
+            let mut i = 0;
+            while i < self.queues[from.idx()].len() {
+                let waited = now - self.queues[from.idx()][i].at;
+                let target = if waited >= 2.0 * tau {
+                    Priority::High
+                } else if waited >= tau {
+                    Priority::Normal
+                } else {
+                    i += 1;
+                    continue;
+                };
+                if target <= from {
+                    i += 1;
+                    continue;
+                }
+                let mut req = self.queues[from.idx()].remove(i).expect("indexed scan");
+                req.priority = target;
+                self.promotions += 1;
+                self.rec
+                    .emit(now, TraceEvent::Promote { request: req.id, to: target.idx() as u8 });
+                self.queues[target.idx()].push_back(req);
+            }
+        }
+        for (seq, since) in &mut self.suspended {
+            let waited = now - *since;
+            let target = if waited >= 2.0 * tau {
+                Priority::High
+            } else if waited >= tau {
+                Priority::Normal
+            } else {
+                continue;
+            };
+            if target > seq.req.priority {
+                seq.req.priority = target;
+                self.promotions += 1;
+                self.rec
+                    .emit(now, TraceEvent::Promote { request: seq.req.id, to: target.idx() as u8 });
+            }
+        }
     }
 
     /// Earliest arrival time across the per-priority queues.
@@ -1312,6 +1453,9 @@ impl Replica {
             }
         }
         let t0 = self.clock.now();
+        // promote before preemption checks so a freshly aged-up class is
+        // what both preemption and admission see this step
+        self.promote_aged();
         self.maybe_preempt(max_batch);
         self.admit_ready(max_batch);
         if self.in_flight.is_empty() {
@@ -1922,5 +2066,75 @@ mod tests {
         }
         a.take_trace().unwrap().audit_pins(0).expect("donor pins balance");
         b.take_trace().unwrap().audit_pins(0).expect("adopter pins balance");
+    }
+
+    /// The steal-candidate accessors pick exactly what the scan prices:
+    /// queued steals take the back of the lowest-priority nonempty queue
+    /// (never reordering a class's FIFO), live steals take the
+    /// lowest-class / least-sunk-wait suspended sequence — and the taken
+    /// candidate matches the previewed one.
+    #[test]
+    fn steal_accessors_pick_lowest_class_tail_and_least_sunk_suspension() {
+        let s = spec();
+        let mut r = Replica::new(0, s.clone(), SchedulerMode::Continuous);
+        assert!(r.steal_candidate_queued().is_none());
+        assert!(r.take_steal_queued().is_none());
+        r.enqueue(req_prio(0, 1, 4, Priority::High, &s, 1));
+        r.enqueue(req_prio(1, 1, 4, Priority::Low, &s, 2));
+        r.enqueue(req_prio(2, 1, 4, Priority::Low, &s, 3));
+        assert_eq!(r.steal_candidate_queued().unwrap().id, 2, "Low-class tail first");
+        assert_eq!(r.take_steal_queued().unwrap().id, 2);
+        assert_eq!(r.take_steal_queued().unwrap().id, 1, "then the remaining Low");
+        assert_eq!(r.take_steal_queued().unwrap().id, 0, "High only once Low drains");
+        assert_eq!(r.queue_depth(), 0);
+
+        // fabricate suspended state through the adoption path
+        let mut donor = Replica::new(1, s.clone(), SchedulerMode::Continuous);
+        donor.enqueue(req_prio(10, 1, 8, Priority::Normal, &s, 4));
+        donor.enqueue(req_prio(11, 1, 8, Priority::Low, &s, 5));
+        donor.run_one_step(2);
+        let mut moved = donor.extract_live();
+        assert_eq!(moved.len(), 2);
+        moved[0].since = 1.0;
+        moved[1].since = 2.0;
+        let mut victim = Replica::new(2, s.clone(), SchedulerMode::Continuous);
+        for m in moved {
+            victim.adopt(m, 3.0);
+        }
+        let (req, step) = victim.steal_candidate_live().unwrap();
+        assert_eq!(req.id, 11, "the Low-class suspension loses first");
+        assert!(step > 0, "a stepped sequence carries its cursor");
+        let m = victim.take_steal_suspended().unwrap();
+        assert_eq!(m.req.id, 11);
+        assert_eq!(m.since, 2.0, "the original suspension instant survives the take");
+        assert_eq!(victim.suspended_len(), 1);
+        assert_eq!(victim.take_steal_suspended().unwrap().req.id, 10);
+        assert!(victim.take_steal_suspended().is_none());
+    }
+
+    /// Aging promotes a starved queued Low past τ (and to High past 2τ),
+    /// counts each promotion, and leaves the run untouched when unarmed.
+    #[test]
+    fn age_promotion_lifts_starved_queued_low() {
+        let s = spec();
+        let run = |tau: Option<f64>| {
+            let mut r =
+                Replica::new(0, s.clone(), SchedulerMode::Continuous).with_age_promote(tau);
+            // one long Normal hogs the single slot while a Low waits
+            r.enqueue(req_prio(0, 1, 48, Priority::Normal, &s, 1));
+            r.enqueue(req_prio(1, 1, 4, Priority::Low, &s, 2));
+            r.run_until(f64::INFINITY, 1);
+            r
+        };
+        let off = run(None);
+        assert_eq!(off.promotions, 0, "unarmed aging never promotes");
+        let low = off.completions.iter().find(|c| c.request_id == 1).unwrap();
+        assert_eq!(low.priority, Priority::Low);
+        let on = run(Some(1e-6));
+        assert!(on.promotions >= 1, "a starved Low must age up");
+        assert!(on.promotions <= 2, "one request promotes at most twice");
+        let low = on.completions.iter().find(|c| c.request_id == 1).unwrap();
+        assert_eq!(low.priority, Priority::High, "tiny τ ages straight to High");
+        assert_eq!(on.completions.len(), 2, "promotion loses nothing");
     }
 }

@@ -101,6 +101,17 @@ impl TaskProfile {
     }
 }
 
+/// Reweight a task set to a Zipf traffic mix: task `i` (in id order)
+/// gets weight `1 / (i+1)^alpha`.  The head task dominates arrivals —
+/// the imbalance regime work stealing exists for (pair with
+/// `balanced_tasks: false`, or the per-stream balancing quota undoes the
+/// skew).
+pub fn zipf_weights(tasks: &mut [TaskProfile], alpha: f64) {
+    for (i, t) in tasks.iter_mut().enumerate() {
+        t.weight = 1.0 / ((i + 1) as f64).powf(alpha);
+    }
+}
+
 /// Per-request output-length distribution.  Continuous batching's win
 /// case is skew: a few long sequences among many short ones — under
 /// run-to-completion batching the long member holds its batch's slots
@@ -623,5 +634,31 @@ mod tests {
             assert_eq!(x.disconnect, y.disconnect);
             assert_eq!(x.routing, y.routing);
         }
+    }
+
+    #[test]
+    fn zipf_weights_skew_head_task_and_shift_traffic() {
+        let mut tasks = TaskProfile::synthetic(4, 2, 16, 4, 0.9);
+        zipf_weights(&mut tasks, 1.2);
+        assert_eq!(tasks[0].weight, 1.0, "the head task anchors the scale");
+        for pair in tasks.windows(2) {
+            assert!(pair[0].weight > pair[1].weight, "weights strictly decay");
+        }
+        assert!(tasks.last().unwrap().weight > 0.0);
+        // with balancing off the head task actually dominates arrivals
+        let s = WorkloadSpec {
+            n_requests: 200,
+            arrival: Arrival::Burst,
+            prompt_tokens: 1,
+            output: OutputLen::Fixed(2),
+            balanced_tasks: false,
+            priorities: PriorityMix::none(),
+            stream: StreamMix::none(),
+            seed: 5,
+        };
+        let reqs = generate(&s, &tasks, 2, 16, 2);
+        let head = reqs.iter().filter(|r| r.task == 0).count();
+        let tail = reqs.iter().filter(|r| r.task == 3).count();
+        assert!(head > tail, "Zipf head ({head}) must out-arrive the tail ({tail})");
     }
 }

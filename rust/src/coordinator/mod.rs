@@ -325,8 +325,7 @@ pub struct Request {
 
 /// Builder for a submission: `RequestSpec::new(prompt)` then chain
 /// `.max_output(n)`, `.priority(p)`, `.deadline(d)`, `.cancel_after(k)`.
-/// Consumed by [`Server::submit`]; the single entry point replacing the
-/// old `submit`/`submit_prio` pair.
+/// Consumed by [`Server::submit`], the single submission entry point.
 #[derive(Debug, Clone)]
 pub struct RequestSpec {
     prompt: Vec<usize>,
@@ -1394,31 +1393,6 @@ impl Server {
         stream
     }
 
-    /// Pre-streaming shape of `submit`: Normal priority, terminal-only
-    /// response channel.
-    #[deprecated(note = "build a `RequestSpec` and call `Server::submit`")]
-    pub fn submit_response(&self, prompt: Vec<usize>, max_output: usize) -> Receiver<Response> {
-        self.submit_terminal(RequestSpec::new(prompt).max_output(max_output))
-    }
-
-    /// Pre-streaming shape of `submit` with an explicit [`Priority`].
-    #[deprecated(note = "build a `RequestSpec` and call `Server::submit`")]
-    pub fn submit_prio(
-        &self,
-        prompt: Vec<usize>,
-        max_output: usize,
-        priority: Priority,
-    ) -> Receiver<Response> {
-        self.submit_terminal(RequestSpec::new(prompt).max_output(max_output).priority(priority))
-    }
-
-    fn submit_terminal(&self, spec: RequestSpec) -> Receiver<Response> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (sub, rx) = Submission::terminal(spec.into_request(id));
-        let _ = self.tx.send(Msg::Job(sub));
-        rx
-    }
-
     /// Drain outstanding work and stop the runner.  Every submission
     /// still in the system resolves with a terminal [`Response`] —
     /// pending and in-flight work completes; streams still stalled on
@@ -1761,20 +1735,6 @@ mod tests {
         assert_eq!(stats.requests, 2);
         assert_eq!(stats.completed, 2);
         assert!(stats.queue_wait.p99 >= stats.queue_wait.p50);
-    }
-
-    /// The pre-streaming wrappers still work: terminal-only channel,
-    /// Normal or explicit priority, same Response shape.
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_submit_wrappers_still_resolve() {
-        let server = Server::start(|| Ok(Mock::new(0.5)), ServerConfig::default());
-        let rx1 = server.submit_response(vec![1, 2, 3], 8);
-        let rx2 = server.submit_prio(vec![9, 8], 8, Priority::High);
-        assert_eq!(rx1.recv().unwrap().tokens, vec![3, 2, 1]);
-        assert_eq!(rx2.recv().unwrap().tokens, vec![8, 9]);
-        let stats = server.shutdown().unwrap();
-        assert_eq!(stats.completed, 2);
     }
 
     #[test]

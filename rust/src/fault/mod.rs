@@ -26,6 +26,12 @@
 //! * [`RetryPolicy`] — the per-request retry budget (`--retry <n>`)
 //!   with exponential backoff in sim time; a request that exhausts it
 //!   resolves with the terminal `Outcome::Failed`.
+//!
+//! Since the event-driven cluster core landed, the generated
+//! [`FaultPlan`] no longer runs as a separate timeline: the dispatcher
+//! seeds one `Fault` event per planned injection into the cluster's
+//! sim-time event queue, where they interleave deterministically with
+//! arrivals, retry wake-ups and steal ticks (docs/CLUSTER.md).
 
 use crate::util::rng::Rng;
 

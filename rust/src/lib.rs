@@ -82,22 +82,27 @@
 //! * [`repro`]       — one harness per paper table/figure.
 //!
 //! Cluster layer (the first tier above the single-engine stack):
-//! * [`cluster`]     — replica fleet simulator: per-replica cache/PCIe/
-//!   VRAM/clock stacks with step-granular decode slots (per-priority
-//!   queues, `--preempt` suspend/resume, per-class latency slices,
-//!   streaming clients via `StreamMix` — deadlines, cancel-after-N,
-//!   queued disconnects — with SLO-aware admission and goodput
-//!   accounting), behind pluggable health-aware dispatchers
-//!   (round-robin, least-loaded, expert-affinity) that see live slot
-//!   occupancy and replica `Health`.  Affinity routing
-//!   sends each request to the replica whose resident experts best
-//!   match its `predict_plan` prefetch set, compounding MELINOE's top-C
-//!   routing concentration fleet-wide (see docs/CLUSTER.md).
+//! * [`cluster`]     — replica fleet simulator around an event-driven
+//!   core: one sim-time priority queue carries arrival, retry-wake,
+//!   fault and steal-tick events, and replicas advance only when an
+//!   event lands on them.  Per-replica cache/PCIe/VRAM/clock stacks
+//!   with step-granular decode slots (per-priority queues, `--preempt`
+//!   suspend/resume, `--age-promote` anti-starvation aging, per-class
+//!   latency slices, streaming clients via `StreamMix` with SLO-aware
+//!   admission and goodput accounting), behind pluggable health-aware
+//!   dispatchers (round-robin, least-loaded, expert-affinity, and the
+//!   opt-in priority-affinity) that see live `Replica::view()`
+//!   snapshots.  Fleet-scale work stealing (`--steal`) lets idle
+//!   replicas take queued or suspended work from loaded peers, priced
+//!   by warm-cache affinity against queue delay and KV migration cost.
+//!   Configs are assembled through the validating `ClusterBuilder`
+//!   (see docs/CLUSTER.md).
 //! * [`fault`]       — fleet fault injection and recovery: seedable
 //!   `FaultPlan` (crashes, brownouts, PCIe link flaps, transfer
-//!   corruption) drawn from a dedicated RNG stream, the per-replica
-//!   `Health` state machine with a phi-style heartbeat detector, and
-//!   the `RetryPolicy` (`--retry`) under which every reclaimed request
+//!   corruption) drawn from a dedicated RNG stream and injected as
+//!   events on the cluster's sim-time queue, the per-replica `Health`
+//!   state machine with a phi-style heartbeat detector, and the
+//!   `RetryPolicy` (`--retry`) under which every reclaimed request
 //!   still resolves exactly one terminal `Outcome` — now including
 //!   `Outcome::Failed` (see docs/ROBUSTNESS.md).
 

@@ -36,7 +36,7 @@ commands:
                       table5 table11 fig6 heatmaps fig11 table12 fig12 fig13
                       table13 ext_layerwise ext_cluster ext_continuous
                       ext_prefill ext_overlap ext_preempt ext_quant
-                      ext_stream ext_fault)
+                      ext_stream ext_fault ext_steal)
   serve              step-level serving loop over the eval workload
   cluster            multi-replica serving simulation: compare balancers
   decode             decode one prompt, print tokens + transfer stats
@@ -117,7 +117,8 @@ common options:
 cluster options:
   --replicas <n>     fleet size (default 4)
   --tasks <n>        heterogeneous traffic streams (default 4)
-  --balancer <name>  round-robin | least-loaded | expert-affinity | all
+  --balancer <name>  round-robin | least-loaded | expert-affinity
+                     | priority-affinity | all (all = the stock three)
   --rate <r>         Poisson arrival rate req/s (0 = auto ≈1.5× capacity)
   --burst            all requests arrive at t=0 (saturation test)
   --long-frac <f>    fraction of requests decoding the full --tokens
@@ -135,6 +136,18 @@ cluster options:
                      (default 0 = a reclaimed request terminates
                      Failed); retries re-dispatch with exponential
                      backoff and bit-identical continuation
+  --steal            fleet-scale work stealing: idle replicas steal
+                     queued and suspended work from loaded peers,
+                     priced by warm-cache affinity vs queue delay vs
+                     KV migration cost (docs/CLUSTER.md)
+  --steal-interval <s>
+                     sim-seconds between steal scans (default: a
+                     quarter of the per-request service estimate);
+                     setting it implies --steal
+  --age-promote <s>  age-based priority promotion threshold τ: a
+                     request waiting ≥ τ is promoted to Normal, ≥ 2τ
+                     to High, bounding Low-priority starvation under
+                     a sustained High flood (default off)
 ";
 
 fn policy_by_name(name: &str, cap: usize, top_k: usize, ft: &str) -> Result<PolicyConfig> {
@@ -513,46 +526,48 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let high_frac = args.get_f64("high-frac", 0.0)?.clamp(0.0, 1.0);
     let low_frac = args.get_f64("low-frac", 0.0)?.clamp(0.0, 1.0 - high_frac);
     let (smix, admission) = stream_args(args)?;
-    let mut cfg = cluster::ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu, seed)
-        .with_scheduler(scheduler)
-        .with_prefill_chunk(prefill_chunk)
-        .with_lookahead(lookahead)
-        .with_preempt(preempt)
-        .with_priority_mix(PriorityMix { high: high_frac, low: low_frac })
-        .with_stream_mix(smix)
-        .with_admission(admission)
-        .with_max_batch(max_batch)
-        .with_output(if long_frac > 0.0 {
+    let mut b = cluster::ClusterConfig::builder(replicas, n_requests, n_tasks, gpu, seed)
+        .scheduler(scheduler)
+        .prefill_chunk(prefill_chunk)
+        .lookahead(lookahead)
+        .preempt(preempt)
+        .priority_mix(PriorityMix { high: high_frac, low: low_frac })
+        .stream_mix(smix)
+        .admission(admission)
+        .max_batch(max_batch)
+        .output(if long_frac > 0.0 {
             OutputLen::Bimodal { short: (tokens / 8).max(1), long: tokens, long_frac }
         } else {
             OutputLen::Fixed(tokens)
         })
-        .with_trace(args.get("trace").is_some());
+        .trace(args.get("trace").is_some());
     // resolve --quant against the spec's own serving tier, so omitting
-    // the flag keeps the VRAM-derived default; with_quant preserves the
+    // the flag keeps the VRAM-derived default; .quant() preserves the
     // byte budget by rescaling the per-layer slot count
-    let (quant, little, fallback_threshold) = quant_args(args, cfg.spec.quant)?;
-    cfg = cfg.with_quant(quant).with_fallback(little, fallback_threshold);
+    let (quant, little, fallback_threshold) = quant_args(args, b.draft().spec.quant)?;
+    b = b.quant(quant).fallback(little, fallback_threshold);
     // re-derive the service estimate for the overridden token budget so
     // the auto rate stays ≈1.5× fleet capacity
-    let est = cfg
+    let draft = b.draft();
+    let est = draft
         .spec
         .est_service_seconds(
-            cfg.workload.prompt_tokens,
-            cfg.workload.output.mean().ceil().max(1.0) as usize,
+            draft.workload.prompt_tokens,
+            draft.workload.output.mean().ceil().max(1.0) as usize,
         )
         .max(1e-6);
-    if args.has_flag("burst") {
-        cfg = cfg.with_arrival(Arrival::Burst);
+    b = if args.has_flag("burst") {
+        b.arrival(Arrival::Burst)
     } else if rate > 0.0 {
-        cfg = cfg.with_arrival(Arrival::Poisson(rate));
+        b.arrival(Arrival::Poisson(rate))
     } else {
-        cfg = cfg.with_arrival(Arrival::Poisson(1.5 * cfg.replicas as f64 / est));
-    }
+        let fleet = b.draft().replicas as f64;
+        b.arrival(Arrival::Poisson(1.5 * fleet / est))
+    };
     // fault plan + retry budget; the horizon spans the expected run so
     // --mtbf defaults to "a handful of faults per run"
     let faults_mode = args.get_or("faults", "off").to_string();
-    let horizon = (n_requests as f64 * est / cfg.replicas.max(1) as f64).max(est);
+    let horizon = (n_requests as f64 * est / b.draft().replicas.max(1) as f64).max(est);
     let mtbf = args.get_f64("mtbf", horizon / 2.5)?.max(1e-6);
     let fspec = match faults_mode.as_str() {
         "off" => FaultSpec::none(),
@@ -566,7 +581,19 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     } else {
         RetryPolicy::off()
     };
-    cfg = cfg.with_faults(fspec).with_retry(retry);
+    b = b.faults(fspec).retry(retry);
+    // fleet-scale work stealing + age-based promotion (docs/CLUSTER.md);
+    // the interval defaults to a quarter of the per-request estimate so
+    // an idle replica scans a few times per service time
+    if args.has_flag("steal") || args.get("steal-interval").is_some() {
+        let interval = args.get_f64("steal-interval", est / 4.0)?;
+        b = b.steal(Some(cluster::StealPolicy::every(interval)));
+    }
+    let tau = args.get_f64("age-promote", 0.0)?;
+    if tau != 0.0 {
+        b = b.age_promote(Some(tau));
+    }
+    let cfg = b.build()?;
     let arrival_desc = match cfg.workload.arrival {
         Arrival::Burst => "burst".to_string(),
         Arrival::Poisson(r) => format!("poisson {r:.2} req/s"),
@@ -605,6 +632,20 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             cfg.retry.backoff
         );
     }
+    if cfg.steal.is_some() || cfg.age_promote.is_some() {
+        let steal_desc = match &cfg.steal {
+            Some(s) => format!(
+                "every {:.4}s (load coeff {}, live {})",
+                s.interval, s.load_coeff, s.live
+            ),
+            None => "off".to_string(),
+        };
+        let age_desc = match cfg.age_promote {
+            Some(t) => format!("{t:.4}s"),
+            None => "off".to_string(),
+        };
+        println!("  steal: {steal_desc}, age-promote {age_desc}");
+    }
 
     let which = args.get_or("balancer", "all");
     let names: Vec<&str> =
@@ -641,6 +682,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
                 r.retries,
                 r.migrations,
                 r.recovery_wait.cell(1.0)
+            );
+        }
+        if r.steals > 0 || r.promotions > 0 {
+            println!(
+                "    steal/aging: {} steals ({} live migrations), {} promotions",
+                r.steals, r.live_steals, r.promotions
             );
         }
         if r.priorities.len() > 1 {

@@ -18,7 +18,7 @@ pub const ALL: &[&str] = &[
     "table1", "fig1a", "fig1b", "fig3", "table2", "table3", "fig4", "fig5", "table4",
     "table5", "table11", "fig6", "heatmaps", "fig11", "table12", "fig12", "fig13", "table13",
     "ext_layerwise", "ext_cluster", "ext_continuous", "ext_prefill", "ext_overlap",
-    "ext_preempt", "ext_quant", "ext_stream", "ext_fault",
+    "ext_preempt", "ext_quant", "ext_stream", "ext_fault", "ext_steal",
 ];
 
 fn workload(args: &Args) -> Result<Workload> {
@@ -936,11 +936,12 @@ pub fn ext_cluster(args: &Args) -> Result<()> {
     ]);
     let mut jrows = Vec::new();
     for replicas in [2usize, 4, 8] {
-        let mut cfg = ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu.clone(), seed)
-            .with_trace(true);
+        let mut bld = ClusterConfig::builder(replicas, n_requests, n_tasks, gpu.clone(), seed)
+            .trace(true);
         if burst {
-            cfg = cfg.with_arrival(Arrival::Burst);
+            bld = bld.arrival(Arrival::Burst);
         }
+        let cfg = bld.build()?;
         for rep in cluster::compare(&cfg, cluster::BALANCERS)? {
             t.row(vec![
                 replicas.to_string(),
@@ -993,16 +994,17 @@ pub fn ext_continuous(args: &Args) -> Result<()> {
     let long_frac = args.get_f64("long-frac", 0.25)?.clamp(0.0, 1.0);
 
     let output = OutputLen::Bimodal { short, long, long_frac };
-    let mut base = ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu, seed)
-        .with_output(output)
-        .with_trace(true);
+    let bld = ClusterConfig::builder(replicas, n_requests, n_tasks, gpu, seed)
+        .output(output)
+        .trace(true);
     // saturate: offered load ≈ 2.5× the fleet's single-stream capacity,
     // so scheduling efficiency — not offered load — bounds throughput
-    let est = base
+    let est = bld
+        .draft()
         .spec
-        .est_service_seconds(base.workload.prompt_tokens, output.mean().ceil() as usize)
+        .est_service_seconds(bld.draft().workload.prompt_tokens, output.mean().ceil() as usize)
         .max(1e-9);
-    base = base.with_arrival(Arrival::Poisson(2.5 * replicas.max(1) as f64 / est));
+    let base = bld.arrival(Arrival::Poisson(2.5 * replicas.max(1) as f64 / est)).build()?;
     println!(
         "{} replicas, {} requests, outputs {}/{} tokens ({}% long), poisson 2.5x capacity",
         replicas,
@@ -1071,15 +1073,15 @@ pub fn ext_prefill(args: &Args) -> Result<()> {
     let prompt = args.get_usize("prompt", 96)?.max(1);
     let tokens = args.get_usize("tokens", 16)?.max(1);
 
-    let mut base =
-        ClusterConfig::synthetic(replicas, n_requests, n_tasks, gpu, seed).with_trace(true);
-    base.workload.prompt_tokens = prompt;
-    base.workload.output = OutputLen::Fixed(tokens);
+    let bld = ClusterConfig::builder(replicas, n_requests, n_tasks, gpu, seed)
+        .trace(true)
+        .prompt_tokens(prompt)
+        .output(OutputLen::Fixed(tokens));
     // stable queueing: offered load ≈ 0.8× the fleet's compute-only
     // capacity at token-at-a-time service, so p95 TTFT reflects prefill
     // latency rather than unbounded queue growth
-    let est = base.spec.est_service_seconds(prompt, tokens).max(1e-9);
-    base = base.with_arrival(Arrival::Poisson(0.8 * replicas.max(1) as f64 / est));
+    let est = bld.draft().spec.est_service_seconds(prompt, tokens).max(1e-9);
+    let base = bld.arrival(Arrival::Poisson(0.8 * replicas.max(1) as f64 / est)).build()?;
     println!(
         "{replicas} replicas, {n_requests} requests, {prompt}-token prompts, \
          {tokens} output tokens, poisson 0.8x capacity"
@@ -1141,7 +1143,6 @@ pub fn ext_overlap(args: &Args) -> Result<()> {
     use crate::cluster::workload::{OutputLen, PriorityMix, StreamMix, TaskProfile, WorkloadSpec};
     use crate::cluster::{self, ClusterConfig};
     use crate::coordinator::workload::Arrival;
-    use crate::coordinator::{PreemptPolicy, SchedulerMode};
 
     let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
     let n_requests = args.get_usize("requests", 32)?;
@@ -1195,19 +1196,11 @@ pub fn ext_overlap(args: &Args) -> Result<()> {
             let tasks = TaskProfile::synthetic(2, dims.n_layers, dims.n_experts, hot, 0.9);
             let prompt_tokens = 8;
             let est = spec.est_service_seconds(prompt_tokens, tokens).max(1e-9);
-            let base = ClusterConfig {
-                replicas,
-                max_batch: 4,
-                max_queue: n_requests.max(8),
-                scheduler: SchedulerMode::Continuous,
-                prefill_chunk: 1,
-                preempt: PreemptPolicy::Off,
-                admission: false,
-                trace: true,
-                faults: crate::fault::FaultSpec::none(),
-                retry: crate::fault::RetryPolicy::off(),
-                spec,
-                workload: WorkloadSpec {
+            let base = ClusterConfig::builder(replicas, n_requests, 2, gpu.clone(), seed)
+                .trace(true)
+                .spec(spec)
+                .tasks(tasks)
+                .workload(WorkloadSpec {
                     n_requests,
                     // saturated: serving efficiency, not offered load,
                     // bounds throughput
@@ -1218,9 +1211,8 @@ pub fn ext_overlap(args: &Args) -> Result<()> {
                     priorities: PriorityMix::none(),
                     stream: StreamMix::none(),
                     seed,
-                },
-                tasks,
-            };
+                })
+                .build()?;
             for depth in [0usize, 1, 2] {
                 let cfg = base.clone().with_lookahead(depth);
                 let mut b = cluster::balancer::by_name("expert-affinity")?;
@@ -1281,7 +1273,7 @@ pub fn ext_preempt(args: &Args) -> Result<()> {
     use crate::cluster::workload::{OutputLen, PriorityMix, StreamMix, TaskProfile, WorkloadSpec};
     use crate::cluster::{self, ClusterConfig};
     use crate::coordinator::workload::Arrival;
-    use crate::coordinator::{PreemptPolicy, Priority, SchedulerMode};
+    use crate::coordinator::{PreemptPolicy, Priority};
 
     let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
     let n_requests = args.get_usize("requests", 48)?;
@@ -1326,19 +1318,11 @@ pub fn ext_preempt(args: &Args) -> Result<()> {
         let thresh = args
             .get_f64("preempt-after", 2.0 * est / (prompt_tokens + tokens) as f64)?
             .max(0.0);
-        let base = ClusterConfig {
-            replicas,
-            max_batch: 4,
-            max_queue: n_requests.max(8),
-            scheduler: SchedulerMode::Continuous,
-            prefill_chunk: 1,
-            preempt: PreemptPolicy::Off,
-            admission: false,
-            trace: true,
-            faults: crate::fault::FaultSpec::none(),
-            retry: crate::fault::RetryPolicy::off(),
-            spec,
-            workload: WorkloadSpec {
+        let base = ClusterConfig::builder(replicas, n_requests, 2, gpu.clone(), seed)
+            .trace(true)
+            .spec(spec)
+            .tasks(tasks)
+            .workload(WorkloadSpec {
                 n_requests,
                 // saturated: a High arrival almost always finds the
                 // slots full, so the off/on contrast is pure scheduling
@@ -1349,9 +1333,8 @@ pub fn ext_preempt(args: &Args) -> Result<()> {
                 priorities: PriorityMix { high: high_frac, low: low_frac },
                 stream: StreamMix::none(),
                 seed,
-            },
-            tasks,
-        };
+            })
+            .build()?;
         for policy in [PreemptPolicy::Off, PreemptPolicy::After(thresh)] {
             let cfg = base.clone().with_preempt(policy);
             let mut b = cluster::balancer::by_name("expert-affinity")?;
@@ -1414,7 +1397,6 @@ pub fn ext_quant(args: &Args) -> Result<()> {
     use crate::cluster::workload::{OutputLen, PriorityMix, StreamMix, TaskProfile, WorkloadSpec};
     use crate::cluster::{self, ClusterConfig};
     use crate::coordinator::workload::Arrival;
-    use crate::coordinator::{PreemptPolicy, SchedulerMode};
 
     let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
     let n_requests = args.get_usize("requests", 32)?;
@@ -1478,19 +1460,11 @@ pub fn ext_quant(args: &Args) -> Result<()> {
         ];
         for (arm, spec) in arms {
             let tasks = TaskProfile::synthetic(2, dims.n_layers, dims.n_experts, hot, 0.9);
-            let cfg = ClusterConfig {
-                replicas,
-                max_batch: 4,
-                max_queue: n_requests.max(8),
-                scheduler: SchedulerMode::Continuous,
-                prefill_chunk: 1,
-                preempt: PreemptPolicy::Off,
-                admission: false,
-                trace: true,
-                faults: crate::fault::FaultSpec::none(),
-                retry: crate::fault::RetryPolicy::off(),
-                spec: spec.clone(),
-                workload: WorkloadSpec {
+            let cfg = ClusterConfig::builder(replicas, n_requests, 2, gpu.clone(), seed)
+                .trace(true)
+                .spec(spec.clone())
+                .tasks(tasks)
+                .workload(WorkloadSpec {
                     n_requests,
                     // saturated: serving efficiency, not offered load,
                     // bounds throughput
@@ -1501,9 +1475,8 @@ pub fn ext_quant(args: &Args) -> Result<()> {
                     priorities: PriorityMix::none(),
                     stream: StreamMix::none(),
                     seed,
-                },
-                tasks,
-            };
+                })
+                .build()?;
             let mut b = cluster::balancer::by_name("expert-affinity")?;
             let rep = cluster::run_cluster(&cfg, b.as_mut())?;
             let little = spec.little_tier.map_or("none", |lt| lt.name());
@@ -1572,7 +1545,6 @@ pub fn ext_stream(args: &Args) -> Result<()> {
     use crate::cluster::workload::{OutputLen, PriorityMix, StreamMix, TaskProfile, WorkloadSpec};
     use crate::cluster::{self, ClusterConfig};
     use crate::coordinator::workload::Arrival;
-    use crate::coordinator::{PreemptPolicy, SchedulerMode};
 
     let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
     let n_requests = args.get_usize("requests", 48)?;
@@ -1621,33 +1593,27 @@ pub fn ext_stream(args: &Args) -> Result<()> {
         cancel_after: 1,
         disconnect_frac: 0.1,
     };
-    let mk_cfg = |stream: StreamMix, arrival: Arrival, admission: bool| ClusterConfig {
-        replicas,
-        max_batch: 4,
-        max_queue: n_requests.max(8),
-        scheduler: SchedulerMode::Continuous,
-        prefill_chunk: 1,
-        preempt: PreemptPolicy::Off,
-        admission,
-        trace: true,
-        faults: crate::fault::FaultSpec::none(),
-        retry: crate::fault::RetryPolicy::off(),
-        spec: spec.clone(),
-        workload: WorkloadSpec {
-            n_requests,
-            arrival,
-            prompt_tokens,
-            output: OutputLen::Fixed(tokens),
-            balanced_tasks: true,
-            priorities: PriorityMix::none(),
-            stream,
-            seed,
-        },
-        tasks: TaskProfile::synthetic(2, dims.n_layers, dims.n_experts, 16, 0.9),
+    let mk_cfg = |stream: StreamMix, arrival: Arrival, admission: bool| -> Result<ClusterConfig> {
+        ClusterConfig::builder(replicas, n_requests, 2, gpu.clone(), seed)
+            .admission(admission)
+            .trace(true)
+            .spec(spec.clone())
+            .tasks(TaskProfile::synthetic(2, dims.n_layers, dims.n_experts, 16, 0.9))
+            .workload(WorkloadSpec {
+                n_requests,
+                arrival,
+                prompt_tokens,
+                output: OutputLen::Fixed(tokens),
+                balanced_tasks: true,
+                priorities: PriorityMix::none(),
+                stream,
+                seed,
+            })
+            .build()
     };
     let arms: Vec<(&str, &str, ClusterConfig)> = vec![
-        ("deadline", "least-loaded", mk_cfg(deadline_mix, Arrival::Burst, false)),
-        ("deadline", "least-loaded", mk_cfg(deadline_mix, Arrival::Burst, true)),
+        ("deadline", "least-loaded", mk_cfg(deadline_mix, Arrival::Burst, false)?),
+        ("deadline", "least-loaded", mk_cfg(deadline_mix, Arrival::Burst, true)?),
         (
             "cancel-storm",
             "expert-affinity",
@@ -1655,7 +1621,7 @@ pub fn ext_stream(args: &Args) -> Result<()> {
                 cancel_mix,
                 Arrival::Poisson(1.5 * replicas.max(1) as f64 / est),
                 false,
-            ),
+            )?,
         ),
     ];
 
@@ -1719,7 +1685,7 @@ pub fn ext_fault(args: &Args) -> Result<()> {
     use crate::cluster::workload::{OutputLen, PriorityMix, StreamMix, TaskProfile, WorkloadSpec};
     use crate::cluster::{self, ClusterConfig};
     use crate::coordinator::workload::Arrival;
-    use crate::coordinator::{Outcome, PreemptPolicy, SchedulerMode};
+    use crate::coordinator::Outcome;
     use crate::fault::{FaultPlan, FaultSpec, RetryPolicy};
 
     let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
@@ -1752,35 +1718,30 @@ pub fn ext_fault(args: &Args) -> Result<()> {
         dims,
     };
     let est = spec.est_service_seconds(prompt_tokens, tokens).max(1e-9);
-    let mk_cfg = |faults: FaultSpec, retry: RetryPolicy| ClusterConfig {
-        replicas,
-        max_batch: 4,
-        max_queue: n_requests.max(8),
-        scheduler: SchedulerMode::Continuous,
-        prefill_chunk: 1,
-        preempt: PreemptPolicy::Off,
-        admission: false,
-        trace: true,
-        faults,
-        retry,
-        spec: spec.clone(),
-        workload: WorkloadSpec {
-            n_requests,
-            // burst: the queues are full from t=0, so any crash inside
-            // the horizon reclaims work and the retry-off arm has
-            // something to fail
-            arrival: Arrival::Burst,
-            prompt_tokens,
-            output: OutputLen::Fixed(tokens),
-            balanced_tasks: true,
-            priorities: PriorityMix::none(),
-            stream: StreamMix::none(),
-            seed,
-        },
-        tasks: TaskProfile::synthetic(2, dims.n_layers, dims.n_experts, 16, 0.9),
+    let mk_cfg = |faults: FaultSpec, retry: RetryPolicy| -> Result<ClusterConfig> {
+        ClusterConfig::builder(replicas, n_requests, 2, gpu.clone(), seed)
+            .trace(true)
+            .faults(faults)
+            .retry(retry)
+            .spec(spec.clone())
+            .tasks(TaskProfile::synthetic(2, dims.n_layers, dims.n_experts, 16, 0.9))
+            .workload(WorkloadSpec {
+                n_requests,
+                // burst: the queues are full from t=0, so any crash inside
+                // the horizon reclaims work and the retry-off arm has
+                // something to fail
+                arrival: Arrival::Burst,
+                prompt_tokens,
+                output: OutputLen::Fixed(tokens),
+                balanced_tasks: true,
+                priorities: PriorityMix::none(),
+                stream: StreamMix::none(),
+                seed,
+            })
+            .build()
     };
 
-    let clean_cfg = mk_cfg(FaultSpec::none(), RetryPolicy::off());
+    let clean_cfg = mk_cfg(FaultSpec::none(), RetryPolicy::off())?;
     let mut b = cluster::balancer::by_name("expert-affinity")?;
     let clean = cluster::run_cluster(&clean_cfg, b.as_mut())?;
     let horizon = clean.makespan.max(est);
@@ -1801,9 +1762,9 @@ pub fn ext_fault(args: &Args) -> Result<()> {
     let mut reports: Vec<(&str, &str, cluster::ClusterReport)> =
         vec![("fault-free", "off", clean)];
     for (arm, retry_name, cfg) in [
-        ("crash-storm", "off", mk_cfg(storm.clone(), RetryPolicy::off())),
-        ("crash-storm", "on", mk_cfg(storm, retry_on)),
-        ("brownout-mix", "on", mk_cfg(mixed, retry_on)),
+        ("crash-storm", "off", mk_cfg(storm.clone(), RetryPolicy::off())?),
+        ("crash-storm", "on", mk_cfg(storm, retry_on)?),
+        ("brownout-mix", "on", mk_cfg(mixed, retry_on)?),
     ] {
         let mut b = cluster::balancer::by_name("expert-affinity")?;
         let rep = cluster::run_cluster(&cfg, b.as_mut())?;
@@ -1872,4 +1833,94 @@ pub fn ext_fault(args: &Args) -> Result<()> {
         ]));
     }
     print_and_save("ext_fault", &t, arr(jrows))
+}
+
+/// Extension — fleet-scale work stealing: a Zipf-imbalanced traffic mix
+/// (task `i` draws arrivals ∝ `1/(i+1)^1.2`) dispatched by
+/// expert-affinity across 8 and 64 replicas, served with stealing off
+/// vs on.  Affinity dispatch deliberately concentrates each task on its
+/// warm replicas, so under Zipf weights the head task's replicas run
+/// deep queues while tail replicas sit idle — exactly the imbalance an
+/// idle replica's steal scan can flatten, at the price of colder caches
+/// for the stolen work (queued steals) or a KV migration charge over
+/// PCIe (live steals).  The model is shrunk to unit-test scale so the
+/// fleet sees ~10⁵ requests in CI smoke time.  Expected shape: stealing
+/// strictly cuts p95 latency (queue wait dominates it) at tok/s within
+/// noise and hit-rate within a couple of points — the affinity-priced
+/// gain check refuses steals whose cache penalty outweighs the queue
+/// win — with `steals > 0` proving the path exercised.
+pub fn ext_steal(args: &Args) -> Result<()> {
+    use crate::cluster::replica::ReplicaSpec;
+    use crate::cluster::workload::{OutputLen, TaskProfile};
+    use crate::cluster::{self, ClusterConfig, StealPolicy};
+    use crate::coordinator::workload::Arrival;
+
+    let gpu = GpuSpec::by_name(args.get_or("gpu", "h100"))?;
+    let per_replica = args.get_usize("requests", 64)?.max(1);
+    let seed = args.get_usize("seed", 42)? as u64;
+
+    // shrink the model to unit-test scale (the steal dynamics live in
+    // the queues, not the model dims) so 64 replicas × ~10⁵ requests
+    // stay inside CI smoke time
+    let mut spec = ReplicaSpec::olmoe(gpu.clone());
+    spec.n_layers = 4;
+    spec.n_experts = 32;
+    spec.top_k = 8;
+    spec.capacity = 8;
+    let (prompt_tokens, tokens) = (2usize, 8usize);
+    let est = spec.est_service_seconds(prompt_tokens, tokens).max(1e-9);
+
+    let mut t = Table::new(&[
+        "replicas", "steal", "requests", "tok/s", "hit rate", "queue p95 (s)",
+        "latency p50/p95/p99 (s)", "steals", "live",
+    ]);
+    let mut jrows = Vec::new();
+    for replicas in [8usize, 64] {
+        let n_requests = per_replica * replicas * 25;
+        let mk_cfg = |steal: Option<StealPolicy>| -> Result<ClusterConfig> {
+            ClusterConfig::builder(replicas, n_requests, 4, gpu.clone(), seed)
+                .spec(spec.clone())
+                .tasks(TaskProfile::synthetic(4, 4, 32, 8, 0.92))
+                .prompt_tokens(prompt_tokens)
+                .output(OutputLen::Fixed(tokens))
+                // just under fleet capacity: on average the fleet keeps
+                // up, so every queue is imbalance, not offered load
+                .arrival(Arrival::Poisson(0.9 * replicas as f64 / est))
+                .zipf(1.2)
+                .steal(steal)
+                .build()
+        };
+        for steal_on in [false, true] {
+            let steal = steal_on.then(|| StealPolicy::every(est / 4.0));
+            let cfg = mk_cfg(steal)?;
+            let mut b = cluster::balancer::by_name("expert-affinity")?;
+            let rep = cluster::run_cluster(&cfg, b.as_mut())?;
+            t.row(vec![
+                replicas.to_string(),
+                if steal_on { "on".into() } else { "off".to_string() },
+                n_requests.to_string(),
+                fmt2(rep.tokens_per_sec),
+                fmt4(rep.hit_rate),
+                format!("{:.3}", rep.queue_wait.p95),
+                rep.latency.cell(1.0),
+                rep.steals.to_string(),
+                rep.live_steals.to_string(),
+            ]);
+            jrows.push(obj(vec![
+                ("replicas", num(replicas as f64)),
+                ("steal", num(if steal_on { 1.0 } else { 0.0 })),
+                ("n_requests", num(n_requests as f64)),
+                ("tok_s", num(rep.tokens_per_sec)),
+                ("hit_rate", num(rep.hit_rate)),
+                ("queue_p95_s", num(rep.queue_wait.p95)),
+                ("latency_p95_s", num(rep.latency.p95)),
+                ("latency_p99_s", num(rep.latency.p99)),
+                ("steals", num(rep.steals as f64)),
+                ("live_steals", num(rep.live_steals as f64)),
+                ("promotions", num(rep.promotions as f64)),
+                ("makespan_s", num(rep.makespan)),
+            ]));
+        }
+    }
+    print_and_save("ext_steal", &t, arr(jrows))
 }

@@ -262,6 +262,7 @@ pub fn run(id: &str, args: &crate::util::cli::Args) -> Result<()> {
         "ext_quant" => ex::ext_quant(args),
         "ext_stream" => ex::ext_stream(args),
         "ext_fault" => ex::ext_fault(args),
+        "ext_steal" => ex::ext_steal(args),
         "all" => {
             for id in ex::ALL {
                 println!("\n================ {id} ================");

@@ -199,6 +199,17 @@ pub enum TraceEvent {
     /// `Outcome::Failed` — the only way a request terminates without
     /// completing, cancelling, or being rejected.
     RequestFailed { request: u64 },
+    /// An idle replica (`to`) stole work from a loaded peer (`from`),
+    /// priced by affinity-minus-load.  `live: false` moves a queued
+    /// request (the thief pays its cold cache); `live: true` moves a
+    /// suspended in-flight sequence, charging the KV/plan migration
+    /// transfer over PCIe on the thief's clock.
+    Steal { request: u64, from: u32, to: u32, live: bool },
+    /// Age-based promotion: a request waiting past the aging threshold
+    /// was raised to priority class `to`
+    /// ([`crate::coordinator::Priority::idx`] encoding) so a Low request
+    /// under sustained High flood has bounded `preempted_wait`.
+    Promote { request: u64, to: u8 },
 }
 
 /// An event with its simulated timestamp and lane (replica id, or the
@@ -383,6 +394,13 @@ impl MetricsRegistry {
             TraceEvent::Corrupt { .. } => self.count("transfers_corrupt"),
             TraceEvent::TransferLost { .. } => self.count("transfers_lost"),
             TraceEvent::RequestFailed { .. } => self.count("requests_failed"),
+            TraceEvent::Steal { live, .. } => {
+                self.count("steals");
+                if *live {
+                    self.count("live_steals");
+                }
+            }
+            TraceEvent::Promote { .. } => self.count("promotions"),
         }
     }
 
@@ -660,6 +678,22 @@ impl Trace {
             if crashes + migrations == 0 {
                 bail!("{injected} requests reclaimed but no Crash/Migrate event in trace");
             }
+        }
+        Ok(())
+    }
+
+    /// Audit: work-stealing / promotion conservation.  The trace's
+    /// `steals` and `promotions` counters must agree with the engine's
+    /// own tallies — a steal or promotion that mutated scheduler state
+    /// without leaving an event in the stream (or vice versa) breaks
+    /// this immediately.
+    pub fn audit_steal_promote(&self, steals: u64, promotions: u64) -> Result<()> {
+        let c = |k: &str| self.registry.counters.get(k).copied().unwrap_or(0);
+        if c("steals") != steals {
+            bail!("trace counts {} steals, engine counts {steals}", c("steals"));
+        }
+        if c("promotions") != promotions {
+            bail!("trace counts {} promotions, engine counts {promotions}", c("promotions"));
         }
         Ok(())
     }
@@ -1047,6 +1081,25 @@ impl Trace {
                     TID_SCHED,
                     "request failed",
                     vec![("request", num(request as f64))],
+                )),
+                TraceEvent::Steal { request, from, to, live } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "steal",
+                    vec![
+                        ("request", num(request as f64)),
+                        ("from", num(from as f64)),
+                        ("to", num(to as f64)),
+                        ("live", num(if live { 1.0 } else { 0.0 })),
+                    ],
+                )),
+                TraceEvent::Promote { request, to } => evs.push(instant(
+                    e.t,
+                    e.lane,
+                    TID_SCHED,
+                    "promote",
+                    vec![("request", num(request as f64)), ("to", num(to as f64))],
                 )),
             }
         }

@@ -45,7 +45,7 @@ import time
 LABEL_KEYS = [
     "arm", "balancer", "scheduler", "dims", "model", "quant", "replicas",
     "capacity", "fp16_eq_capacity", "prefill_chunk", "lookahead", "preempt_on",
-    "admission", "retry",
+    "admission", "retry", "steal",
 ]
 
 # first match wins: the row's headline p95 latency

@@ -29,6 +29,11 @@ parses them and FAILS the build if a headline invariant regresses:
                   and Completed tokens are bit-identical to fault-free
                   (the repro asserts it in-process and exports
                   bit_identical per row)
+  ext_steal       per fleet size, steal-on fires steals (and off fires
+                  none), strictly cuts p95 latency vs steal-off under
+                  the same Zipf-imbalanced workload, at tok/s >= 98% of
+                  off and hit-rate within 0.02 (runs untraced at ~10^5
+                  requests, so the metrics-snapshot gate is skipped)
 
 Every ext_* row also embeds a `metrics` snapshot from the run's merged
 structured trace (docs/OBSERVABILITY.md); the gate rejects NaN /
@@ -51,8 +56,12 @@ import sys
 
 REQUIRED = [
     "ext_cluster", "ext_continuous", "ext_prefill", "ext_overlap", "ext_preempt",
-    "ext_quant", "ext_stream", "ext_fault",
+    "ext_quant", "ext_stream", "ext_fault", "ext_steal",
 ]
+
+# runs untraced (10^5-request fleets would swamp the recorder), so it
+# exports no per-row metrics snapshot for check_metrics to validate
+UNTRACED = {"ext_steal"}
 
 # trace-derived PCIe totals must match TransferStats to this tolerance
 TRACE_TOL = 1e-6
@@ -431,6 +440,62 @@ def check_fault(rows):
     )
 
 
+def check_steal(rows):
+    by = {}
+    for i, r in enumerate(rows):
+        replicas = int(require(r, "replicas", f"ext_steal row {i}"))
+        steal = int(require(r, "steal", f"ext_steal row {i}"))
+        by[(replicas, steal)] = r
+    fleets = sorted({k[0] for k in by})
+    for replicas in fleets:
+        off, on = by.get((replicas, 0)), by.get((replicas, 1))
+        if not off or not on:
+            check("ext_steal", False, f"{replicas} replicas: missing off/on pair")
+            continue
+        ctx = f"{replicas} replicas"
+        check(
+            "ext_steal",
+            on["steals"] > 0,
+            f"{ctx}: steal-on fired {int(on['steals'])} steals "
+            f"({int(on['live_steals'])} live)",
+        )
+        check(
+            "ext_steal",
+            off["steals"] == 0,
+            f"{ctx}: steal-off fired {int(off['steals'])} steals (must be 0)",
+        )
+        check(
+            "ext_steal",
+            on["latency_p95_s"] < off["latency_p95_s"],
+            f"{ctx}: steal-on p95 latency {fmt(on['latency_p95_s'])}s vs "
+            f"off {fmt(off['latency_p95_s'])}s (strict win required)",
+        )
+        check(
+            "ext_steal",
+            on["tok_s"] >= 0.98 * off["tok_s"],
+            f"{ctx}: steal-on {fmt(on['tok_s'])} tok/s vs off {fmt(off['tok_s'])} "
+            f"(>= 98% required)",
+        )
+        check(
+            "ext_steal",
+            on["hit_rate"] >= off["hit_rate"] - 0.02,
+            f"{ctx}: steal-on hit-rate {fmt(on['hit_rate'])} vs off "
+            f"{fmt(off['hit_rate'])} (within 0.02)",
+        )
+    top = by.get((max(fleets), 1)) if fleets else None
+    if top:
+        summary_rows.append(
+            (
+                "ext_steal",
+                f"steal-on @ {max(fleets)} replicas ({int(top['steals'])} steals, "
+                f"{int(top['live_steals'])} live)",
+                top["tok_s"],
+                top["hit_rate"],
+                None,
+            )
+        )
+
+
 def finite(v):
     return isinstance(v, (int, float)) and math.isfinite(v)
 
@@ -537,6 +602,7 @@ def main():
         "ext_quant": check_quant,
         "ext_stream": check_stream,
         "ext_fault": check_fault,
+        "ext_steal": check_steal,
     }
     for name in REQUIRED:
         rows = load(results_dir, name)
@@ -547,7 +613,8 @@ def main():
             continue
         try:
             checkers[name](rows)
-            check_metrics(name, rows)
+            if name not in UNTRACED:
+                check_metrics(name, rows)
         except GateError as e:
             check(name, False, str(e))
         except KeyError as e:
